@@ -1,0 +1,30 @@
+//! Precision ablation (§VI-D): what the paper's own estimate — "moving
+//! from FP16 to Q12 would lead to an energy efficiency boost … around 3×
+//! for the core" — does to the system-level numbers, re-planning the
+//! chip mesh for the narrower FM words (the same 6.4 Mbit of SRAM holds
+//! more Q12/Q8 words, so fewer chips are needed at 2048×1024).
+//!
+//!     cargo run --release --example precision_ablation
+
+use hyperdrive::energy::ablation::{precision_ablation, render};
+use hyperdrive::network::zoo;
+use hyperdrive::ChipConfig;
+
+fn main() {
+    let cfg = ChipConfig::default();
+    for net in [
+        zoo::resnet34(224, 224),
+        zoo::yolov3(320, 320),
+        zoo::resnet34(1024, 2048),
+    ] {
+        let rows = precision_ablation(&net, &cfg);
+        println!("{}", render(&net.name, &rows));
+        let q12_vs_soa = rows[1].system_eff_ops_w / 1e12 / 1.4;
+        if net.name == "ResNet-34" && net.in_h > 128 {
+            println!(
+                "Q12 vs best FM-streaming SoA (1.4 TOp/s/W): {q12_vs_soa:.1}x \
+                 (paper's estimate: ~6.8x)\n"
+            );
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Quickstart: run one binary-weight convolution layer through the whole
+//! stack — pack the binary weights into the chip's stream format, load
+//! the AOT-compiled Pallas kernel on PJRT, execute, and cross-check
+//! against the Rust functional chip simulator.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use hyperdrive::bwn::pack_weights;
+use hyperdrive::network::ConvLayer;
+use hyperdrive::runtime::Runtime;
+use hyperdrive::simulator::{self, FeatureMap, Precision};
+use hyperdrive::util::SplitMix64;
+
+fn main() -> anyhow::Result<()> {
+    // The first HyperNet-20 layer: 16→16 channels, 32×32 FM, 3×3 conv.
+    let layer = ConvLayer::new("quickstart", 16, 16, 32, 32, 3, 1);
+    let artifact = "conv_k3s1_i16o16_h32w32_bp0_relu1";
+
+    // Synthetic input FM and real-valued weights → binarized stream.
+    let mut rng = SplitMix64::new(42);
+    let input: Vec<f32> = (0..16 * 32 * 32).map(|_| rng.next_gauss()).collect();
+    let weights: Vec<f32> = (0..16 * 16 * 9).map(|_| rng.next_gauss()).collect();
+    let gamma = vec![1.0 / (16.0 * 9.0); 16];
+    let beta = vec![0.0f32; 16];
+
+    // 1) The chip's on-pin format: binary weights packed in Tbl-I order.
+    let stream = pack_weights(&layer, &weights, 16);
+    println!(
+        "weight stream: {} words × 16 bit = {} bits ({}× smaller than FP16 weights)",
+        stream.words.len(),
+        stream.wire_bits(),
+        16
+    );
+
+    // 2) Execute the AOT-lowered Pallas kernel on PJRT.
+    let mut rt = Runtime::cpu()?;
+    rt.load_artifact(artifact, std::path::Path::new(&format!("artifacts/{artifact}.hlo.txt")))?;
+    let dense = stream.unpack_dense(); // what the weight buffer holds
+    let out = rt.execute(
+        artifact,
+        &[
+            (&input, &[16, 32, 32]),
+            (&dense, &[16, 16, 3, 3]),
+            (&gamma, &[16]),
+            (&beta, &[16]),
+        ],
+    )?;
+    println!("PJRT output: {} values, out[0..4] = {:?}", out.len(), &out[..4]);
+
+    // 3) Cross-check with the functional chip simulator (f32 datapath).
+    let fm = FeatureMap::from_vec(16, 32, 32, input);
+    let params = simulator::chip::LayerParams {
+        layer: &layer,
+        stream: &stream,
+        gamma: &gamma,
+        beta: &beta,
+    };
+    let (sim, counts) = simulator::run_layer(&params, &fm, None, Precision::F32, (7, 7));
+    let max_err = sim
+        .data
+        .iter()
+        .zip(&out)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("simulator vs PJRT max |err| = {max_err:.3e}");
+    assert!(max_err < 1e-4, "simulator and PJRT disagree");
+
+    // 4) What the silicon would do for this layer.
+    println!(
+        "chip accesses: {} FMM reads, {} FMM writes, {} stream words, {} WBuf reads",
+        counts.fmm_reads, counts.fmm_writes, counts.stream_words, counts.wbuf_reads
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,171 @@
+"""AOT compile path: lower every Hyperdrive layer variant to HLO text.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` 0.1.6 rust crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs (all under ``artifacts/``):
+  * ``<artifact>.hlo.txt``  — one per distinct layer spec + the head;
+  * ``manifest.tsv``        — artifact table, the HyperNet-20 step list and
+    the parameter-blob index (whitespace-separated ``key=value`` records —
+    deliberately trivial to parse from Rust without a JSON dependency);
+  * ``e2e_params.bin`` / ``e2e_input.bin`` / ``e2e_golden.bin`` /
+    ``e2e_final_fm.bin`` — raw little-endian f32 blobs for the end-to-end
+    example (synthetic deterministic parameters + golden outputs).
+
+Run via ``make artifacts`` (no-op when inputs are unchanged). Python never
+runs at inference time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.bwn_conv import ConvSpec
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the rust-loadable format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_conv(spec: ConvSpec) -> str:
+    f32 = jnp.float32
+    args = [
+        jax.ShapeDtypeStruct((spec.n_in, spec.h, spec.w), f32),
+        jax.ShapeDtypeStruct((spec.n_out, spec.n_in, spec.k, spec.k), f32),
+        jax.ShapeDtypeStruct((spec.n_out,), f32),
+        jax.ShapeDtypeStruct((spec.n_out,), f32),
+    ]
+    if spec.has_bypass:
+        args.append(
+            jax.ShapeDtypeStruct((spec.n_out, spec.h_out, spec.w_out), f32))
+    fn = M.make_layer_fn(spec)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def lower_head() -> str:
+    f32 = jnp.float32
+    args = [
+        jax.ShapeDtypeStruct((M.HEAD_IN_CH, M.HEAD_IN_HW, M.HEAD_IN_HW), f32),
+        jax.ShapeDtypeStruct((M.N_CLASSES, M.HEAD_IN_CH), f32),
+        jax.ShapeDtypeStruct((M.N_CLASSES,), f32),
+    ]
+    return to_hlo_text(jax.jit(M.make_head_fn()).lower(*args))
+
+
+def conv_manifest_row(name: str, spec: ConvSpec) -> str:
+    return ("artifact name={n} kind=conv k={k} stride={s} n_in={i} n_out={o} "
+            "h={h} w={w} bypass={b} relu={r} dtype=f32 file={n}.hlo.txt"
+            .format(n=name, k=spec.k, s=spec.stride, i=spec.n_in,
+                    o=spec.n_out, h=spec.h, w=spec.w,
+                    b=int(spec.has_bypass), r=int(spec.relu)))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts output directory (or a path inside it)")
+    ap.add_argument("--seed", type=int, default=2018)
+    args = ap.parse_args()
+    outdir = args.out
+    if outdir.endswith(".txt") or outdir.endswith(".tsv"):
+        outdir = os.path.dirname(outdir)  # tolerate `--out ../artifacts/x.txt`
+    os.makedirs(outdir, exist_ok=True)
+
+    steps = M.hypernet20_steps()
+    specs: dict[str, ConvSpec] = {}
+    for st in steps:
+        specs.setdefault(M.artifact_name(st.spec), st.spec)
+
+    manifest: list[str] = ["# Hyperdrive AOT artifact manifest (generated)"]
+
+    # -- lower every distinct conv spec -----------------------------------
+    for name, spec in sorted(specs.items()):
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        text = lower_conv(spec)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(conv_manifest_row(name, spec))
+        print(f"lowered {name}: {len(text)} chars")
+
+    head_text = lower_head()
+    with open(os.path.join(outdir, "head.hlo.txt"), "w") as f:
+        f.write(head_text)
+    manifest.append(
+        f"artifact name=head kind=head c={M.HEAD_IN_CH} hw={M.HEAD_IN_HW} "
+        f"classes={M.N_CLASSES} dtype=f32 file=head.hlo.txt")
+
+    # -- network step list -------------------------------------------------
+    manifest.append(f"network name=hypernet20 steps={len(steps)} "
+                    f"in_ch=16 in_h=32 in_w=32 classes={M.N_CLASSES}")
+    for i, st in enumerate(steps):
+        manifest.append(
+            f"step idx={i} name={st.name} artifact={M.artifact_name(st.spec)} "
+            f"src={st.src} bypass={st.bypass_src}")
+
+    # -- parameter blob + goldens ------------------------------------------
+    params = M.init_params(args.seed)
+    blob = bytearray()
+
+    def put(step_name: str, field: str, arr: np.ndarray) -> str:
+        off = len(blob) // 4
+        flat = np.ascontiguousarray(arr, dtype=np.float32).ravel()
+        blob.extend(flat.tobytes())
+        return (f"blob step={step_name} field={field} off={off} "
+                f"len={flat.size}")
+
+    for st in steps:
+        p = params[st.name]
+        manifest.append(put(st.name, "w", p["w"]))
+        manifest.append(put(st.name, "gamma", p["gamma"]))
+        manifest.append(put(st.name, "beta", p["beta"]))
+    manifest.append(put("head", "w_fc", params["head"]["w_fc"]))
+    manifest.append(put("head", "b_fc", params["head"]["b_fc"]))
+
+    with open(os.path.join(outdir, "e2e_params.bin"), "wb") as f:
+        f.write(blob)
+
+    x = M.make_input()
+    with open(os.path.join(outdir, "e2e_input.bin"), "wb") as f:
+        f.write(x.tobytes())
+
+    logits, fms = M.forward(params, jnp.asarray(x), use_pallas=True)
+    logits = np.asarray(logits, dtype=np.float32)
+    final_fm = np.asarray(fms[-1], dtype=np.float32)
+    with open(os.path.join(outdir, "e2e_golden.bin"), "wb") as f:
+        f.write(logits.tobytes())
+    with open(os.path.join(outdir, "e2e_final_fm.bin"), "wb") as f:
+        f.write(final_fm.tobytes())
+    manifest.append("golden file=e2e_golden.bin kind=logits "
+                    f"len={logits.size} seed={args.seed}")
+    manifest.append("golden file=e2e_final_fm.bin kind=final_fm "
+                    f"len={final_fm.size} seed={args.seed}")
+    manifest.append("golden file=e2e_input.bin kind=input "
+                    f"len={x.size} seed=7")
+    digest = hashlib.sha256(bytes(blob)).hexdigest()[:16]
+    manifest.append(f"blobfile file=e2e_params.bin words={len(blob)//4} "
+                    f"sha256_16={digest}")
+
+    with open(os.path.join(outdir, "manifest.tsv"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(specs)} conv artifacts + head, "
+          f"{len(blob)//4} param words, manifest.tsv")
+
+
+if __name__ == "__main__":
+    main()

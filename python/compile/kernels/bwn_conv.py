@@ -1,0 +1,181 @@
+"""L1 — Pallas binary-weight convolution kernel (the Hyperdrive hot-spot).
+
+Implements the paper's Algorithm 1 as a feature-map-stationary Pallas
+kernel:
+
+  * the FM tile lives in VMEM for the whole layer (the FMM of the chip),
+  * the binary weights are *streamed* per output-channel tile ``C`` (the
+    weight buffer / weight stream of the chip) — expressed as the only
+    grid-blocked operand,
+  * the binary weight is applied as the *sign* of the accumulation
+    (Algorithm 1, line 17: ``v += x`` if ``w = 1`` else ``v -= x``); on the
+    MXU this is a ±1 matmul, which is the TPU-native expression of the
+    sign-input FP16 adder array (see DESIGN.md §Hardware adaptation),
+  * the stall-free post-op order of §IV-B is fused in:
+    convolution → scale (bnorm) → bypass add → bias → ReLU → store.
+
+The kernel must be lowered with ``interpret=True``: real-TPU Pallas emits a
+Mosaic custom-call which the CPU PJRT client cannot execute.
+
+Spatial M×N tile parallelism of the silicon maps to VPU vector lanes within
+the block rather than to the Pallas grid — overlapping (halo) grid blocks
+are not expressible in a ``BlockSpec``, and the halo exchange is precisely
+what the paper's L3 border-memory machinery does (reproduced in
+``rust/src/simulator/mesh.rs``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+class ConvSpec(NamedTuple):
+    """Static shape/config of one Hyperdrive layer invocation.
+
+    Mirrors one row of the rust artifact manifest (see ``aot.py``).
+    """
+
+    n_in: int
+    n_out: int
+    h: int          # input spatial height
+    w: int          # input spatial width
+    k: int          # kernel size (1 or 3 — the only sizes the chip supports)
+    stride: int     # 1 or 2
+    has_bypass: bool
+    relu: bool
+    cpar: int = 16  # C — output-channel parallelism of the Tile-PU array
+
+    @property
+    def h_out(self) -> int:
+        return self.h // self.stride
+
+    @property
+    def w_out(self) -> int:
+        return self.w // self.stride
+
+    @property
+    def pad(self) -> int:
+        return self.k // 2
+
+
+def _bwn_conv_kernel(x_ref, w_ref, gamma_ref, beta_ref, *rest, spec: ConvSpec):
+    """One grid step = one output-channel tile of C channels (Tbl I schedule).
+
+    x_ref:     (n_in, h + 2p, w + 2p)  — zero-padded input FM, fully resident
+    w_ref:     (C, n_in, k, k)         — binary weights (±1) for this c_out tile
+    gamma_ref: (C,)                    — bnorm scale (α) for this tile
+    beta_ref:  (C,)                    — merged bias (β + bnorm shift)
+    byp_ref:   (C, h_out, w_out)       — optional residual bypass input
+    o_ref:     (C, h_out, w_out)
+    """
+    if spec.has_bypass:
+        byp_ref, o_ref = rest
+    else:
+        (o_ref,) = rest
+
+    x = x_ref[...]
+    wts = w_ref[...]
+    n_in, k, s = spec.n_in, spec.k, spec.stride
+    ho, wo = spec.h_out, spec.w_out
+
+    # Accumulate over the k·k filter taps (loop order of Algorithm 1 lines
+    # 7–19: filter tap outer, input channel inner — the inner c_in reduction
+    # is the ±1 matmul feeding the MXU).
+    acc = jnp.zeros((spec.cpar, ho * wo), dtype=jnp.float32)
+    for dy in range(k):
+        for dx in range(k):
+            # Aligned neighbour read (DDU): shifted, strided window of the
+            # stationary FM. Shapes are static — unrolled at trace time.
+            window = jax.lax.slice(
+                x, (0, dy, dx), (n_in, dy + s * ho - s + 1, dx + s * wo - s + 1),
+                (1, s, s),
+            )  # (n_in, ho, wo)
+            xs = window.reshape(n_in, ho * wo).astype(jnp.float32)
+            # w ∈ {−1,+1}: sign-select accumulate, expressed as a matmul so
+            # the TPU lowering targets the MXU systolic array.
+            acc = acc + jnp.dot(wts[:, :, dy, dx].astype(jnp.float32), xs)
+
+    v = acc.reshape(spec.cpar, ho, wo)
+    # Stall-free post-op order of §IV-B: scale → bypass → bias (→ ReLU).
+    v = v * gamma_ref[...][:, None, None]
+    if spec.has_bypass:
+        v = v + byp_ref[...].astype(jnp.float32)
+    v = v + beta_ref[...][:, None, None]
+    if spec.relu:
+        v = jnp.maximum(v, 0.0)
+    o_ref[...] = v.astype(o_ref.dtype)
+
+
+def bwn_conv(x, w, gamma, beta, bypass=None, *, spec: ConvSpec,
+             interpret: bool = True):
+    """Binary-weight convolution of one full layer via the Pallas kernel.
+
+    Args:
+      x:      (n_in, h, w) input feature map.
+      w:      (n_out, n_in, k, k) binary weights, values in {−1, +1}.
+      gamma:  (n_out,) per-output-channel scale (folded batch-norm α).
+      beta:   (n_out,) per-output-channel bias (folded bias + bn shift β).
+      bypass: optional (n_out, h_out, w_out) residual input added before β.
+      spec:   static layer configuration; ``spec.n_out`` must divide by
+              ``spec.cpar`` (pad channels upstream otherwise).
+
+    Returns: (n_out, h_out, w_out) output feature map, dtype of ``x``.
+    """
+    assert spec.n_out % spec.cpar == 0, "n_out must be a multiple of C"
+    assert spec.k in (1, 3), "the chip supports only 1x1 and 3x3 kernels"
+    assert spec.stride in (1, 2)
+    p = spec.pad
+    xp = jnp.pad(x, ((0, 0), (p, p), (p, p)))  # DDU zero-padding
+    n_tiles = spec.n_out // spec.cpar
+    out_shape = jax.ShapeDtypeStruct((spec.n_out, spec.h_out, spec.w_out),
+                                     x.dtype)
+
+    in_specs = [
+        # FM stationary: every grid step sees the whole padded FM.
+        pl.BlockSpec((spec.n_in, spec.h + 2 * p, spec.w + 2 * p),
+                     lambda c: (0, 0, 0)),
+        # Weight streaming: one C-sized output-channel tile per grid step.
+        pl.BlockSpec((spec.cpar, spec.n_in, spec.k, spec.k),
+                     lambda c: (c, 0, 0, 0)),
+        pl.BlockSpec((spec.cpar,), lambda c: (c,)),
+        pl.BlockSpec((spec.cpar,), lambda c: (c,)),
+    ]
+    args = [xp, w, gamma, beta]
+    if spec.has_bypass:
+        assert bypass is not None
+        in_specs.append(
+            pl.BlockSpec((spec.cpar, spec.h_out, spec.w_out),
+                         lambda c: (c, 0, 0)))
+        args.append(bypass)
+
+    kernel = functools.partial(_bwn_conv_kernel, spec=spec)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((spec.cpar, spec.h_out, spec.w_out),
+                               lambda c: (c, 0, 0)),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)
+
+
+def vmem_bytes(spec: ConvSpec, fm_bytes: int = 2) -> dict:
+    """Estimate the per-grid-step VMEM residency of the kernel blocks.
+
+    Used by the perf pass (EXPERIMENTS.md §Perf) to check the real-TPU
+    mapping against the ~16 MiB/core VMEM budget; weights are 1 bit in the
+    silicon but ``fm_bytes`` wide in the lowered kernel (documented gap).
+    """
+    p = spec.pad
+    fm_in = spec.n_in * (spec.h + 2 * p) * (spec.w + 2 * p) * fm_bytes
+    wts = spec.cpar * spec.n_in * spec.k * spec.k * fm_bytes
+    out = spec.cpar * spec.h_out * spec.w_out * 4  # f32 accumulator
+    byp = out if spec.has_bypass else 0
+    return {"fm_in": fm_in, "weights": wts, "acc_out": out, "bypass": byp,
+            "total": fm_in + wts + out + byp}

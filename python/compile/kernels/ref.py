@@ -1,0 +1,38 @@
+"""Pure-jnp correctness oracle for the Pallas BWN convolution kernel.
+
+Uses ``jax.lax.conv_general_dilated`` — a completely independent code path
+from the hand-scheduled kernel in ``bwn_conv.py`` — with the same fused
+post-op order (scale → bypass → bias → ReLU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .bwn_conv import ConvSpec
+
+
+def bwn_conv_ref(x, w, gamma, beta, bypass=None, *, spec: ConvSpec):
+    """Reference BWN convolution. Same signature/semantics as ``bwn_conv``."""
+    p = spec.pad
+    lhs = x[None].astype(jnp.float32)          # (1, n_in, h, w)
+    rhs = w.astype(jnp.float32)                # (n_out, n_in, k, k)
+    out = jax.lax.conv_general_dilated(
+        lhs, rhs,
+        window_strides=(spec.stride, spec.stride),
+        padding=((p, p), (p, p)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]                                       # (n_out, h_out, w_out)
+    v = out * gamma.astype(jnp.float32)[:, None, None]
+    if spec.has_bypass:
+        v = v + bypass.astype(jnp.float32)
+    v = v + beta.astype(jnp.float32)[:, None, None]
+    if spec.relu:
+        v = jnp.maximum(v, 0.0)
+    return v.astype(x.dtype)
+
+
+def binarize_ref(w):
+    """Reference binarization: sign(w) with sign(0) := +1 (paper's BWN)."""
+    return jnp.where(w >= 0, 1.0, -1.0).astype(w.dtype)

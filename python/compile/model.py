@@ -1,0 +1,204 @@
+"""L2 — the JAX model layer of the Hyperdrive stack.
+
+Defines the BWN networks that get AOT-lowered, layer by layer, to HLO text
+artifacts for the Rust coordinator:
+
+  * ``make_layer_fn(spec)``   — one Hyperdrive-mappable layer (1×1/3×3 BWN
+    conv + fused bnorm/bypass/bias/ReLU) calling the L1 Pallas kernel;
+  * ``make_head_fn(...)``     — the off-chip head (global-avg-pool + FC);
+    the paper runs first/last layers off the accelerator, we run the head
+    as its own PJRT artifact;
+  * ``hypernet20_steps()``    — "HyperNet-20", the ResNet-20-style BWN
+    network used by the end-to-end example (3 stages of 16/32/64 channels
+    on 32×32 input FMs, strided transitions with 1×1 bypass convolutions —
+    the exact block structure of Fig. 4a scaled to tiny-corpus size);
+  * ``init_params`` / ``forward`` — deterministic synthetic parameters and
+    the golden forward pass used to cross-check the Rust runtime.
+
+Python here runs at *build time only*; the Rust binary never imports it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.bwn_conv import ConvSpec, bwn_conv
+from .kernels.ref import bwn_conv_ref
+
+
+def artifact_name(spec: ConvSpec) -> str:
+    """Canonical artifact key for a layer spec (one HLO file per key)."""
+    return (f"conv_k{spec.k}s{spec.stride}_i{spec.n_in}o{spec.n_out}"
+            f"_h{spec.h}w{spec.w}_bp{int(spec.has_bypass)}"
+            f"_relu{int(spec.relu)}")
+
+
+def make_layer_fn(spec: ConvSpec):
+    """Build the jax function for one layer, ready for jit/lowering."""
+    if spec.has_bypass:
+        def fn(x, w, gamma, beta, byp):
+            return (bwn_conv(x, w, gamma, beta, byp, spec=spec),)
+    else:
+        def fn(x, w, gamma, beta):
+            return (bwn_conv(x, w, gamma, beta, spec=spec),)
+    return fn
+
+
+def make_layer_ref_fn(spec: ConvSpec):
+    """Oracle twin of ``make_layer_fn`` (conv_general_dilated path)."""
+    if spec.has_bypass:
+        def fn(x, w, gamma, beta, byp):
+            return (bwn_conv_ref(x, w, gamma, beta, byp, spec=spec),)
+    else:
+        def fn(x, w, gamma, beta):
+            return (bwn_conv_ref(x, w, gamma, beta, spec=spec),)
+    return fn
+
+
+def make_head_fn():
+    """Off-chip head: global average pool + fully-connected classifier."""
+    def fn(x, w_fc, b_fc):
+        pooled = jnp.mean(x, axis=(1, 2))          # (c,)
+        return (w_fc @ pooled + b_fc,)             # (n_classes,)
+    return fn
+
+
+# --------------------------------------------------------------------------
+# HyperNet-20 — the end-to-end validation network
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Step:
+    """One scheduled layer of a network.
+
+    ``src`` / ``bypass_src`` are step indices (-1 = the network input);
+    the Rust coordinator replays exactly this step list from the manifest.
+    """
+    name: str
+    spec: ConvSpec
+    src: int
+    bypass_src: int = -2       # -2 = no bypass, -1 = network input, >=0 step
+
+
+def hypernet20_steps() -> list[Step]:
+    """ResNet-20-style BWN step list (20 convs), basic blocks of Fig. 4a."""
+    steps: list[Step] = []
+
+    def add(name, spec, src, bypass_src=-2):
+        steps.append(Step(name, spec, src, bypass_src))
+        return len(steps) - 1
+
+    # conv spec templates per stage
+    s1 = dict(n_in=16, n_out=16, h=32, w=32, k=3, stride=1)
+    s2 = dict(n_in=32, n_out=32, h=16, w=16, k=3, stride=1)
+    s3 = dict(n_in=64, n_out=64, h=8, w=8, k=3, stride=1)
+
+    prev = -1
+    # stage 1: three basic blocks, identity bypass
+    for b in range(3):
+        c1 = add(f"s1b{b}c1", ConvSpec(**s1, has_bypass=False, relu=True), prev)
+        prev_block_in = prev
+        prev = add(f"s1b{b}c2", ConvSpec(**s1, has_bypass=True, relu=True),
+                   c1, bypass_src=prev_block_in)
+
+    # transition to stage 2: strided block with 1×1 strided bypass conv
+    t2c1 = add("s2b0c1", ConvSpec(n_in=16, n_out=32, h=32, w=32, k=3, stride=2,
+                                  has_bypass=False, relu=True), prev)
+    t2sk = add("s2b0sk", ConvSpec(n_in=16, n_out=32, h=32, w=32, k=1, stride=2,
+                                  has_bypass=False, relu=False), prev)
+    prev = add("s2b0c2", ConvSpec(**s2, has_bypass=True, relu=True),
+               t2c1, bypass_src=t2sk)
+
+    # stage 2: two more basic blocks
+    for b in (1, 2):
+        c1 = add(f"s2b{b}c1", ConvSpec(**s2, has_bypass=False, relu=True), prev)
+        block_in = prev
+        prev = add(f"s2b{b}c2", ConvSpec(**s2, has_bypass=True, relu=True),
+                   c1, bypass_src=block_in)
+
+    # transition to stage 3
+    t3c1 = add("s3b0c1", ConvSpec(n_in=32, n_out=64, h=16, w=16, k=3, stride=2,
+                                  has_bypass=False, relu=True), prev)
+    t3sk = add("s3b0sk", ConvSpec(n_in=32, n_out=64, h=16, w=16, k=1, stride=2,
+                                  has_bypass=False, relu=False), prev)
+    prev = add("s3b0c2", ConvSpec(**s3, has_bypass=True, relu=True),
+               t3c1, bypass_src=t3sk)
+
+    # stage 3: two more basic blocks
+    for b in (1, 2):
+        c1 = add(f"s3b{b}c1", ConvSpec(**s3, has_bypass=False, relu=True), prev)
+        block_in = prev
+        prev = add(f"s3b{b}c2", ConvSpec(**s3, has_bypass=True, relu=True),
+                   c1, bypass_src=block_in)
+
+    return steps
+
+
+N_CLASSES = 10
+HEAD_IN_CH = 64
+HEAD_IN_HW = 8
+
+
+def binarize(w: np.ndarray) -> np.ndarray:
+    """sign(w) with sign(0) := +1 — the paper's BWN weight quantization."""
+    return np.where(w >= 0, 1.0, -1.0).astype(np.float32)
+
+
+def init_params(seed: int = 2018) -> dict:
+    """Deterministic synthetic parameters for HyperNet-20.
+
+    Real-valued Gaussian weights are binarized to ±1; the per-channel BWN
+    scale α = E|w| (as in BinaryConnect/BWN training) is folded into gamma,
+    emulating the paper's merged batch-norm/scale coefficients.
+    """
+    rng = np.random.default_rng(seed)
+    params = {}
+    for step in hypernet20_steps():
+        s = step.spec
+        wr = rng.normal(0.0, 1.0, size=(s.n_out, s.n_in, s.k, s.k))
+        alpha = np.abs(wr).reshape(s.n_out, -1).mean(axis=1)
+        fan_in = s.n_in * s.k * s.k
+        params[step.name] = {
+            "w": binarize(wr),
+            # α/fan_in keeps activations O(1) through the binarized stack
+            "gamma": (alpha / fan_in).astype(np.float32),
+            "beta": rng.normal(0.0, 0.02, size=(s.n_out,)).astype(np.float32),
+        }
+    params["head"] = {
+        "w_fc": rng.normal(0.0, 1.0 / np.sqrt(HEAD_IN_CH),
+                           size=(N_CLASSES, HEAD_IN_CH)).astype(np.float32),
+        "b_fc": np.zeros((N_CLASSES,), dtype=np.float32),
+    }
+    return params
+
+
+def make_input(seed: int = 7) -> np.ndarray:
+    """Synthetic 16-channel input FM (the off-chip first conv's output)."""
+    rng = np.random.default_rng(seed)
+    return rng.normal(0.0, 1.0, size=(16, 32, 32)).astype(np.float32)
+
+
+def forward(params: dict, x, *, use_pallas: bool = True):
+    """Golden forward pass over the step list; returns (logits, fm_trace)."""
+    steps = hypernet20_steps()
+    outs: list = []
+    for step in steps:
+        p = params[step.name]
+        src = x if step.src == -1 else outs[step.src]
+        make = make_layer_fn if use_pallas else make_layer_ref_fn
+        fn = make(step.spec)
+        args = [src, jnp.asarray(p["w"]), jnp.asarray(p["gamma"]),
+                jnp.asarray(p["beta"])]
+        if step.spec.has_bypass:
+            byp = x if step.bypass_src == -1 else outs[step.bypass_src]
+            args.append(byp)
+        outs.append(fn(*args)[0])
+    head = make_head_fn()
+    logits = head(outs[-1], jnp.asarray(params["head"]["w_fc"]),
+                  jnp.asarray(params["head"]["b_fc"]))[0]
+    return logits, outs

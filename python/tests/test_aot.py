@@ -1,0 +1,73 @@
+"""AOT pipeline checks: HLO text is loadable-format (no 64-bit-id protos)
+and the manifest/blob layout is consistent with the model.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+from compile.kernels.bwn_conv import ConvSpec
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lower_conv_produces_hlo_text():
+    spec = ConvSpec(8, 16, 8, 8, 3, 1, False, True)
+    text = aot.lower_conv(spec)
+    assert "HloModule" in text
+    assert "ROOT" in text
+    # return_tuple=True → tuple-shaped root.
+    assert "(f32[16,8,8]" in text.replace(" ", "")[:2000] or "tuple" in text
+
+
+def test_lower_head_shapes():
+    text = aot.lower_head()
+    assert "HloModule" in text
+    assert "f32[10]" in text.replace(" ", "")
+
+
+def test_manifest_row_format():
+    spec = ConvSpec(16, 32, 32, 32, 3, 2, False, True)
+    row = aot.conv_manifest_row(M.artifact_name(spec), spec)
+    assert row.startswith("artifact name=conv_k3s2_i16o32_h32w32_bp0_relu1")
+    assert "k=3 stride=2 n_in=16 n_out=32" in row
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.tsv")),
+                    reason="run `make artifacts` first")
+class TestGeneratedArtifacts:
+    def test_manifest_lists_all_step_artifacts(self):
+        with open(os.path.join(ART, "manifest.tsv")) as f:
+            text = f.read()
+        steps = M.hypernet20_steps()
+        for s in steps:
+            assert M.artifact_name(s.spec) in text, s.name
+        assert "network name=hypernet20 steps=20" in text
+
+    def test_blob_matches_params(self):
+        params = M.init_params(seed=2018)
+        blob = np.fromfile(os.path.join(ART, "e2e_params.bin"),
+                           dtype=np.float32)
+        # First blob entry is step 0's weights.
+        s0 = M.hypernet20_steps()[0]
+        w0 = params[s0.name]["w"].ravel()
+        np.testing.assert_array_equal(blob[: w0.size], w0)
+
+    def test_golden_logits_reproducible(self):
+        params = M.init_params(seed=2018)
+        x = M.make_input()
+        import jax.numpy as jnp
+        logits, _ = M.forward(params, jnp.asarray(x), use_pallas=True)
+        golden = np.fromfile(os.path.join(ART, "e2e_golden.bin"),
+                             dtype=np.float32)
+        np.testing.assert_allclose(np.asarray(logits), golden,
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_every_artifact_file_exists(self):
+        from compile.model import hypernet20_steps, artifact_name
+        for s in hypernet20_steps():
+            path = os.path.join(ART, artifact_name(s.spec) + ".hlo.txt")
+            assert os.path.exists(path), path
+        assert os.path.exists(os.path.join(ART, "head.hlo.txt"))

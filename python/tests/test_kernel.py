@@ -1,0 +1,144 @@
+"""L1 correctness: the Pallas BWN convolution kernel vs the pure-jnp
+oracle — the core correctness signal of the compile path.
+
+Hypothesis sweeps shapes/strides/kernel sizes/dtypes; every case asserts
+allclose against ``jax.lax.conv_general_dilated``-based ``ref.py``.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.bwn_conv import ConvSpec, bwn_conv, vmem_bytes
+from compile.kernels.ref import binarize_ref, bwn_conv_ref
+
+
+def make_case(rng, spec: ConvSpec, dtype=np.float32):
+    x = rng.normal(size=(spec.n_in, spec.h, spec.w)).astype(dtype)
+    w = np.where(rng.normal(size=(spec.n_out, spec.n_in, spec.k, spec.k)) >= 0,
+                 1.0, -1.0).astype(dtype)
+    gamma = (0.25 + rng.random(spec.n_out)).astype(dtype)
+    beta = rng.normal(size=spec.n_out).astype(dtype) * 0.1
+    byp = (rng.normal(size=(spec.n_out, spec.h_out, spec.w_out)).astype(dtype)
+           if spec.has_bypass else None)
+    return x, w, gamma, beta, byp
+
+
+def run_both(spec, dtype=np.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    x, w, gamma, beta, byp = make_case(rng, spec, dtype)
+    out = bwn_conv(jnp.asarray(x), jnp.asarray(w), jnp.asarray(gamma),
+                   jnp.asarray(beta),
+                   jnp.asarray(byp) if byp is not None else None, spec=spec)
+    ref = bwn_conv_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(gamma),
+                       jnp.asarray(beta),
+                       jnp.asarray(byp) if byp is not None else None, spec=spec)
+    return np.asarray(out), np.asarray(ref)
+
+
+@st.composite
+def conv_specs(draw):
+    k = draw(st.sampled_from([1, 3]))
+    stride = draw(st.sampled_from([1, 2]))
+    cpar = 16
+    n_in = draw(st.integers(1, 24))
+    n_out = cpar * draw(st.integers(1, 3))
+    h = stride * draw(st.integers(max(1, k // 2 + 1), 8))
+    w = stride * draw(st.integers(max(1, k // 2 + 1), 8))
+    has_bypass = draw(st.booleans())
+    relu = draw(st.booleans())
+    return ConvSpec(n_in, n_out, h, w, k, stride, has_bypass, relu, cpar)
+
+
+@settings(max_examples=60, deadline=None)
+@given(spec=conv_specs(), seed=st.integers(0, 2**31 - 1))
+def test_kernel_matches_oracle_hypothesis(spec, seed):
+    out, ref = run_both(spec, seed=seed)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("spec", [
+    ConvSpec(16, 16, 32, 32, 3, 1, False, True),   # HyperNet stage-1 conv
+    ConvSpec(16, 16, 32, 32, 3, 1, True, True),    # … with bypass
+    ConvSpec(16, 32, 32, 32, 3, 2, False, True),   # strided transition
+    ConvSpec(16, 32, 32, 32, 1, 2, False, False),  # 1×1 strided shortcut
+    ConvSpec(32, 32, 16, 16, 3, 1, True, True),
+    ConvSpec(64, 64, 8, 8, 3, 1, True, True),
+])
+def test_hypernet_layer_shapes(spec):
+    out, ref = run_both(spec)
+    assert out.shape == (spec.n_out, spec.h_out, spec.w_out)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_float16_feature_maps():
+    # The chip stores FP16 FMs; the kernel must also trace in f16.
+    spec = ConvSpec(8, 16, 8, 8, 3, 1, False, True)
+    out, ref = run_both(spec, dtype=np.float16)
+    assert out.dtype == np.float16
+    np.testing.assert_allclose(out.astype(np.float32),
+                               ref.astype(np.float32), rtol=2e-2, atol=2e-2)
+
+
+def test_sign_convention_zero_is_positive():
+    w = jnp.asarray([-0.0, 0.0, 1e-30, -1e-30])
+    b = np.asarray(binarize_ref(w))
+    # sign(±0) := +1 — matches rust `bwn::binarize` exactly.
+    assert b[0] == 1.0 and b[1] == 1.0 and b[2] == 1.0 and b[3] == -1.0
+
+
+def test_relu_flag_controls_activation():
+    spec_on = ConvSpec(4, 16, 4, 4, 1, 1, False, True)
+    spec_off = spec_on._replace(relu=False)
+    rng = np.random.default_rng(3)
+    x, w, gamma, beta, _ = make_case(rng, spec_off)
+    beta = beta - 10.0  # push outputs negative
+    on = np.asarray(bwn_conv(jnp.asarray(x), jnp.asarray(w), jnp.asarray(gamma),
+                             jnp.asarray(beta), spec=spec_on))
+    off = np.asarray(bwn_conv(jnp.asarray(x), jnp.asarray(w), jnp.asarray(gamma),
+                              jnp.asarray(beta), spec=spec_off))
+    assert (on >= 0).all()
+    assert (off < 0).any()
+    np.testing.assert_allclose(on, np.maximum(off, 0.0), rtol=1e-5, atol=1e-5)
+
+
+def test_bypass_added_before_bias_order():
+    # §IV-B order: v = γ·conv + bypass + β. Constructed case where a
+    # wrong order (bias before scale, etc.) changes the result.
+    spec = ConvSpec(1, 16, 2, 2, 1, 1, True, False)
+    x = jnp.ones((1, 2, 2), jnp.float32)
+    w = jnp.ones((16, 1, 1, 1), jnp.float32)
+    gamma = jnp.full((16,), 2.0)
+    beta = jnp.full((16,), 3.0)
+    byp = jnp.full((16, 2, 2), 5.0)
+    out = np.asarray(bwn_conv(x, w, gamma, beta, byp, spec=spec))
+    np.testing.assert_allclose(out, 1 * 2 + 5 + 3)
+
+
+def test_weight_stationarity_grid_matches_cout_tiles():
+    # The kernel's grid (weight streaming) must iterate n_out/C tiles.
+    spec = ConvSpec(8, 48, 4, 4, 3, 1, False, True)
+    assert spec.n_out % spec.cpar == 0
+    out, ref = run_both(spec)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_estimate_within_tpu_budget():
+    # Real-TPU mapping check: every HyperNet-20 layer block fits VMEM.
+    from compile.model import hypernet20_steps
+    for step in hypernet20_steps():
+        v = vmem_bytes(step.spec)
+        assert v["total"] < 16 * 2**20, f"{step.name}: {v}"
+
+
+def test_invalid_specs_rejected():
+    with pytest.raises(AssertionError):
+        bwn_conv(jnp.zeros((4, 4, 4)), jnp.zeros((20, 4, 3, 3)),
+                 jnp.zeros(20), jnp.zeros(20),
+                 spec=ConvSpec(4, 20, 4, 4, 3, 1, False, True))  # 20 % 16
+    with pytest.raises(AssertionError):
+        bwn_conv(jnp.zeros((4, 4, 4)), jnp.zeros((16, 4, 5, 5)),
+                 jnp.zeros(16), jnp.zeros(16),
+                 spec=ConvSpec(4, 16, 4, 4, 5, 1, False, True))  # k = 5

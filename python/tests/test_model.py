@@ -1,0 +1,102 @@
+"""L2 correctness: the HyperNet-20 model — step-list integrity, shape
+chaining, golden forward pass, and pallas-vs-oracle agreement on the
+whole network.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.kernels.bwn_conv import ConvSpec
+
+
+def test_step_list_structure():
+    steps = M.hypernet20_steps()
+    assert len(steps) == 20
+    names = [s.name for s in steps]
+    assert len(set(names)) == 20, "step names must be unique"
+    # Transitions have 1×1 strided shortcut convs.
+    assert "s2b0sk" in names and "s3b0sk" in names
+    for s in steps:
+        if s.spec.has_bypass:
+            assert s.bypass_src != -2
+        else:
+            assert s.bypass_src == -2
+
+
+def test_shapes_chain():
+    steps = M.hypernet20_steps()
+    shapes = {-1: (16, 32, 32)}
+    for i, s in enumerate(steps):
+        src = shapes[s.src]
+        assert src == (s.spec.n_in, s.spec.h, s.spec.w), s.name
+        shapes[i] = (s.spec.n_out, s.spec.h_out, s.spec.w_out)
+        if s.spec.has_bypass:
+            assert shapes[s.bypass_src] == shapes[i], s.name
+    assert shapes[len(steps) - 1] == (64, 8, 8)
+
+
+def test_artifact_names_dedupe_to_ten():
+    steps = M.hypernet20_steps()
+    names = {M.artifact_name(s.spec) for s in steps}
+    assert len(names) == 10
+
+
+def test_params_deterministic_and_binary():
+    p1 = M.init_params(seed=2018)
+    p2 = M.init_params(seed=2018)
+    for step in M.hypernet20_steps():
+        np.testing.assert_array_equal(p1[step.name]["w"], p2[step.name]["w"])
+        w = p1[step.name]["w"]
+        assert set(np.unique(w)) <= {-1.0, 1.0}
+        assert (p1[step.name]["gamma"] > 0).all()
+
+
+def test_forward_pallas_matches_oracle():
+    params = M.init_params(seed=5)
+    x = jnp.asarray(M.make_input(seed=9))
+    logits_pl, fms_pl = M.forward(params, x, use_pallas=True)
+    logits_ref, fms_ref = M.forward(params, x, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(logits_pl), np.asarray(logits_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(fms_pl[-1]), np.asarray(fms_ref[-1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_forward_activations_bounded():
+    # The α/fan-in folded scaling keeps the binarized stack numerically
+    # tame (no blow-up over 20 layers).
+    params = M.init_params(seed=2018)
+    x = jnp.asarray(M.make_input(seed=7))
+    logits, fms = M.forward(params, x, use_pallas=False)
+    for i, fm in enumerate(fms):
+        m = float(jnp.abs(fm).max())
+        assert m < 100.0, f"step {i} exploded: {m}"
+    assert float(jnp.abs(logits).max()) < 50.0
+
+
+def test_head_is_global_avgpool_plus_fc():
+    fn = M.make_head_fn()
+    x = jnp.ones((64, 8, 8))
+    w = jnp.zeros((10, 64)).at[3, :].set(1.0)
+    b = jnp.arange(10.0)
+    (out,) = fn(x, w, b)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(b) + np.eye(10)[3] * 64.0)
+
+
+def test_layer_fn_signature_matches_bypass():
+    spec_b = ConvSpec(16, 16, 8, 8, 3, 1, True, True)
+    spec_n = ConvSpec(16, 16, 8, 8, 3, 1, False, True)
+    import inspect
+    assert len(inspect.signature(M.make_layer_fn(spec_b)).parameters) == 5
+    assert len(inspect.signature(M.make_layer_fn(spec_n)).parameters) == 4
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2018])
+def test_binarize_is_sign(seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=100)
+    b = M.binarize(w)
+    assert ((w >= 0) == (b == 1.0)).all()

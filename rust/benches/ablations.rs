@@ -1,0 +1,93 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. bypass fusion (§IV-B's "+50% memory avoided"),
+//! 2. depth-wise FMM-bank serialization (ShuffleNet utilization),
+//! 3. FM precision (FP16 → Q12/Q8, the paper's §VI-D projection),
+//! 4. projection vs identity shortcuts (Tbl II weight accounting),
+//! 5. aspect-matched vs minimal mesh planning.
+
+mod bench_util;
+
+use hyperdrive::coordinator::schedule::{schedule_network, DepthwisePolicy};
+use hyperdrive::coordinator::tiling::{plan_mesh, plan_mesh_exact};
+use hyperdrive::coordinator::wcl;
+use hyperdrive::energy::ablation::{precision_ablation, render};
+use hyperdrive::network::zoo;
+use hyperdrive::util::fmt_bits;
+use hyperdrive::ChipConfig;
+
+fn main() {
+    let cfg = ChipConfig::default();
+
+    // 1. Bypass fusion ablation.
+    println!("== ablation 1: on-the-fly bypass accumulation (§IV-B) ==");
+    for net in [zoo::resnet34(224, 224), zoo::resnet50(224, 224)] {
+        let fused = wcl::analyze(&net).wcl_words;
+        let unfused = wcl::analyze_with(&net, false).wcl_words;
+        println!(
+            "{:<12} WCL fused {} vs unfused {} ({:+.0}% without fusion)",
+            net.name,
+            fmt_bits(fused * 16),
+            fmt_bits(unfused * 16),
+            100.0 * (unfused as f64 / fused as f64 - 1.0)
+        );
+    }
+
+    // 2. Depth-wise policy ablation.
+    println!("\n== ablation 2: depth-wise bank serialization (ShuffleNet) ==");
+    let net = zoo::shufflenet(224, 224);
+    for (name, dw) in [
+        ("full-rate", DepthwisePolicy::FullRate),
+        ("bank-serialized", DepthwisePolicy::BankSerialized),
+    ] {
+        let s = schedule_network(&net, &cfg, dw);
+        println!(
+            "{:<16} cycles {:>8}  util {:>5.1}%  conv-util {:>5.1}%",
+            name,
+            s.total_cycles(),
+            100.0 * s.utilization(&cfg),
+            100.0 * s.conv_utilization(&cfg)
+        );
+    }
+
+    // 3. Precision ablation.
+    println!("\n== ablation 3: FM precision (§VI-D projection) ==");
+    for net in [zoo::resnet34(224, 224), zoo::resnet34(1024, 2048)] {
+        let rows = precision_ablation(&net, &cfg);
+        println!("{}", render(&net.name, &rows));
+    }
+
+    // 4. Shortcut kind (weight accounting).
+    println!("== ablation 4: projection vs identity shortcuts ==");
+    for net in [zoo::resnet34(224, 224), zoo::resnet50(224, 224), zoo::resnet152(224, 224)] {
+        let proj = zoo::projection_weight_bits(&net);
+        println!(
+            "{:<12} weights {} with projections, {} identity-only",
+            net.name,
+            fmt_bits(net.weight_bits()),
+            fmt_bits(net.weight_bits() - proj)
+        );
+    }
+
+    // 5. Mesh planning policy.
+    println!("\n== ablation 5: mesh planning (ResNet-34 @2048x1024) ==");
+    let net2k = zoo::resnet34(1024, 2048);
+    let auto = plan_mesh(&net2k, &cfg);
+    let paper = plan_mesh_exact(&net2k, &cfg, 5, 10);
+    for (name, p) in [("aspect-matched", auto), ("paper 10x5", paper)] {
+        println!(
+            "{:<16} {}x{} = {} chips, per-chip WCL {} words",
+            name,
+            p.rows,
+            p.cols,
+            p.chips(),
+            p.per_chip_wcl_words
+        );
+    }
+
+    // Timing anchor for the whole ablation suite.
+    bench_util::bench("full ablation suite", 1, 10, || {
+        let rows = precision_ablation(&zoo::resnet34(224, 224), &cfg);
+        assert_eq!(rows.len(), 3);
+    });
+}

@@ -1,0 +1,24 @@
+//! Tiny timing harness shared by the paper-table benches (the vendored
+//! crate set has no criterion; `harness = false` benches time with
+//! `std::time::Instant`).
+
+use std::time::Instant;
+
+/// Time `f` over `iters` iterations after `warmup` runs; prints
+/// mean/min per-iteration time and returns the mean seconds.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::MAX, f64::min);
+    println!("bench {name:<40} mean {:>10.3} µs   min {:>10.3} µs   ({iters} iters)",
+             mean * 1e6, min * 1e6);
+    mean
+}

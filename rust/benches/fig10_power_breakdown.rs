@@ -1,0 +1,21 @@
+//! Fig 10 — component power/energy breakdown at the 0.5 V point, from
+//! schedule-derived access counts × per-access energies.
+
+mod bench_util;
+
+use hyperdrive::coordinator::tiling::MeshPlan;
+use hyperdrive::energy::breakdown::breakdown;
+use hyperdrive::network::zoo;
+use hyperdrive::report;
+use hyperdrive::ChipConfig;
+
+fn main() {
+    let cfg = ChipConfig::default();
+    println!("{}", report::fig10(&cfg));
+    let net = zoo::resnet34(224, 224);
+    let plan = MeshPlan { rows: 1, cols: 1, per_chip_wcl_words: 0 };
+    bench_util::bench("breakdown(ResNet-34)", 3, 200, || {
+        let b = breakdown(&net, &cfg, &plan);
+        assert!(b.total_j() > 0.0);
+    });
+}

@@ -1,0 +1,24 @@
+//! Fig 11 — I/O bits: weight-stationary (FM streaming) vs Hyperdrive
+//! (weight streaming + border exchange) across image sizes and mesh
+//! tilings.
+
+mod bench_util;
+
+use hyperdrive::baselines::weight_stationary::hyperdrive_fig11_bits;
+use hyperdrive::baselines::weight_stationary_io_bits;
+use hyperdrive::coordinator::tiling::plan_mesh;
+use hyperdrive::network::zoo;
+use hyperdrive::report;
+use hyperdrive::ChipConfig;
+
+fn main() {
+    let cfg = ChipConfig::default();
+    println!("{}", report::fig11(&cfg));
+    bench_util::bench("fig11 point (build + plan + both I/O models)", 2, 50, || {
+        let net = zoo::resnet34(448, 448);
+        let plan = plan_mesh(&net, &cfg);
+        let ws = weight_stationary_io_bits(&net, 16);
+        let hd = hyperdrive_fig11_bits(&net, &plan, 16);
+        assert!(ws > hd);
+    });
+}

@@ -1,0 +1,19 @@
+//! Fig 8 — energy efficiency vs throughput across forward-body-bias
+//! settings (ResNet-34, incl. I/O).
+
+mod bench_util;
+
+use hyperdrive::energy::scaling;
+use hyperdrive::report;
+use hyperdrive::ChipConfig;
+
+fn main() {
+    let cfg = ChipConfig::default();
+    println!("{}", report::fig8(&cfg));
+    bench_util::bench("vdd_for_freq bisection ×100", 3, 200, || {
+        for i in 0..100 {
+            let f = 60e6 + i as f64 * 1e6;
+            let _ = scaling::vdd_for_freq(f, 1.5);
+        }
+    });
+}

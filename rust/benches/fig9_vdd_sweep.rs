@@ -1,0 +1,15 @@
+//! Fig 9 — energy efficiency and throughput vs VDD.
+
+mod bench_util;
+
+use hyperdrive::report;
+use hyperdrive::ChipConfig;
+
+fn main() {
+    let cfg = ChipConfig::default();
+    println!("{}", report::fig9(&cfg));
+    bench_util::bench("fig9 series generation", 3, 200, || {
+        let s = report::fig9(&cfg);
+        assert!(!s.is_empty());
+    });
+}

@@ -1,0 +1,92 @@
+//! Hot-path micro-benchmarks for the perf pass (EXPERIMENTS.md §Perf):
+//! the functional simulator's conv inner loop, FP16 rounding, weight
+//! packing/unpacking, the mesh exchange, and the memory planner.
+
+mod bench_util;
+
+use hyperdrive::bwn::pack_weights;
+use hyperdrive::coordinator::memory;
+use hyperdrive::network::{zoo, ConvLayer};
+use hyperdrive::simulator::mesh::{MeshSim, StepParams};
+use hyperdrive::simulator::{self, FeatureMap, Precision};
+use hyperdrive::util::f16::round_f16;
+use hyperdrive::util::SplitMix64;
+
+fn main() {
+    let mut rng = SplitMix64::new(1);
+
+    // FP16 rounding primitive (inner-inner loop of the F16 datapath).
+    let xs: Vec<f32> = (0..4096).map(|_| rng.next_gauss()).collect();
+    bench_util::bench("round_f16 ×4096", 10, 2000, || {
+        let mut acc = 0.0f32;
+        for &x in &xs {
+            acc += round_f16(x);
+        }
+        std::hint::black_box(acc);
+    });
+
+    // Functional chip simulator, one mid-size layer, both precisions.
+    let l = ConvLayer::new("hot", 64, 64, 28, 28, 3, 1);
+    let w: Vec<f32> = (0..64 * 64 * 9).map(|_| rng.next_sym()).collect();
+    let stream = pack_weights(&l, &w, 16);
+    let gamma = vec![0.01f32; 64];
+    let beta = vec![0.0f32; 64];
+    let input = FeatureMap::from_vec(64, 28, 28, (0..64 * 784).map(|_| rng.next_sym()).collect());
+    let params = simulator::chip::LayerParams {
+        layer: &l,
+        stream: &stream,
+        gamma: &gamma,
+        beta: &beta,
+    };
+    for (name, prec) in [("F32", Precision::F32), ("F16", Precision::F16)] {
+        bench_util::bench(
+            &format!("chip sim conv 64×64×28² 3×3 ({name})"),
+            2,
+            20,
+            || {
+                let (out, _) = simulator::run_layer(&params, &input, None, prec, (7, 7));
+                std::hint::black_box(out.data[0]);
+            },
+        );
+    }
+
+    // Weight packing + unpacking (the stream on/off-pin path).
+    bench_util::bench("pack_weights 64×64×3×3", 5, 200, || {
+        let s = pack_weights(&l, &w, 16);
+        std::hint::black_box(s.words.len());
+    });
+    bench_util::bench("unpack_dense 64×64×3×3", 5, 200, || {
+        let d = stream.unpack_dense();
+        std::hint::black_box(d.len());
+    });
+
+    // Mesh run (whole HyperNet-20 on 2×2, FP16) — exchange included.
+    let net = zoo::hypernet20();
+    let sparams: Vec<StepParams> = net
+        .steps
+        .iter()
+        .map(|s| {
+            let l = &s.layer;
+            let nie = l.n_in / l.groups;
+            let w: Vec<f32> = (0..l.n_out * nie * l.k * l.k).map(|_| rng.next_sym()).collect();
+            StepParams {
+                stream: pack_weights(l, &w, 16),
+                gamma: vec![0.01; l.n_out],
+                beta: vec![0.0; l.n_out],
+            }
+        })
+        .collect();
+    let inp = FeatureMap::from_vec(16, 32, 32, (0..16 * 1024).map(|_| rng.next_sym()).collect());
+    bench_util::bench("mesh 2×2 HyperNet-20 (F16, full run)", 1, 5, || {
+        let sim = MeshSim::new(2, 2, Precision::F16);
+        let (out, _) = sim.run_network(&net, &sparams, &inp);
+        std::hint::black_box(out.data[0]);
+    });
+
+    // Memory planner on the deepest network.
+    let deep = zoo::resnet152(224, 224);
+    bench_util::bench("memory::plan_tight(ResNet-152)", 2, 50, || {
+        let p = memory::plan_tight(&deep).unwrap();
+        std::hint::black_box(p.peak_words);
+    });
+}

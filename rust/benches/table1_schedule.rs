@@ -1,0 +1,19 @@
+//! Tbl I — the cycle-exact weight-stream schedule of a 16→64-FM 3×3
+//! convolution (first/last cycles of the trace + trace-generation perf).
+
+mod bench_util;
+
+use hyperdrive::coordinator::schedule::trace_layer;
+use hyperdrive::network::ConvLayer;
+use hyperdrive::report;
+use hyperdrive::ChipConfig;
+
+fn main() {
+    println!("{}", report::table1());
+    let cfg = ChipConfig::default();
+    let l = ConvLayer::new("t", 16, 64, 56, 56, 3, 1);
+    bench_util::bench("trace_layer(16→64 3×3, full 36.8k cycles)", 3, 100, || {
+        let t = trace_layer(&l, &cfg, 40_000);
+        assert_eq!(t.len(), 36_864);
+    });
+}

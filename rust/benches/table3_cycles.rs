@@ -1,0 +1,19 @@
+//! Tbl III — ResNet-34 cycle/throughput breakdown from the Algorithm-1
+//! schedule model.
+
+mod bench_util;
+
+use hyperdrive::coordinator::schedule::{schedule_network, DepthwisePolicy};
+use hyperdrive::network::zoo;
+use hyperdrive::report;
+use hyperdrive::ChipConfig;
+
+fn main() {
+    let cfg = ChipConfig::default();
+    println!("{}", report::table3(&cfg));
+    let net = zoo::resnet34(224, 224);
+    bench_util::bench("schedule_network(ResNet-34)", 3, 200, || {
+        let s = schedule_network(&net, &cfg, DepthwisePolicy::default());
+        assert_eq!(s.cycles.conv, 4_521_984);
+    });
+}

@@ -1,0 +1,21 @@
+//! Tbl IV — measured operating points + model interpolation.
+
+mod bench_util;
+
+use hyperdrive::energy::scaling;
+use hyperdrive::report;
+use hyperdrive::ChipConfig;
+
+fn main() {
+    let cfg = ChipConfig::default();
+    println!("{}", report::table4(&cfg));
+    bench_util::bench("scaling model full (V,VBB) grid", 3, 1000, || {
+        let mut acc = 0.0;
+        for v in [0.4, 0.5, 0.6, 0.7, 0.8] {
+            for b in [0.0, 0.5, 1.0, 1.5, 1.8] {
+                acc += scaling::energy_per_cycle_j(v, b);
+            }
+        }
+        assert!(acc > 0.0);
+    });
+}

@@ -1,0 +1,19 @@
+//! Tbl VI — Tile-PU utilization per network (total and conv-phase), with
+//! the depth-wise serialization ablation.
+
+mod bench_util;
+
+use hyperdrive::coordinator::schedule::{schedule_network, DepthwisePolicy};
+use hyperdrive::network::zoo;
+use hyperdrive::report;
+use hyperdrive::ChipConfig;
+
+fn main() {
+    let cfg = ChipConfig::default();
+    println!("{}", report::table6(&cfg));
+    let yolo = zoo::yolov3(320, 320);
+    bench_util::bench("schedule_network(YOLOv3 @320²)", 3, 200, || {
+        let s = schedule_network(&yolo, &cfg, DepthwisePolicy::FullRate);
+        assert!(s.total_cycles() > 0);
+    });
+}

@@ -1,0 +1,13 @@
+//! State-of-the-art comparator models (Tbl V, Fig 11).
+//!
+//! * [`published`] — the competitor rows of Tbl V (YodaNN, Wang et al.,
+//!   UNPU) as published, used verbatim for the comparison table exactly
+//!   as the paper does;
+//! * [`weight_stationary`] — the generic FM-streaming dataflow I/O model
+//!   behind Fig 11's green curve and the "I/O energy wall" argument.
+
+pub mod published;
+pub mod weight_stationary;
+
+pub use published::{published_rows, PublishedRow};
+pub use weight_stationary::weight_stationary_io_bits;

@@ -1,0 +1,215 @@
+//! Competitor rows of Tbl V, as published (the paper compares against
+//! the numbers reported by the respective silicon papers; so do we).
+
+/// One comparison row (energies in mJ/image, efficiency in TOp/s/W).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PublishedRow {
+    pub name: &'static str,
+    pub technology: &'static str,
+    pub dnn: &'static str,
+    pub input: &'static str,
+    pub precision: &'static str,
+    pub core_v: f64,
+    pub eff_throughput_gops: f64,
+    pub core_e_mj: f64,
+    pub io_e_mj: f64,
+    pub total_e_mj: f64,
+    pub efficiency_tops_w: f64,
+    pub area_mge: f64,
+}
+
+/// All competitor rows of Tbl V (image classification + object
+/// detection sections).
+pub fn published_rows() -> Vec<PublishedRow> {
+    vec![
+        PublishedRow {
+            name: "YodaNN (layout) [26] @1.2V",
+            technology: "umc65",
+            dnn: "ResNet-34",
+            input: "224x224",
+            precision: "Bin./Q12",
+            core_v: 1.20,
+            eff_throughput_gops: 490.0,
+            core_e_mj: 0.9,
+            io_e_mj: 3.6,
+            total_e_mj: 4.5,
+            efficiency_tops_w: 1.6,
+            area_mge: 1.3,
+        },
+        PublishedRow {
+            name: "YodaNN (layout) [26] @0.6V",
+            technology: "umc65",
+            dnn: "ResNet-34",
+            input: "224x224",
+            precision: "Bin./Q12",
+            core_v: 0.60,
+            eff_throughput_gops: 18.0,
+            core_e_mj: 0.1,
+            io_e_mj: 3.6,
+            total_e_mj: 3.7,
+            efficiency_tops_w: 2.0,
+            area_mge: 1.3,
+        },
+        PublishedRow {
+            name: "Wang w/ 25 Mbit SRAM",
+            technology: "SMIC130",
+            dnn: "ResNet-34",
+            input: "224x224",
+            precision: "Bin./ENQ6",
+            core_v: 1.08,
+            eff_throughput_gops: 876.0,
+            core_e_mj: 5.4,
+            io_e_mj: 1.7,
+            total_e_mj: 7.2,
+            efficiency_tops_w: 1.0,
+            area_mge: 9.9,
+        },
+        PublishedRow {
+            name: "UNPU (chip) [44]",
+            technology: "65nm",
+            dnn: "ResNet-34",
+            input: "224x224",
+            precision: "Bin./Q16",
+            core_v: 0.77,
+            eff_throughput_gops: 346.0,
+            core_e_mj: 2.3,
+            io_e_mj: 3.6,
+            total_e_mj: 6.0,
+            efficiency_tops_w: 1.2,
+            area_mge: 11.1,
+        },
+        PublishedRow {
+            name: "Wang w/ 25 Mbit SRAM",
+            technology: "SMIC130",
+            dnn: "ShuffleNet",
+            input: "224x224",
+            precision: "Bin./ENQ6",
+            core_v: 1.08,
+            eff_throughput_gops: 876.0,
+            core_e_mj: 0.3,
+            io_e_mj: 0.4,
+            total_e_mj: 0.7,
+            efficiency_tops_w: 0.5,
+            area_mge: 9.9,
+        },
+        PublishedRow {
+            name: "UNPU (chip) [44]",
+            technology: "65nm",
+            dnn: "ShuffleNet",
+            input: "224x224",
+            precision: "Bin./Q16",
+            core_v: 0.77,
+            eff_throughput_gops: 346.0,
+            core_e_mj: 0.1,
+            io_e_mj: 1.0,
+            total_e_mj: 1.1,
+            efficiency_tops_w: 0.3,
+            area_mge: 11.1,
+        },
+        PublishedRow {
+            name: "Wang w/ 25 Mbit SRAM",
+            technology: "SMIC130",
+            dnn: "YOLOv3 (COCO)",
+            input: "320x320",
+            precision: "Bin./ENQ6",
+            core_v: 1.08,
+            eff_throughput_gops: 876.0,
+            core_e_mj: 40.9,
+            io_e_mj: 4.2,
+            total_e_mj: 45.1,
+            efficiency_tops_w: 1.2,
+            area_mge: 9.9,
+        },
+        PublishedRow {
+            name: "UNPU (chip) [44]",
+            technology: "65nm",
+            dnn: "YOLOv3",
+            input: "320x320",
+            precision: "Bin./Q16",
+            core_v: 0.77,
+            eff_throughput_gops: 346.0,
+            core_e_mj: 17.2,
+            io_e_mj: 9.1,
+            total_e_mj: 26.4,
+            efficiency_tops_w: 2.0,
+            area_mge: 11.1,
+        },
+        PublishedRow {
+            name: "Wang w/ 25 Mbit SRAM",
+            technology: "SMIC130",
+            dnn: "ResNet-34",
+            input: "2kx1k",
+            precision: "Bin./ENQ6",
+            core_v: 1.08,
+            eff_throughput_gops: 876.0,
+            core_e_mj: 243.4,
+            io_e_mj: 40.5,
+            total_e_mj: 283.9,
+            efficiency_tops_w: 1.0,
+            area_mge: 9.9,
+        },
+        PublishedRow {
+            name: "UNPU (chip) [44]",
+            technology: "65nm",
+            dnn: "ResNet-34",
+            input: "2kx1k",
+            precision: "Bin./Q16",
+            core_v: 0.77,
+            eff_throughput_gops: 346.0,
+            core_e_mj: 97.7,
+            io_e_mj: 105.6,
+            total_e_mj: 203.3,
+            efficiency_tops_w: 1.4,
+            area_mge: 11.1,
+        },
+    ]
+}
+
+/// Best competitor efficiency for a workload class (for the improvement
+/// factors at the bottom of Tbl V).
+pub fn best_competitor_efficiency(dnn: &str, input: &str) -> f64 {
+    published_rows()
+        .iter()
+        .filter(|r| r.dnn.starts_with(dnn) && r.input == input)
+        .map(|r| r.efficiency_tops_w)
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_are_internally_consistent() {
+        for r in published_rows() {
+            assert!(
+                (r.core_e_mj + r.io_e_mj - r.total_e_mj).abs() < 0.11,
+                "{}: {} + {} != {}",
+                r.name,
+                r.core_e_mj,
+                r.io_e_mj,
+                r.total_e_mj
+            );
+        }
+    }
+
+    #[test]
+    fn best_competitors_match_paper_improvement_baselines() {
+        // Image classification baseline: YodaNN @0.6 V (2.0 TOp/s/W) →
+        // paper claims 1.8× with Hyperdrive's 3.6.
+        assert_eq!(best_competitor_efficiency("ResNet-34", "224x224"), 2.0);
+        // Object detection baseline: UNPU @2k×1k (1.4) → paper claims
+        // 3.1× with 4.3.
+        assert_eq!(best_competitor_efficiency("ResNet-34", "2kx1k"), 1.4);
+    }
+
+    #[test]
+    fn fm_streaming_io_dominates_for_baselines() {
+        // The I/O-wall premise: for the high-resolution workload, I/O is
+        // a large share of every FM-streaming competitor's energy.
+        for r in published_rows().iter().filter(|r| r.input == "2kx1k") {
+            let share = r.io_e_mj / r.total_e_mj;
+            assert!(share > 0.14, "{}: I/O share {share}", r.name);
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! The weight-stationary (FM-streaming) dataflow I/O model — the green
+//! curve of Fig 11 and the quantitative form of the paper's "I/O energy
+//! wall" argument.
+//!
+//! A conventional accelerator keeps weights on-chip and streams every
+//! layer's input and output feature map across the chip boundary once
+//! (optimistic for the baseline: real chips with small line buffers
+//! re-fetch input rows several times). Hyperdrive instead streams the
+//! (16× smaller) binary weights and keeps FMs resident.
+
+use crate::network::Network;
+
+/// FM-streaming I/O bits per image: every layer's input is read and its
+/// output written across the boundary once, at `act_bits` per value.
+pub fn weight_stationary_io_bits(net: &Network, act_bits: usize) -> u64 {
+    net.steps
+        .iter()
+        .map(|s| (s.layer.in_words() + s.layer.out_words()) * act_bits as u64)
+        .sum()
+}
+
+/// Hyperdrive-side curve of Fig 11: weights (constant vs resolution) +
+/// border exchange (grows once the FM tiles across chips).
+pub fn hyperdrive_fig11_bits(
+    net: &Network,
+    plan: &crate::coordinator::tiling::MeshPlan,
+    fm_bits: usize,
+) -> u64 {
+    net.weight_bits() + crate::coordinator::tiling::border_exchange_bits(net, plan, fm_bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::tiling::{plan_mesh, plan_mesh_exact};
+    use crate::network::zoo;
+    use crate::ChipConfig;
+
+    #[test]
+    fn resnet34_fm_streaming_far_exceeds_weight_streaming() {
+        // At 224² the FM traffic is ~100 Mbit vs 21.3 Mbit of weights —
+        // the ~4–5× gap that motivates the whole architecture.
+        let net = zoo::resnet34(224, 224);
+        let ws = weight_stationary_io_bits(&net, 16);
+        let hd = net.weight_bits();
+        let ratio = ws as f64 / hd as f64;
+        assert!((3.5..6.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn fig11_io_reduction_at_2x2_tiling() {
+        // Fig 11: at the first multi-chip step (2×2), Hyperdrive's total
+        // I/O (weights + border exchange) is several times below the
+        // FM-streaming baseline; the paper reports up to 2.7×.
+        let net = zoo::resnet34(448, 448);
+        let cfg = ChipConfig::default();
+        let plan = plan_mesh(&net, &cfg);
+        assert_eq!((plan.rows, plan.cols), (2, 2));
+        let ws = weight_stationary_io_bits(&net, 16);
+        let hd = hyperdrive_fig11_bits(&net, &plan, 16);
+        let ratio = ws as f64 / hd as f64;
+        assert!(ratio > 2.7, "reduction {ratio} (paper: up to 2.7×)");
+    }
+
+    #[test]
+    fn fig11_reduction_persists_at_3x3() {
+        let net = zoo::resnet34(672, 672);
+        let cfg = ChipConfig::default();
+        let plan = plan_mesh_exact(&net, &cfg, 3, 3);
+        let ws = weight_stationary_io_bits(&net, 16);
+        let hd = hyperdrive_fig11_bits(&net, &plan, 16);
+        let ratio = ws as f64 / hd as f64;
+        assert!(ratio > 2.5, "reduction {ratio} (paper: 2.5×)");
+    }
+
+    #[test]
+    fn weight_io_constant_until_single_chip_limit() {
+        // Fig 11's red plateau: weights don't grow with resolution.
+        let a = zoo::resnet34(112, 112).weight_bits();
+        let b = zoo::resnet34(224, 224).weight_bits();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn border_exchange_grows_with_mesh_but_stays_secondary() {
+        let net = zoo::resnet34(1024, 2048);
+        let cfg = ChipConfig::default();
+        let p55 = plan_mesh_exact(&net, &cfg, 5, 10);
+        let ws = weight_stationary_io_bits(&net, 16);
+        let hd = hyperdrive_fig11_bits(&net, &p55, 16);
+        assert!(ws as f64 / hd as f64 > 5.0, "{} / {}", ws, hd);
+    }
+}

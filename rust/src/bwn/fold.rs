@@ -1,0 +1,136 @@
+//! Batch-norm / BWN-scale folding (§IV: "Batch normalization … can be
+//! merged with biasing and scaling, as the coefficients stay constant
+//! after training").
+//!
+//! A trained BWN conv layer carries: the binarized weights, the BWN
+//! per-channel scale α = E|w| (BinaryConnect-style), and a batch-norm
+//! (μ, σ², γ_bn, β_bn) plus an optional bias b. At inference all of it
+//! folds into the chip's two per-channel coefficients:
+//!
+//!   γ = α · γ_bn / √(σ² + ε)
+//!   β = β_bn + (b − μ) · γ_bn / √(σ² + ε)
+//!
+//! so the datapath computes `γ·(Σ ±x) + bypass + β` — exactly the fused
+//! post sequence of Algorithm 1.
+
+/// Raw per-channel training-time parameters of one conv layer.
+#[derive(Debug, Clone)]
+pub struct RawChannelParams {
+    /// BWN scale α (mean absolute real-valued weight), > 0.
+    pub alpha: f64,
+    /// Convolution bias (0 if none).
+    pub bias: f64,
+    /// Batch-norm running mean / variance and affine parameters.
+    pub bn_mean: f64,
+    pub bn_var: f64,
+    pub bn_gamma: f64,
+    pub bn_beta: f64,
+}
+
+/// Folded coefficients the chip consumes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FoldedChannel {
+    pub gamma: f32,
+    pub beta: f32,
+}
+
+/// Fold one channel (ε guards σ² = 0).
+pub fn fold_channel(p: &RawChannelParams, eps: f64) -> FoldedChannel {
+    let inv_std = p.bn_gamma / (p.bn_var + eps).sqrt();
+    FoldedChannel {
+        gamma: (p.alpha * inv_std) as f32,
+        beta: (p.bn_beta + (p.bias - p.bn_mean) * inv_std) as f32,
+    }
+}
+
+/// Fold a whole layer.
+pub fn fold_layer(params: &[RawChannelParams], eps: f64) -> (Vec<f32>, Vec<f32>) {
+    let folded: Vec<FoldedChannel> = params.iter().map(|p| fold_channel(p, eps)).collect();
+    (
+        folded.iter().map(|f| f.gamma).collect(),
+        folded.iter().map(|f| f.beta).collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    /// Unfused reference: y = bn(conv_sum·α + b) with bn(z) =
+    /// γ_bn·(z − μ)/√(σ²+ε) + β_bn.
+    fn reference(p: &RawChannelParams, conv_sum: f64, eps: f64) -> f64 {
+        let z = conv_sum * p.alpha + p.bias;
+        p.bn_gamma * (z - p.bn_mean) / (p.bn_var + eps).sqrt() + p.bn_beta
+    }
+
+    #[test]
+    fn folded_equals_unfused_property() {
+        testkit::check("bn folding equivalence", 0xf01d, |rng| {
+            let p = RawChannelParams {
+                alpha: 0.01 + rng.next_f32() as f64,
+                bias: rng.next_sym() as f64,
+                bn_mean: rng.next_sym() as f64 * 3.0,
+                bn_var: 0.01 + 2.0 * rng.next_f32() as f64,
+                bn_gamma: 0.1 + rng.next_f32() as f64,
+                bn_beta: rng.next_sym() as f64,
+            };
+            let eps = 1e-5;
+            let f = fold_channel(&p, eps);
+            for _ in 0..8 {
+                let s = (rng.next_sym() * 50.0) as f64;
+                let want = reference(&p, s, eps);
+                let got = f.gamma as f64 * s + f.beta as f64;
+                if (want - got).abs() > 1e-4 * (1.0 + want.abs()) {
+                    return Err(format!("sum {s}: {got} vs {want}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn identity_bn_folds_to_alpha_and_bias() {
+        let p = RawChannelParams {
+            alpha: 0.25,
+            bias: 1.5,
+            bn_mean: 0.0,
+            bn_var: 1.0,
+            bn_gamma: 1.0,
+            bn_beta: 0.0,
+        };
+        let f = fold_channel(&p, 0.0);
+        assert!((f.gamma - 0.25).abs() < 1e-7);
+        assert!((f.beta - 1.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn fold_layer_is_elementwise() {
+        let p = RawChannelParams {
+            alpha: 0.5,
+            bias: 0.0,
+            bn_mean: 2.0,
+            bn_var: 4.0,
+            bn_gamma: 2.0,
+            bn_beta: 1.0,
+        };
+        let (g, b) = fold_layer(&vec![p.clone(); 3], 0.0);
+        assert_eq!(g.len(), 3);
+        assert!((g[0] - 0.5).abs() < 1e-7); // 0.5·2/2
+        assert!((b[0] - (1.0 - 2.0)).abs() < 1e-6); // 1 + (0−2)·2/2
+    }
+
+    #[test]
+    fn zero_variance_guarded_by_eps() {
+        let p = RawChannelParams {
+            alpha: 1.0,
+            bias: 0.0,
+            bn_mean: 0.0,
+            bn_var: 0.0,
+            bn_gamma: 1.0,
+            bn_beta: 0.0,
+        };
+        let f = fold_channel(&p, 1e-5);
+        assert!(f.gamma.is_finite());
+    }
+}

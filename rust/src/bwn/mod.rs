@@ -1,0 +1,15 @@
+//! Binary-weight handling: binarization, bit-packing, the weight *stream*
+//! (the paper's key I/O object) and the latch-based weight-buffer model.
+//!
+//! The stream order follows Algorithm 1 / Tbl I exactly: for each output
+//! channel tile of `C` FMs, for each filter tap Δ (row-major
+//! `(−⌊k/2⌋..⌊k/2⌋)²`), for each input channel `c_in`, one `C`-bit word
+//! whose bit `c` is the sign of `w[tile·C + c][c_in][Δ]` (1 = +1).
+
+pub mod fold;
+pub mod stream;
+pub mod wbuf;
+
+pub use fold::{fold_channel, fold_layer, RawChannelParams};
+pub use stream::{binarize, pack_weights, unpack_word, WeightStream};
+pub use wbuf::WeightBuffer;

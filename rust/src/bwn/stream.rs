@@ -1,0 +1,221 @@
+//! The binary-weight stream: the only large input the chip reads per
+//! layer (feature maps stay stationary). 16× smaller than streaming FP16
+//! weights — the source of the paper's I/O-energy reduction.
+
+use crate::network::ConvLayer;
+
+/// Binarize a real-valued weight: `sign(w)` with `sign(0) := +1`.
+#[inline]
+pub fn binarize(w: f32) -> bool {
+    w >= 0.0
+}
+
+/// One layer's weight stream: `C`-bit words in Algorithm-1 order, padded
+/// with +1 weights when `n_out` is not a multiple of `C` (the idle
+/// Tile-PU channels).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WeightStream {
+    /// Output-channel parallelism the stream was packed for.
+    pub c: usize,
+    /// Stream words, one per (c_out-tile, Δ, c_in) step; bit `b` of a
+    /// word is the weight for output channel `tile·C + b`.
+    pub words: Vec<u16>,
+    /// Layout for unpacking: (n_out tiles, taps, n_in per group view).
+    pub n_out: usize,
+    pub n_in_eff: usize,
+    pub k: usize,
+}
+
+/// Pack a layer's real-valued weights `w[n_out][n_in/groups][k][k]`
+/// (flattened, row-major) into the stream order of Tbl I.
+///
+/// `c` is the chip's output-channel parallelism (16 on the taped-out
+/// chip; `c <= 16` supported since words are `u16`).
+pub fn pack_weights(layer: &ConvLayer, weights: &[f32], c: usize) -> WeightStream {
+    assert!(c <= 16, "stream words are u16");
+    let n_in_eff = layer.n_in / layer.groups;
+    let taps = layer.k * layer.k;
+    assert_eq!(
+        weights.len(),
+        layer.n_out * n_in_eff * taps,
+        "weight blob size mismatch for `{}`",
+        layer.name
+    );
+    let n_tiles = layer.n_out.div_ceil(c);
+    let mut words = Vec::with_capacity(n_tiles * taps * n_in_eff);
+    for tile in 0..n_tiles {
+        for tap in 0..taps {
+            for ci in 0..n_in_eff {
+                let mut word = 0u16;
+                for b in 0..c {
+                    let co = tile * c + b;
+                    // Padded (idle) channels stream +1.
+                    let bit = if co < layer.n_out {
+                        binarize(weights[(co * n_in_eff + ci) * taps + tap])
+                    } else {
+                        true
+                    };
+                    if bit {
+                        word |= 1 << b;
+                    }
+                }
+                words.push(word);
+            }
+        }
+    }
+    WeightStream {
+        c,
+        words,
+        n_out: layer.n_out,
+        n_in_eff,
+        k: layer.k,
+    }
+}
+
+impl WeightStream {
+    /// Total bits on the wire for this layer (words × C).
+    pub fn wire_bits(&self) -> u64 {
+        (self.words.len() * self.c) as u64
+    }
+
+    /// Stream word index for (c_out tile, tap, c_in).
+    pub fn word_index(&self, tile: usize, tap: usize, ci: usize) -> usize {
+        (tile * self.k * self.k + tap) * self.n_in_eff + ci
+    }
+
+    /// Signed weight (±1.0) for output channel `co`, input `ci`, tap Δ.
+    pub fn weight(&self, co: usize, ci: usize, tap: usize) -> f32 {
+        let tile = co / self.c;
+        let bit = co % self.c;
+        let w = self.words[self.word_index(tile, tap, ci)];
+        if w & (1 << bit) != 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Unpack the whole stream back to a ±1.0 dense tensor
+    /// `[n_out][n_in_eff][k][k]` (row-major) — used to build the PJRT
+    /// weight literal on the inference path.
+    pub fn unpack_dense(&self) -> Vec<f32> {
+        let taps = self.k * self.k;
+        let mut out = vec![0.0f32; self.n_out * self.n_in_eff * taps];
+        for co in 0..self.n_out {
+            for ci in 0..self.n_in_eff {
+                for tap in 0..taps {
+                    out[(co * self.n_in_eff + ci) * taps + tap] = self.weight(co, ci, tap);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Unpack one stream word into `c` signs (+1.0 / −1.0).
+pub fn unpack_word(word: u16, c: usize) -> Vec<f32> {
+    (0..c)
+        .map(|b| if word & (1 << b) != 0 { 1.0 } else { -1.0 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::ConvLayer;
+    use crate::testkit;
+    use crate::util::SplitMix64;
+
+    fn layer(n_in: usize, n_out: usize, k: usize) -> ConvLayer {
+        ConvLayer::new("t", n_in, n_out, 8, 8, k, 1)
+    }
+
+    #[test]
+    fn stream_length_matches_schedule() {
+        // Tbl I: 16→64 3×3 conv on C=16 → 4 tiles × 9 taps × 16 c_in words.
+        let l = layer(16, 64, 3);
+        let w = vec![1.0f32; 64 * 16 * 9];
+        let s = pack_weights(&l, &w, 16);
+        assert_eq!(s.words.len(), 4 * 9 * 16);
+        assert_eq!(s.wire_bits(), 4 * 9 * 16 * 16);
+    }
+
+    #[test]
+    fn wire_bits_equal_layer_weight_bits_when_c_divides() {
+        let l = layer(16, 64, 3);
+        let w = vec![-1.0f32; 64 * 16 * 9];
+        assert_eq!(pack_weights(&l, &w, 16).wire_bits(), l.weight_bits());
+    }
+
+    #[test]
+    fn padded_tail_channels_stream_plus_one() {
+        let l = layer(4, 20, 1); // 20 outputs → 2 tiles of 16, 12 padded
+        let w = vec![-1.0f32; 20 * 4];
+        let s = pack_weights(&l, &w, 16);
+        // Word for tile 1, tap 0, ci 0: bits 0..3 are real (−1 → 0),
+        // bits 4..15 padding (+1 → 1).
+        let word = s.words[s.word_index(1, 0, 0)];
+        assert_eq!(word & 0x000f, 0);
+        assert_eq!(word & 0xfff0, 0xfff0);
+    }
+
+    #[test]
+    fn pack_unpack_round_trip_property() {
+        testkit::check("pack/unpack round trip", 0x5eed, |rng| {
+            let k = if rng.next_u64() & 1 == 0 { 1 } else { 3 };
+            let n_in = 1 + rng.next_below(24);
+            let n_out = 1 + rng.next_below(40);
+            let l = layer(n_in, n_out, k);
+            let w: Vec<f32> = (0..n_out * n_in * k * k)
+                .map(|_| {
+                    let v = rng.next_sym();
+                    if v == 0.0 {
+                        0.5
+                    } else {
+                        v
+                    }
+                })
+                .collect();
+            let s = pack_weights(&l, &w, 16);
+            let dense = s.unpack_dense();
+            for (i, (&orig, &got)) in w.iter().zip(&dense).enumerate() {
+                let want = if binarize(orig) { 1.0 } else { -1.0 };
+                if got != want {
+                    return Err(format!("index {i}: {orig} → {got}, want {want}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sign_zero_is_plus_one() {
+        assert!(binarize(0.0));
+        assert!(binarize(1e-30));
+        assert!(!binarize(-1e-30));
+    }
+
+    #[test]
+    fn grouped_layer_streams_reduced_fan_in() {
+        let l = layer(16, 32, 3).with_groups(4); // n_in_eff = 4
+        let w: Vec<f32> = (0..32 * 4 * 9).map(|i| i as f32 - 300.0).collect();
+        let s = pack_weights(&l, &w, 16);
+        assert_eq!(s.n_in_eff, 4);
+        assert_eq!(s.words.len(), 2 * 9 * 4);
+        assert_eq!(s.wire_bits(), l.weight_bits());
+    }
+
+    #[test]
+    fn unpack_word_bit_order() {
+        let signs = unpack_word(0b0000_0000_0000_0101, 4);
+        assert_eq!(signs, vec![1.0, -1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn deterministic_for_same_input() {
+        let mut rng = SplitMix64::new(11);
+        let l = layer(8, 16, 3);
+        let w: Vec<f32> = (0..16 * 8 * 9).map(|_| rng.next_sym()).collect();
+        assert_eq!(pack_weights(&l, &w, 16), pack_weights(&l, &w, 16));
+    }
+}

@@ -1,0 +1,136 @@
+//! Weight-buffer model (§III / §VI): a latch-based standard-cell memory
+//! holding the binary weights of the *current* C output channels for all
+//! input channels — so each weight crosses the chip boundary exactly once
+//! per layer and is re-read from the (43× cheaper) SCM for every pixel.
+//!
+//! Capacity of the taped-out chip: 512 kernels × 3·3 taps × C = 73 728
+//! bits (5×8 SCM blocks of 128×16 bit). Layers with more than 512 input
+//! channels are tiled into 512-channel blocks with on-the-fly partial-sum
+//! accumulation via the bypass path (§VI).
+
+use crate::network::ConvLayer;
+
+use super::stream::WeightStream;
+
+/// Access statistics of one layer pass through the weight buffer.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WBufStats {
+    /// Words fetched from the off-chip stream (compulsory misses).
+    pub stream_words: u64,
+    /// Words served from the buffer (re-use across pixels).
+    pub buffer_reads: u64,
+    /// Number of input-channel tiles the layer needed (> 1 when the
+    /// layer's weights exceed the buffer).
+    pub cin_tiles: u64,
+}
+
+/// The weight buffer of one chip.
+#[derive(Debug, Clone)]
+pub struct WeightBuffer {
+    /// Capacity in binary weights.
+    pub capacity_bits: usize,
+    /// Output-channel parallelism (bits per stream word).
+    pub c: usize,
+}
+
+impl WeightBuffer {
+    pub fn new(capacity_bits: usize, c: usize) -> Self {
+        WeightBuffer { capacity_bits, c }
+    }
+
+    /// Maximum input channels whose `k×k` kernels (for C outputs) fit.
+    pub fn max_cin(&self, k: usize) -> usize {
+        self.capacity_bits / (k * k * self.c)
+    }
+
+    /// Whether a layer's per-tile working set fits without c_in tiling.
+    pub fn fits(&self, layer: &ConvLayer) -> bool {
+        (layer.n_in / layer.groups) <= self.max_cin(layer.k)
+    }
+
+    /// Number of input-channel tiles needed for a layer.
+    pub fn cin_tiles(&self, layer: &ConvLayer) -> usize {
+        (layer.n_in / layer.groups).div_ceil(self.max_cin(layer.k))
+    }
+
+    /// Simulate one layer: every stream word is written once into the
+    /// buffer (per c_in tile) and re-read once per pixel of the tile
+    /// thereafter (Algorithm 1 lines 10–14).
+    pub fn run_layer(&self, layer: &ConvLayer, stream: &WeightStream, tile_pixels: u64) -> WBufStats {
+        assert_eq!(stream.c, self.c);
+        let cin_tiles = self.cin_tiles(layer) as u64;
+        let stream_words = stream.words.len() as u64;
+        // Each word is used `tile_pixels` times per layer; the first use
+        // comes from the stream, the rest from the buffer.
+        let total_uses = stream_words * tile_pixels.max(1);
+        WBufStats {
+            stream_words,
+            buffer_reads: total_uses - stream_words,
+            cin_tiles,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bwn::stream::pack_weights;
+    use crate::network::ConvLayer;
+    use crate::ChipConfig;
+
+    fn wbuf() -> WeightBuffer {
+        let cfg = ChipConfig::default();
+        WeightBuffer::new(cfg.wbuf_bits, cfg.c)
+    }
+
+    #[test]
+    fn taped_out_capacity_holds_512_kernels() {
+        let b = wbuf();
+        assert_eq!(b.max_cin(3), 512);
+        assert_eq!(b.max_cin(1), 4608);
+    }
+
+    #[test]
+    fn resnet_layers_fit_without_tiling() {
+        let b = wbuf();
+        let l = ConvLayer::new("c", 512, 512, 7, 7, 3, 1);
+        assert!(b.fits(&l));
+        assert_eq!(b.cin_tiles(&l), 1);
+    }
+
+    #[test]
+    fn deep_1024_channel_layer_tiles_twice_for_3x3() {
+        let b = wbuf();
+        let l = ConvLayer::new("deep", 1024, 1024, 10, 10, 3, 1);
+        assert!(!b.fits(&l));
+        assert_eq!(b.cin_tiles(&l), 2);
+    }
+
+    #[test]
+    fn stream_loaded_once_rest_from_buffer() {
+        let b = wbuf();
+        let l = ConvLayer::new("c", 16, 64, 56, 56, 3, 1);
+        let w = vec![1.0f32; 64 * 16 * 9];
+        let s = pack_weights(&l, &w, 16);
+        let stats = b.run_layer(&l, &s, 64); // 8×8 pixels per tile
+        assert_eq!(stats.stream_words, 4 * 9 * 16);
+        assert_eq!(stats.buffer_reads, (4 * 9 * 16) * 63);
+        assert_eq!(stats.cin_tiles, 1);
+        // Total SCM traffic must equal uses exactly.
+        assert_eq!(
+            stats.stream_words + stats.buffer_reads,
+            (4 * 9 * 16) * 64
+        );
+    }
+
+    #[test]
+    fn grouped_conv_reduces_buffer_pressure() {
+        let b = wbuf();
+        let dense = ConvLayer::new("d", 1536, 1536, 7, 7, 1, 1);
+        let grouped = dense.clone().with_groups(8);
+        assert_eq!(b.cin_tiles(&dense), 1); // 1×1 → 4608 cin fit
+        assert_eq!(b.cin_tiles(&grouped), 1);
+        let dw = ConvLayer::new("dw", 1536, 1536, 7, 7, 3, 1).with_groups(1536);
+        assert!(b.fits(&dw));
+    }
+}

@@ -1,0 +1,286 @@
+//! Border & Corner memory sizing and the exchange protocol bookkeeping
+//! (§V-B/C, the blue blocks of Fig 1).
+//!
+//! Pixels owned by a neighbouring chip but needed for this chip's halo
+//! are *sent once* after computation and stored locally in the Border
+//! Memory (BM, two physically separate blocks so a vertical and a
+//! horizontal read can happen in one cycle) or Corner Memory (CM, for
+//! the diagonal neighbours' ⌊k/2⌋² patches, forwarded via the vertical
+//! neighbour — no diagonal wires).
+
+use crate::network::Network;
+use crate::util::ceil_div;
+
+use super::wcl::MemoryAnalysis;
+
+/// Border-memory requirement in bits (§V-C formula): the WCL scaled by
+/// the perimeter-to-area ratio of the per-chip tile at the WCL step.
+///
+/// For single-chip ResNet-34 at 224² (tile = 56×56) this is the paper's
+/// 459 kbit (a 7% overhead on the 6.4 Mbit FMM).
+pub fn border_memory_bits(
+    net: &Network,
+    analysis: &MemoryAnalysis,
+    mesh_rows: usize,
+    mesh_cols: usize,
+    fm_bits: usize,
+) -> u64 {
+    let step = &net.steps[analysis.wcl_step];
+    let (th, tw) = (
+        ceil_div(step.layer.h, mesh_rows),
+        ceil_div(step.layer.w, mesh_cols),
+    );
+    let m_bits = analysis.wcl_words * fm_bits as u64;
+    // M · (2h + 2w)/(h·w), evaluated on the per-chip tile.
+    m_bits * (2 * (th + tw)) as u64 / (th * tw) as u64
+}
+
+/// Corner-memory requirement in bits (§V-C): the deepest layer dominates
+/// (`(n_in + n_out) · 4 corners · ⌊k/2⌋²` pixels) — striding does not
+/// shrink it.
+pub fn corner_memory_bits(net: &Network, fm_bits: usize) -> u64 {
+    net.steps
+        .iter()
+        .map(|s| {
+            let l = &s.layer;
+            let halo = (l.k / 2) as u64;
+            ((l.n_in + l.n_out) as u64) * 4 * halo * halo * fm_bits as u64
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+/// Physical BM implementation check: the taped-out chip uses 4
+/// high-density single-port SRAMs of 1024 × (M·16 = 112) bit.
+pub fn border_memory_srams(bm_bits: u64, m: usize, fm_bits: usize) -> u64 {
+    let word = (m * fm_bits) as u64;
+    ceil_div(ceil_div(bm_bits as usize, word as usize), 1024) as u64
+}
+
+/// Exchange-protocol state per chip border (§V-B): a border row/column
+/// sent sets `awaiting_opposite` until the symmetric pixel arrives; a
+/// corner additionally sets forwarding flags on the vertical neighbour.
+#[derive(Debug, Clone, Default)]
+pub struct ExchangeFlags {
+    /// Border pixels sent, waiting for the opposite neighbour's pixel.
+    pub awaiting: u64,
+    /// Satisfied waits (pixel pairs completed).
+    pub completed: u64,
+    /// Corner forwards performed on behalf of a diagonal neighbour.
+    pub forwards: u64,
+}
+
+impl ExchangeFlags {
+    /// Record sending a border pixel (sets the wait flag).
+    pub fn sent(&mut self) {
+        self.awaiting += 1;
+    }
+
+    /// Record receiving the symmetric pixel (clears one wait flag).
+    pub fn received(&mut self) {
+        assert!(self.awaiting > 0, "received without matching send");
+        self.awaiting -= 1;
+        self.completed += 1;
+    }
+
+    /// Record forwarding a corner pixel for a diagonal neighbour.
+    pub fn forwarded(&mut self) {
+        self.forwards += 1;
+    }
+
+    /// Protocol invariant at layer end: no outstanding waits.
+    pub fn is_quiescent(&self) -> bool {
+        self.awaiting == 0
+    }
+}
+
+/// Serial border-interface cost model (§V-D): pixels cross chip-to-chip
+/// links in 4-bit flits + 1 valid bit.
+pub fn link_flits(pixels: u64, fm_bits: usize) -> u64 {
+    pixels * ceil_div(fm_bits, 4) as u64
+}
+
+/// Border-interface buffer of the taped-out chip: `M·C = 7·16 = 112`
+/// pixel entries per side (§V-D).
+pub const BI_BUFFER_ENTRIES: usize = 112;
+
+/// Per-layer exchange-vs-compute slack on a mesh (§V: "even with the
+/// overhead of exchanging the border pixels").
+///
+/// A chip's border interface serializes its outgoing border pixels at
+/// one 4-bit flit per cycle per link; the transfer of layer *l*'s halo
+/// overlaps the remaining computation of layer *l* and the start of
+/// layer *l+1* on interior pixels. Exchange is "hidden" when the flit
+/// time of the busiest link is below the next layer's compute cycles.
+#[derive(Debug, Clone)]
+pub struct ExchangeSlack {
+    pub layer: String,
+    /// Flit cycles on the busiest outgoing link of any chip.
+    pub exchange_cycles: u64,
+    /// Compute cycles of the consuming layer (per chip).
+    pub next_compute_cycles: u64,
+}
+
+impl ExchangeSlack {
+    /// Exchange fully hidden under the next layer's compute?
+    pub fn hidden(&self) -> bool {
+        self.exchange_cycles <= self.next_compute_cycles
+    }
+}
+
+/// Compute the exchange slack per producing layer for a mesh run.
+pub fn exchange_slack(
+    net: &Network,
+    cfg: &crate::ChipConfig,
+    rows: usize,
+    cols: usize,
+) -> Vec<ExchangeSlack> {
+    use crate::coordinator::schedule::{layer_cycles_mesh, DepthwisePolicy};
+    use crate::network::TensorRef;
+    let tid = |r: TensorRef| match r {
+        TensorRef::Input => 0usize,
+        TensorRef::Step(i) => 1 + i,
+    };
+    // halo + first consumer index per tensor.
+    let n = net.steps.len();
+    let mut halo = vec![0usize; n + 1];
+    let mut consumer = vec![None::<usize>; n + 1];
+    for (i, s) in net.steps.iter().enumerate() {
+        let h = s.layer.k / 2;
+        for r in std::iter::once(s.src).chain(s.bypass).chain(s.concat_extra) {
+            let t = tid(r);
+            halo[t] = halo[t].max(h);
+            if consumer[t].is_none() {
+                consumer[t] = Some(i);
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for (i, s) in net.steps.iter().enumerate() {
+        let hw = halo[1 + i] as u64;
+        let Some(ci) = consumer[1 + i] else { continue };
+        if hw == 0 {
+            continue;
+        }
+        let l = &s.layer;
+        // Busiest link: a full tile edge row/column × n_out channels.
+        let tile_h = ceil_div(l.h_out(), rows) as u64;
+        let tile_w = ceil_div(l.w_out(), cols) as u64;
+        let edge_pixels = hw * tile_h.max(tile_w) * l.n_out as u64;
+        let exchange_cycles = link_flits(edge_pixels, 16);
+        let next = layer_cycles_mesh(
+            &net.steps[ci].layer,
+            cfg,
+            DepthwisePolicy::FullRate,
+            rows,
+            cols,
+        )
+        .total();
+        out.push(ExchangeSlack {
+            layer: l.name.clone(),
+            exchange_cycles,
+            next_compute_cycles: next,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::wcl;
+    use crate::network::zoo;
+
+    #[test]
+    fn resnet34_border_memory_is_459_kbit() {
+        let net = zoo::resnet34(224, 224);
+        let a = wcl::analyze(&net);
+        let bm = border_memory_bits(&net, &a, 1, 1, 16);
+        // §V-C: M · (2·56+2·56)/(56·56) = 459 kbit (+7% of 6.4 Mbit).
+        assert_eq!(bm, 6_422_528 * 224 / 3136);
+        assert!((bm as f64 / 459e3 - 1.0).abs() < 0.01, "bm {bm}");
+        let overhead = bm as f64 / a.wcl_bits(16) as f64;
+        assert!((overhead - 0.07).abs() < 0.005, "overhead {overhead}");
+    }
+
+    #[test]
+    fn resnet34_corner_memory_is_64_kbit() {
+        // §V-C: (512+512) · 4 · 1 · 1 · 16 bit = 64 kbit.
+        let net = zoo::resnet34(224, 224);
+        assert_eq!(corner_memory_bits(&net, 16), 65_536);
+    }
+
+    #[test]
+    fn bm_fits_four_srams_like_silicon() {
+        let net = zoo::resnet34(224, 224);
+        let a = wcl::analyze(&net);
+        let bm = border_memory_bits(&net, &a, 1, 1, 16);
+        assert_eq!(border_memory_srams(bm, 7, 16), 4);
+    }
+
+    #[test]
+    fn corner_memory_ignores_1x1_layers() {
+        let net = zoo::resnet50(224, 224);
+        // Bottleneck nets still size CM from their 3×3 layers (mid
+        // channels), not the wide 1×1s.
+        let cm = corner_memory_bits(&net, 16);
+        assert_eq!(cm, (512 + 512) * 4 * 16);
+    }
+
+    #[test]
+    fn exchange_flags_protocol() {
+        let mut f = ExchangeFlags::default();
+        f.sent();
+        f.sent();
+        assert!(!f.is_quiescent());
+        f.received();
+        f.received();
+        assert!(f.is_quiescent());
+        assert_eq!(f.completed, 2);
+        f.forwarded();
+        assert_eq!(f.forwards, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "received without matching send")]
+    fn unmatched_receive_panics() {
+        ExchangeFlags::default().received();
+    }
+
+    #[test]
+    fn link_serialization_is_4bit_flits() {
+        assert_eq!(link_flits(1, 16), 4);
+        assert_eq!(link_flits(112, 16), 448); // one BM buffer line
+    }
+
+    #[test]
+    fn exchange_hides_under_compute_on_paper_mesh() {
+        // §V: the border exchange must not become the bottleneck on the
+        // paper's 10×5 ResNet-34 @2k×1k configuration.
+        let net = zoo::resnet34(1024, 2048);
+        let slacks = exchange_slack(&net, &crate::ChipConfig::default(), 5, 10);
+        assert!(!slacks.is_empty());
+        let hidden = slacks.iter().filter(|s| s.hidden()).count();
+        assert_eq!(
+            hidden,
+            slacks.len(),
+            "unhidden exchanges: {:?}",
+            slacks
+                .iter()
+                .filter(|s| !s.hidden())
+                .map(|s| (&s.layer, s.exchange_cycles, s.next_compute_cycles))
+                .collect::<Vec<_>>()
+        );
+        // And with healthy margin on the big 3×3 layers.
+        let worst = slacks
+            .iter()
+            .map(|s| s.exchange_cycles as f64 / s.next_compute_cycles as f64)
+            .fold(0.0, f64::max);
+        assert!(worst < 0.5, "worst exchange/compute ratio {worst}");
+    }
+
+    #[test]
+    fn bi_buffer_matches_taped_out_dimensions() {
+        assert_eq!(BI_BUFFER_ENTRIES, 7 * 16);
+    }
+}

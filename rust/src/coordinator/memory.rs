@@ -1,0 +1,347 @@
+//! Concrete FMM segment allocation for the inference path — the
+//! generalized M1/M2/M3/M4 ping-pong plan of §IV-B.
+//!
+//! Walks the network in step order, placing every tensor in free regions
+//! of the (word-addressed) FMM, freeing tensors after their last
+//! consumer, and aliasing a bypass step's output onto the bypass tensor's
+//! storage (the in-place read-add-write of §IV-B). A tensor may occupy
+//! multiple non-contiguous extents: the FMM is multi-banked and the paper
+//! itself splits segments ("M2 is split into two equal-size segments M2.1
+//! and M2.2"), so contiguity is not a hardware requirement. The plan's
+//! peak must equal the WCL analysis exactly (tested), proving the §IV-B
+//! scheme is realizable with zero memory overhead.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::network::{Network, TensorRef};
+
+use super::wcl;
+
+/// One contiguous extent of a placed tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Extent {
+    /// Word offset in the FMM.
+    pub offset: u64,
+    /// Size in words.
+    pub words: u64,
+}
+
+/// A placed FM tensor: one or more extents (paper's M2.1/M2.2 splitting).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Placement {
+    pub extents: Vec<Extent>,
+}
+
+impl Placement {
+    pub fn words(&self) -> u64 {
+        self.extents.iter().map(|e| e.words).sum()
+    }
+
+    /// First extent's offset (canonical identity for aliasing checks).
+    pub fn base(&self) -> u64 {
+        self.extents.first().map_or(u64::MAX, |e| e.offset)
+    }
+}
+
+/// The memory plan for one network on one chip (or one chip's tile).
+#[derive(Debug, Clone)]
+pub struct MemoryPlan {
+    /// Placement of the network input.
+    pub input: Placement,
+    /// Placement per step output (bypass-aliased steps share placements).
+    pub outputs: Vec<Placement>,
+    /// Peak allocated words over the whole run.
+    pub peak_words: u64,
+    /// FMM capacity the plan was made for.
+    pub capacity_words: u64,
+}
+
+/// First-fit arena over free word-ranges, allowing split allocations.
+struct Arena {
+    capacity: u64,
+    /// offset → length of free ranges.
+    free: BTreeMap<u64, u64>,
+    allocated: u64,
+    peak: u64,
+}
+
+impl Arena {
+    fn new(capacity: u64) -> Self {
+        let mut free = BTreeMap::new();
+        if capacity > 0 {
+            free.insert(0, capacity);
+        }
+        Arena {
+            capacity,
+            free,
+            allocated: 0,
+            peak: 0,
+        }
+    }
+
+    /// Allocate `words`, possibly split across several free ranges
+    /// (lowest offsets first).
+    fn alloc(&mut self, words: u64) -> Result<Placement> {
+        if self.capacity - self.allocated < words {
+            bail!(
+                "FMM allocation of {words} words failed ({} free of {})",
+                self.capacity - self.allocated,
+                self.capacity
+            );
+        }
+        let mut remaining = words;
+        let mut extents = Vec::new();
+        while remaining > 0 {
+            let (&off, &len) = self.free.iter().next().expect("free space accounted");
+            let take = len.min(remaining);
+            self.free.remove(&off);
+            if len > take {
+                self.free.insert(off + take, len - take);
+            }
+            extents.push(Extent {
+                offset: off,
+                words: take,
+            });
+            remaining -= take;
+        }
+        self.allocated += words;
+        self.peak = self.peak.max(self.allocated);
+        Ok(Placement { extents })
+    }
+
+    fn release(&mut self, p: &Placement) {
+        for e in &p.extents {
+            if e.words == 0 {
+                continue;
+            }
+            self.allocated -= e.words;
+            let mut off = e.offset;
+            let mut len = e.words;
+            if let Some((&prev_off, &prev_len)) = self.free.range(..off).next_back() {
+                if prev_off + prev_len == off {
+                    self.free.remove(&prev_off);
+                    off = prev_off;
+                    len += prev_len;
+                }
+            }
+            if let Some(&next_len) = self.free.get(&(off + len)) {
+                self.free.remove(&(off + len));
+                len += next_len;
+            }
+            self.free.insert(off, len);
+        }
+    }
+}
+
+/// Plan FMM placements for a network. `capacity_words` is the FMM size
+/// (per chip; pass the per-chip tile network view for meshes).
+pub fn plan(net: &Network, capacity_words: u64) -> Result<MemoryPlan> {
+    let n = net.steps.len();
+    let tid = |r: TensorRef| match r {
+        TensorRef::Input => 0usize,
+        TensorRef::Step(i) => 1 + i,
+    };
+    // Death step per tensor (final outputs are never freed).
+    let mut death = vec![-1isize; n + 1];
+    death[0] = 0;
+    for (i, s) in net.steps.iter().enumerate() {
+        for r in std::iter::once(s.src).chain(s.bypass).chain(s.concat_extra) {
+            death[tid(r)] = death[tid(r)].max(i as isize);
+        }
+    }
+    // Aliased storage roots (bypass in-place accumulation).
+    let mut storage_of = (0..=n).collect::<Vec<usize>>();
+    for (i, s) in net.steps.iter().enumerate() {
+        if let Some(b) = s.bypass {
+            storage_of[1 + i] = storage_of[tid(b)];
+        }
+    }
+    // Effective death of a root = max over its alias chain; the network's
+    // final tensor is pinned (death = n).
+    let mut root_death = death.clone();
+    for t in 0..=n {
+        let r = storage_of[t];
+        if r != t {
+            root_death[r] = root_death[r].max(death[t]);
+        }
+    }
+    root_death[storage_of[n]] = root_death[storage_of[n]].max(n as isize);
+
+    let mut arena = Arena::new(capacity_words);
+    let mut placements: Vec<Option<Placement>> = vec![None; n + 1];
+    let input_words = (net.in_ch * net.in_h * net.in_w) as u64;
+    placements[0] = Some(arena.alloc(input_words)?);
+
+    for (i, s) in net.steps.iter().enumerate() {
+        let t = 1 + i;
+        let root = storage_of[t];
+        if root != t {
+            // In-place accumulation into the bypass tensor's placement.
+            let p = placements[root].clone().expect("bypass placement live");
+            assert_eq!(
+                p.words(),
+                s.layer.out_words(),
+                "aliased placement size mismatch at `{}`",
+                s.layer.name
+            );
+            placements[t] = Some(p);
+        } else {
+            placements[t] = Some(arena.alloc(s.layer.out_words())?);
+        }
+        // Free every root storage whose last use is this step.
+        for t2 in 0..=n {
+            if storage_of[t2] == t2 && root_death[t2] == i as isize {
+                if let Some(p) = &placements[t2] {
+                    arena.release(p);
+                }
+            }
+        }
+    }
+
+    Ok(MemoryPlan {
+        input: placements[0].clone().unwrap(),
+        outputs: (0..n).map(|i| placements[1 + i].clone().unwrap()).collect(),
+        peak_words: arena.peak,
+        capacity_words,
+    })
+}
+
+/// Plan against the exact WCL capacity — must succeed with zero slack for
+/// every zoo network (the §IV-B realizability claim).
+pub fn plan_tight(net: &Network) -> Result<MemoryPlan> {
+    let a = wcl::analyze(net);
+    plan(net, a.wcl_words)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::zoo;
+    use crate::network::{ConvLayer, Network};
+
+    #[test]
+    fn resnet34_plans_tight_at_wcl() {
+        // The allocator realizes the paper's 401 kword plan exactly.
+        let net = zoo::resnet34(224, 224);
+        let p = plan_tight(&net).unwrap();
+        assert_eq!(p.peak_words, 401_408);
+    }
+
+    #[test]
+    fn resnet50_and_152_plan_tight_at_wcl() {
+        for net in [zoo::resnet50(224, 224), zoo::resnet152(224, 224)] {
+            let p = plan_tight(&net).unwrap();
+            assert_eq!(p.peak_words, wcl::analyze(&net).wcl_words, "{}", net.name);
+        }
+    }
+
+    #[test]
+    fn hypernet20_plan_is_tight_and_aliased() {
+        let net = zoo::hypernet20();
+        let p = plan_tight(&net).unwrap();
+        assert_eq!(p.peak_words, 2 * 16 * 32 * 32);
+        // Bypass steps share their shortcut's placement (here: the input).
+        let c2 = net.step_by_name("s1b0c2").unwrap();
+        assert_eq!(p.outputs[c2], p.input);
+    }
+
+    #[test]
+    fn over_capacity_fails_cleanly() {
+        let net = zoo::resnet34(224, 224);
+        let err = plan(&net, 100_000).unwrap_err().to_string();
+        assert!(err.contains("FMM allocation"), "{err}");
+    }
+
+    #[test]
+    fn live_placements_never_overlap() {
+        // At every step, gather placements of all live root tensors and
+        // assert extent-level disjointness.
+        let net = zoo::resnet50(224, 224);
+        let a = wcl::analyze(&net);
+        let p = plan(&net, a.wcl_words).unwrap();
+        let n = net.steps.len();
+        // Recompute deaths/roots the same way the planner does.
+        let tid = |r: crate::network::TensorRef| match r {
+            crate::network::TensorRef::Input => 0usize,
+            crate::network::TensorRef::Step(i) => 1 + i,
+        };
+        let mut death = vec![-1isize; n + 1];
+        death[0] = 0;
+        for (i, s) in net.steps.iter().enumerate() {
+            for r in std::iter::once(s.src).chain(s.bypass).chain(s.concat_extra) {
+                death[tid(r)] = death[tid(r)].max(i as isize);
+            }
+        }
+        let mut storage_of = (0..=n).collect::<Vec<usize>>();
+        for (i, s) in net.steps.iter().enumerate() {
+            if let Some(b) = s.bypass {
+                storage_of[1 + i] = storage_of[tid(b)];
+            }
+        }
+        let mut root_death = death.clone();
+        for t in 0..=n {
+            let r = storage_of[t];
+            if r != t {
+                root_death[r] = root_death[r].max(death[t]);
+            }
+        }
+        let place = |t: usize| -> &Placement {
+            if t == 0 {
+                &p.input
+            } else {
+                &p.outputs[t - 1]
+            }
+        };
+        for i in 0..n {
+            let mut live: Vec<&Placement> = Vec::new();
+            for t in 0..=n {
+                if storage_of[t] != t {
+                    continue;
+                }
+                let birth = t as isize - 1;
+                if birth <= i as isize && root_death[t] >= i as isize {
+                    live.push(place(t));
+                }
+            }
+            let mut spans: Vec<(u64, u64)> = live
+                .iter()
+                .flat_map(|pl| pl.extents.iter().map(|e| (e.offset, e.offset + e.words)))
+                .collect();
+            spans.sort_unstable();
+            for w in spans.windows(2) {
+                assert!(w[0].1 <= w[1].0, "overlap at step {i}: {:?}", w);
+            }
+        }
+    }
+
+    #[test]
+    fn ping_pong_chain_alternates_two_segments() {
+        let mut net = Network::new("chain", 16, 8, 8);
+        let mut prev = crate::network::TensorRef::Input;
+        for i in 0..4 {
+            prev = crate::network::TensorRef::Step(net.push(
+                ConvLayer::new(format!("c{i}"), 16, 16, 8, 8, 3, 1),
+                prev,
+                None,
+            ));
+        }
+        let p = plan_tight(&net).unwrap();
+        assert_eq!(p.peak_words, 2 * 16 * 64);
+        // Outputs alternate between exactly two placements.
+        assert_eq!(p.outputs[0].base(), p.outputs[2].base());
+        assert_eq!(p.outputs[1].base(), p.outputs[3].base());
+        assert_ne!(p.outputs[0].base(), p.outputs[1].base());
+    }
+
+    #[test]
+    fn split_allocation_when_fragmented() {
+        // Force fragmentation: a strided bottleneck-like pattern where
+        // the only way to fit is a split tensor (M2.1/M2.2 of §IV-B).
+        let net = zoo::resnet50(224, 224);
+        let p = plan_tight(&net).unwrap();
+        let any_split = p.outputs.iter().any(|pl| pl.extents.len() > 1);
+        assert!(any_split, "expected at least one split placement");
+    }
+}

@@ -1,0 +1,23 @@
+//! The Hyperdrive coordinator — the paper's system contribution at L3.
+//!
+//! * [`wcl`] — worst-case-layer memory analysis (§IV-B): liveness over the
+//!   network graph with the paper's in-place bypass-accumulation rule;
+//!   sizes the FMM and decides multi-chip requirements (Tbl II).
+//! * [`memory`] — the concrete ping-pong segment allocator used on the
+//!   inference path (M1/M2/M3/M4 of §IV-B generalized to first-fit over
+//!   graph liveness).
+//! * [`schedule`] — Algorithm 1 as an explicit cycle schedule: weight
+//!   stream order (Tbl I), weight-buffer traffic, per-layer cycle counts.
+//! * [`tiling`] — the m×n systolic mesh planner (§V): per-chip FM tiles,
+//!   chip types (NW/N/NE/…/Center), border-exchange traffic (Fig 11).
+//! * [`border`] — border/corner memory sizing (§V-C) and the exchange
+//!   protocol bookkeeping (§V-B).
+
+pub mod border;
+pub mod memory;
+pub mod schedule;
+pub mod tiling;
+pub mod wcl;
+
+pub use tiling::MeshPlan;
+pub use wcl::MemoryAnalysis;

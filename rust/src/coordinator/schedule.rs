@@ -1,0 +1,370 @@
+//! Algorithm 1 as an explicit schedule: cycle counts per layer phase
+//! (conv / bnorm / bias / bypass — Tbl III), utilization (Tbl VI), the
+//! weight-stream trace of Tbl I, and per-layer stream/buffer traffic.
+
+use crate::network::{ConvLayer, Network};
+use crate::util::ceil_div;
+use crate::ChipConfig;
+
+/// How depth-wise convolutions map onto the Tile-PU array.
+///
+/// The C Tile-PUs of a spatial tile share one FMM-bank read port; for a
+/// depth-wise layer every PU needs a *different* input channel, so the
+/// reads serialize ([`BankSerialized`], the faithful model — §IV-C's "no
+/// local re-use of the input feature map data possible"). The paper's
+/// ShuffleNet utilization figure (98.8%, Tbl VI) is only reachable if
+/// depth-wise taps run at full rate ([`FullRate`]); both are provided and
+/// the gap is reported in EXPERIMENTS.md.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DepthwisePolicy {
+    /// One input word feeds all C Tile-PUs every cycle (optimistic).
+    FullRate,
+    /// Depth-wise reads serialize on the FMM bank port (realistic).
+    #[default]
+    BankSerialized,
+}
+
+/// Cycle counts of one layer, split by phase (Tbl III rows).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LayerCycles {
+    pub conv: u64,
+    pub bnorm: u64,
+    pub bias: u64,
+    pub bypass: u64,
+}
+
+impl LayerCycles {
+    pub fn total(&self) -> u64 {
+        self.conv + self.bnorm + self.bias + self.bypass
+    }
+}
+
+/// Spatial pixels each Tile-PU processes for a layer's output FM
+/// (zero-padded up to the M×N grid — the idle-tile effect behind
+/// YOLOv3's 82.8% utilization).
+pub fn tile_pixels(layer: &ConvLayer, cfg: &ChipConfig) -> u64 {
+    tile_pixels_mesh(layer, cfg, 1, 1)
+}
+
+/// Per-Tile-PU pixels when the FM is additionally tiled over a
+/// `rows×cols` chip mesh (§V): the global grid is `(M·rows)×(N·cols)`.
+pub fn tile_pixels_mesh(layer: &ConvLayer, cfg: &ChipConfig, rows: usize, cols: usize) -> u64 {
+    (ceil_div(layer.h_out(), cfg.m * rows) * ceil_div(layer.w_out(), cfg.n * cols)) as u64
+}
+
+/// Cycle model of one layer on one chip (Algorithm 1 loop nest).
+pub fn layer_cycles(layer: &ConvLayer, cfg: &ChipConfig, dw: DepthwisePolicy) -> LayerCycles {
+    layer_cycles_mesh(layer, cfg, dw, 1, 1)
+}
+
+/// Cycle model of one layer on a chip mesh (all chips run in lockstep;
+/// the per-chip tile is what each chip's Tile-PUs iterate over).
+pub fn layer_cycles_mesh(
+    layer: &ConvLayer,
+    cfg: &ChipConfig,
+    dw: DepthwisePolicy,
+    rows: usize,
+    cols: usize,
+) -> LayerCycles {
+    let cout_tiles = ceil_div(layer.n_out, cfg.c) as u64;
+    let tp = tile_pixels_mesh(layer, cfg, rows, cols);
+    let taps = (layer.k * layer.k) as u64;
+    let n_in_eff = (layer.n_in / layer.groups) as u64;
+
+    let serial = if layer.is_depthwise() && dw == DepthwisePolicy::BankSerialized {
+        cfg.c as u64 // C PUs contend for the bank port
+    } else {
+        1
+    };
+    let conv = cout_tiles * tp * taps * n_in_eff * serial;
+
+    // Post-processing at one op per spatial tile per cycle (49 shared
+    // FP16 multipliers / the 49-word memory bandwidth, §VI-B).
+    let post = cout_tiles * cfg.c as u64 * tp;
+    let bnorm = if layer.bnorm { post } else { 0 };
+    let bias = post;
+    // Separate read-add bypass pass only at strided/projected junctions
+    // (identity bypasses are fused into the conv write-back for free).
+    let bypass = if layer.has_bypass && layer.bypass_separate {
+        2 * post // read pass + accumulate/write pass
+    } else {
+        0
+    };
+
+    LayerCycles {
+        conv,
+        bnorm,
+        bias,
+        bypass,
+    }
+}
+
+/// Whole-network schedule summary (Tbl III / Tbl VI).
+#[derive(Debug, Clone, Default)]
+pub struct NetworkSchedule {
+    pub cycles: LayerCycles,
+    /// Op counts by the same phases (from the graph IR).
+    pub conv_ops: u64,
+    pub bnorm_ops: u64,
+    pub bias_ops: u64,
+    pub bypass_ops: u64,
+    /// Weight-stream bits crossing the chip boundary (padded to C).
+    pub stream_bits: u64,
+    /// Weight-buffer reads (re-use hits).
+    pub wbuf_reads: u64,
+    pub per_layer: Vec<(String, LayerCycles)>,
+}
+
+impl NetworkSchedule {
+    pub fn total_cycles(&self) -> u64 {
+        self.cycles.total()
+    }
+
+    pub fn total_ops(&self) -> u64 {
+        self.conv_ops + self.bnorm_ops + self.bias_ops + self.bypass_ops
+    }
+
+    /// Real throughput in Op/cycle (Tbl III "total" row).
+    pub fn ops_per_cycle(&self) -> f64 {
+        self.total_ops() as f64 / self.total_cycles() as f64
+    }
+
+    /// Utilization: actual vs peak throughput (Tbl VI).
+    pub fn utilization(&self, cfg: &ChipConfig) -> f64 {
+        self.ops_per_cycle() / cfg.ops_per_cycle() as f64
+    }
+
+    /// Convolution-phase utilization: conv ops over conv cycles only.
+    ///
+    /// Isolates the spatial/channel padding losses (idle Tile-PUs) from
+    /// the 49-word-bandwidth post-processing phases — the quantity behind
+    /// the paper's per-network utilization narrative for topologies whose
+    /// 1×1-dominated blocks make the post phases non-negligible.
+    pub fn conv_utilization(&self, cfg: &ChipConfig) -> f64 {
+        (self.conv_ops as f64 / self.cycles.conv as f64) / cfg.ops_per_cycle() as f64
+    }
+}
+
+/// Schedule a whole network on one chip.
+pub fn schedule_network(net: &Network, cfg: &ChipConfig, dw: DepthwisePolicy) -> NetworkSchedule {
+    schedule_network_mesh(net, cfg, dw, 1, 1)
+}
+
+/// Schedule a whole network on a `rows×cols` chip mesh (per-chip cycles;
+/// all chips run the same schedule in lockstep, §V-A).
+pub fn schedule_network_mesh(
+    net: &Network,
+    cfg: &ChipConfig,
+    dw: DepthwisePolicy,
+    rows: usize,
+    cols: usize,
+) -> NetworkSchedule {
+    let mut s = NetworkSchedule::default();
+    for step in &net.steps {
+        let l = &step.layer;
+        let lc = layer_cycles_mesh(l, cfg, dw, rows, cols);
+        s.cycles.conv += lc.conv;
+        s.cycles.bnorm += lc.bnorm;
+        s.cycles.bias += lc.bias;
+        s.cycles.bypass += lc.bypass;
+        s.conv_ops += l.conv_ops();
+        s.bnorm_ops += l.bnorm_ops();
+        s.bias_ops += l.bias_ops();
+        s.bypass_ops += l.bypass_ops();
+        let stream_words =
+            ceil_div(l.n_out, cfg.c) as u64 * (l.k * l.k) as u64 * (l.n_in / l.groups) as u64;
+        s.stream_bits += stream_words * cfg.c as u64;
+        s.wbuf_reads += stream_words * (tile_pixels_mesh(l, cfg, rows, cols).max(1) - 1);
+        s.per_layer.push((l.name.clone(), lc));
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
+// Tbl I: the cycle-exact weight-stream trace of the inner loop.
+// ---------------------------------------------------------------------
+
+/// Where a cycle's weight word comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightSource {
+    /// First use: streamed from off-chip (I/O active).
+    Stream,
+    /// Re-use: read from the weight buffer (no I/O).
+    Buffer,
+}
+
+/// One cycle of the Algorithm-1 inner loop (all Tile-PUs in lockstep).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// 1-based cycle index, as in Tbl I.
+    pub cycle: u64,
+    /// Output-channel tile (0-based).
+    pub cout_tile: usize,
+    /// Pixel index within the spatial tile (0-based, row-major).
+    pub pixel: usize,
+    /// Filter tap index (row-major over k×k).
+    pub tap: usize,
+    /// Input channel.
+    pub cin: usize,
+    pub source: WeightSource,
+}
+
+/// Generate the first `max_events` trace events for a layer (Tbl I is the
+/// 16→64-FM 3×3 case with 8×8 tiles).
+pub fn trace_layer(layer: &ConvLayer, cfg: &ChipConfig, max_events: usize) -> Vec<TraceEvent> {
+    let mut out = Vec::with_capacity(max_events);
+    let cout_tiles = ceil_div(layer.n_out, cfg.c);
+    let tp = tile_pixels(layer, cfg) as usize;
+    let taps = layer.k * layer.k;
+    let n_in_eff = layer.n_in / layer.groups;
+    let mut cycle = 0u64;
+    'outer: for tile in 0..cout_tiles {
+        for pixel in 0..tp {
+            for tap in 0..taps {
+                for cin in 0..n_in_eff {
+                    cycle += 1;
+                    out.push(TraceEvent {
+                        cycle,
+                        cout_tile: tile,
+                        pixel,
+                        tap,
+                        cin,
+                        source: if pixel == 0 {
+                            WeightSource::Stream
+                        } else {
+                            WeightSource::Buffer
+                        },
+                    });
+                    if out.len() >= max_events {
+                        break 'outer;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::zoo;
+    use crate::network::ConvLayer;
+
+    fn cfg() -> ChipConfig {
+        ChipConfig::default()
+    }
+
+    #[test]
+    fn resnet34_cycle_breakdown_matches_table3() {
+        // Tbl III: conv 4.52M, bnorm 59.90k, bias 59.90k, total ≈ 4.65M.
+        let s = schedule_network(&zoo::resnet34(224, 224), &cfg(), DepthwisePolicy::default());
+        assert_eq!(s.cycles.conv, 4_521_984);
+        assert_eq!(s.cycles.bnorm, 59_904);
+        assert_eq!(s.cycles.bias, 59_904);
+        // Paper reports 7.68k bypass cycles; our separate-pass model gives
+        // 7.17k (same order, documented in EXPERIMENTS.md).
+        assert!((s.cycles.bypass as f64 / 7_680.0 - 1.0).abs() < 0.1);
+        let total = s.total_cycles() as f64;
+        assert!((total / 4.65e6 - 1.0).abs() < 0.01, "total {total}");
+    }
+
+    #[test]
+    fn resnet34_throughput_and_utilization_match_paper() {
+        // Tbl III: 1.53 kOp/cycle; Tbl VI: 97.5% utilization.
+        let s = schedule_network(&zoo::resnet34(224, 224), &cfg(), DepthwisePolicy::default());
+        let opc = s.ops_per_cycle();
+        assert!((opc / 1_530.0 - 1.0).abs() < 0.01, "op/cycle {opc}");
+        let u = s.utilization(&cfg());
+        assert!((u - 0.975).abs() < 0.005, "utilization {u}");
+    }
+
+    #[test]
+    fn yolov3_utilization_near_paper() {
+        // Tbl VI: 82.8% — driven by 320/32=10-wide FMs padding to 14.
+        let s = schedule_network(&zoo::yolov3(320, 320), &cfg(), DepthwisePolicy::default());
+        let u = s.conv_utilization(&cfg());
+        assert!((0.73..0.90).contains(&u), "conv utilization {u}");
+        // Total utilization (incl. post phases) is a few points lower.
+        assert!(s.utilization(&cfg()) <= u);
+    }
+
+    #[test]
+    fn shufflenet_conv_utilization_matches_paper_shape() {
+        // Tbl VI reports 98.8% for ShuffleNet: its FMs (28/14/7, channel
+        // counts ×16) tile perfectly, so *conv-phase* utilization is near
+        // peak under full-rate depth-wise. The total including the
+        // 49-word-bandwidth post phases is far lower for 1×1-dominated
+        // blocks — documented deviation (EXPERIMENTS.md).
+        let net = zoo::shufflenet(224, 224);
+        let s = schedule_network(&net, &cfg(), DepthwisePolicy::FullRate);
+        let cu = s.conv_utilization(&cfg());
+        assert!(cu > 0.97, "conv utilization {cu}");
+        // Faithful bank-serialized depth-wise costs conv-phase throughput…
+        let s2 = schedule_network(&net, &cfg(), DepthwisePolicy::BankSerialized);
+        assert!(s2.conv_utilization(&cfg()) < cu);
+        // …and the paper-shape ordering ShuffleNet > ResNet-34 > YOLOv3
+        // holds on conv-phase utilization.
+        let r34 = schedule_network(&zoo::resnet34(224, 224), &cfg(), DepthwisePolicy::FullRate);
+        let yolo = schedule_network(&zoo::yolov3(320, 320), &cfg(), DepthwisePolicy::FullRate);
+        assert!(cu > yolo.conv_utilization(&cfg()));
+        assert!(r34.conv_utilization(&cfg()) > yolo.conv_utilization(&cfg()));
+    }
+
+    #[test]
+    fn stream_bits_equal_weight_bits_for_aligned_nets() {
+        let net = zoo::resnet34(224, 224);
+        let s = schedule_network(&net, &cfg(), DepthwisePolicy::default());
+        assert_eq!(s.stream_bits, net.weight_bits());
+    }
+
+    #[test]
+    fn depthwise_serialization_factor_is_c() {
+        let dw = ConvLayer::new("dw", 64, 64, 14, 14, 3, 1).with_groups(64);
+        let fast = layer_cycles(&dw, &cfg(), DepthwisePolicy::FullRate);
+        let slow = layer_cycles(&dw, &cfg(), DepthwisePolicy::BankSerialized);
+        assert_eq!(slow.conv, fast.conv * 16);
+    }
+
+    #[test]
+    fn table1_trace_first_cycles() {
+        // Tbl I: 16 in / 64 out FM 3×3 conv, 8×8 pixel tiles.
+        let l = ConvLayer::new("t1", 16, 64, 56, 56, 3, 1);
+        let tr = trace_layer(&l, &cfg(), 40_000);
+        // cycle 1: tile 0, pixel (1,1), tap (−1,−1), input FM 1, stream.
+        assert_eq!(
+            tr[0],
+            TraceEvent {
+                cycle: 1,
+                cout_tile: 0,
+                pixel: 0,
+                tap: 0,
+                cin: 0,
+                source: WeightSource::Stream
+            }
+        );
+        // cycle 16: last input FM of the first tap.
+        assert_eq!(tr[15].cin, 15);
+        assert_eq!(tr[15].tap, 0);
+        // cycle 17: tap advances to (−1, 0).
+        assert_eq!(tr[16].tap, 1);
+        assert_eq!(tr[16].cin, 0);
+        // cycle 144: first pixel finishes all 9 taps × 16 channels.
+        assert_eq!(tr[143].tap, 8);
+        assert_eq!(tr[143].cin, 15);
+        assert_eq!(tr[143].source, WeightSource::Stream);
+        // cycle 145: pixel 2 — weights now come from the buffer (no I/O).
+        assert_eq!(tr[144].pixel, 1);
+        assert_eq!(tr[144].source, WeightSource::Buffer);
+        // cycle 9216 = 64 pixels × 144: tile 0 done.
+        assert_eq!(tr[9215].pixel, 63);
+        // cycle 9217: next output-channel tile, streaming resumes.
+        assert_eq!(tr[9216].cout_tile, 1);
+        assert_eq!(tr[9216].source, WeightSource::Stream);
+        // Whole layer: 4 tiles × 9216 = 36 864 cycles ("36.8k" in Tbl I).
+        assert_eq!(
+            layer_cycles(&l, &cfg(), DepthwisePolicy::default()).conv,
+            36_864
+        );
+    }
+}

@@ -1,0 +1,330 @@
+//! Multi-chip systolic mesh planning (§V).
+//!
+//! The feature map is tiled onto an `m×n` array of Hyperdrive chips (then
+//! further onto each chip's M×N Tile-PUs). The planner picks the smallest
+//! mesh whose *per-chip* worst-case-layer slice fits the per-chip FMM,
+//! preferring the FM's aspect ratio (the paper uses 10×5 for 2048×1024
+//! ResNet-34 and 20×10 for ResNet-152).
+//!
+//! Border-exchange accounting (Fig 11, Tbl V bottom): after a layer's
+//! output is computed, every chip sends its `⌊k_next/2⌋` boundary
+//! rows/columns once to the adjacent neighbour that will need them
+//! (option 3 of §V — send-once-and-store, not re-read).
+
+use crate::network::{Network, TensorRef};
+use crate::util::ceil_div;
+use crate::ChipConfig;
+
+use super::wcl;
+
+/// A planned chip mesh.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MeshPlan {
+    /// Mesh rows (vertical chip count).
+    pub rows: usize,
+    /// Mesh columns (horizontal chip count).
+    pub cols: usize,
+    /// Per-chip worst-case-layer requirement in words.
+    pub per_chip_wcl_words: u64,
+}
+
+impl MeshPlan {
+    pub fn chips(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn is_single_chip(&self) -> bool {
+        self.chips() == 1
+    }
+}
+
+/// Per-chip WCL: re-run the liveness analysis with per-chip tile volumes
+/// (every tensor contributes `c · ceil(h/rows) · ceil(w/cols)` words —
+/// border/corner pixels live in the separate BM/CM, §V-C).
+pub fn per_chip_wcl_words(net: &Network, rows: usize, cols: usize) -> u64 {
+    let a = wcl::analyze(net);
+    if rows == 1 && cols == 1 {
+        return a.wcl_words;
+    }
+    // Scale each step's live set by re-deriving tensor volumes per chip.
+    // Reuse the exact liveness by constructing a "per-chip" network view:
+    // tensor volumes scale with ceil-divided spatial dims.
+    let tile_words = |r: TensorRef| -> u64 {
+        let (c, h, w) = net.shape_of(r);
+        (c * ceil_div(h, rows) * ceil_div(w, cols)) as u64
+    };
+    // Recompute liveness intervals identically to wcl::analyze but with
+    // tiled volumes: cheapest correct approach is to scale each step's
+    // live contribution tensor-by-tensor.
+    let mut max_live = 0u64;
+    let n = net.steps.len();
+    let tid = |r: TensorRef| match r {
+        TensorRef::Input => 0usize,
+        TensorRef::Step(i) => 1 + i,
+    };
+    let mut death = vec![-1isize; n + 1];
+    death[0] = 0;
+    for (i, s) in net.steps.iter().enumerate() {
+        for r in std::iter::once(s.src).chain(s.bypass).chain(s.concat_extra) {
+            death[tid(r)] = death[tid(r)].max(i as isize);
+        }
+    }
+    let mut storage_of = (0..=n).collect::<Vec<usize>>();
+    for (i, s) in net.steps.iter().enumerate() {
+        if let Some(b) = s.bypass {
+            storage_of[1 + i] = storage_of[tid(b)];
+        }
+    }
+    let mut births = vec![0isize; n + 1];
+    let mut deaths = vec![0isize; n + 1];
+    let mut words = vec![0u64; n + 1];
+    for t in 0..=n {
+        births[t] = t as isize - 1;
+        deaths[t] = death[t].max((t as isize - 1).max(0));
+        words[t] = if t == 0 {
+            tile_words(TensorRef::Input)
+        } else {
+            tile_words(TensorRef::Step(t - 1))
+        };
+    }
+    for t in (0..=n).rev() {
+        let root = storage_of[t];
+        if root != t {
+            deaths[root] = deaths[root].max(deaths[t]);
+            words[t] = 0;
+        }
+    }
+    for i in 0..n {
+        let i = i as isize;
+        let live: u64 = (0..=n)
+            .filter(|&t| words[t] > 0 && births[t] <= i && deaths[t] >= i)
+            .map(|t| words[t])
+            .sum();
+        max_live = max_live.max(live);
+    }
+    max_live
+}
+
+/// Plan the smallest aspect-matched mesh that fits `cfg.fmm_words` per
+/// chip. The column/row ratio follows the FM aspect ratio (e.g. 2048-wide
+/// × 1024-high → cols = 2·rows → 10×5 for ResNet-34, exactly the paper's
+/// configuration).
+pub fn plan_mesh(net: &Network, cfg: &ChipConfig) -> MeshPlan {
+    let aspect = (net.in_w as f64 / net.in_h as f64).max(1e-6);
+    for size in 1..=64usize {
+        // Candidate meshes near the aspect ratio for this chip count.
+        let rows = size;
+        let cols = ((rows as f64 * aspect).round() as usize).max(1);
+        let w = per_chip_wcl_words(net, rows, cols);
+        if w <= cfg.fmm_words as u64 {
+            return MeshPlan {
+                rows,
+                cols,
+                per_chip_wcl_words: w,
+            };
+        }
+    }
+    panic!("no mesh up to 64 rows fits the network — FMM too small");
+}
+
+/// Plan an explicit mesh (for reproducing the paper's fixed 10×5 / 20×10
+/// rows of Tbl V); panics if the per-chip slice does not fit.
+pub fn plan_mesh_exact(net: &Network, cfg: &ChipConfig, rows: usize, cols: usize) -> MeshPlan {
+    let w = per_chip_wcl_words(net, rows, cols);
+    assert!(
+        w <= cfg.fmm_words as u64,
+        "{}x{} mesh per-chip WCL {w} exceeds FMM {}",
+        rows,
+        cols,
+        cfg.fmm_words
+    );
+    MeshPlan {
+        rows,
+        cols,
+        per_chip_wcl_words: w,
+    }
+}
+
+/// Halo width (rows/cols) a consumer layer needs from its neighbours.
+fn halo_of(k: usize) -> usize {
+    k / 2
+}
+
+/// Border-exchange traffic in bits for the whole network on a mesh
+/// (Fig 11's "including border exchange"; 0 for a 1×1 mesh).
+///
+/// For every step output consumed by at least one 3×3 layer, each
+/// internal mesh edge carries the producer's boundary rows/columns once
+/// in each direction; corner pixels additionally hop twice (forwarded by
+/// the vertical neighbour, §V-B).
+pub fn border_exchange_bits(net: &Network, plan: &MeshPlan, fm_bits: usize) -> u64 {
+    if plan.is_single_chip() {
+        return 0;
+    }
+    let (m, n) = (plan.rows as u64, plan.cols as u64);
+    let mut bits = 0u64;
+    // Halo each tensor's consumers need.
+    let mut halo = vec![0usize; net.steps.len() + 1];
+    let tid = |r: TensorRef| match r {
+        TensorRef::Input => 0usize,
+        TensorRef::Step(i) => 1 + i,
+    };
+    for s in &net.steps {
+        let h = halo_of(s.layer.k);
+        for r in std::iter::once(s.src).chain(s.bypass).chain(s.concat_extra) {
+            halo[tid(r)] = halo[tid(r)].max(h);
+        }
+    }
+    // The network input arrives pre-distributed with its halo (part of
+    // the input load, not exchange); step outputs are exchanged.
+    for (i, _) in net.steps.iter().enumerate() {
+        let hw = halo[1 + i] as u64;
+        if hw == 0 {
+            continue;
+        }
+        let (c, h, w) = net.shape_of(TensorRef::Step(i));
+        let (c, h, w) = (c as u64, h as u64, w as u64);
+        // Horizontal internal cuts: (m−1) cuts × full FM width, exchanged
+        // both ways; vertical cuts symmetric.
+        let edge_pixels = (m - 1) * w + (n - 1) * h;
+        bits += 2 * hw * edge_pixels * c * fm_bits as u64;
+        // Corner pixels: (m−1)(n−1) internal vertices × 4 diagonal
+        // transfers of hw² pixels, each taking 2 serial hops.
+        bits += (m - 1) * (n - 1) * 4 * 2 * (hw * hw) * c * fm_bits as u64;
+    }
+    bits
+}
+
+/// Chip position classes of §V-A (Fig 6d): all chips of a class execute
+/// identically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ChipType {
+    NW,
+    N,
+    NE,
+    W,
+    Center,
+    E,
+    SW,
+    S,
+    SE,
+}
+
+/// Classify a mesh position.
+pub fn chip_type(row: usize, col: usize, plan: &MeshPlan) -> ChipType {
+    let top = row == 0;
+    let bottom = row == plan.rows - 1;
+    let left = col == 0;
+    let right = col == plan.cols - 1;
+    match (top, bottom, left, right) {
+        (true, _, true, _) => ChipType::NW,
+        (true, _, _, true) => ChipType::NE,
+        (_, true, true, _) => ChipType::SW,
+        (_, true, _, true) => ChipType::SE,
+        (true, _, _, _) => ChipType::N,
+        (_, true, _, _) => ChipType::S,
+        (_, _, true, _) => ChipType::W,
+        (_, _, _, true) => ChipType::E,
+        _ => ChipType::Center,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::zoo;
+
+    fn cfg() -> ChipConfig {
+        ChipConfig::default()
+    }
+
+    #[test]
+    fn resnet34_224_plans_single_chip() {
+        let net = zoo::resnet34(224, 224);
+        let p = plan_mesh(&net, &cfg());
+        assert!(p.is_single_chip());
+        assert_eq!(p.per_chip_wcl_words, 401_408);
+    }
+
+    #[test]
+    fn resnet34_2kx1k_plans_10x5_like_paper() {
+        let net = zoo::resnet34(1024, 2048); // (h, w) = 1024×2048
+        let p = plan_mesh(&net, &cfg());
+        assert_eq!((p.rows, p.cols), (5, 10), "paper's Tbl V mesh");
+        assert!(p.per_chip_wcl_words <= cfg().fmm_words as u64);
+    }
+
+    #[test]
+    fn resnet152_2kx1k_fits_paper_mesh() {
+        // The paper deploys 20×10 = 200 chips; our planner finds that a
+        // slightly smaller aspect-matched mesh (9×18) already fits, and
+        // the paper's round configuration validates as well.
+        let net = zoo::resnet152(1024, 2048);
+        let p = plan_mesh(&net, &cfg());
+        assert!(p.chips() <= 200, "planner found {} chips", p.chips());
+        let exact = plan_mesh_exact(&net, &cfg(), 10, 20);
+        assert_eq!(exact.chips(), 200);
+    }
+
+    #[test]
+    fn exact_plan_validates_capacity() {
+        let net = zoo::resnet34(1024, 2048);
+        let p = plan_mesh_exact(&net, &cfg(), 5, 10);
+        assert_eq!(p.chips(), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds FMM")]
+    fn undersized_exact_plan_panics() {
+        let net = zoo::resnet34(1024, 2048);
+        let _ = plan_mesh_exact(&net, &cfg(), 2, 2);
+    }
+
+    #[test]
+    fn per_chip_wcl_shrinks_with_mesh() {
+        let net = zoo::resnet34(1024, 2048);
+        let w1 = per_chip_wcl_words(&net, 1, 1);
+        let w4 = per_chip_wcl_words(&net, 2, 2);
+        let w50 = per_chip_wcl_words(&net, 5, 10);
+        assert!(w4 < w1 && w50 < w4);
+        // Ceil-division padding keeps it at or above the exact share.
+        assert!(w4 >= w1 / 4);
+    }
+
+    #[test]
+    fn border_exchange_zero_on_single_chip() {
+        let net = zoo::resnet34(224, 224);
+        let p = plan_mesh(&net, &cfg());
+        assert_eq!(border_exchange_bits(&net, &p, 16), 0);
+    }
+
+    #[test]
+    fn border_exchange_order_of_magnitude() {
+        // ResNet-34 @ 2048×1024 on 10×5: a few hundred Mbit — small vs
+        // the 2.5 Gbit of FMs that a streaming accelerator would move.
+        let net = zoo::resnet34(1024, 2048);
+        let p = plan_mesh_exact(&net, &cfg(), 5, 10);
+        let bits = border_exchange_bits(&net, &p, 16) as f64;
+        assert!(
+            (1e8..6e8).contains(&bits),
+            "border bits {bits:.3e} out of expected band"
+        );
+        let all_fm_bits = wcl::analyze(&net).all_fm_bits(16) as f64;
+        assert!(bits < all_fm_bits / 5.0);
+    }
+
+    #[test]
+    fn chip_types_cover_mesh() {
+        let p = MeshPlan {
+            rows: 3,
+            cols: 3,
+            per_chip_wcl_words: 0,
+        };
+        assert_eq!(chip_type(0, 0, &p), ChipType::NW);
+        assert_eq!(chip_type(0, 1, &p), ChipType::N);
+        assert_eq!(chip_type(1, 1, &p), ChipType::Center);
+        assert_eq!(chip_type(2, 2, &p), ChipType::SE);
+        assert_eq!(chip_type(1, 0, &p), ChipType::W);
+        assert_eq!(chip_type(2, 1, &p), ChipType::S);
+    }
+}

@@ -1,0 +1,290 @@
+//! Worst-case-layer (WCL) memory analysis — §IV-B.
+//!
+//! The FMM must hold, at every step, all live feature maps: the input
+//! being read, the output being produced, and any tensor still needed by
+//! a later step (residual bypasses). The paper's planning rules are
+//! reproduced exactly:
+//!
+//! * **ping-pong**: input and output of a layer live in different
+//!   segments (single-port SRAMs, no same-cycle read/write conflicts);
+//! * **in-place bypass accumulation**: a layer with a residual bypass
+//!   writes its output *into the bypass tensor's storage* (read-add-write
+//!   with one cycle of latency, enabled by the scale→bypass→bias
+//!   reordering of §IV-B) — so the output costs no extra memory;
+//! * dead segments are reused freely (the M2.1/M2.2 splitting argument).
+//!
+//! For ResNet-18/34 this yields the paper's `2·n_in·h_in·w_in` (401 kword
+//! at 224²), for bottleneck ResNets `1.625·n_in·h_in·w_in` at the
+//! subsampled block (21 Mbit at 224², 878 Mbit at 2048×1024) — Tbl II.
+
+use crate::network::{Network, TensorRef};
+
+/// Result of the liveness analysis over a network.
+#[derive(Debug, Clone)]
+pub struct MemoryAnalysis {
+    /// Live FMM words during each step.
+    pub live_words: Vec<u64>,
+    /// Worst-case layer requirement in words (max of `live_words`).
+    pub wcl_words: u64,
+    /// Step index attaining the WCL.
+    pub wcl_step: usize,
+    /// Total binary weight bits streamed (on-chip layers).
+    pub weight_bits: u64,
+    /// Sum of all FM volumes in words (input + every step output).
+    pub all_fm_words: u64,
+}
+
+impl MemoryAnalysis {
+    /// WCL in bits for a given FM word width.
+    pub fn wcl_bits(&self, fm_bits: usize) -> u64 {
+        self.wcl_words * fm_bits as u64
+    }
+
+    /// All-FM volume in bits.
+    pub fn all_fm_bits(&self, fm_bits: usize) -> u64 {
+        self.all_fm_words * fm_bits as u64
+    }
+
+    /// Whether the network fits a single chip with `fmm_words` of FMM.
+    pub fn fits_single_chip(&self, fmm_words: usize) -> bool {
+        self.wcl_words <= fmm_words as u64
+    }
+}
+
+/// Storage intervals after bypass aliasing: `[birth, death]` in step
+/// indices (birth −1 = network input, death = last reading step).
+#[derive(Debug, Clone, Copy)]
+struct Storage {
+    birth: isize,
+    death: isize,
+    words: u64,
+}
+
+/// Run the liveness analysis (§IV-B rules) over a validated network.
+pub fn analyze(net: &Network) -> MemoryAnalysis {
+    analyze_with(net, true)
+}
+
+/// Liveness analysis with the in-place bypass accumulation optionally
+/// disabled — the ablation behind §IV-B's "in order to avoid additional
+/// memory (+50%), we perform an on-the-fly addition of the bypass path".
+pub fn analyze_with(net: &Network, alias_bypass: bool) -> MemoryAnalysis {
+    let n = net.steps.len();
+    // Tensor ids: 0 = input, 1 + i = output of step i.
+    let tid = |r: TensorRef| -> usize {
+        match r {
+            TensorRef::Input => 0,
+            TensorRef::Step(i) => 1 + i,
+        }
+    };
+
+    // Last step reading each tensor.
+    let mut death = vec![-1isize; n + 1];
+    death[0] = 0; // the input is at least live while step 0 runs
+    for (i, s) in net.steps.iter().enumerate() {
+        for r in std::iter::once(s.src)
+            .chain(s.bypass)
+            .chain(s.concat_extra)
+        {
+            death[tid(r)] = death[tid(r)].max(i as isize);
+        }
+    }
+
+    // Storage aliasing: a bypass step's output lives in the bypass
+    // tensor's storage. Chase chains (b bypassed into c bypassed into …).
+    let mut storage_of = (0..=n).collect::<Vec<usize>>();
+    if alias_bypass {
+        for (i, s) in net.steps.iter().enumerate() {
+            if let Some(b) = s.bypass {
+                let root = storage_of[tid(b)];
+                storage_of[1 + i] = root;
+            }
+        }
+    }
+
+    // Build storage intervals.
+    let mut storages: Vec<Storage> = Vec::with_capacity(n + 1);
+    for t in 0..=n {
+        let words = if t == 0 {
+            (net.in_ch * net.in_h * net.in_w) as u64
+        } else {
+            net.steps[t - 1].layer.out_words()
+        };
+        storages.push(Storage {
+            birth: t as isize - 1,
+            // A tensor is live at least while it is being produced (the
+            // final output is never read but still occupies the FMM).
+            death: death[t].max((t as isize - 1).max(0)),
+            words,
+        });
+    }
+    // Merge aliased tensors into their root storage's interval.
+    for t in (0..=n).rev() {
+        let root = storage_of[t];
+        if root != t {
+            let d = storages[t].death.max(storages[root].death);
+            storages[root].death = d;
+            storages[t].words = 0; // aliased: no own storage
+        }
+    }
+
+    // Live words during each step i: storages with birth <= i <= death.
+    // (The output storage of step i has birth = i; inputs have death >= i.)
+    let mut live_words = vec![0u64; n];
+    for (i, lw) in live_words.iter_mut().enumerate() {
+        let i = i as isize;
+        *lw = storages
+            .iter()
+            .filter(|s| s.words > 0 && s.birth <= i && s.death >= i)
+            .map(|s| s.words)
+            .sum();
+    }
+
+    let (wcl_step, &wcl_words) = live_words
+        .iter()
+        .enumerate()
+        .max_by_key(|&(_, w)| *w)
+        .expect("empty network");
+
+    MemoryAnalysis {
+        live_words,
+        wcl_words,
+        wcl_step,
+        weight_bits: net.weight_bits(),
+        all_fm_words: net.all_fm_words(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::zoo;
+    use crate::network::{ConvLayer, Network, TensorRef};
+    use crate::ChipConfig;
+
+    #[test]
+    fn resnet34_wcl_is_401_kwords() {
+        // §IV-B: M = 2·n_in·h_in·w_in = 2·64·56·56 = 401 408 words.
+        let a = analyze(&zoo::resnet34(224, 224));
+        assert_eq!(a.wcl_words, 2 * 64 * 56 * 56);
+        // 6.4 Mbit with FP16 — exactly the taped-out FMM size.
+        assert_eq!(a.wcl_bits(16), 6_422_528);
+        assert!(a.wcl_bits(16) as f64 / 6.4e6 < 1.01);
+    }
+
+    #[test]
+    fn resnet18_wcl_equals_resnet34_wcl() {
+        // Tbl II: both basic-block ResNets share the 6.4 Mbit WCL.
+        let a18 = analyze(&zoo::resnet18(224, 224));
+        let a34 = analyze(&zoo::resnet34(224, 224));
+        assert_eq!(a18.wcl_words, a34.wcl_words);
+    }
+
+    #[test]
+    fn bottleneck_wcl_is_1_625_m1() {
+        // §IV-B subsampled bottleneck: M1+M2+M4 = 1.625·M1 with
+        // M1 = 256·56·56 → 20.9 Mbit ("21M" in Tbl II).
+        let a = analyze(&zoo::resnet50(224, 224));
+        let m1 = 256u64 * 56 * 56;
+        assert_eq!(a.wcl_words, m1 + m1 / 8 + m1 / 2);
+        let mbit = a.wcl_bits(16) as f64 / 1e6;
+        assert!((20.0..21.5).contains(&mbit), "{mbit} Mbit");
+    }
+
+    #[test]
+    fn resnet152_wcl_independent_of_depth() {
+        // Tbl II: ResNet-50 and ResNet-152 share the WCL (same blocks).
+        let a50 = analyze(&zoo::resnet50(224, 224));
+        let a152 = analyze(&zoo::resnet152(224, 224));
+        assert_eq!(a50.wcl_words, a152.wcl_words);
+    }
+
+    #[test]
+    fn high_resolution_wcl_matches_table2() {
+        // ResNet-34 @ 2048×1024: 2·64·512·256 words = 268 Mbit (paper: 267M).
+        let a = analyze(&zoo::resnet34(1024, 2048));
+        assert_eq!(a.wcl_words, 2 * 64 * 256 * 512);
+        let mbit = a.wcl_bits(16) as f64 / 1e6;
+        assert!((265.0..270.0).contains(&mbit), "{mbit}");
+        // ResNet-152 @ 2048×1024: 1.625·256·512·256 → ~872 Mbit (paper 878M).
+        let a152 = analyze(&zoo::resnet152(1024, 2048));
+        let mbit152 = a152.wcl_bits(16) as f64 / 1e6;
+        assert!((860.0..885.0).contains(&mbit152), "{mbit152}");
+    }
+
+    #[test]
+    fn resnet34_fits_taped_out_chip_at_224() {
+        let cfg = ChipConfig::default();
+        assert!(analyze(&zoo::resnet34(224, 224)).fits_single_chip(cfg.fmm_words));
+        assert!(!analyze(&zoo::resnet34(1024, 2048)).fits_single_chip(cfg.fmm_words));
+    }
+
+    #[test]
+    fn bypass_aliasing_saves_memory() {
+        // A residual pair must not cost 3 buffers (§IV-B: +50% avoided).
+        let mut net = Network::new("res", 16, 8, 8);
+        let a = net.push(ConvLayer::new("a", 16, 16, 8, 8, 3, 1), TensorRef::Input, None);
+        net.push(
+            ConvLayer::new("b", 16, 16, 8, 8, 3, 1).with_bypass(true),
+            TensorRef::Step(a),
+            Some(TensorRef::Input),
+        );
+        let m = analyze(&net);
+        let fm = 16 * 64u64;
+        assert_eq!(m.wcl_words, 2 * fm); // not 3·fm
+        assert_eq!(m.live_words, vec![2 * fm, 2 * fm]);
+    }
+
+    #[test]
+    fn non_bypass_chain_uses_ping_pong_pair() {
+        let mut net = Network::new("chain", 16, 8, 8);
+        let mut prev = TensorRef::Input;
+        for i in 0..4 {
+            prev = TensorRef::Step(net.push(
+                ConvLayer::new(format!("c{i}"), 16, 16, 8, 8, 3, 1),
+                prev,
+                None,
+            ));
+        }
+        let m = analyze(&net);
+        assert!(m.live_words.iter().all(|&w| w == 2 * 16 * 64));
+    }
+
+    #[test]
+    fn live_words_never_below_single_layer_need() {
+        // Property: liveness can never be smaller than the layer's own
+        // input + (non-aliased) output.
+        for net in [zoo::resnet34(224, 224), zoo::resnet50(224, 224)] {
+            let m = analyze(&net);
+            for (i, s) in net.steps.iter().enumerate() {
+                let need = s.layer.in_words()
+                    + if s.bypass.is_some() { 0 } else { s.layer.out_words() };
+                assert!(
+                    m.live_words[i] >= need,
+                    "step {i} `{}`: live {} < need {need}",
+                    s.layer.name,
+                    m.live_words[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn disabling_bypass_fusion_costs_50_percent() {
+        // §IV-B: without the on-the-fly bypass addition, the basic-block
+        // WCL would need a third buffer (+50%).
+        let net = zoo::resnet34(224, 224);
+        let fused = analyze(&net).wcl_words;
+        let unfused = analyze_with(&net, false).wcl_words;
+        assert_eq!(unfused, 3 * 64 * 56 * 56);
+        assert!((unfused as f64 / fused as f64 - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hypernet20_fits_comfortably() {
+        let a = analyze(&zoo::hypernet20());
+        // Stage-1 residual pair dominates: 2 × 16·32·32 = 32 768 words.
+        assert_eq!(a.wcl_words, 2 * 16 * 32 * 32);
+        assert!(a.fits_single_chip(ChipConfig::default().fmm_words));
+    }
+}

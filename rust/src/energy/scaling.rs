@@ -1,0 +1,161 @@
+//! VDD / forward-body-bias scaling: frequency and power (Figs 8 and 9).
+//!
+//! `f(VDD, VBB)` is a saturating fit through the three measured points
+//! with a near-threshold exponential below 0.5 V; power is
+//! `C_EFF·V²·f + leakage(V, VBB)` with the memory-array share of leakage
+//! insensitive to body bias (the arrays are not forward-biased, §VI-A).
+
+use super::constants::*;
+
+/// Operating frequency in Hz at a supply/body-bias point.
+pub fn freq_hz(vdd: f64, vbb: f64) -> f64 {
+    let v_eff = vdd - V_TH_EFF + K_BB * vbb;
+    if vdd >= V_NEAR_THRESHOLD {
+        (F_A_HZ - F_B_HZ_V / v_eff).max(0.0)
+    } else {
+        // Near-threshold: exponential roll-off anchored at 0.5 V.
+        let f0 = F_A_HZ - F_B_HZ_V / (V_NEAR_THRESHOLD - V_TH_EFF + K_BB * vbb);
+        f0 * ((vdd - V_NEAR_THRESHOLD) / NEAR_VT_SLOPE_V).exp()
+    }
+}
+
+/// Leakage power in W.
+pub fn leakage_w(vdd: f64, vbb: f64) -> f64 {
+    let v_scale = (K_LEAK_VDD * (vdd - 0.5)).exp();
+    let logic = (1.0 - LEAK_MEM_FRACTION) * (K_LEAK_VBB * vbb).exp();
+    P_LEAK0_W * v_scale * (logic + LEAK_MEM_FRACTION)
+}
+
+/// Total core power in W when clocked at `freq_hz(vdd, vbb)`.
+pub fn power_w(vdd: f64, vbb: f64) -> f64 {
+    C_EFF_F * vdd * vdd * freq_hz(vdd, vbb) + leakage_w(vdd, vbb)
+}
+
+/// Core energy per cycle in J.
+pub fn energy_per_cycle_j(vdd: f64, vbb: f64) -> f64 {
+    power_w(vdd, vbb) / freq_hz(vdd, vbb)
+}
+
+/// Peak-throughput core energy efficiency in Op/s/W for a given real
+/// Op/cycle rate (e.g. 1527 for ResNet-34).
+pub fn core_efficiency_ops_per_j(vdd: f64, vbb: f64, ops_per_cycle: f64) -> f64 {
+    ops_per_cycle / energy_per_cycle_j(vdd, vbb)
+}
+
+/// Lowest VDD (within [0.4, 0.9]) reaching a target frequency at a given
+/// body bias — the mechanism behind Fig 8's up-and-left shift with FBB.
+pub fn vdd_for_freq(target_hz: f64, vbb: f64) -> Option<f64> {
+    let mut lo = 0.40;
+    let mut hi = 0.90;
+    if freq_hz(hi, vbb) < target_hz {
+        return None;
+    }
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        if freq_hz(mid, vbb) >= target_hz {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Some(hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_matches_measured_points() {
+        // (VDD, f_meas MHz, P_meas mW) from Tbl IV; model within ±20%.
+        for (v, f_mhz, p_mw) in [(0.5, 57.0, 22.0), (0.65, 135.0, 72.0), (0.8, 158.0, 134.0)] {
+            let f = freq_hz(v, 0.0) / 1e6;
+            let p = power_w(v, 0.0) * 1e3;
+            assert!(
+                (f / f_mhz - 1.0).abs() < 0.05,
+                "f({v}) = {f} vs {f_mhz} MHz"
+            );
+            assert!((p / p_mw - 1.0).abs() < 0.20, "P({v}) = {p} vs {p_mw} mW");
+        }
+    }
+
+    #[test]
+    fn leakage_fraction_is_4_percent_at_anchor() {
+        let frac = leakage_w(0.5, 0.0) / power_w(0.5, 0.0);
+        assert!((0.03..0.06).contains(&frac), "leakage fraction {frac}");
+    }
+
+    #[test]
+    fn fbb_raises_frequency_without_memory_leakage() {
+        assert!(freq_hz(0.5, 1.5) > 1.4 * freq_hz(0.5, 0.0));
+        // Memory share of leakage is FBB-insensitive: total leakage grows
+        // far slower than the pure-logic exponential would.
+        let ratio = leakage_w(0.5, 1.8) / leakage_w(0.5, 0.0);
+        assert!(ratio < (K_LEAK_VBB * 1.8_f64).exp() * 0.6, "ratio {ratio}");
+    }
+
+    #[test]
+    fn fbb_improves_iso_throughput_efficiency() {
+        // Fig 8's main message: at the same throughput, FBB lets VDD drop
+        // and efficiency rise.
+        let target = 100e6;
+        let v0 = vdd_for_freq(target, 0.0).unwrap();
+        let v15 = vdd_for_freq(target, 1.5).unwrap();
+        assert!(v15 < v0);
+        let e0 = energy_per_cycle_j(v0, 0.0);
+        let e15 = energy_per_cycle_j(v15, 1.5);
+        assert!(e15 < e0, "e15 {e15} !< e0 {e0}");
+    }
+
+    #[test]
+    fn best_energy_point_is_half_volt_1v5_fbb() {
+        // Fig 8 / §VI-A: scan the (VDD, VBB) grid the paper sweeps; the
+        // minimum energy/cycle must land at 0.5 V, 1.5 V FBB.
+        let mut best = (0.0, 0.0, f64::MAX);
+        for &vdd in &[0.5, 0.55, 0.6, 0.65, 0.7, 0.75, 0.8] {
+            for &vbb in &[0.0, 0.5, 1.0, 1.5, 1.8] {
+                let e = energy_per_cycle_j(vdd, vbb);
+                if e < best.2 {
+                    best = (vdd, vbb, e);
+                }
+            }
+        }
+        assert_eq!((best.0, best.1), (0.5, 1.5), "best point {best:?}");
+    }
+
+    #[test]
+    fn efficiency_peaks_at_0v5_over_vdd_sweep() {
+        // Fig 9: efficiency drops below 0.5 V (leakage-dominated) and
+        // above (CV²).
+        let eff = |v: f64| core_efficiency_ops_per_j(v, 0.0, 1527.0);
+        assert!(eff(0.5) > eff(0.42));
+        assert!(eff(0.5) > eff(0.65));
+        assert!(eff(0.65) > eff(0.8));
+    }
+
+    #[test]
+    fn resnet34_core_energy_near_paper() {
+        // 4.65 M cycles at the best point ≈ 1.45 mJ (paper), core
+        // efficiency ≈ 4.9 TOp/s/W.
+        let e_cycle = energy_per_cycle_j(0.5, 1.5);
+        let e_image = e_cycle * 4.649e6;
+        assert!(
+            (e_image / 1.45e-3 - 1.0).abs() < 0.15,
+            "core E {e_image:.3e} vs 1.45 mJ"
+        );
+        let eff = core_efficiency_ops_per_j(0.5, 1.5, 1527.0) / 1e12;
+        assert!((4.2..5.5).contains(&eff), "core eff {eff} TOp/s/W");
+    }
+
+    #[test]
+    fn vdd_for_freq_is_inverse_of_freq() {
+        for &vbb in &[0.0, 1.0, 1.8] {
+            for &f in &[60e6, 120e6, 150e6] {
+                if let Some(v) = vdd_for_freq(f, vbb) {
+                    assert!(freq_hz(v, vbb) >= f * 0.999);
+                    assert!(freq_hz(v - 0.01, vbb) < f * 1.01);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! # Hyperdrive — multi-chip systolically scalable BWN inference engine
+//!
+//! Full-system reproduction of *Hyperdrive: A Multi-Chip Systolically
+//! Scalable Binary-Weight CNN Inference Engine* (Andri, Cavigelli, Rossi,
+//! Benini — CS.DC 2018) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build time, Python)** — the BWN convolution hot-spot as a
+//!   Pallas kernel and the per-layer JAX model, AOT-lowered to HLO text
+//!   artifacts (`python/compile/`, `make artifacts`).
+//! * **L3 (this crate)** — everything the paper's silicon + board does:
+//!   the CNN graph IR and model zoo ([`network`]), binary-weight packing
+//!   and streaming ([`bwn`]), the Algorithm-1 scheduler, worst-case-layer
+//!   memory planner and multi-chip tiling ([`coordinator`]), the
+//!   functional + cycle-accurate chip/mesh simulator ([`simulator`]), the
+//!   calibrated energy/power model ([`energy`]), the state-of-the-art
+//!   comparator models ([`baselines`]), the PJRT runtime that executes the
+//!   AOT artifacts ([`runtime`]) and the paper-table generators
+//!   ([`report`]).
+//!
+//! The chip itself (GF 22 nm FDX) is replaced by a simulator calibrated to
+//! the paper's measured silicon numbers; see `DESIGN.md` for the
+//! substitution table and the per-experiment index.
+
+pub mod baselines;
+pub mod bwn;
+pub mod coordinator;
+pub mod energy;
+pub mod network;
+pub mod report;
+pub mod runtime;
+pub mod simulator;
+pub mod testkit;
+pub mod util;
+
+/// Architecture parameters of one Hyperdrive chip (§III, §VI).
+///
+/// Defaults are the taped-out configuration: `M×N = 7×7` spatial tiles,
+/// `C = 16` output-channel parallelism, 6.4 Mbit of FM memory, a weight
+/// buffer of 512 × 3×3 × C binary weights, and one FP16 multiplier per
+/// spatial tile (49 total) shared by the C depth-wise Tile-PUs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChipConfig {
+    /// M — vertical spatial tile parallelism.
+    pub m: usize,
+    /// N — horizontal spatial tile parallelism.
+    pub n: usize,
+    /// C — output-channel parallelism of each spatial tile.
+    pub c: usize,
+    /// Feature-map memory capacity in 16-bit words (6.4 Mbit = 400 kword).
+    pub fmm_words: usize,
+    /// Weight buffer capacity in binary weights (512 kernels × 3·3 × C).
+    pub wbuf_bits: usize,
+    /// FM word width in bits (FP16 → 16).
+    pub fm_bits: usize,
+}
+
+impl Default for ChipConfig {
+    fn default() -> Self {
+        ChipConfig {
+            m: 7,
+            n: 7,
+            c: 16,
+            fmm_words: 400 * 1024,
+            wbuf_bits: 512 * 9 * 16,
+            fm_bits: 16,
+        }
+    }
+}
+
+impl ChipConfig {
+    /// Peak MACs per cycle (one per Tile-PU): `C·M·N`.
+    pub fn macs_per_cycle(&self) -> usize {
+        self.c * self.m * self.n
+    }
+
+    /// Peak Op/cycle (1 MAC = 2 Op — the paper's counting convention).
+    pub fn ops_per_cycle(&self) -> usize {
+        2 * self.macs_per_cycle()
+    }
+
+    /// Post-processing throughput in Op/cycle: one FP16 multiplier per
+    /// spatial tile (`M·N` = 49 in the taped-out chip).
+    pub fn post_ops_per_cycle(&self) -> usize {
+        self.m * self.n
+    }
+
+    /// FMM capacity in bits.
+    pub fn fmm_bits(&self) -> usize {
+        self.fmm_words * self.fm_bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn taped_out_chip_peak_throughput() {
+        let c = ChipConfig::default();
+        assert_eq!(c.macs_per_cycle(), 784);
+        assert_eq!(c.ops_per_cycle(), 1568); // Tbl III baseline row
+        assert_eq!(c.post_ops_per_cycle(), 49);
+        assert_eq!(c.fmm_bits(), 6_553_600); // 6.4 Mbit
+    }
+}

@@ -1,0 +1,241 @@
+//! `hyperdrive` — CLI for the Hyperdrive reproduction.
+//!
+//! Subcommands:
+//!   report <table1|table2|table3|table4|table5|table6|fig8|fig9|fig10|fig11|all>
+//!   run-e2e   [--artifacts DIR] [--batch N]      end-to-end PJRT inference
+//!   simulate  --net NAME [--height H] [--width W] [--mesh RxC]
+//!   mesh      --net NAME [--height H] [--width W]
+//!   help
+//!
+//! (Hand-rolled argument parsing: the offline vendored crate set has no
+//! `clap`; see DESIGN.md §Substitutions.)
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use hyperdrive::coordinator::schedule::{schedule_network_mesh, DepthwisePolicy};
+use hyperdrive::coordinator::tiling::{self, plan_mesh};
+use hyperdrive::coordinator::wcl;
+use hyperdrive::energy::model::energy_per_image;
+use hyperdrive::network::{zoo, Network};
+use hyperdrive::report;
+use hyperdrive::runtime::InferenceEngine;
+use hyperdrive::util::fmt_bits;
+use hyperdrive::ChipConfig;
+
+fn usage() -> &'static str {
+    "usage: hyperdrive <command> [options]\n\
+     commands:\n\
+       report <table1..table6|fig8..fig11|border|all>\n\
+       run-e2e [--artifacts DIR] [--batch N]\n\
+       simulate --net <resnet18|resnet34|resnet50|resnet152|shufflenet|yolov3|hypernet20>\n\
+                [--height H] [--width W] [--mesh RxC] [--vdd V] [--vbb V]\n\
+       mesh --net NAME [--height H] [--width W]\n\
+       help"
+}
+
+/// Parse `--key value` options into a map.
+fn parse_opts(args: &[String]) -> Result<HashMap<String, String>, String> {
+    let mut m = HashMap::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        let key = a
+            .strip_prefix("--")
+            .ok_or_else(|| format!("expected --option, got `{a}`"))?;
+        let val = it.next().ok_or_else(|| format!("--{key} needs a value"))?;
+        m.insert(key.to_string(), val.clone());
+    }
+    Ok(m)
+}
+
+fn build_net(name: &str, h: usize, w: usize) -> Result<Network, String> {
+    Ok(match name {
+        "resnet18" => zoo::resnet18(h, w),
+        "resnet34" => zoo::resnet34(h, w),
+        "resnet50" => zoo::resnet50(h, w),
+        "resnet152" => zoo::resnet152(h, w),
+        "shufflenet" => zoo::shufflenet(h, w),
+        "yolov3" => zoo::yolov3(h, w),
+        "hypernet20" => zoo::hypernet20(),
+        other => return Err(format!("unknown network `{other}`")),
+    })
+}
+
+fn cmd_report(which: &str, cfg: &ChipConfig) -> Result<String, String> {
+    Ok(match which {
+        "table1" => report::table1(),
+        "table2" => report::table2(),
+        "table3" => report::table3(cfg),
+        "table4" => report::table4(cfg),
+        "table5" => report::table5(cfg),
+        "table6" => report::table6(cfg),
+        "fig8" => report::fig8(cfg),
+        "fig9" => report::fig9(cfg),
+        "fig10" => report::fig10(cfg),
+        "fig11" => report::fig11(cfg),
+        "border" => report::border_memories(cfg),
+        "ablations" => report::ablations(cfg),
+        "all" => report::all(cfg),
+        other => return Err(format!("unknown report `{other}`")),
+    })
+}
+
+fn cmd_run_e2e(opts: &HashMap<String, String>) -> Result<String, String> {
+    let dir = opts
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".to_string());
+    let batch: usize = opts
+        .get("batch")
+        .map(|v| v.parse().map_err(|_| "bad --batch"))
+        .transpose()?
+        .unwrap_or(8);
+    let engine = InferenceEngine::load(dir).map_err(|e| format!("{e:#}"))?;
+    let input = engine
+        .manifest
+        .golden("e2e_input.bin")
+        .map_err(|e| format!("{e:#}"))?;
+    let golden = engine
+        .manifest
+        .golden("e2e_golden.bin")
+        .map_err(|e| format!("{e:#}"))?;
+    let inputs: Vec<Vec<f32>> = (0..batch).map(|_| input.clone()).collect();
+    let (outs, stats) = engine.serve(&inputs).map_err(|e| format!("{e:#}"))?;
+    let max_err = outs[0]
+        .iter()
+        .zip(&golden)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    Ok(format!(
+        "HyperNet-20 e2e on PJRT ({} artifacts, platform {}):\n\
+         batch {} served in {:.2} ms total — mean {:.2} ms, p50 {:.2} ms, p99 {:.2} ms\n\
+         throughput {:.2} MOp/s (Rust+PJRT CPU path)\n\
+         logits[0..4] = {:?}\n\
+         max |logits − JAX golden| = {:.3e} {}",
+        engine.runtime.loaded(),
+        engine.runtime.platform(),
+        stats.requests,
+        stats.total_s * 1e3,
+        stats.mean_ms,
+        stats.p50_ms,
+        stats.p99_ms,
+        stats.ops_per_s / 1e6,
+        &outs[0][..4.min(outs[0].len())],
+        max_err,
+        if max_err < 1e-3 { "— MATCH" } else { "— MISMATCH" }
+    ))
+}
+
+fn cmd_simulate(opts: &HashMap<String, String>, cfg: &ChipConfig) -> Result<String, String> {
+    let name = opts.get("net").ok_or("--net required")?;
+    let h: usize = opts.get("height").map_or(Ok(224), |v| v.parse()).map_err(|_| "bad --height")?;
+    let w: usize = opts.get("width").map_or(Ok(h), |v| v.parse()).map_err(|_| "bad --width")?;
+    let vdd: f64 = opts.get("vdd").map_or(Ok(0.5), |v| v.parse()).map_err(|_| "bad --vdd")?;
+    let vbb: f64 = opts.get("vbb").map_or(Ok(1.5), |v| v.parse()).map_err(|_| "bad --vbb")?;
+    let net = build_net(name, h, w)?;
+    let plan = if let Some(mesh) = opts.get("mesh") {
+        let (r, c) = mesh
+            .split_once('x')
+            .ok_or("expected --mesh RxC")?;
+        tiling::plan_mesh_exact(
+            &net,
+            cfg,
+            r.parse().map_err(|_| "bad mesh rows")?,
+            c.parse().map_err(|_| "bad mesh cols")?,
+        )
+    } else {
+        plan_mesh(&net, cfg)
+    };
+    let sched = schedule_network_mesh(&net, cfg, DepthwisePolicy::FullRate, plan.rows, plan.cols);
+    let rep = energy_per_image(&net, cfg, &plan, vdd, vbb, DepthwisePolicy::FullRate);
+    let a = wcl::analyze(&net);
+    Ok(format!(
+        "{} @ {}x{} on {}x{} chips ({} total)\n\
+         ops {} | per-chip cycles {} | mesh utilization {:.1}%\n\
+         WCL {} words ({}); per-chip WCL {} words\n\
+         @({} V, {} V FBB): {:.1} fps, {:.0} GOp/s\n\
+         core {:.2} mJ/im + I/O {:.2} mJ/im (weights {} + input {} + border {})\n\
+         = {:.2} mJ/im → system efficiency {:.2} TOp/s/W",
+        net.name,
+        w,
+        h,
+        plan.rows,
+        plan.cols,
+        plan.chips(),
+        fmt_bits(sched.total_ops()),
+        sched.total_cycles(),
+        100.0 * sched.utilization(cfg) / plan.chips() as f64,
+        a.wcl_words,
+        fmt_bits(a.wcl_bits(cfg.fm_bits)),
+        plan.per_chip_wcl_words,
+        vdd,
+        vbb,
+        rep.frame_rate_hz,
+        rep.throughput_ops_s / 1e9,
+        rep.core_j * 1e3,
+        rep.io_j * 1e3,
+        fmt_bits(rep.io.weights),
+        fmt_bits(rep.io.input_fm),
+        fmt_bits(rep.io.border),
+        rep.total_j() * 1e3,
+        rep.system_efficiency_ops_w() / 1e12,
+    ))
+}
+
+fn cmd_mesh(opts: &HashMap<String, String>, cfg: &ChipConfig) -> Result<String, String> {
+    let name = opts.get("net").ok_or("--net required")?;
+    let h: usize = opts.get("height").map_or(Ok(1024), |v| v.parse()).map_err(|_| "bad --height")?;
+    let w: usize = opts.get("width").map_or(Ok(2048), |v| v.parse()).map_err(|_| "bad --width")?;
+    let net = build_net(name, h, w)?;
+    let plan = plan_mesh(&net, cfg);
+    let border = tiling::border_exchange_bits(&net, &plan, cfg.fm_bits);
+    let mut types = String::new();
+    for r in 0..plan.rows.min(4) {
+        for c in 0..plan.cols.min(8) {
+            types.push_str(&format!("{:?} ", tiling::chip_type(r, c, &plan)));
+        }
+        types.push('\n');
+    }
+    Ok(format!(
+        "{} @ {}x{}: mesh {}x{} = {} chips\n\
+         per-chip WCL {} words (FMM capacity {})\n\
+         border exchange per inference: {}\n\
+         chip types (top-left corner of the mesh):\n{}",
+        net.name,
+        w,
+        h,
+        plan.rows,
+        plan.cols,
+        plan.chips(),
+        plan.per_chip_wcl_words,
+        cfg.fmm_words,
+        fmt_bits(border),
+        types
+    ))
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cfg = ChipConfig::default();
+    let result = match args.first().map(String::as_str) {
+        Some("report") => match args.get(1) {
+            Some(which) => cmd_report(which, &cfg),
+            None => Err("report needs an argument".to_string()),
+        },
+        Some("run-e2e") => parse_opts(&args[1..]).and_then(|o| cmd_run_e2e(&o)),
+        Some("simulate") => parse_opts(&args[1..]).and_then(|o| cmd_simulate(&o, &cfg)),
+        Some("mesh") => parse_opts(&args[1..]).and_then(|o| cmd_mesh(&o, &cfg)),
+        Some("help") | None => Ok(usage().to_string()),
+        Some(other) => Err(format!("unknown command `{other}`\n{}", usage())),
+    };
+    match result {
+        Ok(text) => {
+            println!("{text}");
+            ExitCode::SUCCESS
+        }
+        Err(msg) => {
+            eprintln!("error: {msg}");
+            ExitCode::FAILURE
+        }
+    }
+}

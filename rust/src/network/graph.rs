@@ -1,0 +1,344 @@
+//! Network graph: an ordered list of conv steps with explicit tensor
+//! references, mirroring the step list the AOT manifest describes for the
+//! Rust coordinator. Off-chip stages (the 7×7 first layer and the FC
+//! head the paper executes on the host, §VI-B) are carried as metadata so
+//! whole-network tables (Tbl II) can include them while the chip mapping
+//! skips them.
+
+use anyhow::{bail, Result};
+
+use super::layer::ConvLayer;
+
+/// Reference to a tensor in the network: the network input or the output
+/// of an earlier step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorRef {
+    /// The network's on-chip input FM.
+    Input,
+    /// Output of step `i`.
+    Step(usize),
+}
+
+/// One scheduled layer execution.
+#[derive(Debug, Clone)]
+pub struct Step {
+    pub layer: ConvLayer,
+    /// Main input.
+    pub src: TensorRef,
+    /// Residual bypass input (present iff `layer.has_bypass`).
+    pub bypass: Option<TensorRef>,
+    /// Second input concatenated channel-wise with `src` (YOLOv3's
+    /// feature-pyramid merges); `layer.n_in` = channels(src) +
+    /// channels(concat_extra). Concatenation itself is free on the chip —
+    /// the two tensors simply occupy adjacent FMM segments.
+    pub concat_extra: Option<TensorRef>,
+    /// The output of this step is 2× nearest-neighbour upsampled before
+    /// storage (YOLOv3 FPN laterals). Replication is free on the chip
+    /// (DDU addressing) but the stored FM is 4× larger.
+    pub upsample2x: bool,
+}
+
+/// An off-chip stage (first 7×7 conv / FC head): only its op and weight
+/// counts matter to the tables.
+#[derive(Debug, Clone, Default)]
+pub struct OffChipStage {
+    pub name: String,
+    pub ops: u64,
+    pub weight_bits: u64,
+    /// FM words streamed to/from the host for this stage (e.g. the raw
+    /// RGB image for the first conv).
+    pub io_words: u64,
+}
+
+/// A full network: on-chip step list plus off-chip pre/post stages.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    /// On-chip input FM shape (channels, height, width).
+    pub in_ch: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub steps: Vec<Step>,
+    pub pre: Option<OffChipStage>,
+    pub post: Option<OffChipStage>,
+}
+
+impl Network {
+    pub fn new(name: impl Into<String>, in_ch: usize, in_h: usize, in_w: usize) -> Self {
+        Network {
+            name: name.into(),
+            in_ch,
+            in_h,
+            in_w,
+            steps: Vec::new(),
+            pre: None,
+            post: None,
+        }
+    }
+
+    /// Shape (c, h, w) of a tensor reference (after any 2× upsampling).
+    pub fn shape_of(&self, r: TensorRef) -> (usize, usize, usize) {
+        match r {
+            TensorRef::Input => (self.in_ch, self.in_h, self.in_w),
+            TensorRef::Step(i) => {
+                let s = &self.steps[i];
+                let l = &s.layer;
+                let f = if s.upsample2x { 2 } else { 1 };
+                (l.n_out, f * l.h_out(), f * l.w_out())
+            }
+        }
+    }
+
+    /// Volume in words of a tensor reference.
+    pub fn words_of(&self, r: TensorRef) -> u64 {
+        let (c, h, w) = self.shape_of(r);
+        (c * h * w) as u64
+    }
+
+    /// Append a step; validates shape compatibility eagerly.
+    pub fn push(&mut self, layer: ConvLayer, src: TensorRef, bypass: Option<TensorRef>) -> usize {
+        let (c, h, w) = self.shape_of(src);
+        assert_eq!(
+            (c, h, w),
+            (layer.n_in, layer.h, layer.w),
+            "step `{}`: src shape mismatch",
+            layer.name
+        );
+        self.push_validated(layer, src, bypass, None)
+    }
+
+    /// Append a step whose input is `src` concatenated channel-wise with
+    /// `extra` (if any). Spatial dims must match; `layer.n_in` must equal
+    /// the summed channel count.
+    pub fn push_concat(
+        &mut self,
+        layer: ConvLayer,
+        src: TensorRef,
+        extra: Option<TensorRef>,
+    ) -> usize {
+        let Some(extra) = extra else {
+            return self.push(layer, src, None);
+        };
+        let (c0, h0, w0) = self.shape_of(src);
+        let (c1, h1, w1) = self.shape_of(extra);
+        assert_eq!((h0, w0), (h1, w1), "step `{}`: concat spatial mismatch", layer.name);
+        assert_eq!(
+            (c0 + c1, h0, w0),
+            (layer.n_in, layer.h, layer.w),
+            "step `{}`: concat shape mismatch",
+            layer.name
+        );
+        self.push_validated(layer, src, None, Some(extra))
+    }
+
+    fn push_validated(
+        &mut self,
+        layer: ConvLayer,
+        src: TensorRef,
+        bypass: Option<TensorRef>,
+        concat_extra: Option<TensorRef>,
+    ) -> usize {
+        if layer.has_bypass {
+            let b = bypass.expect("has_bypass layer without bypass ref");
+            let bs = self.shape_of(b);
+            assert_eq!(
+                bs,
+                (layer.n_out, layer.h_out(), layer.w_out()),
+                "step `{}`: bypass shape mismatch",
+                layer.name
+            );
+        } else {
+            assert!(bypass.is_none(), "bypass ref on non-bypass layer");
+        }
+        self.steps.push(Step {
+            layer,
+            src,
+            bypass,
+            concat_extra,
+            upsample2x: false,
+        });
+        self.steps.len() - 1
+    }
+
+    /// Mark the last-pushed step's output as 2× nearest-upsampled.
+    pub fn upsample_last(&mut self) -> usize {
+        let i = self.steps.len() - 1;
+        self.steps[i].upsample2x = true;
+        i
+    }
+
+    /// Validate the whole graph (reference ordering + shapes).
+    pub fn validate(&self) -> Result<()> {
+        for (i, s) in self.steps.iter().enumerate() {
+            for r in std::iter::once(s.src).chain(s.bypass).chain(s.concat_extra) {
+                if let TensorRef::Step(j) = r {
+                    if j >= i {
+                        bail!("step {i} references future step {j}");
+                    }
+                }
+            }
+            let (c, h, w) = self.shape_of(s.src);
+            let c_extra = s.concat_extra.map_or(0, |e| {
+                let (ce, he, we) = self.shape_of(e);
+                debug_assert_eq!((he, we), (h, w));
+                ce
+            });
+            if (c + c_extra, h, w) != (s.layer.n_in, s.layer.h, s.layer.w) {
+                bail!("step {i} ({}) shape mismatch", s.layer.name);
+            }
+            if s.layer.has_bypass != s.bypass.is_some() {
+                bail!("step {i} bypass flag/ref mismatch");
+            }
+        }
+        Ok(())
+    }
+
+    /// Total on-chip convolution ops.
+    pub fn conv_ops(&self) -> u64 {
+        self.steps.iter().map(|s| s.layer.conv_ops()).sum()
+    }
+
+    /// Total on-chip batch-norm ops.
+    pub fn bnorm_ops(&self) -> u64 {
+        self.steps.iter().map(|s| s.layer.bnorm_ops()).sum()
+    }
+
+    /// Total on-chip bias ops.
+    pub fn bias_ops(&self) -> u64 {
+        self.steps.iter().map(|s| s.layer.bias_ops()).sum()
+    }
+
+    /// Total on-chip residual bypass ops.
+    pub fn bypass_ops(&self) -> u64 {
+        self.steps.iter().map(|s| s.layer.bypass_ops()).sum()
+    }
+
+    /// All on-chip ops.
+    pub fn total_ops(&self) -> u64 {
+        self.conv_ops() + self.bnorm_ops() + self.bias_ops() + self.bypass_ops()
+    }
+
+    /// Whole-network ops including off-chip stages (Tbl II / §VI-B "7.3 GOp").
+    pub fn total_ops_with_offchip(&self) -> u64 {
+        self.total_ops()
+            + self.pre.as_ref().map_or(0, |s| s.ops)
+            + self.post.as_ref().map_or(0, |s| s.ops)
+    }
+
+    /// Total binary-weight bits streamed to the chip.
+    pub fn weight_bits(&self) -> u64 {
+        self.steps.iter().map(|s| s.layer.weight_bits()).sum()
+    }
+
+    /// Whole-network weight bits (off-chip stages use full precision in
+    /// the paper, but Tbl II counts binary weights of conv layers only).
+    pub fn weight_bits_with_offchip(&self) -> u64 {
+        self.weight_bits()
+            + self.pre.as_ref().map_or(0, |s| s.weight_bits)
+            + self.post.as_ref().map_or(0, |s| s.weight_bits)
+    }
+
+    /// Sum of all FM volumes (input + every step output), in words —
+    /// the "all FMs" column of Tbl II.
+    pub fn all_fm_words(&self) -> u64 {
+        let input = (self.in_ch * self.in_h * self.in_w) as u64;
+        input + self.steps.iter().map(|s| s.layer.out_words()).sum::<u64>()
+    }
+
+    /// Largest single layer input+output footprint, in words (the naive
+    /// per-layer ping-pong requirement before bypass-aware planning).
+    pub fn max_layer_words(&self) -> u64 {
+        self.steps
+            .iter()
+            .map(|s| s.layer.in_words() + s.layer.out_words())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Output shape of the last step.
+    pub fn out_shape(&self) -> (usize, usize, usize) {
+        self.shape_of(TensorRef::Step(self.steps.len() - 1))
+    }
+
+    /// Step index by layer name (names are unique in zoo networks).
+    pub fn step_by_name(&self, name: &str) -> Option<usize> {
+        self.steps.iter().position(|s| s.layer.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Network {
+        let mut n = Network::new("tiny", 16, 8, 8);
+        let a = n.push(
+            ConvLayer::new("a", 16, 16, 8, 8, 3, 1),
+            TensorRef::Input,
+            None,
+        );
+        n.push(
+            ConvLayer::new("b", 16, 16, 8, 8, 3, 1).with_bypass(true),
+            TensorRef::Step(a),
+            Some(TensorRef::Input),
+        );
+        n
+    }
+
+    #[test]
+    fn shapes_chain_and_validate() {
+        let n = tiny();
+        n.validate().unwrap();
+        assert_eq!(n.out_shape(), (16, 8, 8));
+        assert_eq!(n.words_of(TensorRef::Input), 16 * 64);
+    }
+
+    #[test]
+    fn op_totals_are_sums() {
+        let n = tiny();
+        assert_eq!(n.conv_ops(), 2 * 2 * 16 * 16 * 9 * 64);
+        assert_eq!(n.bypass_ops(), 16 * 64);
+        assert_eq!(
+            n.total_ops(),
+            n.conv_ops() + n.bnorm_ops() + n.bias_ops() + n.bypass_ops()
+        );
+    }
+
+    #[test]
+    fn all_fm_accounting() {
+        let n = tiny();
+        assert_eq!(n.all_fm_words(), 3 * 16 * 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "src shape mismatch")]
+    fn mismatched_shapes_rejected() {
+        let mut n = Network::new("bad", 16, 8, 8);
+        n.push(
+            ConvLayer::new("a", 32, 16, 8, 8, 3, 1),
+            TensorRef::Input,
+            None,
+        );
+    }
+
+    #[test]
+    fn forward_reference_rejected() {
+        let mut n = tiny();
+        // Manually corrupt: step 0 references step 1.
+        n.steps[0].src = TensorRef::Step(1);
+        assert!(n.validate().is_err());
+    }
+
+    #[test]
+    fn offchip_stages_add_to_totals() {
+        let mut n = tiny();
+        n.pre = Some(OffChipStage {
+            name: "conv7x7".into(),
+            ops: 1000,
+            weight_bits: 500,
+            io_words: 99,
+        });
+        assert_eq!(n.total_ops_with_offchip(), n.total_ops() + 1000);
+        assert_eq!(n.weight_bits_with_offchip(), n.weight_bits() + 500);
+    }
+}

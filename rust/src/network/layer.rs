@@ -1,0 +1,235 @@
+//! Convolution layer description — the only compute primitive the chip
+//! executes (§IV-C: 1×1 and 3×3 kernels, stride 1 or 2, optional groups
+//! for ShuffleNet-style topologies, `groups == n_in == n_out` for
+//! depth-wise convolutions).
+
+/// One convolutional layer (batch-norm scale, bias, optional residual
+/// bypass and ReLU are fused into the layer, as in the chip's datapath).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvLayer {
+    pub name: String,
+    /// Input channels.
+    pub n_in: usize,
+    /// Output channels.
+    pub n_out: usize,
+    /// Input spatial height/width.
+    pub h: usize,
+    pub w: usize,
+    /// Kernel size (1 or 3 on the taped-out chip; 7 only off-chip).
+    pub k: usize,
+    /// Stride (1 or 2).
+    pub stride: usize,
+    /// Channel groups (1 = dense, `n_in` = depth-wise).
+    pub groups: usize,
+    /// Whether a residual bypass is accumulated into this layer's output.
+    pub has_bypass: bool,
+    /// Fused ReLU activation.
+    pub relu: bool,
+    /// Fused batch-norm scale (all real layers have it; the 1×1 bypass
+    /// projections do not apply a separate activation scale in Fig. 4).
+    pub bnorm: bool,
+    /// The residual accumulation needs a separate read-add pass (§VI-B:
+    /// at strided junctions the 49-word memory bandwidth limits bypass to
+    /// one output FM at a time). Set by the zoo builders on
+    /// strided-projection blocks; identity bypasses fuse for free.
+    pub bypass_separate: bool,
+}
+
+impl ConvLayer {
+    /// Dense conv constructor with the common defaults.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: impl Into<String>,
+        n_in: usize,
+        n_out: usize,
+        h: usize,
+        w: usize,
+        k: usize,
+        stride: usize,
+    ) -> Self {
+        ConvLayer {
+            name: name.into(),
+            n_in,
+            n_out,
+            h,
+            w,
+            k,
+            stride,
+            groups: 1,
+            has_bypass: false,
+            relu: true,
+            bnorm: true,
+            bypass_separate: false,
+        }
+    }
+
+    pub fn with_groups(mut self, groups: usize) -> Self {
+        assert_eq!(self.n_in % groups, 0, "groups must divide n_in");
+        assert_eq!(self.n_out % groups, 0, "groups must divide n_out");
+        self.groups = groups;
+        self
+    }
+
+    pub fn with_bypass(mut self, has: bool) -> Self {
+        self.has_bypass = has;
+        self
+    }
+
+    pub fn with_bypass_separate(mut self, separate: bool) -> Self {
+        self.bypass_separate = separate;
+        self
+    }
+
+    pub fn with_relu(mut self, relu: bool) -> Self {
+        self.relu = relu;
+        self
+    }
+
+    pub fn with_bnorm(mut self, bnorm: bool) -> Self {
+        self.bnorm = bnorm;
+        self
+    }
+
+    /// Output spatial height (same-padding, as everywhere in the paper).
+    pub fn h_out(&self) -> usize {
+        self.h.div_ceil(self.stride)
+    }
+
+    /// Output spatial width.
+    pub fn w_out(&self) -> usize {
+        self.w.div_ceil(self.stride)
+    }
+
+    /// Output pixels.
+    pub fn out_pixels(&self) -> u64 {
+        (self.h_out() * self.w_out()) as u64
+    }
+
+    /// Input FM volume in words.
+    pub fn in_words(&self) -> u64 {
+        (self.n_in * self.h * self.w) as u64
+    }
+
+    /// Output FM volume in words.
+    pub fn out_words(&self) -> u64 {
+        self.n_out as u64 * self.out_pixels()
+    }
+
+    /// Number of binary weights (= number of MAC kernels × taps).
+    pub fn weight_bits(&self) -> u64 {
+        (self.n_out * (self.n_in / self.groups) * self.k * self.k) as u64
+    }
+
+    /// Multiply-accumulate count.
+    pub fn macs(&self) -> u64 {
+        self.weight_bits() * self.out_pixels()
+    }
+
+    /// Convolution operations (paper convention: 1 MAC = 2 Op).
+    pub fn conv_ops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    /// Batch-norm scale operations (one multiply per output pixel).
+    pub fn bnorm_ops(&self) -> u64 {
+        if self.bnorm {
+            self.out_words()
+        } else {
+            0
+        }
+    }
+
+    /// Bias-add operations (one add per output pixel).
+    pub fn bias_ops(&self) -> u64 {
+        self.out_words()
+    }
+
+    /// Residual bypass accumulation operations.
+    pub fn bypass_ops(&self) -> u64 {
+        if self.has_bypass {
+            self.out_words()
+        } else {
+            0
+        }
+    }
+
+    /// All operations attributable to this layer.
+    pub fn total_ops(&self) -> u64 {
+        self.conv_ops() + self.bnorm_ops() + self.bias_ops() + self.bypass_ops()
+    }
+
+    /// True if the layer is depth-wise (`groups == n_in`, 1 input channel
+    /// per group).
+    pub fn is_depthwise(&self) -> bool {
+        self.groups == self.n_in && self.n_in == self.n_out
+    }
+
+    /// Whether the taped-out chip can execute this layer (§IV-C).
+    pub fn chip_supported(&self) -> bool {
+        matches!(self.k, 1 | 3) && matches!(self.stride, 1 | 2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn l() -> ConvLayer {
+        ConvLayer::new("c", 64, 64, 56, 56, 3, 1)
+    }
+
+    #[test]
+    fn shape_and_volume_accounting() {
+        let c = l();
+        assert_eq!(c.h_out(), 56);
+        assert_eq!(c.in_words(), 64 * 56 * 56);
+        assert_eq!(c.out_words(), 64 * 56 * 56);
+        assert_eq!(c.weight_bits(), 64 * 64 * 9);
+        assert_eq!(c.macs(), 64 * 64 * 9 * 56 * 56);
+        assert_eq!(c.conv_ops(), 2 * c.macs());
+    }
+
+    #[test]
+    fn strided_output_shapes() {
+        let c = ConvLayer::new("s", 64, 128, 56, 56, 3, 2);
+        assert_eq!((c.h_out(), c.w_out()), (28, 28));
+        // Odd sizes round up (same padding), like YOLOv3's 5→3 stages.
+        let o = ConvLayer::new("odd", 16, 16, 5, 5, 3, 2);
+        assert_eq!((o.h_out(), o.w_out()), (3, 3));
+    }
+
+    #[test]
+    fn grouped_and_depthwise_weights() {
+        let g = ConvLayer::new("g", 240, 240, 28, 28, 1, 1).with_groups(8);
+        assert_eq!(g.weight_bits(), 240 * 30);
+        let dw = ConvLayer::new("dw", 240, 240, 28, 28, 3, 1).with_groups(240);
+        assert!(dw.is_depthwise());
+        assert_eq!(dw.weight_bits(), 240 * 9);
+        assert_eq!(dw.macs(), 240 * 9 * 28 * 28);
+    }
+
+    #[test]
+    fn post_op_accounting_follows_flags() {
+        let c = l().with_bypass(true);
+        assert_eq!(c.bypass_ops(), c.out_words());
+        assert_eq!(c.bnorm_ops(), c.out_words());
+        let nb = l().with_bnorm(false);
+        assert_eq!(nb.bnorm_ops(), 0);
+        assert_eq!(
+            c.total_ops(),
+            c.conv_ops() + 3 * c.out_words()
+        );
+    }
+
+    #[test]
+    fn chip_support_rules() {
+        assert!(l().chip_supported());
+        assert!(!ConvLayer::new("7x7", 3, 64, 224, 224, 7, 2).chip_supported());
+    }
+
+    #[test]
+    #[should_panic(expected = "groups must divide")]
+    fn invalid_groups_panic() {
+        let _ = ConvLayer::new("bad", 30, 30, 8, 8, 1, 1).with_groups(4);
+    }
+}

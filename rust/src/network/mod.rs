@@ -1,0 +1,15 @@
+//! CNN graph IR and model zoo.
+//!
+//! The paper evaluates Hyperdrive on ResNet-18/34/50/152, ShuffleNet and
+//! YOLOv3 at several resolutions; [`zoo`] builds all of them (plus the
+//! small end-to-end validation network) on top of the [`graph`] IR, which
+//! is the single source of truth for op counts, FM volumes and layer
+//! shapes used by the scheduler, the simulator, the energy model and the
+//! paper-table generators.
+
+pub mod graph;
+pub mod layer;
+pub mod zoo;
+
+pub use graph::{Network, OffChipStage, Step, TensorRef};
+pub use layer::ConvLayer;

@@ -1,0 +1,584 @@
+//! Model zoo: every network the paper evaluates, built on the graph IR.
+//!
+//! * ResNet-18/34 (basic blocks, Fig. 4a) and ResNet-50/152 (bottleneck
+//!   blocks, Fig. 4b) at arbitrary input resolution — used for Tbl II,
+//!   III, V, VI and Fig 8/9/11;
+//! * ShuffleNet v1 (g = 8, 1.0×) — Tbl V/VI;
+//! * YOLOv3 (Darknet-53 backbone + 3-scale heads) — Tbl V/VI;
+//! * HyperNet-20 — the end-to-end validation network, kept structurally
+//!   identical to `python/compile/model.py::hypernet20_steps` (checked by
+//!   an integration test against the AOT manifest).
+//!
+//! Residual shortcuts use 1×1 projection convolutions at stage
+//! transitions (the paper analyses exactly this case as "more memory
+//! critical", §IV-B). The first 7×7 convolution and the FC head of the
+//! ResNets run off-chip (§VI-B) and are carried as [`OffChipStage`]s.
+
+use super::graph::{Network, OffChipStage, TensorRef};
+use super::layer::ConvLayer;
+
+/// ResNet with basic blocks (Fig. 4a). `blocks` per stage, channels
+/// 64/128/256/512. `(h, w)` is the *image* resolution; the on-chip input
+/// FM is the post-conv1/maxpool `64 × h/4 × w/4`.
+pub fn resnet_basic(name: &str, blocks: [usize; 4], h: usize, w: usize) -> Network {
+    let mut net = Network::new(name, 64, h / 4, w / 4);
+    net.pre = Some(resnet_pre(h, w));
+    let mut prev = TensorRef::Input;
+    let mut ch = 64;
+    let (mut fh, mut fw) = (h / 4, w / 4);
+    for (stage, &nblocks) in blocks.iter().enumerate() {
+        let out_ch = 64 << stage;
+        for b in 0..nblocks {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            let base = format!("s{}b{b}", stage + 2);
+            let c1 = net.push(
+                ConvLayer::new(format!("{base}c1"), ch, out_ch, fh, fw, 3, stride),
+                prev,
+                None,
+            );
+            // Shortcut: identity, or 1×1 strided projection at transitions.
+            let shortcut = if stride == 1 && ch == out_ch {
+                prev
+            } else {
+                TensorRef::Step(net.push(
+                    ConvLayer::new(format!("{base}sk"), ch, out_ch, fh, fw, 1, stride)
+                        .with_relu(false),
+                    prev,
+                    None,
+                ))
+            };
+            let projected = stride != 1 || ch != out_ch;
+            fh = fh.div_ceil(stride);
+            fw = fw.div_ceil(stride);
+            ch = out_ch;
+            prev = TensorRef::Step(net.push(
+                ConvLayer::new(format!("{base}c2"), ch, ch, fh, fw, 3, 1)
+                    .with_bypass(true)
+                    .with_bypass_separate(projected),
+                TensorRef::Step(c1),
+                Some(shortcut),
+            ));
+        }
+    }
+    net.post = Some(resnet_post(ch));
+    net
+}
+
+/// ResNet with bottleneck blocks (Fig. 4b). Stage output channels
+/// 256/512/1024/2048, mid channels out/4, stride in the first 1×1 of the
+/// transition block (ResNet v1, the variant the paper's WCL analysis
+/// assumes).
+pub fn resnet_bottleneck(name: &str, blocks: [usize; 4], h: usize, w: usize) -> Network {
+    let mut net = Network::new(name, 64, h / 4, w / 4);
+    net.pre = Some(resnet_pre(h, w));
+    let mut prev = TensorRef::Input;
+    let mut ch = 64;
+    let (mut fh, mut fw) = (h / 4, w / 4);
+    for (stage, &nblocks) in blocks.iter().enumerate() {
+        let out_ch = 256 << stage;
+        let mid = out_ch / 4;
+        for b in 0..nblocks {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            let base = format!("s{}b{b}", stage + 2);
+            let a = net.push(
+                ConvLayer::new(format!("{base}a"), ch, mid, fh, fw, 1, stride),
+                prev,
+                None,
+            );
+            // Projection shortcut whenever shape changes (every stage's
+            // first block, including conv2_1's channel expansion).
+            let projected = stride != 1 || ch != out_ch;
+            let shortcut = if !projected {
+                prev
+            } else {
+                TensorRef::Step(net.push(
+                    ConvLayer::new(format!("{base}sk"), ch, out_ch, fh, fw, 1, stride)
+                        .with_relu(false),
+                    prev,
+                    None,
+                ))
+            };
+            fh = fh.div_ceil(stride);
+            fw = fw.div_ceil(stride);
+            ch = out_ch;
+            let bmid = net.push(
+                ConvLayer::new(format!("{base}b"), mid, mid, fh, fw, 3, 1),
+                TensorRef::Step(a),
+                None,
+            );
+            prev = TensorRef::Step(net.push(
+                ConvLayer::new(format!("{base}c"), mid, out_ch, fh, fw, 1, 1)
+                    .with_bypass(true)
+                    .with_bypass_separate(projected),
+                TensorRef::Step(bmid),
+                Some(shortcut),
+            ));
+        }
+    }
+    net.post = Some(resnet_post(ch));
+    net
+}
+
+fn resnet_pre(h: usize, w: usize) -> OffChipStage {
+    // 7×7/s2 conv 3→64 + 3×3/s2 maxpool, computed on the host (§VI-B).
+    let conv_ops = 2 * (3 * 64 * 49) as u64 * ((h / 2) * (w / 2)) as u64;
+    OffChipStage {
+        name: "conv1_7x7".into(),
+        ops: conv_ops,
+        weight_bits: (3 * 64 * 49) as u64,
+        io_words: (3 * h * w) as u64, // raw image streamed to the host stage
+    }
+}
+
+fn resnet_post(ch: usize) -> OffChipStage {
+    OffChipStage {
+        name: "fc".into(),
+        ops: 2 * (ch * 1000) as u64,
+        weight_bits: 0, // FC stays full-precision off-chip; not streamed
+        io_words: ch as u64,
+    }
+}
+
+/// ResNet-18 (basic, [2,2,2,2]).
+pub fn resnet18(h: usize, w: usize) -> Network {
+    resnet_basic("ResNet-18", [2, 2, 2, 2], h, w)
+}
+
+/// ResNet-34 (basic, [3,4,6,3]) — the paper's main benchmark.
+pub fn resnet34(h: usize, w: usize) -> Network {
+    resnet_basic("ResNet-34", [3, 4, 6, 3], h, w)
+}
+
+/// ResNet-50 (bottleneck, [3,4,6,3]).
+pub fn resnet50(h: usize, w: usize) -> Network {
+    resnet_bottleneck("ResNet-50", [3, 4, 6, 3], h, w)
+}
+
+/// ResNet-152 (bottleneck, [3,8,36,3]).
+pub fn resnet152(h: usize, w: usize) -> Network {
+    resnet_bottleneck("ResNet-152", [3, 8, 36, 3], h, w)
+}
+
+/// ShuffleNet v1, groups = 8, 1.0× (stage channels 384/768/1536) at image
+/// resolution `(h, w)`.
+///
+/// Channel shuffles are free data routing on this chip (§VI-D) and the
+/// strided blocks' `concat(avgpool(x), branch(x))` is approximated by a
+/// full-width branch (the 3×3 average pool contributes < 1% of ops and
+/// the widened 1×1 g-conv overcounts by the same order — documented
+/// deviation, see EXPERIMENTS.md).
+pub fn shufflenet(h: usize, w: usize) -> Network {
+    let mut net = Network::new("ShuffleNet", 24, h / 4, w / 4);
+    // conv1 (3×3/s2, 24ch) runs on-chip in principle, but its 3-channel
+    // input makes it host work in the paper's accounting; keep it off-chip
+    // like the ResNet stem for comparability.
+    net.pre = Some(OffChipStage {
+        name: "conv1_3x3".into(),
+        ops: 2 * (3 * 24 * 9) as u64 * ((h / 2) * (w / 2)) as u64,
+        weight_bits: (3 * 24 * 9) as u64,
+        io_words: (3 * h * w) as u64,
+    });
+    let stages = [(384usize, 4usize), (768, 8), (1536, 4)];
+    let mut prev = TensorRef::Input;
+    let mut ch = 24;
+    let (mut fh, mut fw) = (h / 4, w / 4);
+    for (si, &(out_ch, nblocks)) in stages.iter().enumerate() {
+        for b in 0..nblocks {
+            let strided = b == 0;
+            let mid = out_ch / 4;
+            let base = format!("st{}b{b}", si + 2);
+            // First block of stage 2 uses g=1 (24 input channels).
+            let g1 = if si == 0 && b == 0 { 1 } else { 8 };
+            let a = net.push(
+                ConvLayer::new(format!("{base}a"), ch, mid, fh, fw, 1, 1).with_groups(g1),
+                prev,
+                None,
+            );
+            let stride = if strided { 2 } else { 1 };
+            let dw = net.push(
+                ConvLayer::new(format!("{base}dw"), mid, mid, fh, fw, 3, stride)
+                    .with_groups(mid)
+                    .with_relu(false),
+                TensorRef::Step(a),
+                None,
+            );
+            fh = fh.div_ceil(stride);
+            fw = fw.div_ceil(stride);
+            let bypass = if strided { None } else { Some(prev) };
+            prev = TensorRef::Step(net.push(
+                ConvLayer::new(format!("{base}c"), mid, out_ch, fh, fw, 1, 1)
+                    .with_groups(8)
+                    .with_bypass(bypass.is_some()),
+                TensorRef::Step(dw),
+                bypass,
+            ));
+            ch = out_ch;
+        }
+    }
+    net.post = Some(OffChipStage {
+        name: "fc".into(),
+        ops: 2 * (ch * 1000) as u64,
+        weight_bits: 0,
+        io_words: ch as u64,
+    });
+    net
+}
+
+/// YOLOv3: Darknet-53 backbone + 3-scale detection heads at image
+/// resolution `(h, w)` (the paper uses 320×320, COCO classes → 255
+/// output maps). Feature-pyramid concats are expressed with the IR's
+/// `concat_extra` channel merge.
+pub fn yolov3(h: usize, w: usize) -> Network {
+    let mut net = Network::new("YOLOv3", 3, h, w);
+    let mut prev = TensorRef::Input;
+    let (mut fh, mut fw) = (h, w);
+    let mut ch = 3;
+
+    let conv = |net: &mut Network,
+                    prev: &mut TensorRef,
+                    ch: &mut usize,
+                    fh: &mut usize,
+                    fw: &mut usize,
+                    name: String,
+                    n_out: usize,
+                    k: usize,
+                    stride: usize| {
+        let l = ConvLayer::new(name, *ch, n_out, *fh, *fw, k, stride);
+        *prev = TensorRef::Step(net.push(l, *prev, None));
+        *ch = n_out;
+        *fh = fh.div_ceil(stride);
+        *fw = fw.div_ceil(stride);
+    };
+
+    conv(&mut net, &mut prev, &mut ch, &mut fh, &mut fw, "d0".into(), 32, 3, 1);
+    // (residual-count, channels) per Darknet-53 stage.
+    let stages: [(usize, usize); 5] = [(1, 64), (2, 128), (8, 256), (8, 512), (4, 1024)];
+    let mut route: Vec<TensorRef> = Vec::new(); // stage outputs for FPN
+    for (si, &(nres, c)) in stages.iter().enumerate() {
+        conv(&mut net, &mut prev, &mut ch, &mut fh, &mut fw,
+             format!("d{}down", si + 1), c, 3, 2);
+        for r in 0..nres {
+            let block_in = prev;
+            let a = net.push(
+                ConvLayer::new(format!("d{}r{r}a", si + 1), c, c / 2, fh, fw, 1, 1),
+                prev,
+                None,
+            );
+            prev = TensorRef::Step(net.push(
+                ConvLayer::new(format!("d{}r{r}b", si + 1), c / 2, c, fh, fw, 3, 1)
+                    .with_bypass(true),
+                TensorRef::Step(a),
+                Some(block_in),
+            ));
+        }
+        route.push(prev);
+    }
+
+    // Detection heads (FPN): scale 0 at h/32, scale 1 at h/16, scale 2 at h/8.
+    let mut upsampled: Option<(TensorRef, usize)> = None;
+    for scale in 0..3usize {
+        let backbone = route[4 - scale];
+        let (bc, bh, bw) = net.shape_of(backbone);
+        let mid = 512 >> scale;
+        // 5-conv block; the first conv merges the upsampled FPN tensor.
+        let mut cur = backbone;
+        let mut cur_c = bc;
+        for i in 0..5 {
+            let k = if i % 2 == 0 { 1 } else { 3 };
+            let n_out = if i % 2 == 0 { mid } else { mid * 2 };
+            let n_in = if i == 0 {
+                cur_c + upsampled.as_ref().map_or(0, |&(_, c)| c)
+            } else {
+                cur_c
+            };
+            let l = ConvLayer::new(format!("h{scale}c{i}"), n_in, n_out, bh, bw, k, 1);
+            let extra = if i == 0 { upsampled.map(|(r, _)| r) } else { None };
+            cur = TensorRef::Step(net.push_concat(l, cur, extra));
+            cur_c = n_out;
+        }
+        // Detection pair: 3×3 ×2·mid then 1×1 to 255 output maps.
+        let d = net.push(
+            ConvLayer::new(format!("h{scale}det3"), cur_c, mid * 2, bh, bw, 3, 1),
+            cur,
+            None,
+        );
+        net.push(
+            ConvLayer::new(format!("h{scale}det1"), mid * 2, 255, bh, bw, 1, 1)
+                .with_relu(false),
+            TensorRef::Step(d),
+            None,
+        );
+        if scale < 2 {
+            // FPN lateral: 1×1 to mid/2 then 2× nearest upsample (free on
+            // chip: pixel replication by the DDUs).
+            let lat = net.push(
+                ConvLayer::new(format!("h{scale}lat"), cur_c, mid / 2, bh, bw, 1, 1),
+                cur,
+                None,
+            );
+            net.upsample_last();
+            upsampled = Some((TensorRef::Step(lat), mid / 2));
+        }
+    }
+    net
+}
+
+/// TinyYOLO-style detector (§IV-C: "networks optimized for compute
+/// effort, such as TinyYOLO … are often only composed of 3×3 and 1×1
+/// convolution layers"): a 3×3 backbone with stride-2 downsampling folded
+/// into the convolutions (the max-pools of the darknet reference are
+/// reformulated as strided convs, a standard op-count-preserving
+/// transformation) plus a 1×1/3×3 detection head.
+pub fn tinyyolo(h: usize, w: usize) -> Network {
+    let mut net = Network::new("TinyYOLO", 3, h, w);
+    let mut prev = TensorRef::Input;
+    let (mut fh, mut fw) = (h, w);
+    let mut ch = 3;
+    let mut li = 0;
+    for &(c, stride) in &[
+        (16usize, 1usize),
+        (32, 2),
+        (64, 2),
+        (128, 2),
+        (256, 2),
+        (512, 2),
+        (1024, 1),
+    ] {
+        let l = ConvLayer::new(format!("t{li}"), ch, c, fh, fw, 3, stride);
+        prev = TensorRef::Step(net.push(l, prev, None));
+        ch = c;
+        fh = fh.div_ceil(stride);
+        fw = fw.div_ceil(stride);
+        li += 1;
+    }
+    // Detection head: 1×1 256, 3×3 512, 1×1 255.
+    let a = net.push(ConvLayer::new("h0", ch, 256, fh, fw, 1, 1), prev, None);
+    let b = net.push(
+        ConvLayer::new("h1", 256, 512, fh, fw, 3, 1),
+        TensorRef::Step(a),
+        None,
+    );
+    net.push(
+        ConvLayer::new("h2", 512, 255, fh, fw, 1, 1).with_relu(false),
+        TensorRef::Step(b),
+        None,
+    );
+    net
+}
+
+/// Binary-weight bits of the 1×1 projection shortcuts only — Tbl II's
+/// weight column appears to use strided-identity (weight-free) shortcuts
+/// for the bottleneck ResNets; subtracting this reconciles the counts.
+pub fn projection_weight_bits(net: &Network) -> u64 {
+    net.steps
+        .iter()
+        .filter(|s| s.layer.name.ends_with("sk"))
+        .map(|s| s.layer.weight_bits())
+        .sum()
+}
+
+/// HyperNet-20: the end-to-end validation network; must stay structurally
+/// identical to `python/compile/model.py::hypernet20_steps`.
+pub fn hypernet20() -> Network {
+    let mut net = Network::new("HyperNet-20", 16, 32, 32);
+    let mut prev = TensorRef::Input;
+    let stage = |s: usize| match s {
+        0 => (16usize, 32usize),
+        1 => (32, 16),
+        _ => (64, 8),
+    };
+    for s in 0..3usize {
+        let (c, hw) = stage(s);
+        for b in 0..3usize {
+            let strided = s > 0 && b == 0;
+            let (pc, phw) = if strided { stage(s - 1) } else { (c, hw) };
+            let base = format!("s{}b{b}", s + 1);
+            let stride = if strided { 2 } else { 1 };
+            let c1 = net.push(
+                ConvLayer::new(format!("{base}c1"), pc, c, phw, phw, 3, stride),
+                prev,
+                None,
+            );
+            let shortcut = if strided {
+                TensorRef::Step(net.push(
+                    ConvLayer::new(format!("{base}sk"), pc, c, phw, phw, 1, 2)
+                        .with_relu(false),
+                    prev,
+                    None,
+                ))
+            } else {
+                prev
+            };
+            prev = TensorRef::Step(net.push(
+                ConvLayer::new(format!("{base}c2"), c, c, hw, hw, 3, 1)
+                    .with_bypass(true)
+                    .with_bypass_separate(strided),
+                TensorRef::Step(c1),
+                Some(shortcut),
+            ));
+        }
+    }
+    net.post = Some(OffChipStage {
+        name: "head".into(),
+        ops: 2 * (64 * 10) as u64,
+        weight_bits: 0,
+        io_words: 64,
+    });
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet34_matches_paper_op_count() {
+        // §VI-B: 7.09 GOp of conv on-chip, 7.3 GOp total; Tbl III:
+        // bnorm/bias 2.94 MOp each, 4.52 M conv cycles at 1568 Op/cycle.
+        let net = resnet34(224, 224);
+        net.validate().unwrap();
+        let conv = net.conv_ops() as f64;
+        assert!(
+            (conv / 7.09e9 - 1.0).abs() < 0.02,
+            "conv ops {conv:.3e} vs paper 7.09e9"
+        );
+        let bn = net.bnorm_ops() as f64;
+        assert!((bn / 2.94e6 - 1.0).abs() < 0.02, "bnorm ops {bn:.3e}");
+        assert_eq!(net.bnorm_ops(), net.bias_ops());
+    }
+
+    #[test]
+    fn resnet34_weight_bits_match_table2() {
+        let net = resnet34(224, 224);
+        let bits = net.weight_bits() as f64;
+        assert!((bits / 21e6 - 1.0).abs() < 0.05, "weights {bits:.3e} vs 21M");
+    }
+
+    #[test]
+    fn resnet18_weight_bits_match_table2() {
+        let net = resnet18(224, 224);
+        let bits = net.weight_bits() as f64;
+        assert!((bits / 11e6 - 1.0).abs() < 0.05, "weights {bits:.3e} vs 11M");
+    }
+
+    #[test]
+    fn resnet152_weight_bits_match_table2() {
+        let net = resnet152(224, 224);
+        let bits = net.weight_bits() as f64;
+        // Paper: 55M (with identity-style shortcut accounting; projection
+        // convs add ~5%).
+        assert!((bits / 55e6 - 1.0).abs() < 0.08, "weights {bits:.3e} vs 55M");
+    }
+
+    #[test]
+    fn resnet_shapes_reach_7x7_at_224() {
+        let net = resnet34(224, 224);
+        assert_eq!(net.out_shape(), (512, 7, 7));
+        let net50 = resnet50(224, 224);
+        assert_eq!(net50.out_shape(), (2048, 7, 7));
+    }
+
+    #[test]
+    fn resnets_are_chip_supported() {
+        for net in [resnet34(224, 224), resnet50(224, 224)] {
+            for s in &net.steps {
+                assert!(s.layer.chip_supported(), "{}", s.layer.name);
+            }
+        }
+    }
+
+    #[test]
+    fn shufflenet_mac_count_matches_architecture() {
+        let net = shufflenet(224, 224);
+        net.validate().unwrap();
+        let macs: f64 = net.steps.iter().map(|s| s.layer.macs() as f64).sum();
+        // ShuffleNet v1 1.0× (g=8) is ~137 M multiply-adds (Zhang et al.).
+        // The paper's Tbl VI lists "140 MOp", i.e. it counts the
+        // architecture's published FLOPs figure directly; with this
+        // repo's consistent 2 Op/MAC convention the same network is
+        // ~275 MOp (documented in EXPERIMENTS.md).
+        assert!(
+            (macs / 137e6 - 1.0).abs() < 0.05,
+            "shufflenet MACs {macs:.3e} vs 137e6"
+        );
+    }
+
+    #[test]
+    fn yolov3_op_count_near_paper() {
+        let net = yolov3(320, 320);
+        net.validate().unwrap();
+        let ops = net.total_ops() as f64;
+        // Tbl VI: 53.1 GOp; public YOLOv3@320 figures are ~39 GFLOP + 2×
+        // convention differences — accept the 39–56 G band and report the
+        // exact number in EXPERIMENTS.md.
+        assert!(
+            ops > 39e9 && ops < 56e9,
+            "yolov3 ops {ops:.3e} outside plausible band"
+        );
+    }
+
+    #[test]
+    fn resnet18_and_50_op_counts_sane() {
+        // ResNet-18 @224²: ~3.6 GFLOPs total; on-chip conv share ~3.4G.
+        let n18 = resnet18(224, 224);
+        let conv18 = n18.conv_ops() as f64;
+        assert!((3.0e9..3.8e9).contains(&conv18), "{conv18:.3e}");
+        // ResNet-50 @224²: ~4.1 G mult-adds = ~8 GOp, slightly above
+        // ResNet-34 (the paper's "roughly 50% more compute-intensive"
+        // overstates the standard counts).
+        let n50 = resnet50(224, 224);
+        let conv50 = n50.conv_ops() as f64;
+        assert!((7.0e9..8.6e9).contains(&conv50), "{conv50:.3e}");
+        let ratio = conv50 / resnet34(224, 224).conv_ops() as f64;
+        assert!((1.0..1.25).contains(&ratio), "50/34 ratio {ratio}");
+    }
+
+    #[test]
+    fn resnet50_memory_footprint_3_3x_of_34() {
+        // §VI-B: ResNet-50's FM memory footprint is ~3.3× ResNet-34's.
+        let a34 = crate::coordinator::wcl::analyze(&resnet34(224, 224));
+        let a50 = crate::coordinator::wcl::analyze(&resnet50(224, 224));
+        let ratio = a50.wcl_words as f64 / a34.wcl_words as f64;
+        assert!((3.0..3.5).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn identity_shortcut_accounting_reconciles_table2() {
+        // ResNet-50/152 weight bits minus projection shortcuts hit the
+        // paper's 21M / 55M.
+        let n50 = resnet50(224, 224);
+        let w50 = (n50.weight_bits() - projection_weight_bits(&n50)) as f64;
+        assert!((w50 / 20.7e6 - 1.0).abs() < 0.03, "{w50:.3e}");
+        let n152 = resnet152(224, 224);
+        let w152 = (n152.weight_bits() - projection_weight_bits(&n152)) as f64;
+        assert!((w152 / 55e6 - 1.0).abs() < 0.03, "{w152:.3e}");
+    }
+
+    #[test]
+    fn tinyyolo_is_chip_supported_and_sized() {
+        let net = tinyyolo(416, 416);
+        net.validate().unwrap();
+        for s in &net.steps {
+            assert!(s.layer.chip_supported(), "{}", s.layer.name);
+        }
+        // TinyYOLO class: single-digit-M params, a few GOp at 416².
+        let bits = net.weight_bits() as f64;
+        assert!((6e6..14e6).contains(&bits), "weights {bits:.3e}");
+        let ops = net.total_ops() as f64;
+        assert!((4e9..8e9).contains(&ops), "ops {ops:.3e}");
+    }
+
+    #[test]
+    fn hypernet20_matches_python_model() {
+        let net = hypernet20();
+        net.validate().unwrap();
+        assert_eq!(net.steps.len(), 20);
+        assert_eq!(net.out_shape(), (64, 8, 8));
+        // Stage transitions have projection shortcuts.
+        assert!(net.step_by_name("s2b0sk").is_some());
+        assert!(net.step_by_name("s3b0sk").is_some());
+        // Binary weight count must equal the AOT param blob's `w` words:
+        // 272010 total − (gamma+beta = 2·Σn_out = 1536) − head (650).
+        assert_eq!(net.weight_bits(), 269_824);
+    }
+}

@@ -1,0 +1,86 @@
+//! PJRT client wrapper: HLO-text artifact → compiled executable → run.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see `python/compile/aot.py` and DESIGN.md).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A PJRT CPU runtime holding compiled executables by artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            executables: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile one HLO-text artifact under `name`.
+    pub fn load_artifact(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    pub fn loaded(&self) -> usize {
+        self.executables.len()
+    }
+
+    /// Execute an artifact with f32 tensor inputs; returns the flattened
+    /// f32 output (artifacts are lowered with `return_tuple=True`, so the
+    /// single result is unwrapped from a 1-tuple).
+    pub fn execute(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("artifact `{name}` not loaded"))?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal {name}: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec {name}: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-dependent tests live in `rust/tests/pjrt_runtime.rs` (they
+    // need the AOT artifacts from `make artifacts`).
+}

@@ -1,0 +1,164 @@
+//! The inference engine: walks the manifest's step list, streams packed
+//! binary weights, and executes each layer's AOT artifact on PJRT.
+//!
+//! This is the request-path composition of the whole stack: weights go
+//! through the real `bwn` pack → stream → unpack path (what the silicon
+//! serializes over its pins), feature maps live in buffers whose peak is
+//! bounded by the §IV-B memory plan, and every layer is one compiled
+//! XLA executable produced from the Pallas kernel at build time.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::bwn::pack_weights;
+use crate::coordinator::memory::{self, MemoryPlan};
+use crate::network::TensorRef;
+
+use super::client::Runtime;
+use super::registry::NetworkManifest;
+
+/// Latency/throughput statistics of a served batch.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub total_s: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// End-to-end Op/s of the Rust+PJRT path (network ops × rate).
+    pub ops_per_s: f64,
+}
+
+/// The Hyperdrive inference engine (single chip, PJRT CPU backend).
+pub struct InferenceEngine {
+    pub runtime: Runtime,
+    pub manifest: NetworkManifest,
+    /// Dense ±1 weights per step, reconstructed from the packed stream
+    /// (exactly what the chip's weight buffer deserializes).
+    step_weights: Vec<Vec<f32>>,
+    /// The §IV-B memory plan (peak == WCL, validated at load).
+    pub memory_plan: MemoryPlan,
+}
+
+impl InferenceEngine {
+    /// Load artifacts + parameters from an artifact directory.
+    pub fn load(dir: impl Into<std::path::PathBuf>) -> Result<Self> {
+        let manifest = NetworkManifest::load(dir)?;
+        let mut runtime = Runtime::cpu()?;
+        for a in manifest.artifacts.values() {
+            runtime
+                .load_artifact(&a.name, &a.file)
+                .with_context(|| format!("loading artifact {}", a.name))?;
+        }
+        // Binary-weight path: blob → pack (stream words) → unpack. The
+        // round trip is exact for ±1 weights; this is the on-pin format.
+        let mut step_weights = Vec::new();
+        for s in &manifest.network.steps {
+            let w = manifest.blob(&s.layer.name, "w")?;
+            let stream = pack_weights(&s.layer, w, 16);
+            let dense = stream.unpack_dense();
+            debug_assert_eq!(dense, w, "{}: pack/unpack must be exact", s.layer.name);
+            step_weights.push(dense);
+        }
+        let memory_plan = memory::plan_tight(&manifest.network)?;
+        Ok(InferenceEngine {
+            runtime,
+            manifest,
+            step_weights,
+            memory_plan,
+        })
+    }
+
+    /// Run one inference; returns the class logits.
+    pub fn infer(&self, input: &[f32]) -> Result<Vec<f32>> {
+        Ok(self.infer_trace(input)?.1)
+    }
+
+    /// Run one inference keeping every intermediate FM (for
+    /// cross-validation against the functional simulator).
+    pub fn infer_trace(&self, input: &[f32]) -> Result<(Vec<Vec<f32>>, Vec<f32>)> {
+        let net = &self.manifest.network;
+        assert_eq!(input.len(), net.in_ch * net.in_h * net.in_w);
+        let mut fms: Vec<Vec<f32>> = Vec::with_capacity(net.steps.len());
+        for (i, s) in net.steps.iter().enumerate() {
+            let l = &s.layer;
+            let src: &[f32] = match s.src {
+                TensorRef::Input => input,
+                TensorRef::Step(j) => &fms[j],
+            };
+            let gamma = self.manifest.blob(&l.name, "gamma")?;
+            let beta = self.manifest.blob(&l.name, "beta")?;
+            let w = &self.step_weights[i];
+            let wshape = [l.n_out, l.n_in, l.k, l.k];
+            let in_shape = [l.n_in, l.h, l.w];
+            let out_shape = [l.n_out, l.h_out(), l.w_out()];
+            let artifact = &self.manifest.step_artifacts[i];
+            let out = if let Some(b) = s.bypass {
+                let byp: &[f32] = match b {
+                    TensorRef::Input => input,
+                    TensorRef::Step(j) => &fms[j],
+                };
+                self.runtime.execute(
+                    artifact,
+                    &[
+                        (src, &in_shape),
+                        (w.as_slice(), &wshape),
+                        (gamma, &[l.n_out]),
+                        (beta, &[l.n_out]),
+                        (byp, &out_shape),
+                    ],
+                )?
+            } else {
+                self.runtime.execute(
+                    artifact,
+                    &[
+                        (src, &in_shape),
+                        (w.as_slice(), &wshape),
+                        (gamma, &[l.n_out]),
+                        (beta, &[l.n_out]),
+                    ],
+                )?
+            };
+            fms.push(out);
+        }
+        // Off-chip head (its own artifact, like the paper's host stage).
+        let (c, h, w) = net.out_shape();
+        let w_fc = self.manifest.blob("head", "w_fc")?;
+        let b_fc = self.manifest.blob("head", "b_fc")?;
+        let logits = self.runtime.execute(
+            "head",
+            &[
+                (fms.last().unwrap().as_slice(), &[c, h, w]),
+                (w_fc, &[self.manifest.n_classes, c]),
+                (b_fc, &[self.manifest.n_classes]),
+            ],
+        )?;
+        Ok((fms, logits))
+    }
+
+    /// Serve a FIFO batch of requests, measuring per-request latency.
+    pub fn serve(&self, inputs: &[Vec<f32>]) -> Result<(Vec<Vec<f32>>, ServeStats)> {
+        let mut outs = Vec::with_capacity(inputs.len());
+        let mut lat_ms: Vec<f64> = Vec::with_capacity(inputs.len());
+        let t0 = Instant::now();
+        for x in inputs {
+            let t = Instant::now();
+            outs.push(self.infer(x)?);
+            lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+        let total_s = t0.elapsed().as_secs_f64();
+        lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| lat_ms[((lat_ms.len() as f64 - 1.0) * p) as usize];
+        let ops = self.manifest.network.total_ops() as f64;
+        let stats = ServeStats {
+            requests: inputs.len(),
+            total_s,
+            mean_ms: lat_ms.iter().sum::<f64>() / lat_ms.len() as f64,
+            p50_ms: pct(0.5),
+            p99_ms: pct(0.99),
+            ops_per_s: ops * inputs.len() as f64 / total_s,
+        };
+        Ok((outs, stats))
+    }
+}

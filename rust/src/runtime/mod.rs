@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust request path.
+//!
+//! Python never runs at inference time: the artifacts are compiled once
+//! by [`client::Runtime`] (PJRT CPU), the manifest is parsed by
+//! [`registry`], and [`engine::InferenceEngine`] walks the network step
+//! list feeding FM and (unpacked) binary-weight literals.
+
+pub mod client;
+pub mod engine;
+pub mod registry;
+
+pub use client::Runtime;
+pub use engine::InferenceEngine;
+pub use registry::{ArtifactKind, NetworkManifest};

@@ -1,0 +1,224 @@
+//! Manifest-driven artifact registry: binds the AOT manifest to the
+//! network IR, the parameter blob and the golden files.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::network::{ConvLayer, Network, TensorRef};
+use crate::util::manifest::{read_f32_blob, Manifest};
+
+/// Kind of an AOT artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Conv,
+    Head,
+}
+
+/// One artifact entry from the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub file: PathBuf,
+    pub layer: Option<ConvLayer>,
+}
+
+/// A parameter tensor reference into the blob.
+#[derive(Debug, Clone, Copy)]
+pub struct BlobSlice {
+    pub off: usize,
+    pub len: usize,
+}
+
+/// The fully-parsed AOT manifest for a network.
+pub struct NetworkManifest {
+    pub dir: PathBuf,
+    pub artifacts: HashMap<String, ArtifactInfo>,
+    /// The network reconstructed from the step list.
+    pub network: Network,
+    /// Artifact name per step.
+    pub step_artifacts: Vec<String>,
+    /// Blob slices: (step name, field) → slice.
+    pub blobs: HashMap<(String, String), BlobSlice>,
+    /// The parameter blob (f32 words).
+    pub params: Vec<f32>,
+    pub n_classes: usize,
+}
+
+impl NetworkManifest {
+    /// Load `dir/manifest.tsv` plus the parameter blob.
+    pub fn load(dir: impl Into<PathBuf>) -> Result<NetworkManifest> {
+        let dir = dir.into();
+        let m = Manifest::load(&dir)?;
+
+        let mut artifacts = HashMap::new();
+        let mut layer_by_artifact: HashMap<String, ConvLayer> = HashMap::new();
+        for r in m.of_kind("artifact") {
+            let name = r.get("name")?.to_string();
+            let kind = match r.get("kind")? {
+                "conv" => ArtifactKind::Conv,
+                "head" => ArtifactKind::Head,
+                other => bail!("unknown artifact kind `{other}`"),
+            };
+            let layer = if kind == ArtifactKind::Conv {
+                let l = ConvLayer::new(
+                    name.clone(),
+                    r.get_usize("n_in")?,
+                    r.get_usize("n_out")?,
+                    r.get_usize("h")?,
+                    r.get_usize("w")?,
+                    r.get_usize("k")?,
+                    r.get_usize("stride")?,
+                )
+                .with_bypass(r.get_bool("bypass")?)
+                .with_relu(r.get_bool("relu")?);
+                layer_by_artifact.insert(name.clone(), l.clone());
+                Some(l)
+            } else {
+                None
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    kind,
+                    file: m.file(r.get("file")?),
+                    layer,
+                },
+            );
+        }
+
+        let netrec = m.unique("network")?;
+        let mut network = Network::new(
+            netrec.get("name")?,
+            netrec.get_usize("in_ch")?,
+            netrec.get_usize("in_h")?,
+            netrec.get_usize("in_w")?,
+        );
+        let n_classes = netrec.get_usize("classes")?;
+
+        let mut step_artifacts = Vec::new();
+        for r in m.of_kind("step") {
+            let aname = r.get("artifact")?;
+            let mut layer = layer_by_artifact
+                .get(aname)
+                .with_context(|| format!("step references unknown artifact `{aname}`"))?
+                .clone();
+            layer.name = r.get("name")?.to_string();
+            let src = match r.get_isize("src")? {
+                -1 => TensorRef::Input,
+                i if i >= 0 => TensorRef::Step(i as usize),
+                other => bail!("bad src {other}"),
+            };
+            let bypass = match r.get_isize("bypass")? {
+                -2 => None,
+                -1 => Some(TensorRef::Input),
+                i if i >= 0 => Some(TensorRef::Step(i as usize)),
+                other => bail!("bad bypass {other}"),
+            };
+            network.push(layer, src, bypass);
+            step_artifacts.push(aname.to_string());
+        }
+        network.validate()?;
+
+        let mut blobs = HashMap::new();
+        for r in m.of_kind("blob") {
+            blobs.insert(
+                (r.get("step")?.to_string(), r.get("field")?.to_string()),
+                BlobSlice {
+                    off: r.get_usize("off")?,
+                    len: r.get_usize("len")?,
+                },
+            );
+        }
+
+        let params = read_f32_blob(m.file("e2e_params.bin"))?;
+        let expect = m.unique("blobfile")?.get_usize("words")?;
+        if params.len() != expect {
+            bail!("param blob has {} words, manifest says {expect}", params.len());
+        }
+
+        Ok(NetworkManifest {
+            dir,
+            artifacts,
+            network,
+            step_artifacts,
+            blobs,
+            params,
+            n_classes,
+        })
+    }
+
+    /// Slice of the parameter blob for (step, field).
+    pub fn blob(&self, step: &str, field: &str) -> Result<&[f32]> {
+        let s = self
+            .blobs
+            .get(&(step.to_string(), field.to_string()))
+            .with_context(|| format!("no blob for ({step}, {field})"))?;
+        Ok(&self.params[s.off..s.off + s.len])
+    }
+
+    /// Load a golden f32 file by manifest name.
+    pub fn golden(&self, file: &str) -> Result<Vec<f32>> {
+        read_f32_blob(self.dir.join(file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Artifacts directory (tests are skipped when `make artifacts` has
+    /// not run; integration tests assert its presence).
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.tsv").exists().then_some(dir)
+    }
+
+    #[test]
+    fn manifest_reconstructs_hypernet20() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let nm = NetworkManifest::load(dir).unwrap();
+        assert_eq!(nm.network.steps.len(), 20);
+        assert_eq!(nm.n_classes, 10);
+        // Must agree with the zoo twin.
+        let zoo_net = crate::network::zoo::hypernet20();
+        assert_eq!(nm.network.steps.len(), zoo_net.steps.len());
+        for (a, b) in nm.network.steps.iter().zip(&zoo_net.steps) {
+            assert_eq!(a.layer.name, b.layer.name);
+            assert_eq!(
+                (a.layer.n_in, a.layer.n_out, a.layer.k, a.layer.stride),
+                (b.layer.n_in, b.layer.n_out, b.layer.k, b.layer.stride),
+                "{}",
+                a.layer.name
+            );
+            assert_eq!(a.src, b.src, "{}", a.layer.name);
+            assert_eq!(a.bypass, b.bypass, "{}", a.layer.name);
+        }
+    }
+
+    #[test]
+    fn blob_slices_cover_all_steps() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let nm = NetworkManifest::load(dir).unwrap();
+        for s in &nm.network.steps {
+            let l = &s.layer;
+            let w = nm.blob(&l.name, "w").unwrap();
+            assert_eq!(w.len() as u64, l.weight_bits(), "{}", l.name);
+            // Weights are strictly ±1 after python-side binarization.
+            assert!(w.iter().all(|&v| v == 1.0 || v == -1.0), "{}", l.name);
+            assert_eq!(nm.blob(&l.name, "gamma").unwrap().len(), l.n_out);
+            assert_eq!(nm.blob(&l.name, "beta").unwrap().len(), l.n_out);
+        }
+        assert_eq!(nm.blob("head", "w_fc").unwrap().len(), 10 * 64);
+        assert_eq!(nm.blob("head", "b_fc").unwrap().len(), 10);
+    }
+}

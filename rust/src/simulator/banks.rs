@@ -1,0 +1,213 @@
+//! FMM banking model — validates §IV-A's claim that "all these accesses
+//! are aligned (e.g., all the Tile-PUs are reading the FMM bank of their
+//! corresponding top-left neighbor) and therefore no access conflicts
+//! occur".
+//!
+//! Physical organisation (§VI): `M × 8 = 7×8` single-port SRAMs with
+//! 1024 lines of `N·16 = 112`-bit words — one line holds the same local
+//! pixel/channel word for *all N tile columns* of one tile row, so a
+//! single read broadcasts to a whole row of Tile-PUs, and a horizontal
+//! neighbour access is just a field selection within the same line.
+//!
+//! Per conv cycle every tile row issues exactly one line read to the
+//! (possibly vertically adjacent) owner row's bank set; conflict-freedom
+//! means: within a cycle, each (row, bank) is accessed at most once.
+
+use crate::network::ConvLayer;
+use crate::util::ceil_div;
+use crate::ChipConfig;
+
+/// Result of the bank-level simulation of one layer.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BankStats {
+    /// Conv cycles simulated.
+    pub cycles: u64,
+    /// Total SRAM line reads.
+    pub line_reads: u64,
+    /// Maximum simultaneous accesses observed on any single bank in any
+    /// cycle (must be 1 for the §IV-A claim to hold).
+    pub max_bank_concurrency: u32,
+    /// Cycles in which an output write targeted a bank also being read
+    /// (resolved by the ping-pong segment separation; reported to show
+    /// the dual-port-free design is sound).
+    pub read_write_same_bank_cycles: u64,
+}
+
+/// Number of banks per tile row in the taped-out chip.
+pub const BANKS_PER_ROW: usize = 8;
+
+/// Simulate the bank access pattern of one layer's conv phase.
+///
+/// Iterates Algorithm 1's (pixel, tap, c_in) cycle loop; for each cycle
+/// computes the line address each tile row reads, asserts alignment, and
+/// tracks per-bank concurrency. Output writes are modelled at the pixel
+/// completion cycles with the ping-pong segment offset.
+pub fn simulate_banked_layer(layer: &ConvLayer, cfg: &ChipConfig) -> BankStats {
+    let l = layer;
+    let (ho, wo) = (l.h_out(), l.w_out());
+    let tile_h_out = ceil_div(ho, cfg.m).max(1);
+    let tile_w_out = ceil_div(wo, cfg.n).max(1);
+    let tile_h_in = ceil_div(l.h, cfg.m).max(1);
+    let tile_w_in = ceil_div(l.w, cfg.n).max(1);
+    let n_in_eff = l.n_in / l.groups;
+    let taps = l.k * l.k;
+    let half = (l.k / 2) as isize;
+
+    let mut stats = BankStats::default();
+    // Pending output write: issued one cycle after pixel completion
+    // (§IV-B's read-add-write with one-cycle latency), i.e. during the
+    // next pixel's first read cycle.
+    let mut pending_write: Option<usize> = None;
+    // One output-channel tile is representative (the pattern repeats).
+    for ly in 0..tile_h_out {
+        for lx in 0..tile_w_out {
+            for tap in 0..taps {
+                let dy = (tap / l.k) as isize - half;
+                let dx = (tap % l.k) as isize - half;
+                for ci in 0..n_in_eff {
+                    stats.cycles += 1;
+                    // Per tile row ty: which owner row and which line?
+                    // All rows share the same local (iy_loc, ix_loc) by
+                    // alignment; verify that and count bank accesses.
+                    let mut accesses: Vec<(usize, usize)> = Vec::with_capacity(cfg.m);
+                    let mut common_line: Option<usize> = None;
+                    for ty in 0..cfg.m {
+                        // Global y of this tile row's requested pixel for
+                        // local output row `ly`.
+                        let gy = (ty * tile_h_out + ly) as isize * l.stride as isize + dy;
+                        if gy < 0 || gy >= l.h as isize {
+                            continue; // DDU zero padding: no SRAM access
+                        }
+                        let owner_row = (gy as usize / tile_h_in).min(cfg.m - 1);
+                        let iy_loc = gy as usize - owner_row * tile_h_in;
+                        // Horizontal: all tile columns select fields of
+                        // one line; compute the owner-local x from tile
+                        // column 0 (alignment makes it identical).
+                        let gx = (lx as isize) * l.stride as isize + dx;
+                        let ix_loc = if gx < 0 {
+                            continue;
+                        } else {
+                            let gx = gx as usize;
+                            if gx >= l.w {
+                                continue;
+                            }
+                            gx % tile_w_in
+                        };
+                        let line = (ci * tile_h_in + iy_loc) * tile_w_in + ix_loc;
+                        // Alignment claim: every tile row reads the same
+                        // line index (of its owner row's bank set).
+                        match common_line {
+                            None => common_line = Some(line),
+                            Some(c) => assert_eq!(
+                                c, line,
+                                "§IV-A alignment violated at `{}`",
+                                l.name
+                            ),
+                        }
+                        accesses.push((owner_row, line % BANKS_PER_ROW));
+                    }
+                    stats.line_reads += accesses.len() as u64;
+                    // Conflict check: each (row, bank) at most once.
+                    accesses.sort_unstable();
+                    let mut max_c = 1u32;
+                    let mut run = 1u32;
+                    for w in accesses.windows(2) {
+                        if w[0] == w[1] {
+                            run += 1;
+                            max_c = max_c.max(run);
+                        } else {
+                            run = 1;
+                        }
+                    }
+                    if !accesses.is_empty() {
+                        stats.max_bank_concurrency = stats.max_bank_concurrency.max(max_c);
+                    }
+                    // Write modelling: the previous pixel's output write
+                    // is issued during this (first) cycle — the §IV-B
+                    // one-cycle-latency read-add-write.
+                    if tap == 0 && ci == 0 {
+                        if let Some(out_bank) = pending_write.take() {
+                            // Same bank index = same physical SRAM as a
+                            // read (different segment/line): possible
+                            // only because the ping-pong separation puts
+                            // the write on the *other* segment's lines.
+                            if accesses.iter().any(|&(_, b)| b == out_bank) {
+                                stats.read_write_same_bank_cycles += 1;
+                            }
+                        }
+                    }
+                    if tap == taps - 1 && ci == n_in_eff - 1 {
+                        pending_write = Some((ly * tile_w_out + lx) % BANKS_PER_ROW);
+                    }
+                }
+            }
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::zoo;
+
+    fn cfg() -> ChipConfig {
+        ChipConfig::default()
+    }
+
+    #[test]
+    fn resnet34_layers_are_conflict_free() {
+        // §IV-A: no FMM bank conflicts across every ResNet-34 layer.
+        for s in &zoo::resnet34(224, 224).steps {
+            let st = simulate_banked_layer(&s.layer, &cfg());
+            assert!(
+                st.max_bank_concurrency <= 1,
+                "{}: concurrency {}",
+                s.layer.name,
+                st.max_bank_concurrency
+            );
+        }
+    }
+
+    #[test]
+    fn strided_and_1x1_layers_conflict_free() {
+        for l in [
+            crate::network::ConvLayer::new("s2", 64, 128, 56, 56, 3, 2),
+            crate::network::ConvLayer::new("p1", 64, 128, 56, 56, 1, 1),
+            crate::network::ConvLayer::new("p2", 64, 128, 56, 56, 1, 2),
+        ] {
+            let st = simulate_banked_layer(&l, &cfg());
+            assert!(st.max_bank_concurrency <= 1, "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn odd_sized_fms_stay_aligned() {
+        // YOLOv3's 10×10 FMs on 7×7 tiles pad, but accesses stay aligned.
+        let l = crate::network::ConvLayer::new("y", 512, 1024, 10, 10, 3, 1);
+        let st = simulate_banked_layer(&l, &cfg());
+        assert_eq!(st.max_bank_concurrency, 1);
+    }
+
+    #[test]
+    fn line_read_count_matches_row_broadcast_model() {
+        // Interior taps read one line per tile row: cycles × M at most,
+        // fewer at the padded borders.
+        let l = crate::network::ConvLayer::new("c", 16, 16, 56, 56, 3, 1);
+        let st = simulate_banked_layer(&l, &cfg());
+        assert!(st.line_reads <= st.cycles * cfg().m as u64);
+        assert!(st.line_reads > st.cycles * (cfg().m as u64 - 1));
+    }
+
+    #[test]
+    fn ping_pong_avoids_read_write_port_conflicts() {
+        // Writes land on banks also being read in some cycles — exactly
+        // why §IV-B needs the one-cycle-latency ping-pong trick. The
+        // simulation must observe such cycles (they exist) while the
+        // read path itself stays conflict-free.
+        let l = crate::network::ConvLayer::new("c", 16, 16, 56, 56, 3, 1);
+        let st = simulate_banked_layer(&l, &cfg());
+        assert!(st.read_write_same_bank_cycles > 0);
+        assert_eq!(st.max_bank_concurrency, 1);
+    }
+}

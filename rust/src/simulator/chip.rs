@@ -1,0 +1,420 @@
+//! Single-chip functional simulator: Algorithm 1, bit-faithful.
+//!
+//! Executes one layer exactly in the chip's order — filter-tap outer,
+//! input-channel inner, the binary weight applied as the sign input of
+//! the accumulator (line 17), then the stall-free scale → bypass → bias →
+//! ReLU post sequence — optionally rounding every intermediate to FP16
+//! like the silicon datapath. Counts all memory traffic for the energy
+//! breakdown (Fig 10).
+
+use crate::bwn::WeightStream;
+use crate::network::ConvLayer;
+use crate::util::f16::round_f16;
+
+use super::fm::FeatureMap;
+
+/// Datapath precision of the simulated Tile-PUs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Bit-exact FP16 (round every accumulate) — the taped-out chip.
+    #[default]
+    F16,
+    /// f32 (matches the PJRT CPU artifacts; used for cross-validation).
+    F32,
+}
+
+#[inline]
+fn rnd(p: Precision, x: f32) -> f32 {
+    match p {
+        Precision::F16 => round_f16(x),
+        Precision::F32 => x,
+    }
+}
+
+/// Memory/IO traffic of one simulated layer (word granularity).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AccessCounts {
+    /// FMM word reads (input FM fetches incl. neighbour-bank reads).
+    pub fmm_reads: u64,
+    /// FMM word writes (output pixels; bypass read-modify adds a read).
+    pub fmm_writes: u64,
+    /// Weight words fetched from the off-chip stream.
+    pub stream_words: u64,
+    /// Weight words re-read from the weight buffer.
+    pub wbuf_reads: u64,
+    /// Reads that crossed a Tile-PU boundary (neighbour bank access).
+    pub neighbor_reads: u64,
+    /// Post-phase multiplies (bnorm) on the shared per-tile multiplier.
+    pub post_mults: u64,
+    /// Post-phase adds (bias + bypass).
+    pub post_adds: u64,
+    /// FP16 accumulates in the Tile-PU adders.
+    pub accumulates: u64,
+}
+
+impl AccessCounts {
+    pub fn add(&mut self, o: &AccessCounts) {
+        self.fmm_reads += o.fmm_reads;
+        self.fmm_writes += o.fmm_writes;
+        self.stream_words += o.stream_words;
+        self.wbuf_reads += o.wbuf_reads;
+        self.neighbor_reads += o.neighbor_reads;
+        self.post_mults += o.post_mults;
+        self.post_adds += o.post_adds;
+        self.accumulates += o.accumulates;
+    }
+}
+
+/// Parameters of one layer execution.
+pub struct LayerParams<'a> {
+    pub layer: &'a ConvLayer,
+    /// Packed binary weights in stream order.
+    pub stream: &'a WeightStream,
+    /// Per-output-channel scale (folded batch-norm α; 1.0 if none).
+    pub gamma: &'a [f32],
+    /// Per-output-channel bias (β).
+    pub beta: &'a [f32],
+}
+
+/// Execute one layer on a full (single-chip) input FM.
+///
+/// `bypass` must be `Some` iff `layer.has_bypass`. Returns the output FM
+/// and the access counts. Spatial tile bookkeeping (for neighbour-read
+/// counting) uses `tile_h × tile_w` Tile-PU patches of `m×n` tiles.
+pub fn run_layer(
+    p: &LayerParams,
+    input: &FeatureMap,
+    bypass: Option<&FeatureMap>,
+    prec: Precision,
+    tiles_mn: (usize, usize),
+) -> (FeatureMap, AccessCounts) {
+    let l = p.layer;
+    assert_eq!((input.c, input.h, input.w), (l.n_in, l.h, l.w));
+    assert_eq!(l.has_bypass, bypass.is_some());
+    assert_eq!(p.gamma.len(), l.n_out);
+    assert_eq!(p.beta.len(), l.n_out);
+
+    let (ho, wo) = (l.h_out(), l.w_out());
+    let mut out = FeatureMap::zeros(l.n_out, ho, wo);
+    let mut acc = AccessCounts::default();
+
+    let (m, n) = tiles_mn;
+    let tile_h = ho.div_ceil(m).max(1);
+    let tile_w = wo.div_ceil(n).max(1);
+    let in_tile_h = l.h.div_ceil(m).max(1);
+    let in_tile_w = l.w.div_ceil(n).max(1);
+
+    let half = (l.k / 2) as isize;
+    let group_size_out = l.n_out / l.groups;
+    let n_in_eff = l.n_in / l.groups;
+    let taps = l.k * l.k;
+    let c_par = p.stream.c;
+
+    // Perf (§Perf log): the naive loop paid a div/mod-heavy
+    // `stream.weight()` call plus four divisions of tile bookkeeping per
+    // MAC. Weights are hoisted per output channel into a table of f32
+    // *sign masks* (a −1 weight is an XOR of the sign bit — the literal
+    // hardware meaning of "the binary weight is applied as the sign
+    // input of the FP16 adder"), counters are bumped per tap instead of
+    // per MAC, and fully-padded taps (DDU zeros) skip the accumulation
+    // entirely (v ± 0 is exact in FP16 and f32).
+    let mut wmask = vec![0u32; taps * n_in_eff];
+    let mut local = AccessCounts::default();
+    for co in 0..l.n_out {
+        let g = co / group_size_out;
+        let cin_base = g * n_in_eff;
+        for tap in 0..taps {
+            for ci in 0..n_in_eff {
+                wmask[tap * n_in_eff + ci] = if p.stream.weight(co, ci, tap) > 0.0 {
+                    0
+                } else {
+                    0x8000_0000
+                };
+            }
+        }
+        for oy in 0..ho {
+            let ty = oy / tile_h;
+            for ox in 0..wo {
+                let tx = ox / tile_w;
+                let mut v = 0.0f32;
+                // Algorithm 1 lines 7–19: tap outer, input channel inner.
+                for tap in 0..taps {
+                    let dy = (tap / l.k) as isize - half;
+                    let dx = (tap % l.k) as isize - half;
+                    let iy = (oy * l.stride) as isize + dy;
+                    let ix = (ox * l.stride) as isize + dx;
+                    local.accumulates += n_in_eff as u64;
+                    local.fmm_reads += n_in_eff as u64;
+                    if iy < 0 || ix < 0 || iy >= l.h as isize || ix >= l.w as isize {
+                        // Zero padding: the DDU injects zeros; v is
+                        // unchanged (v ± 0 == v bit-exactly).
+                        continue;
+                    }
+                    let (iy, ix) = (iy as usize, ix as usize);
+                    if (iy / in_tile_h, ix / in_tile_w) != (ty, tx) {
+                        local.neighbor_reads += n_in_eff as u64;
+                    }
+                    let row = &wmask[tap * n_in_eff..tap * n_in_eff + n_in_eff];
+                    let base = ((cin_base) * l.h + iy) * l.w + ix;
+                    let stride_c = l.h * l.w;
+                    // Line 17: sign-select accumulate (sign-bit XOR).
+                    match prec {
+                        Precision::F32 => {
+                            for (ci, &mask) in row.iter().enumerate() {
+                                let x = input.data[base + ci * stride_c];
+                                v += f32::from_bits(x.to_bits() ^ mask);
+                            }
+                        }
+                        Precision::F16 => {
+                            for (ci, &mask) in row.iter().enumerate() {
+                                let x = input.data[base + ci * stride_c];
+                                v = round_f16(v + f32::from_bits(x.to_bits() ^ mask));
+                            }
+                        }
+                    }
+                }
+                // §IV-B order: scale → bypass → bias → ReLU.
+                if l.bnorm {
+                    v = rnd(prec, v * p.gamma[co]);
+                    acc.post_mults += 1;
+                }
+                if let Some(bp) = bypass {
+                    v = rnd(prec, v + bp.get(co, oy, ox));
+                    acc.fmm_reads += 1;
+                    acc.post_adds += 1;
+                }
+                v = rnd(prec, v + p.beta[co]);
+                acc.post_adds += 1;
+                if l.relu && v < 0.0 {
+                    v = 0.0;
+                }
+                out.set(co, oy, ox, v);
+                acc.fmm_writes += 1;
+            }
+        }
+    }
+
+    acc.add(&local);
+    // Weight traffic: every stream word enters once, then is re-read per
+    // remaining pixel of the Tile-PU tile (Tbl I schedule).
+    let tile_pixels = (tile_h * tile_w) as u64;
+    let cout_tiles = l.n_out.div_ceil(c_par) as u64;
+    acc.stream_words = cout_tiles * taps as u64 * n_in_eff as u64;
+    acc.wbuf_reads = acc.stream_words * (tile_pixels.max(1) - 1);
+    (out, acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bwn::pack_weights;
+    use crate::network::ConvLayer;
+    use crate::testkit;
+    use crate::util::SplitMix64;
+
+    fn make_params(l: &ConvLayer, rng: &mut SplitMix64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let n_in_eff = l.n_in / l.groups;
+        let w: Vec<f32> = (0..l.n_out * n_in_eff * l.k * l.k)
+            .map(|_| rng.next_sym())
+            .collect();
+        let gamma: Vec<f32> = (0..l.n_out).map(|_| 0.5 + rng.next_f32()).collect();
+        let beta: Vec<f32> = (0..l.n_out).map(|_| rng.next_sym()).collect();
+        (w, gamma, beta)
+    }
+
+    /// Plain reference convolution (independent loop order, f32).
+    fn ref_conv(
+        l: &ConvLayer,
+        w: &[f32],
+        gamma: &[f32],
+        beta: &[f32],
+        input: &FeatureMap,
+        bypass: Option<&FeatureMap>,
+    ) -> FeatureMap {
+        let (ho, wo) = (l.h_out(), l.w_out());
+        let mut out = FeatureMap::zeros(l.n_out, ho, wo);
+        let half = (l.k / 2) as isize;
+        let gso = l.n_out / l.groups;
+        let nie = l.n_in / l.groups;
+        for co in 0..l.n_out {
+            let cb = (co / gso) * nie;
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let mut v = 0.0f64;
+                    for ci in 0..nie {
+                        for ky in 0..l.k {
+                            for kx in 0..l.k {
+                                let iy = (oy * l.stride) as isize + ky as isize - half;
+                                let ix = (ox * l.stride) as isize + kx as isize - half;
+                                let x = input.get_padded(cb + ci, iy, ix) as f64;
+                                let wv = w[(co * nie + ci) * l.k * l.k + ky * l.k + kx];
+                                let s = if wv >= 0.0 { 1.0 } else { -1.0 };
+                                v += s * x;
+                            }
+                        }
+                    }
+                    let mut v = v as f32;
+                    if l.bnorm {
+                        v *= gamma[co];
+                    }
+                    if let Some(bp) = bypass {
+                        v += bp.get(co, oy, ox);
+                    }
+                    v += beta[co];
+                    if l.relu && v < 0.0 {
+                        v = 0.0;
+                    }
+                    out.set(co, oy, ox, v);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_reference_f32_property() {
+        testkit::check_n("chip sim vs ref conv", 0xc41b, 60, |rng| {
+            let k = if rng.next_u64() & 1 == 0 { 1 } else { 3 };
+            let stride = if rng.next_u64() & 1 == 0 { 1 } else { 2 };
+            let n_in = 1 + rng.next_below(8);
+            let n_out = 1 + rng.next_below(20);
+            let h = (stride * (1 + rng.next_below(6))).max(k);
+            let l = ConvLayer::new("t", n_in, n_out, h, h, k, stride);
+            let (w, gamma, beta) = make_params(&l, rng);
+            let input = FeatureMap::from_vec(
+                n_in,
+                h,
+                h,
+                (0..n_in * h * h).map(|_| rng.next_sym()).collect(),
+            );
+            let stream = pack_weights(&l, &w, 16);
+            let p = LayerParams {
+                layer: &l,
+                stream: &stream,
+                gamma: &gamma,
+                beta: &beta,
+            };
+            let (out, _) = run_layer(&p, &input, None, Precision::F32, (7, 7));
+            let want = ref_conv(&l, &w, &gamma, &beta, &input, None);
+            testkit::assert_allclose(&out.data, &want.data, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn bypass_accumulates_before_bias() {
+        let mut rng = SplitMix64::new(3);
+        let l = ConvLayer::new("b", 4, 4, 6, 6, 3, 1).with_bypass(true);
+        let (w, gamma, beta) = make_params(&l, &mut rng);
+        let input = FeatureMap::from_vec(4, 6, 6, (0..4 * 36).map(|_| rng.next_sym()).collect());
+        let byp = FeatureMap::from_vec(4, 6, 6, (0..4 * 36).map(|_| rng.next_sym()).collect());
+        let stream = pack_weights(&l, &w, 16);
+        let p = LayerParams {
+            layer: &l,
+            stream: &stream,
+            gamma: &gamma,
+            beta: &beta,
+        };
+        let (out, _) = run_layer(&p, &input, Some(&byp), Precision::F32, (7, 7));
+        let want = ref_conv(&l, &w, &gamma, &beta, &input, Some(&byp));
+        testkit::assert_allclose(&out.data, &want.data, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn f16_rounding_bounds_error_vs_f32() {
+        let mut rng = SplitMix64::new(9);
+        let l = ConvLayer::new("f", 16, 16, 8, 8, 3, 1);
+        let (w, gamma, beta) = make_params(&l, &mut rng);
+        let input =
+            FeatureMap::from_vec(16, 8, 8, (0..16 * 64).map(|_| rng.next_sym()).collect());
+        let stream = pack_weights(&l, &w, 16);
+        let p = LayerParams {
+            layer: &l,
+            stream: &stream,
+            gamma: &gamma,
+            beta: &beta,
+        };
+        let (o16, _) = run_layer(&p, &input, None, Precision::F16, (7, 7));
+        let (o32, _) = run_layer(&p, &input, None, Precision::F32, (7, 7));
+        let d = o16.max_abs_diff(&o32);
+        assert!(d > 0.0, "FP16 must actually round");
+        // 144-term accumulation of O(1) values: error stays ~ulp·√n.
+        assert!(d < 0.5, "f16 error too large: {d}");
+    }
+
+    #[test]
+    fn access_counts_match_formulas() {
+        let l = ConvLayer::new("a", 16, 64, 56, 56, 3, 1);
+        let mut rng = SplitMix64::new(1);
+        let (w, gamma, beta) = make_params(&l, &mut rng);
+        let input =
+            FeatureMap::from_vec(16, 56, 56, (0..16 * 56 * 56).map(|_| rng.next_sym()).collect());
+        let stream = pack_weights(&l, &w, 16);
+        let p = LayerParams {
+            layer: &l,
+            stream: &stream,
+            gamma: &gamma,
+            beta: &beta,
+        };
+        let (_, acc) = run_layer(&p, &input, None, Precision::F16, (7, 7));
+        // Conv reads: n_out × h·w × 9 taps × 16 c_in.
+        assert_eq!(acc.fmm_reads, 64 * 56 * 56 * 9 * 16);
+        assert_eq!(acc.fmm_writes, 64 * 56 * 56);
+        assert_eq!(acc.accumulates, acc.fmm_reads);
+        // Stream: 4 c_out tiles × 9 × 16 words; re-read per pixel (8×8−1).
+        assert_eq!(acc.stream_words, 4 * 9 * 16);
+        assert_eq!(acc.wbuf_reads, 4 * 9 * 16 * 63);
+        assert_eq!(acc.post_mults, 64 * 56 * 56);
+        assert_eq!(acc.post_adds, 64 * 56 * 56); // bias only, no bypass
+    }
+
+    #[test]
+    fn neighbor_reads_only_at_tile_borders() {
+        // 1×1 conv never crosses tiles; 3×3 does at internal boundaries.
+        let mut rng = SplitMix64::new(5);
+        let l1 = ConvLayer::new("c1", 4, 16, 14, 14, 1, 1);
+        let (w, g, b) = make_params(&l1, &mut rng);
+        let input =
+            FeatureMap::from_vec(4, 14, 14, (0..4 * 196).map(|_| rng.next_sym()).collect());
+        let s = pack_weights(&l1, &w, 16);
+        let p = LayerParams {
+            layer: &l1,
+            stream: &s,
+            gamma: &g,
+            beta: &b,
+        };
+        let (_, acc) = run_layer(&p, &input, None, Precision::F32, (7, 7));
+        assert_eq!(acc.neighbor_reads, 0);
+
+        let l3 = ConvLayer::new("c3", 4, 16, 14, 14, 3, 1);
+        let (w, g, b) = make_params(&l3, &mut rng);
+        let s = pack_weights(&l3, &w, 16);
+        let p = LayerParams {
+            layer: &l3,
+            stream: &s,
+            gamma: &g,
+            beta: &b,
+        };
+        let (_, acc3) = run_layer(&p, &input, None, Precision::F32, (7, 7));
+        // 7×7 tile grid on 14×14: each tile is 2×2; borders everywhere.
+        assert!(acc3.neighbor_reads > 0);
+        assert!(acc3.neighbor_reads < acc3.fmm_reads);
+    }
+
+    #[test]
+    fn relu_clamps_negative_outputs() {
+        let l = ConvLayer::new("r", 1, 16, 2, 2, 1, 1);
+        let w = vec![-1.0f32; 16];
+        let gamma = vec![1.0f32; 16];
+        let beta = vec![0.0f32; 16];
+        let input = FeatureMap::from_vec(1, 2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let stream = pack_weights(&l, &w, 16);
+        let p = LayerParams {
+            layer: &l,
+            stream: &stream,
+            gamma: &gamma,
+            beta: &beta,
+        };
+        let (out, _) = run_layer(&p, &input, None, Precision::F32, (7, 7));
+        assert!(out.data.iter().all(|&v| v == 0.0));
+    }
+}

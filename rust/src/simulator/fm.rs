@@ -1,0 +1,158 @@
+//! Feature-map tensor used by the functional simulator.
+
+use crate::util::f16::round_f16;
+
+/// A (channels, height, width) feature map in row-major `[c][y][x]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeatureMap {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<f32>,
+}
+
+impl FeatureMap {
+    pub fn zeros(c: usize, h: usize, w: usize) -> Self {
+        FeatureMap {
+            c,
+            h,
+            w,
+            data: vec![0.0; c * h * w],
+        }
+    }
+
+    pub fn from_vec(c: usize, h: usize, w: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), c * h * w);
+        FeatureMap { c, h, w, data }
+    }
+
+    #[inline]
+    pub fn get(&self, c: usize, y: usize, x: usize) -> f32 {
+        self.data[(c * self.h + y) * self.w + x]
+    }
+
+    /// Zero-padded read (the DDU's padding logic): out-of-bounds → 0.
+    #[inline]
+    pub fn get_padded(&self, c: usize, y: isize, x: isize) -> f32 {
+        if y < 0 || x < 0 || y >= self.h as isize || x >= self.w as isize {
+            0.0
+        } else {
+            self.get(c, y as usize, x as usize)
+        }
+    }
+
+    #[inline]
+    pub fn set(&mut self, c: usize, y: usize, x: usize, v: f32) {
+        self.data[(c * self.h + y) * self.w + x] = v;
+    }
+
+    /// Round every element to the nearest representable FP16 value
+    /// (storage quantization when an external f32 FM enters the FMM).
+    pub fn quantize_f16(&mut self) {
+        for v in &mut self.data {
+            *v = round_f16(*v);
+        }
+    }
+
+    /// Extract the spatial sub-tile `[y0..y1) × [x0..x1)` of all channels.
+    pub fn slice(&self, y0: usize, y1: usize, x0: usize, x1: usize) -> FeatureMap {
+        let mut out = FeatureMap::zeros(self.c, y1 - y0, x1 - x0);
+        for c in 0..self.c {
+            for y in y0..y1 {
+                for x in x0..x1 {
+                    out.set(c, y - y0, x - x0, self.get(c, y, x));
+                }
+            }
+        }
+        out
+    }
+
+    /// Channel-wise concatenation (YOLOv3 FPN merges).
+    pub fn concat_channels(&self, other: &FeatureMap) -> FeatureMap {
+        assert_eq!((self.h, self.w), (other.h, other.w));
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        FeatureMap::from_vec(self.c + other.c, self.h, self.w, data)
+    }
+
+    /// Maximum absolute difference to another FM of the same shape.
+    /// NaN anywhere (e.g. a poisoned, never-exchanged halo pixel)
+    /// propagates to the result — `f32::max` alone would silently drop
+    /// it (caught by the mesh fault-injection test).
+    pub fn max_abs_diff(&self, other: &FeatureMap) -> f32 {
+        assert_eq!((self.c, self.h, self.w), (other.c, other.h, other.w));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, |m, d| {
+                if m.is_nan() || d.is_nan() {
+                    f32::NAN
+                } else {
+                    m.max(d)
+                }
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_round_trip() {
+        let mut fm = FeatureMap::zeros(2, 3, 4);
+        fm.set(1, 2, 3, 5.0);
+        assert_eq!(fm.get(1, 2, 3), 5.0);
+        assert_eq!(fm.data[(1 * 3 + 2) * 4 + 3], 5.0);
+    }
+
+    #[test]
+    fn padded_reads_are_zero_outside() {
+        let mut fm = FeatureMap::zeros(1, 2, 2);
+        fm.set(0, 0, 0, 7.0);
+        assert_eq!(fm.get_padded(0, -1, 0), 0.0);
+        assert_eq!(fm.get_padded(0, 0, 2), 0.0);
+        assert_eq!(fm.get_padded(0, 0, 0), 7.0);
+    }
+
+    #[test]
+    fn f16_quantization_rounds_storage() {
+        let mut fm = FeatureMap::from_vec(1, 1, 2, vec![2049.0, 0.1]);
+        fm.quantize_f16();
+        assert_eq!(fm.get(0, 0, 0), 2048.0);
+        assert!((fm.get(0, 0, 1) - 0.1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn slicing_extracts_subtile() {
+        let mut fm = FeatureMap::zeros(1, 4, 4);
+        for y in 0..4 {
+            for x in 0..4 {
+                fm.set(0, y, x, (y * 4 + x) as f32);
+            }
+        }
+        let s = fm.slice(1, 3, 2, 4);
+        assert_eq!((s.h, s.w), (2, 2));
+        assert_eq!(s.get(0, 0, 0), 6.0); // (y=1, x=2)
+        assert_eq!(s.get(0, 1, 1), 11.0); // (y=2, x=3)
+    }
+
+    #[test]
+    fn max_abs_diff_propagates_nan() {
+        let a = FeatureMap::from_vec(1, 1, 2, vec![1.0, f32::NAN]);
+        let b = FeatureMap::from_vec(1, 1, 2, vec![1.0, 1.0]);
+        assert!(a.max_abs_diff(&b).is_nan());
+        let c = FeatureMap::from_vec(1, 1, 2, vec![1.0, 3.0]);
+        assert_eq!(c.max_abs_diff(&b), 2.0);
+    }
+
+    #[test]
+    fn concat_stacks_channels() {
+        let a = FeatureMap::from_vec(1, 1, 2, vec![1.0, 2.0]);
+        let b = FeatureMap::from_vec(2, 1, 2, vec![3.0, 4.0, 5.0, 6.0]);
+        let c = a.concat_channels(&b);
+        assert_eq!(c.c, 3);
+        assert_eq!(c.get(2, 0, 1), 6.0);
+    }
+}

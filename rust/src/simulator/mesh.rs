@@ -1,0 +1,574 @@
+//! Multi-chip systolic mesh simulator (§V): the whole network executed on
+//! an m×n array of chips, each holding only its FM tile plus the border
+//! and corner halos received from its neighbours.
+//!
+//! Protocol fidelity: halo pixels start as NaN and are only overwritten
+//! by the exchange phase — any read of a pixel that was never exchanged
+//! poisons the output and fails the bit-exactness check against the
+//! single-chip reference. Corner pixels travel via the vertical
+//! neighbour (two hops, no diagonal wires, §V-B).
+
+use std::collections::HashMap;
+
+use crate::bwn::WeightStream;
+use crate::coordinator::border::{link_flits, ExchangeFlags};
+use crate::network::{Network, TensorRef};
+use crate::util::f16::round_f16;
+
+use super::chip::Precision;
+use super::fm::FeatureMap;
+
+/// Per-layer parameters for the mesh run (same content as
+/// [`super::chip::LayerParams`], owned per step).
+pub struct StepParams {
+    pub stream: WeightStream,
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+}
+
+/// Aggregate traffic statistics of a mesh run.
+#[derive(Debug, Clone, Default)]
+pub struct MeshStats {
+    /// Bits exchanged over direct (N/S/E/W) links for borders.
+    pub border_bits: u64,
+    /// Bits for corner pixels (counted per hop; two hops each).
+    pub corner_bits: u64,
+    /// 4-bit link flits total (border interface serialization, §V-D).
+    pub flits: u64,
+    /// Input distribution bits (tiles + initial halo; not exchange).
+    pub input_bits: u64,
+    /// Exchange protocol flags, aggregated over chips.
+    pub flags: ExchangeFlags,
+}
+
+/// One chip's view of one tensor: its owned tile extended by a 1-pixel
+/// halo ring (NaN until received; zero where outside the global FM).
+struct ExtTile {
+    /// Owned global region `[y0, y1) × [x0, x1)`.
+    y0: usize,
+    y1: usize,
+    x0: usize,
+    x1: usize,
+    /// Data covering `[y0-1, y1+1) × [x0-1, x1+1)` in global coords.
+    data: FeatureMap,
+}
+
+impl ExtTile {
+    fn new(c: usize, y0: usize, y1: usize, x0: usize, x1: usize, gh: usize, gw: usize) -> Self {
+        let mut data = FeatureMap::zeros(c, y1 - y0 + 2, x1 - x0 + 2);
+        // Ring: NaN inside the FM (must be exchanged), 0 outside (padding).
+        for ch in 0..c {
+            for ly in 0..data.h {
+                for lx in 0..data.w {
+                    let gy = y0 as isize + ly as isize - 1;
+                    let gx = x0 as isize + lx as isize - 1;
+                    let owned = gy >= y0 as isize
+                        && gy < y1 as isize
+                        && gx >= x0 as isize
+                        && gx < x1 as isize;
+                    let inside = gy >= 0 && gx >= 0 && (gy as usize) < gh && (gx as usize) < gw;
+                    if !owned {
+                        data.set(ch, ly, lx, if inside { f32::NAN } else { 0.0 });
+                    }
+                }
+            }
+        }
+        ExtTile {
+            y0,
+            y1,
+            x0,
+            x1,
+            data,
+        }
+    }
+
+    #[inline]
+    fn read(&self, c: usize, gy: isize, gx: isize) -> f32 {
+        let ly = gy - self.y0 as isize + 1;
+        let lx = gx - self.x0 as isize + 1;
+        assert!(
+            ly >= 0 && lx >= 0 && (ly as usize) < self.data.h && (lx as usize) < self.data.w,
+            "read outside tile+halo: global ({gy},{gx}) for tile y[{},{}) x[{},{})",
+            self.y0,
+            self.y1,
+            self.x0,
+            self.x1
+        );
+        self.data.get(c, ly as usize, lx as usize)
+    }
+
+    #[inline]
+    fn write_own(&mut self, c: usize, gy: usize, gx: usize, v: f32) {
+        self.data
+            .set(c, gy - self.y0 + 1, gx - self.x0 + 1, v);
+    }
+
+    /// Write a received halo pixel (global coords on the ring).
+    #[inline]
+    fn write_halo(&mut self, c: usize, gy: isize, gx: isize, v: f32) {
+        let ly = (gy - self.y0 as isize + 1) as usize;
+        let lx = (gx - self.x0 as isize + 1) as usize;
+        self.data.set(c, ly, lx, v);
+    }
+}
+
+/// Global coordinates of the 1-pixel halo ring around a tile.
+fn ring_coords(
+    y0: usize,
+    y1: usize,
+    x0: usize,
+    x1: usize,
+) -> impl Iterator<Item = (isize, isize)> {
+    let (y0, y1, x0, x1) = (y0 as isize, y1 as isize, x0 as isize, x1 as isize);
+    let top = (x0 - 1..=x1).map(move |x| (y0 - 1, x));
+    let bottom = (x0 - 1..=x1).map(move |x| (y1, x));
+    let left = (y0..y1).map(move |y| (y, x0 - 1));
+    let right = (y0..y1).map(move |y| (y, x1));
+    top.chain(bottom).chain(left).chain(right)
+}
+
+/// The mesh simulator.
+pub struct MeshSim {
+    pub rows: usize,
+    pub cols: usize,
+    pub prec: Precision,
+    pub fm_bits: usize,
+    /// Fault injection: drop the Nth border send of the whole run (the
+    /// NaN-poisoned halo then propagates to the output — used to verify
+    /// the protocol checking actually bites).
+    pub fault_drop_send: Option<u64>,
+}
+
+impl MeshSim {
+    pub fn new(rows: usize, cols: usize, prec: Precision) -> Self {
+        MeshSim {
+            rows,
+            cols,
+            prec,
+            fm_bits: 16,
+            fault_drop_send: None,
+        }
+    }
+
+    fn bounds(&self, dim: usize, parts: usize, i: usize) -> (usize, usize) {
+        assert_eq!(
+            dim % parts,
+            0,
+            "mesh simulator requires FM dims divisible by the mesh ({dim} % {parts})"
+        );
+        let t = dim / parts;
+        (i * t, (i + 1) * t)
+    }
+
+    #[inline]
+    fn rnd(&self, x: f32) -> f32 {
+        match self.prec {
+            Precision::F16 => round_f16(x),
+            Precision::F32 => x,
+        }
+    }
+
+    /// Run a whole network on the mesh. `params[i]` belongs to step `i`.
+    /// Returns the re-assembled final FM and the traffic statistics.
+    pub fn run_network(
+        &self,
+        net: &Network,
+        params: &[StepParams],
+        input: &FeatureMap,
+    ) -> (FeatureMap, MeshStats) {
+        assert_eq!(params.len(), net.steps.len());
+        let mut stats = MeshStats::default();
+
+        // Consumer halo per tensor (0 → no exchange needed).
+        let n = net.steps.len();
+        let tid = |r: TensorRef| match r {
+            TensorRef::Input => 0usize,
+            TensorRef::Step(i) => 1 + i,
+        };
+        let mut halo = vec![0usize; n + 1];
+        for s in &net.steps {
+            let h = s.layer.k / 2;
+            for r in std::iter::once(s.src).chain(s.bypass).chain(s.concat_extra) {
+                halo[tid(r)] = halo[tid(r)].max(h);
+            }
+        }
+
+        // Per-chip tensor store: (row, col) → tensor id → ExtTile.
+        let mut tiles: Vec<HashMap<usize, ExtTile>> =
+            (0..self.rows * self.cols).map(|_| HashMap::new()).collect();
+
+        // Distribute the input: owned tile + pre-filled halo ring (the
+        // halo arrives as part of the input load, §V).
+        let (ic, ih, iw) = (net.in_ch, net.in_h, net.in_w);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let (y0, y1) = self.bounds(ih, self.rows, r);
+                let (x0, x1) = self.bounds(iw, self.cols, c);
+                let mut t = ExtTile::new(ic, y0, y1, x0, x1, ih, iw);
+                for ch in 0..ic {
+                    for gy in y0..y1 {
+                        for gx in x0..x1 {
+                            t.write_own(ch, gy, gx, input.get(ch, gy, gx));
+                        }
+                    }
+                }
+                // Pre-fill the ring from the global input.
+                if halo[0] > 0 {
+                    for ch in 0..ic {
+                        for (gy, gx) in ring_coords(y0, y1, x0, x1) {
+                            if gy >= 0 && gx >= 0 && (gy as usize) < ih && (gx as usize) < iw {
+                                t.write_halo(ch, gy, gx, input.get(ch, gy as usize, gx as usize));
+                                stats.input_bits += self.fm_bits as u64;
+                            }
+                        }
+                    }
+                }
+                stats.input_bits += (ic * (y1 - y0) * (x1 - x0) * self.fm_bits) as u64;
+                tiles[r * self.cols + c].insert(0, t);
+            }
+        }
+
+        // Execute steps.
+        for (si, step) in net.steps.iter().enumerate() {
+            let l = &step.layer;
+            assert!(!step.upsample2x, "mesh sim does not model upsampling");
+            let p = &params[si];
+            let (ho, wo) = (l.h_out(), l.w_out());
+            let half = (l.k / 2) as isize;
+            let gso = l.n_out / l.groups;
+            let nie = l.n_in / l.groups;
+            let src_id = tid(step.src);
+            let byp_id = step.bypass.map(tid);
+            let cat_id = step.concat_extra.map(tid);
+            let (src_c, _, _) = net.shape_of(step.src);
+
+            // Compute each chip's output tile.
+            for r in 0..self.rows {
+                for c in 0..self.cols {
+                    let idx = r * self.cols + c;
+                    let (oy0, oy1) = self.bounds(ho, self.rows, r);
+                    let (ox0, ox1) = self.bounds(wo, self.cols, c);
+                    let mut out = ExtTile::new(l.n_out, oy0, oy1, ox0, ox1, ho, wo);
+                    {
+                        let chip = &tiles[idx];
+                        let src = chip.get(&src_id).expect("src tile");
+                        let cat = cat_id.map(|t| chip.get(&t).expect("concat tile"));
+                        let byp = byp_id.map(|t| chip.get(&t).expect("bypass tile"));
+                        let read_in = |ch: usize, gy: isize, gx: isize| -> f32 {
+                            if ch < src_c {
+                                src.read(ch, gy, gx)
+                            } else {
+                                cat.expect("channel beyond src without concat")
+                                    .read(ch - src_c, gy, gx)
+                            }
+                        };
+                        // Perf (§Perf log): hoist each output channel's
+                        // binary weights into a sign-mask table (as in
+                        // chip.rs) instead of div/mod stream lookups per
+                        // MAC; padded taps skip the c_in loop (v ± 0 is
+                        // exact).
+                        let taps = l.k * l.k;
+                        let mut wmask = vec![0u32; taps * nie];
+                        for co in 0..l.n_out {
+                            let cb = (co / gso) * nie;
+                            for tap in 0..taps {
+                                for ci in 0..nie {
+                                    wmask[tap * nie + ci] =
+                                        if p.stream.weight(co, ci, tap) > 0.0 {
+                                            0
+                                        } else {
+                                            0x8000_0000
+                                        };
+                                }
+                            }
+                            for gy in oy0..oy1 {
+                                for gx in ox0..ox1 {
+                                    let mut v = 0.0f32;
+                                    for tap in 0..taps {
+                                        let dy = (tap / l.k) as isize - half;
+                                        let dx = (tap % l.k) as isize - half;
+                                        let iy = (gy * l.stride) as isize + dy;
+                                        let ix = (gx * l.stride) as isize + dx;
+                                        // Global zero padding at FM edges.
+                                        if iy < 0
+                                            || ix < 0
+                                            || iy >= l.h as isize
+                                            || ix >= l.w as isize
+                                        {
+                                            continue;
+                                        }
+                                        let row = &wmask[tap * nie..(tap + 1) * nie];
+                                        for (ci, &mask) in row.iter().enumerate() {
+                                            let x = read_in(cb + ci, iy, ix);
+                                            v = self
+                                                .rnd(v + f32::from_bits(x.to_bits() ^ mask));
+                                        }
+                                    }
+                                    if l.bnorm {
+                                        v = self.rnd(v * p.gamma[co]);
+                                    }
+                                    if let Some(bp) = byp {
+                                        v = self.rnd(v + bp.read(co, gy as isize, gx as isize));
+                                    }
+                                    v = self.rnd(v + p.beta[co]);
+                                    if l.relu && v < 0.0 {
+                                        v = 0.0;
+                                    }
+                                    out.write_own(co, gy, gx, v);
+                                }
+                            }
+                        }
+                    }
+                    tiles[idx].insert(1 + si, out);
+                }
+            }
+
+            // Exchange phase for this tensor, if any consumer needs halo.
+            if halo[1 + si] > 0 {
+                self.exchange(1 + si, l.n_out, ho, wo, &mut tiles, &mut stats);
+            }
+        }
+
+        // Reassemble the final output.
+        let (fc, fh, fw) = net.out_shape();
+        let mut final_fm = FeatureMap::zeros(fc, fh, fw);
+        let last = net.steps.len(); // tensor id of last output
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let t = &tiles[r * self.cols + c][&last];
+                for ch in 0..fc {
+                    for gy in t.y0..t.y1 {
+                        for gx in t.x0..t.x1 {
+                            final_fm.set(ch, gy, gx, t.read(ch, gy as isize, gx as isize));
+                        }
+                    }
+                }
+            }
+        }
+        assert!(stats.flags.is_quiescent(), "unmatched border sends");
+        (final_fm, stats)
+    }
+
+    /// The send-once border/corner exchange for one tensor (§V-B).
+    fn exchange(
+        &self,
+        tensor: usize,
+        channels: usize,
+        gh: usize,
+        gw: usize,
+        tiles: &mut [HashMap<usize, ExtTile>],
+        stats: &mut MeshStats,
+    ) {
+        let idx = |r: usize, c: usize| r * self.cols + c;
+        // Collect sends: (dst_chip, ch, gy, gx, value, hops).
+        let mut sends: Vec<(usize, usize, isize, isize, f32, u32)> = Vec::new();
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let t = &tiles[idx(r, c)][&tensor];
+                let (y0, y1, x0, x1) = (t.y0, t.y1, t.x0, t.x1);
+                for ch in 0..channels {
+                    // Direct borders: N/S rows, W/E cols.
+                    if r > 0 {
+                        for gx in x0..x1 {
+                            sends.push((idx(r - 1, c), ch, y0 as isize, gx as isize,
+                                        t.read(ch, y0 as isize, gx as isize), 1));
+                        }
+                    }
+                    if r + 1 < self.rows {
+                        for gx in x0..x1 {
+                            sends.push((idx(r + 1, c), ch, y1 as isize - 1, gx as isize,
+                                        t.read(ch, y1 as isize - 1, gx as isize), 1));
+                        }
+                    }
+                    if c > 0 {
+                        for gy in y0..y1 {
+                            sends.push((idx(r, c - 1), ch, gy as isize, x0 as isize,
+                                        t.read(ch, gy as isize, x0 as isize), 1));
+                        }
+                    }
+                    if c + 1 < self.cols {
+                        for gy in y0..y1 {
+                            sends.push((idx(r, c + 1), ch, gy as isize, x1 as isize - 1,
+                                        t.read(ch, gy as isize, x1 as isize - 1), 1));
+                        }
+                    }
+                    // Corners: via the vertical neighbour (2 hops).
+                    for (dr, dc) in [(-1isize, -1isize), (-1, 1), (1, -1), (1, 1)] {
+                        let nr = r as isize + dr;
+                        let nc = c as isize + dc;
+                        if nr < 0 || nc < 0 || nr >= self.rows as isize || nc >= self.cols as isize
+                        {
+                            continue;
+                        }
+                        let gy = if dr < 0 { y0 as isize } else { y1 as isize - 1 };
+                        let gx = if dc < 0 { x0 as isize } else { x1 as isize - 1 };
+                        sends.push((
+                            idx(nr as usize, nc as usize),
+                            ch,
+                            gy,
+                            gx,
+                            t.read(ch, gy, gx),
+                            2,
+                        ));
+                        stats.flags.forwarded();
+                    }
+                }
+            }
+        }
+        for (dst, ch, gy, gx, v, hops) in sends {
+            // Fault injection: silently lose one transfer.
+            let seq = stats.flags.completed + stats.flags.awaiting;
+            if self.fault_drop_send == Some(seq) {
+                continue;
+            }
+            stats.flags.sent();
+            let bits = self.fm_bits as u64 * hops as u64;
+            if hops == 1 {
+                stats.border_bits += bits;
+            } else {
+                stats.corner_bits += bits;
+            }
+            stats.flits += link_flits(1, self.fm_bits) * hops as u64;
+            let t = tiles[dst].get_mut(&tensor).expect("dst tile");
+            // Only ring positions matter; interior duplicates are skipped
+            // by construction (borders of the neighbour are our ring).
+            let _ = (gh, gw);
+            t.write_halo(ch, gy, gx, v);
+            stats.flags.received();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bwn::pack_weights;
+    use crate::network::{zoo, Network, TensorRef};
+    use crate::simulator::chip::{run_layer, LayerParams};
+    use crate::util::SplitMix64;
+
+    fn random_params(net: &Network, seed: u64) -> Vec<StepParams> {
+        let mut rng = SplitMix64::new(seed);
+        net.steps
+            .iter()
+            .map(|s| {
+                let l = &s.layer;
+                let nie = l.n_in / l.groups;
+                let w: Vec<f32> = (0..l.n_out * nie * l.k * l.k)
+                    .map(|_| rng.next_sym())
+                    .collect();
+                // BWN-style scale α/fan-in keeps FP16 activations in
+                // range over deep stacks (overflow → inf − inf = NaN).
+                let fan_in = (nie * l.k * l.k) as f32;
+                StepParams {
+                    stream: pack_weights(l, &w, 16),
+                    gamma: (0..l.n_out)
+                        .map(|_| (0.25 + 0.5 * rng.next_f32()) / fan_in)
+                        .collect(),
+                    beta: (0..l.n_out).map(|_| 0.1 * rng.next_sym()).collect(),
+                }
+            })
+            .collect()
+    }
+
+    fn single_chip_run(net: &Network, params: &[StepParams], input: &FeatureMap,
+                       prec: Precision) -> FeatureMap {
+        let mut outs: Vec<FeatureMap> = Vec::new();
+        for (i, s) in net.steps.iter().enumerate() {
+            let src = match s.src {
+                TensorRef::Input => input,
+                TensorRef::Step(j) => &outs[j],
+            };
+            let src = if let Some(cat) = s.concat_extra {
+                let extra = match cat {
+                    TensorRef::Input => input,
+                    TensorRef::Step(j) => &outs[j],
+                };
+                src.concat_channels(extra)
+            } else {
+                src.clone()
+            };
+            let byp = s.bypass.map(|b| match b {
+                TensorRef::Input => input.clone(),
+                TensorRef::Step(j) => outs[j].clone(),
+            });
+            let lp = LayerParams {
+                layer: &s.layer,
+                stream: &params[i].stream,
+                gamma: &params[i].gamma,
+                beta: &params[i].beta,
+            };
+            let (o, _) = run_layer(&lp, &src, byp.as_ref(), prec, (7, 7));
+            outs.push(o);
+        }
+        outs.pop().unwrap()
+    }
+
+    fn hypernet_input(seed: u64) -> FeatureMap {
+        let mut rng = SplitMix64::new(seed);
+        FeatureMap::from_vec(16, 32, 32, (0..16 * 32 * 32).map(|_| rng.next_sym()).collect())
+    }
+
+    #[test]
+    fn mesh_2x2_matches_single_chip_bit_exactly_f16() {
+        let net = zoo::hypernet20();
+        let params = random_params(&net, 0xabcd);
+        let input = hypernet_input(7);
+        let single = single_chip_run(&net, &params, &input, Precision::F16);
+        let mesh = MeshSim::new(2, 2, Precision::F16);
+        let (out, stats) = mesh.run_network(&net, &params, &input);
+        assert_eq!(out.max_abs_diff(&single), 0.0, "must be bit-exact");
+        assert!(stats.border_bits > 0);
+        assert!(stats.corner_bits > 0);
+    }
+
+    #[test]
+    fn mesh_4x4_matches_single_chip() {
+        let net = zoo::hypernet20();
+        let params = random_params(&net, 0x1234);
+        let input = hypernet_input(11);
+        let single = single_chip_run(&net, &params, &input, Precision::F32);
+        let mesh = MeshSim::new(4, 4, Precision::F32);
+        let (out, _) = mesh.run_network(&net, &params, &input);
+        assert_eq!(out.max_abs_diff(&single), 0.0);
+    }
+
+    #[test]
+    fn asymmetric_mesh_matches() {
+        let net = zoo::hypernet20();
+        let params = random_params(&net, 0x777);
+        let input = hypernet_input(3);
+        let single = single_chip_run(&net, &params, &input, Precision::F16);
+        let mesh = MeshSim::new(2, 4, Precision::F16);
+        let (out, _) = mesh.run_network(&net, &params, &input);
+        assert_eq!(out.max_abs_diff(&single), 0.0);
+    }
+
+    #[test]
+    fn border_traffic_matches_coordinator_accounting() {
+        // The functional exchange and the analytic Fig-11 accounting must
+        // agree exactly (same rule: halo-consuming tensors only).
+        let net = zoo::hypernet20();
+        let params = random_params(&net, 0x99);
+        let input = hypernet_input(5);
+        let mesh = MeshSim::new(2, 2, Precision::F32);
+        let (_, stats) = mesh.run_network(&net, &params, &input);
+        let plan = crate::coordinator::tiling::MeshPlan {
+            rows: 2,
+            cols: 2,
+            per_chip_wcl_words: 0,
+        };
+        let analytic = crate::coordinator::tiling::border_exchange_bits(&net, &plan, 16);
+        assert_eq!(stats.border_bits + stats.corner_bits, analytic);
+    }
+
+    #[test]
+    #[should_panic(expected = "divisible")]
+    fn indivisible_mesh_rejected() {
+        let net = zoo::hypernet20();
+        let params = random_params(&net, 1);
+        let input = hypernet_input(1);
+        let mesh = MeshSim::new(3, 3, Precision::F32); // 32 % 3 != 0
+        let _ = mesh.run_network(&net, &params, &input);
+    }
+}

@@ -1,0 +1,20 @@
+//! Functional + cycle-accurate simulation of the Hyperdrive silicon.
+//!
+//! * [`fm`] — feature-map tensors with optional bit-exact FP16 rounding
+//!   (the chip's datapath precision).
+//! * [`chip`] — one chip: executes a layer exactly as Algorithm 1 does
+//!   (tap-outer / c_in-inner accumulation order, fused
+//!   scale→bypass→bias→ReLU) while counting every FMM/WBuf/stream access
+//!   for the energy breakdown (Fig 10).
+//! * [`mesh`] — the m×n multi-chip systolic array (§V): per-chip FM
+//!   tiles, border/corner memories, the send-once exchange protocol —
+//!   validated bit-exactly against the single-chip reference.
+
+pub mod banks;
+pub mod chip;
+pub mod fm;
+pub mod mesh;
+
+pub use chip::{run_layer, AccessCounts, Precision};
+pub use fm::FeatureMap;
+pub use mesh::MeshSim;

@@ -1,0 +1,99 @@
+//! Minimal property-based testing harness (the vendored crate set has no
+//! `proptest`).
+//!
+//! [`check`] runs a property over `n` pseudo-random cases derived from a
+//! base seed; on failure it panics with the failing *case seed* so the
+//! exact case can be replayed in isolation with [`replay`].
+
+use crate::util::SplitMix64;
+
+/// Number of cases properties run by default.
+pub const DEFAULT_CASES: usize = 256;
+
+/// Run `prop` over `cases` deterministic pseudo-random cases.
+///
+/// `prop` receives a fresh [`SplitMix64`] per case and returns
+/// `Err(message)` to fail. Panics with the case seed on first failure.
+pub fn check_n<F>(name: &str, base_seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut SplitMix64) -> Result<(), String>,
+{
+    let mut seeder = SplitMix64::new(base_seed);
+    for case in 0..cases {
+        let case_seed = seeder.next_u64();
+        let mut rng = SplitMix64::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property `{name}` failed at case {case}/{cases} \
+                 (replay seed {case_seed:#018x}): {msg}"
+            );
+        }
+    }
+}
+
+/// [`check_n`] with [`DEFAULT_CASES`] cases.
+pub fn check<F>(name: &str, base_seed: u64, prop: F)
+where
+    F: FnMut(&mut SplitMix64) -> Result<(), String>,
+{
+    check_n(name, base_seed, DEFAULT_CASES, prop);
+}
+
+/// Re-run a single failing case by its reported seed.
+pub fn replay<F>(case_seed: u64, mut prop: F)
+where
+    F: FnMut(&mut SplitMix64) -> Result<(), String>,
+{
+    let mut rng = SplitMix64::new(case_seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("replayed case {case_seed:#018x} failed: {msg}");
+    }
+}
+
+/// Assert two f32 slices match within absolute + relative tolerance.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!("index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0usize;
+        check_n("trivial", 1, 50, |rng| {
+            ran += 1;
+            let x = rng.next_f32();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("out of range: {x}"))
+            }
+        });
+        assert_eq!(ran, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check_n("always-fails", 2, 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-6], 1e-5, 0.0).is_ok());
+        assert!(assert_allclose(&[1.0], &[1.1], 1e-3, 1e-3).is_err());
+        assert!(assert_allclose(&[1.0], &[1.0, 2.0], 1.0, 1.0).is_err());
+        assert!(assert_allclose(&[f32::NAN], &[1.0], 10.0, 10.0).is_err());
+    }
+}

@@ -1,0 +1,240 @@
+//! Bit-exact IEEE 754 binary16 (FP16) emulation.
+//!
+//! The Hyperdrive datapath accumulates feature maps in FP16 (§VI: "We use
+//! the half-precision floating point (FP16) number format for the FMs as a
+//! conservative choice"). The functional simulator reproduces that
+//! behaviour by rounding every intermediate accumulate to binary16 with
+//! round-to-nearest-even, exactly like the chip's FP16 adder would.
+
+/// An IEEE 754 binary16 value stored as its raw bit pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct F16(pub u16);
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+
+    /// Convert from f32 with round-to-nearest-even (the hardware default).
+    pub fn from_f32(x: f32) -> F16 {
+        F16(f32_to_f16_bits(x))
+    }
+
+    /// Widen to f32 (exact — every f16 is representable in f32).
+    pub fn to_f32(self) -> f32 {
+        f16_bits_to_f32(self.0)
+    }
+
+    /// FP16 add: widen, add in f32 (the adder's internal precision is at
+    /// least the significand width, so a single operation is exact before
+    /// the output rounding), round back to f16.
+    pub fn add(self, rhs: F16) -> F16 {
+        F16::from_f32(self.to_f32() + rhs.to_f32())
+    }
+
+    /// FP16 subtract (the "sign-input" path of the Tile-PU adder).
+    pub fn sub(self, rhs: F16) -> F16 {
+        F16::from_f32(self.to_f32() - rhs.to_f32())
+    }
+
+    /// FP16 multiply (the shared per-tile multiplier).
+    pub fn mul(self, rhs: F16) -> F16 {
+        F16::from_f32(self.to_f32() * rhs.to_f32())
+    }
+
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7c00) == 0x7c00 && (self.0 & 0x03ff) != 0
+    }
+}
+
+/// f32 → binary16 bits, round-to-nearest-even, with denormal and
+/// overflow-to-infinity handling.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN. Preserve a quiet NaN payload bit.
+        return sign | 0x7c00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+
+    // Unbiased exponent, rebiased for f16 (bias 15).
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if e <= 0 {
+        // Subnormal or zero. shift = number of extra mantissa bits to drop.
+        if e < -10 {
+            return sign; // underflow to ±0
+        }
+        let m = mant | 0x0080_0000; // implicit leading 1
+        let shift = (14 - e) as u32; // 14..24
+        let half = 1u32 << (shift - 1);
+        let rounded = m + (half - 1) + ((m >> shift) & 1);
+        return sign | (rounded >> shift) as u16;
+    }
+
+    // Normal: drop 13 mantissa bits with RNE.
+    let round_bit = 0x0000_1000u32;
+    let m = mant + (round_bit - 1) + ((mant >> 13) & 1);
+    if m & 0x0080_0000 != 0 {
+        // Mantissa rounding overflowed into the exponent.
+        let e2 = e + 1;
+        if e2 >= 0x1f {
+            return sign | 0x7c00;
+        }
+        return sign | ((e2 as u16) << 10);
+    }
+    sign | ((e as u16) << 10) | (m >> 13) as u16
+}
+
+/// binary16 bits → f32 (exact widening).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x03ff) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign // ±0
+        } else {
+            // Subnormal: value = mant·2⁻²⁴; normalize with k shifts so the
+            // f32 biased exponent is 127 − 14 − k = 113 − k.
+            let mut m = mant;
+            let mut k = 0u32;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                k += 1;
+            }
+            m &= 0x03ff;
+            sign | ((113 - k) << 23) | (m << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13) // inf / NaN
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round an f32 to the nearest representable f16 value, staying in f32.
+///
+/// Fast path (§Perf log): values in the f16 *normal* range are rounded
+/// by RNE bit-twiddling directly on the f32 representation (drop 13
+/// mantissa bits), avoiding the two-way format conversion. Subnormals,
+/// zeros, overflow and NaN take the exact slow path. Equivalence with
+/// the reference conversion is property-tested below.
+#[inline]
+pub fn round_f16(x: f32) -> f32 {
+    let bits = x.to_bits();
+    let exp = (bits >> 23) & 0xff;
+    // f16 normals: unbiased exponent −14..=15 → f32 biased 113..=142.
+    if (113..=142).contains(&exp) {
+        let rounded = bits.wrapping_add(0xfff + ((bits >> 13) & 1)) & !0x1fff;
+        // Carry past 65504 overflows to +-inf (exp 143 after rounding).
+        if (rounded >> 23) & 0xff == 143 {
+            return f32::from_bits((bits & 0x8000_0000) | 0x7f80_0000);
+        }
+        return f32::from_bits(rounded);
+    }
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers_round_trip() {
+        for i in -2048i32..=2048 {
+            let x = i as f32;
+            assert_eq!(round_f16(x), x, "f16 must represent |i| <= 2048");
+        }
+    }
+
+    #[test]
+    fn known_bit_patterns() {
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f32_to_f16_bits(0.5), 0x3800);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff); // f16::MAX
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7c00); // rounds to +inf
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+    }
+
+    #[test]
+    fn round_to_nearest_even_ties() {
+        // 2049 is exactly between 2048 and 2050 → ties to even (2048).
+        assert_eq!(round_f16(2049.0), 2048.0);
+        // 2051 is between 2050 and 2052 → ties to even (2052).
+        assert_eq!(round_f16(2051.0), 2052.0);
+    }
+
+    #[test]
+    fn subnormals() {
+        let min_sub = 5.960_464_5e-8; // 2^-24
+        assert_eq!(f32_to_f16_bits(min_sub), 0x0001);
+        assert_eq!(f16_bits_to_f32(0x0001), min_sub);
+        // Below half the smallest subnormal → flush to zero.
+        assert_eq!(f32_to_f16_bits(min_sub / 4.0), 0x0000);
+    }
+
+    #[test]
+    fn nan_and_inf_propagate() {
+        assert!(F16::from_f32(f32::NAN).is_nan());
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        assert_eq!(f16_bits_to_f32(0x7c00), f32::INFINITY);
+    }
+
+    #[test]
+    fn fp16_accumulate_loses_precision_like_hardware() {
+        // 2048 + 1 is not representable in f16 (ulp at 2048 is 2).
+        let a = F16::from_f32(2048.0);
+        let one = F16::from_f32(1.0);
+        assert_eq!(a.add(one).to_f32(), 2048.0);
+        // ...but 2048 + 2 is.
+        let two = F16::from_f32(2.0);
+        assert_eq!(a.add(two).to_f32(), 2050.0);
+    }
+
+    #[test]
+    fn fast_round_matches_reference_conversion() {
+        // The bit-twiddled fast path must agree with the exact two-way
+        // conversion everywhere: random floats, boundaries, specials.
+        let reference = |x: f32| f16_bits_to_f32(f32_to_f16_bits(x));
+        let mut rng = crate::util::SplitMix64::new(0xf16);
+        for _ in 0..200_000 {
+            let bits = rng.next_u64() as u32;
+            let x = f32::from_bits(bits);
+            if x.is_nan() {
+                assert!(round_f16(x).is_nan());
+                continue;
+            }
+            let fast = round_f16(x);
+            let slow = reference(x);
+            assert_eq!(fast.to_bits(), slow.to_bits(), "x={x:e} ({bits:#010x})");
+        }
+        for x in [
+            0.0f32, -0.0, 1.0, -1.0, 65504.0, 65519.9, 65520.0, 65536.0,
+            -65520.0, 6.1e-5, 6.0e-5, 5.96e-8, 2.9e-8, 1e-40,
+            f32::INFINITY, f32::NEG_INFINITY, f32::MAX, f32::MIN_POSITIVE,
+        ] {
+            assert_eq!(round_f16(x).to_bits(), reference(x).to_bits(), "x={x:e}");
+        }
+    }
+
+    #[test]
+    fn exhaustive_f16_to_f32_round_trip() {
+        // Every finite f16 must survive f16 -> f32 -> f16 unchanged.
+        for bits in 0u16..=0xffff {
+            let h = F16(bits);
+            if h.is_nan() {
+                continue;
+            }
+            let back = F16::from_f32(h.to_f32());
+            assert_eq!(back.0, bits, "bits {bits:#06x}");
+        }
+    }
+}

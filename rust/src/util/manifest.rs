@@ -1,0 +1,176 @@
+//! Parser for the AOT artifact manifest (`artifacts/manifest.tsv`).
+//!
+//! The manifest is a line-oriented `key=value` format written by
+//! `python/compile/aot.py` — deliberately trivial so the Rust side needs
+//! no JSON dependency. Record kinds: `artifact`, `network`, `step`,
+//! `blob`, `golden`, `blobfile`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One parsed record: the leading word plus its `key=value` fields.
+#[derive(Debug, Clone)]
+pub struct Record {
+    pub kind: String,
+    pub fields: HashMap<String, String>,
+}
+
+impl Record {
+    pub fn get(&self, key: &str) -> Result<&str> {
+        self.fields
+            .get(key)
+            .map(String::as_str)
+            .with_context(|| format!("record `{}` missing field `{key}`", self.kind))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.get(key)?
+            .parse()
+            .with_context(|| format!("field `{key}` is not a usize"))
+    }
+
+    pub fn get_isize(&self, key: &str) -> Result<isize> {
+        self.get(key)?
+            .parse()
+            .with_context(|| format!("field `{key}` is not an isize"))
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<bool> {
+        Ok(self.get_usize(key)? != 0)
+    }
+}
+
+/// A parsed manifest plus the directory it lives in (for resolving files).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub records: Vec<Record>,
+}
+
+impl Manifest {
+    /// Parse `dir/manifest.tsv`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Ok(Manifest {
+            dir,
+            records: parse(&text)?,
+        })
+    }
+
+    /// All records of a given kind, in file order.
+    pub fn of_kind<'a>(&'a self, kind: &'a str) -> impl Iterator<Item = &'a Record> {
+        self.records.iter().filter(move |r| r.kind == kind)
+    }
+
+    /// The unique record of a kind, or an error.
+    pub fn unique<'a>(&'a self, kind: &str) -> Result<&'a Record> {
+        let mut it = self.records.iter().filter(|r| r.kind == kind);
+        let first = it
+            .next()
+            .with_context(|| format!("manifest has no `{kind}` record"))?;
+        if it.next().is_some() {
+            bail!("manifest has more than one `{kind}` record");
+        }
+        Ok(first)
+    }
+
+    /// Resolve a manifest-relative file name.
+    pub fn file(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+}
+
+/// Parse manifest text into records. Blank lines and `#` comments skipped.
+pub fn parse(text: &str) -> Result<Vec<Record>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let kind = parts
+            .next()
+            .with_context(|| format!("line {}: empty record", lineno + 1))?
+            .to_string();
+        let mut fields = HashMap::new();
+        for part in parts {
+            let (k, v) = part
+                .split_once('=')
+                .with_context(|| format!("line {}: token `{part}` is not key=value", lineno + 1))?;
+            if fields.insert(k.to_string(), v.to_string()).is_some() {
+                bail!("line {}: duplicate key `{k}`", lineno + 1);
+            }
+        }
+        out.push(Record { kind, fields });
+    }
+    Ok(out)
+}
+
+/// Read a raw little-endian f32 blob file.
+pub fn read_f32_blob(path: impl AsRef<Path>) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("blob length {} not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+artifact name=conv_a kind=conv k=3 stride=1 n_in=16 n_out=16 h=32 w=32 bypass=0 relu=1 dtype=f32 file=a.hlo.txt
+
+step idx=0 name=s1b0c1 artifact=conv_a src=-1 bypass=-2
+blob step=s1b0c1 field=w off=0 len=2304
+";
+
+    #[test]
+    fn parses_kinds_and_fields() {
+        let recs = parse(SAMPLE).unwrap();
+        assert_eq!(recs.len(), 3);
+        assert_eq!(recs[0].kind, "artifact");
+        assert_eq!(recs[0].get("name").unwrap(), "conv_a");
+        assert_eq!(recs[0].get_usize("k").unwrap(), 3);
+        assert!(!recs[0].get_bool("bypass").unwrap());
+        assert_eq!(recs[1].get_isize("src").unwrap(), -1);
+        assert_eq!(recs[1].get_isize("bypass").unwrap(), -2);
+        assert_eq!(recs[2].get_usize("len").unwrap(), 2304);
+    }
+
+    #[test]
+    fn missing_field_is_contextual_error() {
+        let recs = parse("artifact name=x").unwrap();
+        let err = recs[0].get("kind").unwrap_err().to_string();
+        assert!(err.contains("missing field `kind`"), "{err}");
+    }
+
+    #[test]
+    fn rejects_malformed_tokens() {
+        assert!(parse("artifact name").is_err());
+        assert!(parse("artifact a=1 a=2").is_err());
+    }
+
+    #[test]
+    fn f32_blob_round_trip() {
+        let dir = std::env::temp_dir().join("hyperdrive_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("blob.bin");
+        let vals = [1.0f32, -2.5, 3.25e-3];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&p, bytes).unwrap();
+        assert_eq!(read_f32_blob(&p).unwrap(), vals);
+    }
+}

@@ -1,0 +1,59 @@
+//! Small in-repo substrates: bit-exact FP16 emulation, a deterministic
+//! PRNG, and the artifact-manifest parser.
+//!
+//! These exist because the offline vendored crate set has no `half`,
+//! `rand` or `serde_json`; each is small, fully tested, and behaviourally
+//! sufficient for the reproduction (see DESIGN.md §Substitutions).
+
+pub mod f16;
+pub mod manifest;
+pub mod rng;
+
+pub use f16::F16;
+pub use rng::SplitMix64;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Format a bit count the way the paper's tables do (e.g. `6.4M`, `459k`).
+pub fn fmt_bits(bits: u64) -> String {
+    if bits >= 1_000_000_000 {
+        format!("{:.1}G", bits as f64 / 1e9)
+    } else if bits >= 1_000_000 {
+        format!("{:.1}M", bits as f64 / 1e6)
+    } else if bits >= 1_000 {
+        format!("{:.1}k", bits as f64 / 1e3)
+    } else {
+        format!("{bits}")
+    }
+}
+
+/// Format an operation count (`7.10G`, `2.94M`, ...).
+pub fn fmt_ops(ops: u64) -> String {
+    fmt_bits(ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(224, 7), 32);
+        assert_eq!(ceil_div(225, 7), 33);
+        assert_eq!(ceil_div(1, 7), 1);
+        assert_eq!(ceil_div(0, 7), 0);
+    }
+
+    #[test]
+    fn bit_formatting_matches_paper_style() {
+        assert_eq!(fmt_bits(6_400_000), "6.4M");
+        assert_eq!(fmt_bits(459_000), "459.0k");
+        assert_eq!(fmt_bits(2_500_000_000), "2.5G");
+        assert_eq!(fmt_bits(12), "12");
+    }
+}

@@ -1,0 +1,262 @@
+//! Property-based tests over the coordinator invariants: WCL liveness,
+//! memory planning, scheduling, tiling and the weight stream — on
+//! randomly generated (but always valid) networks.
+
+use hyperdrive::bwn::pack_weights;
+use hyperdrive::coordinator::schedule::{
+    layer_cycles, schedule_network, schedule_network_mesh, DepthwisePolicy,
+};
+use hyperdrive::coordinator::tiling::{border_exchange_bits, per_chip_wcl_words, MeshPlan};
+use hyperdrive::coordinator::{memory, wcl};
+use hyperdrive::network::{ConvLayer, Network, TensorRef};
+use hyperdrive::testkit;
+use hyperdrive::util::SplitMix64;
+use hyperdrive::ChipConfig;
+
+/// Generate a random valid residual network (ResNet-style shape grammar:
+/// stages of basic blocks with optional strided transitions).
+fn random_network(rng: &mut SplitMix64) -> Network {
+    let ch0 = 8 * (1 + rng.next_below(3)); // 8/16/24
+    let hw0 = 8 * (1 + rng.next_below(4)); // 8..32
+    let mut net = Network::new("prop", ch0, hw0, hw0);
+    let mut prev = TensorRef::Input;
+    let (mut ch, mut hw) = (ch0, hw0);
+    let stages = 1 + rng.next_below(3);
+    let mut li = 0;
+    for s in 0..stages {
+        let blocks = 1 + rng.next_below(2);
+        for b in 0..blocks {
+            let strided = s > 0 && b == 0 && hw >= 2;
+            let out_ch = if strided { ch * 2 } else { ch };
+            let stride = if strided { 2 } else { 1 };
+            let c1 = net.push(
+                ConvLayer::new(format!("l{li}a"), ch, out_ch, hw, hw, 3, stride),
+                prev,
+                None,
+            );
+            li += 1;
+            let shortcut = if strided {
+                let sk = net.push(
+                    ConvLayer::new(format!("l{li}sk"), ch, out_ch, hw, hw, 1, 2)
+                        .with_relu(false),
+                    prev,
+                    None,
+                );
+                li += 1;
+                TensorRef::Step(sk)
+            } else {
+                prev
+            };
+            hw = hw.div_ceil(stride);
+            ch = out_ch;
+            prev = TensorRef::Step(net.push(
+                ConvLayer::new(format!("l{li}b"), ch, ch, hw, hw, 3, 1)
+                    .with_bypass(true)
+                    .with_bypass_separate(strided),
+                TensorRef::Step(c1),
+                Some(shortcut),
+            ));
+            li += 1;
+        }
+    }
+    net.validate().unwrap();
+    net
+}
+
+#[test]
+fn prop_wcl_bounds() {
+    testkit::check("WCL bounds", 0x11, |rng| {
+        let net = random_network(rng);
+        let a = wcl::analyze(&net);
+        // Lower bound: the largest single-layer in+out (non-aliased).
+        let lower = net
+            .steps
+            .iter()
+            .map(|s| {
+                s.layer.in_words()
+                    + if s.bypass.is_some() { 0 } else { s.layer.out_words() }
+            })
+            .max()
+            .unwrap();
+        // Upper bound: sum of all FM volumes.
+        if a.wcl_words < lower {
+            return Err(format!("wcl {} < lower {lower}", a.wcl_words));
+        }
+        if a.wcl_words > a.all_fm_words {
+            return Err(format!("wcl {} > all FMs {}", a.wcl_words, a.all_fm_words));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_memory_plan_peak_equals_wcl() {
+    // The allocator must realize the analysis bound exactly (§IV-B
+    // realizability) on every generated network.
+    testkit::check_n("plan peak == WCL", 0x22, 128, |rng| {
+        let net = random_network(rng);
+        let a = wcl::analyze(&net);
+        let p = memory::plan(&net, a.wcl_words)
+            .map_err(|e| format!("plan failed at WCL capacity: {e}"))?;
+        if p.peak_words != a.wcl_words {
+            return Err(format!("peak {} != wcl {}", p.peak_words, a.wcl_words));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_placements_within_capacity() {
+    testkit::check_n("placements in bounds", 0x33, 128, |rng| {
+        let net = random_network(rng);
+        let p = memory::plan_tight(&net).map_err(|e| e.to_string())?;
+        for (i, pl) in p.outputs.iter().enumerate() {
+            if pl.words() != net.steps[i].layer.out_words() {
+                return Err(format!("step {i}: placement words mismatch"));
+            }
+            for e in &pl.extents {
+                if e.offset + e.words > p.capacity_words {
+                    return Err(format!("step {i}: extent beyond capacity"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_schedule_cycles_consistent() {
+    let cfg = ChipConfig::default();
+    testkit::check("cycles vs ops bounds", 0x44, |rng| {
+        let net = random_network(rng);
+        let s = schedule_network(&net, &cfg, DepthwisePolicy::default());
+        // Real throughput can never exceed peak.
+        let opc = s.ops_per_cycle();
+        if opc > cfg.ops_per_cycle() as f64 + 1e-9 {
+            return Err(format!("op/cycle {opc} exceeds peak"));
+        }
+        // Sum of per-layer cycles equals the total.
+        let sum: u64 = s.per_layer.iter().map(|(_, lc)| lc.total()).sum();
+        if sum != s.total_cycles() {
+            return Err("per-layer sum != total".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mesh_scheduling_never_slower_per_chip() {
+    let cfg = ChipConfig::default();
+    testkit::check_n("mesh speedup", 0x55, 128, |rng| {
+        let net = random_network(rng);
+        let s1 = schedule_network(&net, &cfg, DepthwisePolicy::default());
+        let s2 = schedule_network_mesh(&net, &cfg, DepthwisePolicy::default(), 2, 2);
+        if s2.total_cycles() > s1.total_cycles() {
+            return Err(format!(
+                "2x2 mesh per-chip cycles {} > single {}",
+                s2.total_cycles(),
+                s1.total_cycles()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_per_chip_wcl_monotone() {
+    testkit::check_n("per-chip WCL monotone", 0x66, 96, |rng| {
+        let net = random_network(rng);
+        let w1 = per_chip_wcl_words(&net, 1, 1);
+        let w2 = per_chip_wcl_words(&net, 2, 2);
+        let w4 = per_chip_wcl_words(&net, 4, 4);
+        if !(w4 <= w2 && w2 <= w1) {
+            return Err(format!("not monotone: {w1} {w2} {w4}"));
+        }
+        // Ceil-padding bound: a 2×2 mesh holds at least a quarter.
+        if w2 < w1 / 4 {
+            return Err(format!("2x2 wcl {w2} below exact quarter of {w1}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_border_exchange_scales_with_mesh() {
+    testkit::check_n("border exchange growth", 0x77, 96, |rng| {
+        let net = random_network(rng);
+        let plan = |r, c| MeshPlan {
+            rows: r,
+            cols: c,
+            per_chip_wcl_words: 0,
+        };
+        let b1 = border_exchange_bits(&net, &plan(1, 1), 16);
+        let b2 = border_exchange_bits(&net, &plan(2, 2), 16);
+        let b3 = border_exchange_bits(&net, &plan(3, 3), 16);
+        if b1 != 0 {
+            return Err("single chip must exchange nothing".into());
+        }
+        if b3 < b2 {
+            return Err(format!("3x3 {b3} < 2x2 {b2}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_weight_stream_bits_match_layer() {
+    let cfg = ChipConfig::default();
+    testkit::check("stream bits = padded weight bits", 0x88, |rng| {
+        let net = random_network(rng);
+        let s = schedule_network(&net, &cfg, DepthwisePolicy::default());
+        let padded: u64 = net
+            .steps
+            .iter()
+            .map(|st| {
+                let l = &st.layer;
+                (l.n_out.div_ceil(cfg.c) * cfg.c * l.k * l.k * (l.n_in / l.groups)) as u64
+            })
+            .sum();
+        if s.stream_bits != padded {
+            return Err(format!("{} != {padded}", s.stream_bits));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pack_weights_wire_bits() {
+    testkit::check("wire bits vs weight bits", 0x99, |rng| {
+        let n_in = 1 + rng.next_below(16);
+        let n_out = 1 + rng.next_below(48);
+        let k = if rng.next_u64() & 1 == 0 { 1 } else { 3 };
+        let l = ConvLayer::new("p", n_in, n_out, 8, 8, k, 1);
+        let w: Vec<f32> = (0..l.weight_bits() as usize).map(|_| rng.next_sym()).collect();
+        let s = pack_weights(&l, &w, 16);
+        // Wire bits are the padded count; at least the true bits.
+        if s.wire_bits() < l.weight_bits() {
+            return Err("wire bits below weight bits".into());
+        }
+        if s.wire_bits() % 16 != 0 {
+            return Err("wire bits not word-aligned".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_layer_cycles_monotone_in_channels() {
+    let cfg = ChipConfig::default();
+    testkit::check("layer cycle scaling", 0xaa, |rng| {
+        let n_in = 1 + rng.next_below(32);
+        let n_out = 1 + rng.next_below(64);
+        let hw = 4 + rng.next_below(28);
+        let l1 = ConvLayer::new("a", n_in, n_out, hw, hw, 3, 1);
+        let l2 = ConvLayer::new("b", n_in, 2 * n_out, hw, hw, 3, 1);
+        let c1 = layer_cycles(&l1, &cfg, DepthwisePolicy::default()).conv;
+        let c2 = layer_cycles(&l2, &cfg, DepthwisePolicy::default()).conv;
+        if c2 < c1 {
+            return Err(format!("2x channels fewer cycles: {c1} -> {c2}"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,207 @@
+//! Mesh-simulator integration properties: on random residual networks
+//! and random mesh shapes, the distributed execution with real
+//! border/corner exchange must be bit-exact vs the single-chip
+//! reference, and its measured traffic must equal the coordinator's
+//! analytic accounting (the Fig 11 model).
+
+use hyperdrive::bwn::pack_weights;
+use hyperdrive::coordinator::tiling::{border_exchange_bits, MeshPlan};
+use hyperdrive::network::{ConvLayer, Network, TensorRef};
+use hyperdrive::simulator::mesh::{MeshSim, StepParams};
+use hyperdrive::simulator::{self, FeatureMap, Precision};
+use hyperdrive::testkit;
+use hyperdrive::util::SplitMix64;
+
+/// Random residual network with dims divisible by 4 (mesh constraint).
+fn random_network(rng: &mut SplitMix64) -> Network {
+    let ch0 = 4 * (1 + rng.next_below(3));
+    let hw0 = 8 * (1 + rng.next_below(2)); // 8 or 16
+    let mut net = Network::new("mesh-prop", ch0, hw0, hw0);
+    let mut prev = TensorRef::Input;
+    let (mut ch, mut hw) = (ch0, hw0);
+    let mut li = 0;
+    for s in 0..2usize {
+        for b in 0..(1 + rng.next_below(2)) {
+            let strided = s > 0 && b == 0;
+            let out_ch = if strided { ch * 2 } else { ch };
+            let stride = if strided { 2 } else { 1 };
+            let c1 = net.push(
+                ConvLayer::new(format!("m{li}a"), ch, out_ch, hw, hw, 3, stride),
+                prev,
+                None,
+            );
+            li += 1;
+            let shortcut = if strided {
+                let sk = net.push(
+                    ConvLayer::new(format!("m{li}sk"), ch, out_ch, hw, hw, 1, 2)
+                        .with_relu(false),
+                    prev,
+                    None,
+                );
+                li += 1;
+                TensorRef::Step(sk)
+            } else {
+                prev
+            };
+            hw = hw.div_ceil(stride);
+            ch = out_ch;
+            prev = TensorRef::Step(net.push(
+                ConvLayer::new(format!("m{li}b"), ch, ch, hw, hw, 3, 1).with_bypass(true),
+                TensorRef::Step(c1),
+                Some(shortcut),
+            ));
+            li += 1;
+        }
+    }
+    net.validate().unwrap();
+    net
+}
+
+fn random_params(net: &Network, rng: &mut SplitMix64) -> Vec<StepParams> {
+    net.steps
+        .iter()
+        .map(|s| {
+            let l = &s.layer;
+            let nie = l.n_in / l.groups;
+            let w: Vec<f32> = (0..l.n_out * nie * l.k * l.k).map(|_| rng.next_sym()).collect();
+            // α/fan-in scaling keeps FP16 activations bounded (see
+            // simulator::mesh tests).
+            let fan_in = (nie * l.k * l.k) as f32;
+            StepParams {
+                stream: pack_weights(l, &w, 16),
+                gamma: (0..l.n_out)
+                    .map(|_| (0.1 + 0.4 * rng.next_f32()) / fan_in)
+                    .collect(),
+                beta: (0..l.n_out).map(|_| 0.1 * rng.next_sym()).collect(),
+            }
+        })
+        .collect()
+}
+
+fn single_chip(net: &Network, params: &[StepParams], input: &FeatureMap, prec: Precision) -> FeatureMap {
+    let mut outs: Vec<FeatureMap> = Vec::new();
+    for (i, s) in net.steps.iter().enumerate() {
+        let src = match s.src {
+            TensorRef::Input => input,
+            TensorRef::Step(j) => &outs[j],
+        };
+        let byp = s.bypass.map(|b| match b {
+            TensorRef::Input => input.clone(),
+            TensorRef::Step(j) => outs[j].clone(),
+        });
+        let lp = simulator::chip::LayerParams {
+            layer: &s.layer,
+            stream: &params[i].stream,
+            gamma: &params[i].gamma,
+            beta: &params[i].beta,
+        };
+        let (o, _) = simulator::run_layer(&lp, src, byp.as_ref(), prec, (7, 7));
+        outs.push(o);
+    }
+    outs.pop().unwrap()
+}
+
+#[test]
+fn prop_mesh_bit_exact_vs_single_chip() {
+    testkit::check_n("mesh == single chip", 0x3e5a, 12, |rng| {
+        let net = random_network(rng);
+        let params = random_params(&net, rng);
+        let input = FeatureMap::from_vec(
+            net.in_ch,
+            net.in_h,
+            net.in_w,
+            (0..net.in_ch * net.in_h * net.in_w).map(|_| rng.next_sym()).collect(),
+        );
+        let prec = if rng.next_u64() & 1 == 0 {
+            Precision::F16
+        } else {
+            Precision::F32
+        };
+        let want = single_chip(&net, &params, &input, prec);
+        // Mesh shapes dividing 8: 2×2, 2×4, 4×2, 4×4.
+        let shapes = [(2usize, 2usize), (2, 4), (4, 2), (4, 4)];
+        let (r, c) = shapes[rng.next_below(shapes.len())];
+        let sim = MeshSim::new(r, c, prec);
+        let (out, stats) = sim.run_network(&net, &params, &input);
+        if out.max_abs_diff(&want) != 0.0 {
+            return Err(format!("{r}x{c} mesh diverged"));
+        }
+        if !stats.flags.is_quiescent() {
+            return Err("exchange protocol not quiescent".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mesh_traffic_matches_analytic_model() {
+    testkit::check_n("mesh traffic == Fig 11 accounting", 0xacc7, 12, |rng| {
+        let net = random_network(rng);
+        let params = random_params(&net, rng);
+        let input = FeatureMap::from_vec(
+            net.in_ch,
+            net.in_h,
+            net.in_w,
+            (0..net.in_ch * net.in_h * net.in_w).map(|_| rng.next_f32()).collect(),
+        );
+        let (r, c) = [(2usize, 2usize), (2, 4), (4, 4)][rng.next_below(3)];
+        let sim = MeshSim::new(r, c, Precision::F32);
+        let (_, stats) = sim.run_network(&net, &params, &input);
+        let plan = MeshPlan {
+            rows: r,
+            cols: c,
+            per_chip_wcl_words: 0,
+        };
+        let analytic = border_exchange_bits(&net, &plan, 16);
+        let measured = stats.border_bits + stats.corner_bits;
+        if measured != analytic {
+            return Err(format!("measured {measured} != analytic {analytic}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fault_injection_poisons_output() {
+    // Dropping a single border transfer must corrupt the result (the
+    // NaN-initialized halo propagates) — proving the bit-exactness
+    // checks actually exercise the exchange protocol.
+    let mut rng = SplitMix64::new(0xbad);
+    let net = random_network(&mut rng);
+    let params = random_params(&net, &mut rng);
+    let input = FeatureMap::from_vec(
+        net.in_ch,
+        net.in_h,
+        net.in_w,
+        (0..net.in_ch * net.in_h * net.in_w).map(|_| rng.next_sym()).collect(),
+    );
+    let good = {
+        let sim = MeshSim::new(2, 2, Precision::F32);
+        sim.run_network(&net, &params, &input).0
+    };
+    let mut sim = MeshSim::new(2, 2, Precision::F32);
+    sim.fault_drop_send = Some(5);
+    let (bad, _) = sim.run_network(&net, &params, &input);
+    let diff = bad.max_abs_diff(&good);
+    assert!(
+        diff.is_nan() || diff > 0.0,
+        "dropped transfer went unnoticed (diff {diff})"
+    );
+}
+
+#[test]
+fn mesh_flit_count_is_4bit_serialization() {
+    let mut rng = SplitMix64::new(0xf117);
+    let net = random_network(&mut rng);
+    let params = random_params(&net, &mut rng);
+    let input = FeatureMap::from_vec(
+        net.in_ch,
+        net.in_h,
+        net.in_w,
+        (0..net.in_ch * net.in_h * net.in_w).map(|_| rng.next_sym()).collect(),
+    );
+    let sim = MeshSim::new(2, 2, Precision::F32);
+    let (_, stats) = sim.run_network(&net, &params, &input);
+    // 16-bit pixels → 4 flits per hop.
+    assert_eq!(stats.flits * 4, stats.border_bits + stats.corner_bits);
+}

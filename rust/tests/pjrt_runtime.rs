@@ -1,0 +1,174 @@
+//! Integration tests over the PJRT runtime: the full AOT → load →
+//! execute path, cross-checked against the JAX golden files and the
+//! Rust functional simulator. Requires `make artifacts`.
+
+use std::path::PathBuf;
+
+use hyperdrive::network::TensorRef;
+use hyperdrive::runtime::InferenceEngine;
+use hyperdrive::simulator::{self, FeatureMap, Precision};
+use hyperdrive::testkit::assert_allclose;
+
+fn artifacts_dir() -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        dir.join("manifest.tsv").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    dir
+}
+
+fn engine() -> InferenceEngine {
+    InferenceEngine::load(artifacts_dir()).expect("engine load")
+}
+
+#[test]
+fn engine_loads_all_artifacts() {
+    let e = engine();
+    assert_eq!(e.runtime.loaded(), e.manifest.artifacts.len());
+    assert!(e.runtime.has("head"));
+    // Memory plan realizes the WCL exactly (2 × 16·32·32 words).
+    assert_eq!(e.memory_plan.peak_words, 2 * 16 * 32 * 32);
+}
+
+#[test]
+fn e2e_logits_match_jax_golden() {
+    // The headline cross-layer check: Rust+PJRT inference must
+    // reproduce the JAX/Pallas golden logits on the same input.
+    let e = engine();
+    let input = e.manifest.golden("e2e_input.bin").unwrap();
+    let logits = e.infer(&input).unwrap();
+    let golden = e.manifest.golden("e2e_golden.bin").unwrap();
+    assert_eq!(logits.len(), golden.len());
+    assert_allclose(&logits, &golden, 1e-4, 1e-4).unwrap();
+}
+
+#[test]
+fn final_fm_matches_jax_golden() {
+    let e = engine();
+    let input = e.manifest.golden("e2e_input.bin").unwrap();
+    let (fms, _) = e.infer_trace(&input).unwrap();
+    let golden = e.manifest.golden("e2e_final_fm.bin").unwrap();
+    assert_allclose(fms.last().unwrap(), &golden, 1e-4, 1e-4).unwrap();
+}
+
+#[test]
+fn functional_simulator_matches_pjrt_per_layer() {
+    // The Rust chip simulator (f32 datapath) and the XLA-compiled Pallas
+    // kernel must agree layer by layer on the real network.
+    let e = engine();
+    let net = &e.manifest.network;
+    let input_vec = e.manifest.golden("e2e_input.bin").unwrap();
+    let (fms, _) = e.infer_trace(&input_vec).unwrap();
+
+    let input = FeatureMap::from_vec(net.in_ch, net.in_h, net.in_w, input_vec);
+    let mut sim_fms: Vec<FeatureMap> = Vec::new();
+    for (i, s) in net.steps.iter().enumerate() {
+        let l = &s.layer;
+        let src = match s.src {
+            TensorRef::Input => &input,
+            TensorRef::Step(j) => &sim_fms[j],
+        };
+        let byp = s.bypass.map(|b| match b {
+            TensorRef::Input => input.clone(),
+            TensorRef::Step(j) => sim_fms[j].clone(),
+        });
+        let w = e.manifest.blob(&l.name, "w").unwrap();
+        let stream = hyperdrive::bwn::pack_weights(l, w, 16);
+        let params = simulator::chip::LayerParams {
+            layer: l,
+            stream: &stream,
+            gamma: e.manifest.blob(&l.name, "gamma").unwrap(),
+            beta: e.manifest.blob(&l.name, "beta").unwrap(),
+        };
+        let (out, _) =
+            simulator::run_layer(&params, src, byp.as_ref(), Precision::F32, (7, 7));
+        assert_allclose(&out.data, &fms[i], 2e-4, 2e-4)
+            .unwrap_or_else(|m| panic!("layer {} ({}): {m}", i, l.name));
+        sim_fms.push(out);
+    }
+}
+
+#[test]
+fn fp16_datapath_stays_close_to_f32_reference() {
+    // The chip's FP16 rounding must not derail the network: logits from
+    // the FP16 functional simulator stay close to the PJRT f32 result.
+    let e = engine();
+    let net = &e.manifest.network;
+    let input_vec = e.manifest.golden("e2e_input.bin").unwrap();
+    let (fms, _) = e.infer_trace(&input_vec).unwrap();
+
+    let input = FeatureMap::from_vec(net.in_ch, net.in_h, net.in_w, input_vec);
+    let mut sim_fms: Vec<FeatureMap> = Vec::new();
+    for s in &net.steps {
+        let l = &s.layer;
+        let src = match s.src {
+            TensorRef::Input => &input,
+            TensorRef::Step(j) => &sim_fms[j],
+        };
+        let byp = s.bypass.map(|b| match b {
+            TensorRef::Input => input.clone(),
+            TensorRef::Step(j) => sim_fms[j].clone(),
+        });
+        let w = e.manifest.blob(&l.name, "w").unwrap();
+        let stream = hyperdrive::bwn::pack_weights(l, w, 16);
+        let params = simulator::chip::LayerParams {
+            layer: l,
+            stream: &stream,
+            gamma: e.manifest.blob(&l.name, "gamma").unwrap(),
+            beta: e.manifest.blob(&l.name, "beta").unwrap(),
+        };
+        let (out, _) = simulator::run_layer(&params, src, byp.as_ref(), Precision::F16, (7, 7));
+        sim_fms.push(out);
+    }
+    let last = sim_fms.last().unwrap();
+    assert_allclose(&last.data, fms.last().unwrap(), 0.05, 0.05)
+        .expect("FP16 vs f32 divergence too large");
+}
+
+#[test]
+fn runtime_error_paths_are_clean() {
+    use hyperdrive::runtime::Runtime;
+    let mut rt = Runtime::cpu().unwrap();
+    // Missing artifact file.
+    let err = rt
+        .load_artifact("nope", std::path::Path::new("/nonexistent/x.hlo.txt"))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("nonexistent"), "{err}");
+    // Executing an unloaded artifact.
+    let err = rt.execute("ghost", &[]).unwrap_err().to_string();
+    assert!(err.contains("not loaded"), "{err}");
+    // Loading a valid artifact but executing with wrong shapes must
+    // error (not crash).
+    let dir = artifacts_dir();
+    rt.load_artifact(
+        "head",
+        &dir.join("head.hlo.txt"),
+    )
+    .unwrap();
+    let bad = vec![0f32; 3];
+    assert!(rt.execute("head", &[(&bad, &[3])]).is_err());
+}
+
+#[test]
+fn manifest_blob_errors_are_contextual() {
+    let e = engine();
+    let err = e.manifest.blob("s1b0c1", "nonsense").unwrap_err().to_string();
+    assert!(err.contains("nonsense"), "{err}");
+    let err = e.manifest.golden("missing.bin").unwrap_err().to_string();
+    assert!(err.contains("missing.bin"), "{err}");
+}
+
+#[test]
+fn serve_batch_reports_latency() {
+    let e = engine();
+    let input = e.manifest.golden("e2e_input.bin").unwrap();
+    let inputs: Vec<Vec<f32>> = (0..4).map(|_| input.clone()).collect();
+    let (outs, stats) = e.serve(&inputs).unwrap();
+    assert_eq!(outs.len(), 4);
+    assert!(stats.p50_ms > 0.0 && stats.p99_ms >= stats.p50_ms);
+    assert!(stats.ops_per_s > 0.0);
+    // Deterministic engine: identical inputs → identical outputs.
+    assert_eq!(outs[0], outs[3]);
+}
