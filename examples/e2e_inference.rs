@@ -1,48 +1,46 @@
-//! End-to-end driver: the full system on a real small workload.
+//! End-to-end driver: the full system on a real small workload, through
+//! the unified `Engine` façade on its PJRT backend.
 //!
 //! HyperNet-20 (a ResNet-20-style BWN, 20 binary conv layers + FC head,
 //! ~270 k binary weights) runs through every layer of the stack:
 //!
 //!   1. JAX/Pallas (build time) lowered each layer to an HLO artifact and
 //!      produced golden logits (`make artifacts`);
-//!   2. the Rust coordinator plans FMM memory (§IV-B ping-pong, peak ==
-//!      WCL), packs the binary weights into the Tbl-I stream format and
-//!      walks the step list;
+//!   2. `Engine::builder().artifacts(..)` loads the manifest, plans FMM
+//!      memory (§IV-B ping-pong, peak == WCL) and packs the binary
+//!      weights into the Tbl-I stream format;
 //!   3. PJRT executes each layer's compiled kernel; a batch of requests
-//!      is served FIFO with latency statistics;
+//!      is served through the bounded-queue worker pool;
 //!   4. the result is cross-checked against the JAX golden logits, and
-//!      the silicon model reports what the taped-out chip would do on
-//!      the same network (cycles, energy, I/O).
+//!      the typed report shows what the taped-out chip would do on the
+//!      same network (cycles, energy, I/O).
 //!
-//!     make artifacts && cargo run --release --example e2e_inference
+//!     make artifacts && cargo run --release --features pjrt --example e2e_inference
 
-use hyperdrive::coordinator::schedule::{schedule_network, DepthwisePolicy};
-use hyperdrive::coordinator::tiling::MeshPlan;
-use hyperdrive::coordinator::wcl;
-use hyperdrive::energy::model::energy_per_image;
-use hyperdrive::runtime::InferenceEngine;
+use hyperdrive::engine::{Engine, ServeOptions};
 use hyperdrive::util::{fmt_bits, SplitMix64};
-use hyperdrive::ChipConfig;
 
 fn main() -> anyhow::Result<()> {
-    let engine = InferenceEngine::load("artifacts")?;
-    let net = &engine.manifest.network;
+    let engine = Engine::builder().artifacts("artifacts").build()?;
+    let net = engine.network();
     println!(
-        "loaded {} ({} steps, {} binary weights) on PJRT `{}`",
+        "loaded {} ({} steps, {} binary weights) on {}",
         net.name,
         net.steps.len(),
         fmt_bits(net.weight_bits()),
-        engine.runtime.platform()
+        engine.describe()
     );
-    println!(
-        "memory plan: peak {} words == WCL {} words (§IV-B realized)",
-        engine.memory_plan.peak_words,
-        wcl::analyze(net).wcl_words
-    );
+    let report = engine.report();
+    if let Some(plan) = engine.memory_plan() {
+        println!(
+            "memory plan: peak {} words == WCL {} words (§IV-B realized)",
+            plan.peak_words, report.memory.wcl_words
+        );
+    }
 
     // --- correctness: golden check ------------------------------------
-    let input = engine.manifest.golden("e2e_input.bin")?;
-    let golden = engine.manifest.golden("e2e_golden.bin")?;
+    let input = engine.golden("e2e_input.bin")?;
+    let golden = engine.golden("e2e_golden.bin")?;
     let logits = engine.infer(&input)?;
     let max_err = logits
         .iter()
@@ -61,40 +59,33 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(argmax(&logits), argmax(&golden));
     println!("predicted class {} (matches golden)", argmax(&logits));
 
-    // --- serving: batched requests with latency stats ------------------
+    // --- serving: concurrent batch with latency stats ------------------
     let mut rng = SplitMix64::new(7);
     let batch: Vec<Vec<f32>> = (0..16)
         .map(|_| (0..input.len()).map(|_| rng.next_gauss()).collect())
         .collect();
-    let (_, stats) = engine.serve(&batch)?;
-    println!(
-        "served {} requests: mean {:.2} ms, p50 {:.2} ms, p99 {:.2} ms, {:.1} req/s, {:.2} GOp/s",
-        stats.requests,
-        stats.mean_ms,
-        stats.p50_ms,
-        stats.p99_ms,
-        stats.requests as f64 / stats.total_s,
-        stats.ops_per_s / 1e9
-    );
+    let opts = ServeOptions { workers: 2, ..ServeOptions::default() };
+    let (concurrent, stats) = engine.serve(&batch, &opts)?;
+    println!("{}", engine.report_with_serve(stats.clone()).serve_summary());
+
+    // Concurrency must not change results: sequential == concurrent.
+    let seq_opts = ServeOptions { workers: 1, ..ServeOptions::default() };
+    let (sequential, _) = engine.serve(&batch, &seq_opts)?;
+    assert_eq!(concurrent, sequential, "worker pool changed the logits");
+    println!("concurrent ({} workers) == sequential logits ✓", stats.workers);
 
     // --- what the silicon would do on this network ---------------------
-    let cfg = ChipConfig::default();
-    let sched = schedule_network(net, &cfg, DepthwisePolicy::default());
-    let plan = MeshPlan {
-        rows: 1,
-        cols: 1,
-        per_chip_wcl_words: 0,
-    };
-    let rep = energy_per_image(net, &cfg, &plan, 0.5, 1.5, DepthwisePolicy::default());
     println!(
-        "simulated silicon @0.5V+1.5FBB: {} cycles/frame, {:.0} fps, \
+        "simulated silicon @{}V+{}FBB: {} cycles/frame, {:.0} fps, \
          {:.3} mJ/frame ({:.3} core + {:.3} I/O), {:.2} TOp/s/W system",
-        sched.total_cycles(),
-        rep.frame_rate_hz,
-        rep.total_j() * 1e3,
-        rep.core_j * 1e3,
-        rep.io_j * 1e3,
-        rep.system_efficiency_ops_w() / 1e12
+        report.vdd,
+        report.vbb,
+        report.schedule.total_cycles(),
+        report.energy.frame_rate_hz,
+        report.energy.total_j() * 1e3,
+        report.energy.core_j * 1e3,
+        report.energy.io_j * 1e3,
+        report.energy.system_efficiency_ops_w() / 1e12
     );
     println!("e2e_inference OK");
     Ok(())

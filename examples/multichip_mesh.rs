@@ -1,82 +1,84 @@
-//! Multi-chip systolic mesh demo (§V): run HyperNet-20 *functionally* on
-//! a 2×2 and 4×4 mesh of simulated chips — real distributed tiles, real
-//! border/corner memories, real send-once exchange protocol — and verify
-//! the result is bit-exact against the single-chip FP16 reference.
+//! Multi-chip systolic mesh demo (§V) through the unified `Engine`
+//! façade: run HyperNet-20 on 2×2, 2×4 and 4×4 meshes of simulated
+//! chips — real distributed tiles, real border/corner memories, real
+//! send-once exchange protocol — and verify each is bit-exact against
+//! the functional single-chip backend built from the *same* parameters.
 //!
-//!     make artifacts && cargo run --release --example multichip_mesh
+//!     cargo run --release --example multichip_mesh
+//!
+//! Uses the real (trained) manifest parameters when `artifacts/` exists
+//! (`make artifacts`), seeded synthetic BWN parameters otherwise.
 
-use hyperdrive::bwn::pack_weights;
+use std::sync::Arc;
+
 use hyperdrive::coordinator::border;
 use hyperdrive::coordinator::wcl;
-use hyperdrive::network::TensorRef;
-use hyperdrive::runtime::registry::NetworkManifest;
-use hyperdrive::simulator::mesh::{MeshSim, StepParams};
-use hyperdrive::simulator::{self, FeatureMap, Precision};
-use hyperdrive::util::fmt_bits;
+use hyperdrive::engine::{Engine, NetworkParams, Precision};
+use hyperdrive::network::zoo;
+use hyperdrive::runtime::NetworkManifest;
+use hyperdrive::util::{fmt_bits, SplitMix64};
 use hyperdrive::ChipConfig;
 
 fn main() -> anyhow::Result<()> {
-    // Real network + real (manifest) parameters, not random ones.
-    let nm = NetworkManifest::load("artifacts")?;
-    let net = &nm.network;
-    let input_vec = nm.golden("e2e_input.bin")?;
-    let input = FeatureMap::from_vec(net.in_ch, net.in_h, net.in_w, input_vec);
+    // Network + parameters + input: the manifest's own network when
+    // artifacts exist (params are positional per step, so the net must
+    // come from the same source), the zoo twin with seeded parameters
+    // otherwise.
+    let (net, params, input_vec, source) = match NetworkManifest::load("artifacts") {
+        Ok(nm) => {
+            let p = NetworkParams::from_manifest(&nm, 16)?;
+            let input = nm.golden("e2e_input.bin")?;
+            (
+                nm.network.clone(),
+                Arc::new(p),
+                input,
+                "manifest (trained) parameters",
+            )
+        }
+        Err(_) => {
+            let net = zoo::hypernet20();
+            let mut rng = SplitMix64::new(0xbeef);
+            let input = (0..16 * 32 * 32).map(|_| rng.next_sym()).collect();
+            let p = NetworkParams::seeded(&net, 16, 0xabcd);
+            (net, Arc::new(p), input, "seeded synthetic parameters")
+        }
+    };
+    println!("{} with {source}", net.name);
 
-    let params: Vec<StepParams> = net
-        .steps
-        .iter()
-        .map(|s| {
-            let l = &s.layer;
-            StepParams {
-                stream: pack_weights(l, nm.blob(&l.name, "w").unwrap(), 16),
-                gamma: nm.blob(&l.name, "gamma").unwrap().to_vec(),
-                beta: nm.blob(&l.name, "beta").unwrap().to_vec(),
-            }
-        })
-        .collect();
-
-    // Single-chip FP16 reference.
-    let mut ref_fms: Vec<FeatureMap> = Vec::new();
-    for (i, s) in net.steps.iter().enumerate() {
-        let src = match s.src {
-            TensorRef::Input => &input,
-            TensorRef::Step(j) => &ref_fms[j],
-        };
-        let byp = s.bypass.map(|b| match b {
-            TensorRef::Input => input.clone(),
-            TensorRef::Step(j) => ref_fms[j].clone(),
-        });
-        let lp = simulator::chip::LayerParams {
-            layer: &s.layer,
-            stream: &params[i].stream,
-            gamma: &params[i].gamma,
-            beta: &params[i].beta,
-        };
-        let (o, _) = simulator::run_layer(&lp, src, byp.as_ref(), Precision::F16, (7, 7));
-        ref_fms.push(o);
-    }
-    let reference = ref_fms.last().unwrap();
+    // Single-chip FP16 reference through the same façade.
+    let reference = Engine::builder()
+        .network(net.clone())
+        .params(params.clone())
+        .precision(Precision::F16)
+        .build()?;
+    let want = reference.infer(&input_vec)?;
 
     for (rows, cols) in [(2usize, 2usize), (2, 4), (4, 4)] {
-        let sim = MeshSim::new(rows, cols, Precision::F16);
-        let (out, stats) = sim.run_network(net, &params, &input);
-        let diff = out.max_abs_diff(reference);
+        let mesh = Engine::builder()
+            .network(net.clone())
+            .params(params.clone())
+            .mesh(rows, cols)
+            .precision(Precision::F16)
+            .build()?;
+        let got = mesh.infer(&input_vec)?;
+        let exact = got == want;
+        let stats = mesh.mesh_stats().expect("mesh backend records stats");
         println!(
             "{rows}x{cols} mesh: bit-exact = {} | border {} + corner {} exchanged, \
              {} link flits, {} exchange pairs completed",
-            diff == 0.0,
+            exact,
             fmt_bits(stats.border_bits),
             fmt_bits(stats.corner_bits),
             stats.flits,
             stats.flags.completed
         );
-        assert_eq!(diff, 0.0, "mesh output diverged from single chip");
+        assert!(exact, "mesh output diverged from single chip");
     }
 
     // Exchange-vs-compute slack (§V-D): the serial border links must
     // hide under the next layer's compute on the paper's big mesh.
     let cfg = ChipConfig::default();
-    let net2k = hyperdrive::network::zoo::resnet34(1024, 2048);
+    let net2k = zoo::resnet34(1024, 2048);
     let slacks = border::exchange_slack(&net2k, &cfg, 5, 10);
     let worst = slacks
         .iter()
@@ -90,11 +92,11 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Border/corner memory the silicon provisions for this (§V-C).
-    let a = wcl::analyze(net);
+    let a = wcl::analyze(&net);
     println!(
         "BM {} / CM {} per chip for {} (ResNet-34 sizing: {} / {})",
-        fmt_bits(border::border_memory_bits(net, &a, 2, 2, cfg.fm_bits)),
-        fmt_bits(border::corner_memory_bits(net, cfg.fm_bits)),
+        fmt_bits(border::border_memory_bits(&net, &a, 2, 2, cfg.fm_bits)),
+        fmt_bits(border::corner_memory_bits(&net, cfg.fm_bits)),
         net.name,
         fmt_bits(459_000),
         fmt_bits(64_000),

@@ -1,73 +1,72 @@
-//! Object-detection scenario (the paper's motivating application):
-//! YOLOv3 feature extraction at 320×320 on a single Hyperdrive chip, and
-//! ResNet-34 features on Cityscapes-class 2048×1024 frames on a 10×5
-//! systolic mesh — the workloads of Tbl V's bottom half.
+//! Object-detection scenario (the paper's motivating application)
+//! through the unified `Engine` façade: YOLOv3 feature extraction at
+//! 320×320 on a single Hyperdrive chip, and ResNet-34 features on
+//! Cityscapes-class 2048×1024 frames on a 10×5 systolic mesh — the
+//! workloads of Tbl V's bottom half — both read from one typed
+//! `EngineReport` instead of hand-assembled tuples.
 //!
 //!     cargo run --release --example object_detection
 
 use hyperdrive::baselines::published_rows;
-use hyperdrive::coordinator::schedule::{schedule_network, DepthwisePolicy};
-use hyperdrive::coordinator::tiling::{plan_mesh_exact, MeshPlan};
-use hyperdrive::energy::model::energy_per_image;
+use hyperdrive::engine::{DepthwisePolicy, Engine};
 use hyperdrive::network::zoo;
 use hyperdrive::util::fmt_bits;
-use hyperdrive::ChipConfig;
 
-fn main() {
-    let cfg = ChipConfig::default();
-    let dw = DepthwisePolicy::FullRate;
-
+fn main() -> anyhow::Result<()> {
     // --- YOLOv3 @ 320² on one chip --------------------------------------
-    let yolo = zoo::yolov3(320, 320);
-    let sched = schedule_network(&yolo, &cfg, dw);
-    let single = MeshPlan {
-        rows: 1,
-        cols: 1,
-        per_chip_wcl_words: 0,
-    };
-    let r = energy_per_image(&yolo, &cfg, &single, 0.5, 1.5, dw);
+    let rep = Engine::builder()
+        .network(zoo::yolov3(320, 320))
+        .depthwise(DepthwisePolicy::FullRate)
+        .build()?
+        .report();
     println!("== YOLOv3 @320x320, single chip ==");
     println!(
         "ops {} | cycles {} | conv-utilization {:.1}% (paper 82.8%)",
-        fmt_bits(sched.total_ops()),
-        sched.total_cycles(),
-        100.0 * sched.conv_utilization(&cfg)
+        fmt_bits(rep.schedule.total_ops()),
+        rep.schedule.total_cycles(),
+        100.0 * rep.schedule.conv_utilization(&rep.chip)
     );
     println!(
         "energy: {:.1} mJ/frame (core {:.1} + I/O {:.1}) → {:.2} TOp/s/W system \
          (paper: 14.5 mJ, 3.7 TOp/s/W)",
-        r.total_j() * 1e3,
-        r.core_j * 1e3,
-        r.io_j * 1e3,
-        r.system_efficiency_ops_w() / 1e12
+        rep.energy.total_j() * 1e3,
+        rep.energy.core_j * 1e3,
+        rep.energy.io_j * 1e3,
+        rep.energy.system_efficiency_ops_w() / 1e12
     );
-    println!("frame rate {:.1} fps at 0.5 V\n", r.frame_rate_hz);
+    println!("frame rate {:.1} fps at {} V\n", rep.energy.frame_rate_hz, rep.vdd);
 
     // --- ResNet-34 features @ 2048×1024 on a 10×5 mesh ------------------
-    let net = zoo::resnet34(1024, 2048);
-    let plan = plan_mesh_exact(&net, &cfg, 5, 10);
-    let r = energy_per_image(&net, &cfg, &plan, 0.5, 1.5, dw);
-    println!("== ResNet-34 features @2048x1024, {}x{} mesh ==", plan.rows, plan.cols);
+    let rep = Engine::builder()
+        .network(zoo::resnet34(1024, 2048))
+        .mesh(5, 10)
+        .depthwise(DepthwisePolicy::FullRate)
+        .build()?
+        .report();
+    println!(
+        "== ResNet-34 features @2048x1024, {}x{} mesh ==",
+        rep.plan.rows, rep.plan.cols
+    );
     println!(
         "ops {} | per-chip cycles {} | {} chips",
-        fmt_bits(r.ops),
-        r.cycles,
-        r.chips
+        fmt_bits(rep.energy.ops),
+        rep.energy.cycles,
+        rep.energy.chips
     );
     println!(
         "I/O: weights {} (broadcast once) + input {} + border {} = {}",
-        fmt_bits(r.io.weights),
-        fmt_bits(r.io.input_fm),
-        fmt_bits(r.io.border),
-        fmt_bits(r.io.total())
+        fmt_bits(rep.energy.io.weights),
+        fmt_bits(rep.energy.io.input_fm),
+        fmt_bits(rep.energy.io.border),
+        fmt_bits(rep.energy.io.total())
     );
     println!(
         "energy: {:.1} mJ/frame (core {:.1} + I/O {:.1}) → {:.2} TOp/s/W system \
          (paper: 69.5 mJ, 4.3 TOp/s/W)",
-        r.total_j() * 1e3,
-        r.core_j * 1e3,
-        r.io_j * 1e3,
-        r.system_efficiency_ops_w() / 1e12
+        rep.energy.total_j() * 1e3,
+        rep.energy.core_j * 1e3,
+        rep.energy.io_j * 1e3,
+        rep.energy.system_efficiency_ops_w() / 1e12
     );
 
     // --- headline: improvement over the FM-streaming state of the art ---
@@ -76,7 +75,7 @@ fn main() {
         .filter(|row| row.input == "2kx1k")
         .map(|row| row.efficiency_tops_w)
         .fold(0.0, f64::max);
-    let ours = r.system_efficiency_ops_w() / 1e12;
+    let ours = rep.energy.system_efficiency_ops_w() / 1e12;
     println!(
         "\nimprovement over best published FM-streaming accelerator ({best} TOp/s/W): \
          {:.1}x (paper claims 3.1x)",
@@ -84,4 +83,5 @@ fn main() {
     );
     assert!(ours / best > 2.0, "headline improvement collapsed");
     println!("object_detection OK");
+    Ok(())
 }

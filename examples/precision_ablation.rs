@@ -4,27 +4,33 @@
 //! chip mesh for the narrower FM words (the same 6.4 Mbit of SRAM holds
 //! more Q12/Q8 words, so fewer chips are needed at 2048×1024).
 //!
+//! Runs through `Engine::builder()` — the ablation rows are an engine
+//! capability, like the rest of the typed report.
+//!
 //!     cargo run --release --example precision_ablation
 
-use hyperdrive::energy::ablation::{precision_ablation, render};
+use hyperdrive::energy::ablation::render;
+use hyperdrive::engine::Engine;
 use hyperdrive::network::zoo;
-use hyperdrive::ChipConfig;
 
-fn main() {
-    let cfg = ChipConfig::default();
+fn main() -> anyhow::Result<()> {
     for net in [
         zoo::resnet34(224, 224),
         zoo::yolov3(320, 320),
         zoo::resnet34(1024, 2048),
     ] {
-        let rows = precision_ablation(&net, &cfg);
-        println!("{}", render(&net.name, &rows));
+        let engine = Engine::builder().network(net).build()?;
+        let rows = engine.ablation();
+        let rep = engine.report();
+        println!("{}", render(&rep.network, &rows));
         let q12_vs_soa = rows[1].system_eff_ops_w / 1e12 / 1.4;
-        if net.name == "ResNet-34" && net.in_h > 128 {
+        let (_, ih, _) = rep.input_shape;
+        if rep.network == "ResNet-34" && ih > 128 {
             println!(
                 "Q12 vs best FM-streaming SoA (1.4 TOp/s/W): {q12_vs_soa:.1}x \
                  (paper's estimate: ~6.8x)\n"
             );
         }
     }
+    Ok(())
 }

@@ -1,75 +1,58 @@
-//! Quickstart: run one binary-weight convolution layer through the whole
-//! stack — pack the binary weights into the chip's stream format, load
-//! the AOT-compiled Pallas kernel on PJRT, execute, and cross-check
-//! against the Rust functional chip simulator.
+//! Quickstart: the unified `Engine` façade in one page — build an
+//! engine over the functional chip simulator, run a traced inference,
+//! serve a concurrent batch, and read the typed report.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
+//!
+//! (No artifacts needed: the simulator backends generate deterministic
+//! seeded BWN parameters. For the PJRT backend see `e2e_inference`.)
 
-use hyperdrive::bwn::pack_weights;
-use hyperdrive::network::ConvLayer;
-use hyperdrive::runtime::Runtime;
-use hyperdrive::simulator::{self, FeatureMap, Precision};
+use hyperdrive::engine::{Engine, NetworkParams, Precision, ServeOptions};
+use hyperdrive::network::zoo;
 use hyperdrive::util::SplitMix64;
 
 fn main() -> anyhow::Result<()> {
-    // The first HyperNet-20 layer: 16→16 channels, 32×32 FM, 3×3 conv.
-    let layer = ConvLayer::new("quickstart", 16, 16, 32, 32, 3, 1);
-    let artifact = "conv_k3s1_i16o16_h32w32_bp0_relu1";
-
-    // Synthetic input FM and real-valued weights → binarized stream.
-    let mut rng = SplitMix64::new(42);
-    let input: Vec<f32> = (0..16 * 32 * 32).map(|_| rng.next_gauss()).collect();
-    let weights: Vec<f32> = (0..16 * 16 * 9).map(|_| rng.next_gauss()).collect();
-    let gamma = vec![1.0 / (16.0 * 9.0); 16];
-    let beta = vec![0.0f32; 16];
-
-    // 1) The chip's on-pin format: binary weights packed in Tbl-I order.
-    let stream = pack_weights(&layer, &weights, 16);
+    // HyperNet-20 (the e2e validation network) with seeded ±1 weights.
+    let net = zoo::hypernet20();
+    let params = NetworkParams::seeded(&net, 16, 42);
     println!(
-        "weight stream: {} words × 16 bit = {} bits ({}× smaller than FP16 weights)",
-        stream.words.len(),
-        stream.wire_bits(),
-        16
+        "weight streams: {} layers, first layer {} words × 16 bit \
+         (16x smaller than FP16 weights)",
+        params.steps.len(),
+        params.steps[0].stream.words.len(),
     );
 
-    // 2) Execute the AOT-lowered Pallas kernel on PJRT.
-    let mut rt = Runtime::cpu()?;
-    rt.load_artifact(artifact, std::path::Path::new(&format!("artifacts/{artifact}.hlo.txt")))?;
-    let dense = stream.unpack_dense(); // what the weight buffer holds
-    let out = rt.execute(
-        artifact,
-        &[
-            (&input, &[16, 32, 32]),
-            (&dense, &[16, 16, 3, 3]),
-            (&gamma, &[16]),
-            (&beta, &[16]),
-        ],
-    )?;
-    println!("PJRT output: {} values, out[0..4] = {:?}", out.len(), &out[..4]);
+    // 1) Build: functional single-chip backend, FP16 like the silicon.
+    let engine = Engine::builder()
+        .network(net)
+        .params(params)
+        .precision(Precision::F16)
+        .build()?;
 
-    // 3) Cross-check with the functional chip simulator (f32 datapath).
-    let fm = FeatureMap::from_vec(16, 32, 32, input);
-    let params = simulator::chip::LayerParams {
-        layer: &layer,
-        stream: &stream,
-        gamma: &gamma,
-        beta: &beta,
-    };
-    let (sim, counts) = simulator::run_layer(&params, &fm, None, Precision::F32, (7, 7));
-    let max_err = sim
-        .data
-        .iter()
-        .zip(&out)
-        .map(|(a, b)| (a - b).abs())
-        .fold(0.0f32, f32::max);
-    println!("simulator vs PJRT max |err| = {max_err:.3e}");
-    assert!(max_err < 1e-4, "simulator and PJRT disagree");
+    // 2) One traced inference: the hook sees every layer's output FM.
+    let mut rng = SplitMix64::new(7);
+    let input: Vec<f32> = (0..engine.input_len()).map(|_| rng.next_sym()).collect();
+    let mut layers = 0usize;
+    let out = engine.infer_traced(&input, &mut |t| {
+        if t.step < 2 {
+            println!("  step {:>2} `{}` → {:?}", t.step, t.layer, t.shape);
+        }
+        layers += 1;
+    })?;
+    println!("ran {layers} layers; final FM has {} values, out[0..4] = {:?}",
+             out.len(), &out[..4]);
 
-    // 4) What the silicon would do for this layer.
-    println!(
-        "chip accesses: {} FMM reads, {} FMM writes, {} stream words, {} WBuf reads",
-        counts.fmm_reads, counts.fmm_writes, counts.stream_words, counts.wbuf_reads
-    );
+    // 3) Concurrent serving: bounded queue, 2 workers, latency stats.
+    let batch: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..engine.input_len()).map(|_| rng.next_sym()).collect())
+        .collect();
+    let opts = ServeOptions { workers: 2, ..ServeOptions::default() };
+    let (outs, stats) = engine.serve(&batch, &opts)?;
+    assert_eq!(outs.len(), 8);
+    println!("{}", engine.report_with_serve(stats).serve_summary());
+
+    // 4) What the silicon would do for this network (typed report).
+    println!("{}", engine.report().summary());
     println!("quickstart OK");
     Ok(())
 }

@@ -1,11 +1,13 @@
 //! Hot-path micro-benchmarks for the perf pass (EXPERIMENTS.md §Perf):
 //! the functional simulator's conv inner loop, FP16 rounding, weight
-//! packing/unpacking, the mesh exchange, and the memory planner.
+//! packing/unpacking, the mesh exchange, the engine serving layer, and
+//! the memory planner.
 
 mod bench_util;
 
 use hyperdrive::bwn::pack_weights;
 use hyperdrive::coordinator::memory;
+use hyperdrive::engine::{Engine, ServeOptions};
 use hyperdrive::network::{zoo, ConvLayer};
 use hyperdrive::simulator::mesh::{MeshSim, StepParams};
 use hyperdrive::simulator::{self, FeatureMap, Precision};
@@ -82,6 +84,30 @@ fn main() {
         let (out, _) = sim.run_network(&net, &sparams, &inp);
         std::hint::black_box(out.data[0]);
     });
+
+    // Engine serving layer: bounded queue + worker pool over the
+    // functional backend (1 vs 4 workers shows the concurrency win).
+    let engine = Engine::builder()
+        .network(zoo::hypernet20())
+        .seed(7)
+        .precision(Precision::F16)
+        .build()
+        .unwrap();
+    let batch: Vec<Vec<f32>> = (0..4)
+        .map(|_| (0..engine.input_len()).map(|_| rng.next_sym()).collect())
+        .collect();
+    for workers in [1usize, 4] {
+        bench_util::bench(
+            &format!("engine serve HyperNet-20 ×4 ({workers} workers)"),
+            1,
+            3,
+            || {
+                let opts = ServeOptions { workers, ..ServeOptions::default() };
+                let (outs, _) = engine.serve(&batch, &opts).unwrap();
+                std::hint::black_box(outs.len());
+            },
+        );
+    }
 
     // Memory planner on the deepest network.
     let deep = zoo::resnet152(224, 224);

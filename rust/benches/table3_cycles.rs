@@ -1,9 +1,10 @@
 //! Tbl III — ResNet-34 cycle/throughput breakdown from the Algorithm-1
-//! schedule model.
+//! schedule model, consumed through the engine's typed report.
 
 mod bench_util;
 
 use hyperdrive::coordinator::schedule::{schedule_network, DepthwisePolicy};
+use hyperdrive::engine::Engine;
 use hyperdrive::network::zoo;
 use hyperdrive::report;
 use hyperdrive::ChipConfig;
@@ -11,6 +12,17 @@ use hyperdrive::ChipConfig;
 fn main() {
     let cfg = ChipConfig::default();
     println!("{}", report::table3(&cfg));
+
+    // The typed report carries the same schedule the table prints.
+    let rep = Engine::builder()
+        .network(zoo::resnet34(224, 224))
+        .chip(cfg)
+        .build()
+        .unwrap()
+        .report();
+    assert_eq!(rep.schedule.cycles.conv, 4_521_984);
+
+    // Perf: the raw schedule model (coordinator hot path).
     let net = zoo::resnet34(224, 224);
     bench_util::bench("schedule_network(ResNet-34)", 3, 200, || {
         let s = schedule_network(&net, &cfg, DepthwisePolicy::default());

@@ -1,12 +1,11 @@
 //! Tbl V — comparison with the state-of-the-art BWN accelerators:
 //! published competitor rows + Hyperdrive rows from our calibrated model
-//! (incl. the 10×5 and 20×10 multi-chip object-detection rows).
+//! (incl. the 10×5 and 20×10 multi-chip object-detection rows), all
+//! derived from the engine's typed report.
 
 mod bench_util;
 
-use hyperdrive::coordinator::schedule::DepthwisePolicy;
-use hyperdrive::coordinator::tiling::plan_mesh_exact;
-use hyperdrive::energy::model::energy_per_image;
+use hyperdrive::engine::{DepthwisePolicy, Engine};
 use hyperdrive::network::zoo;
 use hyperdrive::report;
 use hyperdrive::ChipConfig;
@@ -14,10 +13,18 @@ use hyperdrive::ChipConfig;
 fn main() {
     let cfg = ChipConfig::default();
     println!("{}", report::table5(&cfg));
-    let net = zoo::resnet34(1024, 2048);
-    let plan = plan_mesh_exact(&net, &cfg, 5, 10);
-    bench_util::bench("energy_per_image(ResNet-34 @2k×1k, 10×5)", 3, 100, || {
-        let r = energy_per_image(&net, &cfg, &plan, 0.5, 1.5, DepthwisePolicy::FullRate);
-        assert!(r.system_efficiency_ops_w() > 3e12);
+
+    // Perf: one full engine build + typed report for the big mesh row
+    // (plan validation, schedule, WCL liveness, energy model).
+    bench_util::bench("EngineReport(ResNet-34 @2k×1k, 10×5)", 3, 50, || {
+        let rep = Engine::builder()
+            .network(zoo::resnet34(1024, 2048))
+            .chip(cfg)
+            .mesh(5, 10)
+            .depthwise(DepthwisePolicy::FullRate)
+            .build()
+            .unwrap()
+            .report();
+        assert!(rep.energy.system_efficiency_ops_w() > 3e12);
     });
 }

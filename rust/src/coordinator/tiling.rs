@@ -106,10 +106,10 @@ pub fn per_chip_wcl_words(net: &Network, rows: usize, cols: usize) -> u64 {
 }
 
 /// Plan the smallest aspect-matched mesh that fits `cfg.fmm_words` per
-/// chip. The column/row ratio follows the FM aspect ratio (e.g. 2048-wide
-/// × 1024-high → cols = 2·rows → 10×5 for ResNet-34, exactly the paper's
-/// configuration).
-pub fn plan_mesh(net: &Network, cfg: &ChipConfig) -> MeshPlan {
+/// chip, or `None` if no mesh up to 64 rows does. The column/row ratio
+/// follows the FM aspect ratio (e.g. 2048-wide × 1024-high → cols =
+/// 2·rows → 10×5 for ResNet-34, exactly the paper's configuration).
+pub fn try_plan_mesh(net: &Network, cfg: &ChipConfig) -> Option<MeshPlan> {
     let aspect = (net.in_w as f64 / net.in_h as f64).max(1e-6);
     for size in 1..=64usize {
         // Candidate meshes near the aspect ratio for this chip count.
@@ -117,14 +117,21 @@ pub fn plan_mesh(net: &Network, cfg: &ChipConfig) -> MeshPlan {
         let cols = ((rows as f64 * aspect).round() as usize).max(1);
         let w = per_chip_wcl_words(net, rows, cols);
         if w <= cfg.fmm_words as u64 {
-            return MeshPlan {
+            return Some(MeshPlan {
                 rows,
                 cols,
                 per_chip_wcl_words: w,
-            };
+            });
         }
     }
-    panic!("no mesh up to 64 rows fits the network — FMM too small");
+    None
+}
+
+/// [`try_plan_mesh`], panicking when nothing fits (the original API;
+/// `engine::EngineBuilder::auto_mesh` uses the fallible form).
+pub fn plan_mesh(net: &Network, cfg: &ChipConfig) -> MeshPlan {
+    try_plan_mesh(net, cfg)
+        .unwrap_or_else(|| panic!("no mesh up to 64 rows fits the network — FMM too small"))
 }
 
 /// Plan an explicit mesh (for reproducing the paper's fixed 10×5 / 20×10

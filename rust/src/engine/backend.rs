@@ -1,0 +1,179 @@
+//! The backend abstraction of the unified engine: one trait that the
+//! PJRT runtime, the single-chip functional simulator and the multi-chip
+//! mesh simulator all implement, plus the shared per-step parameter set
+//! ([`NetworkParams`]) the simulator backends consume.
+
+use std::sync::{Arc, OnceLock};
+
+use crate::bwn::pack_weights;
+use crate::network::Network;
+use crate::runtime::NetworkManifest;
+use crate::simulator::mesh::StepParams;
+use crate::util::SplitMix64;
+
+use super::EngineError;
+
+/// Which execution backend an [`super::Engine`] runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Single-chip functional simulator (`simulator::chip`, Algorithm 1
+    /// bit-faithfully, optionally FP16 like the taped-out datapath).
+    Functional,
+    /// Multi-chip systolic mesh simulator (`simulator::mesh`, §V): real
+    /// distributed FM tiles and the send-once border/corner exchange.
+    Mesh,
+    /// PJRT runtime executing the AOT-compiled Pallas artifacts
+    /// (`runtime::InferenceEngine`; requires the `pjrt` cargo feature
+    /// and `make artifacts`).
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Short name used in reports and CLI output.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Functional => "functional-sim",
+            BackendKind::Mesh => "mesh-sim",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// One per-layer trace event delivered to [`Backend::infer_traced`]
+/// hooks: the step's full output feature map, flattened `[c][y][x]`.
+pub struct LayerTrace<'a> {
+    /// Step index in the network's step list.
+    pub step: usize,
+    /// Layer name (unique within a network).
+    pub layer: &'a str,
+    /// Output shape `(c, h, w)`.
+    pub shape: (usize, usize, usize),
+    /// Flattened output values.
+    pub output: &'a [f32],
+}
+
+/// A backend that can run inferences for one fixed network.
+///
+/// `Send + Sync` is required so the serving layer
+/// ([`super::serve`]) can drive one backend from several worker
+/// threads concurrently.
+pub trait Backend: Send + Sync {
+    /// Which backend this is.
+    fn kind(&self) -> BackendKind;
+
+    /// The chip-mesh footprint the backend executes on (`(1, 1)` for
+    /// single-chip backends).
+    fn mesh_shape(&self) -> (usize, usize) {
+        (1, 1)
+    }
+
+    /// Run one inference. `input` is the flattened on-chip input FM
+    /// (`c·h·w` values); the result is the backend's final output — the
+    /// last feature map for the simulator backends, the class logits
+    /// (off-chip FC head included) for the PJRT backend.
+    fn infer(&self, input: &[f32]) -> Result<Vec<f32>, EngineError> {
+        self.infer_traced(input, &mut |_| {})
+    }
+
+    /// Run one inference, calling `hook` once per executed layer with
+    /// that layer's full output FM (cross-validation / debugging).
+    fn infer_traced(
+        &self,
+        input: &[f32],
+        hook: &mut dyn FnMut(LayerTrace<'_>),
+    ) -> Result<Vec<f32>, EngineError>;
+}
+
+/// Per-step parameters (packed weight stream + folded batch-norm γ/β)
+/// for a whole network — what both simulator backends consume.
+#[derive(Clone)]
+pub struct NetworkParams {
+    pub steps: Vec<StepParams>,
+}
+
+impl NetworkParams {
+    /// Deterministic synthetic parameters from a seed: ±1 weights and
+    /// BWN-style `α/fan-in` batch-norm scales that keep FP16 activations
+    /// in range over deep stacks (overflow would give `inf − inf = NaN`).
+    ///
+    /// `c` is the chip's output-channel parallelism (stream word width).
+    pub fn seeded(net: &Network, c: usize, seed: u64) -> NetworkParams {
+        let mut rng = SplitMix64::new(seed);
+        let steps = net
+            .steps
+            .iter()
+            .map(|s| {
+                let l = &s.layer;
+                let nie = l.n_in / l.groups;
+                let w: Vec<f32> = (0..l.n_out * nie * l.k * l.k)
+                    .map(|_| rng.next_sym())
+                    .collect();
+                let fan_in = (nie * l.k * l.k) as f32;
+                StepParams {
+                    stream: pack_weights(l, &w, c),
+                    gamma: (0..l.n_out)
+                        .map(|_| (0.25 + 0.5 * rng.next_f32()) / fan_in)
+                        .collect(),
+                    beta: (0..l.n_out).map(|_| 0.1 * rng.next_sym()).collect(),
+                }
+            })
+            .collect();
+        NetworkParams { steps }
+    }
+
+    /// Real (trained, binarized) parameters from an AOT artifact
+    /// manifest — the exact tensors the PJRT backend executes with.
+    pub fn from_manifest(nm: &NetworkManifest, c: usize) -> Result<NetworkParams, EngineError> {
+        let mut steps = Vec::with_capacity(nm.network.steps.len());
+        for s in &nm.network.steps {
+            let l = &s.layer;
+            let w = nm
+                .blob(&l.name, "w")
+                .map_err(|e| EngineError::Backend(format!("{e:#}")))?;
+            let gamma = nm
+                .blob(&l.name, "gamma")
+                .map_err(|e| EngineError::Backend(format!("{e:#}")))?;
+            let beta = nm
+                .blob(&l.name, "beta")
+                .map_err(|e| EngineError::Backend(format!("{e:#}")))?;
+            steps.push(StepParams {
+                stream: pack_weights(l, w, c),
+                gamma: gamma.to_vec(),
+                beta: beta.to_vec(),
+            });
+        }
+        Ok(NetworkParams { steps })
+    }
+}
+
+/// Where a simulator backend's parameters come from. Seeded parameters
+/// are materialized lazily on the first inference, so building an
+/// engine purely for its analytic [`super::EngineReport`] (e.g.
+/// ResNet-152 @ 2048×1024) never allocates weight tensors.
+pub(crate) enum ParamSource {
+    Seeded(u64),
+    Explicit(Arc<NetworkParams>),
+}
+
+pub(crate) struct LazyParams {
+    source: ParamSource,
+    cell: OnceLock<Arc<NetworkParams>>,
+}
+
+impl LazyParams {
+    pub(crate) fn new(source: ParamSource) -> LazyParams {
+        LazyParams {
+            source,
+            cell: OnceLock::new(),
+        }
+    }
+
+    pub(crate) fn get(&self, net: &Network, c: usize) -> Arc<NetworkParams> {
+        self.cell
+            .get_or_init(|| match &self.source {
+                ParamSource::Seeded(seed) => Arc::new(NetworkParams::seeded(net, c, *seed)),
+                ParamSource::Explicit(p) => p.clone(),
+            })
+            .clone()
+    }
+}

@@ -1,0 +1,111 @@
+//! Single-chip functional backend: walks the network step list through
+//! `simulator::chip::run_layer` — Algorithm 1, bit-faithful, optionally
+//! with the silicon's FP16 datapath rounding.
+
+use crate::network::{Network, TensorRef};
+use crate::simulator::chip::{run_layer, LayerParams};
+use crate::simulator::{FeatureMap, Precision};
+
+use super::backend::{Backend, BackendKind, LayerTrace, LazyParams};
+use super::EngineError;
+
+pub struct FunctionalBackend {
+    net: Network,
+    params: LazyParams,
+    precision: Precision,
+    /// M×N spatial Tile-PU grid (only affects access counting).
+    tiles: (usize, usize),
+    /// Output-channel parallelism the weight streams are packed for.
+    stream_c: usize,
+}
+
+impl FunctionalBackend {
+    pub(crate) fn new(
+        net: Network,
+        params: LazyParams,
+        precision: Precision,
+        tiles: (usize, usize),
+        stream_c: usize,
+    ) -> FunctionalBackend {
+        FunctionalBackend {
+            net,
+            params,
+            precision,
+            tiles,
+            stream_c,
+        }
+    }
+}
+
+impl Backend for FunctionalBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Functional
+    }
+
+    fn infer_traced(
+        &self,
+        input: &[f32],
+        hook: &mut dyn FnMut(LayerTrace<'_>),
+    ) -> Result<Vec<f32>, EngineError> {
+        let net = &self.net;
+        let want = net.in_ch * net.in_h * net.in_w;
+        if input.len() != want {
+            return Err(EngineError::Input(format!(
+                "input has {} values, {} expects {want} ({}x{}x{})",
+                input.len(),
+                net.name,
+                net.in_ch,
+                net.in_h,
+                net.in_w
+            )));
+        }
+        let params = self.params.get(net, self.stream_c);
+        let input_fm = FeatureMap::from_vec(net.in_ch, net.in_h, net.in_w, input.to_vec());
+        let mut fms: Vec<FeatureMap> = Vec::with_capacity(net.steps.len());
+
+        fn resolve<'a>(
+            input_fm: &'a FeatureMap,
+            fms: &'a [FeatureMap],
+            r: TensorRef,
+        ) -> &'a FeatureMap {
+            match r {
+                TensorRef::Input => input_fm,
+                TensorRef::Step(j) => &fms[j],
+            }
+        }
+
+        for (i, s) in net.steps.iter().enumerate() {
+            if s.upsample2x {
+                return Err(EngineError::Unsupported(format!(
+                    "step {i} (`{}`): the functional backend does not model 2x upsampling",
+                    s.layer.name
+                )));
+            }
+            let src = resolve(&input_fm, &fms, s.src);
+            let concatenated;
+            let src = if let Some(extra) = s.concat_extra {
+                concatenated = src.concat_channels(resolve(&input_fm, &fms, extra));
+                &concatenated
+            } else {
+                src
+            };
+            let byp = s.bypass.map(|b| resolve(&input_fm, &fms, b));
+            let p = &params.steps[i];
+            let lp = LayerParams {
+                layer: &s.layer,
+                stream: &p.stream,
+                gamma: &p.gamma,
+                beta: &p.beta,
+            };
+            let (out, _counts) = run_layer(&lp, src, byp, self.precision, self.tiles);
+            hook(LayerTrace {
+                step: i,
+                layer: &s.layer.name,
+                shape: (out.c, out.h, out.w),
+                output: &out.data,
+            });
+            fms.push(out);
+        }
+        Ok(fms.pop().expect("non-empty network").data)
+    }
+}

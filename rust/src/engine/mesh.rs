@@ -1,0 +1,154 @@
+//! Multi-chip mesh backend: runs the whole network on the §V systolic
+//! array simulator (`simulator::mesh::MeshSim`) — real distributed FM
+//! tiles, real border/corner exchange — and keeps the traffic statistics
+//! of the last inference for reporting.
+
+use std::sync::Mutex;
+
+use crate::network::{Network, TensorRef};
+use crate::simulator::mesh::{MeshSim, MeshStats};
+use crate::simulator::{FeatureMap, Precision};
+
+use super::backend::{Backend, BackendKind, LayerTrace, LazyParams};
+use super::EngineError;
+
+pub struct MeshBackend {
+    net: Network,
+    params: LazyParams,
+    rows: usize,
+    cols: usize,
+    precision: Precision,
+    fm_bits: usize,
+    stream_c: usize,
+    /// Traffic statistics of the most recent inference.
+    last_stats: Mutex<Option<MeshStats>>,
+}
+
+impl MeshBackend {
+    pub(crate) fn new(
+        net: Network,
+        params: LazyParams,
+        rows: usize,
+        cols: usize,
+        precision: Precision,
+        fm_bits: usize,
+        stream_c: usize,
+    ) -> MeshBackend {
+        MeshBackend {
+            net,
+            params,
+            rows,
+            cols,
+            precision,
+            fm_bits,
+            stream_c,
+            last_stats: Mutex::new(None),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Border/corner traffic of the most recent inference, if any.
+    pub fn last_stats(&self) -> Option<MeshStats> {
+        self.last_stats.lock().unwrap().clone()
+    }
+
+    /// The mesh simulator requires every tensor's spatial dims to divide
+    /// evenly over the chip grid; reject cleanly instead of panicking.
+    fn check_divisibility(&self) -> Result<(), EngineError> {
+        let check = |what: &str, h: usize, w: usize| -> Result<(), EngineError> {
+            if h % self.rows != 0 || w % self.cols != 0 {
+                return Err(EngineError::Unsupported(format!(
+                    "{what} is {h}x{w}, not divisible over a {}x{} mesh",
+                    self.rows, self.cols
+                )));
+            }
+            Ok(())
+        };
+        check("input FM", self.net.in_h, self.net.in_w)?;
+        for (i, s) in self.net.steps.iter().enumerate() {
+            if s.upsample2x {
+                return Err(EngineError::Unsupported(format!(
+                    "step {i} (`{}`): the mesh backend does not model 2x upsampling",
+                    s.layer.name
+                )));
+            }
+            let (_, h, w) = self.net.shape_of(TensorRef::Step(i));
+            check(&format!("step {i} (`{}`) output", s.layer.name), h, w)?;
+        }
+        Ok(())
+    }
+}
+
+impl Backend for MeshBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Mesh
+    }
+
+    fn mesh_shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Untraced inference skips the per-step global-FM reassembly the
+    /// trace observer needs — `serve()` requests pay only the compute
+    /// and exchange, like `MeshSim::run_network` always did.
+    fn infer(&self, input: &[f32]) -> Result<Vec<f32>, EngineError> {
+        self.run(input, None)
+    }
+
+    fn infer_traced(
+        &self,
+        input: &[f32],
+        hook: &mut dyn FnMut(LayerTrace<'_>),
+    ) -> Result<Vec<f32>, EngineError> {
+        self.run(input, Some(hook))
+    }
+}
+
+impl MeshBackend {
+    fn run(
+        &self,
+        input: &[f32],
+        hook: Option<&mut dyn FnMut(LayerTrace<'_>)>,
+    ) -> Result<Vec<f32>, EngineError> {
+        let net = &self.net;
+        let want = net.in_ch * net.in_h * net.in_w;
+        if input.len() != want {
+            return Err(EngineError::Input(format!(
+                "input has {} values, {} expects {want} ({}x{}x{})",
+                input.len(),
+                net.name,
+                net.in_ch,
+                net.in_h,
+                net.in_w
+            )));
+        }
+        self.check_divisibility()?;
+        let params = self.params.get(net, self.stream_c);
+        let input_fm = FeatureMap::from_vec(net.in_ch, net.in_h, net.in_w, input.to_vec());
+        let mut sim = MeshSim::new(self.rows, self.cols, self.precision);
+        sim.fm_bits = self.fm_bits;
+        let (out, stats) = match hook {
+            Some(hook) => {
+                let mut adapter = |step: usize, fm: &FeatureMap| {
+                    hook(LayerTrace {
+                        step,
+                        layer: &net.steps[step].layer.name,
+                        shape: (fm.c, fm.h, fm.w),
+                        output: &fm.data,
+                    });
+                };
+                sim.run_network_traced(net, &params.steps, &input_fm, &mut adapter)
+            }
+            None => sim.run_network(net, &params.steps, &input_fm),
+        };
+        *self.last_stats.lock().unwrap() = Some(stats);
+        Ok(out.data)
+    }
+}

@@ -1,0 +1,582 @@
+//! # The unified Hyperdrive engine
+//!
+//! One backend-agnostic façade over the three execution paths of this
+//! reproduction — the PJRT runtime that executes the AOT-compiled
+//! Pallas artifacts, the single-chip functional simulator and the
+//! multi-chip systolic mesh simulator — mirroring how the paper
+//! presents one accelerator abstraction that scales from a single chip
+//! to a 2D mesh without the caller caring which is underneath.
+//!
+//! Construction goes through the fluent [`EngineBuilder`]:
+//!
+//! ```no_run
+//! use hyperdrive::engine::{Engine, ServeOptions};
+//! use hyperdrive::network::zoo;
+//! use hyperdrive::simulator::Precision;
+//!
+//! # fn main() -> Result<(), hyperdrive::engine::EngineError> {
+//! // Functional single-chip simulator, FP16 datapath like the silicon.
+//! let engine = Engine::builder()
+//!     .network(zoo::hypernet20())
+//!     .precision(Precision::F16)
+//!     .build()?;
+//! let input = vec![0.0f32; engine.input_len()];
+//! let logits = engine.infer(&input)?;
+//!
+//! // 2×2 systolic mesh, same parameters → bit-exact same logits.
+//! let mesh = Engine::builder().network(zoo::hypernet20()).mesh(2, 2).build()?;
+//! assert_eq!(mesh.infer(&input)?, logits);
+//!
+//! // Concurrent serving on any backend.
+//! let batch = vec![input; 8];
+//! let opts = ServeOptions { workers: 4, ..ServeOptions::default() };
+//! let (outs, stats) = engine.serve(&batch, &opts)?;
+//! println!("{}", engine.report_with_serve(stats).serve_summary());
+//! # let _ = outs;
+//! # Ok(()) }
+//! ```
+//!
+//! Every engine also yields a typed [`EngineReport`] (schedule, WCL
+//! memory analysis, mesh plan, energy breakdown) that the CLI, the
+//! examples, the benches and `report::*` consume.
+
+pub mod backend;
+pub mod functional;
+pub mod mesh;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod report;
+pub mod serve;
+
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::coordinator::schedule::schedule_network_mesh;
+use crate::coordinator::tiling::{self, MeshPlan};
+use crate::coordinator::wcl;
+use crate::energy::ablation::AblationRow;
+use crate::energy::model::energy_per_image;
+use crate::network::Network;
+use crate::simulator::mesh::MeshStats;
+use crate::ChipConfig;
+
+pub use backend::{Backend, BackendKind, LayerTrace, NetworkParams};
+pub use report::EngineReport;
+pub use serve::{percentile, ServeOptions, ServeStats};
+// Re-exported so engine consumers need no coordinator/simulator paths.
+pub use crate::coordinator::schedule::DepthwisePolicy;
+pub use crate::simulator::Precision;
+
+use backend::{LazyParams, ParamSource};
+use functional::FunctionalBackend;
+use mesh::MeshBackend;
+
+/// Errors of the unified engine API.
+#[derive(Debug)]
+pub enum EngineError {
+    /// Builder misconfiguration (e.g. a mesh without a network).
+    Builder(String),
+    /// The requested mesh's per-chip WCL slice exceeds the FMM.
+    FmmOverflow {
+        rows: usize,
+        cols: usize,
+        per_chip_wcl_words: u64,
+        fmm_words: usize,
+    },
+    /// Backend compiled out or its artifacts are missing.
+    Unavailable(String),
+    /// A request input does not match the network.
+    Input(String),
+    /// The chosen backend cannot execute this network feature.
+    Unsupported(String),
+    /// Runtime failure inside a backend.
+    Backend(String),
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::Builder(m) => write!(f, "builder: {m}"),
+            EngineError::FmmOverflow {
+                rows,
+                cols,
+                per_chip_wcl_words,
+                fmm_words,
+            } => write!(
+                f,
+                "{rows}x{cols} mesh: per-chip WCL {per_chip_wcl_words} words \
+                 exceeds the {fmm_words}-word FMM"
+            ),
+            EngineError::Unavailable(m) => write!(f, "backend unavailable: {m}"),
+            EngineError::Input(m) => write!(f, "bad input: {m}"),
+            EngineError::Unsupported(m) => write!(f, "unsupported: {m}"),
+            EngineError::Backend(m) => write!(f, "backend: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+enum BackendImpl {
+    Functional(FunctionalBackend),
+    Mesh(MeshBackend),
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtBackend),
+}
+
+impl BackendImpl {
+    fn as_dyn(&self) -> &dyn Backend {
+        match self {
+            BackendImpl::Functional(b) => b,
+            BackendImpl::Mesh(b) => b,
+            #[cfg(feature = "pjrt")]
+            BackendImpl::Pjrt(b) => b,
+        }
+    }
+}
+
+/// Fluent constructor for [`Engine`]; see the [module docs](self) for
+/// a per-backend example.
+pub struct EngineBuilder {
+    network: Option<Network>,
+    chip: ChipConfig,
+    kind: Option<BackendKind>,
+    mesh: Option<(usize, usize)>,
+    auto_mesh: bool,
+    precision: Precision,
+    dw: DepthwisePolicy,
+    vdd: f64,
+    vbb: f64,
+    params: Option<Arc<NetworkParams>>,
+    seed: u64,
+    artifacts: Option<PathBuf>,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        EngineBuilder {
+            network: None,
+            chip: ChipConfig::default(),
+            kind: None,
+            mesh: None,
+            auto_mesh: false,
+            precision: Precision::F16,
+            dw: DepthwisePolicy::default(),
+            vdd: 0.5,
+            vbb: 1.5,
+            params: None,
+            seed: 0x42,
+            artifacts: None,
+        }
+    }
+}
+
+impl EngineBuilder {
+    /// The network to run (required for the simulator backends; the
+    /// PJRT backend reads its network from the artifact manifest).
+    pub fn network(mut self, net: Network) -> Self {
+        self.network = Some(net);
+        self
+    }
+
+    /// Chip architecture parameters (defaults to the taped-out config).
+    pub fn chip(mut self, cfg: ChipConfig) -> Self {
+        self.chip = cfg;
+        self
+    }
+
+    /// Force a specific backend (normally inferred: `.artifacts(..)` →
+    /// PJRT, `.mesh(..)`/`.auto_mesh()` → mesh, otherwise functional).
+    pub fn backend(mut self, kind: BackendKind) -> Self {
+        self.kind = Some(kind);
+        self
+    }
+
+    /// Run on an explicit `rows×cols` systolic mesh (validated against
+    /// the per-chip FMM capacity at `build()`).
+    pub fn mesh(mut self, rows: usize, cols: usize) -> Self {
+        self.mesh = Some((rows, cols));
+        self
+    }
+
+    /// Plan the smallest aspect-matched mesh that fits the FMM (§V),
+    /// like the paper's 10×5 for ResNet-34 @ 2048×1024.
+    pub fn auto_mesh(mut self) -> Self {
+        self.auto_mesh = true;
+        self
+    }
+
+    /// Datapath precision of the simulator backends (default: the
+    /// silicon's bit-exact FP16).
+    pub fn precision(mut self, p: Precision) -> Self {
+        self.precision = p;
+        self
+    }
+
+    /// Depth-wise convolution scheduling policy.
+    pub fn depthwise(mut self, dw: DepthwisePolicy) -> Self {
+        self.dw = dw;
+        self
+    }
+
+    /// Core supply voltage for the energy model (default 0.5 V).
+    pub fn vdd(mut self, v: f64) -> Self {
+        self.vdd = v;
+        self
+    }
+
+    /// Forward body bias for the energy model (default 1.5 V).
+    pub fn vbb(mut self, v: f64) -> Self {
+        self.vbb = v;
+        self
+    }
+
+    /// Explicit layer parameters for the simulator backends (share one
+    /// `Arc<NetworkParams>` across engines for cross-backend checks).
+    pub fn params(mut self, p: impl Into<Arc<NetworkParams>>) -> Self {
+        self.params = Some(p.into());
+        self
+    }
+
+    /// Seed for lazily-generated synthetic parameters (used when no
+    /// explicit `params` are given; default `0x42`).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// AOT artifact directory — selects the PJRT backend.
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts = Some(dir.into());
+        self
+    }
+
+    fn resolve_kind(&self) -> Result<BackendKind, EngineError> {
+        if let Some(kind) = self.kind {
+            return Ok(kind);
+        }
+        match (&self.artifacts, self.mesh.is_some() || self.auto_mesh) {
+            (Some(_), true) => Err(EngineError::Builder(
+                "both .artifacts(..) and .mesh(..) given — pick a backend explicitly".into(),
+            )),
+            (Some(_), false) => Ok(BackendKind::Pjrt),
+            (None, true) => Ok(BackendKind::Mesh),
+            (None, false) => Ok(BackendKind::Functional),
+        }
+    }
+
+    /// Validate the configuration and construct the engine.
+    pub fn build(self) -> Result<Engine, EngineError> {
+        let kind = self.resolve_kind()?;
+        // A forced backend must not silently ignore conflicting knobs:
+        // a mesh request on a non-mesh backend (or artifacts on a
+        // simulator backend) would otherwise yield a 1x1 plan/report
+        // that looks valid but answers a different question.
+        if kind != BackendKind::Mesh && (self.mesh.is_some() || self.auto_mesh) {
+            return Err(EngineError::Builder(format!(
+                ".mesh(..)/.auto_mesh() conflicts with the {} backend",
+                kind.name()
+            )));
+        }
+        if kind != BackendKind::Pjrt && self.artifacts.is_some() {
+            return Err(EngineError::Builder(format!(
+                ".artifacts(..) conflicts with the {} backend",
+                kind.name()
+            )));
+        }
+        match kind {
+            BackendKind::Pjrt => self.build_pjrt(),
+            kind => self.build_sim(kind),
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn build_pjrt(self) -> Result<Engine, EngineError> {
+        let dir = self
+            .artifacts
+            .clone()
+            .unwrap_or_else(|| PathBuf::from("artifacts"));
+        let be = pjrt::PjrtBackend::load(dir)?;
+        let net = be.network().clone();
+        if let Some(built) = &self.network {
+            if built.name != net.name {
+                return Err(EngineError::Builder(format!(
+                    "builder network `{}` does not match artifact network `{}`",
+                    built.name, net.name
+                )));
+            }
+        }
+        let plan = MeshPlan {
+            rows: 1,
+            cols: 1,
+            per_chip_wcl_words: wcl::analyze(&net).wcl_words,
+        };
+        self.finish(net, plan, BackendKind::Pjrt, |_, _| Ok(BackendImpl::Pjrt(be)))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn build_pjrt(self) -> Result<Engine, EngineError> {
+        Err(EngineError::Unavailable(
+            "the PJRT backend needs the `pjrt` cargo feature (vendored xla-rs) \
+             — see DESIGN.md §Substitutions"
+                .into(),
+        ))
+    }
+
+    fn build_sim(self, kind: BackendKind) -> Result<Engine, EngineError> {
+        let net = self.network.clone().ok_or_else(|| {
+            EngineError::Builder(format!(
+                "the {} backend needs .network(..) before .build()",
+                kind.name()
+            ))
+        })?;
+        if net.steps.is_empty() {
+            return Err(EngineError::Builder(format!(
+                "network `{}` has no on-chip steps",
+                net.name
+            )));
+        }
+        if self.chip.c > 16 {
+            return Err(EngineError::Builder(format!(
+                "chip c = {} unsupported: weight-stream words are u16",
+                self.chip.c
+            )));
+        }
+        let plan = match (kind, self.mesh) {
+            (BackendKind::Mesh, Some((rows, cols))) => {
+                if rows == 0 || cols == 0 {
+                    return Err(EngineError::Builder(format!(
+                        "mesh dimensions must be positive, got {rows}x{cols}"
+                    )));
+                }
+                let w = tiling::per_chip_wcl_words(&net, rows, cols);
+                if w > self.chip.fmm_words as u64 {
+                    return Err(EngineError::FmmOverflow {
+                        rows,
+                        cols,
+                        per_chip_wcl_words: w,
+                        fmm_words: self.chip.fmm_words,
+                    });
+                }
+                MeshPlan {
+                    rows,
+                    cols,
+                    per_chip_wcl_words: w,
+                }
+            }
+            (BackendKind::Mesh, None) => self.plan_auto(&net)?,
+            _ => MeshPlan {
+                rows: 1,
+                cols: 1,
+                per_chip_wcl_words: wcl::analyze(&net).wcl_words,
+            },
+        };
+        let source = match &self.params {
+            Some(p) => ParamSource::Explicit(p.clone()),
+            None => ParamSource::Seeded(self.seed),
+        };
+        self.finish(net, plan, kind, |net, b| {
+            Ok(match kind {
+                BackendKind::Functional => BackendImpl::Functional(FunctionalBackend::new(
+                    net.clone(),
+                    LazyParams::new(source),
+                    b.precision,
+                    (b.chip.m, b.chip.n),
+                    b.chip.c,
+                )),
+                BackendKind::Mesh => BackendImpl::Mesh(MeshBackend::new(
+                    net.clone(),
+                    LazyParams::new(source),
+                    plan.rows,
+                    plan.cols,
+                    b.precision,
+                    b.chip.fm_bits,
+                    b.chip.c,
+                )),
+                BackendKind::Pjrt => unreachable!("handled in build()"),
+            })
+        })
+    }
+
+    /// Aspect-matched smallest mesh that fits the FMM, as an error
+    /// instead of `tiling::plan_mesh`'s panic.
+    fn plan_auto(&self, net: &Network) -> Result<MeshPlan, EngineError> {
+        tiling::try_plan_mesh(net, &self.chip).ok_or_else(|| {
+            EngineError::Builder(format!(
+                "no aspect-matched mesh up to 64 rows fits `{}` in the {}-word FMM",
+                net.name, self.chip.fmm_words
+            ))
+        })
+    }
+
+    /// Shared tail: derive the analytic report, then build the backend.
+    fn finish(
+        self,
+        net: Network,
+        plan: MeshPlan,
+        kind: BackendKind,
+        make: impl FnOnce(&Network, &EngineBuilder) -> Result<BackendImpl, EngineError>,
+    ) -> Result<Engine, EngineError> {
+        let schedule = schedule_network_mesh(&net, &self.chip, self.dw, plan.rows, plan.cols);
+        let memory = wcl::analyze(&net);
+        let energy = energy_per_image(&net, &self.chip, &plan, self.vdd, self.vbb, self.dw);
+        let border_bits = tiling::border_exchange_bits(&net, &plan, self.chip.fm_bits);
+        let report = EngineReport {
+            network: net.name.clone(),
+            input_shape: (net.in_ch, net.in_h, net.in_w),
+            backend: kind,
+            chip: self.chip,
+            plan,
+            precision: self.precision,
+            depthwise: self.dw,
+            vdd: self.vdd,
+            vbb: self.vbb,
+            schedule,
+            memory,
+            energy,
+            border_bits,
+            serve: None,
+        };
+        let backend = make(&net, &self)?;
+        Ok(Engine {
+            backend,
+            net,
+            cfg: self.chip,
+            report,
+        })
+    }
+}
+
+/// A built engine: one network bound to one backend, ready to infer,
+/// serve and report. See the [module docs](self).
+pub struct Engine {
+    backend: BackendImpl,
+    net: Network,
+    cfg: ChipConfig,
+    report: EngineReport,
+}
+
+impl Engine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    pub fn chip(&self) -> &ChipConfig {
+        &self.cfg
+    }
+
+    pub fn backend_kind(&self) -> BackendKind {
+        self.backend.as_dyn().kind()
+    }
+
+    /// Flattened input length the network expects (`c·h·w`).
+    pub fn input_len(&self) -> usize {
+        self.net.in_ch * self.net.in_h * self.net.in_w
+    }
+
+    /// Run one inference.
+    pub fn infer(&self, input: &[f32]) -> Result<Vec<f32>, EngineError> {
+        self.backend.as_dyn().infer(input)
+    }
+
+    /// Run one inference with a per-layer trace hook.
+    pub fn infer_traced(
+        &self,
+        input: &[f32],
+        hook: &mut dyn FnMut(LayerTrace<'_>),
+    ) -> Result<Vec<f32>, EngineError> {
+        self.backend.as_dyn().infer_traced(input, hook)
+    }
+
+    /// Serve a FIFO batch over a bounded queue and `opts.workers`
+    /// concurrent workers; outputs come back in submission order.
+    pub fn serve(
+        &self,
+        inputs: &[Vec<f32>],
+        opts: &ServeOptions,
+    ) -> Result<(Vec<Vec<f32>>, ServeStats), EngineError> {
+        let want = self.input_len();
+        for (i, x) in inputs.iter().enumerate() {
+            if x.len() != want {
+                return Err(EngineError::Input(format!(
+                    "request {i}: input has {} values, network expects {want}",
+                    x.len()
+                )));
+            }
+        }
+        serve::serve_on(self.backend.as_dyn(), self.net.total_ops(), inputs, opts)
+    }
+
+    /// The analytic report (schedule, memory, energy, mesh plan).
+    pub fn report(&self) -> EngineReport {
+        self.report.clone()
+    }
+
+    /// The analytic report with serving statistics attached.
+    pub fn report_with_serve(&self, stats: ServeStats) -> EngineReport {
+        let mut r = self.report.clone();
+        r.serve = Some(stats);
+        r
+    }
+
+    /// The §VI-D precision-ablation rows for this network/chip.
+    pub fn ablation(&self) -> Vec<AblationRow> {
+        crate::energy::ablation::precision_ablation(&self.net, &self.cfg)
+    }
+
+    /// Measured border/corner traffic of the mesh backend's most recent
+    /// inference (`None` on other backends or before any inference).
+    pub fn mesh_stats(&self) -> Option<MeshStats> {
+        match &self.backend {
+            BackendImpl::Mesh(m) => m.last_stats(),
+            _ => None,
+        }
+    }
+
+    /// One-line description of the backend under the façade.
+    pub fn describe(&self) -> String {
+        match &self.backend {
+            BackendImpl::Functional(_) => format!(
+                "functional chip simulator ({:?} datapath)",
+                self.report.precision
+            ),
+            BackendImpl::Mesh(m) => format!(
+                "{}x{} systolic mesh simulator ({:?} datapath)",
+                m.rows(),
+                m.cols(),
+                self.report.precision
+            ),
+            #[cfg(feature = "pjrt")]
+            BackendImpl::Pjrt(p) => format!(
+                "PJRT `{}` with {} compiled artifacts",
+                p.platform(),
+                p.loaded()
+            ),
+        }
+    }
+
+    /// Load a golden f32 file from the PJRT artifact directory.
+    pub fn golden(&self, file: &str) -> Result<Vec<f32>, EngineError> {
+        #[cfg(feature = "pjrt")]
+        if let BackendImpl::Pjrt(p) = &self.backend {
+            return p.golden(file);
+        }
+        Err(EngineError::Unsupported(format!(
+            "golden file `{file}` requires the PJRT backend"
+        )))
+    }
+
+    /// The §IV-B memory plan of the PJRT backend (peak == WCL).
+    #[cfg(feature = "pjrt")]
+    pub fn memory_plan(&self) -> Option<crate::coordinator::memory::MemoryPlan> {
+        match &self.backend {
+            BackendImpl::Pjrt(p) => Some(p.memory_plan().clone()),
+            _ => None,
+        }
+    }
+}

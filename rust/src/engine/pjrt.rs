@@ -1,0 +1,128 @@
+//! PJRT backend: wraps `runtime::InferenceEngine` (the AOT-artifact
+//! executor) behind the backend-agnostic [`Backend`] trait.
+//!
+//! Concurrency: the xla-rs wrapper types are conservatively `!Send`
+//! (raw pointers), so the engine is kept behind a `Mutex` and inferences
+//! serialize on it — the serving layer's worker pool still overlaps
+//! queueing/collection, but PJRT compute runs one request at a time.
+//! The PJRT C API itself is thread-safe, which is what makes moving the
+//! locked engine across worker threads sound (see DESIGN.md §Engine).
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::coordinator::memory::MemoryPlan;
+use crate::network::{Network, TensorRef};
+use crate::runtime::InferenceEngine;
+
+use super::backend::{Backend, BackendKind, LayerTrace};
+use super::EngineError;
+
+pub struct PjrtBackend {
+    inner: Mutex<InferenceEngine>,
+    /// Copies of read-only metadata, accessible without the lock.
+    net: Network,
+    memory_plan: MemoryPlan,
+    platform: String,
+    loaded: usize,
+    dir: PathBuf,
+}
+
+// SAFETY: all access to the xla-rs types goes through `inner`'s mutex,
+// and the PJRT CPU client/executables are thread-safe at the C-API
+// level; the `!Send` on the Rust wrappers is raw-pointer conservatism.
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
+
+impl PjrtBackend {
+    /// Load artifacts + parameters from an AOT artifact directory.
+    pub fn load(dir: impl Into<PathBuf>) -> Result<PjrtBackend, EngineError> {
+        let dir = dir.into();
+        let inner = InferenceEngine::load(&dir).map_err(|e| {
+            EngineError::Unavailable(format!(
+                "PJRT artifacts at `{}`: {e:#} (run `make artifacts` first)",
+                dir.display()
+            ))
+        })?;
+        let net = inner.manifest.network.clone();
+        let memory_plan = inner.memory_plan.clone();
+        let platform = inner.runtime.platform();
+        let loaded = inner.runtime.loaded();
+        Ok(PjrtBackend {
+            inner: Mutex::new(inner),
+            net,
+            memory_plan,
+            platform,
+            loaded,
+            dir,
+        })
+    }
+
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    /// The §IV-B memory plan validated at load (peak == WCL).
+    pub fn memory_plan(&self) -> &MemoryPlan {
+        &self.memory_plan
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    /// Number of compiled artifacts.
+    pub fn loaded(&self) -> usize {
+        self.loaded
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load a golden f32 file from the artifact directory.
+    pub fn golden(&self, file: &str) -> Result<Vec<f32>, EngineError> {
+        self.inner
+            .lock()
+            .unwrap()
+            .manifest
+            .golden(file)
+            .map_err(|e| EngineError::Backend(format!("{e:#}")))
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    fn infer_traced(
+        &self,
+        input: &[f32],
+        hook: &mut dyn FnMut(LayerTrace<'_>),
+    ) -> Result<Vec<f32>, EngineError> {
+        let want = self.net.in_ch * self.net.in_h * self.net.in_w;
+        if input.len() != want {
+            return Err(EngineError::Input(format!(
+                "input has {} values, {} expects {want}",
+                input.len(),
+                self.net.name
+            )));
+        }
+        let (fms, logits) = self
+            .inner
+            .lock()
+            .unwrap()
+            .infer_trace(input)
+            .map_err(|e| EngineError::Backend(format!("{e:#}")))?;
+        for (i, fm) in fms.iter().enumerate() {
+            hook(LayerTrace {
+                step: i,
+                layer: &self.net.steps[i].layer.name,
+                shape: self.net.shape_of(TensorRef::Step(i)),
+                output: fm,
+            });
+        }
+        Ok(logits)
+    }
+}

@@ -1,0 +1,137 @@
+//! The single typed report every consumer (CLI, examples, benches,
+//! `report::*` tables) reads instead of re-deriving its own tuples:
+//! schedule, WCL/memory analysis, mesh plan, energy breakdown and —
+//! when a batch has been served — the serving statistics.
+
+use crate::coordinator::schedule::{DepthwisePolicy, NetworkSchedule};
+use crate::coordinator::tiling::{self, MeshPlan};
+use crate::coordinator::wcl::MemoryAnalysis;
+use crate::energy::EnergyReport;
+use crate::simulator::Precision;
+use crate::util::fmt_bits;
+use crate::ChipConfig;
+
+use super::backend::BackendKind;
+use super::serve::ServeStats;
+
+/// Everything the engine derives about a network on a chip mesh at one
+/// operating point. Produced by [`super::Engine::report`].
+#[derive(Debug, Clone)]
+pub struct EngineReport {
+    /// Network name.
+    pub network: String,
+    /// On-chip input FM shape `(c, h, w)`.
+    pub input_shape: (usize, usize, usize),
+    pub backend: BackendKind,
+    pub chip: ChipConfig,
+    pub plan: MeshPlan,
+    pub precision: Precision,
+    pub depthwise: DepthwisePolicy,
+    pub vdd: f64,
+    pub vbb: f64,
+    /// Algorithm-1 cycle schedule (per chip, lockstep over the mesh).
+    pub schedule: NetworkSchedule,
+    /// Single-chip WCL liveness analysis (§IV-B).
+    pub memory: MemoryAnalysis,
+    /// Energy/performance at `(vdd, vbb)` (Tbl V quantities).
+    pub energy: EnergyReport,
+    /// Analytic border-exchange traffic for the planned mesh (Fig 11).
+    pub border_bits: u64,
+    /// Serving statistics, when attached via
+    /// [`super::Engine::report_with_serve`].
+    pub serve: Option<ServeStats>,
+}
+
+impl EngineReport {
+    /// Mesh-wide utilization in `[0, 1]` (per-chip schedule vs the whole
+    /// mesh's peak throughput).
+    pub fn mesh_utilization(&self) -> f64 {
+        self.schedule.utilization(&self.chip) / self.plan.chips() as f64
+    }
+
+    /// The `simulate` summary: schedule, memory, energy in one block.
+    pub fn summary(&self) -> String {
+        let (_, ih, iw) = self.input_shape;
+        format!(
+            "{} @ {}x{} on {}x{} chips ({} total, {} backend)\n\
+             ops {} | per-chip cycles {} | mesh utilization {:.1}%\n\
+             WCL {} words ({}); per-chip WCL {} words\n\
+             @({} V, {} V FBB): {:.1} fps, {:.0} GOp/s\n\
+             core {:.2} mJ/im + I/O {:.2} mJ/im (weights {} + input {} + border {})\n\
+             = {:.2} mJ/im → system efficiency {:.2} TOp/s/W",
+            self.network,
+            iw,
+            ih,
+            self.plan.rows,
+            self.plan.cols,
+            self.plan.chips(),
+            self.backend.name(),
+            fmt_bits(self.schedule.total_ops()),
+            self.schedule.total_cycles(),
+            100.0 * self.mesh_utilization(),
+            self.memory.wcl_words,
+            fmt_bits(self.memory.wcl_bits(self.chip.fm_bits)),
+            self.plan.per_chip_wcl_words,
+            self.vdd,
+            self.vbb,
+            self.energy.frame_rate_hz,
+            self.energy.throughput_ops_s / 1e9,
+            self.energy.core_j * 1e3,
+            self.energy.io_j * 1e3,
+            fmt_bits(self.energy.io.weights),
+            fmt_bits(self.energy.io.input_fm),
+            fmt_bits(self.energy.io.border),
+            self.energy.total_j() * 1e3,
+            self.energy.system_efficiency_ops_w() / 1e12,
+        )
+    }
+
+    /// The `mesh` summary: plan, per-chip WCL, border exchange and the
+    /// §V-A chip-type classes of the top-left corner of the mesh.
+    pub fn mesh_summary(&self) -> String {
+        let (_, ih, iw) = self.input_shape;
+        let mut types = String::new();
+        for r in 0..self.plan.rows.min(4) {
+            for c in 0..self.plan.cols.min(8) {
+                types.push_str(&format!("{:?} ", tiling::chip_type(r, c, &self.plan)));
+            }
+            types.push('\n');
+        }
+        format!(
+            "{} @ {}x{}: mesh {}x{} = {} chips\n\
+             per-chip WCL {} words (FMM capacity {})\n\
+             border exchange per inference: {}\n\
+             chip types (top-left corner of the mesh):\n{}",
+            self.network,
+            iw,
+            ih,
+            self.plan.rows,
+            self.plan.cols,
+            self.plan.chips(),
+            self.plan.per_chip_wcl_words,
+            self.chip.fmm_words,
+            fmt_bits(self.border_bits),
+            types
+        )
+    }
+
+    /// One-line latency/throughput summary of the attached serve stats.
+    pub fn serve_summary(&self) -> String {
+        match &self.serve {
+            Some(s) if s.requests > 0 => format!(
+                "served {} requests on {} workers in {:.2} ms: mean {:.2} ms, \
+                 p50 {:.2} ms, p99 {:.2} ms — {:.1} req/s, {:.2} MOp/s",
+                s.requests,
+                s.workers,
+                s.total_s * 1e3,
+                s.mean_ms,
+                s.p50_ms,
+                s.p99_ms,
+                s.requests as f64 / s.total_s,
+                s.ops_per_s / 1e6
+            ),
+            Some(_) => "served 0 requests".to_string(),
+            None => "no serve statistics recorded".to_string(),
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Backend-generic serving layer: a bounded FIFO request queue drained
+//! by a pool of worker threads, with per-request latency capture.
+//!
+//! This replaces the PJRT-only `InferenceEngine::serve` of earlier
+//! revisions — any [`Backend`] can be served, and the simulator
+//! backends genuinely run `workers` inferences in parallel (the PJRT
+//! backend serializes on its internal runtime lock; see
+//! `engine::pjrt`). Admission is backpressured: once `queue_depth`
+//! requests are in flight the submitter blocks, bounding memory no
+//! matter how large the submitted batch is.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{mpsc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use super::backend::Backend;
+use super::EngineError;
+
+/// Serving configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOptions {
+    /// Concurrent worker threads (clamped to at least 1 and to the
+    /// batch size).
+    pub workers: usize,
+    /// Bounded request-queue depth; admission blocks when full.
+    pub queue_depth: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            workers: 2,
+            queue_depth: 8,
+        }
+    }
+}
+
+/// Latency/throughput statistics of a served batch.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub requests: usize,
+    /// Worker threads actually used.
+    pub workers: usize,
+    pub total_s: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// End-to-end Op/s (network ops × completed request rate).
+    pub ops_per_s: f64,
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice, using a
+/// *rounded* rank: `round((n−1)·p)`. The previous truncating rank made
+/// p99 of a 50-request batch read the p96 sample; rounding keeps
+/// p50/p99 on the conventional sample for batch sizes from 1 to 10k+.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of an empty batch");
+    let rank = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// Serve `inputs` FIFO over `opts.workers` threads; returns outputs in
+/// submission order plus the latency statistics. `total_ops` is the
+/// per-inference op count used for the throughput figure.
+pub(crate) fn serve_on(
+    backend: &dyn Backend,
+    total_ops: u64,
+    inputs: &[Vec<f32>],
+    opts: &ServeOptions,
+) -> Result<(Vec<Vec<f32>>, ServeStats), EngineError> {
+    let workers = opts.workers.max(1).min(inputs.len().max(1));
+    if inputs.is_empty() {
+        return Ok((
+            Vec::new(),
+            ServeStats {
+                workers,
+                ..ServeStats::default()
+            },
+        ));
+    }
+
+    // Bounded FIFO: `sync_channel` blocks the submitter when the queue
+    // holds `queue_depth` pending requests.
+    let (tx, rx) = mpsc::sync_channel::<usize>(opts.queue_depth.max(1));
+    let rx = Mutex::new(rx);
+    // One slot per request, filled by whichever worker ran it.
+    let slots: Vec<Mutex<Option<Result<(Vec<f32>, f64), EngineError>>>> =
+        inputs.iter().map(|_| Mutex::new(None)).collect();
+
+    let t0 = Instant::now();
+    thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let next = rx.lock().unwrap().recv();
+                let Ok(i) = next else { break };
+                let t = Instant::now();
+                // A panicking backend must not kill the worker: a dead
+                // pool leaves the bounded `tx.send` below blocked forever
+                // (the Receiver outlives the scope, so send never errors).
+                // Convert the panic into a per-request backend error.
+                let result = catch_unwind(AssertUnwindSafe(|| backend.infer(&inputs[i])))
+                    .unwrap_or_else(|payload| {
+                        let msg = payload
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| payload.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "opaque panic payload".to_string());
+                        Err(EngineError::Backend(format!("inference panicked: {msg}")))
+                    });
+                let ms = t.elapsed().as_secs_f64() * 1e3;
+                *slots[i].lock().unwrap() = Some(result.map(|out| (out, ms)));
+            });
+        }
+        for i in 0..inputs.len() {
+            tx.send(i).expect("worker pool died");
+        }
+        drop(tx); // workers drain the queue, then exit
+    });
+    let total_s = t0.elapsed().as_secs_f64();
+
+    let mut outs = Vec::with_capacity(inputs.len());
+    let mut lat_ms = Vec::with_capacity(inputs.len());
+    for slot in slots {
+        match slot.into_inner().unwrap().expect("request not completed") {
+            Ok((out, ms)) => {
+                outs.push(out);
+                lat_ms.push(ms);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let stats = ServeStats {
+        requests: inputs.len(),
+        workers,
+        total_s,
+        mean_ms: lat_ms.iter().sum::<f64>() / lat_ms.len() as f64,
+        p50_ms: percentile(&lat_ms, 0.50),
+        p99_ms: percentile(&lat_ms, 0.99),
+        ops_per_s: total_ops as f64 * inputs.len() as f64 / total_s,
+    };
+    Ok((outs, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backend::{BackendKind, LayerTrace};
+    use super::*;
+
+    /// Trivial backend for pool tests: doubles its input.
+    struct Doubler;
+
+    impl Backend for Doubler {
+        fn kind(&self) -> BackendKind {
+            BackendKind::Functional
+        }
+
+        fn infer_traced(
+            &self,
+            input: &[f32],
+            hook: &mut dyn FnMut(LayerTrace<'_>),
+        ) -> Result<Vec<f32>, EngineError> {
+            let out: Vec<f32> = input.iter().map(|x| 2.0 * x).collect();
+            hook(LayerTrace {
+                step: 0,
+                layer: "double",
+                shape: (1, 1, out.len()),
+                output: &out,
+            });
+            Ok(out)
+        }
+    }
+
+    #[test]
+    fn outputs_keep_submission_order_across_workers() {
+        let inputs: Vec<Vec<f32>> = (0..32).map(|i| vec![i as f32]).collect();
+        for workers in [1, 2, 4, 7] {
+            let opts = ServeOptions {
+                workers,
+                queue_depth: 3,
+            };
+            let (outs, stats) = serve_on(&Doubler, 10, &inputs, &opts).unwrap();
+            assert_eq!(outs.len(), 32);
+            for (i, o) in outs.iter().enumerate() {
+                assert_eq!(o, &vec![2.0 * i as f32], "request {i} out of order");
+            }
+            assert_eq!(stats.requests, 32);
+            assert_eq!(stats.workers, workers);
+            assert!(stats.total_s > 0.0 && stats.ops_per_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn workers_clamp_to_batch_size() {
+        let inputs = vec![vec![1.0f32]; 2];
+        let opts = ServeOptions {
+            workers: 16,
+            queue_depth: 1,
+        };
+        let (_, stats) = serve_on(&Doubler, 1, &inputs, &opts).unwrap();
+        assert_eq!(stats.workers, 2);
+    }
+
+    /// Backend that panics on negative inputs.
+    struct Panicky;
+
+    impl Backend for Panicky {
+        fn kind(&self) -> BackendKind {
+            BackendKind::Functional
+        }
+
+        fn infer_traced(
+            &self,
+            input: &[f32],
+            _hook: &mut dyn FnMut(LayerTrace<'_>),
+        ) -> Result<Vec<f32>, EngineError> {
+            assert!(input[0] >= 0.0, "negative request");
+            Ok(input.to_vec())
+        }
+    }
+
+    #[test]
+    fn panicking_backend_errors_instead_of_hanging() {
+        // Every request panics; a naive pool would die and leave the
+        // bounded submitter blocked forever. Must return Err promptly.
+        let inputs: Vec<Vec<f32>> = (0..16).map(|_| vec![-1.0f32]).collect();
+        let opts = ServeOptions {
+            workers: 2,
+            queue_depth: 2,
+        };
+        let err = serve_on(&Panicky, 1, &inputs, &opts).unwrap_err();
+        assert!(matches!(err, EngineError::Backend(_)), "{err}");
+        assert!(err.to_string().contains("panicked"), "{err}");
+        // Mixed batch: good requests still complete.
+        let mixed = vec![vec![1.0f32], vec![-1.0], vec![2.0]];
+        let err = serve_on(&Panicky, 1, &mixed, &opts).unwrap_err();
+        assert!(matches!(err, EngineError::Backend(_)), "{err}");
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let (outs, stats) = serve_on(&Doubler, 1, &[], &ServeOptions::default()).unwrap();
+        assert!(outs.is_empty());
+        assert_eq!(stats.requests, 0);
+    }
+
+    #[test]
+    fn percentile_uses_rounded_rank() {
+        // 50 samples 1..=50: p99 must be the top sample (the truncating
+        // rank used to return sample 49 — the p96 value).
+        let v: Vec<f64> = (1..=50).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.99), 50.0);
+        assert_eq!(percentile(&v, 0.50), 26.0); // round(24.5) = 25 → 26.0
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 50.0);
+    }
+
+    #[test]
+    fn percentile_across_batch_sizes() {
+        for n in [1usize, 2, 3, 10, 100, 1000, 10_000] {
+            let v: Vec<f64> = (0..n).map(|i| i as f64).collect();
+            let p50 = percentile(&v, 0.50);
+            let p99 = percentile(&v, 0.99);
+            assert!(p99 >= p50, "n={n}");
+            // Rounded rank: within half a sample of the exact position.
+            let exact99 = (n - 1) as f64 * 0.99;
+            assert!((p99 - exact99).abs() <= 0.5 + 1e-9, "n={n}: {p99} vs {exact99}");
+            let exact50 = (n - 1) as f64 * 0.50;
+            assert!((p50 - exact50).abs() <= 0.5 + 1e-9, "n={n}: {p50} vs {exact50}");
+        }
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+    }
+}

@@ -7,24 +7,64 @@
 //! * **L1/L2 (build time, Python)** — the BWN convolution hot-spot as a
 //!   Pallas kernel and the per-layer JAX model, AOT-lowered to HLO text
 //!   artifacts (`python/compile/`, `make artifacts`).
-//! * **L3 (this crate)** — everything the paper's silicon + board does:
-//!   the CNN graph IR and model zoo ([`network`]), binary-weight packing
-//!   and streaming ([`bwn`]), the Algorithm-1 scheduler, worst-case-layer
-//!   memory planner and multi-chip tiling ([`coordinator`]), the
-//!   functional + cycle-accurate chip/mesh simulator ([`simulator`]), the
-//!   calibrated energy/power model ([`energy`]), the state-of-the-art
-//!   comparator models ([`baselines`]), the PJRT runtime that executes the
-//!   AOT artifacts ([`runtime`]) and the paper-table generators
-//!   ([`report`]).
+//! * **L3 (this crate)** — everything the paper's silicon + board does,
+//!   fronted by **one backend-agnostic API**: [`engine::Engine`].
 //!
-//! The chip itself (GF 22 nm FDX) is replaced by a simulator calibrated to
-//! the paper's measured silicon numbers; see `DESIGN.md` for the
+//! ## The unified engine
+//!
+//! The paper's point is system-level: one accelerator abstraction that
+//! scales from a single chip to a 2D systolic mesh without the caller
+//! caring which is underneath. [`engine::Engine::builder`] is that seam —
+//! it fronts three interchangeable execution backends:
+//!
+//! | backend | selected by | runs |
+//! |---|---|---|
+//! | functional-sim | *(default)* | [`simulator::chip`] — Algorithm 1, bit-exact FP16 |
+//! | mesh-sim | `.mesh(r, c)` / `.auto_mesh()` | [`simulator::mesh`] — §V border/corner exchange |
+//! | pjrt | `.artifacts(dir)` *(feature `pjrt`)* | [`runtime`] — AOT Pallas artifacts on PJRT |
+//!
+//! ```no_run
+//! use hyperdrive::engine::Engine;
+//! use hyperdrive::network::zoo;
+//!
+//! # fn main() -> Result<(), hyperdrive::engine::EngineError> {
+//! let engine = Engine::builder()
+//!     .network(zoo::resnet34(224, 224))
+//!     .auto_mesh()          // plan the smallest FMM-fitting chip mesh
+//!     .vdd(0.5)
+//!     .vbb(1.5)
+//!     .build()?;
+//! println!("{}", engine.report().summary());
+//! # Ok(()) }
+//! ```
+//!
+//! On top of the backends sits a concurrent serving layer
+//! ([`engine::Engine::serve`]): a bounded FIFO request queue drained by a
+//! worker-thread pool with per-request latency capture, and a single
+//! typed [`engine::EngineReport`] (schedule, WCL/memory plan, energy
+//! breakdown, serve statistics) that the CLI, the examples, the benches
+//! and [`report`] all consume.
+//!
+//! ## Subsystems
+//!
+//! The CNN graph IR and model zoo ([`network`]), binary-weight packing
+//! and streaming ([`bwn`]), the Algorithm-1 scheduler, worst-case-layer
+//! memory planner and multi-chip tiling ([`coordinator`]), the
+//! functional + cycle-accurate chip/mesh simulator ([`simulator`]), the
+//! calibrated energy/power model ([`energy`]), the state-of-the-art
+//! comparator models ([`baselines`]), the PJRT runtime that executes the
+//! AOT artifacts ([`runtime`]) and the paper-table generators
+//! ([`report`]).
+//!
+//! The chip itself (GF 22 nm FDX) is replaced by a simulator calibrated
+//! to the paper's measured silicon numbers; see `DESIGN.md` for the
 //! substitution table and the per-experiment index.
 
 pub mod baselines;
 pub mod bwn;
 pub mod coordinator;
 pub mod energy;
+pub mod engine;
 pub mod network;
 pub mod report;
 pub mod runtime;

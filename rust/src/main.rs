@@ -2,53 +2,135 @@
 //!
 //! Subcommands:
 //!   report <table1|table2|table3|table4|table5|table6|fig8|fig9|fig10|fig11|all>
-//!   run-e2e   [--artifacts DIR] [--batch N]      end-to-end PJRT inference
-//!   simulate  --net NAME [--height H] [--width W] [--mesh RxC]
+//!   run-e2e   [--artifacts DIR] [--batch N] [--workers N]   end-to-end PJRT serving
+//!   simulate  --net NAME [--height H] [--width W] [--mesh RxC] [--vdd V] [--vbb V]
 //!   mesh      --net NAME [--height H] [--width W]
 //!   help
 //!
-//! (Hand-rolled argument parsing: the offline vendored crate set has no
-//! `clap`; see DESIGN.md §Substitutions.)
+//! All execution goes through the unified `engine::Engine` façade — the
+//! CLI never touches the coordinator or the energy model directly.
+//! Options accept both `--key value` and `--key=value`; duplicates are
+//! rejected. (Hand-rolled argument parsing: the offline vendored crate
+//! set has no `clap`; see DESIGN.md §Substitutions.)
 
 use std::collections::HashMap;
+use std::fmt;
 use std::process::ExitCode;
 
-use hyperdrive::coordinator::schedule::{schedule_network_mesh, DepthwisePolicy};
-use hyperdrive::coordinator::tiling::{self, plan_mesh};
-use hyperdrive::coordinator::wcl;
-use hyperdrive::energy::model::energy_per_image;
+use hyperdrive::engine::{DepthwisePolicy, Engine, EngineError, ServeOptions};
 use hyperdrive::network::{zoo, Network};
 use hyperdrive::report;
-use hyperdrive::runtime::InferenceEngine;
-use hyperdrive::util::fmt_bits;
 use hyperdrive::ChipConfig;
 
 fn usage() -> &'static str {
     "usage: hyperdrive <command> [options]\n\
      commands:\n\
-       report <table1..table6|fig8..fig11|border|all>\n\
-       run-e2e [--artifacts DIR] [--batch N]\n\
+       report <table1..table6|fig8..fig11|border|ablations|all>\n\
+       run-e2e [--artifacts DIR] [--batch N] [--workers N]\n\
        simulate --net <resnet18|resnet34|resnet50|resnet152|shufflenet|yolov3|hypernet20>\n\
                 [--height H] [--width W] [--mesh RxC] [--vdd V] [--vbb V]\n\
        mesh --net NAME [--height H] [--width W]\n\
-       help"
+       help\n\
+     options may be given as `--key value` or `--key=value`; each key at most once"
 }
 
-/// Parse `--key value` options into a map.
-fn parse_opts(args: &[String]) -> Result<HashMap<String, String>, String> {
+/// Structured option-parsing errors of the unified CLI path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum OptError {
+    /// Token did not start with `--`.
+    NotAnOption(String),
+    /// `--key` given without a value.
+    MissingValue(String),
+    /// The same `--key` given more than once.
+    Duplicate(String),
+    /// A value failed to parse (key, value, expected).
+    BadValue(String, String, &'static str),
+}
+
+impl fmt::Display for OptError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OptError::NotAnOption(a) => write!(f, "expected --option, got `{a}`"),
+            OptError::MissingValue(k) => write!(f, "--{k} needs a value"),
+            OptError::Duplicate(k) => write!(f, "duplicate option --{k}"),
+            OptError::BadValue(k, v, want) => {
+                write!(f, "bad --{k} value `{v}`: expected {want}")
+            }
+        }
+    }
+}
+
+/// Errors of the CLI: option parsing, engine failures, usage.
+#[derive(Debug)]
+enum CliError {
+    Opt(OptError),
+    Engine(EngineError),
+    Usage(String),
+}
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CliError::Opt(e) => write!(f, "{e}"),
+            CliError::Engine(e) => write!(f, "{e}"),
+            CliError::Usage(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl From<OptError> for CliError {
+    fn from(e: OptError) -> Self {
+        CliError::Opt(e)
+    }
+}
+
+impl From<EngineError> for CliError {
+    fn from(e: EngineError) -> Self {
+        CliError::Engine(e)
+    }
+}
+
+/// Parse `--key value` / `--key=value` options into a map; duplicate
+/// keys are rejected.
+fn parse_opts(args: &[String]) -> Result<HashMap<String, String>, OptError> {
     let mut m = HashMap::new();
     let mut it = args.iter();
     while let Some(a) = it.next() {
-        let key = a
+        let body = a
             .strip_prefix("--")
-            .ok_or_else(|| format!("expected --option, got `{a}`"))?;
-        let val = it.next().ok_or_else(|| format!("--{key} needs a value"))?;
-        m.insert(key.to_string(), val.clone());
+            .ok_or_else(|| OptError::NotAnOption(a.clone()))?;
+        let (key, val) = match body.split_once('=') {
+            Some((k, v)) => (k.to_string(), v.to_string()),
+            None => {
+                let v = it
+                    .next()
+                    .ok_or_else(|| OptError::MissingValue(body.to_string()))?;
+                (body.to_string(), v.clone())
+            }
+        };
+        if m.insert(key.clone(), val).is_some() {
+            return Err(OptError::Duplicate(key));
+        }
     }
     Ok(m)
 }
 
-fn build_net(name: &str, h: usize, w: usize) -> Result<Network, String> {
+/// Parse an option's value, defaulting when absent.
+fn opt_parse<T: std::str::FromStr>(
+    opts: &HashMap<String, String>,
+    key: &'static str,
+    default: T,
+    want: &'static str,
+) -> Result<T, OptError> {
+    match opts.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| OptError::BadValue(key.to_string(), v.clone(), want)),
+    }
+}
+
+fn build_net(name: &str, h: usize, w: usize) -> Result<Network, CliError> {
     Ok(match name {
         "resnet18" => zoo::resnet18(h, w),
         "resnet34" => zoo::resnet34(h, w),
@@ -57,11 +139,11 @@ fn build_net(name: &str, h: usize, w: usize) -> Result<Network, String> {
         "shufflenet" => zoo::shufflenet(h, w),
         "yolov3" => zoo::yolov3(h, w),
         "hypernet20" => zoo::hypernet20(),
-        other => return Err(format!("unknown network `{other}`")),
+        other => return Err(CliError::Usage(format!("unknown network `{other}`"))),
     })
 }
 
-fn cmd_report(which: &str, cfg: &ChipConfig) -> Result<String, String> {
+fn cmd_report(which: &str, cfg: &ChipConfig) -> Result<String, CliError> {
     Ok(match which {
         "table1" => report::table1(),
         "table2" => report::table2(),
@@ -76,142 +158,90 @@ fn cmd_report(which: &str, cfg: &ChipConfig) -> Result<String, String> {
         "border" => report::border_memories(cfg),
         "ablations" => report::ablations(cfg),
         "all" => report::all(cfg),
-        other => return Err(format!("unknown report `{other}`")),
+        other => return Err(CliError::Usage(format!("unknown report `{other}`"))),
     })
 }
 
-fn cmd_run_e2e(opts: &HashMap<String, String>) -> Result<String, String> {
+fn cmd_run_e2e(opts: &HashMap<String, String>) -> Result<String, CliError> {
     let dir = opts
         .get("artifacts")
         .cloned()
         .unwrap_or_else(|| "artifacts".to_string());
-    let batch: usize = opts
-        .get("batch")
-        .map(|v| v.parse().map_err(|_| "bad --batch"))
-        .transpose()?
-        .unwrap_or(8);
-    let engine = InferenceEngine::load(dir).map_err(|e| format!("{e:#}"))?;
-    let input = engine
-        .manifest
-        .golden("e2e_input.bin")
-        .map_err(|e| format!("{e:#}"))?;
-    let golden = engine
-        .manifest
-        .golden("e2e_golden.bin")
-        .map_err(|e| format!("{e:#}"))?;
-    let inputs: Vec<Vec<f32>> = (0..batch).map(|_| input.clone()).collect();
-    let (outs, stats) = engine.serve(&inputs).map_err(|e| format!("{e:#}"))?;
+    let batch: usize = opt_parse(opts, "batch", 8, "a positive integer")?;
+    let workers: usize = opt_parse(opts, "workers", 2, "a positive integer")?;
+
+    let engine = Engine::builder().artifacts(dir).build()?;
+    let input = engine.golden("e2e_input.bin")?;
+    let golden = engine.golden("e2e_golden.bin")?;
+    let inputs: Vec<Vec<f32>> = (0..batch.max(1)).map(|_| input.clone()).collect();
+    let (outs, stats) = engine.serve(
+        &inputs,
+        &ServeOptions {
+            workers,
+            ..ServeOptions::default()
+        },
+    )?;
     let max_err = outs[0]
         .iter()
         .zip(&golden)
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f32, f32::max);
+    let report = engine.report_with_serve(stats);
     Ok(format!(
-        "HyperNet-20 e2e on PJRT ({} artifacts, platform {}):\n\
-         batch {} served in {:.2} ms total — mean {:.2} ms, p50 {:.2} ms, p99 {:.2} ms\n\
-         throughput {:.2} MOp/s (Rust+PJRT CPU path)\n\
-         logits[0..4] = {:?}\n\
-         max |logits − JAX golden| = {:.3e} {}",
-        engine.runtime.loaded(),
-        engine.runtime.platform(),
-        stats.requests,
-        stats.total_s * 1e3,
-        stats.mean_ms,
-        stats.p50_ms,
-        stats.p99_ms,
-        stats.ops_per_s / 1e6,
+        "{} e2e on {}:\n{}\nlogits[0..4] = {:?}\nmax |logits − JAX golden| = {:.3e} {}",
+        report.network,
+        engine.describe(),
+        report.serve_summary(),
         &outs[0][..4.min(outs[0].len())],
         max_err,
         if max_err < 1e-3 { "— MATCH" } else { "— MISMATCH" }
     ))
 }
 
-fn cmd_simulate(opts: &HashMap<String, String>, cfg: &ChipConfig) -> Result<String, String> {
-    let name = opts.get("net").ok_or("--net required")?;
-    let h: usize = opts.get("height").map_or(Ok(224), |v| v.parse()).map_err(|_| "bad --height")?;
-    let w: usize = opts.get("width").map_or(Ok(h), |v| v.parse()).map_err(|_| "bad --width")?;
-    let vdd: f64 = opts.get("vdd").map_or(Ok(0.5), |v| v.parse()).map_err(|_| "bad --vdd")?;
-    let vbb: f64 = opts.get("vbb").map_or(Ok(1.5), |v| v.parse()).map_err(|_| "bad --vbb")?;
+fn cmd_simulate(opts: &HashMap<String, String>, cfg: &ChipConfig) -> Result<String, CliError> {
+    let name = opts
+        .get("net")
+        .ok_or_else(|| CliError::Usage("--net required".into()))?;
+    let h: usize = opt_parse(opts, "height", 224, "a positive integer")?;
+    let w: usize = opt_parse(opts, "width", h, "a positive integer")?;
+    let vdd: f64 = opt_parse(opts, "vdd", 0.5, "a voltage")?;
+    let vbb: f64 = opt_parse(opts, "vbb", 1.5, "a voltage")?;
     let net = build_net(name, h, w)?;
-    let plan = if let Some(mesh) = opts.get("mesh") {
-        let (r, c) = mesh
-            .split_once('x')
-            .ok_or("expected --mesh RxC")?;
-        tiling::plan_mesh_exact(
-            &net,
-            cfg,
-            r.parse().map_err(|_| "bad mesh rows")?,
-            c.parse().map_err(|_| "bad mesh cols")?,
-        )
-    } else {
-        plan_mesh(&net, cfg)
+
+    let mut builder = Engine::builder()
+        .network(net)
+        .chip(*cfg)
+        .depthwise(DepthwisePolicy::FullRate)
+        .vdd(vdd)
+        .vbb(vbb);
+    builder = match opts.get("mesh") {
+        Some(mesh) => {
+            let (r, c) = mesh.split_once('x').ok_or_else(|| {
+                OptError::BadValue("mesh".into(), mesh.clone(), "RxC, e.g. 5x10")
+            })?;
+            let rows = r.parse().map_err(|_| {
+                OptError::BadValue("mesh".into(), mesh.clone(), "integer mesh rows")
+            })?;
+            let cols = c.parse().map_err(|_| {
+                OptError::BadValue("mesh".into(), mesh.clone(), "integer mesh cols")
+            })?;
+            builder.mesh(rows, cols)
+        }
+        None => builder.auto_mesh(),
     };
-    let sched = schedule_network_mesh(&net, cfg, DepthwisePolicy::FullRate, plan.rows, plan.cols);
-    let rep = energy_per_image(&net, cfg, &plan, vdd, vbb, DepthwisePolicy::FullRate);
-    let a = wcl::analyze(&net);
-    Ok(format!(
-        "{} @ {}x{} on {}x{} chips ({} total)\n\
-         ops {} | per-chip cycles {} | mesh utilization {:.1}%\n\
-         WCL {} words ({}); per-chip WCL {} words\n\
-         @({} V, {} V FBB): {:.1} fps, {:.0} GOp/s\n\
-         core {:.2} mJ/im + I/O {:.2} mJ/im (weights {} + input {} + border {})\n\
-         = {:.2} mJ/im → system efficiency {:.2} TOp/s/W",
-        net.name,
-        w,
-        h,
-        plan.rows,
-        plan.cols,
-        plan.chips(),
-        fmt_bits(sched.total_ops()),
-        sched.total_cycles(),
-        100.0 * sched.utilization(cfg) / plan.chips() as f64,
-        a.wcl_words,
-        fmt_bits(a.wcl_bits(cfg.fm_bits)),
-        plan.per_chip_wcl_words,
-        vdd,
-        vbb,
-        rep.frame_rate_hz,
-        rep.throughput_ops_s / 1e9,
-        rep.core_j * 1e3,
-        rep.io_j * 1e3,
-        fmt_bits(rep.io.weights),
-        fmt_bits(rep.io.input_fm),
-        fmt_bits(rep.io.border),
-        rep.total_j() * 1e3,
-        rep.system_efficiency_ops_w() / 1e12,
-    ))
+    let engine = builder.build()?;
+    Ok(engine.report().summary())
 }
 
-fn cmd_mesh(opts: &HashMap<String, String>, cfg: &ChipConfig) -> Result<String, String> {
-    let name = opts.get("net").ok_or("--net required")?;
-    let h: usize = opts.get("height").map_or(Ok(1024), |v| v.parse()).map_err(|_| "bad --height")?;
-    let w: usize = opts.get("width").map_or(Ok(2048), |v| v.parse()).map_err(|_| "bad --width")?;
+fn cmd_mesh(opts: &HashMap<String, String>, cfg: &ChipConfig) -> Result<String, CliError> {
+    let name = opts
+        .get("net")
+        .ok_or_else(|| CliError::Usage("--net required".into()))?;
+    let h: usize = opt_parse(opts, "height", 1024, "a positive integer")?;
+    let w: usize = opt_parse(opts, "width", 2048, "a positive integer")?;
     let net = build_net(name, h, w)?;
-    let plan = plan_mesh(&net, cfg);
-    let border = tiling::border_exchange_bits(&net, &plan, cfg.fm_bits);
-    let mut types = String::new();
-    for r in 0..plan.rows.min(4) {
-        for c in 0..plan.cols.min(8) {
-            types.push_str(&format!("{:?} ", tiling::chip_type(r, c, &plan)));
-        }
-        types.push('\n');
-    }
-    Ok(format!(
-        "{} @ {}x{}: mesh {}x{} = {} chips\n\
-         per-chip WCL {} words (FMM capacity {})\n\
-         border exchange per inference: {}\n\
-         chip types (top-left corner of the mesh):\n{}",
-        net.name,
-        w,
-        h,
-        plan.rows,
-        plan.cols,
-        plan.chips(),
-        plan.per_chip_wcl_words,
-        cfg.fmm_words,
-        fmt_bits(border),
-        types
-    ))
+    let engine = Engine::builder().network(net).chip(*cfg).auto_mesh().build()?;
+    Ok(engine.report().mesh_summary())
 }
 
 fn main() -> ExitCode {
@@ -220,13 +250,19 @@ fn main() -> ExitCode {
     let result = match args.first().map(String::as_str) {
         Some("report") => match args.get(1) {
             Some(which) => cmd_report(which, &cfg),
-            None => Err("report needs an argument".to_string()),
+            None => Err(CliError::Usage("report needs an argument".into())),
         },
-        Some("run-e2e") => parse_opts(&args[1..]).and_then(|o| cmd_run_e2e(&o)),
-        Some("simulate") => parse_opts(&args[1..]).and_then(|o| cmd_simulate(&o, &cfg)),
-        Some("mesh") => parse_opts(&args[1..]).and_then(|o| cmd_mesh(&o, &cfg)),
+        Some("run-e2e") => parse_opts(&args[1..])
+            .map_err(CliError::from)
+            .and_then(|o| cmd_run_e2e(&o)),
+        Some("simulate") => parse_opts(&args[1..])
+            .map_err(CliError::from)
+            .and_then(|o| cmd_simulate(&o, &cfg)),
+        Some("mesh") => parse_opts(&args[1..])
+            .map_err(CliError::from)
+            .and_then(|o| cmd_mesh(&o, &cfg)),
         Some("help") | None => Ok(usage().to_string()),
-        Some(other) => Err(format!("unknown command `{other}`\n{}", usage())),
+        Some(other) => Err(CliError::Usage(format!("unknown command `{other}`\n{}", usage()))),
     };
     match result {
         Ok(text) => {
@@ -237,5 +273,64 @@ fn main() -> ExitCode {
             eprintln!("error: {msg}");
             ExitCode::FAILURE
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_space_and_equals_syntax() {
+        let m = parse_opts(&args(&["--net", "resnet34", "--height=224"])).unwrap();
+        assert_eq!(m.get("net").unwrap(), "resnet34");
+        assert_eq!(m.get("height").unwrap(), "224");
+    }
+
+    #[test]
+    fn rejects_duplicate_keys() {
+        let e = parse_opts(&args(&["--net", "a", "--net=b"])).unwrap_err();
+        assert_eq!(e, OptError::Duplicate("net".into()));
+        let e = parse_opts(&args(&["--vdd=0.5", "--vdd", "0.6"])).unwrap_err();
+        assert_eq!(e, OptError::Duplicate("vdd".into()));
+    }
+
+    #[test]
+    fn rejects_missing_value_and_bare_words() {
+        assert_eq!(
+            parse_opts(&args(&["--net"])).unwrap_err(),
+            OptError::MissingValue("net".into())
+        );
+        assert_eq!(
+            parse_opts(&args(&["net"])).unwrap_err(),
+            OptError::NotAnOption("net".into())
+        );
+    }
+
+    #[test]
+    fn equals_value_may_contain_equals() {
+        let m = parse_opts(&args(&["--expr=a=b"])).unwrap();
+        assert_eq!(m.get("expr").unwrap(), "a=b");
+    }
+
+    #[test]
+    fn simulate_goes_through_the_engine() {
+        let cfg = ChipConfig::default();
+        let opts = parse_opts(&args(&["--net", "resnet34", "--height=224"])).unwrap();
+        let out = cmd_simulate(&opts, &cfg).unwrap();
+        assert!(out.contains("ResNet-34"), "{out}");
+        assert!(out.contains("TOp/s/W"), "{out}");
+    }
+
+    #[test]
+    fn bad_mesh_option_is_a_structured_error() {
+        let cfg = ChipConfig::default();
+        let opts = parse_opts(&args(&["--net", "resnet34", "--mesh", "5by10"])).unwrap();
+        let err = cmd_simulate(&opts, &cfg).unwrap_err();
+        assert!(matches!(err, CliError::Opt(OptError::BadValue(_, _, _))), "{err}");
     }
 }

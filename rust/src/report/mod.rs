@@ -1,21 +1,38 @@
 //! Paper-table and figure generators: every table (I–VI) and figure
 //! (8–11) of the evaluation section, printed as text rows/series. Used
 //! by the benches (`rust/benches/*`), the CLI (`hyperdrive report …`)
-//! and the examples.
+//! and the examples. Schedule/energy-derived tables consume the typed
+//! `engine::EngineReport` instead of re-deriving their own tuples.
 
-use crate::baselines::{published_rows, weight_stationary_io_bits};
 use crate::baselines::weight_stationary::hyperdrive_fig11_bits;
+use crate::baselines::{published_rows, weight_stationary_io_bits};
 use crate::coordinator::border::{border_memory_bits, corner_memory_bits};
 use crate::coordinator::schedule::{
     schedule_network, trace_layer, DepthwisePolicy, WeightSource,
 };
-use crate::coordinator::tiling::{plan_mesh, plan_mesh_exact, MeshPlan};
+use crate::coordinator::tiling::{plan_mesh, MeshPlan};
 use crate::coordinator::wcl;
-use crate::energy::model::energy_per_image;
 use crate::energy::{breakdown, opchar, scaling};
+use crate::engine::{Engine, EngineReport};
 use crate::network::{zoo, ConvLayer, Network};
 use crate::util::fmt_bits;
 use crate::ChipConfig;
+
+/// Build the analytic [`EngineReport`] for one zoo network on an
+/// optional explicit mesh — the single typed source every
+/// schedule/energy table row reads from.
+fn engine_report(
+    net: Network,
+    cfg: &ChipConfig,
+    mesh: Option<(usize, usize)>,
+    dw: DepthwisePolicy,
+) -> EngineReport {
+    let mut b = Engine::builder().network(net).chip(*cfg).depthwise(dw);
+    if let Some((rows, cols)) = mesh {
+        b = b.mesh(rows, cols);
+    }
+    b.build().expect("report engine").report()
+}
 
 fn single() -> MeshPlan {
     MeshPlan {
@@ -85,8 +102,8 @@ pub fn table2() -> String {
 
 /// Tbl III: ResNet-34 cycle/throughput split.
 pub fn table3(cfg: &ChipConfig) -> String {
-    let net = zoo::resnet34(224, 224);
-    let s = schedule_network(&net, cfg, DepthwisePolicy::default());
+    let rep = engine_report(zoo::resnet34(224, 224), cfg, None, DepthwisePolicy::default());
+    let s = &rep.schedule;
     let f = opchar::MEASURED_POINTS[0].freq_hz; // 0.5 V
     let mut out = String::new();
     out.push_str("Table III — cycles & throughput, ResNet-34 @224² (paper in parens)\n");
@@ -171,29 +188,22 @@ pub fn table5(cfg: &ChipConfig) -> String {
             r.total_e_mj, r.efficiency_tops_w
         ));
     }
-    // Hyperdrive rows from our model.
+    // Hyperdrive rows from the unified engine's typed report.
     let dw = DepthwisePolicy::FullRate;
-    let cases: Vec<(Network, MeshPlan, &str)> = vec![
-        (zoo::resnet34(224, 224), single(), "224x224"),
-        (zoo::shufflenet(224, 224), single(), "224x224"),
-        (zoo::yolov3(320, 320), single(), "320x320"),
-        (
-            zoo::resnet34(1024, 2048),
-            plan_mesh_exact(&zoo::resnet34(1024, 2048), cfg, 5, 10),
-            "2kx1k(10x5)",
-        ),
-        (
-            zoo::resnet152(1024, 2048),
-            plan_mesh_exact(&zoo::resnet152(1024, 2048), cfg, 10, 20),
-            "2kx1k(20x10)",
-        ),
+    let cases: Vec<(Network, Option<(usize, usize)>, &str)> = vec![
+        (zoo::resnet34(224, 224), None, "224x224"),
+        (zoo::shufflenet(224, 224), None, "224x224"),
+        (zoo::yolov3(320, 320), None, "320x320"),
+        (zoo::resnet34(1024, 2048), Some((5, 10)), "2kx1k(10x5)"),
+        (zoo::resnet152(1024, 2048), Some((10, 20)), "2kx1k(20x10)"),
     ];
-    for (net, plan, input) in cases {
-        let r = energy_per_image(&net, cfg, &plan, 0.5, 1.5, dw);
+    for (net, mesh, input) in cases {
+        let rep = engine_report(net, cfg, mesh, dw);
+        let r = &rep.energy;
         out.push_str(&format!(
             "{:<28} {:<10} {:<12} {:>8.0} {:>9.1} {:>9.1} {:>9.1} {:>11.1}\n",
             format!("Hyperdrive (model, {} chip)", r.chips),
-            net.name,
+            rep.network,
             input,
             r.throughput_ops_s / 1e9,
             r.core_j * 1e3,
@@ -225,10 +235,11 @@ pub fn table6(cfg: &ChipConfig) -> String {
         (zoo::yolov3(320, 320), "(82.8%)"),
     ];
     for (net, paper) in nets {
-        let s = schedule_network(&net, cfg, DepthwisePolicy::FullRate);
+        let rep = engine_report(net, cfg, None, DepthwisePolicy::FullRate);
+        let s = &rep.schedule;
         out.push_str(&format!(
             "{:<22} {:>10} {:>12} {:>11.0} {:>8.1}% {:>8.1}% {paper}\n",
-            net.name,
+            rep.network,
             fmt_bits(s.total_ops()),
             s.total_cycles(),
             s.ops_per_cycle(),
@@ -237,7 +248,13 @@ pub fn table6(cfg: &ChipConfig) -> String {
         ));
     }
     out.push_str("(ShuffleNet with bank-serialized depth-wise — the faithful model):\n");
-    let s = schedule_network(&zoo::shufflenet(224, 224), cfg, DepthwisePolicy::BankSerialized);
+    let rep = engine_report(
+        zoo::shufflenet(224, 224),
+        cfg,
+        None,
+        DepthwisePolicy::BankSerialized,
+    );
+    let s = &rep.schedule;
     out.push_str(&format!(
         "{:<22} {:>10} {:>12} {:>11.0} {:>8.1}% {:>8.1}%\n",
         "ShuffleNet (serial dw)",

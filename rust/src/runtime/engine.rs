@@ -7,8 +7,6 @@
 //! bounded by the §IV-B memory plan, and every layer is one compiled
 //! XLA executable produced from the Pallas kernel at build time.
 
-use std::time::Instant;
-
 use anyhow::{Context, Result};
 
 use crate::bwn::pack_weights;
@@ -18,19 +16,9 @@ use crate::network::TensorRef;
 use super::client::Runtime;
 use super::registry::NetworkManifest;
 
-/// Latency/throughput statistics of a served batch.
-#[derive(Debug, Clone, Default)]
-pub struct ServeStats {
-    pub requests: usize,
-    pub total_s: f64,
-    pub mean_ms: f64,
-    pub p50_ms: f64,
-    pub p99_ms: f64,
-    /// End-to-end Op/s of the Rust+PJRT path (network ops × rate).
-    pub ops_per_s: f64,
-}
-
 /// The Hyperdrive inference engine (single chip, PJRT CPU backend).
+/// Batch serving with latency statistics lives in the backend-generic
+/// serving layer: `crate::engine::Engine::serve`.
 pub struct InferenceEngine {
     pub runtime: Runtime,
     pub manifest: NetworkManifest,
@@ -135,30 +123,5 @@ impl InferenceEngine {
             ],
         )?;
         Ok((fms, logits))
-    }
-
-    /// Serve a FIFO batch of requests, measuring per-request latency.
-    pub fn serve(&self, inputs: &[Vec<f32>]) -> Result<(Vec<Vec<f32>>, ServeStats)> {
-        let mut outs = Vec::with_capacity(inputs.len());
-        let mut lat_ms: Vec<f64> = Vec::with_capacity(inputs.len());
-        let t0 = Instant::now();
-        for x in inputs {
-            let t = Instant::now();
-            outs.push(self.infer(x)?);
-            lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
-        }
-        let total_s = t0.elapsed().as_secs_f64();
-        lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |p: f64| lat_ms[((lat_ms.len() as f64 - 1.0) * p) as usize];
-        let ops = self.manifest.network.total_ops() as f64;
-        let stats = ServeStats {
-            requests: inputs.len(),
-            total_s,
-            mean_ms: lat_ms.iter().sum::<f64>() / lat_ms.len() as f64,
-            p50_ms: pct(0.5),
-            p99_ms: pct(0.99),
-            ops_per_s: ops * inputs.len() as f64 / total_s,
-        };
-        Ok((outs, stats))
     }
 }

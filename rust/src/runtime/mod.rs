@@ -5,11 +5,23 @@
 //! by [`client::Runtime`] (PJRT CPU), the manifest is parsed by
 //! [`registry`], and [`engine::InferenceEngine`] walks the network step
 //! list feeding FM and (unpacked) binary-weight literals.
+//!
+//! The PJRT-dependent pieces ([`client`], [`engine`]) are gated behind
+//! the `pjrt` cargo feature, which needs the vendored xla-rs bindings
+//! (DESIGN.md §Substitutions). The manifest [`registry`] is always
+//! available — the simulator backends use it to run with the real
+//! trained parameters. Prefer the unified `crate::engine` API
+//! (`Engine::builder().artifacts(..)`) over using this module directly;
+//! batch serving lives in the backend-generic `crate::engine::serve`.
 
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod registry;
 
+#[cfg(feature = "pjrt")]
 pub use client::Runtime;
+#[cfg(feature = "pjrt")]
 pub use engine::InferenceEngine;
 pub use registry::{ArtifactKind, NetworkManifest};

@@ -20,6 +20,7 @@ use super::fm::FeatureMap;
 
 /// Per-layer parameters for the mesh run (same content as
 /// [`super::chip::LayerParams`], owned per step).
+#[derive(Clone)]
 pub struct StepParams {
     pub stream: WeightStream,
     pub gamma: Vec<f32>,
@@ -176,6 +177,29 @@ impl MeshSim {
         params: &[StepParams],
         input: &FeatureMap,
     ) -> (FeatureMap, MeshStats) {
+        self.run_network_observed(net, params, input, None)
+    }
+
+    /// [`Self::run_network`] with a per-step observer: after each step
+    /// (and its exchange phase) the observer receives the step index and
+    /// the re-assembled global output FM — the engine's trace hook.
+    pub fn run_network_traced(
+        &self,
+        net: &Network,
+        params: &[StepParams],
+        input: &FeatureMap,
+        observe: &mut dyn FnMut(usize, &FeatureMap),
+    ) -> (FeatureMap, MeshStats) {
+        self.run_network_observed(net, params, input, Some(observe))
+    }
+
+    fn run_network_observed(
+        &self,
+        net: &Network,
+        params: &[StepParams],
+        input: &FeatureMap,
+        mut observe: Option<&mut dyn FnMut(usize, &FeatureMap)>,
+    ) -> (FeatureMap, MeshStats) {
         assert_eq!(params.len(), net.steps.len());
         let mut stats = MeshStats::default();
 
@@ -327,26 +351,43 @@ impl MeshSim {
             if halo[1 + si] > 0 {
                 self.exchange(1 + si, l.n_out, ho, wo, &mut tiles, &mut stats);
             }
+
+            if let Some(obs) = observe.as_mut() {
+                let fm = self.assemble(&tiles, 1 + si, l.n_out, ho, wo);
+                obs(si, &fm);
+            }
         }
 
         // Reassemble the final output.
         let (fc, fh, fw) = net.out_shape();
-        let mut final_fm = FeatureMap::zeros(fc, fh, fw);
-        let last = net.steps.len(); // tensor id of last output
+        let final_fm = self.assemble(&tiles, net.steps.len(), fc, fh, fw);
+        assert!(stats.flags.is_quiescent(), "unmatched border sends");
+        (final_fm, stats)
+    }
+
+    /// Re-assemble a distributed tensor's owned tiles into one global FM.
+    fn assemble(
+        &self,
+        tiles: &[HashMap<usize, ExtTile>],
+        tensor: usize,
+        c: usize,
+        h: usize,
+        w: usize,
+    ) -> FeatureMap {
+        let mut fm = FeatureMap::zeros(c, h, w);
         for r in 0..self.rows {
-            for c in 0..self.cols {
-                let t = &tiles[r * self.cols + c][&last];
-                for ch in 0..fc {
+            for col in 0..self.cols {
+                let t = &tiles[r * self.cols + col][&tensor];
+                for ch in 0..c {
                     for gy in t.y0..t.y1 {
                         for gx in t.x0..t.x1 {
-                            final_fm.set(ch, gy, gx, t.read(ch, gy as isize, gx as isize));
+                            fm.set(ch, gy, gx, t.read(ch, gy as isize, gx as isize));
                         }
                     }
                 }
             }
         }
-        assert!(stats.flags.is_quiescent(), "unmatched border sends");
-        (final_fm, stats)
+        fm
     }
 
     /// The send-once border/corner exchange for one tensor (§V-B).

@@ -1,0 +1,216 @@
+//! Integration tests of the unified `Engine` façade: builder
+//! validation, cross-backend bit-exactness and concurrent serving.
+
+use std::sync::Arc;
+
+use hyperdrive::engine::{Engine, EngineError, NetworkParams, Precision, ServeOptions};
+use hyperdrive::network::zoo;
+use hyperdrive::util::SplitMix64;
+
+fn random_input(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..len).map(|_| rng.next_sym()).collect()
+}
+
+#[test]
+fn builder_requires_a_network() {
+    let err = Engine::builder().build().unwrap_err();
+    assert!(matches!(err, EngineError::Builder(_)), "{err}");
+    assert!(err.to_string().contains("network"), "{err}");
+}
+
+#[test]
+fn mesh_without_network_is_a_builder_error() {
+    let err = Engine::builder().mesh(2, 2).build().unwrap_err();
+    assert!(matches!(err, EngineError::Builder(_)), "{err}");
+}
+
+#[test]
+fn forced_backend_rejects_conflicting_knobs() {
+    use hyperdrive::engine::BackendKind;
+    // A mesh request must not be silently ignored by a forced
+    // functional backend (it would report 1x1-plan numbers).
+    let err = Engine::builder()
+        .network(zoo::hypernet20())
+        .mesh(2, 2)
+        .backend(BackendKind::Functional)
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, EngineError::Builder(_)), "{err}");
+    let err = Engine::builder()
+        .network(zoo::hypernet20())
+        .artifacts("artifacts")
+        .backend(BackendKind::Functional)
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, EngineError::Builder(_)), "{err}");
+}
+
+#[test]
+fn oversubscribed_mesh_reports_fmm_overflow() {
+    // ResNet-34 @ 2048×1024 needs ~50 chips; a 2×2 mesh cannot hold the
+    // per-chip WCL slice and must fail with the structured error.
+    let err = Engine::builder()
+        .network(zoo::resnet34(1024, 2048))
+        .mesh(2, 2)
+        .build()
+        .unwrap_err();
+    match err {
+        EngineError::FmmOverflow {
+            rows,
+            cols,
+            per_chip_wcl_words,
+            fmm_words,
+        } => {
+            assert_eq!((rows, cols), (2, 2));
+            assert!(per_chip_wcl_words > fmm_words as u64);
+        }
+        other => panic!("expected FmmOverflow, got {other}"),
+    }
+}
+
+#[test]
+fn auto_mesh_plans_the_paper_configuration() {
+    let engine = Engine::builder()
+        .network(zoo::resnet34(1024, 2048))
+        .auto_mesh()
+        .build()
+        .unwrap();
+    let rep = engine.report();
+    assert_eq!((rep.plan.rows, rep.plan.cols), (5, 10), "paper's Tbl V mesh");
+    assert!(rep.plan.per_chip_wcl_words <= rep.chip.fmm_words as u64);
+    assert!(rep.border_bits > 0);
+}
+
+#[test]
+fn functional_and_mesh_backends_match_bit_exactly() {
+    // The acceptance check: same network, same parameters, FP16 on both
+    // backends → identical logits, bit for bit.
+    let net = zoo::hypernet20();
+    let params = Arc::new(NetworkParams::seeded(&net, 16, 0xE2E));
+    let functional = Engine::builder()
+        .network(net.clone())
+        .params(params.clone())
+        .precision(Precision::F16)
+        .build()
+        .unwrap();
+    let mesh = Engine::builder()
+        .network(net)
+        .params(params)
+        .mesh(2, 2)
+        .precision(Precision::F16)
+        .build()
+        .unwrap();
+    let input = random_input(functional.input_len(), 5);
+    let a = functional.infer(&input).unwrap();
+    let b = mesh.infer(&input).unwrap();
+    assert_eq!(a, b, "functional vs mesh logits must be bit-exact");
+    let stats = mesh.mesh_stats().expect("mesh stats recorded");
+    assert!(stats.border_bits > 0 && stats.corner_bits > 0);
+}
+
+#[test]
+fn concurrent_serving_matches_sequential() {
+    let engine = Engine::builder()
+        .network(zoo::hypernet20())
+        .seed(11)
+        .build()
+        .unwrap();
+    let inputs: Vec<Vec<f32>> = (0..6)
+        .map(|i| random_input(engine.input_len(), 100 + i as u64))
+        .collect();
+    let seq_opts = ServeOptions {
+        workers: 1,
+        ..ServeOptions::default()
+    };
+    let conc_opts = ServeOptions {
+        workers: 4,
+        queue_depth: 2,
+    };
+    let (seq, s1) = engine.serve(&inputs, &seq_opts).unwrap();
+    let (conc, s4) = engine.serve(&inputs, &conc_opts).unwrap();
+    assert_eq!(seq, conc, "worker pool must not change outputs or order");
+    assert_eq!(s1.requests, 6);
+    assert_eq!(s1.workers, 1);
+    assert_eq!(s4.workers, 4);
+    assert!(s4.p99_ms >= s4.p50_ms && s4.p50_ms > 0.0);
+    assert!(s4.ops_per_s > 0.0);
+}
+
+#[test]
+fn trace_hook_sees_every_layer() {
+    let engine = Engine::builder().network(zoo::hypernet20()).build().unwrap();
+    let input = random_input(engine.input_len(), 3);
+    let mut seen: Vec<(usize, String, (usize, usize, usize))> = Vec::new();
+    let out = engine
+        .infer_traced(&input, &mut |t| {
+            seen.push((t.step, t.layer.to_string(), t.shape));
+        })
+        .unwrap();
+    assert_eq!(seen.len(), engine.network().steps.len());
+    assert_eq!(seen[0].1, "s1b0c1");
+    let (c, h, w) = seen.last().unwrap().2;
+    assert_eq!((c, h, w), (64, 8, 8));
+    assert_eq!(out.len(), c * h * w);
+}
+
+#[test]
+fn mesh_trace_matches_functional_trace() {
+    let net = zoo::hypernet20();
+    let params = Arc::new(NetworkParams::seeded(&net, 16, 77));
+    let functional = Engine::builder()
+        .network(net.clone())
+        .params(params.clone())
+        .build()
+        .unwrap();
+    let mesh = Engine::builder()
+        .network(net)
+        .params(params)
+        .mesh(4, 4)
+        .build()
+        .unwrap();
+    let input = random_input(functional.input_len(), 9);
+    let mut func_fms: Vec<Vec<f32>> = Vec::new();
+    functional
+        .infer_traced(&input, &mut |t| func_fms.push(t.output.to_vec()))
+        .unwrap();
+    let mut step = 0usize;
+    mesh.infer_traced(&input, &mut |t| {
+        assert_eq!(t.output, &func_fms[t.step][..], "step {} diverged", t.step);
+        step += 1;
+    })
+    .unwrap();
+    assert_eq!(step, func_fms.len());
+}
+
+#[test]
+fn wrong_input_length_is_a_clean_error() {
+    let engine = Engine::builder().network(zoo::hypernet20()).build().unwrap();
+    let err = engine.infer(&[0.0; 7]).unwrap_err();
+    assert!(matches!(err, EngineError::Input(_)), "{err}");
+    let err = engine
+        .serve(&[vec![0.0; 7]], &ServeOptions::default())
+        .unwrap_err();
+    assert!(matches!(err, EngineError::Input(_)), "{err}");
+}
+
+#[test]
+fn indivisible_mesh_is_a_clean_error() {
+    // 32×32 FMs do not divide over 3×3 chips: build (analytic) succeeds,
+    // inference reports Unsupported instead of panicking.
+    let engine = Engine::builder()
+        .network(zoo::hypernet20())
+        .mesh(3, 3)
+        .build()
+        .unwrap();
+    let input = random_input(engine.input_len(), 1);
+    let err = engine.infer(&input).unwrap_err();
+    assert!(matches!(err, EngineError::Unsupported(_)), "{err}");
+}
+
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn pjrt_backend_degrades_cleanly_without_the_feature() {
+    let err = Engine::builder().artifacts("artifacts").build().unwrap_err();
+    assert!(matches!(err, EngineError::Unavailable(_)), "{err}");
+}

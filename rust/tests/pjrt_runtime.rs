@@ -1,6 +1,8 @@
 //! Integration tests over the PJRT runtime: the full AOT → load →
 //! execute path, cross-checked against the JAX golden files and the
-//! Rust functional simulator. Requires `make artifacts`.
+//! Rust functional simulator. Requires `make artifacts` and the `pjrt`
+//! cargo feature (vendored xla-rs; see DESIGN.md §Substitutions).
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 
@@ -162,13 +164,25 @@ fn manifest_blob_errors_are_contextual() {
 
 #[test]
 fn serve_batch_reports_latency() {
-    let e = engine();
-    let input = e.manifest.golden("e2e_input.bin").unwrap();
+    use hyperdrive::engine::{Engine, ServeOptions};
+    let engine = Engine::builder().artifacts(artifacts_dir()).build().unwrap();
+    let input = engine.golden("e2e_input.bin").unwrap();
     let inputs: Vec<Vec<f32>> = (0..4).map(|_| input.clone()).collect();
-    let (outs, stats) = e.serve(&inputs).unwrap();
+    let opts = ServeOptions {
+        workers: 2,
+        ..ServeOptions::default()
+    };
+    let (outs, stats) = engine.serve(&inputs, &opts).unwrap();
     assert_eq!(outs.len(), 4);
     assert!(stats.p50_ms > 0.0 && stats.p99_ms >= stats.p50_ms);
     assert!(stats.ops_per_s > 0.0);
-    // Deterministic engine: identical inputs → identical outputs.
+    // Deterministic engine: identical inputs → identical outputs, and
+    // the concurrent pool must match a sequential pass bit-for-bit.
     assert_eq!(outs[0], outs[3]);
+    let seq = ServeOptions {
+        workers: 1,
+        ..ServeOptions::default()
+    };
+    let (seq_outs, _) = engine.serve(&inputs, &seq).unwrap();
+    assert_eq!(outs, seq_outs);
 }
