@@ -6,9 +6,10 @@
 //!
 //!   1. JAX/Pallas (build time) lowered each layer to an HLO artifact and
 //!      produced golden logits (`make artifacts`);
-//!   2. `Engine::builder().artifacts(..)` loads the manifest, plans FMM
-//!      memory (§IV-B ping-pong, peak == WCL) and packs the binary
-//!      weights into the Tbl-I stream format;
+//!   2. `Engine::builder().model("manifest:artifacts#hypernet20")` on
+//!      the PJRT backend loads the manifest, plans FMM memory (§IV-B
+//!      ping-pong, peak == WCL) and packs the binary weights into the
+//!      Tbl-I stream format;
 //!   3. PJRT executes each layer's compiled kernel; a batch of requests
 //!      is served through the bounded-queue worker pool;
 //!   4. the result is cross-checked against the JAX golden logits, and
@@ -17,11 +18,18 @@
 //!
 //!     make artifacts && cargo run --release --features pjrt --example e2e_inference
 
-use hyperdrive::engine::{Engine, ServeOptions};
+use hyperdrive::engine::{BackendKind, Engine, ServeOptions};
 use hyperdrive::util::{fmt_bits, SplitMix64};
 
 fn main() -> anyhow::Result<()> {
-    let engine = Engine::builder().artifacts("artifacts").build()?;
+    // One model spec names both the network and the artifact directory;
+    // forcing the PJRT backend makes the engine execute the compiled
+    // artifacts (the same spec on the default backend would run the
+    // manifest's trained weights on the functional simulator).
+    let engine = Engine::builder()
+        .model("manifest:artifacts#hypernet20")
+        .backend(BackendKind::Pjrt)
+        .build()?;
     let net = engine.network();
     println!(
         "loaded {} ({} steps, {} binary weights) on {}",

@@ -13,37 +13,30 @@ use std::sync::Arc;
 
 use hyperdrive::coordinator::border;
 use hyperdrive::coordinator::wcl;
-use hyperdrive::engine::{Engine, NetworkParams, Precision};
-use hyperdrive::network::zoo;
-use hyperdrive::runtime::NetworkManifest;
+use hyperdrive::engine::{Engine, Precision};
+use hyperdrive::model;
 use hyperdrive::util::{fmt_bits, SplitMix64};
 use hyperdrive::ChipConfig;
 
 fn main() -> anyhow::Result<()> {
-    // Network + parameters + input: the manifest's own network when
-    // artifacts exist (params are positional per step, so the net must
-    // come from the same source), the zoo twin with seeded parameters
-    // otherwise.
-    let (net, params, input_vec, source) = match NetworkManifest::load("artifacts") {
-        Ok(nm) => {
-            let p = NetworkParams::from_manifest(&nm, 16)?;
-            let input = nm.golden("e2e_input.bin")?;
-            (
-                nm.network.clone(),
-                Arc::new(p),
-                input,
-                "manifest (trained) parameters",
-            )
-        }
-        Err(_) => {
-            let net = zoo::hypernet20();
+    // Network + weights through one model spec: the manifest (trained
+    // parameters; params are positional per step, so the net must come
+    // from the same source) when artifacts exist, the registry twin
+    // with its seeded weight source otherwise.
+    let resolved = model::resolve("manifest:artifacts#hypernet20")
+        .or_else(|_| model::resolve("hypernet20"))?;
+    let net = resolved.network.clone();
+    let params = Arc::new(resolved.weights.params(&net, 16)?);
+    let input_vec: Vec<f32> = match &resolved.manifest {
+        Some(nm) => nm.golden("e2e_input.bin")?,
+        None => {
             let mut rng = SplitMix64::new(0xbeef);
-            let input = (0..16 * 32 * 32).map(|_| rng.next_sym()).collect();
-            let p = NetworkParams::seeded(&net, 16, 0xabcd);
-            (net, Arc::new(p), input, "seeded synthetic parameters")
+            (0..net.in_ch * net.in_h * net.in_w)
+                .map(|_| rng.next_sym())
+                .collect()
         }
     };
-    println!("{} with {source}", net.name);
+    println!("{} with {}", net.name, resolved.weights.describe());
 
     // Single-chip FP16 reference through the same façade.
     let reference = Engine::builder()
@@ -78,7 +71,7 @@ fn main() -> anyhow::Result<()> {
     // Exchange-vs-compute slack (§V-D): the serial border links must
     // hide under the next layer's compute on the paper's big mesh.
     let cfg = ChipConfig::default();
-    let net2k = zoo::resnet34(1024, 2048);
+    let net2k = model::network("resnet34@1024x2048")?;
     let slacks = border::exchange_slack(&net2k, &cfg, 5, 10);
     let worst = slacks
         .iter()

@@ -9,13 +9,12 @@
 
 use hyperdrive::baselines::published_rows;
 use hyperdrive::engine::{DepthwisePolicy, Engine};
-use hyperdrive::network::zoo;
 use hyperdrive::util::fmt_bits;
 
 fn main() -> anyhow::Result<()> {
     // --- YOLOv3 @ 320² on one chip --------------------------------------
     let rep = Engine::builder()
-        .network(zoo::yolov3(320, 320))
+        .model("yolov3@320x320")
         .depthwise(DepthwisePolicy::FullRate)
         .build()?
         .report();
@@ -38,7 +37,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- ResNet-34 features @ 2048×1024 on a 10×5 mesh ------------------
     let rep = Engine::builder()
-        .network(zoo::resnet34(1024, 2048))
+        .model("resnet34@1024x2048")
         .mesh(5, 10)
         .depthwise(DepthwisePolicy::FullRate)
         .build()?

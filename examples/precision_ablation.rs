@@ -11,15 +11,10 @@
 
 use hyperdrive::energy::ablation::render;
 use hyperdrive::engine::Engine;
-use hyperdrive::network::zoo;
 
 fn main() -> anyhow::Result<()> {
-    for net in [
-        zoo::resnet34(224, 224),
-        zoo::yolov3(320, 320),
-        zoo::resnet34(1024, 2048),
-    ] {
-        let engine = Engine::builder().network(net).build()?;
+    for spec in ["resnet34@224x224", "yolov3@320x320", "resnet34@1024x2048"] {
+        let engine = Engine::builder().model(spec).build()?;
         let rows = engine.ablation();
         let rep = engine.report();
         println!("{}", render(&rep.network, &rows));

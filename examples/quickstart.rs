@@ -7,24 +7,27 @@
 //! (No artifacts needed: the simulator backends generate deterministic
 //! seeded BWN parameters. For the PJRT backend see `e2e_inference`.)
 
-use hyperdrive::engine::{Engine, NetworkParams, Precision, ServeOptions};
-use hyperdrive::network::zoo;
+use hyperdrive::engine::{Engine, Precision, ServeOptions};
+use hyperdrive::model;
 use hyperdrive::util::SplitMix64;
 
 fn main() -> anyhow::Result<()> {
-    // HyperNet-20 (the e2e validation network) with seeded ±1 weights.
-    let net = zoo::hypernet20();
-    let params = NetworkParams::seeded(&net, 16, 42);
+    // HyperNet-20 (the e2e validation network) resolved through the
+    // model registry; its weight source is the seeded ±1 generator.
+    let resolved = model::resolve("hypernet20")?;
+    let params = resolved.weights.params(&resolved.network, 16)?;
     println!(
-        "weight streams: {} layers, first layer {} words × 16 bit \
+        "{} via {}: {} layers, first layer {} words × 16 bit \
          (16x smaller than FP16 weights)",
+        resolved.network.name,
+        resolved.weights.describe(),
         params.steps.len(),
         params.steps[0].stream.words.len(),
     );
 
     // 1) Build: functional single-chip backend, FP16 like the silicon.
     let engine = Engine::builder()
-        .network(net)
+        .network(resolved.network)
         .params(params)
         .precision(Precision::F16)
         .build()?;

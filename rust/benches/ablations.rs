@@ -12,7 +12,7 @@ use hyperdrive::coordinator::schedule::{schedule_network, DepthwisePolicy};
 use hyperdrive::coordinator::tiling::{plan_mesh, plan_mesh_exact};
 use hyperdrive::coordinator::wcl;
 use hyperdrive::energy::ablation::{precision_ablation, render};
-use hyperdrive::network::zoo;
+use hyperdrive::model;
 use hyperdrive::util::fmt_bits;
 use hyperdrive::ChipConfig;
 
@@ -21,7 +21,7 @@ fn main() {
 
     // 1. Bypass fusion ablation.
     println!("== ablation 1: on-the-fly bypass accumulation (§IV-B) ==");
-    for net in [zoo::resnet34(224, 224), zoo::resnet50(224, 224)] {
+    for net in [model::network("resnet34@224x224").unwrap(), model::network("resnet50@224x224").unwrap()] {
         let fused = wcl::analyze(&net).wcl_words;
         let unfused = wcl::analyze_with(&net, false).wcl_words;
         println!(
@@ -35,7 +35,7 @@ fn main() {
 
     // 2. Depth-wise policy ablation.
     println!("\n== ablation 2: depth-wise bank serialization (ShuffleNet) ==");
-    let net = zoo::shufflenet(224, 224);
+    let net = model::network("shufflenet@224x224").unwrap();
     for (name, dw) in [
         ("full-rate", DepthwisePolicy::FullRate),
         ("bank-serialized", DepthwisePolicy::BankSerialized),
@@ -52,15 +52,15 @@ fn main() {
 
     // 3. Precision ablation.
     println!("\n== ablation 3: FM precision (§VI-D projection) ==");
-    for net in [zoo::resnet34(224, 224), zoo::resnet34(1024, 2048)] {
+    for net in [model::network("resnet34@224x224").unwrap(), model::network("resnet34@1024x2048").unwrap()] {
         let rows = precision_ablation(&net, &cfg);
         println!("{}", render(&net.name, &rows));
     }
 
     // 4. Shortcut kind (weight accounting).
     println!("== ablation 4: projection vs identity shortcuts ==");
-    for net in [zoo::resnet34(224, 224), zoo::resnet50(224, 224), zoo::resnet152(224, 224)] {
-        let proj = zoo::projection_weight_bits(&net);
+    for net in [model::network("resnet34@224x224").unwrap(), model::network("resnet50@224x224").unwrap(), model::network("resnet152@224x224").unwrap()] {
+        let proj = model::projection_weight_bits(&net);
         println!(
             "{:<12} weights {} with projections, {} identity-only",
             net.name,
@@ -71,7 +71,7 @@ fn main() {
 
     // 5. Mesh planning policy.
     println!("\n== ablation 5: mesh planning (ResNet-34 @2048x1024) ==");
-    let net2k = zoo::resnet34(1024, 2048);
+    let net2k = model::network("resnet34@1024x2048").unwrap();
     let auto = plan_mesh(&net2k, &cfg);
     let paper = plan_mesh_exact(&net2k, &cfg, 5, 10);
     for (name, p) in [("aspect-matched", auto), ("paper 10x5", paper)] {
@@ -87,7 +87,7 @@ fn main() {
 
     // Timing anchor for the whole ablation suite.
     bench_util::bench("full ablation suite", 1, 10, || {
-        let rows = precision_ablation(&zoo::resnet34(224, 224), &cfg);
+        let rows = precision_ablation(&model::network("resnet34@224x224").unwrap(), &cfg);
         assert_eq!(rows.len(), 3);
     });
 }

@@ -5,14 +5,14 @@ mod bench_util;
 
 use hyperdrive::coordinator::tiling::MeshPlan;
 use hyperdrive::energy::breakdown::breakdown;
-use hyperdrive::network::zoo;
+use hyperdrive::model;
 use hyperdrive::report;
 use hyperdrive::ChipConfig;
 
 fn main() {
     let cfg = ChipConfig::default();
     println!("{}", report::fig10(&cfg));
-    let net = zoo::resnet34(224, 224);
+    let net = model::network("resnet34@224x224").unwrap();
     let plan = MeshPlan { rows: 1, cols: 1, per_chip_wcl_words: 0 };
     bench_util::bench("breakdown(ResNet-34)", 3, 200, || {
         let b = breakdown(&net, &cfg, &plan);

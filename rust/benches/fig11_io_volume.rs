@@ -7,7 +7,7 @@ mod bench_util;
 use hyperdrive::baselines::weight_stationary::hyperdrive_fig11_bits;
 use hyperdrive::baselines::weight_stationary_io_bits;
 use hyperdrive::coordinator::tiling::plan_mesh;
-use hyperdrive::network::zoo;
+use hyperdrive::model;
 use hyperdrive::report;
 use hyperdrive::ChipConfig;
 
@@ -15,7 +15,7 @@ fn main() {
     let cfg = ChipConfig::default();
     println!("{}", report::fig11(&cfg));
     bench_util::bench("fig11 point (build + plan + both I/O models)", 2, 50, || {
-        let net = zoo::resnet34(448, 448);
+        let net = model::network("resnet34@448x448").unwrap();
         let plan = plan_mesh(&net, &cfg);
         let ws = weight_stationary_io_bits(&net, 16);
         let hd = hyperdrive_fig11_bits(&net, &plan, 16);

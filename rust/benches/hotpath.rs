@@ -8,7 +8,8 @@ mod bench_util;
 use hyperdrive::bwn::pack_weights;
 use hyperdrive::coordinator::memory;
 use hyperdrive::engine::{Engine, ServeOptions};
-use hyperdrive::network::{zoo, ConvLayer};
+use hyperdrive::model;
+use hyperdrive::network::ConvLayer;
 use hyperdrive::simulator::mesh::{MeshSim, StepParams};
 use hyperdrive::simulator::{self, FeatureMap, Precision};
 use hyperdrive::util::f16::round_f16;
@@ -63,7 +64,7 @@ fn main() {
     });
 
     // Mesh run (whole HyperNet-20 on 2×2, FP16) — exchange included.
-    let net = zoo::hypernet20();
+    let net = model::network("hypernet20").unwrap();
     let sparams: Vec<StepParams> = net
         .steps
         .iter()
@@ -88,7 +89,7 @@ fn main() {
     // Engine serving layer: bounded queue + worker pool over the
     // functional backend (1 vs 4 workers shows the concurrency win).
     let engine = Engine::builder()
-        .network(zoo::hypernet20())
+        .network(model::network("hypernet20").unwrap())
         .seed(7)
         .precision(Precision::F16)
         .build()
@@ -110,7 +111,7 @@ fn main() {
     }
 
     // Memory planner on the deepest network.
-    let deep = zoo::resnet152(224, 224);
+    let deep = model::network("resnet152@224x224").unwrap();
     bench_util::bench("memory::plan_tight(ResNet-152)", 2, 50, || {
         let p = memory::plan_tight(&deep).unwrap();
         std::hint::black_box(p.peak_words);

@@ -4,18 +4,18 @@
 mod bench_util;
 
 use hyperdrive::coordinator::wcl;
-use hyperdrive::network::zoo;
+use hyperdrive::model;
 use hyperdrive::report;
 
 fn main() {
     println!("{}", report::table2());
     // Perf: the WCL liveness analysis itself (coordinator hot path).
-    let net = zoo::resnet152(1024, 2048);
+    let net = model::network("resnet152@1024x2048").unwrap();
     bench_util::bench("wcl::analyze(ResNet-152 @2k×1k)", 3, 50, || {
         let a = wcl::analyze(&net);
         assert!(a.wcl_words > 0);
     });
-    let net34 = zoo::resnet34(224, 224);
+    let net34 = model::network("resnet34@224x224").unwrap();
     bench_util::bench("zoo build + analyze (ResNet-34)", 3, 50, || {
         let a = wcl::analyze(&net34);
         assert_eq!(a.wcl_words, 401_408);

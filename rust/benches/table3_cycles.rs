@@ -5,7 +5,7 @@ mod bench_util;
 
 use hyperdrive::coordinator::schedule::{schedule_network, DepthwisePolicy};
 use hyperdrive::engine::Engine;
-use hyperdrive::network::zoo;
+use hyperdrive::model;
 use hyperdrive::report;
 use hyperdrive::ChipConfig;
 
@@ -15,7 +15,7 @@ fn main() {
 
     // The typed report carries the same schedule the table prints.
     let rep = Engine::builder()
-        .network(zoo::resnet34(224, 224))
+        .model("resnet34@224x224")
         .chip(cfg)
         .build()
         .unwrap()
@@ -23,7 +23,7 @@ fn main() {
     assert_eq!(rep.schedule.cycles.conv, 4_521_984);
 
     // Perf: the raw schedule model (coordinator hot path).
-    let net = zoo::resnet34(224, 224);
+    let net = model::network("resnet34@224x224").unwrap();
     bench_util::bench("schedule_network(ResNet-34)", 3, 200, || {
         let s = schedule_network(&net, &cfg, DepthwisePolicy::default());
         assert_eq!(s.cycles.conv, 4_521_984);

@@ -6,7 +6,6 @@
 mod bench_util;
 
 use hyperdrive::engine::{DepthwisePolicy, Engine};
-use hyperdrive::network::zoo;
 use hyperdrive::report;
 use hyperdrive::ChipConfig;
 
@@ -18,7 +17,7 @@ fn main() {
     // (plan validation, schedule, WCL liveness, energy model).
     bench_util::bench("EngineReport(ResNet-34 @2k×1k, 10×5)", 3, 50, || {
         let rep = Engine::builder()
-            .network(zoo::resnet34(1024, 2048))
+            .model("resnet34@1024x2048")
             .chip(cfg)
             .mesh(5, 10)
             .depthwise(DepthwisePolicy::FullRate)

@@ -4,14 +4,14 @@
 mod bench_util;
 
 use hyperdrive::coordinator::schedule::{schedule_network, DepthwisePolicy};
-use hyperdrive::network::zoo;
+use hyperdrive::model;
 use hyperdrive::report;
 use hyperdrive::ChipConfig;
 
 fn main() {
     let cfg = ChipConfig::default();
     println!("{}", report::table6(&cfg));
-    let yolo = zoo::yolov3(320, 320);
+    let yolo = model::network("yolov3@320x320").unwrap();
     bench_util::bench("schedule_network(YOLOv3 @320²)", 3, 200, || {
         let s = schedule_network(&yolo, &cfg, DepthwisePolicy::FullRate);
         assert!(s.total_cycles() > 0);

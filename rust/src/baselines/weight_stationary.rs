@@ -33,14 +33,14 @@ pub fn hyperdrive_fig11_bits(
 mod tests {
     use super::*;
     use crate::coordinator::tiling::{plan_mesh, plan_mesh_exact};
-    use crate::network::zoo;
+    use crate::model;
     use crate::ChipConfig;
 
     #[test]
     fn resnet34_fm_streaming_far_exceeds_weight_streaming() {
         // At 224² the FM traffic is ~100 Mbit vs 21.3 Mbit of weights —
         // the ~4–5× gap that motivates the whole architecture.
-        let net = zoo::resnet34(224, 224);
+        let net = model::network("resnet34@224x224").unwrap();
         let ws = weight_stationary_io_bits(&net, 16);
         let hd = net.weight_bits();
         let ratio = ws as f64 / hd as f64;
@@ -52,7 +52,7 @@ mod tests {
         // Fig 11: at the first multi-chip step (2×2), Hyperdrive's total
         // I/O (weights + border exchange) is several times below the
         // FM-streaming baseline; the paper reports up to 2.7×.
-        let net = zoo::resnet34(448, 448);
+        let net = model::network("resnet34@448x448").unwrap();
         let cfg = ChipConfig::default();
         let plan = plan_mesh(&net, &cfg);
         assert_eq!((plan.rows, plan.cols), (2, 2));
@@ -64,7 +64,7 @@ mod tests {
 
     #[test]
     fn fig11_reduction_persists_at_3x3() {
-        let net = zoo::resnet34(672, 672);
+        let net = model::network("resnet34@672x672").unwrap();
         let cfg = ChipConfig::default();
         let plan = plan_mesh_exact(&net, &cfg, 3, 3);
         let ws = weight_stationary_io_bits(&net, 16);
@@ -76,14 +76,14 @@ mod tests {
     #[test]
     fn weight_io_constant_until_single_chip_limit() {
         // Fig 11's red plateau: weights don't grow with resolution.
-        let a = zoo::resnet34(112, 112).weight_bits();
-        let b = zoo::resnet34(224, 224).weight_bits();
+        let a = model::network("resnet34@112x112").unwrap().weight_bits();
+        let b = model::network("resnet34@224x224").unwrap().weight_bits();
         assert_eq!(a, b);
     }
 
     #[test]
     fn border_exchange_grows_with_mesh_but_stays_secondary() {
-        let net = zoo::resnet34(1024, 2048);
+        let net = model::network("resnet34@1024x2048").unwrap();
         let cfg = ChipConfig::default();
         let p55 = plan_mesh_exact(&net, &cfg, 5, 10);
         let ws = weight_stationary_io_bits(&net, 16);

@@ -189,6 +189,57 @@ mod tests {
     }
 
     #[test]
+    fn pack_unpack_round_trip_odd_nout_and_groups() {
+        // The padded-tail path: odd `n_out` (or odd multiples of the
+        // group count) is never a multiple of C = 16, so the last
+        // c_out tile always carries padding; grouped layers stream the
+        // reduced `n_in / groups` fan-in.
+        testkit::check("pack/unpack odd n_out + groups", 0x0dd5, |rng| {
+            let k = if rng.next_u64() & 1 == 0 { 1 } else { 3 };
+            let groups = [1usize, 2, 4][rng.next_below(3)];
+            let n_in = groups * (1 + rng.next_below(8));
+            let n_out = groups * (2 * rng.next_below(20) + 1); // odd multiple
+            let l = layer(n_in, n_out, k).with_groups(groups);
+            let nie = n_in / groups;
+            let w: Vec<f32> = (0..n_out * nie * k * k).map(|_| rng.next_sign()).collect();
+            let s = pack_weights(&l, &w, 16);
+            if s.n_in_eff != nie {
+                return Err(format!("n_in_eff {} != {nie}", s.n_in_eff));
+            }
+            if s.wire_bits() % 16 != 0 {
+                return Err(format!("wire bits {} not word-aligned", s.wire_bits()));
+            }
+            let dense = s.unpack_dense();
+            if dense.len() != w.len() {
+                return Err(format!("dense len {} != {}", dense.len(), w.len()));
+            }
+            for (i, (&orig, &got)) in w.iter().zip(&dense).enumerate() {
+                if orig != got {
+                    return Err(format!("index {i}: {orig} → {got}"));
+                }
+            }
+            // Idle channels of the last tile stream +1 (never garbage).
+            let tail = n_out % 16;
+            if tail != 0 {
+                let tile = n_out / 16;
+                for tap in 0..k * k {
+                    for ci in 0..nie {
+                        let word = s.words[s.word_index(tile, tap, ci)];
+                        for b in tail..16 {
+                            if word & (1 << b) == 0 {
+                                return Err(format!(
+                                    "padded bit {b} of tile {tile} tap {tap} ci {ci} is -1"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn sign_zero_is_plus_one() {
         assert!(binarize(0.0));
         assert!(binarize(1e-30));

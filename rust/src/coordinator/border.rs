@@ -189,11 +189,11 @@ pub fn exchange_slack(
 mod tests {
     use super::*;
     use crate::coordinator::wcl;
-    use crate::network::zoo;
+    use crate::model;
 
     #[test]
     fn resnet34_border_memory_is_459_kbit() {
-        let net = zoo::resnet34(224, 224);
+        let net = model::network("resnet34@224x224").unwrap();
         let a = wcl::analyze(&net);
         let bm = border_memory_bits(&net, &a, 1, 1, 16);
         // §V-C: M · (2·56+2·56)/(56·56) = 459 kbit (+7% of 6.4 Mbit).
@@ -206,13 +206,13 @@ mod tests {
     #[test]
     fn resnet34_corner_memory_is_64_kbit() {
         // §V-C: (512+512) · 4 · 1 · 1 · 16 bit = 64 kbit.
-        let net = zoo::resnet34(224, 224);
+        let net = model::network("resnet34@224x224").unwrap();
         assert_eq!(corner_memory_bits(&net, 16), 65_536);
     }
 
     #[test]
     fn bm_fits_four_srams_like_silicon() {
-        let net = zoo::resnet34(224, 224);
+        let net = model::network("resnet34@224x224").unwrap();
         let a = wcl::analyze(&net);
         let bm = border_memory_bits(&net, &a, 1, 1, 16);
         assert_eq!(border_memory_srams(bm, 7, 16), 4);
@@ -220,7 +220,7 @@ mod tests {
 
     #[test]
     fn corner_memory_ignores_1x1_layers() {
-        let net = zoo::resnet50(224, 224);
+        let net = model::network("resnet50@224x224").unwrap();
         // Bottleneck nets still size CM from their 3×3 layers (mid
         // channels), not the wide 1×1s.
         let cm = corner_memory_bits(&net, 16);
@@ -257,7 +257,7 @@ mod tests {
     fn exchange_hides_under_compute_on_paper_mesh() {
         // §V: the border exchange must not become the bottleneck on the
         // paper's 10×5 ResNet-34 @2k×1k configuration.
-        let net = zoo::resnet34(1024, 2048);
+        let net = model::network("resnet34@1024x2048").unwrap();
         let slacks = exchange_slack(&net, &crate::ChipConfig::default(), 5, 10);
         assert!(!slacks.is_empty());
         let hidden = slacks.iter().filter(|s| s.hidden()).count();

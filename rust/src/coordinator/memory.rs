@@ -218,20 +218,20 @@ pub fn plan_tight(net: &Network) -> Result<MemoryPlan> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::network::zoo;
+    use crate::model;
     use crate::network::{ConvLayer, Network};
 
     #[test]
     fn resnet34_plans_tight_at_wcl() {
         // The allocator realizes the paper's 401 kword plan exactly.
-        let net = zoo::resnet34(224, 224);
+        let net = model::network("resnet34@224x224").unwrap();
         let p = plan_tight(&net).unwrap();
         assert_eq!(p.peak_words, 401_408);
     }
 
     #[test]
     fn resnet50_and_152_plan_tight_at_wcl() {
-        for net in [zoo::resnet50(224, 224), zoo::resnet152(224, 224)] {
+        for net in [model::network("resnet50@224x224").unwrap(), model::network("resnet152@224x224").unwrap()] {
             let p = plan_tight(&net).unwrap();
             assert_eq!(p.peak_words, wcl::analyze(&net).wcl_words, "{}", net.name);
         }
@@ -239,7 +239,7 @@ mod tests {
 
     #[test]
     fn hypernet20_plan_is_tight_and_aliased() {
-        let net = zoo::hypernet20();
+        let net = model::network("hypernet20").unwrap();
         let p = plan_tight(&net).unwrap();
         assert_eq!(p.peak_words, 2 * 16 * 32 * 32);
         // Bypass steps share their shortcut's placement (here: the input).
@@ -249,7 +249,7 @@ mod tests {
 
     #[test]
     fn over_capacity_fails_cleanly() {
-        let net = zoo::resnet34(224, 224);
+        let net = model::network("resnet34@224x224").unwrap();
         let err = plan(&net, 100_000).unwrap_err().to_string();
         assert!(err.contains("FMM allocation"), "{err}");
     }
@@ -258,7 +258,7 @@ mod tests {
     fn live_placements_never_overlap() {
         // At every step, gather placements of all live root tensors and
         // assert extent-level disjointness.
-        let net = zoo::resnet50(224, 224);
+        let net = model::network("resnet50@224x224").unwrap();
         let a = wcl::analyze(&net);
         let p = plan(&net, a.wcl_words).unwrap();
         let n = net.steps.len();
@@ -339,7 +339,7 @@ mod tests {
     fn split_allocation_when_fragmented() {
         // Force fragmentation: a strided bottleneck-like pattern where
         // the only way to fit is a split tensor (M2.1/M2.2 of §IV-B).
-        let net = zoo::resnet50(224, 224);
+        let net = model::network("resnet50@224x224").unwrap();
         let p = plan_tight(&net).unwrap();
         let any_split = p.outputs.iter().any(|pl| pl.extents.len() > 1);
         assert!(any_split, "expected at least one split placement");

@@ -248,7 +248,7 @@ pub fn trace_layer(layer: &ConvLayer, cfg: &ChipConfig, max_events: usize) -> Ve
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::network::zoo;
+    use crate::model;
     use crate::network::ConvLayer;
 
     fn cfg() -> ChipConfig {
@@ -258,7 +258,7 @@ mod tests {
     #[test]
     fn resnet34_cycle_breakdown_matches_table3() {
         // Tbl III: conv 4.52M, bnorm 59.90k, bias 59.90k, total ≈ 4.65M.
-        let s = schedule_network(&zoo::resnet34(224, 224), &cfg(), DepthwisePolicy::default());
+        let s = schedule_network(&model::network("resnet34@224x224").unwrap(), &cfg(), DepthwisePolicy::default());
         assert_eq!(s.cycles.conv, 4_521_984);
         assert_eq!(s.cycles.bnorm, 59_904);
         assert_eq!(s.cycles.bias, 59_904);
@@ -272,7 +272,7 @@ mod tests {
     #[test]
     fn resnet34_throughput_and_utilization_match_paper() {
         // Tbl III: 1.53 kOp/cycle; Tbl VI: 97.5% utilization.
-        let s = schedule_network(&zoo::resnet34(224, 224), &cfg(), DepthwisePolicy::default());
+        let s = schedule_network(&model::network("resnet34@224x224").unwrap(), &cfg(), DepthwisePolicy::default());
         let opc = s.ops_per_cycle();
         assert!((opc / 1_530.0 - 1.0).abs() < 0.01, "op/cycle {opc}");
         let u = s.utilization(&cfg());
@@ -282,7 +282,7 @@ mod tests {
     #[test]
     fn yolov3_utilization_near_paper() {
         // Tbl VI: 82.8% — driven by 320/32=10-wide FMs padding to 14.
-        let s = schedule_network(&zoo::yolov3(320, 320), &cfg(), DepthwisePolicy::default());
+        let s = schedule_network(&model::network("yolov3@320x320").unwrap(), &cfg(), DepthwisePolicy::default());
         let u = s.conv_utilization(&cfg());
         assert!((0.73..0.90).contains(&u), "conv utilization {u}");
         // Total utilization (incl. post phases) is a few points lower.
@@ -296,7 +296,7 @@ mod tests {
         // peak under full-rate depth-wise. The total including the
         // 49-word-bandwidth post phases is far lower for 1×1-dominated
         // blocks — documented deviation (EXPERIMENTS.md).
-        let net = zoo::shufflenet(224, 224);
+        let net = model::network("shufflenet@224x224").unwrap();
         let s = schedule_network(&net, &cfg(), DepthwisePolicy::FullRate);
         let cu = s.conv_utilization(&cfg());
         assert!(cu > 0.97, "conv utilization {cu}");
@@ -305,15 +305,15 @@ mod tests {
         assert!(s2.conv_utilization(&cfg()) < cu);
         // …and the paper-shape ordering ShuffleNet > ResNet-34 > YOLOv3
         // holds on conv-phase utilization.
-        let r34 = schedule_network(&zoo::resnet34(224, 224), &cfg(), DepthwisePolicy::FullRate);
-        let yolo = schedule_network(&zoo::yolov3(320, 320), &cfg(), DepthwisePolicy::FullRate);
+        let r34 = schedule_network(&model::network("resnet34@224x224").unwrap(), &cfg(), DepthwisePolicy::FullRate);
+        let yolo = schedule_network(&model::network("yolov3@320x320").unwrap(), &cfg(), DepthwisePolicy::FullRate);
         assert!(cu > yolo.conv_utilization(&cfg()));
         assert!(r34.conv_utilization(&cfg()) > yolo.conv_utilization(&cfg()));
     }
 
     #[test]
     fn stream_bits_equal_weight_bits_for_aligned_nets() {
-        let net = zoo::resnet34(224, 224);
+        let net = model::network("resnet34@224x224").unwrap();
         let s = schedule_network(&net, &cfg(), DepthwisePolicy::default());
         assert_eq!(s.stream_bits, net.weight_bits());
     }

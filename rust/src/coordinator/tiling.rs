@@ -239,7 +239,7 @@ pub fn chip_type(row: usize, col: usize, plan: &MeshPlan) -> ChipType {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::network::zoo;
+    use crate::model;
 
     fn cfg() -> ChipConfig {
         ChipConfig::default()
@@ -247,7 +247,7 @@ mod tests {
 
     #[test]
     fn resnet34_224_plans_single_chip() {
-        let net = zoo::resnet34(224, 224);
+        let net = model::network("resnet34@224x224").unwrap();
         let p = plan_mesh(&net, &cfg());
         assert!(p.is_single_chip());
         assert_eq!(p.per_chip_wcl_words, 401_408);
@@ -255,7 +255,7 @@ mod tests {
 
     #[test]
     fn resnet34_2kx1k_plans_10x5_like_paper() {
-        let net = zoo::resnet34(1024, 2048); // (h, w) = 1024×2048
+        let net = model::network("resnet34@1024x2048").unwrap(); // (h, w) = 1024×2048
         let p = plan_mesh(&net, &cfg());
         assert_eq!((p.rows, p.cols), (5, 10), "paper's Tbl V mesh");
         assert!(p.per_chip_wcl_words <= cfg().fmm_words as u64);
@@ -266,7 +266,7 @@ mod tests {
         // The paper deploys 20×10 = 200 chips; our planner finds that a
         // slightly smaller aspect-matched mesh (9×18) already fits, and
         // the paper's round configuration validates as well.
-        let net = zoo::resnet152(1024, 2048);
+        let net = model::network("resnet152@1024x2048").unwrap();
         let p = plan_mesh(&net, &cfg());
         assert!(p.chips() <= 200, "planner found {} chips", p.chips());
         let exact = plan_mesh_exact(&net, &cfg(), 10, 20);
@@ -275,7 +275,7 @@ mod tests {
 
     #[test]
     fn exact_plan_validates_capacity() {
-        let net = zoo::resnet34(1024, 2048);
+        let net = model::network("resnet34@1024x2048").unwrap();
         let p = plan_mesh_exact(&net, &cfg(), 5, 10);
         assert_eq!(p.chips(), 50);
     }
@@ -283,13 +283,13 @@ mod tests {
     #[test]
     #[should_panic(expected = "exceeds FMM")]
     fn undersized_exact_plan_panics() {
-        let net = zoo::resnet34(1024, 2048);
+        let net = model::network("resnet34@1024x2048").unwrap();
         let _ = plan_mesh_exact(&net, &cfg(), 2, 2);
     }
 
     #[test]
     fn per_chip_wcl_shrinks_with_mesh() {
-        let net = zoo::resnet34(1024, 2048);
+        let net = model::network("resnet34@1024x2048").unwrap();
         let w1 = per_chip_wcl_words(&net, 1, 1);
         let w4 = per_chip_wcl_words(&net, 2, 2);
         let w50 = per_chip_wcl_words(&net, 5, 10);
@@ -300,7 +300,7 @@ mod tests {
 
     #[test]
     fn border_exchange_zero_on_single_chip() {
-        let net = zoo::resnet34(224, 224);
+        let net = model::network("resnet34@224x224").unwrap();
         let p = plan_mesh(&net, &cfg());
         assert_eq!(border_exchange_bits(&net, &p, 16), 0);
     }
@@ -309,7 +309,7 @@ mod tests {
     fn border_exchange_order_of_magnitude() {
         // ResNet-34 @ 2048×1024 on 10×5: a few hundred Mbit — small vs
         // the 2.5 Gbit of FMs that a streaming accelerator would move.
-        let net = zoo::resnet34(1024, 2048);
+        let net = model::network("resnet34@1024x2048").unwrap();
         let p = plan_mesh_exact(&net, &cfg(), 5, 10);
         let bits = border_exchange_bits(&net, &p, 16) as f64;
         assert!(

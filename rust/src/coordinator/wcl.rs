@@ -158,14 +158,14 @@ pub fn analyze_with(net: &Network, alias_bypass: bool) -> MemoryAnalysis {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::network::zoo;
+    use crate::model;
     use crate::network::{ConvLayer, Network, TensorRef};
     use crate::ChipConfig;
 
     #[test]
     fn resnet34_wcl_is_401_kwords() {
         // §IV-B: M = 2·n_in·h_in·w_in = 2·64·56·56 = 401 408 words.
-        let a = analyze(&zoo::resnet34(224, 224));
+        let a = analyze(&model::network("resnet34@224x224").unwrap());
         assert_eq!(a.wcl_words, 2 * 64 * 56 * 56);
         // 6.4 Mbit with FP16 — exactly the taped-out FMM size.
         assert_eq!(a.wcl_bits(16), 6_422_528);
@@ -175,8 +175,8 @@ mod tests {
     #[test]
     fn resnet18_wcl_equals_resnet34_wcl() {
         // Tbl II: both basic-block ResNets share the 6.4 Mbit WCL.
-        let a18 = analyze(&zoo::resnet18(224, 224));
-        let a34 = analyze(&zoo::resnet34(224, 224));
+        let a18 = analyze(&model::network("resnet18@224x224").unwrap());
+        let a34 = analyze(&model::network("resnet34@224x224").unwrap());
         assert_eq!(a18.wcl_words, a34.wcl_words);
     }
 
@@ -184,7 +184,7 @@ mod tests {
     fn bottleneck_wcl_is_1_625_m1() {
         // §IV-B subsampled bottleneck: M1+M2+M4 = 1.625·M1 with
         // M1 = 256·56·56 → 20.9 Mbit ("21M" in Tbl II).
-        let a = analyze(&zoo::resnet50(224, 224));
+        let a = analyze(&model::network("resnet50@224x224").unwrap());
         let m1 = 256u64 * 56 * 56;
         assert_eq!(a.wcl_words, m1 + m1 / 8 + m1 / 2);
         let mbit = a.wcl_bits(16) as f64 / 1e6;
@@ -194,20 +194,20 @@ mod tests {
     #[test]
     fn resnet152_wcl_independent_of_depth() {
         // Tbl II: ResNet-50 and ResNet-152 share the WCL (same blocks).
-        let a50 = analyze(&zoo::resnet50(224, 224));
-        let a152 = analyze(&zoo::resnet152(224, 224));
+        let a50 = analyze(&model::network("resnet50@224x224").unwrap());
+        let a152 = analyze(&model::network("resnet152@224x224").unwrap());
         assert_eq!(a50.wcl_words, a152.wcl_words);
     }
 
     #[test]
     fn high_resolution_wcl_matches_table2() {
         // ResNet-34 @ 2048×1024: 2·64·512·256 words = 268 Mbit (paper: 267M).
-        let a = analyze(&zoo::resnet34(1024, 2048));
+        let a = analyze(&model::network("resnet34@1024x2048").unwrap());
         assert_eq!(a.wcl_words, 2 * 64 * 256 * 512);
         let mbit = a.wcl_bits(16) as f64 / 1e6;
         assert!((265.0..270.0).contains(&mbit), "{mbit}");
         // ResNet-152 @ 2048×1024: 1.625·256·512·256 → ~872 Mbit (paper 878M).
-        let a152 = analyze(&zoo::resnet152(1024, 2048));
+        let a152 = analyze(&model::network("resnet152@1024x2048").unwrap());
         let mbit152 = a152.wcl_bits(16) as f64 / 1e6;
         assert!((860.0..885.0).contains(&mbit152), "{mbit152}");
     }
@@ -215,8 +215,8 @@ mod tests {
     #[test]
     fn resnet34_fits_taped_out_chip_at_224() {
         let cfg = ChipConfig::default();
-        assert!(analyze(&zoo::resnet34(224, 224)).fits_single_chip(cfg.fmm_words));
-        assert!(!analyze(&zoo::resnet34(1024, 2048)).fits_single_chip(cfg.fmm_words));
+        assert!(analyze(&model::network("resnet34@224x224").unwrap()).fits_single_chip(cfg.fmm_words));
+        assert!(!analyze(&model::network("resnet34@1024x2048").unwrap()).fits_single_chip(cfg.fmm_words));
     }
 
     #[test]
@@ -254,7 +254,7 @@ mod tests {
     fn live_words_never_below_single_layer_need() {
         // Property: liveness can never be smaller than the layer's own
         // input + (non-aliased) output.
-        for net in [zoo::resnet34(224, 224), zoo::resnet50(224, 224)] {
+        for net in [model::network("resnet34@224x224").unwrap(), model::network("resnet50@224x224").unwrap()] {
             let m = analyze(&net);
             for (i, s) in net.steps.iter().enumerate() {
                 let need = s.layer.in_words()
@@ -273,7 +273,7 @@ mod tests {
     fn disabling_bypass_fusion_costs_50_percent() {
         // §IV-B: without the on-the-fly bypass addition, the basic-block
         // WCL would need a third buffer (+50%).
-        let net = zoo::resnet34(224, 224);
+        let net = model::network("resnet34@224x224").unwrap();
         let fused = analyze(&net).wcl_words;
         let unfused = analyze_with(&net, false).wcl_words;
         assert_eq!(unfused, 3 * 64 * 56 * 56);
@@ -282,7 +282,7 @@ mod tests {
 
     #[test]
     fn hypernet20_fits_comfortably() {
-        let a = analyze(&zoo::hypernet20());
+        let a = analyze(&model::network("hypernet20").unwrap());
         // Stage-1 residual pair dominates: 2 × 16·32·32 = 32 768 words.
         assert_eq!(a.wcl_words, 2 * 16 * 32 * 32);
         assert!(a.fits_single_chip(ChipConfig::default().fmm_words));

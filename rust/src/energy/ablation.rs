@@ -111,7 +111,7 @@ pub fn render(net_name: &str, rows: &[AblationRow]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::network::zoo;
+    use crate::model;
 
     #[test]
     fn q12_boosts_detection_efficiency_like_paper_estimate() {
@@ -119,7 +119,7 @@ mod tests {
         // system efficiency boost of 6.8× for high accuracy object
         // detection" (the 6.8× is vs the FM-streaming SoA at 1.4
         // TOp/s/W). Our model: Q12 system eff / SoA ∈ [5, 9].
-        let net = zoo::resnet34(1024, 2048);
+        let net = model::network("resnet34@1024x2048").unwrap();
         let rows = precision_ablation(&net, &ChipConfig::default());
         let fp16 = &rows[0];
         let q12 = &rows[1];
@@ -137,7 +137,7 @@ mod tests {
 
     #[test]
     fn narrower_fms_never_need_more_chips() {
-        let net = zoo::resnet34(1024, 2048);
+        let net = model::network("resnet34@1024x2048").unwrap();
         let rows = precision_ablation(&net, &ChipConfig::default());
         assert!(rows[1].chips <= rows[0].chips);
         assert!(rows[2].chips <= rows[1].chips);
@@ -145,7 +145,7 @@ mod tests {
 
     #[test]
     fn efficiency_monotone_in_precision_reduction() {
-        for net in [zoo::resnet34(224, 224), zoo::yolov3(320, 320)] {
+        for net in [model::network("resnet34@224x224").unwrap(), model::network("yolov3@320x320").unwrap()] {
             let rows = precision_ablation(&net, &ChipConfig::default());
             assert!(rows[1].system_eff_ops_w > rows[0].system_eff_ops_w);
             assert!(rows[2].system_eff_ops_w > rows[1].system_eff_ops_w);
@@ -154,7 +154,7 @@ mod tests {
 
     #[test]
     fn render_contains_all_rows() {
-        let net = zoo::resnet34(224, 224);
+        let net = model::network("resnet34@224x224").unwrap();
         let rows = precision_ablation(&net, &ChipConfig::default());
         let text = render(&net.name, &rows);
         for p in ["FP16", "Q12", "Q8"] {

@@ -91,10 +91,10 @@ pub fn breakdown(net: &Network, cfg: &ChipConfig, plan: &MeshPlan) -> Breakdown 
 mod tests {
     use super::*;
     use crate::energy::scaling;
-    use crate::network::zoo;
+    use crate::model;
 
     fn resnet34_breakdown() -> Breakdown {
-        let net = zoo::resnet34(224, 224);
+        let net = model::network("resnet34@224x224").unwrap();
         let plan = MeshPlan {
             rows: 1,
             cols: 1,

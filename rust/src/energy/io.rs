@@ -59,12 +59,12 @@ pub fn single_chip_plan() -> MeshPlan {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::network::zoo;
+    use crate::model;
 
     #[test]
     fn resnet34_io_energy_matches_table5() {
         // Tbl V: Hyperdrive ResNet-34 @224²: I/O E = 0.5 mJ/image.
-        let net = zoo::resnet34(224, 224);
+        let net = model::network("resnet34@224x224").unwrap();
         let io = hyperdrive_io(&net, &single_chip_plan(), 16);
         assert_eq!(io.border, 0);
         let mj = io.energy_j() * 1e3;
@@ -76,7 +76,7 @@ mod tests {
     #[test]
     fn yolov3_io_energy_matches_table5() {
         // Tbl V: Hyperdrive YOLOv3 @320²: I/O E = 1.4 mJ/image.
-        let net = zoo::yolov3(320, 320);
+        let net = model::network("yolov3@320x320").unwrap();
         let io = hyperdrive_io(&net, &single_chip_plan(), 16);
         let mj = io.energy_j() * 1e3;
         assert!((1.1..1.7).contains(&mj), "I/O {mj} mJ vs 1.4");
@@ -85,7 +85,7 @@ mod tests {
     #[test]
     fn shufflenet_io_energy_small_like_table5() {
         // Tbl V: ShuffleNet I/O E = 0.1 mJ.
-        let net = zoo::shufflenet(224, 224);
+        let net = model::network("shufflenet@224x224").unwrap();
         let io = hyperdrive_io(&net, &single_chip_plan(), 16);
         let mj = io.energy_j() * 1e3;
         assert!((0.05..0.2).contains(&mj), "I/O {mj} mJ");
@@ -96,7 +96,7 @@ mod tests {
         // Tbl V bottom: ResNet-34 @2048×1024 on 10×5 → 7.6 mJ in the
         // paper; our border model lands in the same few-mJ band, an
         // order of magnitude below UNPU's 105.6 mJ.
-        let net = zoo::resnet34(1024, 2048);
+        let net = model::network("resnet34@1024x2048").unwrap();
         let plan = crate::coordinator::tiling::plan_mesh_exact(
             &net,
             &crate::ChipConfig::default(),

@@ -79,7 +79,7 @@ pub fn energy_per_image(
 mod tests {
     use super::*;
     use crate::coordinator::tiling::{plan_mesh_exact, MeshPlan};
-    use crate::network::zoo;
+    use crate::model;
 
     fn cfg() -> ChipConfig {
         ChipConfig::default()
@@ -96,7 +96,7 @@ mod tests {
     #[test]
     fn resnet34_system_efficiency_matches_table5() {
         // Tbl V: 3.6 TOp/s/W at 0.5 V (best point, incl. I/O), 1.9 mJ/im.
-        let net = zoo::resnet34(224, 224);
+        let net = model::network("resnet34@224x224").unwrap();
         let r = energy_per_image(&net, &cfg(), &single(), 0.5, 1.5, DepthwisePolicy::default());
         let eff = r.system_efficiency_ops_w() / 1e12;
         assert!((3.1..4.1).contains(&eff), "system eff {eff} TOp/s/W");
@@ -109,7 +109,7 @@ mod tests {
         // Tbl V second Hyperdrive row: 1.0 V → ~1.0 TOp/s/W, ~7 mJ/im.
         // (Our VDD model tops out at 0.9 V; 0.8 V already shows the
         // CV² collapse: < 2 TOp/s/W.)
-        let net = zoo::resnet34(224, 224);
+        let net = model::network("resnet34@224x224").unwrap();
         let r = energy_per_image(&net, &cfg(), &single(), 0.8, 0.0, DepthwisePolicy::default());
         let eff = r.system_efficiency_ops_w() / 1e12;
         assert!(eff < 2.2, "eff {eff} must collapse at high VDD");
@@ -120,7 +120,7 @@ mod tests {
         // §VI-D: 46.7 fps for ResNet-34 at 0.65 V (135 MHz / 4.65 M cyc
         // ≈ 29 fps by pure cycles; the paper's figure includes the
         // body-biased frequency — accept the 25–50 band).
-        let net = zoo::resnet34(224, 224);
+        let net = model::network("resnet34@224x224").unwrap();
         let r = energy_per_image(&net, &cfg(), &single(), 0.65, 0.0, DepthwisePolicy::default());
         assert!((25.0..50.0).contains(&r.frame_rate_hz), "{}", r.frame_rate_hz);
     }
@@ -131,7 +131,7 @@ mod tests {
         // 4547 GOp/s effective. Our model (with real padding overheads)
         // must land within ~25% on energy and preserve the >3× gap to
         // the FM-streaming baselines (UNPU: 1.4 TOp/s/W).
-        let net = zoo::resnet34(1024, 2048);
+        let net = model::network("resnet34@1024x2048").unwrap();
         let plan = plan_mesh_exact(&net, &cfg(), 5, 10);
         let r = energy_per_image(&net, &cfg(), &plan, 0.5, 1.5, DepthwisePolicy::default());
         let eff = r.system_efficiency_ops_w() / 1e12;
@@ -155,8 +155,8 @@ mod tests {
         // §VI-A: introducing I/O drops efficiency by only ~25% at most
         // (7–30% across applications) — vs >70% for FM-streaming chips.
         for (net, plan) in [
-            (zoo::resnet34(224, 224), single()),
-            (zoo::yolov3(320, 320), single()),
+            (model::network("resnet34@224x224").unwrap(), single()),
+            (model::network("yolov3@320x320").unwrap(), single()),
         ] {
             let r = energy_per_image(&net, &cfg(), &plan, 0.5, 1.5, DepthwisePolicy::default());
             let share = r.io_j / r.total_j();
@@ -169,9 +169,9 @@ mod tests {
         // §VI-D: "performance is independent of the image resolution" —
         // per-chip cycles at 2k×1k on 10×5 stay within ~25% of the 224²
         // single-chip cycles (padding overhead only).
-        let net224 = zoo::resnet34(224, 224);
+        let net224 = model::network("resnet34@224x224").unwrap();
         let r224 = energy_per_image(&net224, &cfg(), &single(), 0.5, 0.0, DepthwisePolicy::default());
-        let net2k = zoo::resnet34(1024, 2048);
+        let net2k = model::network("resnet34@1024x2048").unwrap();
         let plan = plan_mesh_exact(&net2k, &cfg(), 5, 10);
         let r2k = energy_per_image(&net2k, &cfg(), &plan, 0.5, 0.0, DepthwisePolicy::default());
         let ratio = r2k.cycles as f64 / r224.cycles as f64;

@@ -7,24 +7,25 @@
 //! presents one accelerator abstraction that scales from a single chip
 //! to a 2D mesh without the caller caring which is underneath.
 //!
-//! Construction goes through the fluent [`EngineBuilder`]:
+//! Construction goes through the fluent [`EngineBuilder`]; networks are
+//! named by [`ModelSpec`] strings resolved through the
+//! [`crate::model::NetworkRegistry`]:
 //!
 //! ```no_run
 //! use hyperdrive::engine::{Engine, ServeOptions};
-//! use hyperdrive::network::zoo;
 //! use hyperdrive::simulator::Precision;
 //!
 //! # fn main() -> Result<(), hyperdrive::engine::EngineError> {
 //! // Functional single-chip simulator, FP16 datapath like the silicon.
 //! let engine = Engine::builder()
-//!     .network(zoo::hypernet20())
+//!     .model("hypernet20")
 //!     .precision(Precision::F16)
 //!     .build()?;
 //! let input = vec![0.0f32; engine.input_len()];
 //! let logits = engine.infer(&input)?;
 //!
-//! // 2×2 systolic mesh, same parameters → bit-exact same logits.
-//! let mesh = Engine::builder().network(zoo::hypernet20()).mesh(2, 2).build()?;
+//! // 2×2 systolic mesh, same spec + seed → bit-exact same logits.
+//! let mesh = Engine::builder().model("hypernet20").mesh(2, 2).build()?;
 //! assert_eq!(mesh.infer(&input)?, logits);
 //!
 //! // Concurrent serving on any backend.
@@ -57,6 +58,7 @@ use crate::coordinator::tiling::{self, MeshPlan};
 use crate::coordinator::wcl;
 use crate::energy::ablation::AblationRow;
 use crate::energy::model::energy_per_image;
+use crate::model::{ModelError, ModelSpec, NetworkRegistry};
 use crate::network::Network;
 use crate::simulator::mesh::MeshStats;
 use crate::ChipConfig;
@@ -77,6 +79,8 @@ use mesh::MeshBackend;
 pub enum EngineError {
     /// Builder misconfiguration (e.g. a mesh without a network).
     Builder(String),
+    /// A `.model(..)` spec failed to parse or resolve.
+    Model(ModelError),
     /// The requested mesh's per-chip WCL slice exceeds the FMM.
     FmmOverflow {
         rows: usize,
@@ -98,6 +102,7 @@ impl fmt::Display for EngineError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             EngineError::Builder(m) => write!(f, "builder: {m}"),
+            EngineError::Model(e) => write!(f, "model: {e}"),
             EngineError::FmmOverflow {
                 rows,
                 cols,
@@ -117,6 +122,12 @@ impl fmt::Display for EngineError {
 }
 
 impl std::error::Error for EngineError {}
+
+impl From<ModelError> for EngineError {
+    fn from(e: ModelError) -> Self {
+        EngineError::Model(e)
+    }
+}
 
 enum BackendImpl {
     Functional(FunctionalBackend),
@@ -139,6 +150,8 @@ impl BackendImpl {
 /// Fluent constructor for [`Engine`]; see the [module docs](self) for
 /// a per-backend example.
 pub struct EngineBuilder {
+    model: Option<String>,
+    registry: Option<NetworkRegistry>,
     network: Option<Network>,
     chip: ChipConfig,
     kind: Option<BackendKind>,
@@ -156,6 +169,8 @@ pub struct EngineBuilder {
 impl Default for EngineBuilder {
     fn default() -> Self {
         EngineBuilder {
+            model: None,
+            registry: None,
             network: None,
             chip: ChipConfig::default(),
             kind: None,
@@ -173,8 +188,30 @@ impl Default for EngineBuilder {
 }
 
 impl EngineBuilder {
-    /// The network to run (required for the simulator backends; the
-    /// PJRT backend reads its network from the artifact manifest).
+    /// Resolve the network from a [`ModelSpec`] string (the preferred
+    /// entry point): `resnet34@512x1024`, `yolov3@416`,
+    /// `manifest:artifacts#hypernet20`, … — parsed and resolved through
+    /// the registry at `build()` time.
+    ///
+    /// Registry specs keep the builder's lazy [`seed`](Self::seed)ed
+    /// parameters; `manifest:` specs additionally load the trained
+    /// parameter blobs for the simulator backends (unless explicit
+    /// [`params`](Self::params) are given or the PJRT backend was
+    /// forced, which reads the artifacts itself).
+    pub fn model(mut self, spec: impl Into<String>) -> Self {
+        self.model = Some(spec.into());
+        self
+    }
+
+    /// Resolve `.model(..)` against a custom registry instead of
+    /// [`NetworkRegistry::builtin`].
+    pub fn registry(mut self, registry: NetworkRegistry) -> Self {
+        self.registry = Some(registry);
+        self
+    }
+
+    /// The network to run, pre-built (alternative to [`model`](Self::model);
+    /// the PJRT backend reads its network from the artifact manifest).
     pub fn network(mut self, net: Network) -> Self {
         self.network = Some(net);
         self
@@ -266,8 +303,73 @@ impl EngineBuilder {
         }
     }
 
+    /// Resolve a pending `.model(..)` spec into `network` (and, for
+    /// manifest specs, `params`/`artifacts`).
+    fn resolve_model(&mut self) -> Result<(), EngineError> {
+        // With the PJRT backend compiled out, a forced-PJRT build must
+        // keep reporting `Unavailable` (from `build_pjrt`) rather than
+        // failing here on manifest loading.
+        #[cfg(not(feature = "pjrt"))]
+        if self.kind == Some(BackendKind::Pjrt) {
+            return Ok(());
+        }
+        let Some(spec) = self.model.take() else {
+            return Ok(());
+        };
+        if self.network.is_some() {
+            return Err(EngineError::Builder(
+                "both .model(..) and .network(..) given — name the network one way".into(),
+            ));
+        }
+        let spec: ModelSpec = spec.parse().map_err(ModelError::Spec)?;
+        // A forced PJRT backend loads the network and tensors from the
+        // artifacts itself: take the directory (and check the `#name`
+        // fragment against the manifest header only) instead of a full
+        // registry resolution, which would read the parameter blob a
+        // second time.
+        #[cfg(feature = "pjrt")]
+        if self.kind == Some(BackendKind::Pjrt) {
+            if let ModelSpec::Manifest { dir, network } = &spec {
+                if self.artifacts.is_none() {
+                    self.artifacts = Some(dir.clone());
+                }
+                if let Some(expected) = network {
+                    use crate::model::registry::normalize;
+                    let found = crate::util::manifest::Manifest::load(dir)
+                        .and_then(|m| Ok(m.unique("network")?.get("name")?.to_string()))
+                        .map_err(|e| ModelError::Manifest(format!("{e:#}")))?;
+                    if normalize(expected) != normalize(&found) {
+                        return Err(EngineError::Model(ModelError::ManifestNetworkMismatch {
+                            expected: expected.clone(),
+                            found,
+                        }));
+                    }
+                }
+                return Ok(());
+            }
+        }
+        let registry = self.registry.take().unwrap_or_else(NetworkRegistry::builtin);
+        let resolved = registry.resolve(&spec)?;
+        // Materialize real weight tensors for the simulator backends;
+        // seeded sources stay on the builder's lazy `seed` path, and the
+        // PJRT backend loads its own tensors from the artifacts. (An
+        // out-of-range chip `c` is left for `build_sim`'s typed error.)
+        let pjrt_bound = self.kind == Some(BackendKind::Pjrt) || self.artifacts.is_some();
+        if self.params.is_none()
+            && resolved.weights.seed().is_none()
+            && !pjrt_bound
+            && self.chip.c <= 16
+        {
+            let p = resolved.weights.params(&resolved.network, self.chip.c)?;
+            self.params = Some(Arc::new(p));
+        }
+        self.network = Some(resolved.network);
+        Ok(())
+    }
+
     /// Validate the configuration and construct the engine.
-    pub fn build(self) -> Result<Engine, EngineError> {
+    pub fn build(mut self) -> Result<Engine, EngineError> {
+        self.resolve_model()?;
         let kind = self.resolve_kind()?;
         // A forced backend must not silently ignore conflicting knobs:
         // a mesh request on a non-mesh backend (or artifacts on a

@@ -25,12 +25,11 @@
 //!
 //! ```no_run
 //! use hyperdrive::engine::Engine;
-//! use hyperdrive::network::zoo;
 //!
 //! # fn main() -> Result<(), hyperdrive::engine::EngineError> {
 //! let engine = Engine::builder()
-//!     .network(zoo::resnet34(224, 224))
-//!     .auto_mesh()          // plan the smallest FMM-fitting chip mesh
+//!     .model("resnet34@224x224") // resolved through model::NetworkRegistry
+//!     .auto_mesh()               // plan the smallest FMM-fitting chip mesh
 //!     .vdd(0.5)
 //!     .vbb(1.5)
 //!     .build()?;
@@ -47,6 +46,10 @@
 //!
 //! ## Subsystems
 //!
+//! The typed model-description API — spec grammar, network registry and
+//! weight sources — lives in [`model`] and is how every entry point
+//! names a network ([`model::ModelSpec`] / [`model::NetworkRegistry`] /
+//! [`model::WeightSource`]).
 //! The CNN graph IR and model zoo ([`network`]), binary-weight packing
 //! and streaming ([`bwn`]), the Algorithm-1 scheduler, worst-case-layer
 //! memory planner and multi-chip tiling ([`coordinator`]), the
@@ -65,6 +68,7 @@ pub mod bwn;
 pub mod coordinator;
 pub mod energy;
 pub mod engine;
+pub mod model;
 pub mod network;
 pub mod report;
 pub mod runtime;

@@ -2,12 +2,20 @@
 //!
 //! Subcommands:
 //!   report <table1|table2|table3|table4|table5|table6|fig8|fig9|fig10|fig11|all>
+//!   list-models                                             the model registry
 //!   run-e2e   [--artifacts DIR] [--batch N] [--workers N]   end-to-end PJRT serving
-//!   simulate  --net NAME [--height H] [--width W] [--mesh RxC] [--vdd V] [--vbb V]
-//!   mesh      --net NAME [--height H] [--width W]
+//!   simulate  --model SPEC [--mesh RxC] [--vdd V] [--vbb V]
+//!   mesh      --model SPEC
 //!   help
 //!
-//! All execution goes through the unified `engine::Engine` façade — the
+//! Networks are named by `--model` spec strings (`resnet34@512x1024`,
+//! `yolov3@416`, `manifest:artifacts#hypernet20`) resolved through
+//! `model::NetworkRegistry`; the legacy `--net NAME [--height H]
+//! [--width W]` triple is still accepted and mapped onto a spec. A bare
+//! `--net NAME` now uses the registry's default resolution (the paper's
+//! per-network evaluation size — e.g. `yolov3` is 320x320, not the old
+//! blanket 224x224). All
+//! execution goes through the unified `engine::Engine` façade — the
 //! CLI never touches the coordinator or the energy model directly.
 //! Options accept both `--key value` and `--key=value`; duplicates are
 //! rejected. (Hand-rolled argument parsing: the offline vendored crate
@@ -17,8 +25,8 @@ use std::collections::HashMap;
 use std::fmt;
 use std::process::ExitCode;
 
-use hyperdrive::engine::{DepthwisePolicy, Engine, EngineError, ServeOptions};
-use hyperdrive::network::{zoo, Network};
+use hyperdrive::engine::{BackendKind, DepthwisePolicy, Engine, EngineError, ServeOptions};
+use hyperdrive::model::NetworkRegistry;
 use hyperdrive::report;
 use hyperdrive::ChipConfig;
 
@@ -26,11 +34,15 @@ fn usage() -> &'static str {
     "usage: hyperdrive <command> [options]\n\
      commands:\n\
        report <table1..table6|fig8..fig11|border|ablations|all>\n\
+       list-models\n\
        run-e2e [--artifacts DIR] [--batch N] [--workers N]\n\
-       simulate --net <resnet18|resnet34|resnet50|resnet152|shufflenet|yolov3|hypernet20>\n\
-                [--height H] [--width W] [--mesh RxC] [--vdd V] [--vbb V]\n\
-       mesh --net NAME [--height H] [--width W]\n\
+       simulate --model SPEC [--mesh RxC] [--vdd V] [--vbb V]\n\
+       mesh --model SPEC\n\
        help\n\
+     model specs: NAME[@HxW|@N] (see list-models) or manifest:DIR[#NET],\n\
+     e.g. --model resnet34@512x1024, --model yolov3@416,\n\
+     --model manifest:artifacts#hypernet20\n\
+     (legacy: --net NAME [--height H] [--width W])\n\
      options may be given as `--key value` or `--key=value`; each key at most once"
 }
 
@@ -130,17 +142,51 @@ fn opt_parse<T: std::str::FromStr>(
     }
 }
 
-fn build_net(name: &str, h: usize, w: usize) -> Result<Network, CliError> {
-    Ok(match name {
-        "resnet18" => zoo::resnet18(h, w),
-        "resnet34" => zoo::resnet34(h, w),
-        "resnet50" => zoo::resnet50(h, w),
-        "resnet152" => zoo::resnet152(h, w),
-        "shufflenet" => zoo::shufflenet(h, w),
-        "yolov3" => zoo::yolov3(h, w),
-        "hypernet20" => zoo::hypernet20(),
-        other => return Err(CliError::Usage(format!("unknown network `{other}`"))),
-    })
+/// The model spec of a command: `--model SPEC`, or the legacy
+/// `--net NAME [--height H] [--width W]` triple mapped onto a spec
+/// (`default_res` fills in for a bare `--net` when the command's
+/// historical default differs from the registry's, as `mesh` does).
+fn resolve_spec(
+    opts: &HashMap<String, String>,
+    default_res: Option<(usize, usize)>,
+) -> Result<String, CliError> {
+    match (opts.get("model"), opts.get("net")) {
+        (Some(_), Some(_)) => Err(CliError::Usage(
+            "give --model or --net, not both".into(),
+        )),
+        (Some(m), None) => {
+            if opts.contains_key("height") || opts.contains_key("width") {
+                return Err(CliError::Usage(
+                    "--model carries its resolution (`name@HxW`); drop --height/--width".into(),
+                ));
+            }
+            Ok(m.clone())
+        }
+        (None, Some(n)) => {
+            let explicit = opts.contains_key("height") || opts.contains_key("width");
+            match (explicit, default_res) {
+                (false, None) => Ok(n.clone()), // registry default resolution
+                (false, Some((h, w))) => Ok(format!("{n}@{h}x{w}")),
+                (true, _) => {
+                    // A missing dimension falls back to the command's
+                    // historical default (mesh: 1024x2048), else to the
+                    // old simulate defaults (224, square).
+                    let dh = default_res.map_or(224, |(h, _)| h);
+                    let h: usize = opt_parse(opts, "height", dh, "a positive integer")?;
+                    let dw = default_res.map_or(h, |(_, w)| w);
+                    let w: usize = opt_parse(opts, "width", dw, "a positive integer")?;
+                    Ok(format!("{n}@{h}x{w}"))
+                }
+            }
+        }
+        (None, None) => Err(CliError::Usage(
+            "--model <spec> required (try `hyperdrive list-models`)".into(),
+        )),
+    }
+}
+
+fn cmd_list_models() -> String {
+    NetworkRegistry::builtin().render_listing()
 }
 
 fn cmd_report(which: &str, cfg: &ChipConfig) -> Result<String, CliError> {
@@ -170,7 +216,11 @@ fn cmd_run_e2e(opts: &HashMap<String, String>) -> Result<String, CliError> {
     let batch: usize = opt_parse(opts, "batch", 8, "a positive integer")?;
     let workers: usize = opt_parse(opts, "workers", 2, "a positive integer")?;
 
-    let engine = Engine::builder().artifacts(dir).build()?;
+    // The manifest spec names both the network and the artifact dir.
+    let engine = Engine::builder()
+        .model(format!("manifest:{dir}"))
+        .backend(BackendKind::Pjrt)
+        .build()?;
     let input = engine.golden("e2e_input.bin")?;
     let golden = engine.golden("e2e_golden.bin")?;
     let inputs: Vec<Vec<f32>> = (0..batch.max(1)).map(|_| input.clone()).collect();
@@ -199,17 +249,12 @@ fn cmd_run_e2e(opts: &HashMap<String, String>) -> Result<String, CliError> {
 }
 
 fn cmd_simulate(opts: &HashMap<String, String>, cfg: &ChipConfig) -> Result<String, CliError> {
-    let name = opts
-        .get("net")
-        .ok_or_else(|| CliError::Usage("--net required".into()))?;
-    let h: usize = opt_parse(opts, "height", 224, "a positive integer")?;
-    let w: usize = opt_parse(opts, "width", h, "a positive integer")?;
+    let spec = resolve_spec(opts, None)?;
     let vdd: f64 = opt_parse(opts, "vdd", 0.5, "a voltage")?;
     let vbb: f64 = opt_parse(opts, "vbb", 1.5, "a voltage")?;
-    let net = build_net(name, h, w)?;
 
     let mut builder = Engine::builder()
-        .network(net)
+        .model(spec.as_str())
         .chip(*cfg)
         .depthwise(DepthwisePolicy::FullRate)
         .vdd(vdd)
@@ -234,13 +279,13 @@ fn cmd_simulate(opts: &HashMap<String, String>, cfg: &ChipConfig) -> Result<Stri
 }
 
 fn cmd_mesh(opts: &HashMap<String, String>, cfg: &ChipConfig) -> Result<String, CliError> {
-    let name = opts
-        .get("net")
-        .ok_or_else(|| CliError::Usage("--net required".into()))?;
-    let h: usize = opt_parse(opts, "height", 1024, "a positive integer")?;
-    let w: usize = opt_parse(opts, "width", 2048, "a positive integer")?;
-    let net = build_net(name, h, w)?;
-    let engine = Engine::builder().network(net).chip(*cfg).auto_mesh().build()?;
+    // Historical default: Cityscapes-class 2048×1024 frames (§V).
+    let spec = resolve_spec(opts, Some((1024, 2048)))?;
+    let engine = Engine::builder()
+        .model(spec.as_str())
+        .chip(*cfg)
+        .auto_mesh()
+        .build()?;
     Ok(engine.report().mesh_summary())
 }
 
@@ -252,6 +297,7 @@ fn main() -> ExitCode {
             Some(which) => cmd_report(which, &cfg),
             None => Err(CliError::Usage("report needs an argument".into())),
         },
+        Some("list-models") => Ok(cmd_list_models()),
         Some("run-e2e") => parse_opts(&args[1..])
             .map_err(CliError::from)
             .and_then(|o| cmd_run_e2e(&o)),
@@ -324,6 +370,81 @@ mod tests {
         let out = cmd_simulate(&opts, &cfg).unwrap();
         assert!(out.contains("ResNet-34"), "{out}");
         assert!(out.contains("TOp/s/W"), "{out}");
+    }
+
+    #[test]
+    fn simulate_accepts_model_specs() {
+        let cfg = ChipConfig::default();
+        let opts = parse_opts(&args(&["--model", "resnet34@224x224"])).unwrap();
+        let out = cmd_simulate(&opts, &cfg).unwrap();
+        assert!(out.contains("ResNet-34"), "{out}");
+    }
+
+    #[test]
+    fn legacy_net_flags_map_onto_specs() {
+        // Bare --net → registry default resolution.
+        let opts = parse_opts(&args(&["--net", "resnet34"])).unwrap();
+        assert_eq!(resolve_spec(&opts, None).unwrap(), "resnet34");
+        // --height/--width → explicit spec resolution.
+        let opts = parse_opts(&args(&["--net", "resnet34", "--height", "512"])).unwrap();
+        assert_eq!(resolve_spec(&opts, None).unwrap(), "resnet34@512x512");
+        // Command default (the mesh command's 2048×1024 frames).
+        let opts = parse_opts(&args(&["--net", "resnet34"])).unwrap();
+        assert_eq!(
+            resolve_spec(&opts, Some((1024, 2048))).unwrap(),
+            "resnet34@1024x2048"
+        );
+        // A partial legacy dimension keeps the command default for the
+        // other dimension.
+        let opts = parse_opts(&args(&["--net", "resnet34", "--width", "2048"])).unwrap();
+        assert_eq!(
+            resolve_spec(&opts, Some((1024, 2048))).unwrap(),
+            "resnet34@1024x2048"
+        );
+        let opts = parse_opts(&args(&["--net", "resnet34", "--height", "512"])).unwrap();
+        assert_eq!(
+            resolve_spec(&opts, Some((1024, 2048))).unwrap(),
+            "resnet34@512x2048"
+        );
+    }
+
+    #[test]
+    fn conflicting_model_flags_are_usage_errors() {
+        let opts = parse_opts(&args(&["--model", "resnet34", "--net", "resnet50"])).unwrap();
+        assert!(matches!(
+            resolve_spec(&opts, None).unwrap_err(),
+            CliError::Usage(_)
+        ));
+        let opts = parse_opts(&args(&["--model", "resnet34", "--height", "224"])).unwrap();
+        assert!(matches!(
+            resolve_spec(&opts, None).unwrap_err(),
+            CliError::Usage(_)
+        ));
+        let opts = parse_opts(&args(&[])).unwrap();
+        assert!(matches!(
+            resolve_spec(&opts, None).unwrap_err(),
+            CliError::Usage(_)
+        ));
+    }
+
+    #[test]
+    fn unknown_model_is_a_structured_engine_error() {
+        let cfg = ChipConfig::default();
+        let opts = parse_opts(&args(&["--model", "resnet99"])).unwrap();
+        let err = cmd_simulate(&opts, &cfg).unwrap_err();
+        match err {
+            CliError::Engine(EngineError::Model(_)) => {}
+            other => panic!("expected a model error, got {other}"),
+        }
+    }
+
+    #[test]
+    fn list_models_prints_the_registry() {
+        let out = cmd_list_models();
+        for name in ["resnet18", "resnet34", "yolov3", "hypernet20"] {
+            assert!(out.contains(name), "missing {name} in:\n{out}");
+        }
+        assert!(out.contains("Mbit"), "{out}");
     }
 
     #[test]

@@ -1,0 +1,76 @@
+//! # The unified model-description subsystem
+//!
+//! One API for getting a network (and its weights) into the system,
+//! used by every entry point — the CLI (`--model`), the engine builder
+//! (`Engine::builder().model(..)`), the examples and the benches:
+//!
+//! * [`ModelSpec`] — the parseable spec grammar (`resnet34@512x1024`,
+//!   `yolov3@416`, `manifest:artifacts#hypernet20`) with typed
+//!   [`SpecError`]s;
+//! * [`NetworkRegistry`] — the registry that owns the zoo: builders are
+//!   registered factories with resolution validation (non-divisible
+//!   resolutions are typed [`ModelError::Resolution`] errors, not silent
+//!   truncation) and output-shape inference;
+//! * [`WeightSource`] — where parameters come from ([`Random`] seeded
+//!   synthetic, [`ManifestBlobs`] trained AOT tensors, [`HostTensors`]
+//!   caller-supplied), chosen per-model instead of per-call-site.
+//!
+//! ```
+//! use hyperdrive::model;
+//!
+//! // Spec → network, through the built-in registry.
+//! let net = model::network("resnet34@224x224")?;
+//! assert_eq!(net.out_shape(), (512, 7, 7));
+//!
+//! // Spec → network + weight source.
+//! let resolved = model::resolve("hypernet20")?;
+//! let params = resolved.weights.params(&resolved.network, 16)?;
+//! assert_eq!(params.steps.len(), resolved.network.steps.len());
+//! # Ok::<(), model::ModelError>(())
+//! ```
+
+pub mod registry;
+pub mod spec;
+pub mod weights;
+
+pub use registry::{
+    ModelEntry, ModelError, ModelListing, NetworkRegistry, ResolvedModel, DEFAULT_SEED,
+};
+pub use spec::{ModelSpec, SpecError};
+pub use weights::{HostTensors, ManifestBlobs, Random, StepTensors, WeightSource};
+
+// Re-exported so report/bench code needs no direct `zoo` path.
+pub use crate::network::zoo::projection_weight_bits;
+pub use crate::network::ResolutionError;
+
+use crate::network::Network;
+
+/// Parse and resolve a spec string against the built-in registry.
+pub fn resolve(spec: &str) -> Result<ResolvedModel, ModelError> {
+    NetworkRegistry::builtin().resolve_str(spec)
+}
+
+/// [`resolve`], keeping only the network (tests, benches, tables).
+pub fn network(spec: &str) -> Result<Network, ModelError> {
+    Ok(resolve(spec)?.network)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn convenience_resolvers_hit_the_builtin_registry() {
+        assert_eq!(network("resnet34").unwrap().name, "ResNet-34");
+        let m = resolve("tinyyolo@416x416").unwrap();
+        assert_eq!(m.network.out_shape(), (255, 13, 13));
+        assert!(matches!(
+            network("nope").unwrap_err(),
+            ModelError::UnknownModel { .. }
+        ));
+        assert!(matches!(
+            network("resnet34@!!").unwrap_err(),
+            ModelError::Spec(_)
+        ));
+    }
+}

@@ -1,0 +1,615 @@
+//! [`NetworkRegistry`] — the typed model registry that owns the zoo.
+//! Builders are registered factories with resolution validation and
+//! output-shape inference; [`NetworkRegistry::resolve`] turns a parsed
+//! [`ModelSpec`] into a [`ResolvedModel`] (network + weight source).
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::network::zoo::{self, ResolutionError};
+use crate::network::Network;
+use crate::runtime::NetworkManifest;
+
+use super::spec::{ModelSpec, SpecError};
+use super::weights::{ManifestBlobs, Random, WeightSource};
+
+/// Seed of the [`Random`] weight source attached to registry-resolved
+/// models (same default as `EngineBuilder::seed`).
+pub const DEFAULT_SEED: u64 = 0x42;
+
+/// Typed errors of model resolution.
+#[derive(Debug)]
+pub enum ModelError {
+    /// The spec string failed to parse.
+    Spec(SpecError),
+    /// No registry entry with that name; carries the known names.
+    UnknownModel { name: String, known: Vec<String> },
+    /// The entry only exists at one input resolution (HyperNet-20's
+    /// AOT twin) and a different one was requested.
+    FixedResolution {
+        name: String,
+        requested: (usize, usize),
+        fixed: (usize, usize),
+    },
+    /// The builder rejected the resolution (divisibility).
+    Resolution(ResolutionError),
+    /// The manifest could not be loaded or parsed.
+    Manifest(String),
+    /// The manifest describes a different network than `#name` asked for.
+    ManifestNetworkMismatch { expected: String, found: String },
+    /// A weight source could not materialize parameters.
+    Weights(String),
+}
+
+impl fmt::Display for ModelError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ModelError::Spec(e) => write!(f, "{e}"),
+            ModelError::UnknownModel { name, known } => write!(
+                f,
+                "unknown model `{name}` — registered models: {}",
+                known.join(", ")
+            ),
+            ModelError::FixedResolution {
+                name,
+                requested,
+                fixed,
+            } => write!(
+                f,
+                "model `{name}` has a fixed {}x{} input; requested {}x{}",
+                fixed.0, fixed.1, requested.0, requested.1
+            ),
+            ModelError::Resolution(e) => write!(f, "{e}"),
+            ModelError::Manifest(m) => write!(f, "manifest: {m}"),
+            ModelError::ManifestNetworkMismatch { expected, found } => write!(
+                f,
+                "manifest describes network `{found}`, spec expected `{expected}`"
+            ),
+            ModelError::Weights(m) => write!(f, "weights: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ModelError {}
+
+impl From<SpecError> for ModelError {
+    fn from(e: SpecError) -> Self {
+        ModelError::Spec(e)
+    }
+}
+
+impl From<ResolutionError> for ModelError {
+    fn from(e: ResolutionError) -> Self {
+        ModelError::Resolution(e)
+    }
+}
+
+/// One registered model: a validated factory plus the metadata the
+/// registry needs for resolution checking, shape inference and the
+/// `list-models` listing.
+#[derive(Clone)]
+pub struct ModelEntry {
+    /// Registry name (the spec's `name` part).
+    pub name: &'static str,
+    /// One-line description for listings.
+    pub description: &'static str,
+    /// Default `(h, w)` image resolution.
+    pub default_resolution: (usize, usize),
+    /// Both dimensions must be divisible by this (the builder's
+    /// truncating stride factors; see `zoo::ResolutionError`).
+    pub stride_granularity: usize,
+    /// The entry exists at exactly `default_resolution` (no override).
+    pub fixed_resolution: bool,
+    /// Output FM channels (shape inference).
+    pub out_channels: usize,
+    /// Total image→output-FM downsampling factor (shape inference).
+    pub downsample: usize,
+    builder: fn(usize, usize) -> Result<Network, ResolutionError>,
+}
+
+impl ModelEntry {
+    /// A new entry for [`NetworkRegistry::register`]. The builder must
+    /// itself reject resolutions it cannot realize exactly (see
+    /// `zoo::check_resolution` for the pattern).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: &'static str,
+        description: &'static str,
+        default_resolution: (usize, usize),
+        stride_granularity: usize,
+        fixed_resolution: bool,
+        out_channels: usize,
+        downsample: usize,
+        builder: fn(usize, usize) -> Result<Network, ResolutionError>,
+    ) -> ModelEntry {
+        ModelEntry {
+            name,
+            description,
+            default_resolution,
+            stride_granularity,
+            fixed_resolution,
+            out_channels,
+            downsample,
+            builder,
+        }
+    }
+
+    /// Build the network at `(h, w)`. The registry-level granularity
+    /// check guards custom entries whose builder does not validate; the
+    /// zoo builders additionally re-check themselves.
+    pub fn build(&self, h: usize, w: usize) -> Result<Network, ModelError> {
+        if h == 0 || w == 0 || h % self.stride_granularity != 0 || w % self.stride_granularity != 0
+        {
+            return Err(ModelError::Resolution(ResolutionError {
+                network: self.name,
+                h,
+                w,
+                granularity: self.stride_granularity,
+            }));
+        }
+        Ok((self.builder)(h, w)?)
+    }
+
+    /// Infer the output FM shape `(c, h, w)` at an image resolution
+    /// without building the network. Exact for every registered model:
+    /// the stem divides exactly (enforced by `stride_granularity`) and
+    /// chained same-padding `div_ceil` by 2 equals `div_ceil` by the
+    /// product.
+    pub fn output_shape(&self, h: usize, w: usize) -> (usize, usize, usize) {
+        (
+            self.out_channels,
+            h.div_ceil(self.downsample),
+            w.div_ceil(self.downsample),
+        )
+    }
+}
+
+/// A resolved model: the built network plus where its weights come from
+/// (and, for manifest specs, the manifest itself for golden files).
+pub struct ResolvedModel {
+    /// The spec this model was resolved from.
+    pub spec: ModelSpec,
+    /// The built, shape-validated network.
+    pub network: Network,
+    /// Weight provisioning chosen per-model: [`Random`] for registry
+    /// entries, [`ManifestBlobs`] for manifest specs.
+    pub weights: Box<dyn WeightSource>,
+    /// The loaded manifest for `manifest:` specs (`None` otherwise).
+    pub manifest: Option<Arc<NetworkManifest>>,
+}
+
+/// One row of [`NetworkRegistry::listings`].
+pub struct ModelListing {
+    pub name: &'static str,
+    pub default_resolution: (usize, usize),
+    /// On-chip steps at the default resolution.
+    pub steps: usize,
+    /// Binary-weight megabits at the default resolution.
+    pub weight_mbit: f64,
+    pub description: &'static str,
+}
+
+/// The model registry: every network the system can run, by name.
+///
+/// [`NetworkRegistry::builtin`] registers the paper's zoo; callers can
+/// [`register`](NetworkRegistry::register) additional entries (an entry
+/// with an existing name replaces it).
+pub struct NetworkRegistry {
+    entries: Vec<ModelEntry>,
+}
+
+impl NetworkRegistry {
+    /// An empty registry.
+    pub fn empty() -> NetworkRegistry {
+        NetworkRegistry { entries: Vec::new() }
+    }
+
+    /// The built-in zoo: every network the paper evaluates plus the
+    /// end-to-end validation network.
+    pub fn builtin() -> NetworkRegistry {
+        let mut r = NetworkRegistry::empty();
+        let resnet = |name, builder: fn(usize, usize) -> Result<Network, ResolutionError>,
+                      out_channels| ModelEntry {
+            name,
+            description: "",
+            default_resolution: (224, 224),
+            stride_granularity: zoo::STEM_GRANULARITY,
+            fixed_resolution: false,
+            out_channels,
+            downsample: 32,
+            builder,
+        };
+        r.register(ModelEntry {
+            description: "ResNet-18, basic blocks (Fig. 4a)",
+            ..resnet("resnet18", zoo::resnet18, 512)
+        });
+        r.register(ModelEntry {
+            description: "ResNet-34 — the paper's main benchmark",
+            ..resnet("resnet34", zoo::resnet34, 512)
+        });
+        r.register(ModelEntry {
+            description: "ResNet-50, bottleneck blocks (Fig. 4b)",
+            ..resnet("resnet50", zoo::resnet50, 2048)
+        });
+        r.register(ModelEntry {
+            description: "ResNet-152, bottleneck blocks (Fig. 4b)",
+            ..resnet("resnet152", zoo::resnet152, 2048)
+        });
+        r.register(ModelEntry {
+            name: "shufflenet",
+            description: "ShuffleNet v1 (g=8, 1.0x) — Tbl V/VI",
+            default_resolution: (224, 224),
+            stride_granularity: zoo::STEM_GRANULARITY,
+            fixed_resolution: false,
+            out_channels: 1536,
+            downsample: 32,
+            builder: zoo::shufflenet,
+        });
+        r.register(ModelEntry {
+            name: "yolov3",
+            description: "YOLOv3: Darknet-53 + 3-scale FPN heads — Tbl V/VI",
+            default_resolution: (320, 320),
+            stride_granularity: zoo::FPN_GRANULARITY,
+            fixed_resolution: false,
+            out_channels: 255,
+            downsample: 8,
+            builder: zoo::yolov3,
+        });
+        r.register(ModelEntry {
+            name: "tinyyolo",
+            description: "TinyYOLO-class 3x3/1x1 detector (§IV-C)",
+            default_resolution: (416, 416),
+            stride_granularity: 1,
+            fixed_resolution: false,
+            out_channels: 255,
+            downsample: 32,
+            builder: zoo::tinyyolo,
+        });
+        r.register(ModelEntry {
+            name: "hypernet20",
+            description: "HyperNet-20 — the AOT end-to-end validation network",
+            default_resolution: (32, 32),
+            stride_granularity: 1,
+            fixed_resolution: true,
+            out_channels: 64,
+            downsample: 4,
+            builder: |_, _| Ok(zoo::hypernet20()),
+        });
+        r
+    }
+
+    /// Register (or replace, by name) an entry.
+    pub fn register(&mut self, entry: ModelEntry) {
+        match self.entries.iter_mut().find(|e| e.name == entry.name) {
+            Some(slot) => *slot = entry,
+            None => self.entries.push(entry),
+        }
+    }
+
+    /// Entry by name.
+    pub fn get(&self, name: &str) -> Option<&ModelEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.name).collect()
+    }
+
+    /// Resolve a parsed spec into a network plus its weight source.
+    pub fn resolve(&self, spec: &ModelSpec) -> Result<ResolvedModel, ModelError> {
+        match spec {
+            ModelSpec::Registry { name, resolution } => {
+                let entry = self.get(name).ok_or_else(|| ModelError::UnknownModel {
+                    name: name.clone(),
+                    known: self.names().iter().map(|n| n.to_string()).collect(),
+                })?;
+                let (h, w) = match *resolution {
+                    Some(res) if entry.fixed_resolution && res != entry.default_resolution => {
+                        return Err(ModelError::FixedResolution {
+                            name: entry.name.to_string(),
+                            requested: res,
+                            fixed: entry.default_resolution,
+                        })
+                    }
+                    Some(res) => res,
+                    None => entry.default_resolution,
+                };
+                let network = entry.build(h, w)?;
+                debug_assert_eq!(network.out_shape(), entry.output_shape(h, w));
+                Ok(ResolvedModel {
+                    spec: spec.clone(),
+                    network,
+                    weights: Box::new(Random { seed: DEFAULT_SEED }),
+                    manifest: None,
+                })
+            }
+            ModelSpec::Manifest { dir, network } => {
+                let nm = NetworkManifest::load(dir)
+                    .map_err(|e| ModelError::Manifest(format!("{e:#}")))?;
+                if let Some(expected) = network {
+                    if normalize(expected) != normalize(&nm.network.name) {
+                        return Err(ModelError::ManifestNetworkMismatch {
+                            expected: expected.clone(),
+                            found: nm.network.name.clone(),
+                        });
+                    }
+                }
+                let nm = Arc::new(nm);
+                Ok(ResolvedModel {
+                    spec: spec.clone(),
+                    network: nm.network.clone(),
+                    weights: Box::new(ManifestBlobs::new(nm.clone())),
+                    manifest: Some(nm),
+                })
+            }
+        }
+    }
+
+    /// Parse + resolve in one call.
+    pub fn resolve_str(&self, spec: &str) -> Result<ResolvedModel, ModelError> {
+        self.resolve(&spec.parse::<ModelSpec>()?)
+    }
+
+    /// One listing row per entry whose default resolution builds. A
+    /// custom entry with a broken default is skipped here (never a
+    /// panic); `render_listing` annotates such rows and `resolve` still
+    /// reports their typed error.
+    pub fn listings(&self) -> Vec<ModelListing> {
+        self.entries
+            .iter()
+            .filter_map(|e| {
+                let (h, w) = e.default_resolution;
+                let net = e.build(h, w).ok()?;
+                Some(ModelListing {
+                    name: e.name,
+                    default_resolution: e.default_resolution,
+                    steps: net.steps.len(),
+                    weight_mbit: net.weight_bits() as f64 / 1e6,
+                    description: e.description,
+                })
+            })
+            .collect()
+    }
+
+    /// The `list-models` table.
+    pub fn render_listing(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            "Registered models (use --model <name>[@HxW|@N] or manifest:DIR[#NET]):\n",
+        );
+        out.push_str(&format!(
+            "{:<12} {:>11} {:>14} {:>13}   {}\n",
+            "name", "default res", "on-chip steps", "weights[Mbit]", "description"
+        ));
+        for e in &self.entries {
+            let (h, w) = e.default_resolution;
+            let res = format!("{h}x{w}");
+            match e.build(h, w) {
+                Ok(net) => out.push_str(&format!(
+                    "{:<12} {:>11} {:>14} {:>13.2}   {}\n",
+                    e.name,
+                    res,
+                    net.steps.len(),
+                    net.weight_bits() as f64 / 1e6,
+                    e.description
+                )),
+                Err(err) => out.push_str(&format!(
+                    "{:<12} {:>11}   (default does not build: {err})\n",
+                    e.name, res
+                )),
+            }
+        }
+        out
+    }
+}
+
+impl Default for NetworkRegistry {
+    fn default() -> Self {
+        NetworkRegistry::builtin()
+    }
+}
+
+/// Case- and punctuation-insensitive name form: `HyperNet-20` and
+/// `hypernet20` compare equal. (`pub(crate)` so the engine's forced-PJRT
+/// path can apply the same `#name` fragment check without a full
+/// registry resolution.)
+pub(crate) fn normalize(name: &str) -> String {
+    name.chars()
+        .filter(|c| c.is_ascii_alphanumeric())
+        .map(|c| c.to_ascii_lowercase())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_has_the_full_zoo() {
+        let r = NetworkRegistry::builtin();
+        for name in [
+            "resnet18",
+            "resnet34",
+            "resnet50",
+            "resnet152",
+            "shufflenet",
+            "yolov3",
+            "tinyyolo",
+            "hypernet20",
+        ] {
+            assert!(r.get(name).is_some(), "missing `{name}`");
+        }
+    }
+
+    #[test]
+    fn unknown_model_error_lists_known_names() {
+        let r = NetworkRegistry::builtin();
+        let err = r.resolve_str("resnet99").unwrap_err();
+        match &err {
+            ModelError::UnknownModel { name, known } => {
+                assert_eq!(name, "resnet99");
+                assert!(known.iter().any(|n| n == "resnet34"));
+            }
+            other => panic!("expected UnknownModel, got {other}"),
+        }
+        assert!(err.to_string().contains("resnet34"), "{err}");
+    }
+
+    #[test]
+    fn default_resolution_used_when_unspecified() {
+        let r = NetworkRegistry::builtin();
+        let m = r.resolve_str("resnet34").unwrap();
+        assert_eq!(m.network.name, "ResNet-34");
+        // Image 224x224 → on-chip input FM 64×56×56.
+        assert_eq!(
+            (m.network.in_ch, m.network.in_h, m.network.in_w),
+            (64, 56, 56)
+        );
+        assert_eq!(m.network.out_shape(), (512, 7, 7));
+    }
+
+    #[test]
+    fn explicit_resolution_overrides_default() {
+        let r = NetworkRegistry::builtin();
+        let m = r.resolve_str("resnet34@1024x2048").unwrap();
+        assert_eq!((m.network.in_h, m.network.in_w), (256, 512));
+    }
+
+    #[test]
+    fn bad_resolution_surfaces_the_zoo_error() {
+        let r = NetworkRegistry::builtin();
+        let err = r.resolve_str("resnet34@225x224").unwrap_err();
+        match err {
+            ModelError::Resolution(e) => {
+                assert_eq!((e.h, e.w, e.granularity), (225, 224, 4));
+            }
+            other => panic!("expected Resolution, got {other}"),
+        }
+        assert!(matches!(
+            r.resolve_str("yolov3@336").unwrap_err(),
+            ModelError::Resolution(_)
+        ));
+    }
+
+    #[test]
+    fn fixed_resolution_entries_reject_overrides() {
+        let r = NetworkRegistry::builtin();
+        assert!(r.resolve_str("hypernet20").is_ok());
+        // Spelling out the fixed resolution is allowed.
+        assert!(r.resolve_str("hypernet20@32x32").is_ok());
+        let err = r.resolve_str("hypernet20@64x64").unwrap_err();
+        assert!(matches!(err, ModelError::FixedResolution { .. }), "{err}");
+    }
+
+    #[test]
+    fn shape_inference_matches_built_networks() {
+        let r = NetworkRegistry::builtin();
+        for (spec, name) in [
+            ("resnet18@224x224", "resnet18"),
+            ("resnet34@512x1024", "resnet34"),
+            ("resnet50@224x224", "resnet50"),
+            ("shufflenet@224x224", "shufflenet"),
+            ("yolov3@416x416", "yolov3"),
+            ("tinyyolo@416x416", "tinyyolo"),
+            // Non-divisible-by-32 sizes exercise the div_ceil identity.
+            ("resnet34@112x112", "resnet34"),
+            ("resnet34@168x168", "resnet34"),
+        ] {
+            let m = r.resolve_str(spec).unwrap();
+            let entry = r.get(name).unwrap();
+            let (h, w) = match m.spec {
+                ModelSpec::Registry {
+                    resolution: Some(res),
+                    ..
+                } => res,
+                _ => unreachable!(),
+            };
+            assert_eq!(
+                m.network.out_shape(),
+                entry.output_shape(h, w),
+                "{spec}"
+            );
+        }
+    }
+
+    #[test]
+    fn registry_weight_source_is_seeded_random() {
+        let r = NetworkRegistry::builtin();
+        let m = r.resolve_str("hypernet20").unwrap();
+        assert_eq!(m.weights.seed(), Some(DEFAULT_SEED));
+        assert!(m.manifest.is_none());
+        let p = m.weights.params(&m.network, 16).unwrap();
+        assert_eq!(p.steps.len(), 20);
+    }
+
+    #[test]
+    fn register_replaces_by_name() {
+        let mut r = NetworkRegistry::builtin();
+        let n = r.names().len();
+        let mut entry = r.get("resnet34").unwrap().clone();
+        entry.default_resolution = (512, 512);
+        r.register(entry);
+        assert_eq!(r.names().len(), n);
+        assert_eq!(r.get("resnet34").unwrap().default_resolution, (512, 512));
+        let m = r.resolve_str("resnet34").unwrap();
+        assert_eq!((m.network.in_h, m.network.in_w), (128, 128));
+    }
+
+    #[test]
+    fn registry_level_granularity_check_guards_custom_entries() {
+        // tinyyolo's builder accepts any size; the entry's declared
+        // granularity must still be enforced by the registry.
+        let mut r = NetworkRegistry::empty();
+        r.register(ModelEntry {
+            name: "tiny8",
+            description: "granularity-8 test entry",
+            default_resolution: (64, 64),
+            stride_granularity: 8,
+            fixed_resolution: false,
+            out_channels: 255,
+            downsample: 32,
+            builder: zoo::tinyyolo,
+        });
+        assert!(r.resolve_str("tiny8@64x64").is_ok());
+        match r.resolve_str("tiny8@65x64").unwrap_err() {
+            ModelError::Resolution(e) => assert_eq!(e.granularity, 8),
+            other => panic!("expected Resolution, got {other}"),
+        }
+    }
+
+    #[test]
+    fn broken_default_resolution_is_reported_not_panicked() {
+        let mut r = NetworkRegistry::builtin();
+        let mut entry = r.get("resnet34").unwrap().clone();
+        entry.name = "resnet34-bad";
+        entry.default_resolution = (225, 225);
+        r.register(entry);
+        // listings() skips the broken row; render_listing annotates it.
+        assert_eq!(r.listings().len(), r.names().len() - 1);
+        let text = r.render_listing();
+        assert!(text.contains("resnet34-bad"), "{text}");
+        assert!(text.contains("does not build"), "{text}");
+    }
+
+    #[test]
+    fn missing_manifest_is_a_typed_error() {
+        let r = NetworkRegistry::builtin();
+        let err = r.resolve_str("manifest:/nonexistent/dir").unwrap_err();
+        assert!(matches!(err, ModelError::Manifest(_)), "{err}");
+    }
+
+    #[test]
+    fn listings_cover_every_entry() {
+        let r = NetworkRegistry::builtin();
+        let ls = r.listings();
+        assert_eq!(ls.len(), r.names().len());
+        let rn34 = ls.iter().find(|l| l.name == "resnet34").unwrap();
+        // Tbl II: ~21 Mbit of binary weights at 224².
+        assert!((rn34.weight_mbit - 21.0).abs() < 2.0, "{}", rn34.weight_mbit);
+        assert!(rn34.steps > 30);
+        let text = r.render_listing();
+        assert!(text.contains("resnet152"), "{text}");
+        assert!(text.contains("hypernet20"), "{text}");
+    }
+}

@@ -1,0 +1,270 @@
+//! The parseable model spec — one string grammar naming every network
+//! the system can run, used by the CLI (`--model`), the engine builder
+//! (`Engine::builder().model(..)`) and the examples/benches.
+//!
+//! Grammar (also in `DESIGN.md §ModelSpec`):
+//!
+//! ```text
+//! spec       := registry | manifest
+//! registry   := name [ "@" resolution ]        ; a NetworkRegistry entry
+//! resolution := H "x" W | N                    ; height x width, or N x N
+//! manifest   := "manifest:" dir [ "#" name ]   ; an AOT artifact manifest
+//! ```
+//!
+//! Examples: `resnet34` (registry default resolution),
+//! `resnet34@512x1024` (512 high, 1024 wide), `yolov3@416` (416×416),
+//! `manifest:artifacts`, `manifest:artifacts/manifest.tsv#hypernet20`
+//! (the `#name` fragment asserts which network the manifest describes).
+
+use std::fmt;
+use std::path::PathBuf;
+use std::str::FromStr;
+
+/// A parsed model description: either a registry entry (by name, with an
+/// optional `(h, w)` resolution override) or an AOT artifact manifest
+/// (by directory, with an optional expected network name).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ModelSpec {
+    /// `name[@HxW]` — resolved against a
+    /// [`NetworkRegistry`](super::NetworkRegistry).
+    Registry {
+        /// Registry entry name (e.g. `resnet34`).
+        name: String,
+        /// `(h, w)` image resolution; `None` uses the entry's default.
+        resolution: Option<(usize, usize)>,
+    },
+    /// `manifest:DIR[#NAME]` — an AOT artifact manifest directory (a
+    /// direct path to `manifest.tsv` is also accepted).
+    Manifest {
+        /// The artifact directory.
+        dir: PathBuf,
+        /// Expected network name, compared case- and
+        /// punctuation-insensitively (`hypernet20` matches
+        /// `HyperNet-20`).
+        network: Option<String>,
+    },
+}
+
+/// Typed parse errors of the [`ModelSpec`] grammar.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SpecError {
+    /// The spec string is empty (or all whitespace).
+    Empty,
+    /// A registry spec with no name before `@`, or a manifest spec with
+    /// an empty `#` fragment.
+    EmptyName { spec: String },
+    /// The text after `@` is not `HxW` or `N`.
+    BadResolution { spec: String, what: &'static str },
+    /// A resolution dimension parsed to zero.
+    ZeroResolution { spec: String },
+    /// `manifest:` with nothing after the colon.
+    EmptyManifestDir { spec: String },
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpecError::Empty => write!(f, "empty model spec"),
+            SpecError::EmptyName { spec } => {
+                write!(f, "model spec `{spec}` has an empty network name")
+            }
+            SpecError::BadResolution { spec, what } => write!(
+                f,
+                "model spec `{spec}`: {what} (expected `name@HxW` or `name@N`)"
+            ),
+            SpecError::ZeroResolution { spec } => {
+                write!(f, "model spec `{spec}` has a zero resolution dimension")
+            }
+            SpecError::EmptyManifestDir { spec } => {
+                write!(f, "model spec `{spec}` names no manifest directory")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+impl FromStr for ModelSpec {
+    type Err = SpecError;
+
+    fn from_str(s: &str) -> Result<ModelSpec, SpecError> {
+        let s = s.trim();
+        if s.is_empty() {
+            return Err(SpecError::Empty);
+        }
+        if let Some(rest) = s.strip_prefix("manifest:") {
+            let (dir, fragment) = match rest.split_once('#') {
+                Some((d, f)) => (d, Some(f)),
+                None => (rest, None),
+            };
+            if dir.is_empty() {
+                return Err(SpecError::EmptyManifestDir { spec: s.into() });
+            }
+            if fragment == Some("") {
+                return Err(SpecError::EmptyName { spec: s.into() });
+            }
+            // Accept both the directory and the manifest file itself.
+            let mut dir = PathBuf::from(dir);
+            if dir.file_name().is_some_and(|f| f == "manifest.tsv") {
+                dir.pop();
+            }
+            return Ok(ModelSpec::Manifest {
+                dir,
+                network: fragment.map(str::to_string),
+            });
+        }
+        let (name, resolution) = match s.split_once('@') {
+            None => (s, None),
+            Some((name, res)) => (name, Some(parse_resolution(s, res)?)),
+        };
+        if name.is_empty() {
+            return Err(SpecError::EmptyName { spec: s.into() });
+        }
+        Ok(ModelSpec::Registry {
+            name: name.to_string(),
+            resolution,
+        })
+    }
+}
+
+fn parse_resolution(spec: &str, res: &str) -> Result<(usize, usize), SpecError> {
+    let bad = |what| SpecError::BadResolution {
+        spec: spec.into(),
+        what,
+    };
+    let (h, w) = match res.split_once('x') {
+        Some((h, w)) => (
+            h.parse::<usize>().map_err(|_| bad("height is not an integer"))?,
+            w.parse::<usize>().map_err(|_| bad("width is not an integer"))?,
+        ),
+        None => {
+            let n = res
+                .parse::<usize>()
+                .map_err(|_| bad("resolution is not an integer"))?;
+            (n, n)
+        }
+    };
+    if h == 0 || w == 0 {
+        return Err(SpecError::ZeroResolution { spec: spec.into() });
+    }
+    Ok((h, w))
+}
+
+impl fmt::Display for ModelSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ModelSpec::Registry { name, resolution } => match resolution {
+                Some((h, w)) => write!(f, "{name}@{h}x{w}"),
+                None => write!(f, "{name}"),
+            },
+            ModelSpec::Manifest { dir, network } => match network {
+                Some(n) => write!(f, "manifest:{}#{n}", dir.display()),
+                None => write!(f, "manifest:{}", dir.display()),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<ModelSpec, SpecError> {
+        s.parse()
+    }
+
+    #[test]
+    fn bare_name_has_no_resolution() {
+        assert_eq!(
+            parse("resnet34").unwrap(),
+            ModelSpec::Registry {
+                name: "resnet34".into(),
+                resolution: None,
+            }
+        );
+    }
+
+    #[test]
+    fn h_x_w_and_square_forms() {
+        assert_eq!(
+            parse("resnet34@512x1024").unwrap(),
+            ModelSpec::Registry {
+                name: "resnet34".into(),
+                resolution: Some((512, 1024)),
+            }
+        );
+        assert_eq!(
+            parse("yolov3@416").unwrap(),
+            ModelSpec::Registry {
+                name: "yolov3".into(),
+                resolution: Some((416, 416)),
+            }
+        );
+    }
+
+    #[test]
+    fn manifest_forms() {
+        assert_eq!(
+            parse("manifest:artifacts").unwrap(),
+            ModelSpec::Manifest {
+                dir: PathBuf::from("artifacts"),
+                network: None,
+            }
+        );
+        // A direct manifest.tsv path resolves to its directory; the
+        // fragment carries the expected network name.
+        assert_eq!(
+            parse("manifest:artifacts/manifest.tsv#hypernet20").unwrap(),
+            ModelSpec::Manifest {
+                dir: PathBuf::from("artifacts"),
+                network: Some("hypernet20".into()),
+            }
+        );
+    }
+
+    #[test]
+    fn typed_parse_errors() {
+        assert_eq!(parse("").unwrap_err(), SpecError::Empty);
+        assert_eq!(parse("   ").unwrap_err(), SpecError::Empty);
+        assert!(matches!(
+            parse("@224").unwrap_err(),
+            SpecError::EmptyName { .. }
+        ));
+        assert!(matches!(
+            parse("resnet34@axb").unwrap_err(),
+            SpecError::BadResolution { .. }
+        ));
+        assert!(matches!(
+            parse("resnet34@224x").unwrap_err(),
+            SpecError::BadResolution { .. }
+        ));
+        assert!(matches!(
+            parse("resnet34@0x224").unwrap_err(),
+            SpecError::ZeroResolution { .. }
+        ));
+        assert!(matches!(
+            parse("manifest:").unwrap_err(),
+            SpecError::EmptyManifestDir { .. }
+        ));
+        assert!(matches!(
+            parse("manifest:artifacts#").unwrap_err(),
+            SpecError::EmptyName { .. }
+        ));
+    }
+
+    #[test]
+    fn display_round_trips() {
+        for s in [
+            "resnet34",
+            "resnet34@512x1024",
+            "manifest:artifacts",
+            "manifest:artifacts#hypernet20",
+        ] {
+            let spec = parse(s).unwrap();
+            assert_eq!(spec.to_string(), s);
+            assert_eq!(parse(&spec.to_string()).unwrap(), spec);
+        }
+        // The square shorthand normalizes to the HxW form.
+        assert_eq!(parse("yolov3@416").unwrap().to_string(), "yolov3@416x416");
+    }
+}

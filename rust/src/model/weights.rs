@@ -1,0 +1,205 @@
+//! [`WeightSource`] — where a model's parameters come from. One trait
+//! unifying the three provisioning paths that used to be chosen per call
+//! site: seeded synthetic BWN parameters ([`Random`]), trained tensors
+//! from an AOT artifact manifest ([`ManifestBlobs`]) and caller-supplied
+//! host tensors ([`HostTensors`], packed through [`bwn::pack_weights`]).
+//!
+//! [`bwn::pack_weights`]: crate::bwn::pack_weights
+
+use std::sync::Arc;
+
+use crate::bwn::pack_weights;
+use crate::engine::backend::NetworkParams;
+use crate::network::Network;
+use crate::runtime::NetworkManifest;
+use crate::simulator::mesh::StepParams;
+
+use super::ModelError;
+
+/// A provider of per-step simulator parameters (packed weight streams +
+/// folded batch-norm γ/β) for a network.
+///
+/// `Send + Sync` so a source can be shared across engines and serving
+/// workers.
+pub trait WeightSource: Send + Sync {
+    /// One-line human description (reports, examples).
+    fn describe(&self) -> String;
+
+    /// Materialize the parameters for `net` at output-channel
+    /// parallelism `c` (the chip's stream word width).
+    fn params(&self, net: &Network, c: usize) -> Result<NetworkParams, ModelError>;
+
+    /// `Some(seed)` when the source is a deterministic generator that
+    /// the engine may materialize lazily; `None` for real tensors.
+    fn seed(&self) -> Option<u64> {
+        None
+    }
+}
+
+/// Deterministic synthetic ±1 weights and BWN-style batch-norm scales
+/// derived from a seed (see `NetworkParams::seeded`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Random {
+    pub seed: u64,
+}
+
+impl WeightSource for Random {
+    fn describe(&self) -> String {
+        format!("seeded synthetic BWN parameters (seed {:#x})", self.seed)
+    }
+
+    fn params(&self, net: &Network, c: usize) -> Result<NetworkParams, ModelError> {
+        Ok(NetworkParams::seeded(net, c, self.seed))
+    }
+
+    fn seed(&self) -> Option<u64> {
+        Some(self.seed)
+    }
+}
+
+/// Real (trained, binarized) tensors from an AOT artifact manifest —
+/// the exact blobs the PJRT backend executes with.
+pub struct ManifestBlobs {
+    manifest: Arc<NetworkManifest>,
+}
+
+impl ManifestBlobs {
+    pub fn new(manifest: Arc<NetworkManifest>) -> ManifestBlobs {
+        ManifestBlobs { manifest }
+    }
+
+    /// The underlying manifest (golden files, blob index, …).
+    pub fn manifest(&self) -> &NetworkManifest {
+        &self.manifest
+    }
+}
+
+impl WeightSource for ManifestBlobs {
+    fn describe(&self) -> String {
+        format!(
+            "manifest (trained) parameters from {}",
+            self.manifest.dir.display()
+        )
+    }
+
+    fn params(&self, _net: &Network, c: usize) -> Result<NetworkParams, ModelError> {
+        NetworkParams::from_manifest(&self.manifest, c)
+            .map_err(|e| ModelError::Weights(e.to_string()))
+    }
+}
+
+/// One step's raw host tensors: real-valued weights
+/// `[n_out][n_in/groups][k][k]` (row-major, binarized at packing time)
+/// plus folded batch-norm scale/offset.
+#[derive(Debug, Clone)]
+pub struct StepTensors {
+    pub w: Vec<f32>,
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+}
+
+/// Caller-supplied host tensors, shape-checked against the network and
+/// packed into Tbl-I weight streams.
+#[derive(Debug, Clone)]
+pub struct HostTensors {
+    pub steps: Vec<StepTensors>,
+}
+
+impl WeightSource for HostTensors {
+    fn describe(&self) -> String {
+        format!("host tensors for {} steps", self.steps.len())
+    }
+
+    fn params(&self, net: &Network, c: usize) -> Result<NetworkParams, ModelError> {
+        if self.steps.len() != net.steps.len() {
+            return Err(ModelError::Weights(format!(
+                "{} host tensor sets for a {}-step network",
+                self.steps.len(),
+                net.steps.len()
+            )));
+        }
+        let mut steps = Vec::with_capacity(net.steps.len());
+        for (s, t) in net.steps.iter().zip(&self.steps) {
+            let l = &s.layer;
+            let want = (l.weight_bits()) as usize;
+            if t.w.len() != want {
+                return Err(ModelError::Weights(format!(
+                    "step `{}`: {} weight values, layer needs {want}",
+                    l.name,
+                    t.w.len()
+                )));
+            }
+            if t.gamma.len() != l.n_out || t.beta.len() != l.n_out {
+                return Err(ModelError::Weights(format!(
+                    "step `{}`: gamma/beta have {}/{} values, layer has {} output channels",
+                    l.name,
+                    t.gamma.len(),
+                    t.beta.len(),
+                    l.n_out
+                )));
+            }
+            steps.push(StepParams {
+                stream: pack_weights(l, &t.w, c),
+                gamma: t.gamma.clone(),
+                beta: t.beta.clone(),
+            });
+        }
+        Ok(NetworkParams { steps })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model;
+
+    #[test]
+    fn random_source_matches_seeded_params() {
+        let net = model::network("hypernet20").unwrap();
+        let src = Random { seed: 0xE2E };
+        assert_eq!(src.seed(), Some(0xE2E));
+        let a = src.params(&net, 16).unwrap();
+        let b = NetworkParams::seeded(&net, 16, 0xE2E);
+        assert_eq!(a.steps.len(), b.steps.len());
+        for (x, y) in a.steps.iter().zip(&b.steps) {
+            assert_eq!(x.stream, y.stream);
+            assert_eq!(x.gamma, y.gamma);
+            assert_eq!(x.beta, y.beta);
+        }
+    }
+
+    #[test]
+    fn host_tensors_pack_and_shape_check() {
+        let net = model::network("hypernet20").unwrap();
+        let good: Vec<StepTensors> = net
+            .steps
+            .iter()
+            .map(|s| {
+                let l = &s.layer;
+                StepTensors {
+                    w: vec![-1.0; l.weight_bits() as usize],
+                    gamma: vec![0.5; l.n_out],
+                    beta: vec![0.0; l.n_out],
+                }
+            })
+            .collect();
+        let src = HostTensors { steps: good.clone() };
+        let p = src.params(&net, 16).unwrap();
+        assert_eq!(p.steps.len(), net.steps.len());
+        // All-negative weights: every real (non-padded) stream bit is 0.
+        assert_eq!(p.steps[0].stream.weight(0, 0, 0), -1.0);
+
+        // Wrong step count.
+        let short = HostTensors { steps: good[..5].to_vec() };
+        assert!(matches!(
+            short.params(&net, 16).unwrap_err(),
+            ModelError::Weights(_)
+        ));
+
+        // Wrong per-step weight volume.
+        let mut bad = HostTensors { steps: good };
+        bad.steps[3].w.pop();
+        let err = bad.params(&net, 16).unwrap_err();
+        assert!(err.to_string().contains("weight values"), "{err}");
+    }
+}

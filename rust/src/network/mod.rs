@@ -13,3 +13,4 @@ pub mod zoo;
 
 pub use graph::{Network, OffChipStage, Step, TensorRef};
 pub use layer::ConvLayer;
+pub use zoo::ResolutionError;

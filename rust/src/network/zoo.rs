@@ -14,13 +14,80 @@
 //! critical", §IV-B). The first 7×7 convolution and the FC head of the
 //! ResNets run off-chip (§VI-B) and are carried as [`OffChipStage`]s.
 
+use std::fmt;
+
 use super::graph::{Network, OffChipStage, TensorRef};
 use super::layer::ConvLayer;
+
+/// Typed rejection of an input resolution a builder cannot realize
+/// exactly. Every zoo builder divides the image resolution by its
+/// truncating stride factors (the ResNet/ShuffleNet stem's `h / 4`;
+/// YOLOv3 additionally needs the full `h / 32` FPN grid alignment so the
+/// 2× upsampled laterals match the next scale). Resolutions that are not
+/// divisible by that granularity used to be silently truncated — now
+/// they are rejected with this error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ResolutionError {
+    /// Network display name (e.g. `ResNet-34`).
+    pub network: &'static str,
+    /// Requested image height.
+    pub h: usize,
+    /// Requested image width.
+    pub w: usize,
+    /// Required divisor of both `h` and `w`.
+    pub granularity: usize,
+}
+
+impl fmt::Display for ResolutionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}: input resolution {}x{} is not divisible by the stage stride \
+             product {} (the stem would silently truncate pixels)",
+            self.network, self.h, self.w, self.granularity
+        )
+    }
+}
+
+impl std::error::Error for ResolutionError {}
+
+/// Reject zero or non-divisible resolutions with a [`ResolutionError`].
+fn check_resolution(
+    network: &'static str,
+    h: usize,
+    w: usize,
+    granularity: usize,
+) -> Result<(), ResolutionError> {
+    if h == 0 || w == 0 || h % granularity != 0 || w % granularity != 0 {
+        return Err(ResolutionError {
+            network,
+            h,
+            w,
+            granularity,
+        });
+    }
+    Ok(())
+}
+
+/// The ResNet/ShuffleNet stem divides the image by 4 exactly (7×7/s2
+/// conv + maxpool); the later strided stages use same-padding `div_ceil`
+/// and accept any size.
+pub const STEM_GRANULARITY: usize = 4;
+
+/// YOLOv3's FPN upsampling needs the full stride product: the 2×
+/// nearest-upsampled `h/32` grid must land exactly on the `h/16` grid.
+pub const FPN_GRANULARITY: usize = 32;
 
 /// ResNet with basic blocks (Fig. 4a). `blocks` per stage, channels
 /// 64/128/256/512. `(h, w)` is the *image* resolution; the on-chip input
 /// FM is the post-conv1/maxpool `64 × h/4 × w/4`.
-pub fn resnet_basic(name: &str, blocks: [usize; 4], h: usize, w: usize) -> Network {
+pub fn resnet_basic(
+    name: &'static str,
+    blocks: [usize; 4],
+    h: usize,
+    w: usize,
+) -> Result<Network, ResolutionError> {
+    check_resolution(name, h, w, STEM_GRANULARITY)?;
     let mut net = Network::new(name, 64, h / 4, w / 4);
     net.pre = Some(resnet_pre(h, w));
     let mut prev = TensorRef::Input;
@@ -61,14 +128,20 @@ pub fn resnet_basic(name: &str, blocks: [usize; 4], h: usize, w: usize) -> Netwo
         }
     }
     net.post = Some(resnet_post(ch));
-    net
+    Ok(net)
 }
 
 /// ResNet with bottleneck blocks (Fig. 4b). Stage output channels
 /// 256/512/1024/2048, mid channels out/4, stride in the first 1×1 of the
 /// transition block (ResNet v1, the variant the paper's WCL analysis
 /// assumes).
-pub fn resnet_bottleneck(name: &str, blocks: [usize; 4], h: usize, w: usize) -> Network {
+pub fn resnet_bottleneck(
+    name: &'static str,
+    blocks: [usize; 4],
+    h: usize,
+    w: usize,
+) -> Result<Network, ResolutionError> {
+    check_resolution(name, h, w, STEM_GRANULARITY)?;
     let mut net = Network::new(name, 64, h / 4, w / 4);
     net.pre = Some(resnet_pre(h, w));
     let mut prev = TensorRef::Input;
@@ -116,7 +189,7 @@ pub fn resnet_bottleneck(name: &str, blocks: [usize; 4], h: usize, w: usize) -> 
         }
     }
     net.post = Some(resnet_post(ch));
-    net
+    Ok(net)
 }
 
 fn resnet_pre(h: usize, w: usize) -> OffChipStage {
@@ -140,22 +213,22 @@ fn resnet_post(ch: usize) -> OffChipStage {
 }
 
 /// ResNet-18 (basic, [2,2,2,2]).
-pub fn resnet18(h: usize, w: usize) -> Network {
+pub fn resnet18(h: usize, w: usize) -> Result<Network, ResolutionError> {
     resnet_basic("ResNet-18", [2, 2, 2, 2], h, w)
 }
 
 /// ResNet-34 (basic, [3,4,6,3]) — the paper's main benchmark.
-pub fn resnet34(h: usize, w: usize) -> Network {
+pub fn resnet34(h: usize, w: usize) -> Result<Network, ResolutionError> {
     resnet_basic("ResNet-34", [3, 4, 6, 3], h, w)
 }
 
 /// ResNet-50 (bottleneck, [3,4,6,3]).
-pub fn resnet50(h: usize, w: usize) -> Network {
+pub fn resnet50(h: usize, w: usize) -> Result<Network, ResolutionError> {
     resnet_bottleneck("ResNet-50", [3, 4, 6, 3], h, w)
 }
 
 /// ResNet-152 (bottleneck, [3,8,36,3]).
-pub fn resnet152(h: usize, w: usize) -> Network {
+pub fn resnet152(h: usize, w: usize) -> Result<Network, ResolutionError> {
     resnet_bottleneck("ResNet-152", [3, 8, 36, 3], h, w)
 }
 
@@ -167,7 +240,8 @@ pub fn resnet152(h: usize, w: usize) -> Network {
 /// full-width branch (the 3×3 average pool contributes < 1% of ops and
 /// the widened 1×1 g-conv overcounts by the same order — documented
 /// deviation, see EXPERIMENTS.md).
-pub fn shufflenet(h: usize, w: usize) -> Network {
+pub fn shufflenet(h: usize, w: usize) -> Result<Network, ResolutionError> {
+    check_resolution("ShuffleNet", h, w, STEM_GRANULARITY)?;
     let mut net = Network::new("ShuffleNet", 24, h / 4, w / 4);
     // conv1 (3×3/s2, 24ch) runs on-chip in principle, but its 3-channel
     // input makes it host work in the paper's accounting; keep it off-chip
@@ -221,14 +295,15 @@ pub fn shufflenet(h: usize, w: usize) -> Network {
         weight_bits: 0,
         io_words: ch as u64,
     });
-    net
+    Ok(net)
 }
 
 /// YOLOv3: Darknet-53 backbone + 3-scale detection heads at image
 /// resolution `(h, w)` (the paper uses 320×320, COCO classes → 255
 /// output maps). Feature-pyramid concats are expressed with the IR's
 /// `concat_extra` channel merge.
-pub fn yolov3(h: usize, w: usize) -> Network {
+pub fn yolov3(h: usize, w: usize) -> Result<Network, ResolutionError> {
+    check_resolution("YOLOv3", h, w, FPN_GRANULARITY)?;
     let mut net = Network::new("YOLOv3", 3, h, w);
     let mut prev = TensorRef::Input;
     let (mut fh, mut fw) = (h, w);
@@ -320,7 +395,7 @@ pub fn yolov3(h: usize, w: usize) -> Network {
             upsampled = Some((TensorRef::Step(lat), mid / 2));
         }
     }
-    net
+    Ok(net)
 }
 
 /// TinyYOLO-style detector (§IV-C: "networks optimized for compute
@@ -329,7 +404,9 @@ pub fn yolov3(h: usize, w: usize) -> Network {
 /// into the convolutions (the max-pools of the darknet reference are
 /// reformulated as strided convs, a standard op-count-preserving
 /// transformation) plus a 1×1/3×3 detection head.
-pub fn tinyyolo(h: usize, w: usize) -> Network {
+pub fn tinyyolo(h: usize, w: usize) -> Result<Network, ResolutionError> {
+    // All downsampling is same-padding `div_ceil`: any non-zero size works.
+    check_resolution("TinyYOLO", h, w, 1)?;
     let mut net = Network::new("TinyYOLO", 3, h, w);
     let mut prev = TensorRef::Input;
     let (mut fh, mut fw) = (h, w);
@@ -363,7 +440,7 @@ pub fn tinyyolo(h: usize, w: usize) -> Network {
         TensorRef::Step(b),
         None,
     );
-    net
+    Ok(net)
 }
 
 /// Binary-weight bits of the 1×1 projection shortcuts only — Tbl II's
@@ -435,7 +512,7 @@ mod tests {
     fn resnet34_matches_paper_op_count() {
         // §VI-B: 7.09 GOp of conv on-chip, 7.3 GOp total; Tbl III:
         // bnorm/bias 2.94 MOp each, 4.52 M conv cycles at 1568 Op/cycle.
-        let net = resnet34(224, 224);
+        let net = resnet34(224, 224).unwrap();
         net.validate().unwrap();
         let conv = net.conv_ops() as f64;
         assert!(
@@ -449,21 +526,21 @@ mod tests {
 
     #[test]
     fn resnet34_weight_bits_match_table2() {
-        let net = resnet34(224, 224);
+        let net = resnet34(224, 224).unwrap();
         let bits = net.weight_bits() as f64;
         assert!((bits / 21e6 - 1.0).abs() < 0.05, "weights {bits:.3e} vs 21M");
     }
 
     #[test]
     fn resnet18_weight_bits_match_table2() {
-        let net = resnet18(224, 224);
+        let net = resnet18(224, 224).unwrap();
         let bits = net.weight_bits() as f64;
         assert!((bits / 11e6 - 1.0).abs() < 0.05, "weights {bits:.3e} vs 11M");
     }
 
     #[test]
     fn resnet152_weight_bits_match_table2() {
-        let net = resnet152(224, 224);
+        let net = resnet152(224, 224).unwrap();
         let bits = net.weight_bits() as f64;
         // Paper: 55M (with identity-style shortcut accounting; projection
         // convs add ~5%).
@@ -472,15 +549,15 @@ mod tests {
 
     #[test]
     fn resnet_shapes_reach_7x7_at_224() {
-        let net = resnet34(224, 224);
+        let net = resnet34(224, 224).unwrap();
         assert_eq!(net.out_shape(), (512, 7, 7));
-        let net50 = resnet50(224, 224);
+        let net50 = resnet50(224, 224).unwrap();
         assert_eq!(net50.out_shape(), (2048, 7, 7));
     }
 
     #[test]
     fn resnets_are_chip_supported() {
-        for net in [resnet34(224, 224), resnet50(224, 224)] {
+        for net in [resnet34(224, 224).unwrap(), resnet50(224, 224).unwrap()] {
             for s in &net.steps {
                 assert!(s.layer.chip_supported(), "{}", s.layer.name);
             }
@@ -489,7 +566,7 @@ mod tests {
 
     #[test]
     fn shufflenet_mac_count_matches_architecture() {
-        let net = shufflenet(224, 224);
+        let net = shufflenet(224, 224).unwrap();
         net.validate().unwrap();
         let macs: f64 = net.steps.iter().map(|s| s.layer.macs() as f64).sum();
         // ShuffleNet v1 1.0× (g=8) is ~137 M multiply-adds (Zhang et al.).
@@ -505,7 +582,7 @@ mod tests {
 
     #[test]
     fn yolov3_op_count_near_paper() {
-        let net = yolov3(320, 320);
+        let net = yolov3(320, 320).unwrap();
         net.validate().unwrap();
         let ops = net.total_ops() as f64;
         // Tbl VI: 53.1 GOp; public YOLOv3@320 figures are ~39 GFLOP + 2×
@@ -520,24 +597,24 @@ mod tests {
     #[test]
     fn resnet18_and_50_op_counts_sane() {
         // ResNet-18 @224²: ~3.6 GFLOPs total; on-chip conv share ~3.4G.
-        let n18 = resnet18(224, 224);
+        let n18 = resnet18(224, 224).unwrap();
         let conv18 = n18.conv_ops() as f64;
         assert!((3.0e9..3.8e9).contains(&conv18), "{conv18:.3e}");
         // ResNet-50 @224²: ~4.1 G mult-adds = ~8 GOp, slightly above
         // ResNet-34 (the paper's "roughly 50% more compute-intensive"
         // overstates the standard counts).
-        let n50 = resnet50(224, 224);
+        let n50 = resnet50(224, 224).unwrap();
         let conv50 = n50.conv_ops() as f64;
         assert!((7.0e9..8.6e9).contains(&conv50), "{conv50:.3e}");
-        let ratio = conv50 / resnet34(224, 224).conv_ops() as f64;
+        let ratio = conv50 / resnet34(224, 224).unwrap().conv_ops() as f64;
         assert!((1.0..1.25).contains(&ratio), "50/34 ratio {ratio}");
     }
 
     #[test]
     fn resnet50_memory_footprint_3_3x_of_34() {
         // §VI-B: ResNet-50's FM memory footprint is ~3.3× ResNet-34's.
-        let a34 = crate::coordinator::wcl::analyze(&resnet34(224, 224));
-        let a50 = crate::coordinator::wcl::analyze(&resnet50(224, 224));
+        let a34 = crate::coordinator::wcl::analyze(&resnet34(224, 224).unwrap());
+        let a50 = crate::coordinator::wcl::analyze(&resnet50(224, 224).unwrap());
         let ratio = a50.wcl_words as f64 / a34.wcl_words as f64;
         assert!((3.0..3.5).contains(&ratio), "ratio {ratio}");
     }
@@ -546,17 +623,17 @@ mod tests {
     fn identity_shortcut_accounting_reconciles_table2() {
         // ResNet-50/152 weight bits minus projection shortcuts hit the
         // paper's 21M / 55M.
-        let n50 = resnet50(224, 224);
+        let n50 = resnet50(224, 224).unwrap();
         let w50 = (n50.weight_bits() - projection_weight_bits(&n50)) as f64;
         assert!((w50 / 20.7e6 - 1.0).abs() < 0.03, "{w50:.3e}");
-        let n152 = resnet152(224, 224);
+        let n152 = resnet152(224, 224).unwrap();
         let w152 = (n152.weight_bits() - projection_weight_bits(&n152)) as f64;
         assert!((w152 / 55e6 - 1.0).abs() < 0.03, "{w152:.3e}");
     }
 
     #[test]
     fn tinyyolo_is_chip_supported_and_sized() {
-        let net = tinyyolo(416, 416);
+        let net = tinyyolo(416, 416).unwrap();
         net.validate().unwrap();
         for s in &net.steps {
             assert!(s.layer.chip_supported(), "{}", s.layer.name);
@@ -580,5 +657,47 @@ mod tests {
         // Binary weight count must equal the AOT param blob's `w` words:
         // 272010 total − (gamma+beta = 2·Σn_out = 1536) − head (650).
         assert_eq!(net.weight_bits(), 269_824);
+    }
+
+    #[test]
+    fn non_divisible_resolution_is_a_typed_error() {
+        // 225 % 4 != 0: the stem would silently truncate `h / 4`.
+        let err = resnet34(225, 224).unwrap_err();
+        assert_eq!(
+            err,
+            ResolutionError {
+                network: "ResNet-34",
+                h: 225,
+                w: 224,
+                granularity: STEM_GRANULARITY,
+            }
+        );
+        assert!(err.to_string().contains("stride"), "{err}");
+        assert!(resnet50(224, 226).is_err());
+        assert!(shufflenet(222, 224).is_err());
+        // YOLOv3's FPN needs the full /32 alignment (336 % 32 = 16).
+        let err = yolov3(336, 336).unwrap_err();
+        assert_eq!(err.granularity, FPN_GRANULARITY);
+    }
+
+    #[test]
+    fn zero_resolution_rejected_everywhere() {
+        assert!(resnet18(0, 224).is_err());
+        assert!(yolov3(320, 0).is_err());
+        assert!(tinyyolo(0, 0).is_err());
+    }
+
+    #[test]
+    fn div_ceil_resolutions_still_build() {
+        // Divisible by the stem's 4 but not by the full stride product:
+        // the strided stages use same-padding div_ceil, which is exact
+        // conv arithmetic, not truncation (Fig 11's 112/168/336 points).
+        for (h, w) in [(112, 112), (168, 168), (336, 336)] {
+            let net = resnet34(h, w).unwrap();
+            net.validate().unwrap();
+            assert_eq!(net.out_shape().0, 512);
+        }
+        // TinyYOLO accepts any non-zero size.
+        tinyyolo(417, 233).unwrap().validate().unwrap();
     }
 }

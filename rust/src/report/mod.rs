@@ -14,20 +14,21 @@ use crate::coordinator::tiling::{plan_mesh, MeshPlan};
 use crate::coordinator::wcl;
 use crate::energy::{breakdown, opchar, scaling};
 use crate::engine::{Engine, EngineReport};
-use crate::network::{zoo, ConvLayer, Network};
+use crate::model;
+use crate::network::{ConvLayer, Network};
 use crate::util::fmt_bits;
 use crate::ChipConfig;
 
-/// Build the analytic [`EngineReport`] for one zoo network on an
-/// optional explicit mesh — the single typed source every
+/// Build the analytic [`EngineReport`] for one registry model spec on
+/// an optional explicit mesh — the single typed source every
 /// schedule/energy table row reads from.
 fn engine_report(
-    net: Network,
+    spec: &str,
     cfg: &ChipConfig,
     mesh: Option<(usize, usize)>,
     dw: DepthwisePolicy,
 ) -> EngineReport {
-    let mut b = Engine::builder().network(net).chip(*cfg).depthwise(dw);
+    let mut b = Engine::builder().model(spec).chip(*cfg).depthwise(dw);
     if let Some((rows, cols)) = mesh {
         b = b.mesh(rows, cols);
     }
@@ -71,12 +72,12 @@ pub fn table1() -> String {
 /// Tbl II: weights / all-FM / worst-case memory for the zoo networks.
 pub fn table2() -> String {
     let rows: Vec<(Network, &str)> = vec![
-        (zoo::resnet18(224, 224), "224x224"),
-        (zoo::resnet34(224, 224), "224x224"),
-        (zoo::resnet50(224, 224), "224x224"),
-        (zoo::resnet152(224, 224), "224x224"),
-        (zoo::resnet34(1024, 2048), "2048x1024"),
-        (zoo::resnet152(1024, 2048), "2048x1024"),
+        (model::network("resnet18@224x224").unwrap(), "224x224"),
+        (model::network("resnet34@224x224").unwrap(), "224x224"),
+        (model::network("resnet50@224x224").unwrap(), "224x224"),
+        (model::network("resnet152@224x224").unwrap(), "224x224"),
+        (model::network("resnet34@1024x2048").unwrap(), "2048x1024"),
+        (model::network("resnet152@1024x2048").unwrap(), "2048x1024"),
     ];
     let mut out = String::new();
     out.push_str("Table II — data volumes (binary weights, 16-bit FMs)\n");
@@ -102,7 +103,7 @@ pub fn table2() -> String {
 
 /// Tbl III: ResNet-34 cycle/throughput split.
 pub fn table3(cfg: &ChipConfig) -> String {
-    let rep = engine_report(zoo::resnet34(224, 224), cfg, None, DepthwisePolicy::default());
+    let rep = engine_report("resnet34@224x224", cfg, None, DepthwisePolicy::default());
     let s = &rep.schedule;
     let f = opchar::MEASURED_POINTS[0].freq_hz; // 0.5 V
     let mut out = String::new();
@@ -142,7 +143,7 @@ pub fn table3(cfg: &ChipConfig) -> String {
 
 /// Tbl IV: operating points (measured anchors + model interpolation).
 pub fn table4(cfg: &ChipConfig) -> String {
-    let net = zoo::resnet34(224, 224);
+    let net = model::network("resnet34@224x224").unwrap();
     let s = schedule_network(&net, cfg, DepthwisePolicy::default());
     let opc = s.ops_per_cycle();
     let mut out = String::new();
@@ -190,15 +191,15 @@ pub fn table5(cfg: &ChipConfig) -> String {
     }
     // Hyperdrive rows from the unified engine's typed report.
     let dw = DepthwisePolicy::FullRate;
-    let cases: Vec<(Network, Option<(usize, usize)>, &str)> = vec![
-        (zoo::resnet34(224, 224), None, "224x224"),
-        (zoo::shufflenet(224, 224), None, "224x224"),
-        (zoo::yolov3(320, 320), None, "320x320"),
-        (zoo::resnet34(1024, 2048), Some((5, 10)), "2kx1k(10x5)"),
-        (zoo::resnet152(1024, 2048), Some((10, 20)), "2kx1k(20x10)"),
+    let cases: Vec<(&str, Option<(usize, usize)>, &str)> = vec![
+        ("resnet34@224x224", None, "224x224"),
+        ("shufflenet@224x224", None, "224x224"),
+        ("yolov3@320x320", None, "320x320"),
+        ("resnet34@1024x2048", Some((5, 10)), "2kx1k(10x5)"),
+        ("resnet152@1024x2048", Some((10, 20)), "2kx1k(20x10)"),
     ];
-    for (net, mesh, input) in cases {
-        let rep = engine_report(net, cfg, mesh, dw);
+    for (spec, mesh, input) in cases {
+        let rep = engine_report(spec, cfg, mesh, dw);
         let r = &rep.energy;
         out.push_str(&format!(
             "{:<28} {:<10} {:<12} {:>8.0} {:>9.1} {:>9.1} {:>9.1} {:>11.1}\n",
@@ -230,12 +231,12 @@ pub fn table6(cfg: &ChipConfig) -> String {
         "Baseline (peak)", "-", "-", cfg.ops_per_cycle(), "100.0%", "100.0%"
     ));
     let nets = [
-        (zoo::resnet34(224, 224), "(97.5%)"),
-        (zoo::shufflenet(224, 224), "(98.8%)"),
-        (zoo::yolov3(320, 320), "(82.8%)"),
+        ("resnet34@224x224", "(97.5%)"),
+        ("shufflenet@224x224", "(98.8%)"),
+        ("yolov3@320x320", "(82.8%)"),
     ];
-    for (net, paper) in nets {
-        let rep = engine_report(net, cfg, None, DepthwisePolicy::FullRate);
+    for (spec, paper) in nets {
+        let rep = engine_report(spec, cfg, None, DepthwisePolicy::FullRate);
         let s = &rep.schedule;
         out.push_str(&format!(
             "{:<22} {:>10} {:>12} {:>11.0} {:>8.1}% {:>8.1}% {paper}\n",
@@ -249,7 +250,7 @@ pub fn table6(cfg: &ChipConfig) -> String {
     }
     out.push_str("(ShuffleNet with bank-serialized depth-wise — the faithful model):\n");
     let rep = engine_report(
-        zoo::shufflenet(224, 224),
+        "shufflenet@224x224",
         cfg,
         None,
         DepthwisePolicy::BankSerialized,
@@ -269,7 +270,7 @@ pub fn table6(cfg: &ChipConfig) -> String {
 
 /// Fig 8: efficiency vs throughput across body-bias settings.
 pub fn fig8(cfg: &ChipConfig) -> String {
-    let net = zoo::resnet34(224, 224);
+    let net = model::network("resnet34@224x224").unwrap();
     let s = schedule_network(&net, cfg, DepthwisePolicy::default());
     let opc = s.ops_per_cycle();
     let io_j = crate::energy::io::hyperdrive_io(&net, &single(), cfg.fm_bits).energy_j();
@@ -293,7 +294,7 @@ pub fn fig8(cfg: &ChipConfig) -> String {
 
 /// Fig 9: efficiency and throughput vs VDD.
 pub fn fig9(cfg: &ChipConfig) -> String {
-    let net = zoo::resnet34(224, 224);
+    let net = model::network("resnet34@224x224").unwrap();
     let s = schedule_network(&net, cfg, DepthwisePolicy::default());
     let opc = s.ops_per_cycle();
     let io_j = crate::energy::io::hyperdrive_io(&net, &single(), cfg.fm_bits).energy_j();
@@ -319,7 +320,7 @@ pub fn fig9(cfg: &ChipConfig) -> String {
 
 /// Fig 10: power/energy breakdown at the 0.5 V point.
 pub fn fig10(cfg: &ChipConfig) -> String {
-    let net = zoo::resnet34(224, 224);
+    let net = model::network("resnet34@224x224").unwrap();
     let b = breakdown::breakdown(&net, cfg, &single());
     let f = b.fractions();
     let mut out = String::new();
@@ -360,7 +361,7 @@ pub fn fig11(cfg: &ChipConfig) -> String {
         (896, 896),
         (1024, 2048),
     ] {
-        let net = zoo::resnet34(h, w);
+        let net = model::network(&format!("resnet34@{h}x{w}")).unwrap();
         let plan = plan_mesh(&net, cfg);
         let ws = weight_stationary_io_bits(&net, 16);
         let hd = hyperdrive_fig11_bits(&net, &plan, 16);
@@ -382,7 +383,7 @@ pub fn fig11(cfg: &ChipConfig) -> String {
 
 /// Border/corner memory summary (§V-C, used by the mesh example).
 pub fn border_memories(cfg: &ChipConfig) -> String {
-    let net = zoo::resnet34(224, 224);
+    let net = model::network("resnet34@224x224").unwrap();
     let a = wcl::analyze(&net);
     let bm = border_memory_bits(&net, &a, 1, 1, cfg.fm_bits);
     let cm = corner_memory_bits(&net, cfg.fm_bits);
@@ -397,7 +398,10 @@ pub fn border_memories(cfg: &ChipConfig) -> String {
 pub fn ablations(cfg: &ChipConfig) -> String {
     use crate::energy::ablation;
     let mut out = String::new();
-    for net in [zoo::resnet34(224, 224), zoo::resnet34(1024, 2048)] {
+    for net in [
+        model::network("resnet34@224x224").unwrap(),
+        model::network("resnet34@1024x2048").unwrap(),
+    ] {
         let rows = ablation::precision_ablation(&net, cfg);
         out.push_str(&ablation::render(&net.name, &rows));
         out.push('\n');

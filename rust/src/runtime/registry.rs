@@ -187,7 +187,7 @@ mod tests {
         assert_eq!(nm.network.steps.len(), 20);
         assert_eq!(nm.n_classes, 10);
         // Must agree with the zoo twin.
-        let zoo_net = crate::network::zoo::hypernet20();
+        let zoo_net = crate::model::network("hypernet20").unwrap();
         assert_eq!(nm.network.steps.len(), zoo_net.steps.len());
         for (a, b) in nm.network.steps.iter().zip(&zoo_net.steps) {
             assert_eq!(a.layer.name, b.layer.name);

@@ -149,7 +149,7 @@ pub fn simulate_banked_layer(layer: &ConvLayer, cfg: &ChipConfig) -> BankStats {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::network::zoo;
+    use crate::model;
 
     fn cfg() -> ChipConfig {
         ChipConfig::default()
@@ -158,7 +158,7 @@ mod tests {
     #[test]
     fn resnet34_layers_are_conflict_free() {
         // §IV-A: no FMM bank conflicts across every ResNet-34 layer.
-        for s in &zoo::resnet34(224, 224).steps {
+        for s in &model::network("resnet34@224x224").unwrap().steps {
             let st = simulate_banked_layer(&s.layer, &cfg());
             assert!(
                 st.max_bank_concurrency <= 1,

@@ -484,7 +484,8 @@ impl MeshSim {
 mod tests {
     use super::*;
     use crate::bwn::pack_weights;
-    use crate::network::{zoo, Network, TensorRef};
+    use crate::model;
+    use crate::network::{Network, TensorRef};
     use crate::simulator::chip::{run_layer, LayerParams};
     use crate::util::SplitMix64;
 
@@ -552,7 +553,7 @@ mod tests {
 
     #[test]
     fn mesh_2x2_matches_single_chip_bit_exactly_f16() {
-        let net = zoo::hypernet20();
+        let net = model::network("hypernet20").unwrap();
         let params = random_params(&net, 0xabcd);
         let input = hypernet_input(7);
         let single = single_chip_run(&net, &params, &input, Precision::F16);
@@ -565,7 +566,7 @@ mod tests {
 
     #[test]
     fn mesh_4x4_matches_single_chip() {
-        let net = zoo::hypernet20();
+        let net = model::network("hypernet20").unwrap();
         let params = random_params(&net, 0x1234);
         let input = hypernet_input(11);
         let single = single_chip_run(&net, &params, &input, Precision::F32);
@@ -576,7 +577,7 @@ mod tests {
 
     #[test]
     fn asymmetric_mesh_matches() {
-        let net = zoo::hypernet20();
+        let net = model::network("hypernet20").unwrap();
         let params = random_params(&net, 0x777);
         let input = hypernet_input(3);
         let single = single_chip_run(&net, &params, &input, Precision::F16);
@@ -589,7 +590,7 @@ mod tests {
     fn border_traffic_matches_coordinator_accounting() {
         // The functional exchange and the analytic Fig-11 accounting must
         // agree exactly (same rule: halo-consuming tensors only).
-        let net = zoo::hypernet20();
+        let net = model::network("hypernet20").unwrap();
         let params = random_params(&net, 0x99);
         let input = hypernet_input(5);
         let mesh = MeshSim::new(2, 2, Precision::F32);
@@ -606,7 +607,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "divisible")]
     fn indivisible_mesh_rejected() {
-        let net = zoo::hypernet20();
+        let net = model::network("hypernet20").unwrap();
         let params = random_params(&net, 1);
         let input = hypernet_input(1);
         let mesh = MeshSim::new(3, 3, Precision::F32); // 32 % 3 != 0

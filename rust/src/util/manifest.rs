@@ -85,6 +85,11 @@ impl Manifest {
     }
 }
 
+/// Record kinds the AOT manifest format defines (`python/compile/aot.py`
+/// is the writer); anything else is a parse error, not silently-ignored
+/// data.
+pub const KNOWN_KINDS: [&str; 6] = ["artifact", "network", "step", "blob", "golden", "blobfile"];
+
 /// Parse manifest text into records. Blank lines and `#` comments skipped.
 pub fn parse(text: &str) -> Result<Vec<Record>> {
     let mut out = Vec::new();
@@ -98,6 +103,9 @@ pub fn parse(text: &str) -> Result<Vec<Record>> {
             .next()
             .with_context(|| format!("line {}: empty record", lineno + 1))?
             .to_string();
+        if !KNOWN_KINDS.contains(&kind.as_str()) {
+            bail!("line {}: unknown record kind `{kind}`", lineno + 1);
+        }
         let mut fields = HashMap::new();
         for part in parts {
             let (k, v) = part
@@ -161,6 +169,41 @@ blob step=s1b0c1 field=w off=0 len=2304
     fn rejects_malformed_tokens() {
         assert!(parse("artifact name").is_err());
         assert!(parse("artifact a=1 a=2").is_err());
+    }
+
+    #[test]
+    fn unknown_record_kind_is_rejected_with_line_number() {
+        let err = parse("artifact name=x\nwibble a=1").unwrap_err().to_string();
+        assert!(err.contains("unknown record kind `wibble`"), "{err}");
+        assert!(err.contains("line 2"), "{err}");
+        // All kinds the writer emits parse.
+        for kind in KNOWN_KINDS {
+            assert!(parse(&format!("{kind} a=1")).is_ok(), "{kind}");
+        }
+    }
+
+    #[test]
+    fn bad_numeric_fields_are_contextual_errors() {
+        let recs = parse("blob step=s field=w off=abc len=-4").unwrap();
+        let err = recs[0].get_usize("off").unwrap_err().to_string();
+        assert!(err.contains("`off` is not a usize"), "{err}");
+        // A negative value is not a usize either, but is a valid isize.
+        assert!(recs[0].get_usize("len").is_err());
+        assert_eq!(recs[0].get_isize("len").unwrap(), -4);
+        let err = recs[0].get_isize("off").unwrap_err().to_string();
+        assert!(err.contains("`off` is not an isize"), "{err}");
+        // get_bool goes through get_usize.
+        assert!(recs[0].get_bool("off").is_err());
+    }
+
+    #[test]
+    fn blob_with_bad_length_is_rejected() {
+        let dir = std::env::temp_dir().join("hyperdrive_manifest_badlen");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("blob.bin");
+        std::fs::write(&p, [0u8; 7]).unwrap();
+        let err = read_f32_blob(&p).unwrap_err().to_string();
+        assert!(err.contains("not a multiple of 4"), "{err}");
     }
 
     #[test]

@@ -4,7 +4,7 @@
 use std::sync::Arc;
 
 use hyperdrive::engine::{Engine, EngineError, NetworkParams, Precision, ServeOptions};
-use hyperdrive::network::zoo;
+use hyperdrive::model;
 use hyperdrive::util::SplitMix64;
 
 fn random_input(len: usize, seed: u64) -> Vec<f32> {
@@ -31,14 +31,14 @@ fn forced_backend_rejects_conflicting_knobs() {
     // A mesh request must not be silently ignored by a forced
     // functional backend (it would report 1x1-plan numbers).
     let err = Engine::builder()
-        .network(zoo::hypernet20())
+        .network(model::network("hypernet20").unwrap())
         .mesh(2, 2)
         .backend(BackendKind::Functional)
         .build()
         .unwrap_err();
     assert!(matches!(err, EngineError::Builder(_)), "{err}");
     let err = Engine::builder()
-        .network(zoo::hypernet20())
+        .network(model::network("hypernet20").unwrap())
         .artifacts("artifacts")
         .backend(BackendKind::Functional)
         .build()
@@ -51,7 +51,7 @@ fn oversubscribed_mesh_reports_fmm_overflow() {
     // ResNet-34 @ 2048×1024 needs ~50 chips; a 2×2 mesh cannot hold the
     // per-chip WCL slice and must fail with the structured error.
     let err = Engine::builder()
-        .network(zoo::resnet34(1024, 2048))
+        .network(model::network("resnet34@1024x2048").unwrap())
         .mesh(2, 2)
         .build()
         .unwrap_err();
@@ -72,7 +72,7 @@ fn oversubscribed_mesh_reports_fmm_overflow() {
 #[test]
 fn auto_mesh_plans_the_paper_configuration() {
     let engine = Engine::builder()
-        .network(zoo::resnet34(1024, 2048))
+        .network(model::network("resnet34@1024x2048").unwrap())
         .auto_mesh()
         .build()
         .unwrap();
@@ -86,7 +86,7 @@ fn auto_mesh_plans_the_paper_configuration() {
 fn functional_and_mesh_backends_match_bit_exactly() {
     // The acceptance check: same network, same parameters, FP16 on both
     // backends → identical logits, bit for bit.
-    let net = zoo::hypernet20();
+    let net = model::network("hypernet20").unwrap();
     let params = Arc::new(NetworkParams::seeded(&net, 16, 0xE2E));
     let functional = Engine::builder()
         .network(net.clone())
@@ -112,7 +112,7 @@ fn functional_and_mesh_backends_match_bit_exactly() {
 #[test]
 fn concurrent_serving_matches_sequential() {
     let engine = Engine::builder()
-        .network(zoo::hypernet20())
+        .network(model::network("hypernet20").unwrap())
         .seed(11)
         .build()
         .unwrap();
@@ -139,7 +139,7 @@ fn concurrent_serving_matches_sequential() {
 
 #[test]
 fn trace_hook_sees_every_layer() {
-    let engine = Engine::builder().network(zoo::hypernet20()).build().unwrap();
+    let engine = Engine::builder().network(model::network("hypernet20").unwrap()).build().unwrap();
     let input = random_input(engine.input_len(), 3);
     let mut seen: Vec<(usize, String, (usize, usize, usize))> = Vec::new();
     let out = engine
@@ -156,7 +156,7 @@ fn trace_hook_sees_every_layer() {
 
 #[test]
 fn mesh_trace_matches_functional_trace() {
-    let net = zoo::hypernet20();
+    let net = model::network("hypernet20").unwrap();
     let params = Arc::new(NetworkParams::seeded(&net, 16, 77));
     let functional = Engine::builder()
         .network(net.clone())
@@ -185,7 +185,7 @@ fn mesh_trace_matches_functional_trace() {
 
 #[test]
 fn wrong_input_length_is_a_clean_error() {
-    let engine = Engine::builder().network(zoo::hypernet20()).build().unwrap();
+    let engine = Engine::builder().network(model::network("hypernet20").unwrap()).build().unwrap();
     let err = engine.infer(&[0.0; 7]).unwrap_err();
     assert!(matches!(err, EngineError::Input(_)), "{err}");
     let err = engine
@@ -199,7 +199,7 @@ fn indivisible_mesh_is_a_clean_error() {
     // 32×32 FMs do not divide over 3×3 chips: build (analytic) succeeds,
     // inference reports Unsupported instead of panicking.
     let engine = Engine::builder()
-        .network(zoo::hypernet20())
+        .network(model::network("hypernet20").unwrap())
         .mesh(3, 3)
         .build()
         .unwrap();

@@ -1,0 +1,147 @@
+//! Integration tests of the typed model-description API: spec parsing,
+//! registry resolution, shape-inference validation, the engine builder's
+//! `.model(..)` entry point and cross-backend bit-exactness on a
+//! registry-resolved model.
+
+use hyperdrive::engine::{Engine, EngineError, Precision};
+use hyperdrive::model::{self, ModelError, ModelSpec, NetworkRegistry, SpecError};
+use hyperdrive::util::SplitMix64;
+
+fn random_input(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..len).map(|_| rng.next_sym()).collect()
+}
+
+#[test]
+fn spec_grammar_round_trips() {
+    let spec: ModelSpec = "resnet34@512x1024".parse().unwrap();
+    assert_eq!(
+        spec,
+        ModelSpec::Registry {
+            name: "resnet34".into(),
+            resolution: Some((512, 1024)),
+        }
+    );
+    assert_eq!(spec.to_string().parse::<ModelSpec>().unwrap(), spec);
+
+    assert!(matches!(
+        "".parse::<ModelSpec>().unwrap_err(),
+        SpecError::Empty
+    ));
+    assert!(matches!(
+        "resnet34@huge".parse::<ModelSpec>().unwrap_err(),
+        SpecError::BadResolution { .. }
+    ));
+}
+
+#[test]
+fn registry_lookup_failure_is_typed_and_lists_models() {
+    let err = model::resolve("not-a-network").unwrap_err();
+    match &err {
+        ModelError::UnknownModel { name, known } => {
+            assert_eq!(name, "not-a-network");
+            assert!(known.iter().any(|n| n == "hypernet20"), "{known:?}");
+        }
+        other => panic!("expected UnknownModel, got {other}"),
+    }
+}
+
+#[test]
+fn shape_inference_validates_resolutions() {
+    // A divisible resolution resolves, and the entry's inferred output
+    // shape matches the built network.
+    let reg = NetworkRegistry::builtin();
+    let m = reg.resolve_str("resnet34@512x1024").unwrap();
+    assert_eq!(
+        m.network.out_shape(),
+        reg.get("resnet34").unwrap().output_shape(512, 1024)
+    );
+    assert_eq!(m.network.out_shape(), (512, 16, 32));
+
+    // A non-divisible one is a typed error, not silent truncation.
+    match reg.resolve_str("resnet34@510x1024").unwrap_err() {
+        ModelError::Resolution(e) => {
+            assert_eq!((e.h, e.w), (510, 1024));
+            assert_ne!(510 % e.granularity, 0);
+        }
+        other => panic!("expected Resolution, got {other}"),
+    }
+}
+
+#[test]
+fn engine_builder_resolves_model_specs() {
+    let engine = Engine::builder().model("hypernet20").build().unwrap();
+    assert_eq!(engine.network().name, "HyperNet-20");
+    assert_eq!(engine.input_len(), 16 * 32 * 32);
+
+    let err = Engine::builder().model("resnet99").build().unwrap_err();
+    assert!(matches!(err, EngineError::Model(ModelError::UnknownModel { .. })), "{err}");
+
+    let err = Engine::builder().model("resnet34@@").build().unwrap_err();
+    assert!(matches!(err, EngineError::Model(ModelError::Spec(_))), "{err}");
+
+    let err = Engine::builder().model("resnet34@225x225").build().unwrap_err();
+    assert!(matches!(err, EngineError::Model(ModelError::Resolution(_))), "{err}");
+}
+
+#[test]
+fn model_and_network_conflict_is_a_builder_error() {
+    let net = model::network("hypernet20").unwrap();
+    let err = Engine::builder()
+        .model("hypernet20")
+        .network(net)
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, EngineError::Builder(_)), "{err}");
+}
+
+#[test]
+fn custom_registry_overrides_builtin() {
+    let mut reg = NetworkRegistry::builtin();
+    let mut entry = reg.get("resnet34").unwrap().clone();
+    entry.default_resolution = (64, 64);
+    reg.register(entry);
+    let engine = Engine::builder()
+        .registry(reg)
+        .model("resnet34")
+        .build()
+        .unwrap();
+    // 64×64 image → 16×16 on-chip input FM.
+    assert_eq!(engine.input_len(), 64 * 16 * 16);
+}
+
+#[test]
+fn functional_vs_mesh_bitexact_on_a_registry_model() {
+    // The same spec + seed resolves to identical networks and seeded
+    // parameters on both simulator backends → bit-exact logits.
+    let functional = Engine::builder()
+        .model("hypernet20")
+        .seed(0xB17)
+        .precision(Precision::F16)
+        .build()
+        .unwrap();
+    let mesh = Engine::builder()
+        .model("hypernet20")
+        .seed(0xB17)
+        .mesh(2, 2)
+        .precision(Precision::F16)
+        .build()
+        .unwrap();
+    let input = random_input(functional.input_len(), 99);
+    let a = functional.infer(&input).unwrap();
+    let b = mesh.infer(&input).unwrap();
+    assert_eq!(a, b, "registry-resolved model diverged across backends");
+}
+
+#[test]
+fn auto_mesh_composes_with_model_specs() {
+    // The paper's 10×5 mesh for ResNet-34 @ 2048×1024, reached purely
+    // through a spec string.
+    let engine = Engine::builder()
+        .model("resnet34@1024x2048")
+        .auto_mesh()
+        .build()
+        .unwrap();
+    let rep = engine.report();
+    assert_eq!((rep.plan.rows, rep.plan.cols), (5, 10));
+}
