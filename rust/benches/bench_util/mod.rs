@@ -4,9 +4,22 @@
 
 use std::time::Instant;
 
+/// Result of one timed benchmark run.
+#[allow(dead_code)] // not every bench consumes the full record
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    /// Mean seconds per iteration.
+    pub mean_s: f64,
+    /// Fastest iteration, seconds.
+    pub min_s: f64,
+    pub iters: usize,
+}
+
 /// Time `f` over `iters` iterations after `warmup` runs; prints
-/// mean/min per-iteration time and returns the mean seconds.
-pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> f64 {
+/// mean/min per-iteration time and returns the full statistics.
+#[allow(dead_code)] // each harness=false bench compiles its own copy
+pub fn bench_stats<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
     for _ in 0..warmup {
         f();
     }
@@ -20,5 +33,16 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> f
     let min = times.iter().cloned().fold(f64::MAX, f64::min);
     println!("bench {name:<40} mean {:>10.3} µs   min {:>10.3} µs   ({iters} iters)",
              mean * 1e6, min * 1e6);
-    mean
+    BenchStats {
+        name: name.to_string(),
+        mean_s: mean,
+        min_s: min,
+        iters,
+    }
+}
+
+/// [`bench_stats`], returning only the mean seconds (the original API).
+#[allow(dead_code)]
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, f: F) -> f64 {
+    bench_stats(name, warmup, iters, f).mean_s
 }

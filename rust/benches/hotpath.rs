@@ -1,70 +1,178 @@
 //! Hot-path micro-benchmarks for the perf pass (EXPERIMENTS.md §Perf):
-//! the functional simulator's conv inner loop, FP16 rounding, weight
-//! packing/unpacking, the mesh exchange, the engine serving layer, and
-//! the memory planner.
+//! the shared Tile-PU datapath kernel (single-thread and fanned out
+//! over the thread knob), FP16 rounding, weight packing/unpacking, the
+//! mesh exchange, the engine serving layer, and the memory planner.
+//!
+//! Besides the printed table, the run emits a machine-readable
+//! `BENCH_hotpath.json` (per-entry wall time, MACs/s where the entry is
+//! a conv workload, and the thread count) so the perf trajectory is
+//! tracked across PRs instead of only printed. `HOTPATH_TINY=1` runs a
+//! reduced spec (CI smoke: the JSON contract, not the numbers).
 
 mod bench_util;
 
+use bench_util::BenchStats;
 use hyperdrive::bwn::pack_weights;
 use hyperdrive::coordinator::memory;
 use hyperdrive::engine::{Engine, ServeOptions};
 use hyperdrive::model;
 use hyperdrive::network::ConvLayer;
+use hyperdrive::simulator::datapath::resolve_threads;
 use hyperdrive::simulator::mesh::{MeshSim, StepParams};
 use hyperdrive::simulator::{self, FeatureMap, Precision};
 use hyperdrive::util::f16::round_f16;
 use hyperdrive::util::SplitMix64;
 
+/// One JSON record: timing plus the conv rate where it applies.
+struct Entry {
+    stats: BenchStats,
+    macs_per_s: Option<f64>,
+}
+
+fn record(entries: &mut Vec<Entry>, stats: BenchStats, macs_per_iter: Option<f64>) {
+    let macs_per_s = macs_per_iter.map(|m| m / stats.mean_s);
+    entries.push(Entry { stats, macs_per_s });
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn write_json(path: &str, threads: usize, tiny: bool, entries: &[Entry]) {
+    let mut body = String::new();
+    body.push_str(&format!(
+        "{{\n  \"bench\": \"hotpath\",\n  \"threads\": {threads},\n  \"tiny\": {tiny},\n  \"entries\": [\n"
+    ));
+    for (i, e) in entries.iter().enumerate() {
+        let macs = match e.macs_per_s {
+            Some(r) => format!("{r:.3e}"),
+            None => "null".to_string(),
+        };
+        body.push_str(&format!(
+            "    {{\"name\": \"{}\", \"mean_s\": {:.9}, \"min_s\": {:.9}, \"iters\": {}, \"macs_per_s\": {}}}{}\n",
+            json_escape(&e.stats.name),
+            e.stats.mean_s,
+            e.stats.min_s,
+            e.stats.iters,
+            macs,
+            if i + 1 < entries.len() { "," } else { "" }
+        ));
+    }
+    body.push_str("  ]\n}\n");
+    match std::fs::write(path, &body) {
+        Ok(()) => println!("wrote {path} ({} entries)", entries.len()),
+        Err(e) => {
+            eprintln!("error: could not write {path}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
 fn main() {
+    let tiny = std::env::var_os("HOTPATH_TINY").is_some();
+    let threads = resolve_threads(0);
+    // Tiny mode: same coverage, small iteration counts and a small conv.
+    let it = |n: usize| if tiny { 1.max(n / 10) } else { n };
     let mut rng = SplitMix64::new(1);
+    let mut entries: Vec<Entry> = Vec::new();
 
     // FP16 rounding primitive (inner-inner loop of the F16 datapath).
     let xs: Vec<f32> = (0..4096).map(|_| rng.next_gauss()).collect();
-    bench_util::bench("round_f16 ×4096", 10, 2000, || {
+    let s = bench_util::bench_stats("round_f16 ×4096", if tiny { 1 } else { 10 }, it(2000), || {
         let mut acc = 0.0f32;
         for &x in &xs {
             acc += round_f16(x);
         }
         std::hint::black_box(acc);
     });
+    record(&mut entries, s, None);
 
-    // Functional chip simulator, one mid-size layer, both precisions.
-    let l = ConvLayer::new("hot", 64, 64, 28, 28, 3, 1);
-    let w: Vec<f32> = (0..64 * 64 * 9).map(|_| rng.next_sym()).collect();
+    // The shared datapath kernel, one mid-size layer, both precisions,
+    // then the thread fan-out at the resolved knob.
+    let (ch, hw) = if tiny { (16usize, 14usize) } else { (64, 28) };
+    let l = ConvLayer::new("hot", ch, ch, hw, hw, 3, 1);
+    let w: Vec<f32> = (0..ch * ch * 9).map(|_| rng.next_sym()).collect();
     let stream = pack_weights(&l, &w, 16);
-    let gamma = vec![0.01f32; 64];
-    let beta = vec![0.0f32; 64];
-    let input = FeatureMap::from_vec(64, 28, 28, (0..64 * 784).map(|_| rng.next_sym()).collect());
+    let gamma = vec![0.01f32; ch];
+    let beta = vec![0.0f32; ch];
+    let input = FeatureMap::from_vec(
+        ch,
+        hw,
+        hw,
+        (0..ch * hw * hw).map(|_| rng.next_sym()).collect(),
+    );
     let params = simulator::chip::LayerParams {
         layer: &l,
         stream: &stream,
         gamma: &gamma,
         beta: &beta,
     };
+    let layer_macs = l.macs() as f64;
     for (name, prec) in [("F32", Precision::F32), ("F16", Precision::F16)] {
-        bench_util::bench(
-            &format!("chip sim conv 64×64×28² 3×3 ({name})"),
-            2,
-            20,
+        let s = bench_util::bench_stats(
+            &format!("chip sim conv {ch}×{ch}×{hw}² 3×3 ({name}, 1 thread)"),
+            if tiny { 0 } else { 2 },
+            it(20),
             || {
                 let (out, _) = simulator::run_layer(&params, &input, None, prec, (7, 7));
                 std::hint::black_box(out.data[0]);
             },
         );
+        record(&mut entries, s, Some(layer_macs));
     }
+    let s = bench_util::bench_stats(
+        &format!("chip sim conv {ch}×{ch}×{hw}² 3×3 (F16, {threads} threads)"),
+        if tiny { 0 } else { 2 },
+        it(20),
+        || {
+            let (out, _) = simulator::run_layer_threads(
+                &params,
+                &input,
+                None,
+                Precision::F16,
+                (7, 7),
+                threads,
+            );
+            std::hint::black_box(out.data[0]);
+        },
+    );
+    record(&mut entries, s, Some(layer_macs));
 
     // Weight packing + unpacking (the stream on/off-pin path).
-    bench_util::bench("pack_weights 64×64×3×3", 5, 200, || {
-        let s = pack_weights(&l, &w, 16);
-        std::hint::black_box(s.words.len());
-    });
-    bench_util::bench("unpack_dense 64×64×3×3", 5, 200, || {
-        let d = stream.unpack_dense();
-        std::hint::black_box(d.len());
-    });
+    let s = bench_util::bench_stats(
+        &format!("pack_weights {ch}×{ch}×3×3"),
+        if tiny { 0 } else { 5 },
+        it(200),
+        || {
+            let s = pack_weights(&l, &w, 16);
+            std::hint::black_box(s.words.len());
+        },
+    );
+    record(&mut entries, s, None);
+    let s = bench_util::bench_stats(
+        &format!("unpack_dense {ch}×{ch}×3×3"),
+        if tiny { 0 } else { 5 },
+        it(200),
+        || {
+            let d = stream.unpack_dense();
+            std::hint::black_box(d.len());
+        },
+    );
+    record(&mut entries, s, None);
 
-    // Mesh run (whole HyperNet-20 on 2×2, FP16) — exchange included.
+    // Mesh run (whole HyperNet-20 on 2×2, FP16) — exchange included —
+    // single-thread vs the chip fan-out.
     let net = model::network("hypernet20").unwrap();
+    let net_macs = (net.conv_ops() / 2) as f64;
     let sparams: Vec<StepParams> = net
         .steps
         .iter()
@@ -80,11 +188,23 @@ fn main() {
         })
         .collect();
     let inp = FeatureMap::from_vec(16, 32, 32, (0..16 * 1024).map(|_| rng.next_sym()).collect());
-    bench_util::bench("mesh 2×2 HyperNet-20 (F16, full run)", 1, 5, || {
-        let sim = MeshSim::new(2, 2, Precision::F16);
-        let (out, _) = sim.run_network(&net, &sparams, &inp);
-        std::hint::black_box(out.data[0]);
-    });
+    for t in [1usize, threads] {
+        let s = bench_util::bench_stats(
+            &format!("mesh 2×2 HyperNet-20 (F16, full run, {t} threads)"),
+            if tiny { 0 } else { 1 },
+            it(10).max(2),
+            || {
+                let mut sim = MeshSim::new(2, 2, Precision::F16);
+                sim.threads = t;
+                let (out, _) = sim.run_network(&net, &sparams, &inp).unwrap();
+                std::hint::black_box(out.data[0]);
+            },
+        );
+        record(&mut entries, s, Some(net_macs));
+        if threads == 1 {
+            break; // avoid duplicating the identical entry
+        }
+    }
 
     // Engine serving layer: bounded queue + worker pool over the
     // functional backend (1 vs 4 workers shows the concurrency win).
@@ -92,28 +212,38 @@ fn main() {
         .network(model::network("hypernet20").unwrap())
         .seed(7)
         .precision(Precision::F16)
+        .threads(threads)
         .build()
         .unwrap();
     let batch: Vec<Vec<f32>> = (0..4)
         .map(|_| (0..engine.input_len()).map(|_| rng.next_sym()).collect())
         .collect();
     for workers in [1usize, 4] {
-        bench_util::bench(
+        let s = bench_util::bench_stats(
             &format!("engine serve HyperNet-20 ×4 ({workers} workers)"),
-            1,
-            3,
+            if tiny { 0 } else { 1 },
+            it(10).max(2),
             || {
                 let opts = ServeOptions { workers, ..ServeOptions::default() };
                 let (outs, _) = engine.serve(&batch, &opts).unwrap();
                 std::hint::black_box(outs.len());
             },
         );
+        record(&mut entries, s, Some(4.0 * net_macs));
     }
 
     // Memory planner on the deepest network.
     let deep = model::network("resnet152@224x224").unwrap();
-    bench_util::bench("memory::plan_tight(ResNet-152)", 2, 50, || {
-        let p = memory::plan_tight(&deep).unwrap();
-        std::hint::black_box(p.peak_words);
-    });
+    let s = bench_util::bench_stats(
+        "memory::plan_tight(ResNet-152)",
+        if tiny { 0 } else { 2 },
+        it(50),
+        || {
+            let p = memory::plan_tight(&deep).unwrap();
+            std::hint::black_box(p.peak_words);
+        },
+    );
+    record(&mut entries, s, None);
+
+    write_json("BENCH_hotpath.json", threads, tiny, &entries);
 }

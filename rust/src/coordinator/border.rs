@@ -60,7 +60,7 @@ pub fn border_memory_srams(bm_bits: u64, m: usize, fm_bits: usize) -> u64 {
 /// Exchange-protocol state per chip border (§V-B): a border row/column
 /// sent sets `awaiting_opposite` until the symmetric pixel arrives; a
 /// corner additionally sets forwarding flags on the vertical neighbour.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct ExchangeFlags {
     /// Border pixels sent, waiting for the opposite neighbour's pixel.
     pub awaiting: u64,

@@ -1,9 +1,12 @@
 //! Single-chip functional backend: walks the network step list through
-//! `simulator::chip::run_layer` — Algorithm 1, bit-faithful, optionally
-//! with the silicon's FP16 datapath rounding.
+//! `simulator::chip::run_layer_threads` — Algorithm 1 via the shared
+//! Tile-PU datapath kernel, bit-faithful, optionally with the silicon's
+//! FP16 datapath rounding, fanned out over output channels on the
+//! engine's thread knob. 2× upsample steps (YOLOv3's FPN laterals) are
+//! free nearest-neighbour replication, as on the chip's DDUs.
 
 use crate::network::{Network, TensorRef};
-use crate::simulator::chip::{run_layer, LayerParams};
+use crate::simulator::chip::{run_layer_threads, LayerParams};
 use crate::simulator::{FeatureMap, Precision};
 
 use super::backend::{Backend, BackendKind, LayerTrace, LazyParams};
@@ -17,6 +20,8 @@ pub struct FunctionalBackend {
     tiles: (usize, usize),
     /// Output-channel parallelism the weight streams are packed for.
     stream_c: usize,
+    /// Datapath worker threads (≥ 1; bit-identical at any value).
+    threads: usize,
 }
 
 impl FunctionalBackend {
@@ -26,6 +31,7 @@ impl FunctionalBackend {
         precision: Precision,
         tiles: (usize, usize),
         stream_c: usize,
+        threads: usize,
     ) -> FunctionalBackend {
         FunctionalBackend {
             net,
@@ -33,6 +39,7 @@ impl FunctionalBackend {
             precision,
             tiles,
             stream_c,
+            threads,
         }
     }
 }
@@ -75,12 +82,6 @@ impl Backend for FunctionalBackend {
         }
 
         for (i, s) in net.steps.iter().enumerate() {
-            if s.upsample2x {
-                return Err(EngineError::Unsupported(format!(
-                    "step {i} (`{}`): the functional backend does not model 2x upsampling",
-                    s.layer.name
-                )));
-            }
             let src = resolve(&input_fm, &fms, s.src);
             let concatenated;
             let src = if let Some(extra) = s.concat_extra {
@@ -97,7 +98,14 @@ impl Backend for FunctionalBackend {
                 gamma: &p.gamma,
                 beta: &p.beta,
             };
-            let (out, _counts) = run_layer(&lp, src, byp, self.precision, self.tiles);
+            let (out, _counts) =
+                run_layer_threads(&lp, src, byp, self.precision, self.tiles, self.threads);
+            // FPN lateral upsampling: free DDU pixel replication, stored 4×.
+            let out = if s.upsample2x {
+                out.upsample2x_nearest()
+            } else {
+                out
+            };
             hook(LayerTrace {
                 step: i,
                 layer: &s.layer.name,

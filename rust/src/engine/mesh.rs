@@ -20,11 +20,15 @@ pub struct MeshBackend {
     precision: Precision,
     fm_bits: usize,
     stream_c: usize,
+    /// Datapath worker threads for the per-step chip fan-out (≥ 1;
+    /// bit-identical results and statistics at any value).
+    threads: usize,
     /// Traffic statistics of the most recent inference.
     last_stats: Mutex<Option<MeshStats>>,
 }
 
 impl MeshBackend {
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn new(
         net: Network,
         params: LazyParams,
@@ -33,6 +37,7 @@ impl MeshBackend {
         precision: Precision,
         fm_bits: usize,
         stream_c: usize,
+        threads: usize,
     ) -> MeshBackend {
         MeshBackend {
             net,
@@ -42,6 +47,7 @@ impl MeshBackend {
             precision,
             fm_bits,
             stream_c,
+            threads,
             last_stats: Mutex::new(None),
         }
     }
@@ -73,14 +79,17 @@ impl MeshBackend {
         };
         check("input FM", self.net.in_h, self.net.in_w)?;
         for (i, s) in self.net.steps.iter().enumerate() {
-            if s.upsample2x {
-                return Err(EngineError::Unsupported(format!(
-                    "step {i} (`{}`): the mesh backend does not model 2x upsampling",
-                    s.layer.name
-                )));
-            }
             let (_, h, w) = self.net.shape_of(TensorRef::Step(i));
             check(&format!("step {i} (`{}`) output", s.layer.name), h, w)?;
+            // Upsample steps compute on the pre-upsample grid first; it
+            // must divide too (shape_of only reports the doubled dims).
+            if s.upsample2x {
+                check(
+                    &format!("step {i} (`{}`) pre-upsample output", s.layer.name),
+                    s.layer.h_out(),
+                    s.layer.w_out(),
+                )?;
+            }
         }
         Ok(())
     }
@@ -134,6 +143,7 @@ impl MeshBackend {
         let input_fm = FeatureMap::from_vec(net.in_ch, net.in_h, net.in_w, input.to_vec());
         let mut sim = MeshSim::new(self.rows, self.cols, self.precision);
         sim.fm_bits = self.fm_bits;
+        sim.threads = self.threads;
         let (out, stats) = match hook {
             Some(hook) => {
                 let mut adapter = |step: usize, fm: &FeatureMap| {
@@ -144,9 +154,9 @@ impl MeshBackend {
                         output: &fm.data,
                     });
                 };
-                sim.run_network_traced(net, &params.steps, &input_fm, &mut adapter)
+                sim.run_network_traced(net, &params.steps, &input_fm, &mut adapter)?
             }
-            None => sim.run_network(net, &params.steps, &input_fm),
+            None => sim.run_network(net, &params.steps, &input_fm)?,
         };
         *self.last_stats.lock().unwrap() = Some(stats);
         Ok(out.data)

@@ -60,7 +60,7 @@ use crate::energy::ablation::AblationRow;
 use crate::energy::model::energy_per_image;
 use crate::model::{ModelError, ModelSpec, NetworkRegistry};
 use crate::network::Network;
-use crate::simulator::mesh::MeshStats;
+use crate::simulator::mesh::{MeshError, MeshStats};
 use crate::ChipConfig;
 
 pub use backend::{Backend, BackendKind, LayerTrace, NetworkParams};
@@ -129,6 +129,12 @@ impl From<ModelError> for EngineError {
     }
 }
 
+impl From<MeshError> for EngineError {
+    fn from(e: MeshError) -> Self {
+        EngineError::Backend(format!("mesh: {e}"))
+    }
+}
+
 enum BackendImpl {
     Functional(FunctionalBackend),
     Mesh(MeshBackend),
@@ -164,6 +170,7 @@ pub struct EngineBuilder {
     params: Option<Arc<NetworkParams>>,
     seed: u64,
     artifacts: Option<PathBuf>,
+    threads: Option<usize>,
 }
 
 impl Default for EngineBuilder {
@@ -183,6 +190,7 @@ impl Default for EngineBuilder {
             params: None,
             seed: 0x42,
             artifacts: None,
+            threads: None,
         }
     }
 }
@@ -286,6 +294,19 @@ impl EngineBuilder {
     /// AOT artifact directory — selects the PJRT backend.
     pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
         self.artifacts = Some(dir.into());
+        self
+    }
+
+    /// Worker threads for the simulator backends' shared datapath
+    /// kernel: the single-chip simulator fans each layer out over
+    /// output-channel ranges, the mesh computes its chips concurrently
+    /// per step. Defaults to `std::thread::available_parallelism()`.
+    /// Outputs and traffic counters are bit-identical at any value
+    /// (each pixel's FP16 rounding sequence runs on one worker); must
+    /// be ≥ 1. Ignored by the PJRT backend (use
+    /// [`ServeOptions::workers`] for serving concurrency).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n);
         self
     }
 
@@ -445,6 +466,17 @@ impl EngineBuilder {
                 self.chip.c
             )));
         }
+        let threads = match self.threads {
+            Some(0) => {
+                return Err(EngineError::Builder(
+                    ".threads(0) is invalid — give a positive count (or omit \
+                     for available_parallelism)"
+                        .into(),
+                ))
+            }
+            Some(n) => n,
+            None => crate::simulator::datapath::resolve_threads(0),
+        };
         let plan = match (kind, self.mesh) {
             (BackendKind::Mesh, Some((rows, cols))) => {
                 if rows == 0 || cols == 0 {
@@ -486,6 +518,7 @@ impl EngineBuilder {
                     b.precision,
                     (b.chip.m, b.chip.n),
                     b.chip.c,
+                    threads,
                 )),
                 BackendKind::Mesh => BackendImpl::Mesh(MeshBackend::new(
                     net.clone(),
@@ -495,6 +528,7 @@ impl EngineBuilder {
                     b.precision,
                     b.chip.fm_bits,
                     b.chip.c,
+                    threads,
                 )),
                 BackendKind::Pjrt => unreachable!("handled in build()"),
             })

@@ -36,7 +36,7 @@ fn usage() -> &'static str {
        report <table1..table6|fig8..fig11|border|ablations|all>\n\
        list-models\n\
        run-e2e [--artifacts DIR] [--batch N] [--workers N]\n\
-       simulate --model SPEC [--mesh RxC] [--vdd V] [--vbb V]\n\
+       simulate --model SPEC [--mesh RxC] [--vdd V] [--vbb V] [--threads N]\n\
        mesh --model SPEC\n\
        help\n\
      model specs: NAME[@HxW|@N] (see list-models) or manifest:DIR[#NET],\n\
@@ -259,6 +259,15 @@ fn cmd_simulate(opts: &HashMap<String, String>, cfg: &ChipConfig) -> Result<Stri
         .depthwise(DepthwisePolicy::FullRate)
         .vdd(vdd)
         .vbb(vbb);
+    // Datapath worker threads; absent → available_parallelism.
+    if let Some(t) = opts.get("threads") {
+        let n: usize = t
+            .parse()
+            .ok()
+            .filter(|&n| n > 0)
+            .ok_or_else(|| OptError::BadValue("threads".into(), t.clone(), "a positive integer"))?;
+        builder = builder.threads(n);
+    }
     builder = match opts.get("mesh") {
         Some(mesh) => {
             let (r, c) = mesh.split_once('x').ok_or_else(|| {
@@ -445,6 +454,23 @@ mod tests {
             assert!(out.contains(name), "missing {name} in:\n{out}");
         }
         assert!(out.contains("Mbit"), "{out}");
+    }
+
+    #[test]
+    fn threads_option_is_validated() {
+        let cfg = ChipConfig::default();
+        let opts = parse_opts(&args(&["--net", "resnet34", "--threads", "2"])).unwrap();
+        let out = cmd_simulate(&opts, &cfg).unwrap();
+        assert!(out.contains("ResNet-34"), "{out}");
+        for bad in ["0", "-1", "two"] {
+            let opts =
+                parse_opts(&args(&["--net", "resnet34", "--threads", bad])).unwrap();
+            let err = cmd_simulate(&opts, &cfg).unwrap_err();
+            assert!(
+                matches!(err, CliError::Opt(OptError::BadValue(_, _, _))),
+                "--threads {bad}: {err}"
+            );
+        }
     }
 
     #[test]

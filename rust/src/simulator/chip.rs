@@ -1,69 +1,22 @@
 //! Single-chip functional simulator: Algorithm 1, bit-faithful.
 //!
-//! Executes one layer exactly in the chip's order — filter-tap outer,
-//! input-channel inner, the binary weight applied as the sign input of
-//! the accumulator (line 17), then the stall-free scale → bypass → bias →
-//! ReLU post sequence — optionally rounding every intermediate to FP16
-//! like the silicon datapath. Counts all memory traffic for the energy
-//! breakdown (Fig 10).
+//! Executes one layer exactly in the chip's order by driving the shared
+//! Tile-PU datapath kernel ([`super::datapath::run_tile`] — the same
+//! code the mesh simulator runs per chip) over the full feature map,
+//! optionally rounding every intermediate to FP16 like the silicon.
+//! Counts all memory traffic for the energy breakdown (Fig 10).
+//! [`run_layer_threads`] fans the kernel out over output-channel ranges
+//! on scoped threads; results and counters are bit-identical at any
+//! thread count because each output pixel's rounding sequence lives
+//! entirely inside one kernel invocation.
 
 use crate::bwn::WeightStream;
 use crate::network::ConvLayer;
-use crate::util::f16::round_f16;
 
+use super::datapath::{resolve_threads, run_tile, weight_traffic, TileGeom};
 use super::fm::FeatureMap;
 
-/// Datapath precision of the simulated Tile-PUs.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub enum Precision {
-    /// Bit-exact FP16 (round every accumulate) — the taped-out chip.
-    #[default]
-    F16,
-    /// f32 (matches the PJRT CPU artifacts; used for cross-validation).
-    F32,
-}
-
-#[inline]
-fn rnd(p: Precision, x: f32) -> f32 {
-    match p {
-        Precision::F16 => round_f16(x),
-        Precision::F32 => x,
-    }
-}
-
-/// Memory/IO traffic of one simulated layer (word granularity).
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub struct AccessCounts {
-    /// FMM word reads (input FM fetches incl. neighbour-bank reads).
-    pub fmm_reads: u64,
-    /// FMM word writes (output pixels; bypass read-modify adds a read).
-    pub fmm_writes: u64,
-    /// Weight words fetched from the off-chip stream.
-    pub stream_words: u64,
-    /// Weight words re-read from the weight buffer.
-    pub wbuf_reads: u64,
-    /// Reads that crossed a Tile-PU boundary (neighbour bank access).
-    pub neighbor_reads: u64,
-    /// Post-phase multiplies (bnorm) on the shared per-tile multiplier.
-    pub post_mults: u64,
-    /// Post-phase adds (bias + bypass).
-    pub post_adds: u64,
-    /// FP16 accumulates in the Tile-PU adders.
-    pub accumulates: u64,
-}
-
-impl AccessCounts {
-    pub fn add(&mut self, o: &AccessCounts) {
-        self.fmm_reads += o.fmm_reads;
-        self.fmm_writes += o.fmm_writes;
-        self.stream_words += o.stream_words;
-        self.wbuf_reads += o.wbuf_reads;
-        self.neighbor_reads += o.neighbor_reads;
-        self.post_mults += o.post_mults;
-        self.post_adds += o.post_adds;
-        self.accumulates += o.accumulates;
-    }
-}
+pub use super::datapath::{AccessCounts, Precision};
 
 /// Parameters of one layer execution.
 pub struct LayerParams<'a> {
@@ -88,6 +41,30 @@ pub fn run_layer(
     prec: Precision,
     tiles_mn: (usize, usize),
 ) -> (FeatureMap, AccessCounts) {
+    run_layer_threads(p, input, bypass, prec, tiles_mn, 1)
+}
+
+/// [`run_layer`] fanned out over `threads` scoped workers, each running
+/// the shared datapath kernel over a contiguous output-channel range
+/// (channels are independent in Algorithm 1 — the chip computes C of
+/// them in parallel Tile-PU lanes for the same reason). `threads == 0`
+/// means one worker per available core, like
+/// [`super::mesh::MeshSim::threads`] (see
+/// [`super::datapath::resolve_threads`]).
+///
+/// Outputs and [`AccessCounts`] are bit-identical for every `threads`
+/// value: each output pixel's FP16 rounding sequence runs entirely
+/// inside one worker, the workers write disjoint channel planes, and
+/// the per-worker counters are exact partitions summed in channel
+/// order.
+pub fn run_layer_threads(
+    p: &LayerParams,
+    input: &FeatureMap,
+    bypass: Option<&FeatureMap>,
+    prec: Precision,
+    tiles_mn: (usize, usize),
+    threads: usize,
+) -> (FeatureMap, AccessCounts) {
     let l = p.layer;
     assert_eq!((input.c, input.h, input.w), (l.n_in, l.h, l.w));
     assert_eq!(l.has_bypass, bypass.is_some());
@@ -95,112 +72,85 @@ pub fn run_layer(
     assert_eq!(p.beta.len(), l.n_out);
 
     let (ho, wo) = (l.h_out(), l.w_out());
+    let (m, n) = tiles_mn;
+    let geom = TileGeom {
+        oy0: 0,
+        oy1: ho,
+        ox0: 0,
+        ox1: wo,
+        iy0: 0,
+        ix0: 0,
+        tile_h: ho.div_ceil(m).max(1),
+        tile_w: wo.div_ceil(n).max(1),
+        in_tile_h: l.h.div_ceil(m).max(1),
+        in_tile_w: l.w.div_ceil(n).max(1),
+    };
     let mut out = FeatureMap::zeros(l.n_out, ho, wo);
     let mut acc = AccessCounts::default();
-
-    let (m, n) = tiles_mn;
-    let tile_h = ho.div_ceil(m).max(1);
-    let tile_w = wo.div_ceil(n).max(1);
-    let in_tile_h = l.h.div_ceil(m).max(1);
-    let in_tile_w = l.w.div_ceil(n).max(1);
-
-    let half = (l.k / 2) as isize;
-    let group_size_out = l.n_out / l.groups;
-    let n_in_eff = l.n_in / l.groups;
-    let taps = l.k * l.k;
-    let c_par = p.stream.c;
-
-    // Perf (§Perf log): the naive loop paid a div/mod-heavy
-    // `stream.weight()` call plus four divisions of tile bookkeeping per
-    // MAC. Weights are hoisted per output channel into a table of f32
-    // *sign masks* (a −1 weight is an XOR of the sign bit — the literal
-    // hardware meaning of "the binary weight is applied as the sign
-    // input of the FP16 adder"), counters are bumped per tap instead of
-    // per MAC, and fully-padded taps (DDU zeros) skip the accumulation
-    // entirely (v ± 0 is exact in FP16 and f32).
-    let mut wmask = vec![0u32; taps * n_in_eff];
-    let mut local = AccessCounts::default();
-    for co in 0..l.n_out {
-        let g = co / group_size_out;
-        let cin_base = g * n_in_eff;
-        for tap in 0..taps {
-            for ci in 0..n_in_eff {
-                wmask[tap * n_in_eff + ci] = if p.stream.weight(co, ci, tap) > 0.0 {
-                    0
-                } else {
-                    0x8000_0000
-                };
-            }
-        }
-        for oy in 0..ho {
-            let ty = oy / tile_h;
-            for ox in 0..wo {
-                let tx = ox / tile_w;
-                let mut v = 0.0f32;
-                // Algorithm 1 lines 7–19: tap outer, input channel inner.
-                for tap in 0..taps {
-                    let dy = (tap / l.k) as isize - half;
-                    let dx = (tap % l.k) as isize - half;
-                    let iy = (oy * l.stride) as isize + dy;
-                    let ix = (ox * l.stride) as isize + dx;
-                    local.accumulates += n_in_eff as u64;
-                    local.fmm_reads += n_in_eff as u64;
-                    if iy < 0 || ix < 0 || iy >= l.h as isize || ix >= l.w as isize {
-                        // Zero padding: the DDU injects zeros; v is
-                        // unchanged (v ± 0 == v bit-exactly).
-                        continue;
-                    }
-                    let (iy, ix) = (iy as usize, ix as usize);
-                    if (iy / in_tile_h, ix / in_tile_w) != (ty, tx) {
-                        local.neighbor_reads += n_in_eff as u64;
-                    }
-                    let row = &wmask[tap * n_in_eff..tap * n_in_eff + n_in_eff];
-                    let base = ((cin_base) * l.h + iy) * l.w + ix;
-                    let stride_c = l.h * l.w;
-                    // Line 17: sign-select accumulate (sign-bit XOR).
-                    match prec {
-                        Precision::F32 => {
-                            for (ci, &mask) in row.iter().enumerate() {
-                                let x = input.data[base + ci * stride_c];
-                                v += f32::from_bits(x.to_bits() ^ mask);
-                            }
-                        }
-                        Precision::F16 => {
-                            for (ci, &mask) in row.iter().enumerate() {
-                                let x = input.data[base + ci * stride_c];
-                                v = round_f16(v + f32::from_bits(x.to_bits() ^ mask));
-                            }
-                        }
-                    }
-                }
-                // §IV-B order: scale → bypass → bias → ReLU.
-                if l.bnorm {
-                    v = rnd(prec, v * p.gamma[co]);
-                    acc.post_mults += 1;
-                }
-                if let Some(bp) = bypass {
-                    v = rnd(prec, v + bp.get(co, oy, ox));
-                    acc.fmm_reads += 1;
-                    acc.post_adds += 1;
-                }
-                v = rnd(prec, v + p.beta[co]);
-                acc.post_adds += 1;
-                if l.relu && v < 0.0 {
-                    v = 0.0;
-                }
-                out.set(co, oy, ox, v);
-                acc.fmm_writes += 1;
-            }
+    let plane = ho * wo;
+    let workers = resolve_threads(threads).min(l.n_out).max(1);
+    if workers <= 1 {
+        let data = &mut out.data;
+        let mut write =
+            |co: usize, oy: usize, ox: usize, v: f32| data[(co * ho + oy) * wo + ox] = v;
+        acc.add(&run_tile(
+            l,
+            p.stream,
+            p.gamma,
+            p.beta,
+            (0, l.n_out),
+            input,
+            bypass,
+            prec,
+            &geom,
+            &mut write,
+        ));
+    } else {
+        // Channels per worker; `chunks_mut` then yields exactly the
+        // per-worker channel planes (the last chunk may be shorter).
+        let per = l.n_out.div_ceil(workers);
+        let counts = std::thread::scope(|s| {
+            let handles: Vec<_> = out
+                .data
+                .chunks_mut(per * plane)
+                .enumerate()
+                .map(|(i, chunk)| {
+                    s.spawn(move || {
+                        let co0 = i * per;
+                        let co1 = co0 + chunk.len() / plane;
+                        let mut write = |co: usize, oy: usize, ox: usize, v: f32| {
+                            chunk[((co - co0) * ho + oy) * wo + ox] = v;
+                        };
+                        run_tile(
+                            l,
+                            p.stream,
+                            p.gamma,
+                            p.beta,
+                            (co0, co1),
+                            input,
+                            bypass,
+                            prec,
+                            &geom,
+                            &mut write,
+                        )
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("datapath worker panicked"))
+                .collect::<Vec<_>>()
+        });
+        // Deterministic reduction in channel-chunk order.
+        for c in &counts {
+            acc.add(c);
         }
     }
-
-    acc.add(&local);
     // Weight traffic: every stream word enters once, then is re-read per
     // remaining pixel of the Tile-PU tile (Tbl I schedule).
-    let tile_pixels = (tile_h * tile_w) as u64;
-    let cout_tiles = l.n_out.div_ceil(c_par) as u64;
-    acc.stream_words = cout_tiles * taps as u64 * n_in_eff as u64;
-    acc.wbuf_reads = acc.stream_words * (tile_pixels.max(1) - 1);
+    let (sw, wb) = weight_traffic(l, p.stream.c, (geom.tile_h * geom.tile_w) as u64);
+    acc.stream_words += sw;
+    acc.wbuf_reads += wb;
     (out, acc)
 }
 
@@ -398,6 +348,36 @@ mod tests {
         // 7×7 tile grid on 14×14: each tile is 2×2; borders everywhere.
         assert!(acc3.neighbor_reads > 0);
         assert!(acc3.neighbor_reads < acc3.fmm_reads);
+    }
+
+    #[test]
+    fn threaded_layer_is_bit_identical_with_equal_counts() {
+        // Thread counts that divide n_out, don't divide it, and exceed
+        // it must all reproduce the single-thread bits and counters.
+        let mut rng = SplitMix64::new(0x7ead);
+        let l = ConvLayer::new("p", 8, 20, 10, 10, 3, 1).with_bypass(true);
+        let (w, gamma, beta) = make_params(&l, &mut rng);
+        let input =
+            FeatureMap::from_vec(8, 10, 10, (0..800).map(|_| rng.next_sym()).collect());
+        let byp =
+            FeatureMap::from_vec(20, 10, 10, (0..2000).map(|_| rng.next_sym()).collect());
+        let stream = pack_weights(&l, &w, 16);
+        let p = LayerParams {
+            layer: &l,
+            stream: &stream,
+            gamma: &gamma,
+            beta: &beta,
+        };
+        for prec in [Precision::F16, Precision::F32] {
+            let (want, want_acc) =
+                run_layer_threads(&p, &input, Some(&byp), prec, (7, 7), 1);
+            for threads in [2usize, 3, 4, 7, 64] {
+                let (got, acc) =
+                    run_layer_threads(&p, &input, Some(&byp), prec, (7, 7), threads);
+                assert_eq!(got.data, want.data, "threads={threads} {prec:?}");
+                assert_eq!(acc, want_acc, "threads={threads} {prec:?}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,398 @@
+//! The one Tile-PU datapath kernel (Algorithm 1).
+//!
+//! Hyperdrive's central claim is that the *same* Tile-PU datapath scales
+//! from a single chip to an m×n systolic mesh (§V). This module is that
+//! datapath in software: [`run_tile`] executes the sign-mask accumulate
+//! (the binary weight applied as the sign input of the FP16 adder,
+//! Algorithm 1 line 17) followed by the stall-free scale → bypass →
+//! bias → ReLU post sequence for a rectangle of output pixels, reading
+//! its input through the [`InputSurface`] abstraction — a flat
+//! [`FeatureMap`](super::fm::FeatureMap) on the single-chip simulator, a
+//! halo-ringed `ExtTile` on the mesh. Both simulators call this one
+//! kernel, so the Fig-10/Tbl-II traffic counters ([`AccessCounts`]) come
+//! from a single source of truth and the functional-vs-mesh bit-exactness
+//! checks compare two memory systems, not two arithmetic
+//! implementations.
+//!
+//! The kernel is also the unit of parallelism: callers fan
+//! [`run_tile`] invocations out over scoped threads (output-channel
+//! ranges on a single chip, whole chips on the mesh — data-independent
+//! between exchange phases, exactly the paper's execution model). Every
+//! FP16 rounding step of one output pixel happens inside one invocation
+//! in a fixed order, so results are bit-identical at any thread count.
+
+use crate::bwn::WeightStream;
+use crate::network::ConvLayer;
+use crate::util::f16::round_f16;
+
+use super::fm::FeatureMap;
+
+/// Datapath precision of the simulated Tile-PUs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Bit-exact FP16 (round every accumulate) — the taped-out chip.
+    #[default]
+    F16,
+    /// f32 (matches the PJRT CPU artifacts; used for cross-validation).
+    F32,
+}
+
+#[inline]
+pub(crate) fn rnd(p: Precision, x: f32) -> f32 {
+    match p {
+        Precision::F16 => round_f16(x),
+        Precision::F32 => x,
+    }
+}
+
+/// Memory/IO traffic of one simulated layer (word granularity).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AccessCounts {
+    /// FMM word reads (input FM fetches incl. neighbour-bank reads).
+    pub fmm_reads: u64,
+    /// FMM word writes (output pixels; bypass read-modify adds a read).
+    pub fmm_writes: u64,
+    /// Weight words fetched from the off-chip stream.
+    pub stream_words: u64,
+    /// Weight words re-read from the weight buffer.
+    pub wbuf_reads: u64,
+    /// Reads that crossed a Tile-PU boundary (neighbour bank access).
+    pub neighbor_reads: u64,
+    /// Post-phase multiplies (bnorm) on the shared per-tile multiplier.
+    pub post_mults: u64,
+    /// Post-phase adds (bias + bypass).
+    pub post_adds: u64,
+    /// FP16 accumulates in the Tile-PU adders.
+    pub accumulates: u64,
+}
+
+impl AccessCounts {
+    pub fn add(&mut self, o: &AccessCounts) {
+        self.fmm_reads += o.fmm_reads;
+        self.fmm_writes += o.fmm_writes;
+        self.stream_words += o.stream_words;
+        self.wbuf_reads += o.wbuf_reads;
+        self.neighbor_reads += o.neighbor_reads;
+        self.post_mults += o.post_mults;
+        self.post_adds += o.post_adds;
+        self.accumulates += o.accumulates;
+    }
+}
+
+/// A conv-input view addressed in *global* FM coordinates.
+///
+/// The kernel performs the DDU's zero-padding itself (a padded tap skips
+/// the accumulation — `v ± 0` is exact in FP16 and f32), so `read` is
+/// only ever called with coordinates inside the global FM bounds;
+/// implementations may assert on anything else (the mesh's `ExtTile`
+/// does, which is what catches never-exchanged halo pixels).
+pub trait InputSurface {
+    /// Value of channel `ch` at global `(gy, gx)`; both in-FM.
+    fn read(&self, ch: usize, gy: isize, gx: isize) -> f32;
+}
+
+impl InputSurface for FeatureMap {
+    #[inline]
+    fn read(&self, ch: usize, gy: isize, gx: isize) -> f32 {
+        self.get(ch, gy as usize, gx as usize)
+    }
+}
+
+/// Geometry of one [`run_tile`] invocation: which output rectangle to
+/// compute and where the local Tile-PU patch grid sits, for
+/// neighbour-read accounting.
+#[derive(Debug, Clone, Copy)]
+pub struct TileGeom {
+    /// Output region `[oy0, oy1) × [ox0, ox1)` in global coordinates.
+    pub oy0: usize,
+    pub oy1: usize,
+    pub ox0: usize,
+    pub ox1: usize,
+    /// Input-space origin of the local Tile-PU grid (the chip's owned
+    /// input region starts here; 0 on a single chip). Reads at negative
+    /// local coordinates are halo reads from a neighbouring chip and
+    /// count as neighbour-bank traffic.
+    pub iy0: isize,
+    pub ix0: isize,
+    /// Tile-PU patch size in output space (≥ 1).
+    pub tile_h: usize,
+    pub tile_w: usize,
+    /// Tile-PU patch size in input space (≥ 1).
+    pub in_tile_h: usize,
+    pub in_tile_w: usize,
+}
+
+/// Execute Algorithm 1 for output channels `[co0, co1)` over the output
+/// rectangle in `geom`, writing each finished pixel through `write(co,
+/// gy, gx, v)` and returning the traffic counters of this invocation.
+///
+/// Loop order is the chip's exactly: filter-tap outer, input-channel
+/// inner (lines 7–19), the binary weight applied as a sign-bit XOR on
+/// the FP32 representation (line 17, hoisted per output channel into a
+/// `u32` mask table — see DESIGN.md §Perf log), then the §IV-B
+/// scale → bypass → bias → ReLU post sequence, optionally rounding
+/// every intermediate to FP16 like the silicon.
+#[allow(clippy::too_many_arguments)]
+pub fn run_tile<S, B, W>(
+    layer: &ConvLayer,
+    stream: &WeightStream,
+    gamma: &[f32],
+    beta: &[f32],
+    (co0, co1): (usize, usize),
+    input: &S,
+    bypass: Option<&B>,
+    prec: Precision,
+    geom: &TileGeom,
+    write: &mut W,
+) -> AccessCounts
+where
+    S: InputSurface + ?Sized,
+    B: InputSurface + ?Sized,
+    W: FnMut(usize, usize, usize, f32),
+{
+    let l = layer;
+    let half = (l.k / 2) as isize;
+    let group_size_out = l.n_out / l.groups;
+    let n_in_eff = l.n_in / l.groups;
+    let taps = l.k * l.k;
+    let mut acc = AccessCounts::default();
+    let mut wmask = vec![0u32; taps * n_in_eff];
+    for co in co0..co1 {
+        let g = co / group_size_out;
+        let cin_base = g * n_in_eff;
+        for tap in 0..taps {
+            for ci in 0..n_in_eff {
+                wmask[tap * n_in_eff + ci] = if stream.weight(co, ci, tap) > 0.0 {
+                    0
+                } else {
+                    0x8000_0000
+                };
+            }
+        }
+        for oy in geom.oy0..geom.oy1 {
+            let ty = ((oy - geom.oy0) / geom.tile_h) as isize;
+            for ox in geom.ox0..geom.ox1 {
+                let tx = ((ox - geom.ox0) / geom.tile_w) as isize;
+                let mut v = 0.0f32;
+                // Algorithm 1 lines 7–19: tap outer, input channel inner.
+                for tap in 0..taps {
+                    let dy = (tap / l.k) as isize - half;
+                    let dx = (tap % l.k) as isize - half;
+                    let iy = (oy * l.stride) as isize + dy;
+                    let ix = (ox * l.stride) as isize + dx;
+                    acc.accumulates += n_in_eff as u64;
+                    acc.fmm_reads += n_in_eff as u64;
+                    if iy < 0 || ix < 0 || iy >= l.h as isize || ix >= l.w as isize {
+                        // Zero padding: the DDU injects zeros; v is
+                        // unchanged (v ± 0 == v bit-exactly).
+                        continue;
+                    }
+                    // Tile-PU patch of the read, in the local grid
+                    // (negative → a halo pixel from a neighbour chip).
+                    let t_in = (
+                        (iy - geom.iy0).div_euclid(geom.in_tile_h as isize),
+                        (ix - geom.ix0).div_euclid(geom.in_tile_w as isize),
+                    );
+                    if t_in != (ty, tx) {
+                        acc.neighbor_reads += n_in_eff as u64;
+                    }
+                    let row = &wmask[tap * n_in_eff..(tap + 1) * n_in_eff];
+                    // Line 17: sign-select accumulate (sign-bit XOR).
+                    match prec {
+                        Precision::F32 => {
+                            for (ci, &mask) in row.iter().enumerate() {
+                                let x = input.read(cin_base + ci, iy, ix);
+                                v += f32::from_bits(x.to_bits() ^ mask);
+                            }
+                        }
+                        Precision::F16 => {
+                            for (ci, &mask) in row.iter().enumerate() {
+                                let x = input.read(cin_base + ci, iy, ix);
+                                v = round_f16(v + f32::from_bits(x.to_bits() ^ mask));
+                            }
+                        }
+                    }
+                }
+                // §IV-B order: scale → bypass → bias → ReLU.
+                if l.bnorm {
+                    v = rnd(prec, v * gamma[co]);
+                    acc.post_mults += 1;
+                }
+                if let Some(bp) = bypass {
+                    v = rnd(prec, v + bp.read(co, oy as isize, ox as isize));
+                    acc.fmm_reads += 1;
+                    acc.post_adds += 1;
+                }
+                v = rnd(prec, v + beta[co]);
+                acc.post_adds += 1;
+                if l.relu && v < 0.0 {
+                    v = 0.0;
+                }
+                write(co, oy, ox, v);
+                acc.fmm_writes += 1;
+            }
+        }
+    }
+    acc
+}
+
+/// Weight traffic of one whole layer on one chip (Tbl I schedule):
+/// every stream word enters once, then is re-read from the weight
+/// buffer per remaining pixel of the Tile-PU tile. Returns
+/// `(stream_words, wbuf_reads)`.
+pub fn weight_traffic(layer: &ConvLayer, c_par: usize, tile_pixels: u64) -> (u64, u64) {
+    let n_in_eff = layer.n_in / layer.groups;
+    let taps = layer.k * layer.k;
+    let cout_tiles = layer.n_out.div_ceil(c_par) as u64;
+    let stream_words = cout_tiles * taps as u64 * n_in_eff as u64;
+    (stream_words, stream_words * (tile_pixels.max(1) - 1))
+}
+
+/// Resolve a thread-count knob: `0` means one worker per available
+/// core (`std::thread::available_parallelism`, 1 if unknown).
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bwn::pack_weights;
+    use crate::util::SplitMix64;
+
+    /// The kernel must not care how the caller addresses its memory:
+    /// the same layer read through a plain FeatureMap and through an
+    /// offset surface (simulating a mesh tile view) is bit-identical.
+    #[test]
+    fn kernel_is_surface_agnostic() {
+        struct Shifted<'a> {
+            fm: &'a FeatureMap,
+        }
+        impl InputSurface for Shifted<'_> {
+            fn read(&self, ch: usize, gy: isize, gx: isize) -> f32 {
+                // Same values, different address computation path.
+                self.fm.data[(ch * self.fm.h + gy as usize) * self.fm.w + gx as usize]
+            }
+        }
+        let mut rng = SplitMix64::new(0xd47a);
+        let l = ConvLayer::new("t", 4, 8, 6, 6, 3, 1);
+        let w: Vec<f32> = (0..8 * 4 * 9).map(|_| rng.next_sym()).collect();
+        let stream = pack_weights(&l, &w, 16);
+        let gamma = vec![0.5f32; 8];
+        let beta = vec![0.1f32; 8];
+        let fm = FeatureMap::from_vec(4, 6, 6, (0..4 * 36).map(|_| rng.next_sym()).collect());
+        let geom = TileGeom {
+            oy0: 0,
+            oy1: 6,
+            ox0: 0,
+            ox1: 6,
+            iy0: 0,
+            ix0: 0,
+            tile_h: 2,
+            tile_w: 2,
+            in_tile_h: 2,
+            in_tile_w: 2,
+        };
+        let mut a = vec![0.0f32; 8 * 36];
+        let mut b = vec![0.0f32; 8 * 36];
+        let acc_a = run_tile(
+            &l,
+            &stream,
+            &gamma,
+            &beta,
+            (0, 8),
+            &fm,
+            None::<&FeatureMap>,
+            Precision::F16,
+            &geom,
+            &mut |co, oy, ox, v| a[(co * 6 + oy) * 6 + ox] = v,
+        );
+        let shifted = Shifted { fm: &fm };
+        let acc_b = run_tile(
+            &l,
+            &stream,
+            &gamma,
+            &beta,
+            (0, 8),
+            &shifted,
+            None::<&FeatureMap>,
+            Precision::F16,
+            &geom,
+            &mut |co, oy, ox, v| b[(co * 6 + oy) * 6 + ox] = v,
+        );
+        assert_eq!(a, b);
+        assert_eq!(acc_a, acc_b);
+    }
+
+    /// Splitting the channel range must partition both the pixels and
+    /// the counters exactly (the contract the threaded callers rely on).
+    #[test]
+    fn channel_ranges_partition_pixels_and_counters() {
+        let mut rng = SplitMix64::new(0x5911);
+        let l = ConvLayer::new("t", 3, 10, 5, 5, 3, 1);
+        let w: Vec<f32> = (0..10 * 3 * 9).map(|_| rng.next_sym()).collect();
+        let stream = pack_weights(&l, &w, 16);
+        let gamma: Vec<f32> = (0..10).map(|_| 0.5 + rng.next_f32()).collect();
+        let beta: Vec<f32> = (0..10).map(|_| rng.next_sym()).collect();
+        let fm = FeatureMap::from_vec(3, 5, 5, (0..75).map(|_| rng.next_sym()).collect());
+        let geom = TileGeom {
+            oy0: 0,
+            oy1: 5,
+            ox0: 0,
+            ox1: 5,
+            iy0: 0,
+            ix0: 0,
+            tile_h: 1,
+            tile_w: 1,
+            in_tile_h: 1,
+            in_tile_w: 1,
+        };
+        let run = |range: (usize, usize), out: &mut [f32]| {
+            run_tile(
+                &l,
+                &stream,
+                &gamma,
+                &beta,
+                range,
+                &fm,
+                None::<&FeatureMap>,
+                Precision::F16,
+                &geom,
+                &mut |co, oy, ox, v| out[(co * 5 + oy) * 5 + ox] = v,
+            )
+        };
+        let mut whole = vec![0.0f32; 10 * 25];
+        let acc = run((0, 10), &mut whole);
+        let mut split = vec![0.0f32; 10 * 25];
+        let mut sum = AccessCounts::default();
+        for (a, b) in [(0usize, 3usize), (3, 7), (7, 10)] {
+            sum.add(&run((a, b), &mut split));
+        }
+        assert_eq!(whole, split);
+        assert_eq!(acc, sum);
+    }
+
+    #[test]
+    fn weight_traffic_matches_table1_schedule() {
+        // 16→64 3×3 on C=16, 8×8-pixel tiles: 4 tiles × 9 × 16 words,
+        // each re-read 63 times.
+        let l = ConvLayer::new("t", 16, 64, 56, 56, 3, 1);
+        let (sw, wb) = weight_traffic(&l, 16, 64);
+        assert_eq!(sw, 4 * 9 * 16);
+        assert_eq!(wb, 4 * 9 * 16 * 63);
+        // A degenerate 0-pixel tile never underflows.
+        assert_eq!(weight_traffic(&l, 16, 0).1, 0);
+    }
+
+    #[test]
+    fn resolve_threads_zero_means_auto() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+}

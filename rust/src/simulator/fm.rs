@@ -75,6 +75,22 @@ impl FeatureMap {
         FeatureMap::from_vec(self.c + other.c, self.h, self.w, data)
     }
 
+    /// 2× nearest-neighbour upsample (YOLOv3's FPN laterals): each pixel
+    /// is replicated into a 2×2 block. On the chip this is free DDU
+    /// addressing — no arithmetic, no extra reads — but the stored FM
+    /// is 4× larger.
+    pub fn upsample2x_nearest(&self) -> FeatureMap {
+        let mut out = FeatureMap::zeros(self.c, 2 * self.h, 2 * self.w);
+        for c in 0..self.c {
+            for y in 0..2 * self.h {
+                for x in 0..2 * self.w {
+                    out.set(c, y, x, self.get(c, y / 2, x / 2));
+                }
+            }
+        }
+        out
+    }
+
     /// Maximum absolute difference to another FM of the same shape.
     /// NaN anywhere (e.g. a poisoned, never-exchanged halo pixel)
     /// propagates to the result — `f32::max` alone would silently drop
@@ -145,6 +161,22 @@ mod tests {
         assert!(a.max_abs_diff(&b).is_nan());
         let c = FeatureMap::from_vec(1, 1, 2, vec![1.0, 3.0]);
         assert_eq!(c.max_abs_diff(&b), 2.0);
+    }
+
+    #[test]
+    fn upsample_replicates_2x2_blocks() {
+        let fm = FeatureMap::from_vec(1, 2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let up = fm.upsample2x_nearest();
+        assert_eq!((up.c, up.h, up.w), (1, 4, 4));
+        assert_eq!(
+            up.data,
+            vec![
+                1.0, 1.0, 2.0, 2.0, //
+                1.0, 1.0, 2.0, 2.0, //
+                3.0, 3.0, 4.0, 4.0, //
+                3.0, 3.0, 4.0, 4.0,
+            ]
+        );
     }
 
     #[test]

@@ -2,20 +2,32 @@
 //! an m×n array of chips, each holding only its FM tile plus the border
 //! and corner halos received from its neighbours.
 //!
+//! Every chip runs the *same* Tile-PU datapath kernel as the single-chip
+//! simulator ([`super::datapath::run_tile`]) — only the memory front-end
+//! differs (a halo-ringed `ExtTile` instead of a flat FM). Chips are
+//! data-independent between exchange phases, exactly the paper's
+//! execution model, so each step computes all chips concurrently on
+//! scoped threads ([`MeshSim::threads`]) with a deterministic per-chip
+//! reduction of the [`AccessCounts`].
+//!
 //! Protocol fidelity: halo pixels start as NaN and are only overwritten
 //! by the exchange phase — any read of a pixel that was never exchanged
 //! poisons the output and fails the bit-exactness check against the
 //! single-chip reference. Corner pixels travel via the vertical
-//! neighbour (two hops, no diagonal wires, §V-B).
+//! neighbour (two hops, no diagonal wires, §V-B). 2× nearest upsampling
+//! (YOLOv3's FPN laterals) is free pixel replication inside each chip's
+//! owned tile; the upsampled tensor's halo ring is NaN again and is
+//! re-exchanged before any halo-consuming read.
 
 use std::collections::HashMap;
+use std::fmt;
 
 use crate::bwn::WeightStream;
 use crate::coordinator::border::{link_flits, ExchangeFlags};
-use crate::network::{Network, TensorRef};
-use crate::util::f16::round_f16;
+use crate::network::{ConvLayer, Network, TensorRef};
 
-use super::chip::Precision;
+use super::chip::{AccessCounts, Precision};
+use super::datapath::{self, InputSurface, TileGeom};
 use super::fm::FeatureMap;
 
 /// Per-layer parameters for the mesh run (same content as
@@ -28,7 +40,7 @@ pub struct StepParams {
 }
 
 /// Aggregate traffic statistics of a mesh run.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct MeshStats {
     /// Bits exchanged over direct (N/S/E/W) links for borders.
     pub border_bits: u64,
@@ -40,7 +52,49 @@ pub struct MeshStats {
     pub input_bits: u64,
     /// Exchange protocol flags, aggregated over chips.
     pub flags: ExchangeFlags,
+    /// Per-chip FMM/WBuf/stream traffic summed over all chips and steps
+    /// — produced by the same shared-kernel counters as the single-chip
+    /// simulator's (Fig 10 / Tbl II source of truth). Reads that cross
+    /// a *chip* boundary (halo reads) count as `neighbor_reads`, and
+    /// every chip streams the full weight set (the broadcast of §V), so
+    /// `stream_words` scales with the chip count.
+    pub access: AccessCounts,
 }
+
+/// Typed failures of a mesh run — replacing the former `expect`-style
+/// process aborts on missing tiles and mis-sized parameter lists, so
+/// the engine can surface them as [`crate::engine::EngineError`]s.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MeshError {
+    /// Chip `(row, col)` needed tensor id `tensor` as `role` (src /
+    /// concat / bypass / halo destination) but never received it — a
+    /// scheduling bug, since tiles are produced in step order.
+    MissingTile {
+        chip: (usize, usize),
+        tensor: usize,
+        role: &'static str,
+    },
+    /// One [`StepParams`] per network step is required.
+    ParamsMismatch { params: usize, steps: usize },
+}
+
+impl fmt::Display for MeshError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MeshError::MissingTile { chip, tensor, role } => write!(
+                f,
+                "chip ({}, {}) has no tile for tensor {tensor} ({role})",
+                chip.0, chip.1
+            ),
+            MeshError::ParamsMismatch { params, steps } => write!(
+                f,
+                "{params} step parameter sets for a {steps}-step network"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for MeshError {}
 
 /// One chip's view of one tensor: its owned tile extended by a 1-pixel
 /// halo ring (NaN until received; zero where outside the global FM).
@@ -111,6 +165,67 @@ impl ExtTile {
         let lx = (gx - self.x0 as isize + 1) as usize;
         self.data.set(c, ly, lx, v);
     }
+
+    /// 2× nearest-neighbour upsample of the owned region (YOLOv3 FPN
+    /// laterals). Replication is free on the chip (DDU addressing), so
+    /// no traffic is counted; the halo ring of the result is NaN again
+    /// and must be re-exchanged before any halo-consuming read.
+    fn upsample2x(&self, c: usize, gh: usize, gw: usize) -> ExtTile {
+        let mut up = ExtTile::new(c, 2 * self.y0, 2 * self.y1, 2 * self.x0, 2 * self.x1,
+                                  2 * gh, 2 * gw);
+        for ch in 0..c {
+            for gy in 2 * self.y0..2 * self.y1 {
+                for gx in 2 * self.x0..2 * self.x1 {
+                    up.write_own(ch, gy, gx, self.read(ch, (gy / 2) as isize, (gx / 2) as isize));
+                }
+            }
+        }
+        up
+    }
+}
+
+impl InputSurface for ExtTile {
+    #[inline]
+    fn read(&self, ch: usize, gy: isize, gx: isize) -> f32 {
+        ExtTile::read(self, ch, gy, gx)
+    }
+}
+
+/// One chip's conv-input view for a step: the `src` tile, extended
+/// channel-wise by the optional `concat_extra` tile (YOLOv3's FPN
+/// merges — concatenation is free on the chip, the tensors simply
+/// occupy adjacent FMM segments).
+struct ChipInput<'a> {
+    src: &'a ExtTile,
+    cat: Option<&'a ExtTile>,
+    src_c: usize,
+}
+
+impl InputSurface for ChipInput<'_> {
+    #[inline]
+    fn read(&self, ch: usize, gy: isize, gx: isize) -> f32 {
+        if ch < self.src_c {
+            self.src.read(ch, gy, gx)
+        } else {
+            // Presence is validated before compute starts (MissingTile).
+            self.cat
+                .expect("concat tile validated per step")
+                .read(ch - self.src_c, gy, gx)
+        }
+    }
+}
+
+/// Everything one chip needs to compute its output tile of one step —
+/// collected (and validated) up front so the compute fan-out is
+/// infallible and borrows `tiles` only immutably.
+struct ChipJob<'a> {
+    idx: usize,
+    oy0: usize,
+    oy1: usize,
+    ox0: usize,
+    ox1: usize,
+    input: ChipInput<'a>,
+    byp: Option<&'a ExtTile>,
 }
 
 /// Global coordinates of the 1-pixel halo ring around a tile.
@@ -134,6 +249,13 @@ pub struct MeshSim {
     pub cols: usize,
     pub prec: Precision,
     pub fm_bits: usize,
+    /// Each chip's internal M×N Tile-PU grid (neighbour-read
+    /// accounting; the taped-out chip is 7×7).
+    pub tiles_mn: (usize, usize),
+    /// Worker threads for the per-step chip fan-out (`0` = one per
+    /// available core). Results and statistics are bit-identical at any
+    /// value; defaults to 1.
+    pub threads: usize,
     /// Fault injection: drop the Nth border send of the whole run (the
     /// NaN-poisoned halo then propagates to the output — used to verify
     /// the protocol checking actually bites).
@@ -147,6 +269,8 @@ impl MeshSim {
             cols,
             prec,
             fm_bits: 16,
+            tiles_mn: (7, 7),
+            threads: 1,
             fault_drop_send: None,
         }
     }
@@ -161,14 +285,6 @@ impl MeshSim {
         (i * t, (i + 1) * t)
     }
 
-    #[inline]
-    fn rnd(&self, x: f32) -> f32 {
-        match self.prec {
-            Precision::F16 => round_f16(x),
-            Precision::F32 => x,
-        }
-    }
-
     /// Run a whole network on the mesh. `params[i]` belongs to step `i`.
     /// Returns the re-assembled final FM and the traffic statistics.
     pub fn run_network(
@@ -176,7 +292,7 @@ impl MeshSim {
         net: &Network,
         params: &[StepParams],
         input: &FeatureMap,
-    ) -> (FeatureMap, MeshStats) {
+    ) -> Result<(FeatureMap, MeshStats), MeshError> {
         self.run_network_observed(net, params, input, None)
     }
 
@@ -189,7 +305,7 @@ impl MeshSim {
         params: &[StepParams],
         input: &FeatureMap,
         observe: &mut dyn FnMut(usize, &FeatureMap),
-    ) -> (FeatureMap, MeshStats) {
+    ) -> Result<(FeatureMap, MeshStats), MeshError> {
         self.run_network_observed(net, params, input, Some(observe))
     }
 
@@ -199,8 +315,13 @@ impl MeshSim {
         params: &[StepParams],
         input: &FeatureMap,
         mut observe: Option<&mut dyn FnMut(usize, &FeatureMap)>,
-    ) -> (FeatureMap, MeshStats) {
-        assert_eq!(params.len(), net.steps.len());
+    ) -> Result<(FeatureMap, MeshStats), MeshError> {
+        if params.len() != net.steps.len() {
+            return Err(MeshError::ParamsMismatch {
+                params: params.len(),
+                steps: net.steps.len(),
+            });
+        }
         let mut stats = MeshStats::default();
 
         // Consumer halo per tensor (0 → no exchange needed).
@@ -255,114 +376,171 @@ impl MeshSim {
         // Execute steps.
         for (si, step) in net.steps.iter().enumerate() {
             let l = &step.layer;
-            assert!(!step.upsample2x, "mesh sim does not model upsampling");
             let p = &params[si];
             let (ho, wo) = (l.h_out(), l.w_out());
-            let half = (l.k / 2) as isize;
-            let gso = l.n_out / l.groups;
-            let nie = l.n_in / l.groups;
             let src_id = tid(step.src);
             let byp_id = step.bypass.map(tid);
             let cat_id = step.concat_extra.map(tid);
             let (src_c, _, _) = net.shape_of(step.src);
 
-            // Compute each chip's output tile.
-            for r in 0..self.rows {
-                for c in 0..self.cols {
-                    let idx = r * self.cols + c;
-                    let (oy0, oy1) = self.bounds(ho, self.rows, r);
-                    let (ox0, ox1) = self.bounds(wo, self.cols, c);
-                    let mut out = ExtTile::new(l.n_out, oy0, oy1, ox0, ox1, ho, wo);
-                    {
+            // Collect each chip's validated inputs, then compute all
+            // chips concurrently — they are data-independent between
+            // exchange phases (§V execution model). Results come back
+            // in chip index order, so the stats reduction and the tile
+            // inserts are deterministic at any thread count.
+            let results: Vec<(usize, ExtTile, AccessCounts)> = {
+                let mut jobs = Vec::with_capacity(self.rows * self.cols);
+                for r in 0..self.rows {
+                    for c in 0..self.cols {
+                        let idx = r * self.cols + c;
                         let chip = &tiles[idx];
-                        let src = chip.get(&src_id).expect("src tile");
-                        let cat = cat_id.map(|t| chip.get(&t).expect("concat tile"));
-                        let byp = byp_id.map(|t| chip.get(&t).expect("bypass tile"));
-                        let read_in = |ch: usize, gy: isize, gx: isize| -> f32 {
-                            if ch < src_c {
-                                src.read(ch, gy, gx)
-                            } else {
-                                cat.expect("channel beyond src without concat")
-                                    .read(ch - src_c, gy, gx)
-                            }
+                        let src = chip.get(&src_id).ok_or(MeshError::MissingTile {
+                            chip: (r, c),
+                            tensor: src_id,
+                            role: "src",
+                        })?;
+                        let cat = match cat_id {
+                            Some(t) => Some(chip.get(&t).ok_or(MeshError::MissingTile {
+                                chip: (r, c),
+                                tensor: t,
+                                role: "concat",
+                            })?),
+                            None => None,
                         };
-                        // Perf (§Perf log): hoist each output channel's
-                        // binary weights into a sign-mask table (as in
-                        // chip.rs) instead of div/mod stream lookups per
-                        // MAC; padded taps skip the c_in loop (v ± 0 is
-                        // exact).
-                        let taps = l.k * l.k;
-                        let mut wmask = vec![0u32; taps * nie];
-                        for co in 0..l.n_out {
-                            let cb = (co / gso) * nie;
-                            for tap in 0..taps {
-                                for ci in 0..nie {
-                                    wmask[tap * nie + ci] =
-                                        if p.stream.weight(co, ci, tap) > 0.0 {
-                                            0
-                                        } else {
-                                            0x8000_0000
-                                        };
-                                }
-                            }
-                            for gy in oy0..oy1 {
-                                for gx in ox0..ox1 {
-                                    let mut v = 0.0f32;
-                                    for tap in 0..taps {
-                                        let dy = (tap / l.k) as isize - half;
-                                        let dx = (tap % l.k) as isize - half;
-                                        let iy = (gy * l.stride) as isize + dy;
-                                        let ix = (gx * l.stride) as isize + dx;
-                                        // Global zero padding at FM edges.
-                                        if iy < 0
-                                            || ix < 0
-                                            || iy >= l.h as isize
-                                            || ix >= l.w as isize
-                                        {
-                                            continue;
-                                        }
-                                        let row = &wmask[tap * nie..(tap + 1) * nie];
-                                        for (ci, &mask) in row.iter().enumerate() {
-                                            let x = read_in(cb + ci, iy, ix);
-                                            v = self
-                                                .rnd(v + f32::from_bits(x.to_bits() ^ mask));
-                                        }
-                                    }
-                                    if l.bnorm {
-                                        v = self.rnd(v * p.gamma[co]);
-                                    }
-                                    if let Some(bp) = byp {
-                                        v = self.rnd(v + bp.read(co, gy as isize, gx as isize));
-                                    }
-                                    v = self.rnd(v + p.beta[co]);
-                                    if l.relu && v < 0.0 {
-                                        v = 0.0;
-                                    }
-                                    out.write_own(co, gy, gx, v);
-                                }
-                            }
-                        }
+                        let byp = match byp_id {
+                            Some(t) => Some(chip.get(&t).ok_or(MeshError::MissingTile {
+                                chip: (r, c),
+                                tensor: t,
+                                role: "bypass",
+                            })?),
+                            None => None,
+                        };
+                        let (oy0, oy1) = self.bounds(ho, self.rows, r);
+                        let (ox0, ox1) = self.bounds(wo, self.cols, c);
+                        jobs.push(ChipJob {
+                            idx,
+                            oy0,
+                            oy1,
+                            ox0,
+                            ox1,
+                            input: ChipInput { src, cat, src_c },
+                            byp,
+                        });
                     }
-                    tiles[idx].insert(1 + si, out);
                 }
+                let workers = datapath::resolve_threads(self.threads)
+                    .max(1)
+                    .min(jobs.len());
+                if workers <= 1 {
+                    jobs.iter()
+                        .map(|j| self.compute_chip(j, l, p, step.upsample2x, ho, wo))
+                        .collect()
+                } else {
+                    let per = jobs.len().div_ceil(workers);
+                    std::thread::scope(|s| {
+                        let handles: Vec<_> = jobs
+                            .chunks(per)
+                            .map(|chunk| {
+                                s.spawn(move || {
+                                    chunk
+                                        .iter()
+                                        .map(|j| {
+                                            self.compute_chip(j, l, p, step.upsample2x, ho, wo)
+                                        })
+                                        .collect::<Vec<_>>()
+                                })
+                            })
+                            .collect();
+                        handles
+                            .into_iter()
+                            .flat_map(|h| h.join().expect("mesh worker panicked"))
+                            .collect()
+                    })
+                }
+            };
+            for (idx, tile, acc) in results {
+                stats.access.add(&acc);
+                tiles[idx].insert(1 + si, tile);
             }
 
-            // Exchange phase for this tensor, if any consumer needs halo.
+            // Exchange phase (on the possibly upsampled tensor), if any
+            // consumer needs halo.
+            let (oc, oh, ow) = net.shape_of(TensorRef::Step(si));
             if halo[1 + si] > 0 {
-                self.exchange(1 + si, l.n_out, ho, wo, &mut tiles, &mut stats);
+                self.exchange(1 + si, oc, &mut tiles, &mut stats)?;
             }
 
             if let Some(obs) = observe.as_mut() {
-                let fm = self.assemble(&tiles, 1 + si, l.n_out, ho, wo);
+                let fm = self.assemble(&tiles, 1 + si, oc, oh, ow)?;
                 obs(si, &fm);
             }
         }
 
         // Reassemble the final output.
         let (fc, fh, fw) = net.out_shape();
-        let final_fm = self.assemble(&tiles, net.steps.len(), fc, fh, fw);
+        let final_fm = self.assemble(&tiles, net.steps.len(), fc, fh, fw)?;
         assert!(stats.flags.is_quiescent(), "unmatched border sends");
-        (final_fm, stats)
+        Ok((final_fm, stats))
+    }
+
+    /// One chip's compute of one step: the shared datapath kernel over
+    /// the chip's owned output tile, then the free 2× replication if the
+    /// step upsamples. Infallible by construction (inputs validated by
+    /// the caller), so it can run on any worker thread.
+    fn compute_chip(
+        &self,
+        job: &ChipJob<'_>,
+        l: &ConvLayer,
+        p: &StepParams,
+        upsample: bool,
+        ho: usize,
+        wo: usize,
+    ) -> (usize, ExtTile, AccessCounts) {
+        let (m, n) = self.tiles_mn;
+        let out_h = job.oy1 - job.oy0;
+        let out_w = job.ox1 - job.ox0;
+        // The chip's owned input region starts at stride× its output
+        // origin (spatial dims divide evenly over the mesh); its M×N
+        // Tile-PU grid tiles the per-chip region, like the single-chip
+        // geometry tiles the whole FM.
+        let geom = TileGeom {
+            oy0: job.oy0,
+            oy1: job.oy1,
+            ox0: job.ox0,
+            ox1: job.ox1,
+            iy0: (job.oy0 * l.stride) as isize,
+            ix0: (job.ox0 * l.stride) as isize,
+            tile_h: out_h.div_ceil(m).max(1),
+            tile_w: out_w.div_ceil(n).max(1),
+            in_tile_h: (out_h * l.stride).div_ceil(m).max(1),
+            in_tile_w: (out_w * l.stride).div_ceil(n).max(1),
+        };
+        let mut out = ExtTile::new(l.n_out, job.oy0, job.oy1, job.ox0, job.ox1, ho, wo);
+        let mut acc = {
+            let mut write =
+                |co: usize, gy: usize, gx: usize, v: f32| out.write_own(co, gy, gx, v);
+            datapath::run_tile(
+                l,
+                &p.stream,
+                &p.gamma,
+                &p.beta,
+                (0, l.n_out),
+                &job.input,
+                job.byp,
+                self.prec,
+                &geom,
+                &mut write,
+            )
+        };
+        // Every chip streams the full weight set (broadcast, §V) and
+        // re-reads it per pixel of its own Tile-PU tiles.
+        let (sw, wb) = datapath::weight_traffic(l, p.stream.c, (geom.tile_h * geom.tile_w) as u64);
+        acc.stream_words += sw;
+        acc.wbuf_reads += wb;
+        if upsample {
+            out = out.upsample2x(l.n_out, ho, wo);
+        }
+        (job.idx, out, acc)
     }
 
     /// Re-assemble a distributed tensor's owned tiles into one global FM.
@@ -373,11 +551,17 @@ impl MeshSim {
         c: usize,
         h: usize,
         w: usize,
-    ) -> FeatureMap {
+    ) -> Result<FeatureMap, MeshError> {
         let mut fm = FeatureMap::zeros(c, h, w);
         for r in 0..self.rows {
             for col in 0..self.cols {
-                let t = &tiles[r * self.cols + col][&tensor];
+                let t = tiles[r * self.cols + col]
+                    .get(&tensor)
+                    .ok_or(MeshError::MissingTile {
+                        chip: (r, col),
+                        tensor,
+                        role: "assemble",
+                    })?;
                 for ch in 0..c {
                     for gy in t.y0..t.y1 {
                         for gx in t.x0..t.x1 {
@@ -387,7 +571,7 @@ impl MeshSim {
                 }
             }
         }
-        fm
+        Ok(fm)
     }
 
     /// The send-once border/corner exchange for one tensor (§V-B).
@@ -395,17 +579,21 @@ impl MeshSim {
         &self,
         tensor: usize,
         channels: usize,
-        gh: usize,
-        gw: usize,
         tiles: &mut [HashMap<usize, ExtTile>],
         stats: &mut MeshStats,
-    ) {
+    ) -> Result<(), MeshError> {
         let idx = |r: usize, c: usize| r * self.cols + c;
         // Collect sends: (dst_chip, ch, gy, gx, value, hops).
         let mut sends: Vec<(usize, usize, isize, isize, f32, u32)> = Vec::new();
         for r in 0..self.rows {
             for c in 0..self.cols {
-                let t = &tiles[idx(r, c)][&tensor];
+                let t = tiles[idx(r, c)]
+                    .get(&tensor)
+                    .ok_or(MeshError::MissingTile {
+                        chip: (r, c),
+                        tensor,
+                        role: "exchange source",
+                    })?;
                 let (y0, y1, x0, x1) = (t.y0, t.y1, t.x0, t.x1);
                 for ch in 0..channels {
                     // Direct borders: N/S rows, W/E cols.
@@ -470,13 +658,17 @@ impl MeshSim {
                 stats.corner_bits += bits;
             }
             stats.flits += link_flits(1, self.fm_bits) * hops as u64;
-            let t = tiles[dst].get_mut(&tensor).expect("dst tile");
+            let t = tiles[dst].get_mut(&tensor).ok_or(MeshError::MissingTile {
+                chip: (dst / self.cols, dst % self.cols),
+                tensor,
+                role: "halo destination",
+            })?;
             // Only ring positions matter; interior duplicates are skipped
             // by construction (borders of the neighbour are our ring).
-            let _ = (gh, gw);
             t.write_halo(ch, gy, gx, v);
             stats.flags.received();
         }
+        Ok(())
     }
 }
 
@@ -541,7 +733,7 @@ mod tests {
                 beta: &params[i].beta,
             };
             let (o, _) = run_layer(&lp, &src, byp.as_ref(), prec, (7, 7));
-            outs.push(o);
+            outs.push(if s.upsample2x { o.upsample2x_nearest() } else { o });
         }
         outs.pop().unwrap()
     }
@@ -558,7 +750,7 @@ mod tests {
         let input = hypernet_input(7);
         let single = single_chip_run(&net, &params, &input, Precision::F16);
         let mesh = MeshSim::new(2, 2, Precision::F16);
-        let (out, stats) = mesh.run_network(&net, &params, &input);
+        let (out, stats) = mesh.run_network(&net, &params, &input).unwrap();
         assert_eq!(out.max_abs_diff(&single), 0.0, "must be bit-exact");
         assert!(stats.border_bits > 0);
         assert!(stats.corner_bits > 0);
@@ -571,7 +763,7 @@ mod tests {
         let input = hypernet_input(11);
         let single = single_chip_run(&net, &params, &input, Precision::F32);
         let mesh = MeshSim::new(4, 4, Precision::F32);
-        let (out, _) = mesh.run_network(&net, &params, &input);
+        let (out, _) = mesh.run_network(&net, &params, &input).unwrap();
         assert_eq!(out.max_abs_diff(&single), 0.0);
     }
 
@@ -582,8 +774,108 @@ mod tests {
         let input = hypernet_input(3);
         let single = single_chip_run(&net, &params, &input, Precision::F16);
         let mesh = MeshSim::new(2, 4, Precision::F16);
-        let (out, _) = mesh.run_network(&net, &params, &input);
+        let (out, _) = mesh.run_network(&net, &params, &input).unwrap();
         assert_eq!(out.max_abs_diff(&single), 0.0);
+    }
+
+    /// A small FPN-style network: strided conv whose output is 2×
+    /// nearest-upsampled, a 3×3 consumer (halo re-exchange on the
+    /// upsampled tensor), and a concat merge with the network input.
+    fn upsample_net() -> Network {
+        let mut net = Network::new("ups", 8, 8, 8);
+        let a = net.push(
+            ConvLayer::new("a", 8, 8, 8, 8, 3, 2),
+            TensorRef::Input,
+            None,
+        );
+        net.upsample_last(); // 4×4 → back to 8×8
+        let b = net.push(
+            ConvLayer::new("b", 8, 8, 8, 8, 3, 1),
+            TensorRef::Step(a),
+            None,
+        );
+        net.push_concat(
+            ConvLayer::new("c", 16, 8, 8, 8, 1, 1),
+            TensorRef::Step(b),
+            Some(TensorRef::Input),
+        );
+        net.validate().unwrap();
+        net
+    }
+
+    #[test]
+    fn upsampled_tensor_matches_single_chip_bit_exactly() {
+        let net = upsample_net();
+        let params = random_params(&net, 0x0951);
+        let mut rng = SplitMix64::new(21);
+        let input =
+            FeatureMap::from_vec(8, 8, 8, (0..8 * 64).map(|_| rng.next_sym()).collect());
+        for prec in [Precision::F16, Precision::F32] {
+            let single = single_chip_run(&net, &params, &input, prec);
+            let mesh = MeshSim::new(2, 2, prec);
+            let (out, stats) = mesh.run_network(&net, &params, &input).unwrap();
+            assert_eq!(out.max_abs_diff(&single), 0.0, "{prec:?} diverged");
+            // The upsampled tensor's halo was re-exchanged for `b`.
+            assert!(stats.border_bits > 0);
+        }
+    }
+
+    #[test]
+    fn access_counts_aggregate_over_chips() {
+        let net = model::network("hypernet20").unwrap();
+        let params = random_params(&net, 0x11);
+        let input = hypernet_input(9);
+        let mesh = MeshSim::new(2, 2, Precision::F32);
+        let (_, stats) = mesh.run_network(&net, &params, &input).unwrap();
+        // Every output pixel of every step is written exactly once
+        // across all chips (upsample replication is free, not counted).
+        let out_words: u64 = net.steps.iter().map(|s| s.layer.out_words()).sum();
+        assert_eq!(stats.access.fmm_writes, out_words);
+        // Weights are broadcast: each of the 4 chips streams the full
+        // per-layer word count.
+        let single: u64 = net
+            .steps
+            .iter()
+            .map(|s| crate::simulator::datapath::weight_traffic(&s.layer, 16, 1).0)
+            .sum();
+        assert_eq!(stats.access.stream_words, 4 * single);
+        assert!(stats.access.accumulates > 0 && stats.access.neighbor_reads > 0);
+    }
+
+    #[test]
+    fn threaded_mesh_is_bit_identical_with_equal_stats() {
+        let net = upsample_net();
+        let params = random_params(&net, 0x7777);
+        let mut rng = SplitMix64::new(5);
+        let input =
+            FeatureMap::from_vec(8, 8, 8, (0..8 * 64).map(|_| rng.next_sym()).collect());
+        let base = MeshSim::new(2, 2, Precision::F16);
+        let (want, want_stats) = base.run_network(&net, &params, &input).unwrap();
+        for threads in [0usize, 2, 3, 16] {
+            let mut sim = MeshSim::new(2, 2, Precision::F16);
+            sim.threads = threads;
+            let (got, stats) = sim.run_network(&net, &params, &input).unwrap();
+            assert_eq!(got.data, want.data, "threads={threads}");
+            assert_eq!(stats, want_stats, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn params_mismatch_is_a_typed_error() {
+        let net = model::network("hypernet20").unwrap();
+        let mut params = random_params(&net, 1);
+        params.pop();
+        let input = hypernet_input(1);
+        let mesh = MeshSim::new(2, 2, Precision::F32);
+        let err = mesh.run_network(&net, &params, &input).unwrap_err();
+        assert_eq!(
+            err,
+            MeshError::ParamsMismatch {
+                params: 19,
+                steps: 20
+            }
+        );
+        assert!(err.to_string().contains("19"), "{err}");
     }
 
     #[test]
@@ -594,7 +886,7 @@ mod tests {
         let params = random_params(&net, 0x99);
         let input = hypernet_input(5);
         let mesh = MeshSim::new(2, 2, Precision::F32);
-        let (_, stats) = mesh.run_network(&net, &params, &input);
+        let (_, stats) = mesh.run_network(&net, &params, &input).unwrap();
         let plan = crate::coordinator::tiling::MeshPlan {
             rows: 2,
             cols: 2,

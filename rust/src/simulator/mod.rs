@@ -2,19 +2,27 @@
 //!
 //! * [`fm`] — feature-map tensors with optional bit-exact FP16 rounding
 //!   (the chip's datapath precision).
-//! * [`chip`] — one chip: executes a layer exactly as Algorithm 1 does
-//!   (tap-outer / c_in-inner accumulation order, fused
-//!   scale→bypass→bias→ReLU) while counting every FMM/WBuf/stream access
-//!   for the energy breakdown (Fig 10).
+//! * [`datapath`] — **the one Tile-PU datapath kernel** (Algorithm 1:
+//!   sign-mask accumulate + scale→bypass→bias→ReLU) behind the
+//!   [`datapath::InputSurface`] abstraction, counting every
+//!   FMM/WBuf/stream access for the energy breakdown (Fig 10). Both
+//!   simulators execute this kernel; only their memory front-ends
+//!   differ — the paper's multi-chip scalability claim, in code.
+//! * [`chip`] — one chip: drives the kernel over a flat FM, optionally
+//!   fanned out over output channels on scoped threads
+//!   ([`chip::run_layer_threads`]), bit-identical at any thread count.
 //! * [`mesh`] — the m×n multi-chip systolic array (§V): per-chip FM
-//!   tiles, border/corner memories, the send-once exchange protocol —
-//!   validated bit-exactly against the single-chip reference.
+//!   tiles, border/corner memories, the send-once exchange protocol,
+//!   free 2× nearest upsampling (YOLOv3 FPN), chips computed
+//!   concurrently per step — validated bit-exactly against the
+//!   single-chip reference.
 
 pub mod banks;
 pub mod chip;
+pub mod datapath;
 pub mod fm;
 pub mod mesh;
 
-pub use chip::{run_layer, AccessCounts, Precision};
+pub use chip::{run_layer, run_layer_threads, AccessCounts, Precision};
 pub use fm::FeatureMap;
-pub use mesh::MeshSim;
+pub use mesh::{MeshError, MeshSim};

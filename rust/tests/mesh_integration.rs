@@ -122,7 +122,7 @@ fn prop_mesh_bit_exact_vs_single_chip() {
         let shapes = [(2usize, 2usize), (2, 4), (4, 2), (4, 4)];
         let (r, c) = shapes[rng.next_below(shapes.len())];
         let sim = MeshSim::new(r, c, prec);
-        let (out, stats) = sim.run_network(&net, &params, &input);
+        let (out, stats) = sim.run_network(&net, &params, &input).unwrap();
         if out.max_abs_diff(&want) != 0.0 {
             return Err(format!("{r}x{c} mesh diverged"));
         }
@@ -146,7 +146,7 @@ fn prop_mesh_traffic_matches_analytic_model() {
         );
         let (r, c) = [(2usize, 2usize), (2, 4), (4, 4)][rng.next_below(3)];
         let sim = MeshSim::new(r, c, Precision::F32);
-        let (_, stats) = sim.run_network(&net, &params, &input);
+        let (_, stats) = sim.run_network(&net, &params, &input).unwrap();
         let plan = MeshPlan {
             rows: r,
             cols: c,
@@ -177,11 +177,11 @@ fn fault_injection_poisons_output() {
     );
     let good = {
         let sim = MeshSim::new(2, 2, Precision::F32);
-        sim.run_network(&net, &params, &input).0
+        sim.run_network(&net, &params, &input).unwrap().0
     };
     let mut sim = MeshSim::new(2, 2, Precision::F32);
     sim.fault_drop_send = Some(5);
-    let (bad, _) = sim.run_network(&net, &params, &input);
+    let (bad, _) = sim.run_network(&net, &params, &input).unwrap();
     let diff = bad.max_abs_diff(&good);
     assert!(
         diff.is_nan() || diff > 0.0,
@@ -201,7 +201,7 @@ fn mesh_flit_count_is_4bit_serialization() {
         (0..net.in_ch * net.in_h * net.in_w).map(|_| rng.next_sym()).collect(),
     );
     let sim = MeshSim::new(2, 2, Precision::F32);
-    let (_, stats) = sim.run_network(&net, &params, &input);
+    let (_, stats) = sim.run_network(&net, &params, &input).unwrap();
     // 16-bit pixels → 4 flits per hop.
     assert_eq!(stats.flits * 4, stats.border_bits + stats.corner_bits);
 }

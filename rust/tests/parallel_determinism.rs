@@ -1,0 +1,93 @@
+//! Parallel-execution determinism through the engine façade: the
+//! `threads` knob must never change a bit of output or a single traffic
+//! counter — each output pixel's FP16 rounding sequence runs entirely
+//! inside one worker, workers write disjoint regions, and the per-worker
+//! counters are exact partitions reduced in a fixed order.
+
+use hyperdrive::engine::{Engine, EngineError, Precision};
+use hyperdrive::util::SplitMix64;
+
+fn random_input(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..len).map(|_| rng.next_sym()).collect()
+}
+
+#[test]
+fn functional_outputs_invariant_across_thread_counts() {
+    let build = |threads: usize| {
+        Engine::builder()
+            .model("hypernet20")
+            .seed(0xD17)
+            .precision(Precision::F16)
+            .threads(threads)
+            .build()
+            .unwrap()
+    };
+    let input = random_input(16 * 32 * 32, 3);
+    let want = build(1).infer(&input).unwrap();
+    for threads in [2usize, 3, 8] {
+        let got = build(threads).infer(&input).unwrap();
+        assert_eq!(got, want, "functional threads={threads} changed bits");
+    }
+}
+
+#[test]
+fn mesh_outputs_and_stats_invariant_across_thread_counts() {
+    let build = |threads: usize| {
+        Engine::builder()
+            .model("hypernet20")
+            .seed(0xD17)
+            .mesh(2, 2)
+            .precision(Precision::F16)
+            .threads(threads)
+            .build()
+            .unwrap()
+    };
+    let input = random_input(16 * 32 * 32, 4);
+    let base = build(1);
+    let want = base.infer(&input).unwrap();
+    let want_stats = base.mesh_stats().expect("stats recorded");
+    assert!(want_stats.access.accumulates > 0, "kernel counters missing");
+    for threads in [2usize, 5] {
+        let engine = build(threads);
+        let got = engine.infer(&input).unwrap();
+        assert_eq!(got, want, "mesh threads={threads} changed bits");
+        let stats = engine.mesh_stats().expect("stats recorded");
+        assert_eq!(
+            stats, want_stats,
+            "mesh threads={threads} changed MeshStats/AccessCounts"
+        );
+    }
+}
+
+#[test]
+fn default_threads_is_available_parallelism_and_matches_one_thread() {
+    // No .threads(..): the builder resolves available_parallelism; the
+    // result must still equal the single-thread reference bits.
+    let default = Engine::builder()
+        .model("hypernet20")
+        .seed(0xAA)
+        .precision(Precision::F16)
+        .build()
+        .unwrap();
+    let single = Engine::builder()
+        .model("hypernet20")
+        .seed(0xAA)
+        .precision(Precision::F16)
+        .threads(1)
+        .build()
+        .unwrap();
+    let input = random_input(default.input_len(), 5);
+    assert_eq!(default.infer(&input).unwrap(), single.infer(&input).unwrap());
+}
+
+#[test]
+fn zero_threads_is_a_builder_error() {
+    let err = Engine::builder()
+        .model("hypernet20")
+        .threads(0)
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, EngineError::Builder(_)), "{err}");
+    assert!(err.to_string().contains("threads"), "{err}");
+}

@@ -1,0 +1,117 @@
+//! Registry-wide functional-vs-mesh bit-exactness: every entry of the
+//! built-in `NetworkRegistry` — including YOLOv3, whose FPN laterals
+//! exercise the 2× nearest-upsample + halo re-exchange path — must
+//! produce bit-identical outputs on the single-chip functional backend
+//! and the 2×2 systolic mesh, from the same spec + seed. Small
+//! resolutions keep the sweep fast; shapes are chosen so every tensor
+//! (down to the deepest /32 grid) divides over the mesh.
+
+use std::collections::HashMap;
+
+use hyperdrive::engine::{Engine, Precision};
+use hyperdrive::model::NetworkRegistry;
+use hyperdrive::util::SplitMix64;
+
+fn random_input(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..len).map(|_| rng.next_sym()).collect()
+}
+
+#[test]
+fn every_registry_entry_is_bit_exact_on_both_backends() {
+    // Per-entry sweep spec: smallest resolution whose tensors all
+    // divide over 2×2 chips. The upsampling network (yolov3) and the
+    // AOT twin run the silicon's FP16 datapath to also pin the rounding
+    // order; the rest use f32 (bit-exactness is equally strict, the
+    // sweep just runs faster without per-accumulate rounding).
+    let sweep: HashMap<&str, (&str, Precision)> = [
+        ("resnet18", ("resnet18@64x64", Precision::F32)),
+        ("resnet34", ("resnet34@64x64", Precision::F32)),
+        ("resnet50", ("resnet50@64x64", Precision::F32)),
+        ("resnet152", ("resnet152@64x64", Precision::F32)),
+        ("shufflenet", ("shufflenet@64x64", Precision::F32)),
+        ("yolov3", ("yolov3@64x64", Precision::F16)),
+        ("tinyyolo", ("tinyyolo@64x64", Precision::F32)),
+        ("hypernet20", ("hypernet20", Precision::F16)),
+    ]
+    .into_iter()
+    .collect();
+
+    for name in NetworkRegistry::builtin().names() {
+        let (spec, prec) = *sweep
+            .get(name)
+            .unwrap_or_else(|| panic!("registry entry `{name}` has no sweep spec — add one"));
+        let functional = Engine::builder()
+            .model(spec)
+            .seed(0x5eed)
+            .precision(prec)
+            .threads(2)
+            .build()
+            .unwrap_or_else(|e| panic!("{spec} functional build: {e}"));
+        let mesh = Engine::builder()
+            .model(spec)
+            .seed(0x5eed)
+            .mesh(2, 2)
+            .precision(prec)
+            .build()
+            .unwrap_or_else(|e| panic!("{spec} mesh build: {e}"));
+        let input = random_input(functional.input_len(), 42);
+        let a = functional
+            .infer(&input)
+            .unwrap_or_else(|e| panic!("{spec} functional infer: {e}"));
+        let b = mesh
+            .infer(&input)
+            .unwrap_or_else(|e| panic!("{spec} mesh infer: {e}"));
+        assert_eq!(a, b, "{spec} ({prec:?}) diverged across backends");
+        assert!(
+            a.iter().all(|v| v.is_finite()),
+            "{spec} produced non-finite outputs"
+        );
+        let stats = mesh.mesh_stats().expect("mesh stats recorded");
+        assert!(stats.access.fmm_writes > 0, "{spec}: no kernel traffic counted");
+    }
+}
+
+#[test]
+fn yolov3_traces_match_layer_by_layer_including_upsample() {
+    // The per-step trace compares every intermediate FM, so a
+    // divergence pinpoints the first bad layer; the upsampled laterals
+    // (h0lat/h1lat) report their doubled shape on both backends.
+    let functional = Engine::builder()
+        .model("yolov3@64x64")
+        .seed(7)
+        .precision(Precision::F16)
+        .threads(2)
+        .build()
+        .unwrap();
+    let mesh = Engine::builder()
+        .model("yolov3@64x64")
+        .seed(7)
+        .mesh(2, 2)
+        .precision(Precision::F16)
+        .build()
+        .unwrap();
+    let input = random_input(functional.input_len(), 9);
+    let mut func_fms: Vec<(String, (usize, usize, usize), Vec<f32>)> = Vec::new();
+    functional
+        .infer_traced(&input, &mut |t| {
+            func_fms.push((t.layer.to_string(), t.shape, t.output.to_vec()));
+        })
+        .unwrap();
+    let (_, (_, lat_h, lat_w), _) = func_fms
+        .iter()
+        .find(|(n, _, _)| n == "h0lat")
+        .expect("h0lat traced");
+    // 64×64 image → scale-0 grid 2×2, upsampled lateral 4×4.
+    assert_eq!((*lat_h, *lat_w), (4, 4), "h0lat must be stored upsampled");
+    let mut steps = 0usize;
+    mesh.infer_traced(&input, &mut |t| {
+        let (name, shape, data) = &func_fms[t.step];
+        assert_eq!(t.layer, name.as_str());
+        assert_eq!(t.shape, *shape, "step {} ({name}) shape", t.step);
+        assert_eq!(t.output, &data[..], "step {} ({name}) diverged", t.step);
+        steps += 1;
+    })
+    .unwrap();
+    assert_eq!(steps, func_fms.len());
+}
