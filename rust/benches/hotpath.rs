@@ -5,9 +5,15 @@
 //!
 //! Besides the printed table, the run emits a machine-readable
 //! `BENCH_hotpath.json` (per-entry wall time, MACs/s where the entry is
-//! a conv workload, and the thread count) so the perf trajectory is
-//! tracked across PRs instead of only printed. `HOTPATH_TINY=1` runs a
-//! reduced spec (CI smoke: the JSON contract, not the numbers).
+//! a conv workload, the thread count and a host fingerprint) so the
+//! perf trajectory is tracked across PRs instead of only printed. The
+//! conv workload is additionally timed on the *pre-optimization*
+//! kernel (`testkit::reference_run_tile` — the "… reference kernel"
+//! entries), giving every run a live, machine-local baseline;
+//! `scripts/bench_diff.py` gates the optimized kernel's speedup and
+//! diffs against the committed `benches/BENCH_hotpath.baseline.json`.
+//! `HOTPATH_TINY=1` runs a reduced spec (CI smoke: the JSON contract
+//! and the gates, not publication numbers).
 
 mod bench_util;
 
@@ -17,9 +23,10 @@ use hyperdrive::coordinator::memory;
 use hyperdrive::engine::{Engine, ServeOptions};
 use hyperdrive::model;
 use hyperdrive::network::ConvLayer;
-use hyperdrive::simulator::datapath::resolve_threads;
+use hyperdrive::simulator::datapath::{resolve_threads, TileGeom};
 use hyperdrive::simulator::mesh::{MeshSim, StepParams};
 use hyperdrive::simulator::{self, FeatureMap, Precision};
+use hyperdrive::testkit::reference_run_tile;
 use hyperdrive::util::f16::round_f16;
 use hyperdrive::util::SplitMix64;
 
@@ -47,10 +54,30 @@ fn json_escape(s: &str) -> String {
     out
 }
 
-fn write_json(path: &str, threads: usize, tiny: bool, entries: &[Entry]) {
+/// Stable-ish machine fingerprint: `scripts/bench_diff.py` only
+/// compares absolute times between runs that report the same host.
+/// Without `/proc/cpuinfo` (macOS/Windows) the fallback is only
+/// `os arch xN` — coarse enough that two different CPUs can collide,
+/// which is why the speedup gate (not the absolute diff) is the
+/// machine-independent check.
+fn host_fingerprint(threads: usize) -> String {
+    let cpu = std::fs::read_to_string("/proc/cpuinfo")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("model name"))
+                .and_then(|l| l.split(':').nth(1))
+                .map(|v| v.trim().to_string())
+        })
+        .unwrap_or_else(|| std::env::consts::ARCH.to_string());
+    format!("{} {cpu} x{threads}", std::env::consts::OS)
+}
+
+fn write_json(path: &str, threads: usize, tiny: bool, host: &str, entries: &[Entry]) {
     let mut body = String::new();
     body.push_str(&format!(
-        "{{\n  \"bench\": \"hotpath\",\n  \"threads\": {threads},\n  \"tiny\": {tiny},\n  \"entries\": [\n"
+        "{{\n  \"bench\": \"hotpath\",\n  \"threads\": {threads},\n  \"tiny\": {tiny},\n  \"host\": \"{}\",\n  \"entries\": [\n",
+        json_escape(host)
     ));
     for (i, e) in entries.iter().enumerate() {
         let macs = match e.macs_per_s {
@@ -117,11 +144,14 @@ fn main() {
         beta: &beta,
     };
     let layer_macs = l.macs() as f64;
+    // These two entries (and their reference-kernel twins below) feed
+    // the speedup gate in scripts/bench_diff.py, so even tiny mode
+    // warms up once and runs enough iterations for a stable min.
     for (name, prec) in [("F32", Precision::F32), ("F16", Precision::F16)] {
         let s = bench_util::bench_stats(
             &format!("chip sim conv {ch}×{ch}×{hw}² 3×3 ({name}, 1 thread)"),
-            if tiny { 0 } else { 2 },
-            it(20),
+            if tiny { 1 } else { 2 },
+            it(20).max(5),
             || {
                 let (out, _) = simulator::run_layer(&params, &input, None, prec, (7, 7));
                 std::hint::black_box(out.data[0]);
@@ -146,6 +176,55 @@ fn main() {
         },
     );
     record(&mut entries, s, Some(layer_macs));
+
+    // The pre-optimization per-element kernel (preserved in testkit as
+    // the correctness oracle), timed on the same conv: the *live*
+    // baseline. scripts/bench_diff.py gates the fast kernel's speedup
+    // against these entries on every run, machine-independently.
+    let geom = TileGeom {
+        oy0: 0,
+        oy1: hw,
+        ox0: 0,
+        ox1: hw,
+        iy0: 0,
+        ix0: 0,
+        tile_h: hw.div_ceil(7).max(1),
+        tile_w: hw.div_ceil(7).max(1),
+        in_tile_h: hw.div_ceil(7).max(1),
+        in_tile_w: hw.div_ceil(7).max(1),
+    };
+    let mut ref_out = vec![0.0f32; ch * hw * hw];
+    for (name, prec) in [("F32", Precision::F32), ("F16", Precision::F16)] {
+        let s = bench_util::bench_stats(
+            &format!("chip sim conv {ch}×{ch}×{hw}² 3×3 ({name}, 1 thread, reference kernel)"),
+            if tiny { 1 } else { 2 },
+            it(20).max(5),
+            || {
+                let mut write = |co: usize, oy: usize, ox: usize, v: f32| {
+                    ref_out[(co * hw + oy) * hw + ox] = v;
+                };
+                let acc = reference_run_tile(
+                    &l,
+                    &stream,
+                    &gamma,
+                    &beta,
+                    (0, ch),
+                    &input,
+                    None::<&FeatureMap>,
+                    prec,
+                    &geom,
+                    &mut write,
+                );
+                std::hint::black_box(acc.accumulates);
+                // Keep the accumulate chain observable, like the
+                // optimized twin's black_box(out.data[0]) — otherwise
+                // the dead stores to ref_out could be elided and the
+                // live baseline corrupted.
+                std::hint::black_box(ref_out[0]);
+            },
+        );
+        record(&mut entries, s, Some(layer_macs));
+    }
 
     // Weight packing + unpacking (the stream on/off-pin path).
     let s = bench_util::bench_stats(
@@ -245,5 +324,11 @@ fn main() {
     );
     record(&mut entries, s, None);
 
-    write_json("BENCH_hotpath.json", threads, tiny, &entries);
+    write_json(
+        "BENCH_hotpath.json",
+        threads,
+        tiny,
+        &host_fingerprint(threads),
+        &entries,
+    );
 }

@@ -13,7 +13,7 @@
 use crate::bwn::WeightStream;
 use crate::network::ConvLayer;
 
-use super::datapath::{resolve_threads, run_tile, weight_traffic, TileGeom};
+use super::datapath::{partition_ranges, resolve_threads, run_tile, weight_traffic, TileGeom};
 use super::fm::FeatureMap;
 
 pub use super::datapath::{AccessCounts, Precision};
@@ -106,36 +106,36 @@ pub fn run_layer_threads(
             &mut write,
         ));
     } else {
-        // Channels per worker; `chunks_mut` then yields exactly the
-        // per-worker channel planes (the last chunk may be shorter).
-        let per = l.n_out.div_ceil(workers);
+        // Balanced fan-out: every worker gets ⌊n/w⌋ or ⌈n/w⌉ channels.
+        // (The former `div_ceil` chunking could idle trailing workers
+        // entirely — 10 channels over 8 workers made chunks of 2, so
+        // only 5 workers computed anything.)
+        let ranges = partition_ranges(l.n_out, workers);
         let counts = std::thread::scope(|s| {
-            let handles: Vec<_> = out
-                .data
-                .chunks_mut(per * plane)
-                .enumerate()
-                .map(|(i, chunk)| {
-                    s.spawn(move || {
-                        let co0 = i * per;
-                        let co1 = co0 + chunk.len() / plane;
-                        let mut write = |co: usize, oy: usize, ox: usize, v: f32| {
-                            chunk[((co - co0) * ho + oy) * wo + ox] = v;
-                        };
-                        run_tile(
-                            l,
-                            p.stream,
-                            p.gamma,
-                            p.beta,
-                            (co0, co1),
-                            input,
-                            bypass,
-                            prec,
-                            &geom,
-                            &mut write,
-                        )
-                    })
-                })
-                .collect();
+            let mut rest = out.data.as_mut_slice();
+            let mut handles = Vec::with_capacity(ranges.len());
+            for &(co0, co1) in &ranges {
+                let (chunk, tail) =
+                    std::mem::take(&mut rest).split_at_mut((co1 - co0) * plane);
+                rest = tail;
+                handles.push(s.spawn(move || {
+                    let mut write = |co: usize, oy: usize, ox: usize, v: f32| {
+                        chunk[((co - co0) * ho + oy) * wo + ox] = v;
+                    };
+                    run_tile(
+                        l,
+                        p.stream,
+                        p.gamma,
+                        p.beta,
+                        (co0, co1),
+                        input,
+                        bypass,
+                        prec,
+                        &geom,
+                        &mut write,
+                    )
+                }));
+            }
             handles
                 .into_iter()
                 .map(|h| h.join().expect("datapath worker panicked"))
@@ -377,6 +377,33 @@ mod tests {
                 assert_eq!(got.data, want.data, "threads={threads} {prec:?}");
                 assert_eq!(acc, want_acc, "threads={threads} {prec:?}");
             }
+        }
+    }
+
+    #[test]
+    fn awkward_worker_counts_stay_balanced_and_bit_identical() {
+        // 10 output channels over 8 workers is the case the old
+        // `div_ceil` chunking mishandled (3 idle workers); together
+        // with other non-dividing counts, the balanced split must keep
+        // bits and counters identical to the single-thread run.
+        let mut rng = SplitMix64::new(0xba1a);
+        let l = ConvLayer::new("awk", 6, 10, 9, 9, 3, 1);
+        let (w, gamma, beta) = make_params(&l, &mut rng);
+        let input =
+            FeatureMap::from_vec(6, 9, 9, (0..6 * 81).map(|_| rng.next_sym()).collect());
+        let stream = pack_weights(&l, &w, 16);
+        let p = LayerParams {
+            layer: &l,
+            stream: &stream,
+            gamma: &gamma,
+            beta: &beta,
+        };
+        let (want, want_acc) = run_layer_threads(&p, &input, None, Precision::F16, (7, 7), 1);
+        for threads in [3usize, 4, 6, 8, 9, 10] {
+            let (got, acc) =
+                run_layer_threads(&p, &input, None, Precision::F16, (7, 7), threads);
+            assert_eq!(got.data, want.data, "threads={threads}");
+            assert_eq!(acc, want_acc, "threads={threads}");
         }
     }
 

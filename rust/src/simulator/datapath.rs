@@ -14,12 +14,34 @@
 //! checks compare two memory systems, not two arithmetic
 //! implementations.
 //!
+//! **Hot-path structure** (see DESIGN.md §Perf log). The kernel exploits
+//! the same locality the silicon does — image window stationary, weights
+//! streaming past it:
+//!
+//! * the input rectangle is staged *once per output-channel block* into a
+//!   channel-interleaved scratch buffer ([`InputSurface::gather`]), so the
+//!   cache-hostile CHW channel stride is paid once, not `co1−co0` times;
+//! * each output row is split into **interior** pixels (every filter tap
+//!   in-bounds → a branch-free tap-outer/channel-inner loop over
+//!   contiguous staged slices, several adjacent pixels' independent
+//!   accumulator chains interleaved to hide FP latency) and **border**
+//!   pixels (the checked zero-padding path — a thin perimeter);
+//! * every [`AccessCounts`] field is computed in closed form by
+//!   [`analytic_counts`] instead of per-element increments. The original
+//!   per-element counting kernel is preserved verbatim as
+//!   [`crate::testkit::reference_run_tile`], the oracle the equivalence
+//!   property tests compare against.
+//!
+//! None of this changes a single rounding step: each output pixel's FP16
+//! sequence is still tap-outer, channel-inner, inside one invocation in
+//! a fixed order, so results are bit-identical at any thread count and
+//! identical to the reference kernel at both precisions.
+//!
 //! The kernel is also the unit of parallelism: callers fan
 //! [`run_tile`] invocations out over scoped threads (output-channel
 //! ranges on a single chip, whole chips on the mesh — data-independent
-//! between exchange phases, exactly the paper's execution model). Every
-//! FP16 rounding step of one output pixel happens inside one invocation
-//! in a fixed order, so results are bit-identical at any thread count.
+//! between exchange phases, exactly the paper's execution model) using
+//! the balanced [`partition_ranges`] split.
 
 use crate::bwn::WeightStream;
 use crate::network::ConvLayer;
@@ -89,12 +111,34 @@ impl AccessCounts {
 pub trait InputSurface {
     /// Value of channel `ch` at global `(gy, gx)`; both in-FM.
     fn read(&self, ch: usize, gy: isize, gx: isize) -> f32;
+
+    /// Bulk read of channels `[ch0, ch1)` at global `(gy, gx)` into
+    /// `out` (`out.len() == ch1 − ch0`) — the staging primitive of the
+    /// hot path. Semantically identical to calling [`Self::read`] per
+    /// channel (the default does exactly that); implementations
+    /// override it to hoist the coordinate translation and bounds
+    /// checks out of the channel loop.
+    fn gather(&self, ch0: usize, ch1: usize, gy: isize, gx: isize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), ch1 - ch0);
+        for (slot, ch) in out.iter_mut().zip(ch0..ch1) {
+            *slot = self.read(ch, gy, gx);
+        }
+    }
 }
 
 impl InputSurface for FeatureMap {
     #[inline]
     fn read(&self, ch: usize, gy: isize, gx: isize) -> f32 {
         self.get(ch, gy as usize, gx as usize)
+    }
+
+    #[inline]
+    fn gather(&self, ch0: usize, ch1: usize, gy: isize, gx: isize, out: &mut [f32]) {
+        let plane = self.h * self.w;
+        let base = gy as usize * self.w + gx as usize;
+        for (slot, ch) in out.iter_mut().zip(ch0..ch1) {
+            *slot = self.data[ch * plane + base];
+        }
     }
 }
 
@@ -122,16 +166,284 @@ pub struct TileGeom {
     pub in_tile_w: usize,
 }
 
+/// Every [`AccessCounts`] field of one [`run_tile`] invocation in closed
+/// form per `(layer, co-range, geom)` rectangle — no per-element
+/// increments on the compute path.
+///
+/// The only non-trivial field is `neighbor_reads`: a read is a
+/// neighbour-bank access iff its input-space Tile-PU patch differs from
+/// the output pixel's patch on *either* axis. Both the in-bounds
+/// predicate and the patch-match predicate factor over the two axes, so
+/// with `total_y/x` the per-axis count of in-bounds `(pixel, tap)`
+/// pairs and `match_y/x` the in-bounds *and* patch-matching count, the
+/// crossing pairs are `total_y·total_x − match_y·match_x` — an
+/// `O((rows + cols)·k)` computation instead of `O(rows·cols·k²·c_in)`
+/// increments. Equality with the per-element counting oracle
+/// ([`crate::testkit::reference_run_tile`]) is property-tested in
+/// `tests/datapath_equivalence.rs`.
+pub fn analytic_counts(
+    layer: &ConvLayer,
+    (co0, co1): (usize, usize),
+    has_bypass: bool,
+    geom: &TileGeom,
+) -> AccessCounts {
+    let l = layer;
+    let nco = co1.saturating_sub(co0) as u64;
+    let rows = geom.oy1.saturating_sub(geom.oy0) as u64;
+    let cols = geom.ox1.saturating_sub(geom.ox0) as u64;
+    let pix = rows * cols;
+    let nie = (l.n_in / l.groups) as u64;
+    let taps = (l.k * l.k) as u64;
+    let dlo = -((l.k / 2) as isize);
+    let dhi = (l.k - 1) as isize + dlo;
+
+    let axis = |o0: usize, o1: usize, dim: usize, origin: isize, out_tile: usize, in_tile: usize| {
+        let mut total = 0u64;
+        let mut matching = 0u64;
+        for o in o0..o1 {
+            let t_out = ((o - o0) / out_tile) as isize;
+            for d in dlo..=dhi {
+                let i = (o * l.stride) as isize + d;
+                if i < 0 || i >= dim as isize {
+                    continue;
+                }
+                total += 1;
+                if (i - origin).div_euclid(in_tile as isize) == t_out {
+                    matching += 1;
+                }
+            }
+        }
+        (total, matching)
+    };
+    let (ty, my) = axis(geom.oy0, geom.oy1, l.h, geom.iy0, geom.tile_h, geom.in_tile_h);
+    let (tx, mx) = axis(geom.ox0, geom.ox1, l.w, geom.ix0, geom.tile_w, geom.in_tile_w);
+
+    let conv = nco * pix * taps * nie;
+    let per_pixel = nco * pix;
+    let bypassed = if has_bypass { per_pixel } else { 0 };
+    AccessCounts {
+        fmm_reads: conv + bypassed,
+        fmm_writes: per_pixel,
+        stream_words: 0,
+        wbuf_reads: 0,
+        neighbor_reads: nco * nie * (ty * tx - my * mx),
+        post_mults: if l.bnorm { per_pixel } else { 0 },
+        post_adds: per_pixel + bypassed,
+        accumulates: conv,
+    }
+}
+
+/// Split `0..n` into `min(parts, n)` contiguous non-empty ranges whose
+/// lengths differ by at most one (`⌊n/p⌋` or `⌈n/p⌉`) — the fan-out
+/// split used by `chip::run_layer_threads` (output-channel ranges) and
+/// the mesh's per-step chip chunks. A plain `div_ceil` chunking can
+/// idle trailing workers entirely (10 channels over 8 workers → chunks
+/// of 2 → 5 busy, 3 idle); the balanced split keeps every worker busy.
+pub fn partition_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, n);
+    let (base, rem) = (n / parts, n % parts);
+    let mut ranges = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let end = start + base + usize::from(i < rem);
+        ranges.push((start, end));
+        start = end;
+    }
+    ranges
+}
+
+/// Number of adjacent interior pixels accumulated in lockstep. Their
+/// per-pixel chains are independent, so the CPU overlaps the FP (and
+/// FP16-rounding) latencies of `PIXEL_BLOCK` chains while each pixel
+/// still sees its exact serial accumulation order.
+const PIXEL_BLOCK: usize = 4;
+
+#[inline]
+fn sign_apply(x: f32, mask: u32) -> f32 {
+    f32::from_bits(x.to_bits() ^ mask)
+}
+
+/// Output-coordinate range `[lo, hi)` whose every tap displacement in
+/// `dlo..=dhi` stays inside `[0, dim)` at the given stride (`hi < lo`
+/// means no interior pixel exists; callers clamp).
+fn interior_range(dim: usize, stride: usize, dlo: isize, dhi: isize) -> (usize, usize) {
+    let lo = if dlo < 0 {
+        ((-dlo) as usize).div_ceil(stride)
+    } else {
+        0
+    };
+    let hi = if dim > dhi as usize {
+        (dim - 1 - dhi as usize) / stride + 1
+    } else {
+        0
+    };
+    (lo, hi)
+}
+
+/// Stage the `[sy0, sy1) × [sx0, sx1)` input rectangle of channels
+/// `[ch0, ch0 + nie)` into the channel-interleaved scratch layout
+/// `stage[(y·sw + x)·nie + ci]`.
+fn stage_input<S: InputSurface + ?Sized>(
+    input: &S,
+    ch0: usize,
+    nie: usize,
+    (sy0, sy1, sx0, sx1): (usize, usize, usize, usize),
+    stage: &mut [f32],
+) {
+    let sw = sx1 - sx0;
+    for sy in 0..sy1 - sy0 {
+        for sx in 0..sw {
+            let o = (sy * sw + sx) * nie;
+            input.gather(
+                ch0,
+                ch0 + nie,
+                (sy0 + sy) as isize,
+                (sx0 + sx) as isize,
+                &mut stage[o..o + nie],
+            );
+        }
+    }
+}
+
+/// One interior pixel: every tap in-bounds, so the accumulate is a
+/// branch-free tap-outer/channel-inner pass over contiguous staged
+/// slices (Algorithm 1 lines 7–19, exact order preserved).
+#[inline]
+fn accum_interior(
+    stage: &[f32],
+    wmask: &[u32],
+    tap_off: &[isize],
+    center: usize,
+    nie: usize,
+    prec: Precision,
+) -> f32 {
+    let mut v = 0.0f32;
+    for (tap, &off) in tap_off.iter().enumerate() {
+        let base = (center as isize + off) as usize;
+        let xs = &stage[base..base + nie];
+        let ms = &wmask[tap * nie..(tap + 1) * nie];
+        match prec {
+            Precision::F32 => {
+                for (&x, &m) in xs.iter().zip(ms) {
+                    v += sign_apply(x, m);
+                }
+            }
+            Precision::F16 => {
+                for (&x, &m) in xs.iter().zip(ms) {
+                    v = round_f16(v + sign_apply(x, m));
+                }
+            }
+        }
+    }
+    v
+}
+
+/// [`PIXEL_BLOCK`] adjacent interior pixels of one output row at once.
+/// Each pixel's accumulator chain keeps its exact serial order (so the
+/// result is bit-identical to the scalar path); interleaving the
+/// independent chains is what hides the FP add / FP16-rounding latency.
+#[inline]
+#[allow(clippy::needless_range_loop)]
+fn accum_block(
+    stage: &[f32],
+    wmask: &[u32],
+    tap_off: &[isize],
+    center: usize,
+    step: usize,
+    nie: usize,
+    prec: Precision,
+) -> [f32; PIXEL_BLOCK] {
+    let mut v = [0.0f32; PIXEL_BLOCK];
+    for (tap, &off) in tap_off.iter().enumerate() {
+        let b0 = (center as isize + off) as usize;
+        let s0 = &stage[b0..b0 + nie];
+        let s1 = &stage[b0 + step..b0 + step + nie];
+        let s2 = &stage[b0 + 2 * step..b0 + 2 * step + nie];
+        let s3 = &stage[b0 + 3 * step..b0 + 3 * step + nie];
+        let ms = &wmask[tap * nie..(tap + 1) * nie];
+        match prec {
+            Precision::F32 => {
+                for i in 0..nie {
+                    let m = ms[i];
+                    v[0] += sign_apply(s0[i], m);
+                    v[1] += sign_apply(s1[i], m);
+                    v[2] += sign_apply(s2[i], m);
+                    v[3] += sign_apply(s3[i], m);
+                }
+            }
+            Precision::F16 => {
+                for i in 0..nie {
+                    let m = ms[i];
+                    v[0] = round_f16(v[0] + sign_apply(s0[i], m));
+                    v[1] = round_f16(v[1] + sign_apply(s1[i], m));
+                    v[2] = round_f16(v[2] + sign_apply(s2[i], m));
+                    v[3] = round_f16(v[3] + sign_apply(s3[i], m));
+                }
+            }
+        }
+    }
+    v
+}
+
+/// One border pixel: per-tap bounds checks implement the DDU's zero
+/// padding (a padded tap skips the accumulate — `v ± 0` is exact).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn accum_checked(
+    stage: &[f32],
+    wmask: &[u32],
+    (k, dlo): (usize, isize),
+    (h, w): (usize, usize),
+    (sy0, sx0, sw): (usize, usize, usize),
+    (iy, ix): (usize, usize),
+    nie: usize,
+    prec: Precision,
+) -> f32 {
+    let mut v = 0.0f32;
+    for tap in 0..k * k {
+        let ty = iy as isize + (tap / k) as isize + dlo;
+        let tx = ix as isize + (tap % k) as isize + dlo;
+        if ty < 0 || tx < 0 || ty >= h as isize || tx >= w as isize {
+            continue;
+        }
+        let base = ((ty as usize - sy0) * sw + (tx as usize - sx0)) * nie;
+        let xs = &stage[base..base + nie];
+        let ms = &wmask[tap * nie..(tap + 1) * nie];
+        match prec {
+            Precision::F32 => {
+                for (&x, &m) in xs.iter().zip(ms) {
+                    v += sign_apply(x, m);
+                }
+            }
+            Precision::F16 => {
+                for (&x, &m) in xs.iter().zip(ms) {
+                    v = round_f16(v + sign_apply(x, m));
+                }
+            }
+        }
+    }
+    v
+}
+
 /// Execute Algorithm 1 for output channels `[co0, co1)` over the output
 /// rectangle in `geom`, writing each finished pixel through `write(co,
-/// gy, gx, v)` and returning the traffic counters of this invocation.
+/// gy, gx, v)` and returning the traffic counters of this invocation
+/// (computed analytically — see [`analytic_counts`]).
 ///
 /// Loop order is the chip's exactly: filter-tap outer, input-channel
 /// inner (lines 7–19), the binary weight applied as a sign-bit XOR on
 /// the FP32 representation (line 17, hoisted per output channel into a
-/// `u32` mask table — see DESIGN.md §Perf log), then the §IV-B
-/// scale → bypass → bias → ReLU post sequence, optionally rounding
-/// every intermediate to FP16 like the silicon.
+/// `u32` mask table), then the §IV-B scale → bypass → bias → ReLU post
+/// sequence, optionally rounding every intermediate to FP16 like the
+/// silicon. The input rectangle is staged once per output-channel
+/// group into a channel-interleaved scratch buffer and re-read from
+/// there for every channel of the block; interior pixels take a
+/// branch-free blocked fast path, border pixels the checked padding
+/// path (DESIGN.md §Perf log). Bit-identical to
+/// [`crate::testkit::reference_run_tile`] at both precisions.
 #[allow(clippy::too_many_arguments)]
 pub fn run_tile<S, B, W>(
     layer: &ConvLayer,
@@ -151,18 +463,71 @@ where
     W: FnMut(usize, usize, usize, f32),
 {
     let l = layer;
-    let half = (l.k / 2) as isize;
+    let acc = analytic_counts(l, (co0, co1), bypass.is_some(), geom);
+    if co0 >= co1 || geom.oy0 >= geom.oy1 || geom.ox0 >= geom.ox1 {
+        return acc;
+    }
+    let (k, stride) = (l.k, l.stride);
+    let dlo = -((k / 2) as isize);
+    let dhi = (k - 1) as isize + dlo;
     let group_size_out = l.n_out / l.groups;
-    let n_in_eff = l.n_in / l.groups;
-    let taps = l.k * l.k;
-    let mut acc = AccessCounts::default();
-    let mut wmask = vec![0u32; taps * n_in_eff];
+    let nie = l.n_in / l.groups;
+    let taps = k * k;
+
+    // Staged rectangle: the in-bounds bounding box of every read the
+    // output rectangle can issue.
+    let sy0 = ((geom.oy0 * stride) as isize + dlo).clamp(0, l.h as isize) as usize;
+    let sy1 = (((geom.oy1 - 1) * stride) as isize + dhi + 1).clamp(0, l.h as isize) as usize;
+    let sx0 = ((geom.ox0 * stride) as isize + dlo).clamp(0, l.w as isize) as usize;
+    let sx1 = (((geom.ox1 - 1) * stride) as isize + dhi + 1).clamp(0, l.w as isize) as usize;
+    let (sh, sw) = (sy1 - sy0, sx1 - sx0);
+
+    // Interior pixels: every tap lands inside the FM.
+    let (yin_lo, yin_hi) = interior_range(l.h, stride, dlo, dhi);
+    let (xin_lo, xin_hi) = interior_range(l.w, stride, dlo, dhi);
+    let xi0 = xin_lo.clamp(geom.ox0, geom.ox1);
+    let xi1 = xin_hi.clamp(xi0, geom.ox1);
+
+    // Per-tap displacement inside the staged buffer, in f32 elements.
+    let tap_off: Vec<isize> = (0..taps)
+        .map(|t| {
+            let dy = (t / k) as isize + dlo;
+            let dx = (t % k) as isize + dlo;
+            (dy * sw as isize + dx) * nie as isize
+        })
+        .collect();
+
+    let mut wmask = vec![0u32; taps * nie];
+    let mut stage = vec![0.0f32; sh * sw * nie];
+    let mut staged_group = usize::MAX;
+
+    // §IV-B order: scale → bypass → bias → ReLU.
+    let mut emit = |co: usize, oy: usize, ox: usize, mut v: f32| {
+        if l.bnorm {
+            v = rnd(prec, v * gamma[co]);
+        }
+        if let Some(bp) = bypass {
+            v = rnd(prec, v + bp.read(co, oy as isize, ox as isize));
+        }
+        v = rnd(prec, v + beta[co]);
+        if l.relu && v < 0.0 {
+            v = 0.0;
+        }
+        write(co, oy, ox, v);
+    };
+
     for co in co0..co1 {
         let g = co / group_size_out;
-        let cin_base = g * n_in_eff;
+        if g != staged_group {
+            // Stage the group's input channels once; every output
+            // channel of the block re-reads the interleaved buffer.
+            stage_input(input, g * nie, nie, (sy0, sy1, sx0, sx1), &mut stage);
+            staged_group = g;
+        }
+        // Line 17's binary weight as a sign-bit XOR mask, per channel.
         for tap in 0..taps {
-            for ci in 0..n_in_eff {
-                wmask[tap * n_in_eff + ci] = if stream.weight(co, ci, tap) > 0.0 {
+            for ci in 0..nie {
+                wmask[tap * nie + ci] = if stream.weight(co, ci, tap) > 0.0 {
                     0
                 } else {
                     0x8000_0000
@@ -170,66 +535,66 @@ where
             }
         }
         for oy in geom.oy0..geom.oy1 {
-            let ty = ((oy - geom.oy0) / geom.tile_h) as isize;
-            for ox in geom.ox0..geom.ox1 {
-                let tx = ((ox - geom.ox0) / geom.tile_w) as isize;
-                let mut v = 0.0f32;
-                // Algorithm 1 lines 7–19: tap outer, input channel inner.
-                for tap in 0..taps {
-                    let dy = (tap / l.k) as isize - half;
-                    let dx = (tap % l.k) as isize - half;
-                    let iy = (oy * l.stride) as isize + dy;
-                    let ix = (ox * l.stride) as isize + dx;
-                    acc.accumulates += n_in_eff as u64;
-                    acc.fmm_reads += n_in_eff as u64;
-                    if iy < 0 || ix < 0 || iy >= l.h as isize || ix >= l.w as isize {
-                        // Zero padding: the DDU injects zeros; v is
-                        // unchanged (v ± 0 == v bit-exactly).
-                        continue;
-                    }
-                    // Tile-PU patch of the read, in the local grid
-                    // (negative → a halo pixel from a neighbour chip).
-                    let t_in = (
-                        (iy - geom.iy0).div_euclid(geom.in_tile_h as isize),
-                        (ix - geom.ix0).div_euclid(geom.in_tile_w as isize),
+            let iy = oy * stride;
+            if oy < yin_lo || oy >= yin_hi {
+                // Border row: every tap is bounds-checked.
+                for ox in geom.ox0..geom.ox1 {
+                    let v = accum_checked(
+                        &stage,
+                        &wmask,
+                        (k, dlo),
+                        (l.h, l.w),
+                        (sy0, sx0, sw),
+                        (iy, ox * stride),
+                        nie,
+                        prec,
                     );
-                    if t_in != (ty, tx) {
-                        acc.neighbor_reads += n_in_eff as u64;
-                    }
-                    let row = &wmask[tap * n_in_eff..(tap + 1) * n_in_eff];
-                    // Line 17: sign-select accumulate (sign-bit XOR).
-                    match prec {
-                        Precision::F32 => {
-                            for (ci, &mask) in row.iter().enumerate() {
-                                let x = input.read(cin_base + ci, iy, ix);
-                                v += f32::from_bits(x.to_bits() ^ mask);
-                            }
-                        }
-                        Precision::F16 => {
-                            for (ci, &mask) in row.iter().enumerate() {
-                                let x = input.read(cin_base + ci, iy, ix);
-                                v = round_f16(v + f32::from_bits(x.to_bits() ^ mask));
-                            }
-                        }
-                    }
+                    emit(co, oy, ox, v);
                 }
-                // §IV-B order: scale → bypass → bias → ReLU.
-                if l.bnorm {
-                    v = rnd(prec, v * gamma[co]);
-                    acc.post_mults += 1;
+                continue;
+            }
+            let row = (iy - sy0) * sw;
+            for ox in geom.ox0..xi0 {
+                let v = accum_checked(
+                    &stage,
+                    &wmask,
+                    (k, dlo),
+                    (l.h, l.w),
+                    (sy0, sx0, sw),
+                    (iy, ox * stride),
+                    nie,
+                    prec,
+                );
+                emit(co, oy, ox, v);
+            }
+            let step = stride * nie;
+            let mut ox = xi0;
+            while ox + PIXEL_BLOCK <= xi1 {
+                let center = (row + ox * stride - sx0) * nie;
+                let vs = accum_block(&stage, &wmask, &tap_off, center, step, nie, prec);
+                for (p, &v) in vs.iter().enumerate() {
+                    emit(co, oy, ox + p, v);
                 }
-                if let Some(bp) = bypass {
-                    v = rnd(prec, v + bp.read(co, oy as isize, ox as isize));
-                    acc.fmm_reads += 1;
-                    acc.post_adds += 1;
-                }
-                v = rnd(prec, v + beta[co]);
-                acc.post_adds += 1;
-                if l.relu && v < 0.0 {
-                    v = 0.0;
-                }
-                write(co, oy, ox, v);
-                acc.fmm_writes += 1;
+                ox += PIXEL_BLOCK;
+            }
+            while ox < xi1 {
+                let center = (row + ox * stride - sx0) * nie;
+                let v = accum_interior(&stage, &wmask, &tap_off, center, nie, prec);
+                emit(co, oy, ox, v);
+                ox += 1;
+            }
+            for ox in xi1..geom.ox1 {
+                let v = accum_checked(
+                    &stage,
+                    &wmask,
+                    (k, dlo),
+                    (l.h, l.w),
+                    (sy0, sx0, sw),
+                    (iy, ox * stride),
+                    nie,
+                    prec,
+                );
+                emit(co, oy, ox, v);
             }
         }
     }
@@ -264,6 +629,7 @@ pub fn resolve_threads(threads: usize) -> usize {
 mod tests {
     use super::*;
     use crate::bwn::pack_weights;
+    use crate::testkit::reference_run_tile;
     use crate::util::SplitMix64;
 
     /// The kernel must not care how the caller addresses its memory:
@@ -276,7 +642,8 @@ mod tests {
         }
         impl InputSurface for Shifted<'_> {
             fn read(&self, ch: usize, gy: isize, gx: isize) -> f32 {
-                // Same values, different address computation path.
+                // Same values, different address computation path (and
+                // the default per-channel `gather`).
                 self.fm.data[(ch * self.fm.h + gy as usize) * self.fm.w + gx as usize]
             }
         }
@@ -376,6 +743,132 @@ mod tests {
         }
         assert_eq!(whole, split);
         assert_eq!(acc, sum);
+    }
+
+    /// Fast unit-level anchor for the full property sweep in
+    /// `tests/datapath_equivalence.rs`: one awkward fixed case (odd
+    /// sizes, stride 2, groups, bypass) against the per-element
+    /// counting oracle, both precisions.
+    #[test]
+    fn fast_path_matches_reference_oracle_fixed_case() {
+        let mut rng = SplitMix64::new(0x0dd);
+        let l = ConvLayer::new("t", 6, 10, 7, 5, 3, 2)
+            .with_groups(2)
+            .with_bypass(true);
+        let nie = l.n_in / l.groups;
+        let w: Vec<f32> = (0..l.n_out * nie * 9).map(|_| rng.next_sym()).collect();
+        let stream = pack_weights(&l, &w, 16);
+        let gamma: Vec<f32> = (0..10).map(|_| 0.5 + rng.next_f32()).collect();
+        let beta: Vec<f32> = (0..10).map(|_| rng.next_sym()).collect();
+        let fm = FeatureMap::from_vec(6, 7, 5, (0..6 * 35).map(|_| rng.next_sym()).collect());
+        let (ho, wo) = (l.h_out(), l.w_out());
+        let byp = FeatureMap::from_vec(
+            10,
+            ho,
+            wo,
+            (0..10 * ho * wo).map(|_| rng.next_sym()).collect(),
+        );
+        let geom = TileGeom {
+            oy0: 0,
+            oy1: ho,
+            ox0: 0,
+            ox1: wo,
+            iy0: 0,
+            ix0: 0,
+            tile_h: 2,
+            tile_w: 2,
+            in_tile_h: 3,
+            in_tile_w: 3,
+        };
+        for prec in [Precision::F16, Precision::F32] {
+            let mut fast = vec![0.0f32; 10 * ho * wo];
+            let mut refr = vec![0.0f32; 10 * ho * wo];
+            let acc_fast = run_tile(
+                &l,
+                &stream,
+                &gamma,
+                &beta,
+                (0, 10),
+                &fm,
+                Some(&byp),
+                prec,
+                &geom,
+                &mut |co, oy, ox, v| fast[(co * ho + oy) * wo + ox] = v,
+            );
+            let acc_ref = reference_run_tile(
+                &l,
+                &stream,
+                &gamma,
+                &beta,
+                (0, 10),
+                &fm,
+                Some(&byp),
+                prec,
+                &geom,
+                &mut |co, oy, ox, v| refr[(co * ho + oy) * wo + ox] = v,
+            );
+            assert_eq!(fast, refr, "{prec:?} outputs diverged");
+            assert_eq!(acc_fast, acc_ref, "{prec:?} counters diverged");
+        }
+    }
+
+    #[test]
+    fn analytic_counts_empty_ranges_are_zero() {
+        let l = ConvLayer::new("t", 4, 8, 6, 6, 3, 1);
+        let geom = TileGeom {
+            oy0: 3,
+            oy1: 3,
+            ox0: 0,
+            ox1: 6,
+            iy0: 0,
+            ix0: 0,
+            tile_h: 1,
+            tile_w: 1,
+            in_tile_h: 1,
+            in_tile_w: 1,
+        };
+        assert_eq!(
+            analytic_counts(&l, (0, 8), false, &geom),
+            AccessCounts::default()
+        );
+        let full = TileGeom { oy0: 0, oy1: 6, ..geom };
+        assert_eq!(
+            analytic_counts(&l, (5, 5), true, &full),
+            AccessCounts::default()
+        );
+    }
+
+    #[test]
+    fn balanced_partition_keeps_every_worker_busy() {
+        // 10 over 8 used to leave 3 workers idle under div_ceil chunks
+        // (5 chunks of 2); the balanced split hands out 2,2,1,1,1,1,1,1.
+        for (n, parts) in [
+            (10usize, 8usize),
+            (7, 3),
+            (5, 4),
+            (16, 16),
+            (3, 64),
+            (1, 1),
+            (20, 7),
+        ] {
+            let ranges = partition_ranges(n, parts);
+            assert_eq!(ranges.len(), parts.min(n), "({n}, {parts})");
+            assert_eq!(ranges[0].0, 0);
+            assert_eq!(ranges.last().unwrap().1, n);
+            for win in ranges.windows(2) {
+                assert_eq!(win[0].1, win[1].0, "({n}, {parts}) not contiguous");
+            }
+            let (lo, hi) = (n / ranges.len(), n.div_ceil(ranges.len()));
+            for &(a, b) in &ranges {
+                assert!(b > a, "({n}, {parts}) empty range");
+                assert!(
+                    b - a == lo || b - a == hi,
+                    "({n}, {parts}) unbalanced: {}",
+                    b - a
+                );
+            }
+        }
+        assert!(partition_ranges(0, 4).is_empty());
     }
 
     #[test]

@@ -54,14 +54,17 @@ impl FeatureMap {
         }
     }
 
-    /// Extract the spatial sub-tile `[y0..y1) × [x0..x1)` of all channels.
+    /// Extract the spatial sub-tile `[y0..y1) × [x0..x1)` of all
+    /// channels — one `copy_from_slice` per row, not per-element
+    /// `get`/`set` (rows are contiguous in the `[c][y][x]` layout).
     pub fn slice(&self, y0: usize, y1: usize, x0: usize, x1: usize) -> FeatureMap {
-        let mut out = FeatureMap::zeros(self.c, y1 - y0, x1 - x0);
+        let (sh, sw) = (y1 - y0, x1 - x0);
+        let mut out = FeatureMap::zeros(self.c, sh, sw);
         for c in 0..self.c {
             for y in y0..y1 {
-                for x in x0..x1 {
-                    out.set(c, y - y0, x - x0, self.get(c, y, x));
-                }
+                let src = (c * self.h + y) * self.w + x0;
+                let dst = (c * sh + (y - y0)) * sw;
+                out.data[dst..dst + sw].copy_from_slice(&self.data[src..src + sw]);
             }
         }
         out

@@ -137,8 +137,12 @@ impl ExtTile {
         }
     }
 
+    /// Translate a global coordinate into the tile+halo-local flat
+    /// pixel index, asserting it is inside the window — shared by the
+    /// scalar `read` and the bulk `gather` so the bounds rule cannot
+    /// diverge between them.
     #[inline]
-    fn read(&self, c: usize, gy: isize, gx: isize) -> f32 {
+    fn local_pixel(&self, gy: isize, gx: isize) -> usize {
         let ly = gy - self.y0 as isize + 1;
         let lx = gx - self.x0 as isize + 1;
         assert!(
@@ -149,7 +153,13 @@ impl ExtTile {
             self.x0,
             self.x1
         );
-        self.data.get(c, ly as usize, lx as usize)
+        ly as usize * self.data.w + lx as usize
+    }
+
+    #[inline]
+    fn read(&self, c: usize, gy: isize, gx: isize) -> f32 {
+        let base = self.local_pixel(gy, gx);
+        self.data.data[c * self.data.h * self.data.w + base]
     }
 
     #[inline]
@@ -189,6 +199,17 @@ impl InputSurface for ExtTile {
     fn read(&self, ch: usize, gy: isize, gx: isize) -> f32 {
         ExtTile::read(self, ch, gy, gx)
     }
+
+    /// Fast staging path: translate the global coordinate (and run the
+    /// tile+halo bounds check) once, then stream the channel plane.
+    #[inline]
+    fn gather(&self, ch0: usize, ch1: usize, gy: isize, gx: isize, out: &mut [f32]) {
+        let base = self.local_pixel(gy, gx);
+        let plane = self.data.h * self.data.w;
+        for (slot, ch) in out.iter_mut().zip(ch0..ch1) {
+            *slot = self.data.data[ch * plane + base];
+        }
+    }
 }
 
 /// One chip's conv-input view for a step: the `src` tile, extended
@@ -211,6 +232,26 @@ impl InputSurface for ChipInput<'_> {
             self.cat
                 .expect("concat tile validated per step")
                 .read(ch - self.src_c, gy, gx)
+        }
+    }
+
+    /// Split the requested channel range at the src/concat seam and
+    /// forward to the tiles' fast gathers.
+    #[inline]
+    fn gather(&self, ch0: usize, ch1: usize, gy: isize, gx: isize, out: &mut [f32]) {
+        let n_src = self.src_c.min(ch1).saturating_sub(ch0);
+        if n_src > 0 {
+            self.src.gather(ch0, ch0 + n_src, gy, gx, &mut out[..n_src]);
+        }
+        if ch0 + n_src < ch1 {
+            let cat = self.cat.expect("concat tile validated per step");
+            cat.gather(
+                ch0.max(self.src_c) - self.src_c,
+                ch1 - self.src_c,
+                gy,
+                gx,
+                &mut out[n_src..],
+            );
         }
     }
 }
@@ -436,11 +477,14 @@ impl MeshSim {
                         .map(|j| self.compute_chip(j, l, p, step.upsample2x, ho, wo))
                         .collect()
                 } else {
-                    let per = jobs.len().div_ceil(workers);
+                    // Balanced chip chunks (⌊n/w⌋ or ⌈n/w⌉ per worker),
+                    // like the single-chip channel fan-out.
+                    let ranges = datapath::partition_ranges(jobs.len(), workers);
                     std::thread::scope(|s| {
-                        let handles: Vec<_> = jobs
-                            .chunks(per)
-                            .map(|chunk| {
+                        let handles: Vec<_> = ranges
+                            .iter()
+                            .map(|&(a, b)| {
+                                let chunk = &jobs[a..b];
                                 s.spawn(move || {
                                     chunk
                                         .iter()

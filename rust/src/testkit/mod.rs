@@ -4,6 +4,15 @@
 //! [`check`] runs a property over `n` pseudo-random cases derived from a
 //! base seed; on failure it panics with the failing *case seed* so the
 //! exact case can be replayed in isolation with [`replay`].
+//!
+//! Also home of [`reference_run_tile`] — the pre-optimization per-element
+//! datapath kernel kept as the oracle the fast
+//! [`crate::simulator::datapath::run_tile`] is property-tested against
+//! (and benchmarked against in `benches/hotpath.rs`).
+
+pub mod reference;
+
+pub use reference::reference_run_tile;
 
 use crate::util::SplitMix64;
 

@@ -1,0 +1,133 @@
+//! The original (pre-optimization) Tile-PU datapath kernel, preserved
+//! verbatim as the oracle for the fast path.
+//!
+//! [`reference_run_tile`] is the per-element kernel the simulator ran
+//! before the staged/interior-split rewrite of
+//! [`crate::simulator::datapath::run_tile`] (DESIGN.md §Perf log): it
+//! reads every tap through a scalar [`InputSurface::read`], performs the
+//! padding and Tile-PU patch bookkeeping per element, and increments
+//! every [`AccessCounts`] field as the accesses happen. It is
+//! deliberately *not* shared with the production kernel — the whole
+//! point is that the two implementations are independent, so
+//! `tests/datapath_equivalence.rs` can assert the fast path is
+//! bit-identical (outputs *and* counters) at both precisions, and
+//! `benches/hotpath.rs` can time the pre-optimization kernel as the
+//! live baseline the speedup gate compares against.
+
+use crate::bwn::WeightStream;
+use crate::network::ConvLayer;
+use crate::simulator::datapath::{rnd, AccessCounts, InputSurface, Precision, TileGeom};
+use crate::util::f16::round_f16;
+
+/// Execute Algorithm 1 for output channels `[co0, co1)` over the output
+/// rectangle in `geom` — the original per-element implementation.
+///
+/// Same contract as [`crate::simulator::datapath::run_tile`]: tap-outer,
+/// channel-inner accumulation with the binary weight as a sign-bit XOR,
+/// then scale → bypass → bias → ReLU, every intermediate optionally
+/// rounded to FP16. Counters are incremented per element (padded taps
+/// included in `fmm_reads`/`accumulates`, exactly like the silicon's
+/// always-issued fetches).
+#[allow(clippy::too_many_arguments)]
+pub fn reference_run_tile<S, B, W>(
+    layer: &ConvLayer,
+    stream: &WeightStream,
+    gamma: &[f32],
+    beta: &[f32],
+    (co0, co1): (usize, usize),
+    input: &S,
+    bypass: Option<&B>,
+    prec: Precision,
+    geom: &TileGeom,
+    write: &mut W,
+) -> AccessCounts
+where
+    S: InputSurface + ?Sized,
+    B: InputSurface + ?Sized,
+    W: FnMut(usize, usize, usize, f32),
+{
+    let l = layer;
+    let half = (l.k / 2) as isize;
+    let group_size_out = l.n_out / l.groups;
+    let n_in_eff = l.n_in / l.groups;
+    let taps = l.k * l.k;
+    let mut acc = AccessCounts::default();
+    let mut wmask = vec![0u32; taps * n_in_eff];
+    for co in co0..co1 {
+        let g = co / group_size_out;
+        let cin_base = g * n_in_eff;
+        for tap in 0..taps {
+            for ci in 0..n_in_eff {
+                wmask[tap * n_in_eff + ci] = if stream.weight(co, ci, tap) > 0.0 {
+                    0
+                } else {
+                    0x8000_0000
+                };
+            }
+        }
+        for oy in geom.oy0..geom.oy1 {
+            let ty = ((oy - geom.oy0) / geom.tile_h) as isize;
+            for ox in geom.ox0..geom.ox1 {
+                let tx = ((ox - geom.ox0) / geom.tile_w) as isize;
+                let mut v = 0.0f32;
+                // Algorithm 1 lines 7–19: tap outer, input channel inner.
+                for tap in 0..taps {
+                    let dy = (tap / l.k) as isize - half;
+                    let dx = (tap % l.k) as isize - half;
+                    let iy = (oy * l.stride) as isize + dy;
+                    let ix = (ox * l.stride) as isize + dx;
+                    acc.accumulates += n_in_eff as u64;
+                    acc.fmm_reads += n_in_eff as u64;
+                    if iy < 0 || ix < 0 || iy >= l.h as isize || ix >= l.w as isize {
+                        // Zero padding: the DDU injects zeros; v is
+                        // unchanged (v ± 0 == v bit-exactly).
+                        continue;
+                    }
+                    // Tile-PU patch of the read, in the local grid
+                    // (negative → a halo pixel from a neighbour chip).
+                    let t_in = (
+                        (iy - geom.iy0).div_euclid(geom.in_tile_h as isize),
+                        (ix - geom.ix0).div_euclid(geom.in_tile_w as isize),
+                    );
+                    if t_in != (ty, tx) {
+                        acc.neighbor_reads += n_in_eff as u64;
+                    }
+                    let row = &wmask[tap * n_in_eff..(tap + 1) * n_in_eff];
+                    // Line 17: sign-select accumulate (sign-bit XOR).
+                    match prec {
+                        Precision::F32 => {
+                            for (ci, &mask) in row.iter().enumerate() {
+                                let x = input.read(cin_base + ci, iy, ix);
+                                v += f32::from_bits(x.to_bits() ^ mask);
+                            }
+                        }
+                        Precision::F16 => {
+                            for (ci, &mask) in row.iter().enumerate() {
+                                let x = input.read(cin_base + ci, iy, ix);
+                                v = round_f16(v + f32::from_bits(x.to_bits() ^ mask));
+                            }
+                        }
+                    }
+                }
+                // §IV-B order: scale → bypass → bias → ReLU.
+                if l.bnorm {
+                    v = rnd(prec, v * gamma[co]);
+                    acc.post_mults += 1;
+                }
+                if let Some(bp) = bypass {
+                    v = rnd(prec, v + bp.read(co, oy as isize, ox as isize));
+                    acc.fmm_reads += 1;
+                    acc.post_adds += 1;
+                }
+                v = rnd(prec, v + beta[co]);
+                acc.post_adds += 1;
+                if l.relu && v < 0.0 {
+                    v = 0.0;
+                }
+                write(co, oy, ox, v);
+                acc.fmm_writes += 1;
+            }
+        }
+    }
+    acc
+}

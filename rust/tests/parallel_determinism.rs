@@ -25,7 +25,9 @@ fn functional_outputs_invariant_across_thread_counts() {
     };
     let input = random_input(16 * 32 * 32, 3);
     let want = build(1).infer(&input).unwrap();
-    for threads in [2usize, 3, 8] {
+    // 7 is the awkward case: it divides none of hypernet20's channel
+    // counts, so the balanced split hands out unequal (±1) ranges.
+    for threads in [2usize, 3, 7, 8] {
         let got = build(threads).infer(&input).unwrap();
         assert_eq!(got, want, "functional threads={threads} changed bits");
     }
