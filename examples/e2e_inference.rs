@@ -73,12 +73,12 @@ fn main() -> anyhow::Result<()> {
         .map(|_| (0..input.len()).map(|_| rng.next_gauss()).collect())
         .collect();
     let opts = ServeOptions { workers: 2, ..ServeOptions::default() };
-    let (concurrent, stats) = engine.serve(&batch, &opts)?;
+    let (concurrent, stats) = engine.serve(&batch, &opts)?.outputs()?;
     println!("{}", engine.report_with_serve(stats.clone()).serve_summary());
 
     // Concurrency must not change results: sequential == concurrent.
     let seq_opts = ServeOptions { workers: 1, ..ServeOptions::default() };
-    let (sequential, _) = engine.serve(&batch, &seq_opts)?;
+    let (sequential, _) = engine.serve(&batch, &seq_opts)?.outputs()?;
     assert_eq!(concurrent, sequential, "worker pool changed the logits");
     println!("concurrent ({} workers) == sequential logits ✓", stats.workers);
 

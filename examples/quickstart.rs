@@ -1,13 +1,14 @@
 //! Quickstart: the unified `Engine` façade in one page — build an
 //! engine over the functional chip simulator, run a traced inference,
-//! serve a concurrent batch, and read the typed report.
+//! serve a concurrent batch, host two models in an `InferenceService`,
+//! and read the typed report.
 //!
 //!     cargo run --release --example quickstart
 //!
 //! (No artifacts needed: the simulator backends generate deterministic
 //! seeded BWN parameters. For the PJRT backend see `e2e_inference`.)
 
-use hyperdrive::engine::{Engine, Precision, ServeOptions};
+use hyperdrive::engine::{Engine, InferRequest, InferenceService, ModelConfig, Precision, ServeOptions};
 use hyperdrive::model;
 use hyperdrive::util::SplitMix64;
 
@@ -45,16 +46,41 @@ fn main() -> anyhow::Result<()> {
     println!("ran {layers} layers; final FM has {} values, out[0..4] = {:?}",
              out.len(), &out[..4]);
 
-    // 3) Concurrent serving: bounded queue, 2 workers, latency stats.
+    // 3) Concurrent serving: bounded queue, 2 workers, per-request
+    //    results (a failing request costs only its own slot), stats.
     let batch: Vec<Vec<f32>> = (0..8)
         .map(|_| (0..engine.input_len()).map(|_| rng.next_sym()).collect())
         .collect();
     let opts = ServeOptions { workers: 2, ..ServeOptions::default() };
-    let (outs, stats) = engine.serve(&batch, &opts)?;
+    let outcome = engine.serve(&batch, &opts)?;
+    println!("{}", engine.report_with_serve(outcome.stats.clone()).serve_summary());
+    let (outs, _stats) = outcome.outputs()?; // all-or-nothing view
     assert_eq!(outs.len(), 8);
-    println!("{}", engine.report_with_serve(stats).serve_summary());
 
-    // 4) What the silicon would do for this network (typed report).
+    // 4) Multi-model serving: one long-lived InferenceService hosting
+    //    two registry models under a shared worker budget, routed by
+    //    name, with live metrics.
+    let service = InferenceService::builder()
+        .model_spec("hypernet20")
+        .model("tiny-resnet", ModelConfig::new("resnet18@32x32"))
+        .workers(2)
+        .build()?;
+    let input: Vec<f32> = (0..service.input_len("hypernet20").unwrap())
+        .map(|_| rng.next_sym())
+        .collect();
+    let ticket = service.submit(InferRequest {
+        model: "hypernet20".into(),
+        input,
+        id: 0,
+    })?;
+    let response = ticket.wait()?;
+    println!(
+        "service: request {} on `{}` took {:.2} ms",
+        response.id, response.model, response.latency_ms
+    );
+    print!("{}", service.shutdown().render_table());
+
+    // 5) What the silicon would do for this network (typed report).
     println!("{}", engine.report().summary());
     println!("quickstart OK");
     Ok(())

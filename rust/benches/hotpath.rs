@@ -304,8 +304,9 @@ fn main() {
             it(10).max(2),
             || {
                 let opts = ServeOptions { workers, ..ServeOptions::default() };
-                let (outs, _) = engine.serve(&batch, &opts).unwrap();
-                std::hint::black_box(outs.len());
+                let outcome = engine.serve(&batch, &opts).unwrap();
+                assert_eq!(outcome.failed(), 0);
+                std::hint::black_box(outcome.results.len());
             },
         );
         record(&mut entries, s, Some(4.0 * net_macs));

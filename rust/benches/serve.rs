@@ -1,0 +1,122 @@
+//! Serving-layer benchmark: a multi-model `InferenceService` driven by
+//! an interleaved synthetic workload at several worker counts, emitting
+//! `BENCH_serve.json` (throughput + worst-model p99 per worker count)
+//! so the serving scalability trajectory is tracked across PRs like the
+//! kernel numbers in `BENCH_hotpath.json`.
+//!
+//!     cargo bench --bench serve
+//!
+//! `SERVE_TINY=1` (or `HOTPATH_TINY=1`, so CI smoke jobs set one knob)
+//! runs a reduced request count — the JSON contract, not publication
+//! numbers. The CI `bench-smoke` job validates the emitted file.
+
+use hyperdrive::engine::{InferRequest, InferenceService};
+use hyperdrive::util::SplitMix64;
+
+const MODELS: [&str; 2] = ["hypernet20", "resnet18@32x32"];
+
+struct Row {
+    workers: usize,
+    ok: usize,
+    failed: usize,
+    total_s: f64,
+    req_per_s: f64,
+    p99_ms: f64,
+}
+
+fn run(workers: usize, requests: usize) -> Row {
+    let mut builder = InferenceService::builder().workers(workers).queue_depth(8);
+    for model in MODELS {
+        builder = builder.model_spec(model);
+    }
+    let service = builder.build().expect("service build");
+    let mut rng = SplitMix64::new(42);
+    // Pre-generate the workload so input synthesis is not timed.
+    let workload: Vec<(String, Vec<f32>)> = (0..requests)
+        .map(|i| {
+            let model = MODELS[i % MODELS.len()];
+            let len = service.input_len(model).expect("hosted model");
+            (model.to_string(), (0..len).map(|_| rng.next_sym()).collect())
+        })
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let tickets: Vec<_> = workload
+        .into_iter()
+        .enumerate()
+        .map(|(i, (model, input))| {
+            service
+                .submit(InferRequest {
+                    model,
+                    input,
+                    id: i as u64,
+                })
+                .expect("admission (Block policy) cannot fail here")
+        })
+        .collect();
+    let (mut ok, mut failed) = (0usize, 0usize);
+    for ticket in tickets {
+        match ticket.wait() {
+            Ok(_) => ok += 1,
+            Err(_) => failed += 1,
+        }
+    }
+    let total_s = t0.elapsed().as_secs_f64();
+    let metrics = service.shutdown();
+    let p99_ms = metrics
+        .per_model
+        .iter()
+        .map(|m| m.p99_ms)
+        .fold(0.0f64, f64::max);
+    Row {
+        workers,
+        ok,
+        failed,
+        total_s,
+        req_per_s: if total_s > 0.0 { ok as f64 / total_s } else { 0.0 },
+        p99_ms,
+    }
+}
+
+fn main() {
+    let tiny =
+        std::env::var_os("SERVE_TINY").is_some() || std::env::var_os("HOTPATH_TINY").is_some();
+    let requests = if tiny { 16 } else { 128 };
+
+    let mut rows = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let row = run(workers, requests);
+        println!(
+            "workers {}: {}/{} ok in {:.3} s → {:.1} req/s, worst-model p99 {:.2} ms",
+            row.workers, row.ok, requests, row.total_s, row.req_per_s, row.p99_ms
+        );
+        rows.push(row);
+    }
+
+    let mut body = format!(
+        "{{\n  \"bench\": \"serve\",\n  \"tiny\": {tiny},\n  \"requests\": {requests},\n  \
+         \"models\": [\"{}\", \"{}\"],\n  \"entries\": [\n",
+        MODELS[0], MODELS[1]
+    );
+    for (i, r) in rows.iter().enumerate() {
+        body.push_str(&format!(
+            "    {{\"workers\": {}, \"ok\": {}, \"failed\": {}, \"total_s\": {:.6}, \
+             \"req_per_s\": {:.3}, \"p99_ms\": {:.4}}}{}\n",
+            r.workers,
+            r.ok,
+            r.failed,
+            r.total_s,
+            r.req_per_s,
+            r.p99_ms,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    body.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_serve.json", &body) {
+        Ok(()) => println!("wrote BENCH_serve.json ({} worker counts)", rows.len()),
+        Err(e) => {
+            eprintln!("error: could not write BENCH_serve.json: {e}");
+            std::process::exit(1);
+        }
+    }
+}

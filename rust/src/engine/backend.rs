@@ -54,9 +54,11 @@ pub struct LayerTrace<'a> {
 
 /// A backend that can run inferences for one fixed network.
 ///
-/// `Send + Sync` is required so the serving layer
-/// ([`super::serve`]) can drive one backend from several worker
-/// threads concurrently.
+/// `Send + Sync` is required so the serving layers — the single-model
+/// batch wrapper ([`super::serve`]) and the long-lived multi-model
+/// [`super::service::InferenceService`] — can drive one backend from
+/// several worker threads concurrently (the service additionally holds
+/// backends as `Arc<dyn Backend>` handles shared with their engines).
 pub trait Backend: Send + Sync {
     /// Which backend this is.
     fn kind(&self) -> BackendKind;

@@ -28,14 +28,22 @@
 //! let mesh = Engine::builder().model("hypernet20").mesh(2, 2).build()?;
 //! assert_eq!(mesh.infer(&input)?, logits);
 //!
-//! // Concurrent serving on any backend.
+//! // Concurrent serving on any backend: per-request results (one
+//! // failing request never discards another's output) + statistics.
 //! let batch = vec![input; 8];
 //! let opts = ServeOptions { workers: 4, ..ServeOptions::default() };
-//! let (outs, stats) = engine.serve(&batch, &opts)?;
-//! println!("{}", engine.report_with_serve(stats).serve_summary());
+//! let outcome = engine.serve(&batch, &opts)?;
+//! println!("{}", engine.report_with_serve(outcome.stats.clone()).serve_summary());
+//! let (outs, _stats) = outcome.outputs()?; // all-or-nothing view
 //! # let _ = outs;
 //! # Ok(()) }
 //! ```
+//!
+//! `Engine::serve` is a compatibility wrapper over the long-lived,
+//! multi-model [`service::InferenceService`] — the first-class serving
+//! subsystem (named models, routed [`InferRequest`]s, admission
+//! policies, live [`ServiceMetrics`], hot add/remove); see
+//! [`service`].
 //!
 //! Every engine also yields a typed [`EngineReport`] (schedule, WCL
 //! memory analysis, mesh plan, energy breakdown) that the CLI, the
@@ -48,6 +56,7 @@ pub mod mesh;
 pub mod pjrt;
 pub mod report;
 pub mod serve;
+pub mod service;
 
 use std::fmt;
 use std::path::PathBuf;
@@ -65,7 +74,11 @@ use crate::ChipConfig;
 
 pub use backend::{Backend, BackendKind, LayerTrace, NetworkParams};
 pub use report::EngineReport;
-pub use serve::{percentile, ServeOptions, ServeStats};
+pub use serve::{percentile, ServeOptions, ServeOutcome, ServeStats};
+pub use service::{
+    AdmissionPolicy, InferRequest, InferResponse, InferenceService, ModelConfig, ModelMetrics,
+    ServeError, ServiceBuilder, ServiceMetrics, Ticket,
+};
 // Re-exported so engine consumers need no coordinator/simulator paths.
 pub use crate::coordinator::schedule::DepthwisePolicy;
 pub use crate::simulator::Precision;
@@ -135,6 +148,12 @@ impl From<MeshError> for EngineError {
     }
 }
 
+impl From<ServeError> for EngineError {
+    fn from(e: ServeError) -> Self {
+        EngineError::Backend(format!("serve: {e}"))
+    }
+}
+
 enum BackendImpl {
     Functional(FunctionalBackend),
     Mesh(MeshBackend),
@@ -150,6 +169,32 @@ impl BackendImpl {
             #[cfg(feature = "pjrt")]
             BackendImpl::Pjrt(b) => b,
         }
+    }
+}
+
+// Delegated so an `Arc<BackendImpl>` coerces to `Arc<dyn Backend>` —
+// that one shared handle is what lets an engine's backend be hosted by
+// an [`service::InferenceService`] (and by the `Engine::serve` compat
+// wrapper) without cloning the engine.
+impl Backend for BackendImpl {
+    fn kind(&self) -> BackendKind {
+        self.as_dyn().kind()
+    }
+
+    fn mesh_shape(&self) -> (usize, usize) {
+        self.as_dyn().mesh_shape()
+    }
+
+    fn infer(&self, input: &[f32]) -> Result<Vec<f32>, EngineError> {
+        self.as_dyn().infer(input)
+    }
+
+    fn infer_traced(
+        &self,
+        input: &[f32],
+        hook: &mut dyn FnMut(LayerTrace<'_>),
+    ) -> Result<Vec<f32>, EngineError> {
+        self.as_dyn().infer_traced(input, hook)
     }
 }
 
@@ -574,7 +619,7 @@ impl EngineBuilder {
             border_bits,
             serve: None,
         };
-        let backend = make(&net, &self)?;
+        let backend = Arc::new(make(&net, &self)?);
         Ok(Engine {
             backend,
             net,
@@ -585,9 +630,11 @@ impl EngineBuilder {
 }
 
 /// A built engine: one network bound to one backend, ready to infer,
-/// serve and report. See the [module docs](self).
+/// serve and report. See the [module docs](self). The backend sits
+/// behind an `Arc` so a [`service::InferenceService`] can host it
+/// while the engine stays usable.
 pub struct Engine {
-    backend: BackendImpl,
+    backend: Arc<BackendImpl>,
     net: Network,
     cfg: ChipConfig,
     report: EngineReport,
@@ -630,12 +677,23 @@ impl Engine {
     }
 
     /// Serve a FIFO batch over a bounded queue and `opts.workers`
-    /// concurrent workers; outputs come back in submission order.
+    /// concurrent workers — a thin compatibility wrapper over a
+    /// temporary single-model [`service::InferenceService`]. Results
+    /// come back **per request** in submission order
+    /// ([`ServeOutcome`]): a failing or panicking request costs its
+    /// own slot, never the batch. Use [`ServeOutcome::outputs`] for
+    /// the historical all-or-nothing view.
+    ///
+    /// Because the service's workers outlive this borrow, the wrapper
+    /// copies each input once to hand the service ownership. Hot
+    /// serving paths should submit through
+    /// [`service::InferenceService`] directly — its
+    /// [`InferRequest`] takes ownership and never copies.
     pub fn serve(
         &self,
         inputs: &[Vec<f32>],
         opts: &ServeOptions,
-    ) -> Result<(Vec<Vec<f32>>, ServeStats), EngineError> {
+    ) -> Result<ServeOutcome, EngineError> {
         let want = self.input_len();
         for (i, x) in inputs.iter().enumerate() {
             if x.len() != want {
@@ -645,7 +703,20 @@ impl Engine {
                 )));
             }
         }
-        serve::serve_on(self.backend.as_dyn(), self.net.total_ops(), inputs, opts)
+        serve::serve_outcome_on(
+            self.shared_backend(),
+            &self.net.name,
+            self.net.total_ops(),
+            inputs,
+            opts,
+        )
+    }
+
+    /// The engine's backend as a shareable handle — how a
+    /// [`service::InferenceService`] (and the serve wrapper) hosts
+    /// this engine's execution path without cloning the engine.
+    pub(crate) fn shared_backend(&self) -> Arc<dyn Backend> {
+        self.backend.clone()
     }
 
     /// The analytic report (schedule, memory, energy, mesh plan).
@@ -668,7 +739,7 @@ impl Engine {
     /// Measured border/corner traffic of the mesh backend's most recent
     /// inference (`None` on other backends or before any inference).
     pub fn mesh_stats(&self) -> Option<MeshStats> {
-        match &self.backend {
+        match &*self.backend {
             BackendImpl::Mesh(m) => m.last_stats(),
             _ => None,
         }
@@ -676,7 +747,7 @@ impl Engine {
 
     /// One-line description of the backend under the façade.
     pub fn describe(&self) -> String {
-        match &self.backend {
+        match &*self.backend {
             BackendImpl::Functional(_) => format!(
                 "functional chip simulator ({:?} datapath)",
                 self.report.precision
@@ -699,7 +770,7 @@ impl Engine {
     /// Load a golden f32 file from the PJRT artifact directory.
     pub fn golden(&self, file: &str) -> Result<Vec<f32>, EngineError> {
         #[cfg(feature = "pjrt")]
-        if let BackendImpl::Pjrt(p) = &self.backend {
+        if let BackendImpl::Pjrt(p) = &*self.backend {
             return p.golden(file);
         }
         Err(EngineError::Unsupported(format!(
@@ -710,7 +781,7 @@ impl Engine {
     /// The §IV-B memory plan of the PJRT backend (peak == WCL).
     #[cfg(feature = "pjrt")]
     pub fn memory_plan(&self) -> Option<crate::coordinator::memory::MemoryPlan> {
-        match &self.backend {
+        match &*self.backend {
             BackendImpl::Pjrt(p) => Some(p.memory_plan().clone()),
             _ => None,
         }

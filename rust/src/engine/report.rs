@@ -115,19 +115,22 @@ impl EngineReport {
         )
     }
 
-    /// One-line latency/throughput summary of the attached serve stats.
+    /// One-line latency/throughput summary of the attached serve stats
+    /// (quantiles are over the completed requests; a partially-failed
+    /// batch shows `ok < requests`).
     pub fn serve_summary(&self) -> String {
         match &self.serve {
             Some(s) if s.requests > 0 => format!(
-                "served {} requests on {} workers in {:.2} ms: mean {:.2} ms, \
+                "served {} requests ({} ok) on {} workers in {:.2} ms: mean {:.2} ms, \
                  p50 {:.2} ms, p99 {:.2} ms — {:.1} req/s, {:.2} MOp/s",
                 s.requests,
+                s.completed,
                 s.workers,
                 s.total_s * 1e3,
                 s.mean_ms,
                 s.p50_ms,
                 s.p99_ms,
-                s.requests as f64 / s.total_s,
+                s.completed as f64 / s.total_s,
                 s.ops_per_s / 1e6
             ),
             Some(_) => "served 0 requests".to_string(),

@@ -1,29 +1,29 @@
-//! Backend-generic serving layer: a bounded FIFO request queue drained
-//! by a pool of worker threads, with per-request latency capture.
+//! Single-model batch serving — the compatibility layer over the
+//! multi-model [`super::service::InferenceService`].
 //!
-//! This replaces the PJRT-only `InferenceEngine::serve` of earlier
-//! revisions — any [`Backend`] can be served, and the simulator
-//! backends genuinely run `workers` inferences in parallel (the PJRT
-//! backend serializes on its internal runtime lock; see
-//! `engine::pjrt`). Admission is backpressured: once `queue_depth`
-//! requests are in flight the submitter blocks, bounding memory no
-//! matter how large the submitted batch is.
+//! [`super::Engine::serve`] spins up a temporary single-model service
+//! (same bounded-queue admission, same worker pool, same panic
+//! capture), submits the batch, waits every ticket and folds the
+//! per-request results into a [`ServeOutcome`]: completed outputs stay
+//! available even when other requests fail — a panicking request no
+//! longer discards the whole batch. Callers that want the historical
+//! all-or-nothing view use [`ServeOutcome::outputs`].
 
-use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::{mpsc, Mutex};
-use std::thread;
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::backend::Backend;
+use super::service::{AdmissionPolicy, InferRequest, InferenceService, ServeError};
 use super::EngineError;
 
-/// Serving configuration.
+/// Serving configuration of [`super::Engine::serve`].
 #[derive(Debug, Clone, Copy)]
 pub struct ServeOptions {
-    /// Concurrent worker threads (clamped to at least 1 and to the
-    /// batch size).
+    /// Concurrent worker threads (validated ≥ 1; clamped to the batch
+    /// size — extra workers would only idle).
     pub workers: usize,
-    /// Bounded request-queue depth; admission blocks when full.
+    /// Bounded request-queue depth (validated ≥ 1); admission blocks
+    /// when full.
     pub queue_depth: usize,
 }
 
@@ -36,10 +36,31 @@ impl Default for ServeOptions {
     }
 }
 
+impl ServeOptions {
+    /// Like `EngineBuilder::threads`, a zero knob is a typed error —
+    /// not a silent clamp that answers a different question.
+    pub fn validate(&self) -> Result<(), EngineError> {
+        if self.workers == 0 {
+            return Err(EngineError::Builder(
+                "ServeOptions.workers must be ≥ 1, got 0".into(),
+            ));
+        }
+        if self.queue_depth == 0 {
+            return Err(EngineError::Builder(
+                "ServeOptions.queue_depth must be ≥ 1, got 0".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Latency/throughput statistics of a served batch.
 #[derive(Debug, Clone, Default)]
 pub struct ServeStats {
+    /// Requests submitted (completed + failed).
     pub requests: usize,
+    /// Requests that produced an output.
+    pub completed: usize,
     /// Worker threads actually used.
     pub workers: usize,
     pub total_s: f64,
@@ -51,96 +72,154 @@ pub struct ServeStats {
 }
 
 /// Nearest-rank percentile over an ascending-sorted slice, using a
-/// *rounded* rank: `round((n−1)·p)`. The previous truncating rank made
-/// p99 of a 50-request batch read the p96 sample; rounding keeps
-/// p50/p99 on the conventional sample for batch sizes from 1 to 10k+.
-pub fn percentile(sorted: &[f64], p: f64) -> f64 {
-    assert!(!sorted.is_empty(), "percentile of an empty batch");
-    let rank = ((sorted.len() - 1) as f64 * p).round() as usize;
-    sorted[rank.min(sorted.len() - 1)]
+/// *rounded* rank: `round((n−1)·p)`. A truncating rank made p99 of a
+/// 50-request batch read the p96 sample; rounding keeps p50/p99 on the
+/// conventional sample for batch sizes from 1 to 10k+. `None` on an
+/// empty slice (it used to panic, which is unacceptable for a `pub`
+/// helper fed by live metrics windows).
+pub fn percentile(sorted: &[f64], p: f64) -> Option<f64> {
+    if sorted.is_empty() {
+        return None;
+    }
+    let rank = ((sorted.len() - 1) as f64 * p.clamp(0.0, 1.0)).round() as usize;
+    Some(sorted[rank.min(sorted.len() - 1)])
 }
 
-/// Serve `inputs` FIFO over `opts.workers` threads; returns outputs in
-/// submission order plus the latency statistics. `total_ops` is the
+/// The result of serving one batch: one `Result` per request, in
+/// submission order, plus the batch statistics. A failing request
+/// costs exactly its own slot.
+#[derive(Debug)]
+pub struct ServeOutcome {
+    /// Per-request results, in submission order.
+    pub results: Vec<Result<Vec<f32>, ServeError>>,
+    /// Batch latency/throughput statistics (quantiles over the
+    /// completed requests).
+    pub stats: ServeStats,
+}
+
+impl ServeOutcome {
+    /// Requests that produced an output.
+    pub fn completed(&self) -> usize {
+        self.results.iter().filter(|r| r.is_ok()).count()
+    }
+
+    /// Requests that failed.
+    pub fn failed(&self) -> usize {
+        self.results.len() - self.completed()
+    }
+
+    /// The first failure, if any request failed.
+    pub fn first_error(&self) -> Option<&ServeError> {
+        self.results.iter().find_map(|r| r.as_ref().err())
+    }
+
+    /// The historical all-or-nothing view: every output in submission
+    /// order, or the first failure as an [`EngineError`].
+    pub fn outputs(self) -> Result<(Vec<Vec<f32>>, ServeStats), EngineError> {
+        let mut outs = Vec::with_capacity(self.results.len());
+        for (i, result) in self.results.into_iter().enumerate() {
+            match result {
+                Ok(out) => outs.push(out),
+                Err(e) => return Err(EngineError::Backend(format!("request {i}: {e}"))),
+            }
+        }
+        Ok((outs, self.stats))
+    }
+}
+
+/// Assemble batch statistics from the completed requests' latencies.
+fn stats_from_latencies(
+    requests: usize,
+    workers: usize,
+    total_s: f64,
+    total_ops: u64,
+    mut lat_ms: Vec<f64>,
+) -> ServeStats {
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    let completed = lat_ms.len();
+    ServeStats {
+        requests,
+        completed,
+        workers,
+        total_s,
+        mean_ms: if completed > 0 {
+            lat_ms.iter().sum::<f64>() / completed as f64
+        } else {
+            0.0
+        },
+        p50_ms: percentile(&lat_ms, 0.50).unwrap_or(0.0),
+        p99_ms: percentile(&lat_ms, 0.99).unwrap_or(0.0),
+        ops_per_s: if total_s > 0.0 {
+            total_ops as f64 * completed as f64 / total_s
+        } else {
+            0.0
+        },
+    }
+}
+
+/// Serve `inputs` FIFO through a temporary single-model
+/// [`InferenceService`] over `opts.workers` threads. Per-request
+/// results come back in submission order; `total_ops` is the
 /// per-inference op count used for the throughput figure.
-pub(crate) fn serve_on(
-    backend: &dyn Backend,
+pub(crate) fn serve_outcome_on(
+    backend: Arc<dyn Backend>,
+    model: &str,
     total_ops: u64,
     inputs: &[Vec<f32>],
     opts: &ServeOptions,
-) -> Result<(Vec<Vec<f32>>, ServeStats), EngineError> {
-    let workers = opts.workers.max(1).min(inputs.len().max(1));
+) -> Result<ServeOutcome, EngineError> {
+    opts.validate()?;
+    let workers = opts.workers.min(inputs.len().max(1));
     if inputs.is_empty() {
-        return Ok((
-            Vec::new(),
-            ServeStats {
+        return Ok(ServeOutcome {
+            results: Vec::new(),
+            stats: ServeStats {
                 workers,
                 ..ServeStats::default()
             },
-        ));
+        });
     }
-
-    // Bounded FIFO: `sync_channel` blocks the submitter when the queue
-    // holds `queue_depth` pending requests.
-    let (tx, rx) = mpsc::sync_channel::<usize>(opts.queue_depth.max(1));
-    let rx = Mutex::new(rx);
-    // One slot per request, filled by whichever worker ran it.
-    let slots: Vec<Mutex<Option<Result<(Vec<f32>, f64), EngineError>>>> =
-        inputs.iter().map(|_| Mutex::new(None)).collect();
-
-    let t0 = Instant::now();
-    thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let next = rx.lock().unwrap().recv();
-                let Ok(i) = next else { break };
-                let t = Instant::now();
-                // A panicking backend must not kill the worker: a dead
-                // pool leaves the bounded `tx.send` below blocked forever
-                // (the Receiver outlives the scope, so send never errors).
-                // Convert the panic into a per-request backend error.
-                let result = catch_unwind(AssertUnwindSafe(|| backend.infer(&inputs[i])))
-                    .unwrap_or_else(|payload| {
-                        let msg = payload
-                            .downcast_ref::<&str>()
-                            .map(|s| s.to_string())
-                            .or_else(|| payload.downcast_ref::<String>().cloned())
-                            .unwrap_or_else(|| "opaque panic payload".to_string());
-                        Err(EngineError::Backend(format!("inference panicked: {msg}")))
-                    });
-                let ms = t.elapsed().as_secs_f64() * 1e3;
-                *slots[i].lock().unwrap() = Some(result.map(|out| (out, ms)));
-            });
-        }
-        for i in 0..inputs.len() {
-            tx.send(i).expect("worker pool died");
-        }
-        drop(tx); // workers drain the queue, then exit
-    });
-    let total_s = t0.elapsed().as_secs_f64();
-
-    let mut outs = Vec::with_capacity(inputs.len());
-    let mut lat_ms = Vec::with_capacity(inputs.len());
-    for slot in slots {
-        match slot.into_inner().unwrap().expect("request not completed") {
-            Ok((out, ms)) => {
-                outs.push(out);
-                lat_ms.push(ms);
-            }
-            Err(e) => return Err(e),
-        }
-    }
-    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let stats = ServeStats {
-        requests: inputs.len(),
+    let svc = InferenceService::single(
+        model,
+        backend,
+        inputs[0].len(),
+        total_ops,
         workers,
-        total_s,
-        mean_ms: lat_ms.iter().sum::<f64>() / lat_ms.len() as f64,
-        p50_ms: percentile(&lat_ms, 0.50),
-        p99_ms: percentile(&lat_ms, 0.99),
-        ops_per_s: total_ops as f64 * inputs.len() as f64 / total_s,
-    };
-    Ok((outs, stats))
+        opts.queue_depth,
+        // Backpressure like the historical bounded sync_channel:
+        // admission blocks while the queue is full, bounding memory no
+        // matter how large the batch is.
+        AdmissionPolicy::Block,
+    );
+    let t0 = Instant::now();
+    let mut tickets = Vec::with_capacity(inputs.len());
+    for (i, input) in inputs.iter().enumerate() {
+        // Admission failures (e.g. a length mismatch the caller did not
+        // pre-validate) are per-request results too, not batch aborts.
+        tickets.push(svc.submit(InferRequest {
+            model: model.to_string(),
+            input: input.clone(),
+            id: i as u64,
+        }));
+    }
+    let mut results = Vec::with_capacity(inputs.len());
+    let mut lat_ms = Vec::with_capacity(inputs.len());
+    for ticket in tickets {
+        match ticket {
+            Ok(t) => match t.wait() {
+                Ok(resp) => {
+                    lat_ms.push(resp.latency_ms);
+                    results.push(Ok(resp.output));
+                }
+                Err(e) => results.push(Err(e)),
+            },
+            Err(e) => results.push(Err(e)),
+        }
+    }
+    let total_s = t0.elapsed().as_secs_f64();
+    drop(svc); // drains (already empty) and joins the worker pool
+    let stats = stats_from_latencies(inputs.len(), workers, total_s, total_ops, lat_ms);
+    Ok(ServeOutcome { results, stats })
 }
 
 #[cfg(test)]
@@ -172,6 +251,14 @@ mod tests {
         }
     }
 
+    fn outcome_on(
+        inputs: &[Vec<f32>],
+        opts: &ServeOptions,
+        backend: Arc<dyn Backend>,
+    ) -> ServeOutcome {
+        serve_outcome_on(backend, "test", 10, inputs, opts).unwrap()
+    }
+
     #[test]
     fn outputs_keep_submission_order_across_workers() {
         let inputs: Vec<Vec<f32>> = (0..32).map(|i| vec![i as f32]).collect();
@@ -180,12 +267,14 @@ mod tests {
                 workers,
                 queue_depth: 3,
             };
-            let (outs, stats) = serve_on(&Doubler, 10, &inputs, &opts).unwrap();
+            let outcome = outcome_on(&inputs, &opts, Arc::new(Doubler));
+            let (outs, stats) = outcome.outputs().unwrap();
             assert_eq!(outs.len(), 32);
             for (i, o) in outs.iter().enumerate() {
                 assert_eq!(o, &vec![2.0 * i as f32], "request {i} out of order");
             }
             assert_eq!(stats.requests, 32);
+            assert_eq!(stats.completed, 32);
             assert_eq!(stats.workers, workers);
             assert!(stats.total_s > 0.0 && stats.ops_per_s > 0.0);
         }
@@ -198,8 +287,27 @@ mod tests {
             workers: 16,
             queue_depth: 1,
         };
-        let (_, stats) = serve_on(&Doubler, 1, &inputs, &opts).unwrap();
-        assert_eq!(stats.workers, 2);
+        let outcome = outcome_on(&inputs, &opts, Arc::new(Doubler));
+        assert_eq!(outcome.stats.workers, 2);
+    }
+
+    #[test]
+    fn zero_knobs_are_typed_errors_not_clamps() {
+        let inputs = vec![vec![1.0f32]];
+        for opts in [
+            ServeOptions {
+                workers: 0,
+                queue_depth: 8,
+            },
+            ServeOptions {
+                workers: 2,
+                queue_depth: 0,
+            },
+        ] {
+            let err = serve_outcome_on(Arc::new(Doubler), "test", 1, &inputs, &opts).unwrap_err();
+            assert!(matches!(err, EngineError::Builder(_)), "{err}");
+            assert!(err.to_string().contains("≥ 1"), "{err}");
+        }
     }
 
     /// Backend that panics on negative inputs.
@@ -221,28 +329,64 @@ mod tests {
     }
 
     #[test]
-    fn panicking_backend_errors_instead_of_hanging() {
+    fn mixed_batch_keeps_the_good_outputs() {
+        // The historical behavior discarded the whole batch on the
+        // first failure; per-request results must keep the completed
+        // outputs next to the panicking request's own error.
+        let inputs = vec![vec![1.0f32], vec![-1.0], vec![2.0], vec![-3.0], vec![4.0]];
+        let opts = ServeOptions {
+            workers: 2,
+            queue_depth: 2,
+        };
+        let outcome = outcome_on(&inputs, &opts, Arc::new(Panicky));
+        assert_eq!(outcome.results.len(), 5);
+        assert_eq!(outcome.completed(), 3);
+        assert_eq!(outcome.failed(), 2);
+        for (i, expect) in [(0usize, 1.0f32), (2, 2.0), (4, 4.0)] {
+            assert_eq!(
+                outcome.results[i].as_ref().unwrap(),
+                &vec![expect],
+                "good request {i} lost"
+            );
+        }
+        for i in [1usize, 3] {
+            let err = outcome.results[i].as_ref().unwrap_err();
+            assert!(matches!(err, ServeError::Panicked { .. }), "{err}");
+            assert!(err.to_string().contains("negative request"), "{err}");
+        }
+        assert_eq!(outcome.stats.requests, 5);
+        assert_eq!(outcome.stats.completed, 3);
+        assert!(matches!(
+            outcome.first_error(),
+            Some(ServeError::Panicked { .. })
+        ));
+        // The strict view reports the first failure, with its index.
+        let err = outcome.outputs().unwrap_err();
+        assert!(matches!(err, EngineError::Backend(_)), "{err}");
+        assert!(err.to_string().contains("request 1"), "{err}");
+        assert!(err.to_string().contains("panicked"), "{err}");
+    }
+
+    #[test]
+    fn all_panicking_batch_resolves_every_request() {
         // Every request panics; a naive pool would die and leave the
-        // bounded submitter blocked forever. Must return Err promptly.
+        // bounded submitter blocked forever. Every slot must resolve.
         let inputs: Vec<Vec<f32>> = (0..16).map(|_| vec![-1.0f32]).collect();
         let opts = ServeOptions {
             workers: 2,
             queue_depth: 2,
         };
-        let err = serve_on(&Panicky, 1, &inputs, &opts).unwrap_err();
-        assert!(matches!(err, EngineError::Backend(_)), "{err}");
-        assert!(err.to_string().contains("panicked"), "{err}");
-        // Mixed batch: good requests still complete.
-        let mixed = vec![vec![1.0f32], vec![-1.0], vec![2.0]];
-        let err = serve_on(&Panicky, 1, &mixed, &opts).unwrap_err();
-        assert!(matches!(err, EngineError::Backend(_)), "{err}");
+        let outcome = outcome_on(&inputs, &opts, Arc::new(Panicky));
+        assert_eq!(outcome.failed(), 16);
+        assert_eq!(outcome.stats.completed, 0);
+        assert_eq!(outcome.stats.p99_ms, 0.0);
     }
 
     #[test]
     fn empty_batch_is_fine() {
-        let (outs, stats) = serve_on(&Doubler, 1, &[], &ServeOptions::default()).unwrap();
-        assert!(outs.is_empty());
-        assert_eq!(stats.requests, 0);
+        let outcome = outcome_on(&[], &ServeOptions::default(), Arc::new(Doubler));
+        assert!(outcome.results.is_empty());
+        assert_eq!(outcome.stats.requests, 0);
     }
 
     #[test]
@@ -250,18 +394,24 @@ mod tests {
         // 50 samples 1..=50: p99 must be the top sample (the truncating
         // rank used to return sample 49 — the p96 value).
         let v: Vec<f64> = (1..=50).map(|i| i as f64).collect();
-        assert_eq!(percentile(&v, 0.99), 50.0);
-        assert_eq!(percentile(&v, 0.50), 26.0); // round(24.5) = 25 → 26.0
-        assert_eq!(percentile(&v, 0.0), 1.0);
-        assert_eq!(percentile(&v, 1.0), 50.0);
+        assert_eq!(percentile(&v, 0.99), Some(50.0));
+        assert_eq!(percentile(&v, 0.50), Some(26.0)); // round(24.5) = 25 → 26.0
+        assert_eq!(percentile(&v, 0.0), Some(1.0));
+        assert_eq!(percentile(&v, 1.0), Some(50.0));
+    }
+
+    #[test]
+    fn percentile_of_empty_is_none_not_panic() {
+        assert_eq!(percentile(&[], 0.5), None);
+        assert_eq!(percentile(&[], 0.99), None);
     }
 
     #[test]
     fn percentile_across_batch_sizes() {
         for n in [1usize, 2, 3, 10, 100, 1000, 10_000] {
             let v: Vec<f64> = (0..n).map(|i| i as f64).collect();
-            let p50 = percentile(&v, 0.50);
-            let p99 = percentile(&v, 0.99);
+            let p50 = percentile(&v, 0.50).unwrap();
+            let p99 = percentile(&v, 0.99).unwrap();
             assert!(p99 >= p50, "n={n}");
             // Rounded rank: within half a sample of the exact position.
             let exact99 = (n - 1) as f64 * 0.99;
@@ -269,6 +419,6 @@ mod tests {
             let exact50 = (n - 1) as f64 * 0.50;
             assert!((p50 - exact50).abs() <= 0.5 + 1e-9, "n={n}: {p50} vs {exact50}");
         }
-        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+        assert_eq!(percentile(&[7.0], 0.99), Some(7.0));
     }
 }

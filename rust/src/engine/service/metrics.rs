@@ -1,0 +1,209 @@
+//! Live serving metrics of an [`super::InferenceService`].
+//!
+//! Each hosted model accumulates counters and latency samples inside
+//! the service's state lock ([`MetricsAccum`]); a
+//! [`ServiceMetrics`] snapshot is a consistent copy taken under that
+//! lock, so totals always add up (`submitted == completed + failed +
+//! queued + in_flight` at the instant of the snapshot). The latency
+//! quantiles reuse the single-model serving math
+//! ([`crate::engine::serve::percentile`]) so a one-model service
+//! reports the same p50/p99 a direct [`crate::engine::Engine::serve`]
+//! batch would.
+
+use std::time::Instant;
+
+use crate::engine::serve::{percentile, ServeStats};
+
+/// Most recent completed-request latencies kept per model for the
+/// p50/p99 window. Counters and the mean are over the whole lifetime;
+/// only the quantiles are windowed, which bounds memory on a
+/// long-lived service.
+const LATENCY_WINDOW: usize = 4096;
+
+/// Per-model accumulator, mutated under the service state lock.
+#[derive(Debug, Default)]
+pub(crate) struct MetricsAccum {
+    submitted: u64,
+    completed: u64,
+    failed: u64,
+    lat_sum_ms: f64,
+    window: Vec<f64>,
+    next: usize,
+    first_submit: Option<Instant>,
+    last_done: Option<Instant>,
+}
+
+impl MetricsAccum {
+    pub(crate) fn record_submit(&mut self, now: Instant) {
+        self.submitted += 1;
+        self.first_submit.get_or_insert(now);
+    }
+
+    pub(crate) fn record_ok(&mut self, latency_ms: f64, now: Instant) {
+        self.completed += 1;
+        self.lat_sum_ms += latency_ms;
+        if self.window.len() < LATENCY_WINDOW {
+            self.window.push(latency_ms);
+        } else {
+            self.window[self.next] = latency_ms;
+        }
+        self.next = (self.next + 1) % LATENCY_WINDOW;
+        self.last_done = Some(now);
+    }
+
+    pub(crate) fn record_failure(&mut self, now: Instant) {
+        self.failed += 1;
+        self.last_done = Some(now);
+    }
+
+    pub(crate) fn snapshot(
+        &self,
+        model: &str,
+        removed: bool,
+        queued: usize,
+        in_flight: usize,
+        total_ops: u64,
+    ) -> ModelMetrics {
+        let mut lat = self.window.clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        // The active window is first submission → last completion: a
+        // service that sat idle for an hour before its first request
+        // does not dilute its throughput figure.
+        let active_s = match (self.first_submit, self.last_done) {
+            (Some(a), Some(b)) if b > a => (b - a).as_secs_f64(),
+            _ => 0.0,
+        };
+        let per_s = |n: f64| if active_s > 0.0 { n / active_s } else { 0.0 };
+        ModelMetrics {
+            model: model.to_string(),
+            removed,
+            submitted: self.submitted,
+            completed: self.completed,
+            failed: self.failed,
+            queued,
+            in_flight,
+            mean_ms: if self.completed > 0 {
+                self.lat_sum_ms / self.completed as f64
+            } else {
+                0.0
+            },
+            p50_ms: percentile(&lat, 0.50).unwrap_or(0.0),
+            p99_ms: percentile(&lat, 0.99).unwrap_or(0.0),
+            req_per_s: per_s(self.completed as f64),
+            ops_per_s: per_s(total_ops as f64 * self.completed as f64),
+            active_s,
+        }
+    }
+}
+
+/// One model's serving statistics at a snapshot instant.
+#[derive(Debug, Clone)]
+pub struct ModelMetrics {
+    /// The model's service name (the submit routing key).
+    pub model: String,
+    /// The model was hot-removed; counters are its historical totals.
+    pub removed: bool,
+    /// Requests admitted (excludes typed submit rejections).
+    pub submitted: u64,
+    /// Requests that completed with an output.
+    pub completed: u64,
+    /// Requests that failed in the worker (or were drained by a
+    /// hot-remove).
+    pub failed: u64,
+    /// Requests queued but not yet picked up, at the snapshot instant.
+    pub queued: usize,
+    /// Requests executing in a worker, at the snapshot instant.
+    pub in_flight: usize,
+    /// Mean execution latency over all completed requests.
+    pub mean_ms: f64,
+    /// Median execution latency over the recent window.
+    pub p50_ms: f64,
+    /// 99th-percentile execution latency over the recent window.
+    pub p99_ms: f64,
+    /// Completed requests per second of the active window.
+    pub req_per_s: f64,
+    /// Network ops per second of the active window.
+    pub ops_per_s: f64,
+    /// First submission → last completion, in seconds.
+    pub active_s: f64,
+}
+
+/// A consistent snapshot over every hosted model, produced by
+/// [`super::InferenceService::metrics`] (and returned once more by
+/// [`super::InferenceService::shutdown`] after the drain).
+#[derive(Debug, Clone)]
+pub struct ServiceMetrics {
+    /// The service's shared worker-thread budget.
+    pub workers: usize,
+    /// One row per model, in registration order (hot-removed models
+    /// keep their row, flagged `removed`).
+    pub per_model: Vec<ModelMetrics>,
+}
+
+impl ServiceMetrics {
+    /// The row for `model`, if it is (or was) hosted.
+    pub fn model(&self, model: &str) -> Option<&ModelMetrics> {
+        self.per_model.iter().find(|m| m.model == model)
+    }
+
+    pub fn total_submitted(&self) -> u64 {
+        self.per_model.iter().map(|m| m.submitted).sum()
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.per_model.iter().map(|m| m.completed).sum()
+    }
+
+    pub fn total_failed(&self) -> u64 {
+        self.per_model.iter().map(|m| m.failed).sum()
+    }
+
+    /// A model's row as single-model [`ServeStats`] (what
+    /// [`crate::engine::Engine::report_with_serve`] consumes), with the
+    /// service's active window standing in for the batch wall time.
+    pub fn serve_stats(&self, model: &str) -> Option<ServeStats> {
+        let m = self.model(model)?;
+        Some(ServeStats {
+            requests: m.submitted as usize,
+            completed: m.completed as usize,
+            workers: self.workers,
+            total_s: m.active_s,
+            mean_ms: m.mean_ms,
+            p50_ms: m.p50_ms,
+            p99_ms: m.p99_ms,
+            ops_per_s: m.ops_per_s,
+        })
+    }
+
+    /// The `serve` CLI's per-model metrics table.
+    pub fn render_table(&self) -> String {
+        let mut out = format!(
+            "{:<28} {:>6} {:>6} {:>5} {:>5} {:>9} {:>9} {:>9} {:>8} {:>9}\n",
+            "model", "sub", "ok", "fail", "queue", "mean ms", "p50 ms", "p99 ms", "req/s", "MOp/s"
+        );
+        for m in &self.per_model {
+            out.push_str(&format!(
+                "{:<28} {:>6} {:>6} {:>5} {:>5} {:>9.2} {:>9.2} {:>9.2} {:>8.1} {:>9.2}{}\n",
+                m.model,
+                m.submitted,
+                m.completed,
+                m.failed,
+                m.queued,
+                m.mean_ms,
+                m.p50_ms,
+                m.p99_ms,
+                m.req_per_s,
+                m.ops_per_s / 1e6,
+                if m.removed { "  (removed)" } else { "" }
+            ));
+        }
+        out.push_str(&format!(
+            "total: {} submitted, {} completed, {} failed on {} workers\n",
+            self.total_submitted(),
+            self.total_completed(),
+            self.total_failed(),
+            self.workers
+        ));
+        out
+    }
+}

@@ -37,12 +37,16 @@
 //! # Ok(()) }
 //! ```
 //!
-//! On top of the backends sits a concurrent serving layer
-//! ([`engine::Engine::serve`]): a bounded FIFO request queue drained by a
-//! worker-thread pool with per-request latency capture, and a single
-//! typed [`engine::EngineReport`] (schedule, WCL/memory plan, energy
-//! breakdown, serve statistics) that the CLI, the examples, the benches
-//! and [`report`] all consume.
+//! On top of the backends sits the multi-model serving subsystem
+//! ([`engine::InferenceService`]): N named models hosted concurrently
+//! under one shared worker budget, bounded per-model queues with typed
+//! admission policies, per-request results (one failing request never
+//! discards another's output), live per-model p50/p99/throughput
+//! metrics and hot add/remove. [`engine::Engine::serve`] is the
+//! single-model batch wrapper over it. Every engine also yields a
+//! single typed [`engine::EngineReport`] (schedule, WCL/memory plan,
+//! energy breakdown, serve statistics) that the CLI, the examples, the
+//! benches and [`report`] all consume.
 //!
 //! ## Subsystems
 //!

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   report <table1|table2|table3|table4|table5|table6|fig8|fig9|fig10|fig11|all>
 //!   list-models                                             the model registry
+//!   serve     --model A[,B,...] [--requests N] [--mix M] [--workers W]
+//!             multi-model InferenceService on a synthetic workload
 //!   run-e2e   [--artifacts DIR] [--batch N] [--workers N]   end-to-end PJRT serving
 //!   simulate  --model SPEC [--mesh RxC] [--vdd V] [--vbb V]
 //!   mesh      --model SPEC
@@ -25,9 +27,13 @@ use std::collections::HashMap;
 use std::fmt;
 use std::process::ExitCode;
 
-use hyperdrive::engine::{BackendKind, DepthwisePolicy, Engine, EngineError, ServeOptions};
+use hyperdrive::engine::{
+    AdmissionPolicy, BackendKind, DepthwisePolicy, Engine, EngineError, InferRequest,
+    InferenceService, ServeError, ServeOptions,
+};
 use hyperdrive::model::NetworkRegistry;
 use hyperdrive::report;
+use hyperdrive::util::SplitMix64;
 use hyperdrive::ChipConfig;
 
 fn usage() -> &'static str {
@@ -35,6 +41,9 @@ fn usage() -> &'static str {
      commands:\n\
        report <table1..table6|fig8..fig11|border|ablations|all>\n\
        list-models\n\
+       serve --model SPEC[,SPEC...] [--requests N] [--mix round-robin|random]\n\
+             [--workers W] [--queue-depth D] [--admission block|reject|timeout:MS]\n\
+             [--seed S]\n\
        run-e2e [--artifacts DIR] [--batch N] [--workers N]\n\
        simulate --model SPEC [--mesh RxC] [--vdd V] [--vbb V] [--threads N]\n\
        mesh --model SPEC\n\
@@ -72,11 +81,13 @@ impl fmt::Display for OptError {
     }
 }
 
-/// Errors of the CLI: option parsing, engine failures, usage.
+/// Errors of the CLI: option parsing, engine failures, serving
+/// admission failures, usage.
 #[derive(Debug)]
 enum CliError {
     Opt(OptError),
     Engine(EngineError),
+    Serve(ServeError),
     Usage(String),
 }
 
@@ -85,6 +96,7 @@ impl fmt::Display for CliError {
         match self {
             CliError::Opt(e) => write!(f, "{e}"),
             CliError::Engine(e) => write!(f, "{e}"),
+            CliError::Serve(e) => write!(f, "{e}"),
             CliError::Usage(m) => write!(f, "{m}"),
         }
     }
@@ -99,6 +111,12 @@ impl From<OptError> for CliError {
 impl From<EngineError> for CliError {
     fn from(e: EngineError) -> Self {
         CliError::Engine(e)
+    }
+}
+
+impl From<ServeError> for CliError {
+    fn from(e: ServeError) -> Self {
+        CliError::Serve(e)
     }
 }
 
@@ -224,13 +242,15 @@ fn cmd_run_e2e(opts: &HashMap<String, String>) -> Result<String, CliError> {
     let input = engine.golden("e2e_input.bin")?;
     let golden = engine.golden("e2e_golden.bin")?;
     let inputs: Vec<Vec<f32>> = (0..batch.max(1)).map(|_| input.clone()).collect();
-    let (outs, stats) = engine.serve(
-        &inputs,
-        &ServeOptions {
-            workers,
-            ..ServeOptions::default()
-        },
-    )?;
+    let (outs, stats) = engine
+        .serve(
+            &inputs,
+            &ServeOptions {
+                workers,
+                ..ServeOptions::default()
+            },
+        )?
+        .outputs()?;
     let max_err = outs[0]
         .iter()
         .zip(&golden)
@@ -245,6 +265,101 @@ fn cmd_run_e2e(opts: &HashMap<String, String>) -> Result<String, CliError> {
         &outs[0][..4.min(outs[0].len())],
         max_err,
         if max_err < 1e-3 { "— MATCH" } else { "— MISMATCH" }
+    ))
+}
+
+/// `serve`: host every listed model in one `InferenceService` and
+/// drive a synthetic multi-model workload through it, printing the
+/// per-model metrics table.
+fn cmd_serve(opts: &HashMap<String, String>) -> Result<String, CliError> {
+    let specs: Vec<String> = opts
+        .get("model")
+        .ok_or_else(|| {
+            CliError::Usage("serve needs --model SPEC[,SPEC...] (try `hyperdrive list-models`)".into())
+        })?
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(String::from)
+        .collect();
+    if specs.is_empty() {
+        return Err(CliError::Usage("serve needs at least one model spec".into()));
+    }
+    let requests: usize = opt_parse(opts, "requests", 32, "a positive integer")?;
+    let workers: usize = opt_parse(opts, "workers", 4, "a positive integer")?;
+    let queue_depth: usize = opt_parse(opts, "queue-depth", 8, "a positive integer")?;
+    let seed: u64 = opt_parse(opts, "seed", 7, "an unsigned integer")?;
+    let mix = opts.get("mix").map(String::as_str).unwrap_or("round-robin");
+    if mix != "round-robin" && mix != "random" {
+        return Err(
+            OptError::BadValue("mix".into(), mix.into(), "round-robin|random").into(),
+        );
+    }
+    let admission = match opts.get("admission").map(String::as_str) {
+        None | Some("block") => AdmissionPolicy::Block,
+        Some("reject") => AdmissionPolicy::Reject,
+        Some(other) => match other
+            .strip_prefix("timeout:")
+            .and_then(|ms| ms.parse::<u64>().ok())
+        {
+            Some(ms) => AdmissionPolicy::Timeout(ms),
+            None => {
+                return Err(OptError::BadValue(
+                    "admission".into(),
+                    other.into(),
+                    "block|reject|timeout:MS",
+                )
+                .into())
+            }
+        },
+    };
+
+    let mut builder = InferenceService::builder()
+        .workers(workers)
+        .queue_depth(queue_depth)
+        .admission(admission);
+    for spec in &specs {
+        builder = builder.model_spec(spec.as_str());
+    }
+    let service = builder.build()?;
+
+    let mut rng = SplitMix64::new(seed);
+    let mut tickets = Vec::with_capacity(requests);
+    let mut rejected = 0usize;
+    for i in 0..requests {
+        let model = match mix {
+            "round-robin" => &specs[i % specs.len()],
+            _ => &specs[rng.next_below(specs.len())],
+        };
+        let len = service.input_len(model).expect("model is hosted");
+        let input: Vec<f32> = (0..len).map(|_| rng.next_sym()).collect();
+        match service.submit(InferRequest {
+            model: model.clone(),
+            input,
+            id: i as u64,
+        }) {
+            Ok(t) => tickets.push(t),
+            // Reject/Timeout admission drops are part of the workload
+            // report, not a CLI failure.
+            Err(ServeError::QueueFull { .. }) | Err(ServeError::AdmissionTimeout { .. }) => {
+                rejected += 1;
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let (mut ok, mut failed) = (0usize, 0usize);
+    for ticket in tickets {
+        match ticket.wait() {
+            Ok(_) => ok += 1,
+            Err(_) => failed += 1,
+        }
+    }
+    let metrics = service.shutdown();
+    Ok(format!(
+        "served {requests} requests over {} model(s) on {workers} workers ({mix} mix): \
+         {ok} ok, {failed} failed, {rejected} rejected at admission\n{}",
+        specs.len(),
+        metrics.render_table()
     ))
 }
 
@@ -307,6 +422,9 @@ fn main() -> ExitCode {
             None => Err(CliError::Usage("report needs an argument".into())),
         },
         Some("list-models") => Ok(cmd_list_models()),
+        Some("serve") => parse_opts(&args[1..])
+            .map_err(CliError::from)
+            .and_then(|o| cmd_serve(&o)),
         Some("run-e2e") => parse_opts(&args[1..])
             .map_err(CliError::from)
             .and_then(|o| cmd_run_e2e(&o)),
@@ -479,5 +597,77 @@ mod tests {
         let opts = parse_opts(&args(&["--net", "resnet34", "--mesh", "5by10"])).unwrap();
         let err = cmd_simulate(&opts, &cfg).unwrap_err();
         assert!(matches!(err, CliError::Opt(OptError::BadValue(_, _, _))), "{err}");
+    }
+
+    #[test]
+    fn serve_subcommand_round_robin_smoke() {
+        let opts = parse_opts(&args(&[
+            "--model",
+            "hypernet20",
+            "--requests",
+            "6",
+            "--workers",
+            "2",
+        ]))
+        .unwrap();
+        let out = cmd_serve(&opts).unwrap();
+        assert!(out.contains("6 ok, 0 failed"), "{out}");
+        assert!(out.contains("hypernet20"), "{out}");
+        assert!(out.contains("p99 ms"), "{out}");
+        assert!(out.contains("total: 6 submitted, 6 completed"), "{out}");
+    }
+
+    #[test]
+    fn serve_subcommand_random_mix_over_two_models() {
+        let opts = parse_opts(&args(&[
+            "--model",
+            "hypernet20,resnet18@32x32",
+            "--requests",
+            "4",
+            "--workers",
+            "2",
+            "--mix",
+            "random",
+            "--admission",
+            "timeout:5000",
+        ]))
+        .unwrap();
+        let out = cmd_serve(&opts).unwrap();
+        assert!(out.contains("2 model(s)"), "{out}");
+        assert!(out.contains("resnet18@32x32"), "{out}");
+    }
+
+    #[test]
+    fn serve_subcommand_validates_options() {
+        // Missing --model is a usage error.
+        let opts = parse_opts(&args(&["--requests", "4"])).unwrap();
+        assert!(matches!(cmd_serve(&opts).unwrap_err(), CliError::Usage(_)));
+        // Bad mix / admission values are structured option errors.
+        for bad in [
+            &["--model", "hypernet20", "--mix", "zigzag"][..],
+            &["--model", "hypernet20", "--admission", "sometimes"][..],
+            &["--model", "hypernet20", "--admission", "timeout:soon"][..],
+        ] {
+            let opts = parse_opts(&args(bad)).unwrap();
+            let err = cmd_serve(&opts).unwrap_err();
+            assert!(
+                matches!(err, CliError::Opt(OptError::BadValue(_, _, _))),
+                "{bad:?}: {err}"
+            );
+        }
+        // A zero thread budget is the service builder's typed error.
+        let opts = parse_opts(&args(&["--model", "hypernet20", "--workers", "0"])).unwrap();
+        let err = cmd_serve(&opts).unwrap_err();
+        assert!(
+            matches!(err, CliError::Engine(EngineError::Builder(_))),
+            "{err}"
+        );
+        // An unknown spec surfaces the model resolution error.
+        let opts = parse_opts(&args(&["--model", "resnet99"])).unwrap();
+        let err = cmd_serve(&opts).unwrap_err();
+        assert!(
+            matches!(err, CliError::Engine(EngineError::Model(_))),
+            "{err}"
+        );
     }
 }

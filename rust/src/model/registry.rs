@@ -193,7 +193,10 @@ pub struct ModelListing {
 ///
 /// [`NetworkRegistry::builtin`] registers the paper's zoo; callers can
 /// [`register`](NetworkRegistry::register) additional entries (an entry
-/// with an existing name replaces it).
+/// with an existing name replaces it). `Clone` is cheap (entries are
+/// metadata + a builder fn pointer) — the multi-model serving layer
+/// clones one registry per hosted model resolution.
+#[derive(Clone)]
 pub struct NetworkRegistry {
     entries: Vec<ModelEntry>,
 }

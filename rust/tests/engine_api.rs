@@ -127,14 +127,39 @@ fn concurrent_serving_matches_sequential() {
         workers: 4,
         queue_depth: 2,
     };
-    let (seq, s1) = engine.serve(&inputs, &seq_opts).unwrap();
-    let (conc, s4) = engine.serve(&inputs, &conc_opts).unwrap();
+    let (seq, s1) = engine.serve(&inputs, &seq_opts).unwrap().outputs().unwrap();
+    let (conc, s4) = engine.serve(&inputs, &conc_opts).unwrap().outputs().unwrap();
     assert_eq!(seq, conc, "worker pool must not change outputs or order");
     assert_eq!(s1.requests, 6);
+    assert_eq!(s1.completed, 6);
     assert_eq!(s1.workers, 1);
     assert_eq!(s4.workers, 4);
     assert!(s4.p99_ms >= s4.p50_ms && s4.p50_ms > 0.0);
     assert!(s4.ops_per_s > 0.0);
+}
+
+#[test]
+fn serve_rejects_zero_knobs_with_typed_errors() {
+    // Like EngineBuilder::threads(0): a zero worker count or queue
+    // depth is a typed error, not a silent clamp.
+    let engine = Engine::builder()
+        .network(model::network("hypernet20").unwrap())
+        .build()
+        .unwrap();
+    let inputs = vec![vec![0.0f32; engine.input_len()]];
+    for opts in [
+        ServeOptions {
+            workers: 0,
+            queue_depth: 8,
+        },
+        ServeOptions {
+            workers: 2,
+            queue_depth: 0,
+        },
+    ] {
+        let err = engine.serve(&inputs, &opts).unwrap_err();
+        assert!(matches!(err, EngineError::Builder(_)), "{err}");
+    }
 }
 
 #[test]

@@ -172,7 +172,7 @@ fn serve_batch_reports_latency() {
         workers: 2,
         ..ServeOptions::default()
     };
-    let (outs, stats) = engine.serve(&inputs, &opts).unwrap();
+    let (outs, stats) = engine.serve(&inputs, &opts).unwrap().outputs().unwrap();
     assert_eq!(outs.len(), 4);
     assert!(stats.p50_ms > 0.0 && stats.p99_ms >= stats.p50_ms);
     assert!(stats.ops_per_s > 0.0);
@@ -183,6 +183,6 @@ fn serve_batch_reports_latency() {
         workers: 1,
         ..ServeOptions::default()
     };
-    let (seq_outs, _) = engine.serve(&inputs, &seq).unwrap();
+    let (seq_outs, _) = engine.serve(&inputs, &seq).unwrap().outputs().unwrap();
     assert_eq!(outs, seq_outs);
 }

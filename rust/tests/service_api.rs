@@ -1,0 +1,308 @@
+//! Integration tests of the multi-model `InferenceService`: builder
+//! validation, the interleaved multi-model soak (bit-exact against
+//! direct `Engine::infer`), per-request failure isolation, hot
+//! add/remove and graceful shutdown.
+
+use hyperdrive::engine::{
+    Engine, EngineError, InferRequest, InferenceService, ModelConfig, ServeError,
+};
+use hyperdrive::util::SplitMix64;
+
+fn random_input(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..len).map(|_| rng.next_sym()).collect()
+}
+
+#[test]
+fn builder_validates_its_inputs() {
+    // Zero knobs are typed errors, not silent clamps (like
+    // EngineBuilder::threads).
+    let err = InferenceService::builder()
+        .model_spec("hypernet20")
+        .workers(0)
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, EngineError::Builder(_)), "{err}");
+    assert!(err.to_string().contains("workers"), "{err}");
+
+    let err = InferenceService::builder()
+        .model_spec("hypernet20")
+        .queue_depth(0)
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, EngineError::Builder(_)), "{err}");
+    assert!(err.to_string().contains("queue_depth"), "{err}");
+
+    // The per-model depth override is validated too.
+    let err = InferenceService::builder()
+        .model("m", ModelConfig::new("hypernet20").queue_depth(0))
+        .build()
+        .unwrap_err();
+    assert!(err.to_string().contains("queue_depth(0)"), "{err}");
+
+    // No models, duplicate names, unknown specs.
+    let err = InferenceService::builder().build().unwrap_err();
+    assert!(err.to_string().contains("at least one"), "{err}");
+    let err = InferenceService::builder()
+        .model_spec("hypernet20")
+        .model_spec("hypernet20")
+        .build()
+        .unwrap_err();
+    assert!(err.to_string().contains("twice"), "{err}");
+    let err = InferenceService::builder()
+        .model_spec("resnet99")
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, EngineError::Model(_)), "{err}");
+}
+
+#[test]
+fn multi_model_soak_is_bit_exact_and_metrics_add_up() {
+    const MODELS: [&str; 2] = ["hypernet20", "resnet18@32x32"];
+    const REQUESTS: usize = 64;
+    let service = InferenceService::builder()
+        .model_spec(MODELS[0])
+        .model_spec(MODELS[1])
+        .workers(4)
+        .queue_depth(8)
+        .build()
+        .unwrap();
+    // Reference engines resolved from the same specs: the service's
+    // responses must be bit-identical to direct Engine::infer.
+    let direct: Vec<Engine> = MODELS
+        .iter()
+        .map(|m| Engine::builder().model(*m).build().unwrap())
+        .collect();
+
+    let mut tickets = Vec::with_capacity(REQUESTS);
+    let mut expected = Vec::with_capacity(REQUESTS);
+    for i in 0..REQUESTS {
+        let which = i % MODELS.len();
+        let input = random_input(direct[which].input_len(), 1000 + i as u64);
+        expected.push(direct[which].infer(&input).unwrap());
+        tickets.push(
+            service
+                .submit(InferRequest {
+                    model: MODELS[which].into(),
+                    input,
+                    id: i as u64,
+                })
+                .unwrap(),
+        );
+    }
+    for (i, ticket) in tickets.into_iter().enumerate() {
+        assert_eq!(ticket.id(), i as u64);
+        let resp = ticket.wait().unwrap();
+        assert_eq!(resp.id, i as u64);
+        assert_eq!(resp.model, MODELS[i % MODELS.len()]);
+        assert_eq!(
+            resp.output,
+            expected[i],
+            "request {i} diverged from direct Engine::infer"
+        );
+        assert!(resp.latency_ms > 0.0);
+    }
+
+    // Shutdown drains (here: everything already waited) and the final
+    // metrics must account for every request.
+    let metrics = service.shutdown();
+    assert_eq!(metrics.total_submitted(), REQUESTS as u64);
+    assert_eq!(metrics.total_completed(), REQUESTS as u64);
+    assert_eq!(metrics.total_failed(), 0);
+    assert_eq!(metrics.workers, 4);
+    assert_eq!(metrics.per_model.len(), 2);
+    for pm in &metrics.per_model {
+        assert_eq!(pm.submitted, (REQUESTS / 2) as u64, "{}", pm.model);
+        assert_eq!(pm.completed, (REQUESTS / 2) as u64);
+        assert_eq!((pm.queued, pm.in_flight), (0, 0));
+        assert!(pm.p99_ms >= pm.p50_ms && pm.p50_ms > 0.0, "{pm:?}");
+        assert!(pm.mean_ms > 0.0 && pm.req_per_s > 0.0 && pm.ops_per_s > 0.0);
+    }
+    // The snapshot converts to single-model ServeStats for the report
+    // path, consistent with the per-model row.
+    let stats = metrics.serve_stats(MODELS[0]).unwrap();
+    let row = metrics.model(MODELS[0]).unwrap();
+    assert_eq!(stats.requests, 32);
+    assert_eq!(stats.completed, 32);
+    assert_eq!(stats.workers, 4);
+    assert_eq!(stats.p50_ms, row.p50_ms);
+    assert_eq!(stats.p99_ms, row.p99_ms);
+    assert_eq!(stats.ops_per_s, row.ops_per_s);
+}
+
+#[test]
+fn failing_model_does_not_lose_other_requests() {
+    // `flaky` builds fine (the analytic mesh plan accepts 3×3) but
+    // every inference fails: 32×32 FMs do not divide over 3×3 chips.
+    // Its failures must be scoped to its own requests.
+    let service = InferenceService::builder()
+        .model_spec("hypernet20")
+        .model("flaky", ModelConfig::new("hypernet20").mesh(3, 3))
+        .workers(4)
+        .build()
+        .unwrap();
+    let direct = Engine::builder().model("hypernet20").build().unwrap();
+
+    let mut tickets = Vec::new();
+    for i in 0..16u64 {
+        let model = if i % 2 == 0 { "hypernet20" } else { "flaky" };
+        tickets.push(
+            service
+                .submit(InferRequest {
+                    model: model.into(),
+                    input: random_input(direct.input_len(), 50 + i),
+                    id: i,
+                })
+                .unwrap(),
+        );
+    }
+    for (i, ticket) in tickets.into_iter().enumerate() {
+        let result = ticket.wait();
+        if i % 2 == 0 {
+            let expected = direct
+                .infer(&random_input(direct.input_len(), 50 + i as u64))
+                .unwrap();
+            assert_eq!(result.unwrap().output, expected, "good request {i} lost");
+        } else {
+            let err = result.unwrap_err();
+            assert!(matches!(err, ServeError::Failed { .. }), "{err}");
+            assert!(err.to_string().contains("flaky"), "{err}");
+        }
+    }
+    let metrics = service.shutdown();
+    let good = metrics.model("hypernet20").unwrap();
+    let flaky = metrics.model("flaky").unwrap();
+    assert_eq!((good.completed, good.failed), (8, 0));
+    assert_eq!((flaky.completed, flaky.failed), (0, 8));
+}
+
+#[test]
+fn submit_errors_are_typed_and_scoped() {
+    let service = InferenceService::builder()
+        .model_spec("hypernet20")
+        .workers(2)
+        .build()
+        .unwrap();
+    let want = service.input_len("hypernet20").unwrap();
+
+    match service
+        .submit(InferRequest {
+            model: "resnet34".into(),
+            input: vec![0.0; want],
+            id: 0,
+        })
+        .unwrap_err()
+    {
+        ServeError::UnknownModel { model, known } => {
+            assert_eq!(model, "resnet34");
+            assert_eq!(known, vec!["hypernet20".to_string()]);
+        }
+        other => panic!("expected UnknownModel, got {other}"),
+    }
+    match service
+        .submit(InferRequest {
+            model: "hypernet20".into(),
+            input: vec![0.0; 7],
+            id: 0,
+        })
+        .unwrap_err()
+    {
+        ServeError::BadInput { got, want: w, .. } => assert_eq!((got, w), (7, want)),
+        other => panic!("expected BadInput, got {other}"),
+    }
+    // Neither rejection perturbed the metrics.
+    assert_eq!(service.shutdown().total_submitted(), 0);
+}
+
+#[test]
+fn hot_add_and_remove_models() {
+    let service = InferenceService::builder()
+        .model_spec("hypernet20")
+        .workers(2)
+        .build()
+        .unwrap();
+    assert_eq!(service.models(), vec!["hypernet20".to_string()]);
+
+    // Unknown until added…
+    let err = service.infer("tiny", vec![0.0; 16]).unwrap_err();
+    assert!(matches!(err, ServeError::UnknownModel { .. }), "{err}");
+
+    // …then hot-added and bit-exact against a direct engine.
+    service
+        .add_model("tiny", ModelConfig::new("resnet18@32x32"))
+        .unwrap();
+    assert_eq!(service.models().len(), 2);
+    let direct = Engine::builder().model("resnet18@32x32").build().unwrap();
+    let input = random_input(direct.input_len(), 99);
+    assert_eq!(
+        service.infer("tiny", input.clone()).unwrap(),
+        direct.infer(&input).unwrap()
+    );
+
+    // Duplicate adds are typed errors.
+    let err = service
+        .add_model("hypernet20", ModelConfig::new("hypernet20"))
+        .unwrap_err();
+    assert!(matches!(err, EngineError::Builder(_)), "{err}");
+
+    // Removal: new submissions get ModelRemoved; the survivor serves.
+    service.remove_model("tiny").unwrap();
+    let err = service.infer("tiny", input).unwrap_err();
+    assert!(matches!(err, ServeError::ModelRemoved { .. }), "{err}");
+    let hn_input = random_input(service.input_len("hypernet20").unwrap(), 7);
+    assert!(service.infer("hypernet20", hn_input).is_ok());
+
+    let metrics = service.shutdown();
+    let tiny = metrics.model("tiny").unwrap();
+    assert!(tiny.removed);
+    assert_eq!(tiny.completed, 1);
+}
+
+#[test]
+fn idle_shutdown_is_clean() {
+    let service = InferenceService::builder()
+        .model_spec("hypernet20")
+        .model_spec("resnet18@32x32")
+        .workers(3)
+        .build()
+        .unwrap();
+    let metrics = service.shutdown();
+    assert_eq!(metrics.total_submitted(), 0);
+    assert_eq!(metrics.per_model.len(), 2);
+    for pm in &metrics.per_model {
+        assert_eq!(pm.p50_ms, 0.0);
+        assert_eq!(pm.ops_per_s, 0.0);
+    }
+}
+
+#[test]
+fn engine_serve_wrapper_matches_the_service_path() {
+    // Engine::serve is a compat wrapper over a single-model service:
+    // same inputs through both APIs must give identical outputs, and
+    // the stats must agree on the counts.
+    let engine = Engine::builder().model("hypernet20").build().unwrap();
+    let inputs: Vec<Vec<f32>> = (0..6)
+        .map(|i| random_input(engine.input_len(), 300 + i))
+        .collect();
+    let outcome = engine
+        .serve(&inputs, &hyperdrive::engine::ServeOptions::default())
+        .unwrap();
+    assert_eq!(outcome.stats.requests, 6);
+    assert_eq!(outcome.stats.completed, 6);
+
+    let service = InferenceService::builder()
+        .model_spec("hypernet20")
+        .workers(2)
+        .build()
+        .unwrap();
+    for (i, input) in inputs.iter().enumerate() {
+        let via_service = service.infer("hypernet20", input.clone()).unwrap();
+        assert_eq!(
+            outcome.results[i].as_ref().unwrap(),
+            &via_service,
+            "request {i}: wrapper and service disagree"
+        );
+    }
+    let metrics = service.shutdown();
+    assert_eq!(metrics.total_completed(), 6);
+}
