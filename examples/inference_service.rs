@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
             .collect();
         tickets.push(service.submit(InferRequest {
             model: model.into(),
-            input,
+            input: input.into(),
             id: i,
         })?);
     }

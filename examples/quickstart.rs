@@ -70,7 +70,7 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let ticket = service.submit(InferRequest {
         model: "hypernet20".into(),
-        input,
+        input: input.into(),
         id: 0,
     })?;
     let response = ticket.wait()?;

@@ -2,7 +2,11 @@
 //! an interleaved synthetic workload at several worker counts, emitting
 //! `BENCH_serve.json` (throughput + worst-model p99 per worker count)
 //! so the serving scalability trajectory is tracked across PRs like the
-//! kernel numbers in `BENCH_hotpath.json`.
+//! kernel numbers in `BENCH_hotpath.json`. A second section
+//! (`batch_entries`) sweeps the micro-batch curve B ∈ {1, 2, 4, 8}:
+//! batched vs sequential throughput plus the weight-stream traffic,
+//! whose ratio must fall as ~1/B (gated by `scripts/bench_diff.py
+//! --serve`).
 //!
 //!     cargo bench --bench serve
 //!
@@ -10,7 +14,7 @@
 //! runs a reduced request count — the JSON contract, not publication
 //! numbers. The CI `bench-smoke` job validates the emitted file.
 
-use hyperdrive::engine::{InferRequest, InferenceService};
+use hyperdrive::engine::{Engine, InferRequest, InferenceService};
 use hyperdrive::util::SplitMix64;
 
 const MODELS: [&str; 2] = ["hypernet20", "resnet18@32x32"];
@@ -48,7 +52,7 @@ fn run(workers: usize, requests: usize) -> Row {
             service
                 .submit(InferRequest {
                     model,
-                    input,
+                    input: input.into(),
                     id: i as u64,
                 })
                 .expect("admission (Block policy) cannot fail here")
@@ -76,6 +80,51 @@ fn run(workers: usize, requests: usize) -> Row {
         req_per_s: if total_s > 0.0 { ok as f64 / total_s } else { 0.0 },
         p99_ms,
     }
+}
+
+struct BatchRow {
+    model: &'static str,
+    batch: usize,
+    stream_words: u64,
+    stream_words_seq: u64,
+    seq_s: f64,
+    batch_s: f64,
+}
+
+/// The micro-batch curve for one model: B images through one
+/// `Engine::infer_batch` pass vs B sequential `Engine::infer` calls,
+/// with the batch's analytic weight-stream counters.
+fn run_batch_curve(model: &'static str, batches: &[usize]) -> Vec<BatchRow> {
+    let engine = Engine::builder().model(model).build().expect("engine build");
+    let mut rng = SplitMix64::new(7);
+    let mut rows = Vec::new();
+    for &b in batches {
+        let inputs: Vec<Vec<f32>> = (0..b)
+            .map(|_| (0..engine.input_len()).map(|_| rng.next_sym()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|x| x.as_slice()).collect();
+        let t0 = std::time::Instant::now();
+        for x in &refs {
+            engine.infer(x).expect("sequential inference");
+        }
+        let seq_s = t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+        let run = engine.infer_batch(&refs);
+        let batch_s = t0.elapsed().as_secs_f64();
+        assert!(
+            run.outputs.iter().all(|r| r.is_ok()),
+            "batch inference failed"
+        );
+        rows.push(BatchRow {
+            model,
+            batch: b,
+            stream_words: run.stream_words,
+            stream_words_seq: run.sequential_stream_words,
+            seq_s,
+            batch_s,
+        });
+    }
+    rows
 }
 
 fn main() {
@@ -111,9 +160,48 @@ fn main() {
             if i + 1 < rows.len() { "," } else { "" }
         ));
     }
+    body.push_str("  ],\n");
+
+    // The B ∈ {1, 2, 4, 8} micro-batch curve: weight traffic must fall
+    // as ~1/B of the sequential words (bench_diff.py --serve gates it).
+    let mut batch_rows = Vec::new();
+    for model in MODELS {
+        batch_rows.extend(run_batch_curve(model, &[1, 2, 4, 8]));
+    }
+    body.push_str("  \"batch_entries\": [\n");
+    for (i, r) in batch_rows.iter().enumerate() {
+        let ratio = r.stream_words as f64 / r.stream_words_seq.max(1) as f64;
+        let req_per_s = |s: f64| if s > 0.0 { r.batch as f64 / s } else { 0.0 };
+        println!(
+            "{} B={}: stream ratio {:.4} (1/B = {:.4}), {:.1} req/s batched vs {:.1} sequential",
+            r.model,
+            r.batch,
+            ratio,
+            1.0 / r.batch as f64,
+            req_per_s(r.batch_s),
+            req_per_s(r.seq_s)
+        );
+        body.push_str(&format!(
+            "    {{\"model\": \"{}\", \"batch\": {}, \"stream_words\": {}, \
+             \"stream_words_seq\": {}, \"ratio\": {:.6}, \"req_per_s_batched\": {:.3}, \
+             \"req_per_s_sequential\": {:.3}}}{}\n",
+            r.model,
+            r.batch,
+            r.stream_words,
+            r.stream_words_seq,
+            ratio,
+            req_per_s(r.batch_s),
+            req_per_s(r.seq_s),
+            if i + 1 < batch_rows.len() { "," } else { "" }
+        ));
+    }
     body.push_str("  ]\n}\n");
     match std::fs::write("BENCH_serve.json", &body) {
-        Ok(()) => println!("wrote BENCH_serve.json ({} worker counts)", rows.len()),
+        Ok(()) => println!(
+            "wrote BENCH_serve.json ({} worker counts, {} batch points)",
+            rows.len(),
+            batch_rows.len()
+        ),
         Err(e) => {
             eprintln!("error: could not write BENCH_serve.json: {e}");
             std::process::exit(1);

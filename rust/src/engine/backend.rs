@@ -52,6 +52,34 @@ pub struct LayerTrace<'a> {
     pub output: &'a [f32],
 }
 
+/// Result of one [`Backend::infer_batch`] micro-batch pass.
+///
+/// Outputs come back per input, in submission order, so one failing
+/// input (e.g. a wrong-length tensor) fails only its own slot — the
+/// failure-isolation contract the service's ticket scatter relies on.
+/// The two stream counters quantify the weight-traffic amortization the
+/// batch achieved: a backend that truly batches fetches each weight
+/// block once (`stream_words ≈ sequential_stream_words / B`), while the
+/// loop fallback reports zero for both (no amortization to claim).
+#[derive(Debug, Default)]
+pub struct BatchRun {
+    /// Per-input results, aligned with the `inputs` slice.
+    pub outputs: Vec<Result<Vec<f32>, EngineError>>,
+    /// Off-chip weight-stream words this batch actually fetched.
+    pub stream_words: u64,
+    /// Stream words the same images would have fetched as sequential
+    /// single-image inferences (`per-image words × images batched`).
+    pub sequential_stream_words: u64,
+}
+
+impl BatchRun {
+    /// Stream words saved vs sequential execution — the service's
+    /// cumulative `weight_traffic_saved` metric.
+    pub fn stream_words_saved(&self) -> u64 {
+        self.sequential_stream_words.saturating_sub(self.stream_words)
+    }
+}
+
 /// A backend that can run inferences for one fixed network.
 ///
 /// `Send + Sync` is required so the serving layers — the single-model
@@ -84,6 +112,23 @@ pub trait Backend: Send + Sync {
         input: &[f32],
         hook: &mut dyn FnMut(LayerTrace<'_>),
     ) -> Result<Vec<f32>, EngineError>;
+
+    /// Run a micro-batch of same-network inferences. Per-input outputs
+    /// must be **bit-identical** to calling [`Self::infer`] on each
+    /// input sequentially, and one failing input fails only its own
+    /// slot of [`BatchRun::outputs`].
+    ///
+    /// The default is the sequential loop fallback (correct for any
+    /// backend, no amortization — both stream counters stay zero). The
+    /// simulator backends override it with the batch-resident datapath
+    /// pass that streams each weight block once across all images.
+    fn infer_batch(&self, inputs: &[&[f32]]) -> BatchRun {
+        BatchRun {
+            outputs: inputs.iter().map(|i| self.infer(i)).collect(),
+            stream_words: 0,
+            sequential_stream_words: 0,
+        }
+    }
 }
 
 /// Per-step parameters (packed weight stream + folded batch-norm γ/β)

@@ -6,10 +6,10 @@
 //! free nearest-neighbour replication, as on the chip's DDUs.
 
 use crate::network::{Network, TensorRef};
-use crate::simulator::chip::{run_layer_threads, LayerParams};
+use crate::simulator::chip::{run_layer_batch_threads, run_layer_threads, LayerParams};
 use crate::simulator::{FeatureMap, Precision};
 
-use super::backend::{Backend, BackendKind, LayerTrace, LazyParams};
+use super::backend::{Backend, BackendKind, BatchRun, LayerTrace, LazyParams};
 use super::EngineError;
 
 pub struct FunctionalBackend {
@@ -115,5 +115,109 @@ impl Backend for FunctionalBackend {
             fms.push(out);
         }
         Ok(fms.pop().expect("non-empty network").data)
+    }
+
+    /// Batch-resident pass: all valid inputs walk the step list
+    /// together through [`run_layer_batch_threads`], so each weight
+    /// block streams once per batch instead of once per image. Bad
+    /// inputs (wrong length) fail only their own slot; the valid subset
+    /// still runs as one batch.
+    fn infer_batch(&self, inputs: &[&[f32]]) -> BatchRun {
+        let net = &self.net;
+        let want = net.in_ch * net.in_h * net.in_w;
+        let mut outputs: Vec<Option<Result<Vec<f32>, EngineError>>> = inputs
+            .iter()
+            .map(|input| {
+                (input.len() != want).then(|| {
+                    Err(EngineError::Input(format!(
+                        "input has {} values, {} expects {want} ({}x{}x{})",
+                        input.len(),
+                        net.name,
+                        net.in_ch,
+                        net.in_h,
+                        net.in_w
+                    )))
+                })
+            })
+            .collect();
+        let valid: Vec<usize> = (0..inputs.len())
+            .filter(|&i| outputs[i].is_none())
+            .collect();
+        let nb = valid.len();
+        let mut run = BatchRun::default();
+        if nb > 0 {
+            let params = self.params.get(net, self.stream_c);
+            let input_fms: Vec<FeatureMap> = valid
+                .iter()
+                .map(|&i| FeatureMap::from_vec(net.in_ch, net.in_h, net.in_w, inputs[i].to_vec()))
+                .collect();
+            // fms[step][image]: every intermediate stays resident for
+            // the whole batch, like the B on-chip feature maps.
+            let mut fms: Vec<Vec<FeatureMap>> = Vec::with_capacity(net.steps.len());
+
+            fn resolve<'a>(
+                input_fms: &'a [FeatureMap],
+                fms: &'a [Vec<FeatureMap>],
+                bi: usize,
+                r: TensorRef,
+            ) -> &'a FeatureMap {
+                match r {
+                    TensorRef::Input => &input_fms[bi],
+                    TensorRef::Step(j) => &fms[j][bi],
+                }
+            }
+
+            for (i, s) in net.steps.iter().enumerate() {
+                let concatenated: Vec<FeatureMap>;
+                let srcs: Vec<&FeatureMap> = if let Some(extra) = s.concat_extra {
+                    concatenated = (0..nb)
+                        .map(|bi| {
+                            resolve(&input_fms, &fms, bi, s.src)
+                                .concat_channels(resolve(&input_fms, &fms, bi, extra))
+                        })
+                        .collect();
+                    concatenated.iter().collect()
+                } else {
+                    (0..nb).map(|bi| resolve(&input_fms, &fms, bi, s.src)).collect()
+                };
+                let byps: Option<Vec<&FeatureMap>> = s
+                    .bypass
+                    .map(|b| (0..nb).map(|bi| resolve(&input_fms, &fms, bi, b)).collect());
+                let p = &params.steps[i];
+                let lp = LayerParams {
+                    layer: &s.layer,
+                    stream: &p.stream,
+                    gamma: &p.gamma,
+                    beta: &p.beta,
+                };
+                let (outs, counts) = run_layer_batch_threads(
+                    &lp,
+                    &srcs,
+                    byps.as_deref(),
+                    self.precision,
+                    self.tiles,
+                    self.threads,
+                );
+                run.stream_words += counts.stream_words;
+                let outs = if s.upsample2x {
+                    outs.into_iter().map(|o| o.upsample2x_nearest()).collect()
+                } else {
+                    outs
+                };
+                fms.push(outs);
+            }
+            // Each layer's words streamed once per batch vs once per
+            // image sequentially.
+            run.sequential_stream_words = run.stream_words * nb as u64;
+            let finals = fms.pop().expect("non-empty network");
+            for (&slot, out) in valid.iter().zip(finals) {
+                outputs[slot] = Some(Ok(out.data));
+            }
+        }
+        run.outputs = outputs
+            .into_iter()
+            .map(|o| o.expect("every slot resolved"))
+            .collect();
+        run
     }
 }

@@ -9,7 +9,7 @@ use crate::network::{Network, TensorRef};
 use crate::simulator::mesh::{MeshSim, MeshStats};
 use crate::simulator::{FeatureMap, Precision};
 
-use super::backend::{Backend, BackendKind, LayerTrace, LazyParams};
+use super::backend::{Backend, BackendKind, BatchRun, LayerTrace, LazyParams};
 use super::EngineError;
 
 pub struct MeshBackend {
@@ -118,6 +118,67 @@ impl Backend for MeshBackend {
     ) -> Result<Vec<f32>, EngineError> {
         self.run(input, Some(hook))
     }
+
+    /// Batch-resident mesh pass: the valid inputs run through
+    /// [`MeshSim::run_network_batch`], which broadcasts each weight
+    /// block once per chip per batch. Wrong-length inputs fail only
+    /// their own slot; a whole-mesh failure (e.g. indivisible FM dims)
+    /// fails each slot with the same typed error, exactly as sequential
+    /// `infer` calls would.
+    fn infer_batch(&self, inputs: &[&[f32]]) -> BatchRun {
+        let net = &self.net;
+        let want = net.in_ch * net.in_h * net.in_w;
+        let mut outputs: Vec<Option<Result<Vec<f32>, EngineError>>> = inputs
+            .iter()
+            .map(|input| {
+                (input.len() != want).then(|| {
+                    Err(EngineError::Input(format!(
+                        "input has {} values, {} expects {want} ({}x{}x{})",
+                        input.len(),
+                        net.name,
+                        net.in_ch,
+                        net.in_h,
+                        net.in_w
+                    )))
+                })
+            })
+            .collect();
+        let valid: Vec<usize> = (0..inputs.len())
+            .filter(|&i| outputs[i].is_none())
+            .collect();
+        let mut run = BatchRun::default();
+        if !valid.is_empty() {
+            if self.check_divisibility().is_err() {
+                // Every batched request sees the exact typed error its
+                // own sequential inference would have hit.
+                for &slot in &valid {
+                    outputs[slot] = Some(Err(self
+                        .check_divisibility()
+                        .expect_err("divisibility failed above")));
+                }
+            } else {
+                match self.run_batch(inputs, &valid) {
+                    Ok((outs, stream_words)) => {
+                        run.stream_words = stream_words;
+                        run.sequential_stream_words = stream_words * valid.len() as u64;
+                        for (&slot, out) in valid.iter().zip(outs) {
+                            outputs[slot] = Some(Ok(out));
+                        }
+                    }
+                    Err(me) => {
+                        for &slot in &valid {
+                            outputs[slot] = Some(Err(me.clone().into()));
+                        }
+                    }
+                }
+            }
+        }
+        run.outputs = outputs
+            .into_iter()
+            .map(|o| o.expect("every slot resolved"))
+            .collect();
+        run
+    }
 }
 
 impl MeshBackend {
@@ -160,5 +221,29 @@ impl MeshBackend {
         };
         *self.last_stats.lock().unwrap() = Some(stats);
         Ok(out.data)
+    }
+
+    /// The already-validated subset of a batch through the mesh batch
+    /// pass. Returns per-image outputs (in `valid` order) and the
+    /// batch's off-chip stream words.
+    fn run_batch(
+        &self,
+        inputs: &[&[f32]],
+        valid: &[usize],
+    ) -> Result<(Vec<Vec<f32>>, u64), crate::simulator::mesh::MeshError> {
+        let net = &self.net;
+        let params = self.params.get(net, self.stream_c);
+        let input_fms: Vec<FeatureMap> = valid
+            .iter()
+            .map(|&i| FeatureMap::from_vec(net.in_ch, net.in_h, net.in_w, inputs[i].to_vec()))
+            .collect();
+        let in_refs: Vec<&FeatureMap> = input_fms.iter().collect();
+        let mut sim = MeshSim::new(self.rows, self.cols, self.precision);
+        sim.fm_bits = self.fm_bits;
+        sim.threads = self.threads;
+        let (outs, stats) = sim.run_network_batch(net, &params.steps, &in_refs)?;
+        let stream_words = stats.access.stream_words;
+        *self.last_stats.lock().unwrap() = Some(stats);
+        Ok((outs.into_iter().map(|o| o.data).collect(), stream_words))
     }
 }

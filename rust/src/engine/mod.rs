@@ -72,12 +72,12 @@ use crate::network::Network;
 use crate::simulator::mesh::{MeshError, MeshStats};
 use crate::ChipConfig;
 
-pub use backend::{Backend, BackendKind, LayerTrace, NetworkParams};
+pub use backend::{Backend, BackendKind, BatchRun, LayerTrace, NetworkParams};
 pub use report::EngineReport;
 pub use serve::{percentile, ServeOptions, ServeOutcome, ServeStats};
 pub use service::{
-    AdmissionPolicy, InferRequest, InferResponse, InferenceService, ModelConfig, ModelMetrics,
-    ServeError, ServiceBuilder, ServiceMetrics, Ticket,
+    AdmissionPolicy, BatchPolicy, InferRequest, InferResponse, InferenceService, ModelConfig,
+    ModelMetrics, ServeError, ServiceBuilder, ServiceMetrics, Ticket,
 };
 // Re-exported so engine consumers need no coordinator/simulator paths.
 pub use crate::coordinator::schedule::DepthwisePolicy;
@@ -195,6 +195,13 @@ impl Backend for BackendImpl {
         hook: &mut dyn FnMut(LayerTrace<'_>),
     ) -> Result<Vec<f32>, EngineError> {
         self.as_dyn().infer_traced(input, hook)
+    }
+
+    // Explicit: without this the trait's sequential-loop default would
+    // shadow the simulator backends' batch-resident overrides for every
+    // caller holding the `Arc<BackendImpl>` (i.e. the whole service).
+    fn infer_batch(&self, inputs: &[&[f32]]) -> backend::BatchRun {
+        self.as_dyn().infer_batch(inputs)
     }
 }
 
@@ -674,6 +681,15 @@ impl Engine {
         hook: &mut dyn FnMut(LayerTrace<'_>),
     ) -> Result<Vec<f32>, EngineError> {
         self.backend.as_dyn().infer_traced(input, hook)
+    }
+
+    /// Run a micro-batch: all inputs stay resident while each weight
+    /// block streams once (§III-B amortization). Per-input outputs are
+    /// bit-identical to sequential [`infer`](Self::infer) calls, one
+    /// failing input fails only its own slot, and the returned
+    /// [`BatchRun`] counters quantify the weight traffic saved.
+    pub fn infer_batch(&self, inputs: &[&[f32]]) -> BatchRun {
+        self.backend.as_dyn().infer_batch(inputs)
     }
 
     /// Serve a FIFO batch over a bounded queue and `opts.workers`

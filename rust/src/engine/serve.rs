@@ -198,7 +198,7 @@ pub(crate) fn serve_outcome_on(
         // pre-validate) are per-request results too, not batch aborts.
         tickets.push(svc.submit(InferRequest {
             model: model.to_string(),
-            input: input.clone(),
+            input: input.clone().into(),
             id: i as u64,
         }));
     }

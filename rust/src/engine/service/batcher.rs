@@ -1,0 +1,155 @@
+//! Per-model micro-batch assembly for the [`super::InferenceService`]
+//! worker loop.
+//!
+//! Hyperdrive streams weights past stationary feature maps, so the cost
+//! of a layer's weight fetch is paid once no matter how many images are
+//! resident (§III-B): serving B same-model requests as one
+//! [`Backend::infer_batch`] pass divides the off-chip weight traffic by
+//! ~B. The assembler coalesces queued same-model requests under a
+//! [`BatchPolicy`] — greedily taking whatever is already queued, then
+//! optionally holding the batch open for stragglers — while keeping the
+//! per-request [`super::Ticket`] contract intact: every job still
+//! resolves its own ticket, and one failing request fails only itself.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::MutexGuard;
+use std::time::{Duration, Instant};
+
+use super::super::backend::Backend;
+use super::{Job, ServeError, Shared, State};
+
+/// How a model's worker coalesces queued requests into one
+/// batch-resident inference pass.
+///
+/// The default (`max_batch == 1`) disables coalescing entirely — every
+/// request runs alone, exactly like the pre-batching service.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Most requests one [`Backend::infer_batch`] pass may serve
+    /// (resident images). Must be ≥ 1.
+    pub max_batch: usize,
+    /// How long a short batch may hold its queue slot waiting for
+    /// stragglers before running anyway. `0` never waits: the batch is
+    /// whatever is already queued.
+    pub max_wait_ms: u64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 1,
+            max_wait_ms: 0,
+        }
+    }
+}
+
+impl BatchPolicy {
+    pub fn new(max_batch: usize, max_wait_ms: u64) -> BatchPolicy {
+        BatchPolicy {
+            max_batch,
+            max_wait_ms,
+        }
+    }
+}
+
+/// Grow `jobs` (the already-popped head of slot `i`'s queue) toward the
+/// slot's `max_batch`: take everything queued now, then — if the policy
+/// grants a wait budget — hold for stragglers until the batch fills,
+/// the deadline passes, the service shuts down or the model is removed.
+///
+/// Every job taken is counted `in_flight` immediately, so metrics
+/// snapshots taken mid-hold still add up. Returns the re-acquired state
+/// guard.
+pub(super) fn fill_batch<'a>(
+    shared: &'a Shared,
+    mut st: MutexGuard<'a, State>,
+    i: usize,
+    jobs: &mut Vec<Job>,
+) -> MutexGuard<'a, State> {
+    let policy = st.slots[i].batch;
+    let take = |st: &mut State, jobs: &mut Vec<Job>| {
+        while jobs.len() < policy.max_batch {
+            match st.slots[i].queue.pop_front() {
+                Some(j) => {
+                    st.slots[i].in_flight += 1;
+                    jobs.push(j);
+                }
+                None => break,
+            }
+        }
+    };
+    take(&mut st, jobs);
+    if jobs.len() < policy.max_batch && policy.max_wait_ms > 0 {
+        let deadline = Instant::now() + Duration::from_millis(policy.max_wait_ms);
+        loop {
+            if jobs.len() >= policy.max_batch || st.shutting_down || st.slots[i].removed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            // Submitters notify `work` on every push (notify_all), so a
+            // holding worker observes each arrival as it lands.
+            let (guard, _) = shared.work.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+            take(&mut st, jobs);
+        }
+    }
+    st
+}
+
+/// Run one assembled batch with panic capture, scattering the
+/// [`crate::engine::BatchRun`] back to per-job results. Returns the per-job
+/// results (aligned with `jobs`) and the stream words the batch saved
+/// vs sequential execution.
+pub(super) fn run_batch(
+    backend: &dyn Backend,
+    model: &str,
+    jobs: &[Job],
+) -> (Vec<Result<Vec<f32>, ServeError>>, u64) {
+    let inputs: Vec<&[f32]> = jobs.iter().map(|j| &*j.input).collect();
+    match catch_unwind(AssertUnwindSafe(|| backend.infer_batch(&inputs))) {
+        Ok(run) => {
+            let saved = run.stream_words_saved();
+            let mut results: Vec<Result<Vec<f32>, ServeError>> = run
+                .outputs
+                .into_iter()
+                .take(jobs.len())
+                .map(|r| {
+                    r.map_err(|e| ServeError::Failed {
+                        model: model.to_string(),
+                        message: e.to_string(),
+                    })
+                })
+                .collect();
+            // A misbehaving backend that returns too few slots must not
+            // strand the tail's tickets.
+            while results.len() < jobs.len() {
+                results.push(Err(ServeError::Failed {
+                    model: model.to_string(),
+                    message: "backend returned too few batch outputs".to_string(),
+                }));
+            }
+            (results, saved)
+        }
+        Err(payload) => {
+            let message = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "opaque panic payload".to_string());
+            (
+                jobs.iter()
+                    .map(|_| {
+                        Err(ServeError::Panicked {
+                            model: model.to_string(),
+                            message: message.clone(),
+                        })
+                    })
+                    .collect(),
+                0,
+            )
+        }
+    }
+}

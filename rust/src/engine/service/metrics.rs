@@ -31,12 +31,29 @@ pub(crate) struct MetricsAccum {
     next: usize,
     first_submit: Option<Instant>,
     last_done: Option<Instant>,
+    /// Executed batch passes (a lone request counts as a batch of 1).
+    batches: u64,
+    /// Requests served across all batch passes (`Σ batch sizes`).
+    batch_images: u64,
+    /// Largest batch executed so far.
+    batch_max: u64,
+    /// Cumulative weight-stream words saved vs sequential execution.
+    weight_saved: u64,
 }
 
 impl MetricsAccum {
     pub(crate) fn record_submit(&mut self, now: Instant) {
         self.submitted += 1;
         self.first_submit.get_or_insert(now);
+    }
+
+    /// One executed batch pass of `size` requests that saved `saved`
+    /// weight-stream words vs sequential execution.
+    pub(crate) fn record_batch(&mut self, size: usize, saved: u64) {
+        self.batches += 1;
+        self.batch_images += size as u64;
+        self.batch_max = self.batch_max.max(size as u64);
+        self.weight_saved += saved;
     }
 
     pub(crate) fn record_ok(&mut self, latency_ms: f64, now: Instant) {
@@ -92,6 +109,13 @@ impl MetricsAccum {
             req_per_s: per_s(self.completed as f64),
             ops_per_s: per_s(total_ops as f64 * self.completed as f64),
             active_s,
+            batch_mean: if self.batches > 0 {
+                self.batch_images as f64 / self.batches as f64
+            } else {
+                0.0
+            },
+            batch_max: self.batch_max,
+            weight_traffic_saved: self.weight_saved,
         }
     }
 }
@@ -126,6 +150,14 @@ pub struct ModelMetrics {
     pub ops_per_s: f64,
     /// First submission → last completion, in seconds.
     pub active_s: f64,
+    /// Mean executed batch size (1.0 when batching is off; 0.0 before
+    /// any execution).
+    pub batch_mean: f64,
+    /// Largest batch one pass served.
+    pub batch_max: u64,
+    /// Cumulative weight-stream words the model's batch passes saved
+    /// vs sequential execution.
+    pub weight_traffic_saved: u64,
 }
 
 /// A consistent snapshot over every hosted model, produced by
@@ -158,6 +190,11 @@ impl ServiceMetrics {
         self.per_model.iter().map(|m| m.failed).sum()
     }
 
+    /// Cumulative weight-stream words saved by batching, service-wide.
+    pub fn total_weight_traffic_saved(&self) -> u64 {
+        self.per_model.iter().map(|m| m.weight_traffic_saved).sum()
+    }
+
     /// A model's row as single-model [`ServeStats`] (what
     /// [`crate::engine::Engine::report_with_serve`] consumes), with the
     /// service's active window standing in for the batch wall time.
@@ -178,12 +215,24 @@ impl ServiceMetrics {
     /// The `serve` CLI's per-model metrics table.
     pub fn render_table(&self) -> String {
         let mut out = format!(
-            "{:<28} {:>6} {:>6} {:>5} {:>5} {:>9} {:>9} {:>9} {:>8} {:>9}\n",
-            "model", "sub", "ok", "fail", "queue", "mean ms", "p50 ms", "p99 ms", "req/s", "MOp/s"
+            "{:<28} {:>6} {:>6} {:>5} {:>5} {:>9} {:>9} {:>9} {:>8} {:>9} {:>6} {:>6} {:>12}\n",
+            "model",
+            "sub",
+            "ok",
+            "fail",
+            "queue",
+            "mean ms",
+            "p50 ms",
+            "p99 ms",
+            "req/s",
+            "MOp/s",
+            "avg B",
+            "max B",
+            "words saved"
         );
         for m in &self.per_model {
             out.push_str(&format!(
-                "{:<28} {:>6} {:>6} {:>5} {:>5} {:>9.2} {:>9.2} {:>9.2} {:>8.1} {:>9.2}{}\n",
+                "{:<28} {:>6} {:>6} {:>5} {:>5} {:>9.2} {:>9.2} {:>9.2} {:>8.1} {:>9.2} {:>6.2} {:>6} {:>12}{}\n",
                 m.model,
                 m.submitted,
                 m.completed,
@@ -194,6 +243,9 @@ impl ServiceMetrics {
                 m.p99_ms,
                 m.req_per_s,
                 m.ops_per_s / 1e6,
+                m.batch_mean,
+                m.batch_max,
+                m.weight_traffic_saved,
                 if m.removed { "  (removed)" } else { "" }
             ));
         }

@@ -43,7 +43,7 @@ fn usage() -> &'static str {
        list-models\n\
        serve --model SPEC[,SPEC...] [--requests N] [--mix round-robin|random]\n\
              [--workers W] [--queue-depth D] [--admission block|reject|timeout:MS]\n\
-             [--seed S]\n\
+             [--max-batch B] [--batch-wait-ms MS] [--seed S]\n\
        run-e2e [--artifacts DIR] [--batch N] [--workers N]\n\
        simulate --model SPEC [--mesh RxC] [--vdd V] [--vbb V] [--threads N]\n\
        mesh --model SPEC\n\
@@ -288,6 +288,8 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<String, CliError> {
     let requests: usize = opt_parse(opts, "requests", 32, "a positive integer")?;
     let workers: usize = opt_parse(opts, "workers", 4, "a positive integer")?;
     let queue_depth: usize = opt_parse(opts, "queue-depth", 8, "a positive integer")?;
+    let max_batch: usize = opt_parse(opts, "max-batch", 1, "a positive integer")?;
+    let batch_wait_ms: u64 = opt_parse(opts, "batch-wait-ms", 0, "an unsigned integer")?;
     let seed: u64 = opt_parse(opts, "seed", 7, "an unsigned integer")?;
     let mix = opts.get("mix").map(String::as_str).unwrap_or("round-robin");
     if mix != "round-robin" && mix != "random" {
@@ -317,7 +319,9 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<String, CliError> {
     let mut builder = InferenceService::builder()
         .workers(workers)
         .queue_depth(queue_depth)
-        .admission(admission);
+        .admission(admission)
+        .max_batch(max_batch)
+        .batch_wait_ms(batch_wait_ms);
     for spec in &specs {
         builder = builder.model_spec(spec.as_str());
     }
@@ -335,7 +339,7 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<String, CliError> {
         let input: Vec<f32> = (0..len).map(|_| rng.next_sym()).collect();
         match service.submit(InferRequest {
             model: model.clone(),
-            input,
+            input: input.into(),
             id: i as u64,
         }) {
             Ok(t) => tickets.push(t),
@@ -355,9 +359,17 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<String, CliError> {
         }
     }
     let metrics = service.shutdown();
+    let batching = if max_batch > 1 {
+        format!(
+            "batching: up to {max_batch} requests per pass, {} weight-stream words saved\n",
+            metrics.total_weight_traffic_saved()
+        )
+    } else {
+        String::new()
+    };
     Ok(format!(
         "served {requests} requests over {} model(s) on {workers} workers ({mix} mix): \
-         {ok} ok, {failed} failed, {rejected} rejected at admission\n{}",
+         {ok} ok, {failed} failed, {rejected} rejected at admission\n{}{batching}",
         specs.len(),
         metrics.render_table()
     ))
@@ -635,6 +647,29 @@ mod tests {
         let out = cmd_serve(&opts).unwrap();
         assert!(out.contains("2 model(s)"), "{out}");
         assert!(out.contains("resnet18@32x32"), "{out}");
+    }
+
+    #[test]
+    fn serve_subcommand_batches_with_max_batch() {
+        let opts = parse_opts(&args(&[
+            "--model",
+            "hypernet20",
+            "--requests",
+            "8",
+            "--workers",
+            "1",
+            "--max-batch",
+            "4",
+            "--batch-wait-ms",
+            "2000",
+        ]))
+        .unwrap();
+        let out = cmd_serve(&opts).unwrap();
+        assert!(out.contains("8 ok, 0 failed"), "{out}");
+        assert!(out.contains("batching: up to 4 requests per pass"), "{out}");
+        // With one worker and a hold window the passes coalesce, so the
+        // functional backend's amortization must show up as savings.
+        assert!(!out.contains("0 weight-stream words saved"), "{out}");
     }
 
     #[test]

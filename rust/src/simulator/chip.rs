@@ -13,7 +13,10 @@
 use crate::bwn::WeightStream;
 use crate::network::ConvLayer;
 
-use super::datapath::{partition_ranges, resolve_threads, run_tile, weight_traffic, TileGeom};
+use super::datapath::{
+    partition_ranges, resolve_threads, run_tile, run_tile_batch, weight_traffic, InputSurface,
+    TileGeom,
+};
 use super::fm::FeatureMap;
 
 pub use super::datapath::{AccessCounts, Precision};
@@ -152,6 +155,140 @@ pub fn run_layer_threads(
     acc.stream_words += sw;
     acc.wbuf_reads += wb;
     (out, acc)
+}
+
+/// [`run_layer_threads`] for a micro-batch of `B` resident images: the
+/// shared batch kernel ([`run_tile_batch`]) streams each weight block
+/// once and applies it to all `B` feature maps, so `stream_words` is
+/// counted **once per batch** (the paper's serving amortization) while
+/// every compute counter still scales with `B`. A word now serves
+/// `B × tile_pixels` output pixels — the first use comes off the
+/// stream, the remaining `B·tile_pixels − 1` from the weight buffer.
+///
+/// Per-image outputs are bit-identical to `B` sequential
+/// [`run_layer_threads`] calls at any thread count: workers still own
+/// disjoint output-channel ranges (now across all images), and each
+/// image's per-pixel rounding chain is untouched by batching.
+pub fn run_layer_batch_threads(
+    p: &LayerParams,
+    inputs: &[&FeatureMap],
+    bypasses: Option<&[&FeatureMap]>,
+    prec: Precision,
+    tiles_mn: (usize, usize),
+    threads: usize,
+) -> (Vec<FeatureMap>, AccessCounts) {
+    let l = p.layer;
+    let b = inputs.len();
+    if let Some(bps) = bypasses {
+        assert_eq!(bps.len(), b, "one bypass FM per batched image");
+    }
+    assert_eq!(l.has_bypass, bypasses.is_some());
+    assert_eq!(p.gamma.len(), l.n_out);
+    assert_eq!(p.beta.len(), l.n_out);
+    if b == 0 {
+        return (Vec::new(), AccessCounts::default());
+    }
+    for input in inputs {
+        assert_eq!((input.c, input.h, input.w), (l.n_in, l.h, l.w));
+    }
+
+    let (ho, wo) = (l.h_out(), l.w_out());
+    let (m, n) = tiles_mn;
+    let geom = TileGeom {
+        oy0: 0,
+        oy1: ho,
+        ox0: 0,
+        ox1: wo,
+        iy0: 0,
+        ix0: 0,
+        tile_h: ho.div_ceil(m).max(1),
+        tile_w: wo.div_ceil(n).max(1),
+        in_tile_h: l.h.div_ceil(m).max(1),
+        in_tile_w: l.w.div_ceil(n).max(1),
+    };
+    let mut outs: Vec<FeatureMap> = (0..b).map(|_| FeatureMap::zeros(l.n_out, ho, wo)).collect();
+    let mut acc = AccessCounts::default();
+    let plane = ho * wo;
+    // The `&dyn InputSurface` views are built per worker (trait objects
+    // do not carry `Sync`; the underlying `&FeatureMap`s do).
+    fn view<'x>(fms: &[&'x FeatureMap]) -> Vec<&'x dyn InputSurface> {
+        fms.iter().map(|f| *f as &dyn InputSurface).collect()
+    }
+    let workers = resolve_threads(threads).min(l.n_out).max(1);
+    if workers <= 1 {
+        let ins = view(inputs);
+        let byps = bypasses.map(view);
+        let mut planes: Vec<&mut [f32]> =
+            outs.iter_mut().map(|o| o.data.as_mut_slice()).collect();
+        let mut write = |bi: usize, co: usize, oy: usize, ox: usize, v: f32| {
+            planes[bi][(co * ho + oy) * wo + ox] = v;
+        };
+        acc.add(&run_tile_batch(
+            l,
+            p.stream,
+            p.gamma,
+            p.beta,
+            (0, l.n_out),
+            &ins,
+            byps.as_deref(),
+            prec,
+            &geom,
+            &mut write,
+        ));
+    } else {
+        // Same balanced channel fan-out as the single-image path; each
+        // worker owns its channel range of *every* image's output.
+        let ranges = partition_ranges(l.n_out, workers);
+        let counts = std::thread::scope(|s| {
+            let mut per_range: Vec<Vec<&mut [f32]>> =
+                ranges.iter().map(|_| Vec::with_capacity(b)).collect();
+            for out in outs.iter_mut() {
+                let mut rest = out.data.as_mut_slice();
+                for (ri, &(co0, co1)) in ranges.iter().enumerate() {
+                    let (chunk, tail) =
+                        std::mem::take(&mut rest).split_at_mut((co1 - co0) * plane);
+                    rest = tail;
+                    per_range[ri].push(chunk);
+                }
+            }
+            let mut handles = Vec::with_capacity(ranges.len());
+            for (&(co0, co1), mut chunks) in ranges.iter().zip(per_range) {
+                handles.push(s.spawn(move || {
+                    let ins = view(inputs);
+                    let byps = bypasses.map(view);
+                    let mut write = |bi: usize, co: usize, oy: usize, ox: usize, v: f32| {
+                        chunks[bi][((co - co0) * ho + oy) * wo + ox] = v;
+                    };
+                    run_tile_batch(
+                        l,
+                        p.stream,
+                        p.gamma,
+                        p.beta,
+                        (co0, co1),
+                        &ins,
+                        byps.as_deref(),
+                        prec,
+                        &geom,
+                        &mut write,
+                    )
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("batch datapath worker panicked"))
+                .collect::<Vec<_>>()
+        });
+        for c in &counts {
+            acc.add(c);
+        }
+    }
+    // Weight traffic once per *batch*: each stream word enters once and
+    // then serves B × tile_pixels output pixels from the weight buffer.
+    let tile_pixels = (geom.tile_h * geom.tile_w) as u64;
+    let (sw, _) = weight_traffic(l, p.stream.c, tile_pixels);
+    acc.stream_words += sw;
+    acc.wbuf_reads += sw * ((b as u64 * tile_pixels).max(1) - 1);
+    (outs, acc)
 }
 
 #[cfg(test)]
@@ -405,6 +542,77 @@ mod tests {
             assert_eq!(got.data, want.data, "threads={threads}");
             assert_eq!(acc, want_acc, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn batched_layer_is_bit_identical_with_amortized_stream() {
+        // A B-image batch must reproduce B sequential runs bit-for-bit
+        // while fetching each stream word once (not B times), at every
+        // thread count.
+        let mut rng = SplitMix64::new(0xbb01);
+        let l = ConvLayer::new("mb", 8, 20, 10, 10, 3, 1).with_bypass(true);
+        let (w, gamma, beta) = make_params(&l, &mut rng);
+        let stream = pack_weights(&l, &w, 16);
+        let p = LayerParams {
+            layer: &l,
+            stream: &stream,
+            gamma: &gamma,
+            beta: &beta,
+        };
+        const B: usize = 3;
+        let inputs: Vec<FeatureMap> = (0..B)
+            .map(|_| FeatureMap::from_vec(8, 10, 10, (0..800).map(|_| rng.next_sym()).collect()))
+            .collect();
+        let byps: Vec<FeatureMap> = (0..B)
+            .map(|_| FeatureMap::from_vec(20, 10, 10, (0..2000).map(|_| rng.next_sym()).collect()))
+            .collect();
+        for prec in [Precision::F16, Precision::F32] {
+            let mut seq = Vec::with_capacity(B);
+            let mut seq_acc = AccessCounts::default();
+            for bi in 0..B {
+                let (out, acc) =
+                    run_layer_threads(&p, &inputs[bi], Some(&byps[bi]), prec, (7, 7), 1);
+                seq.push(out);
+                seq_acc.add(&acc);
+            }
+            let in_refs: Vec<&FeatureMap> = inputs.iter().collect();
+            let byp_refs: Vec<&FeatureMap> = byps.iter().collect();
+            for threads in [1usize, 3, 7] {
+                let (outs, acc) = run_layer_batch_threads(
+                    &p,
+                    &in_refs,
+                    Some(&byp_refs),
+                    prec,
+                    (7, 7),
+                    threads,
+                );
+                assert_eq!(outs.len(), B);
+                for bi in 0..B {
+                    assert_eq!(
+                        outs[bi].data, seq[bi].data,
+                        "image {bi} diverged ({prec:?}, threads={threads})"
+                    );
+                }
+                // Stream words: once per batch = 1/B of sequential.
+                assert_eq!(acc.stream_words * B as u64, seq_acc.stream_words);
+                // Compute counters still scale with B.
+                assert_eq!(acc.accumulates, seq_acc.accumulates);
+                assert_eq!(acc.fmm_reads, seq_acc.fmm_reads);
+                assert_eq!(acc.fmm_writes, seq_acc.fmm_writes);
+                // Each word serves B·tile_pixels pixels, one off-stream.
+                let tile_pixels =
+                    (l.h_out().div_ceil(7).max(1) * l.w_out().div_ceil(7).max(1)) as u64;
+                assert_eq!(
+                    acc.wbuf_reads,
+                    acc.stream_words * (B as u64 * tile_pixels - 1),
+                    "{prec:?} threads={threads}"
+                );
+            }
+        }
+        // Empty batches are a no-op, not a panic.
+        let (outs, acc) = run_layer_batch_threads(&p, &[], Some(&[]), Precision::F32, (7, 7), 2);
+        assert!(outs.is_empty());
+        assert_eq!(acc, AccessCounts::default());
     }
 
     #[test]

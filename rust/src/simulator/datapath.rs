@@ -601,6 +601,185 @@ where
     acc
 }
 
+/// Execute Algorithm 1 for a **micro-batch** of `B` resident images:
+/// the same output rectangle and channel range as [`run_tile`], but the
+/// sign-mask table of each output channel is built **once** and applied
+/// to every image before the stream moves on — the batching schedule of
+/// the paper's serving story (weights stream past `B` stationary
+/// feature maps, so the off-chip weight fetch is paid once per block,
+/// not once per image).
+///
+/// Per-image arithmetic is untouched: image `i`'s accumulator chains
+/// run in exactly the order [`run_tile`] would give them (tap-outer,
+/// channel-inner, same interior/border split), images are never mixed
+/// into one chain, so each image's output is bit-identical to a
+/// sequential single-image pass at both precisions — the
+/// `tests/batch_equivalence.rs` invariant.
+///
+/// Pixels are written through `write(img, co, gy, gx, v)`. The returned
+/// counters are the per-image [`analytic_counts`] summed over the batch
+/// (compute scales with `B`); `stream_words`/`wbuf_reads` stay zero
+/// here — the layer-level callers add [`weight_traffic`] **once per
+/// batch**, which is where the B× amortization shows up.
+#[allow(clippy::too_many_arguments)]
+pub fn run_tile_batch(
+    layer: &ConvLayer,
+    stream: &WeightStream,
+    gamma: &[f32],
+    beta: &[f32],
+    (co0, co1): (usize, usize),
+    inputs: &[&dyn InputSurface],
+    bypasses: Option<&[&dyn InputSurface]>,
+    prec: Precision,
+    geom: &TileGeom,
+    write: &mut dyn FnMut(usize, usize, usize, usize, f32),
+) -> AccessCounts {
+    let l = layer;
+    let b = inputs.len();
+    if let Some(bps) = bypasses {
+        assert_eq!(bps.len(), b, "one bypass surface per batched image");
+    }
+    let per_image = analytic_counts(l, (co0, co1), bypasses.is_some(), geom);
+    let mut acc = AccessCounts::default();
+    for _ in 0..b {
+        acc.add(&per_image);
+    }
+    if b == 0 || co0 >= co1 || geom.oy0 >= geom.oy1 || geom.ox0 >= geom.ox1 {
+        return acc;
+    }
+    let (k, stride) = (l.k, l.stride);
+    let dlo = -((k / 2) as isize);
+    let dhi = (k - 1) as isize + dlo;
+    let group_size_out = l.n_out / l.groups;
+    let nie = l.n_in / l.groups;
+    let taps = k * k;
+
+    let sy0 = ((geom.oy0 * stride) as isize + dlo).clamp(0, l.h as isize) as usize;
+    let sy1 = (((geom.oy1 - 1) * stride) as isize + dhi + 1).clamp(0, l.h as isize) as usize;
+    let sx0 = ((geom.ox0 * stride) as isize + dlo).clamp(0, l.w as isize) as usize;
+    let sx1 = (((geom.ox1 - 1) * stride) as isize + dhi + 1).clamp(0, l.w as isize) as usize;
+    let (sh, sw) = (sy1 - sy0, sx1 - sx0);
+
+    let (yin_lo, yin_hi) = interior_range(l.h, stride, dlo, dhi);
+    let (xin_lo, xin_hi) = interior_range(l.w, stride, dlo, dhi);
+    let xi0 = xin_lo.clamp(geom.ox0, geom.ox1);
+    let xi1 = xin_hi.clamp(xi0, geom.ox1);
+
+    let tap_off: Vec<isize> = (0..taps)
+        .map(|t| {
+            let dy = (t / k) as isize + dlo;
+            let dx = (t % k) as isize + dlo;
+            (dy * sw as isize + dx) * nie as isize
+        })
+        .collect();
+
+    let mut wmask = vec![0u32; taps * nie];
+    // One resident staged window per image — "B feature maps stay
+    // resident while the weights stream past".
+    let mut stages: Vec<Vec<f32>> = (0..b).map(|_| vec![0.0f32; sh * sw * nie]).collect();
+    let mut staged_group = usize::MAX;
+
+    for co in co0..co1 {
+        let g = co / group_size_out;
+        if g != staged_group {
+            for (img, stage) in inputs.iter().zip(stages.iter_mut()) {
+                stage_input(*img, g * nie, nie, (sy0, sy1, sx0, sx1), stage);
+            }
+            staged_group = g;
+        }
+        // The weight block of this output channel, fetched once…
+        for tap in 0..taps {
+            for ci in 0..nie {
+                wmask[tap * nie + ci] = if stream.weight(co, ci, tap) > 0.0 {
+                    0
+                } else {
+                    0x8000_0000
+                };
+            }
+        }
+        // …and applied to every resident image before the next block.
+        for (bi, stage) in stages.iter().enumerate() {
+            let bp = bypasses.map(|bps| bps[bi]);
+            let mut emit = |oy: usize, ox: usize, mut v: f32| {
+                if l.bnorm {
+                    v = rnd(prec, v * gamma[co]);
+                }
+                if let Some(bp) = bp {
+                    v = rnd(prec, v + bp.read(co, oy as isize, ox as isize));
+                }
+                v = rnd(prec, v + beta[co]);
+                if l.relu && v < 0.0 {
+                    v = 0.0;
+                }
+                write(bi, co, oy, ox, v);
+            };
+            for oy in geom.oy0..geom.oy1 {
+                let iy = oy * stride;
+                if oy < yin_lo || oy >= yin_hi {
+                    for ox in geom.ox0..geom.ox1 {
+                        let v = accum_checked(
+                            stage,
+                            &wmask,
+                            (k, dlo),
+                            (l.h, l.w),
+                            (sy0, sx0, sw),
+                            (iy, ox * stride),
+                            nie,
+                            prec,
+                        );
+                        emit(oy, ox, v);
+                    }
+                    continue;
+                }
+                let row = (iy - sy0) * sw;
+                for ox in geom.ox0..xi0 {
+                    let v = accum_checked(
+                        stage,
+                        &wmask,
+                        (k, dlo),
+                        (l.h, l.w),
+                        (sy0, sx0, sw),
+                        (iy, ox * stride),
+                        nie,
+                        prec,
+                    );
+                    emit(oy, ox, v);
+                }
+                let step = stride * nie;
+                let mut ox = xi0;
+                while ox + PIXEL_BLOCK <= xi1 {
+                    let center = (row + ox * stride - sx0) * nie;
+                    let vs = accum_block(stage, &wmask, &tap_off, center, step, nie, prec);
+                    for (p, &v) in vs.iter().enumerate() {
+                        emit(oy, ox + p, v);
+                    }
+                    ox += PIXEL_BLOCK;
+                }
+                while ox < xi1 {
+                    let center = (row + ox * stride - sx0) * nie;
+                    let v = accum_interior(stage, &wmask, &tap_off, center, nie, prec);
+                    emit(oy, ox, v);
+                    ox += 1;
+                }
+                for ox in xi1..geom.ox1 {
+                    let v = accum_checked(
+                        stage,
+                        &wmask,
+                        (k, dlo),
+                        (l.h, l.w),
+                        (sy0, sx0, sw),
+                        (iy, ox * stride),
+                        nie,
+                        prec,
+                    );
+                    emit(oy, ox, v);
+                }
+            }
+        }
+    }
+    acc
+}
+
 /// Weight traffic of one whole layer on one chip (Tbl I schedule):
 /// every stream word enters once, then is re-read from the weight
 /// buffer per remaining pixel of the Tile-PU tile. Returns
@@ -881,6 +1060,83 @@ mod tests {
         assert_eq!(wb, 4 * 9 * 16 * 63);
         // A degenerate 0-pixel tile never underflows.
         assert_eq!(weight_traffic(&l, 16, 0).1, 0);
+    }
+
+    /// The batch kernel is the single-image kernel run B times with the
+    /// weight fetch hoisted: per-image outputs and the summed compute
+    /// counters must match exactly, at both precisions, with bypass,
+    /// groups and stride in play.
+    #[test]
+    fn batch_kernel_matches_per_image_runs() {
+        let mut rng = SplitMix64::new(0xba7c);
+        let l = ConvLayer::new("t", 6, 10, 7, 5, 3, 2)
+            .with_groups(2)
+            .with_bypass(true);
+        let nie = l.n_in / l.groups;
+        let w: Vec<f32> = (0..l.n_out * nie * 9).map(|_| rng.next_sym()).collect();
+        let stream = pack_weights(&l, &w, 16);
+        let gamma: Vec<f32> = (0..10).map(|_| 0.5 + rng.next_f32()).collect();
+        let beta: Vec<f32> = (0..10).map(|_| rng.next_sym()).collect();
+        let (ho, wo) = (l.h_out(), l.w_out());
+        let geom = TileGeom {
+            oy0: 0,
+            oy1: ho,
+            ox0: 0,
+            ox1: wo,
+            iy0: 0,
+            ix0: 0,
+            tile_h: 2,
+            tile_w: 2,
+            in_tile_h: 3,
+            in_tile_w: 3,
+        };
+        const B: usize = 3;
+        let fms: Vec<FeatureMap> = (0..B)
+            .map(|_| FeatureMap::from_vec(6, 7, 5, (0..6 * 35).map(|_| rng.next_sym()).collect()))
+            .collect();
+        let byps: Vec<FeatureMap> = (0..B)
+            .map(|_| {
+                FeatureMap::from_vec(10, ho, wo, (0..10 * ho * wo).map(|_| rng.next_sym()).collect())
+            })
+            .collect();
+        for prec in [Precision::F16, Precision::F32] {
+            let mut seq = vec![vec![0.0f32; 10 * ho * wo]; B];
+            let mut seq_acc = AccessCounts::default();
+            for bi in 0..B {
+                let out = &mut seq[bi];
+                seq_acc.add(&run_tile(
+                    &l,
+                    &stream,
+                    &gamma,
+                    &beta,
+                    (0, 10),
+                    &fms[bi],
+                    Some(&byps[bi]),
+                    prec,
+                    &geom,
+                    &mut |co, oy, ox, v| out[(co * ho + oy) * wo + ox] = v,
+                ));
+            }
+            let inputs: Vec<&dyn InputSurface> =
+                fms.iter().map(|f| f as &dyn InputSurface).collect();
+            let bypasses: Vec<&dyn InputSurface> =
+                byps.iter().map(|f| f as &dyn InputSurface).collect();
+            let mut batched = vec![vec![0.0f32; 10 * ho * wo]; B];
+            let batch_acc = run_tile_batch(
+                &l,
+                &stream,
+                &gamma,
+                &beta,
+                (0, 10),
+                &inputs,
+                Some(&bypasses),
+                prec,
+                &geom,
+                &mut |bi, co, oy, ox, v| batched[bi][(co * ho + oy) * wo + ox] = v,
+            );
+            assert_eq!(seq, batched, "{prec:?} outputs diverged from per-image runs");
+            assert_eq!(seq_acc, batch_acc, "{prec:?} compute counters diverged");
+        }
     }
 
     #[test]

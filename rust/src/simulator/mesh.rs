@@ -269,6 +269,19 @@ struct ChipJob<'a> {
     byp: Option<&'a ExtTile>,
 }
 
+/// [`ChipJob`] for a micro-batch: the same owned output rectangle, but
+/// one validated input view (and optional bypass tile) per resident
+/// image.
+struct ChipBatchJob<'a> {
+    idx: usize,
+    oy0: usize,
+    oy1: usize,
+    ox0: usize,
+    ox1: usize,
+    inputs: Vec<ChipInput<'a>>,
+    byps: Option<Vec<&'a ExtTile>>,
+}
+
 /// Global coordinates of the 1-pixel halo ring around a tile.
 fn ring_coords(
     y0: usize,
@@ -525,6 +538,274 @@ impl MeshSim {
         let final_fm = self.assemble(&tiles, net.steps.len(), fc, fh, fw)?;
         assert!(stats.flags.is_quiescent(), "unmatched border sends");
         Ok((final_fm, stats))
+    }
+
+    /// Run a whole network on the mesh for a micro-batch of `B` images
+    /// held resident simultaneously: every chip keeps `B` tile sets of
+    /// each tensor, and each step broadcasts the weight stream **once
+    /// per chip per batch** ([`datapath::run_tile_batch`]), so
+    /// `MeshStats::access::stream_words` is 1/B of `B` sequential
+    /// [`Self::run_network`] calls. Per-image outputs are bit-identical
+    /// to the sequential runs (each image's rounding chains are
+    /// untouched by batching); halo exchange and input distribution
+    /// happen per image — activations are per-image state, only the
+    /// weight traffic amortizes.
+    pub fn run_network_batch(
+        &self,
+        net: &Network,
+        params: &[StepParams],
+        inputs: &[&FeatureMap],
+    ) -> Result<(Vec<FeatureMap>, MeshStats), MeshError> {
+        if params.len() != net.steps.len() {
+            return Err(MeshError::ParamsMismatch {
+                params: params.len(),
+                steps: net.steps.len(),
+            });
+        }
+        let b = inputs.len();
+        let mut stats = MeshStats::default();
+        if b == 0 {
+            return Ok((Vec::new(), stats));
+        }
+
+        let n = net.steps.len();
+        let tid = |r: TensorRef| match r {
+            TensorRef::Input => 0usize,
+            TensorRef::Step(i) => 1 + i,
+        };
+        let mut halo = vec![0usize; n + 1];
+        for s in &net.steps {
+            let h = s.layer.k / 2;
+            for r in std::iter::once(s.src).chain(s.bypass).chain(s.concat_extra) {
+                halo[tid(r)] = halo[tid(r)].max(h);
+            }
+        }
+
+        // Per-image, per-chip tensor stores: B resident tile sets.
+        let mut tiles: Vec<Vec<HashMap<usize, ExtTile>>> = (0..b)
+            .map(|_| (0..self.rows * self.cols).map(|_| HashMap::new()).collect())
+            .collect();
+
+        // Distribute every image (input loading is per-image traffic).
+        let (ic, ih, iw) = (net.in_ch, net.in_h, net.in_w);
+        for (bi, input) in inputs.iter().enumerate() {
+            for r in 0..self.rows {
+                for c in 0..self.cols {
+                    let (y0, y1) = self.bounds(ih, self.rows, r);
+                    let (x0, x1) = self.bounds(iw, self.cols, c);
+                    let mut t = ExtTile::new(ic, y0, y1, x0, x1, ih, iw);
+                    for ch in 0..ic {
+                        for gy in y0..y1 {
+                            for gx in x0..x1 {
+                                t.write_own(ch, gy, gx, input.get(ch, gy, gx));
+                            }
+                        }
+                    }
+                    if halo[0] > 0 {
+                        for ch in 0..ic {
+                            for (gy, gx) in ring_coords(y0, y1, x0, x1) {
+                                if gy >= 0 && gx >= 0 && (gy as usize) < ih && (gx as usize) < iw
+                                {
+                                    t.write_halo(
+                                        ch,
+                                        gy,
+                                        gx,
+                                        input.get(ch, gy as usize, gx as usize),
+                                    );
+                                    stats.input_bits += self.fm_bits as u64;
+                                }
+                            }
+                        }
+                    }
+                    stats.input_bits += (ic * (y1 - y0) * (x1 - x0) * self.fm_bits) as u64;
+                    tiles[bi][r * self.cols + c].insert(0, t);
+                }
+            }
+        }
+
+        for (si, step) in net.steps.iter().enumerate() {
+            let l = &step.layer;
+            let p = &params[si];
+            let (ho, wo) = (l.h_out(), l.w_out());
+            let src_id = tid(step.src);
+            let byp_id = step.bypass.map(tid);
+            let cat_id = step.concat_extra.map(tid);
+            let (src_c, _, _) = net.shape_of(step.src);
+
+            let results: Vec<(usize, Vec<ExtTile>, AccessCounts)> = {
+                let mut jobs = Vec::with_capacity(self.rows * self.cols);
+                for r in 0..self.rows {
+                    for c in 0..self.cols {
+                        let idx = r * self.cols + c;
+                        let mut ins = Vec::with_capacity(b);
+                        let mut byps = byp_id.map(|_| Vec::with_capacity(b));
+                        for img in tiles.iter() {
+                            let chip = &img[idx];
+                            let src = chip.get(&src_id).ok_or(MeshError::MissingTile {
+                                chip: (r, c),
+                                tensor: src_id,
+                                role: "src",
+                            })?;
+                            let cat = match cat_id {
+                                Some(t) => Some(chip.get(&t).ok_or(MeshError::MissingTile {
+                                    chip: (r, c),
+                                    tensor: t,
+                                    role: "concat",
+                                })?),
+                                None => None,
+                            };
+                            if let (Some(t), Some(list)) = (byp_id, byps.as_mut()) {
+                                list.push(chip.get(&t).ok_or(MeshError::MissingTile {
+                                    chip: (r, c),
+                                    tensor: t,
+                                    role: "bypass",
+                                })?);
+                            }
+                            ins.push(ChipInput { src, cat, src_c });
+                        }
+                        let (oy0, oy1) = self.bounds(ho, self.rows, r);
+                        let (ox0, ox1) = self.bounds(wo, self.cols, c);
+                        jobs.push(ChipBatchJob {
+                            idx,
+                            oy0,
+                            oy1,
+                            ox0,
+                            ox1,
+                            inputs: ins,
+                            byps,
+                        });
+                    }
+                }
+                let workers = datapath::resolve_threads(self.threads)
+                    .max(1)
+                    .min(jobs.len());
+                if workers <= 1 {
+                    jobs.iter()
+                        .map(|j| self.compute_chip_batch(j, l, p, step.upsample2x, ho, wo))
+                        .collect()
+                } else {
+                    let ranges = datapath::partition_ranges(jobs.len(), workers);
+                    std::thread::scope(|s| {
+                        let handles: Vec<_> = ranges
+                            .iter()
+                            .map(|&(a, z)| {
+                                let chunk = &jobs[a..z];
+                                s.spawn(move || {
+                                    chunk
+                                        .iter()
+                                        .map(|j| {
+                                            self.compute_chip_batch(
+                                                j,
+                                                l,
+                                                p,
+                                                step.upsample2x,
+                                                ho,
+                                                wo,
+                                            )
+                                        })
+                                        .collect::<Vec<_>>()
+                                })
+                            })
+                            .collect();
+                        handles
+                            .into_iter()
+                            .flat_map(|h| h.join().expect("mesh batch worker panicked"))
+                            .collect()
+                    })
+                }
+            };
+            for (idx, outs, acc) in results {
+                stats.access.add(&acc);
+                for (bi, tile) in outs.into_iter().enumerate() {
+                    tiles[bi][idx].insert(1 + si, tile);
+                }
+            }
+
+            // Halo exchange stays per image: activations do not amortize.
+            let (oc, _, _) = net.shape_of(TensorRef::Step(si));
+            if halo[1 + si] > 0 {
+                for img in tiles.iter_mut() {
+                    self.exchange(1 + si, oc, img, &mut stats)?;
+                }
+            }
+        }
+
+        let (fc, fh, fw) = net.out_shape();
+        let outs = tiles
+            .iter()
+            .map(|img| self.assemble(img, net.steps.len(), fc, fh, fw))
+            .collect::<Result<Vec<_>, _>>()?;
+        assert!(stats.flags.is_quiescent(), "unmatched border sends");
+        Ok((outs, stats))
+    }
+
+    /// One chip's batched compute of one step: the shared batch kernel
+    /// over the chip's `B` resident input views, streaming each weight
+    /// block once for the whole batch.
+    fn compute_chip_batch(
+        &self,
+        job: &ChipBatchJob<'_>,
+        l: &ConvLayer,
+        p: &StepParams,
+        upsample: bool,
+        ho: usize,
+        wo: usize,
+    ) -> (usize, Vec<ExtTile>, AccessCounts) {
+        let b = job.inputs.len();
+        let (m, n) = self.tiles_mn;
+        let out_h = job.oy1 - job.oy0;
+        let out_w = job.ox1 - job.ox0;
+        let geom = TileGeom {
+            oy0: job.oy0,
+            oy1: job.oy1,
+            ox0: job.ox0,
+            ox1: job.ox1,
+            iy0: (job.oy0 * l.stride) as isize,
+            ix0: (job.ox0 * l.stride) as isize,
+            tile_h: out_h.div_ceil(m).max(1),
+            tile_w: out_w.div_ceil(n).max(1),
+            in_tile_h: (out_h * l.stride).div_ceil(m).max(1),
+            in_tile_w: (out_w * l.stride).div_ceil(n).max(1),
+        };
+        let mut outs: Vec<ExtTile> = (0..b)
+            .map(|_| ExtTile::new(l.n_out, job.oy0, job.oy1, job.ox0, job.ox1, ho, wo))
+            .collect();
+        let ins: Vec<&dyn InputSurface> =
+            job.inputs.iter().map(|i| i as &dyn InputSurface).collect();
+        let byps: Option<Vec<&dyn InputSurface>> = job
+            .byps
+            .as_ref()
+            .map(|bs| bs.iter().map(|t| *t as &dyn InputSurface).collect());
+        let mut acc = {
+            let mut write = |bi: usize, co: usize, gy: usize, gx: usize, v: f32| {
+                outs[bi].write_own(co, gy, gx, v)
+            };
+            datapath::run_tile_batch(
+                l,
+                &p.stream,
+                &p.gamma,
+                &p.beta,
+                (0, l.n_out),
+                &ins,
+                byps.as_deref(),
+                self.prec,
+                &geom,
+                &mut write,
+            )
+        };
+        // The broadcast of §V, once per *batch*: each stream word then
+        // serves B × tile_pixels pixels from the weight buffer.
+        let tile_pixels = (geom.tile_h * geom.tile_w) as u64;
+        let (sw, _) = datapath::weight_traffic(l, p.stream.c, tile_pixels);
+        acc.stream_words += sw;
+        acc.wbuf_reads += sw * ((b as u64 * tile_pixels).max(1) - 1);
+        if upsample {
+            outs = outs
+                .iter()
+                .map(|o| o.upsample2x(l.n_out, ho, wo))
+                .collect();
+        }
+        (job.idx, outs, acc)
     }
 
     /// One chip's compute of one step: the shared datapath kernel over
@@ -901,6 +1182,64 @@ mod tests {
             let (got, stats) = sim.run_network(&net, &params, &input).unwrap();
             assert_eq!(got.data, want.data, "threads={threads}");
             assert_eq!(stats, want_stats, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn batched_mesh_matches_sequential_runs_with_amortized_stream() {
+        // B resident images through the mesh: per-image bit-exactness
+        // vs sequential runs, weight stream counted once per batch,
+        // per-image exchange/input traffic unchanged — at both
+        // precisions and with the upsample/concat network in play.
+        for net in [model::network("hypernet20").unwrap(), upsample_net()] {
+            let params = random_params(&net, 0xbeef);
+            let mut rng = SplitMix64::new(17);
+            const B: usize = 3;
+            let inputs: Vec<FeatureMap> = (0..B)
+                .map(|_| {
+                    FeatureMap::from_vec(
+                        net.in_ch,
+                        net.in_h,
+                        net.in_w,
+                        (0..net.in_ch * net.in_h * net.in_w)
+                            .map(|_| rng.next_sym())
+                            .collect(),
+                    )
+                })
+                .collect();
+            for prec in [Precision::F16, Precision::F32] {
+                let mesh = MeshSim::new(2, 2, prec);
+                let mut seq_stats = MeshStats::default();
+                let seq: Vec<FeatureMap> = inputs
+                    .iter()
+                    .map(|input| {
+                        let (out, st) = mesh.run_network(&net, &params, input).unwrap();
+                        seq_stats.access.add(&st.access);
+                        seq_stats.border_bits += st.border_bits;
+                        out
+                    })
+                    .collect();
+                let in_refs: Vec<&FeatureMap> = inputs.iter().collect();
+                for threads in [1usize, 3] {
+                    let mut sim = MeshSim::new(2, 2, prec);
+                    sim.threads = threads;
+                    let (outs, stats) = sim.run_network_batch(&net, &params, &in_refs).unwrap();
+                    assert_eq!(outs.len(), B);
+                    for bi in 0..B {
+                        assert_eq!(
+                            outs[bi].max_abs_diff(&seq[bi]),
+                            0.0,
+                            "image {bi} diverged ({prec:?}, threads={threads})"
+                        );
+                    }
+                    // Stream words once per batch; everything per-image
+                    // (compute, exchange) unchanged.
+                    assert_eq!(stats.access.stream_words * B as u64, seq_stats.access.stream_words);
+                    assert_eq!(stats.access.fmm_writes, seq_stats.access.fmm_writes);
+                    assert_eq!(stats.access.accumulates, seq_stats.access.accumulates);
+                    assert_eq!(stats.border_bits, seq_stats.border_bits);
+                }
+            }
         }
     }
 

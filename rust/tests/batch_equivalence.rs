@@ -1,0 +1,161 @@
+//! Property sweep of the micro-batching subsystem: for every model ×
+//! precision × batch size, `Engine::infer_batch` must return per-request
+//! outputs **bit-identical** to sequential `Engine::infer` while
+//! streaming each weight block once per batch (`stream_words × B ==
+//! sequential_stream_words`), on both simulator backends. Plus failure
+//! isolation: one poisoned request fails only its own slot.
+
+use hyperdrive::engine::{Engine, EngineError, Precision};
+use hyperdrive::util::SplitMix64;
+
+fn random_input(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..len).map(|_| rng.next_sym()).collect()
+}
+
+fn assert_batch_matches_sequential(engine: &Engine, batch: usize, seed0: u64, label: &str) {
+    let inputs: Vec<Vec<f32>> = (0..batch)
+        .map(|b| random_input(engine.input_len(), seed0 + b as u64))
+        .collect();
+    let expected: Vec<Vec<f32>> = inputs.iter().map(|x| engine.infer(x).unwrap()).collect();
+    let refs: Vec<&[f32]> = inputs.iter().map(|x| x.as_slice()).collect();
+    let run = engine.infer_batch(&refs);
+    assert_eq!(run.outputs.len(), batch, "{label}");
+    for (b, (out, want)) in run.outputs.iter().zip(&expected).enumerate() {
+        assert_eq!(
+            out.as_ref().unwrap(),
+            want,
+            "{label}: image {b} of B={batch} diverged from sequential infer"
+        );
+    }
+    // Each layer's weight words streamed once for the whole batch.
+    assert_eq!(
+        run.stream_words * batch as u64,
+        run.sequential_stream_words,
+        "{label}: B={batch} amortization"
+    );
+    assert!(run.stream_words > 0, "{label}: counters wired");
+    assert_eq!(
+        run.stream_words_saved(),
+        run.stream_words * (batch as u64 - 1),
+        "{label}"
+    );
+}
+
+#[test]
+fn functional_batches_are_bit_exact_across_models_precisions_and_sizes() {
+    for model in ["hypernet20", "resnet18@32x32"] {
+        for prec in [Precision::F16, Precision::F32] {
+            let engine = Engine::builder()
+                .model(model)
+                .precision(prec)
+                .threads(3)
+                .build()
+                .unwrap();
+            for batch in [1, 2, 3, 4, 8] {
+                assert_batch_matches_sequential(
+                    &engine,
+                    batch,
+                    900 + batch as u64,
+                    &format!("functional {model} {prec:?}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mesh_batches_are_bit_exact_with_amortized_stream() {
+    for prec in [Precision::F16, Precision::F32] {
+        let engine = Engine::builder()
+            .model("hypernet20")
+            .mesh(2, 2)
+            .precision(prec)
+            .build()
+            .unwrap();
+        for batch in [2, 4] {
+            assert_batch_matches_sequential(
+                &engine,
+                batch,
+                1700 + batch as u64,
+                &format!("mesh 2x2 {prec:?}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn functional_and_mesh_batches_agree() {
+    // Same spec + seed on both backends: the batch passes must agree
+    // with each other too, not just each with its own sequential path.
+    let single = Engine::builder().model("hypernet20").build().unwrap();
+    let mesh = Engine::builder().model("hypernet20").mesh(2, 2).build().unwrap();
+    let inputs: Vec<Vec<f32>> = (0..3)
+        .map(|b| random_input(single.input_len(), 4242 + b))
+        .collect();
+    let refs: Vec<&[f32]> = inputs.iter().map(|x| x.as_slice()).collect();
+    let a = single.infer_batch(&refs);
+    let b = mesh.infer_batch(&refs);
+    for (x, y) in a.outputs.iter().zip(&b.outputs) {
+        assert_eq!(x.as_ref().unwrap(), y.as_ref().unwrap());
+    }
+}
+
+#[test]
+fn one_poisoned_request_fails_only_its_own_slot() {
+    let engine = Engine::builder().model("hypernet20").build().unwrap();
+    let good0 = random_input(engine.input_len(), 11);
+    let poison = vec![0.0f32; 7]; // wrong length
+    let good1 = random_input(engine.input_len(), 12);
+    let refs: Vec<&[f32]> = vec![&good0, &poison, &good1];
+    let run = engine.infer_batch(&refs);
+    assert_eq!(run.outputs.len(), 3);
+    assert_eq!(
+        run.outputs[0].as_ref().unwrap(),
+        &engine.infer(&good0).unwrap()
+    );
+    assert_eq!(
+        run.outputs[2].as_ref().unwrap(),
+        &engine.infer(&good1).unwrap()
+    );
+    match &run.outputs[1] {
+        Err(EngineError::Input(m)) => assert!(m.contains("7 values"), "{m}"),
+        other => panic!("expected Input error for the poisoned slot, got {other:?}"),
+    }
+    // The two valid images still amortized as a batch of 2.
+    assert_eq!(run.stream_words * 2, run.sequential_stream_words);
+}
+
+#[test]
+fn mesh_whole_run_failures_fail_every_slot_with_the_sequential_error() {
+    // 32×32 FMs do not divide over 3×3 chips: sequential infer fails
+    // with a typed Unsupported error, and a batch must fail each slot
+    // with that same error — never panic, never lose a ticket.
+    let engine = Engine::builder().model("hypernet20").mesh(3, 3).build().unwrap();
+    let input = random_input(engine.input_len(), 5);
+    let sequential = engine.infer(&input).unwrap_err().to_string();
+    let refs: Vec<&[f32]> = vec![&input, &input];
+    let run = engine.infer_batch(&refs);
+    for out in &run.outputs {
+        let e = out.as_ref().unwrap_err();
+        assert!(matches!(e, EngineError::Unsupported(_)), "{e}");
+        assert_eq!(e.to_string(), sequential);
+    }
+    assert_eq!(run.stream_words, 0);
+}
+
+#[test]
+fn loop_fallback_default_matches_sequential_with_zero_counters() {
+    // B = 1 through the batch entry point is the degenerate batch, not
+    // the fallback — counters still report one image's stream words.
+    let engine = Engine::builder().model("hypernet20").build().unwrap();
+    let input = random_input(engine.input_len(), 77);
+    let refs: Vec<&[f32]> = vec![&input];
+    let run = engine.infer_batch(&refs);
+    assert_eq!(
+        run.outputs[0].as_ref().unwrap(),
+        &engine.infer(&input).unwrap()
+    );
+    assert_eq!(run.stream_words, run.sequential_stream_words);
+    assert_eq!(run.stream_words_saved(), 0);
+}

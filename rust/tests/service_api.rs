@@ -84,7 +84,7 @@ fn multi_model_soak_is_bit_exact_and_metrics_add_up() {
             service
                 .submit(InferRequest {
                     model: MODELS[which].into(),
-                    input,
+                    input: input.into(),
                     id: i as u64,
                 })
                 .unwrap(),
@@ -150,7 +150,7 @@ fn failing_model_does_not_lose_other_requests() {
             service
                 .submit(InferRequest {
                     model: model.into(),
-                    input: random_input(direct.input_len(), 50 + i),
+                    input: random_input(direct.input_len(), 50 + i).into(),
                     id: i,
                 })
                 .unwrap(),
@@ -188,7 +188,7 @@ fn submit_errors_are_typed_and_scoped() {
     match service
         .submit(InferRequest {
             model: "resnet34".into(),
-            input: vec![0.0; want],
+            input: vec![0.0; want].into(),
             id: 0,
         })
         .unwrap_err()
@@ -202,7 +202,7 @@ fn submit_errors_are_typed_and_scoped() {
     match service
         .submit(InferRequest {
             model: "hypernet20".into(),
-            input: vec![0.0; 7],
+            input: vec![0.0; 7].into(),
             id: 0,
         })
         .unwrap_err()

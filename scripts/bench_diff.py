@@ -19,7 +19,14 @@ Two independent gates, both enforced by the CI `bench-smoke` job:
    numbers when it was committed) skips the absolute comparison and
    prints the refresh command instead.
 
-usage: bench_diff.py BASELINE CURRENT [--max-regress 0.20]
+3. **Micro-batch weight-traffic amortization** (`--serve PATH`,
+   machine-independent): `benches/serve.rs` emits a `batch_entries`
+   curve sweeping B ∈ {1, 2, 4, 8} per model.  The analytic
+   weight-stream counters must show each weight block streamed once per
+   batch: `stream_words <= stream_words_seq * (1/B + eps)`.  These are
+   exact counters, not timings, so the gate holds on any host.
+
+usage: bench_diff.py BASELINE CURRENT [--max-regress 0.20] [--serve BENCH_serve.json]
 """
 
 import argparse
@@ -36,6 +43,12 @@ REF_SUFFIX = ", reference kernel)"
 # acceptance target is enforced.
 SPEEDUP_GATES = [("(F32, 1 thread", 2.0), ("(F16, 1 thread", 1.3)]
 TINY_SPEEDUP_GATES = [("(F32, 1 thread", 1.5), ("(F16, 1 thread", None)]
+
+# Slack on the 1/B weight-traffic ratio.  The counters are analytic
+# (words, not seconds) so the only legitimate deviation is a layer whose
+# stream cost is not perfectly divisible across the batch; 2% covers it.
+BATCH_RATIO_EPS = 0.02
+BATCH_SWEEP = [1, 2, 4, 8]
 
 
 def load(path):
@@ -133,17 +146,67 @@ def baseline_gate(base, cur, max_regress, failures):
             )
 
 
+def serve_batch_gate(path, failures):
+    with open(path) as f:
+        d = json.load(f)
+    if d.get("bench") != "serve":
+        failures.append(f"{path}: not a serve bench file")
+        return
+    entries = d.get("batch_entries")
+    if not isinstance(entries, list) or not entries:
+        failures.append(
+            f"{path}: no batch_entries — the micro-batch curve has nothing "
+            "to gate (bench section renamed?)"
+        )
+        return
+    by_model = {}
+    for e in entries:
+        by_model.setdefault(e["model"], []).append(e)
+    for model, rows in sorted(by_model.items()):
+        got = sorted(r["batch"] for r in rows)
+        if got != BATCH_SWEEP:
+            failures.append(
+                f"{path}: model `{model}` batch sweep is {got}, "
+                f"expected {BATCH_SWEEP}"
+            )
+        for r in rows:
+            b, sw, seq = r["batch"], r["stream_words"], r["stream_words_seq"]
+            if sw <= 0 or seq <= 0:
+                failures.append(
+                    f"`{model}` B={b}: stream counters not wired "
+                    f"(stream_words={sw}, stream_words_seq={seq})"
+                )
+                continue
+            ratio = sw / seq
+            limit = 1.0 / b + BATCH_RATIO_EPS
+            line = (
+                f"`{model}` B={b}: weight-traffic ratio {ratio:.4f} "
+                f"(gate <= 1/{b} + {BATCH_RATIO_EPS} = {limit:.4f})"
+            )
+            if ratio > limit:
+                failures.append(line)
+            else:
+                print(f"ok: {line}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline")
     ap.add_argument("current")
     ap.add_argument("--max-regress", type=float, default=0.20)
+    ap.add_argument(
+        "--serve",
+        metavar="PATH",
+        help="also gate the batch_entries curve of a BENCH_serve.json",
+    )
     args = ap.parse_args()
     base, cur = load(args.baseline), load(args.current)
 
     failures = []
     speedup_gate(cur, failures)
     baseline_gate(base, cur, args.max_regress, failures)
+    if args.serve:
+        serve_batch_gate(args.serve, failures)
 
     if failures:
         print("\nFAIL:", file=sys.stderr)
