@@ -1,0 +1,91 @@
+//! Serving over the wire: a `WireServer` on a loopback TCP port, a
+//! handful of `WireClient` connections talking the length-prefixed
+//! binary frame protocol, and a pipelined load-generation sweep — the
+//! network-facing shape of Hyperdrive's system-level pitch (the paper
+//! counts interface I/O, so the serving stack gets a real interface).
+//!
+//!     cargo run --release --example wire_serving
+//!
+//! Shows: the Hello handshake advertising the hosted model table,
+//! call-response and pipelined inference, results bit-exact with an
+//! in-process `Engine::infer`, metrics over the wire, backpressure
+//! telemetry, and an orderly Goodbye.
+
+use std::sync::Arc;
+
+use hyperdrive::engine::{
+    run_loadgen, Engine, InferenceService, LoadGenConfig, WireClient, WireServer,
+};
+use hyperdrive::util::SplitMix64;
+
+fn main() -> anyhow::Result<()> {
+    // One sharded service, two models, four workers — then a TCP
+    // frontend on an OS-assigned loopback port.
+    let service = Arc::new(
+        InferenceService::builder()
+            .model_spec("hypernet20")
+            .model_spec("resnet18@32x32")
+            .workers(4)
+            .queue_depth(32)
+            .build()?,
+    );
+    let server = WireServer::start(service.clone(), "127.0.0.1:0")
+        .map_err(|e| anyhow::anyhow!("bind failed: {e}"))?;
+    let addr = server.local_addr().to_string();
+    println!("wire server listening on {addr}");
+
+    // Handshake: the server's Hello carries every hosted model and its
+    // input length, so a client knows the tensor shapes up front.
+    let mut client = WireClient::connect(&addr).map_err(|e| anyhow::anyhow!("{e}"))?;
+    for (name, input_len) in client.models() {
+        println!("  hosted: {name:<16} ({input_len} input values)");
+    }
+
+    // Call-response inference, checked bit-exact against a direct
+    // in-process Engine built from the same spec (the synthetic
+    // parameters are seed-deterministic, so the wire path must agree
+    // to the last bit).
+    let reference = Engine::builder().model("hypernet20").build()?;
+    let mut rng = SplitMix64::new(7);
+    let input: Vec<f32> = (0..reference.input_len()).map(|_| rng.next_sym()).collect();
+    let over_wire = client
+        .infer("hypernet20", &input)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let direct = reference.infer(&input)?;
+    assert_eq!(over_wire, direct);
+    println!("TCP result is bit-exact vs direct Engine::infer ({} values)", direct.len());
+
+    // The server's metrics table travels the wire too.
+    let table = client.metrics_table().map_err(|e| anyhow::anyhow!("{e}"))?;
+    print!("{table}");
+    client.goodbye().map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    // A pipelined multi-connection load-generation pass — the same
+    // engine behind the `loadgen` CLI subcommand.
+    let report = run_loadgen(&LoadGenConfig {
+        addr,
+        connections: 4,
+        in_flight: 8,
+        requests: 64,
+        models: vec!["hypernet20".into(), "resnet18@32x32".into()],
+        seed: 11,
+    })
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "loadgen: {} ok, {} failed, {} rejected → {:.1} req/s, p50 {:.2} ms, p99 {:.2} ms",
+        report.ok, report.failed, report.rejected_backpressure,
+        report.req_per_s, report.p50_ms, report.p99_ms
+    );
+
+    // Orderly teardown: the server first, then the service it fed.
+    let stats = server.shutdown();
+    println!(
+        "wire: {} connections, {} frames in, {} frames out, {} malformed, peak in-flight {}",
+        stats.connections, stats.frames_rx, stats.frames_tx, stats.malformed, stats.max_in_flight
+    );
+    let service = Arc::try_unwrap(service)
+        .unwrap_or_else(|_| panic!("server threads are joined; this is the last Arc"));
+    print!("{}", service.shutdown().render_table());
+    println!("wire_serving OK");
+    Ok(())
+}

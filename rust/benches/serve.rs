@@ -10,11 +10,26 @@
 //!
 //!     cargo bench --bench serve
 //!
+//! A third section (`sweep`) scales workers 1→16 under pipelined
+//! concurrency (C connections × K in-flight each) over two transports —
+//! in-process ticket windows vs loopback TCP through the wire protocol
+//! — recording req/s and p50/p99 per point, so the wire frontend's
+//! overhead and the sharded core's scaling are both on the record
+//! (`bench_diff.py --serve` validates the section and gates p99
+//! blow-ups).
+//!
 //! `SERVE_TINY=1` (or `HOTPATH_TINY=1`, so CI smoke jobs set one knob)
 //! runs a reduced request count — the JSON contract, not publication
 //! numbers. The CI `bench-smoke` job validates the emitted file.
 
-use hyperdrive::engine::{Engine, InferRequest, InferenceService};
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
+
+use hyperdrive::engine::{
+    percentile, run_loadgen, Engine, InferRequest, InferenceService, LoadGenConfig, Ticket,
+    WireServer,
+};
 use hyperdrive::util::SplitMix64;
 
 const MODELS: [&str; 2] = ["hypernet20", "resnet18@32x32"];
@@ -79,6 +94,146 @@ fn run(workers: usize, requests: usize) -> Row {
         total_s,
         req_per_s: if total_s > 0.0 { ok as f64 / total_s } else { 0.0 },
         p99_ms,
+    }
+}
+
+struct SweepRow {
+    workers: usize,
+    transport: &'static str,
+    connections: usize,
+    in_flight: usize,
+    requests: usize,
+    ok: u64,
+    failed: u64,
+    rejected: u64,
+    total_s: f64,
+    req_per_s: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+fn sweep_service(workers: usize, depth: usize) -> InferenceService {
+    let mut builder = InferenceService::builder().workers(workers).queue_depth(depth);
+    for model in MODELS {
+        builder = builder.model_spec(model);
+    }
+    builder.build().expect("service build")
+}
+
+/// One in-process sweep point: C driver threads each keep a K-deep
+/// window of tickets outstanding — the same pipelining shape the TCP
+/// load generator produces, minus the sockets, so the delta between
+/// the two transports is the wire overhead alone.
+fn run_sweep_inproc(workers: usize, conns: usize, in_flight: usize, requests: usize) -> SweepRow {
+    let service = Arc::new(sweep_service(workers, conns * in_flight));
+    let per = requests / conns;
+    let rem = requests % conns;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..conns)
+        .map(|c| {
+            let service = service.clone();
+            let quota = per + usize::from(c < rem);
+            std::thread::spawn(move || {
+                let mut rng = SplitMix64::new(42 ^ (c as u64).wrapping_mul(0x9e37_79b9));
+                let payloads: Vec<(String, Arc<[f32]>)> = MODELS
+                    .iter()
+                    .map(|m| {
+                        let len = service.input_len(m).expect("hosted model");
+                        let data: Vec<f32> = (0..len).map(|_| rng.next_sym()).collect();
+                        (m.to_string(), data.into())
+                    })
+                    .collect();
+                let mut window: VecDeque<(Ticket, Instant)> = VecDeque::new();
+                let mut lat = Vec::with_capacity(quota);
+                let (mut ok, mut failed) = (0u64, 0u64);
+                let mut sent = 0usize;
+                while (ok + failed) < quota as u64 {
+                    while sent < quota && window.len() < in_flight {
+                        let (model, input) = &payloads[sent % payloads.len()];
+                        let ticket = service
+                            .submit(InferRequest {
+                                model: model.clone(),
+                                input: input.clone(),
+                                id: sent as u64,
+                            })
+                            .expect("Block admission cannot fail here");
+                        window.push_back((ticket, Instant::now()));
+                        sent += 1;
+                    }
+                    let (ticket, sent_at) = window.pop_front().expect("window is non-empty");
+                    match ticket.wait() {
+                        Ok(_) => {
+                            ok += 1;
+                            lat.push(sent_at.elapsed().as_secs_f64() * 1e3);
+                        }
+                        Err(_) => failed += 1,
+                    }
+                }
+                (ok, failed, lat)
+            })
+        })
+        .collect();
+    let (mut ok, mut failed) = (0u64, 0u64);
+    let mut latencies = Vec::new();
+    for h in handles {
+        let (o, f, l) = h.join().expect("driver thread");
+        ok += o;
+        failed += f;
+        latencies.extend(l);
+    }
+    let total_s = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    Arc::try_unwrap(service)
+        .unwrap_or_else(|_| panic!("driver threads joined; last Arc"))
+        .shutdown();
+    SweepRow {
+        workers,
+        transport: "in-process",
+        connections: conns,
+        in_flight,
+        requests,
+        ok,
+        failed,
+        rejected: 0,
+        total_s,
+        req_per_s: if total_s > 0.0 { ok as f64 / total_s } else { 0.0 },
+        p50_ms: percentile(&latencies, 0.50).unwrap_or(0.0),
+        p99_ms: percentile(&latencies, 0.99).unwrap_or(0.0),
+    }
+}
+
+/// One loopback-TCP sweep point: a real `WireServer` on 127.0.0.1
+/// driven by the same load generator the `loadgen` CLI uses.
+fn run_sweep_tcp(workers: usize, conns: usize, in_flight: usize, requests: usize) -> SweepRow {
+    let service = Arc::new(sweep_service(workers, conns * in_flight));
+    let server = WireServer::start(service.clone(), "127.0.0.1:0").expect("bind loopback");
+    let report = run_loadgen(&LoadGenConfig {
+        addr: server.local_addr().to_string(),
+        connections: conns,
+        in_flight,
+        requests,
+        models: MODELS.iter().map(|m| m.to_string()).collect(),
+        seed: 42,
+    })
+    .expect("loadgen run");
+    assert_eq!(report.transport_errors, 0, "loopback connections died");
+    server.shutdown();
+    Arc::try_unwrap(service)
+        .unwrap_or_else(|_| panic!("server joined; last Arc"))
+        .shutdown();
+    SweepRow {
+        workers,
+        transport: "tcp",
+        connections: conns,
+        in_flight,
+        requests,
+        ok: report.ok,
+        failed: report.failed,
+        rejected: report.rejected_backpressure,
+        total_s: report.total_s,
+        req_per_s: report.req_per_s,
+        p50_ms: report.p50_ms,
+        p99_ms: report.p99_ms,
     }
 }
 
@@ -162,6 +317,62 @@ fn main() {
     }
     body.push_str("  ],\n");
 
+    // Worker × transport sweep under pipelined concurrency: the wire
+    // frontend vs the in-process path at identical workload shape.
+    let sweep_workers: &[usize] = if tiny { &[1, 4] } else { &[1, 2, 4, 8, 16] };
+    let (conns, in_flight) = if tiny { (2, 8) } else { (4, 64) };
+    let sweep_requests = if tiny { 32 } else { 512 };
+    let mut sweep_rows = Vec::new();
+    for &workers in sweep_workers {
+        for transport in ["in-process", "tcp"] {
+            let row = if transport == "tcp" {
+                run_sweep_tcp(workers, conns, in_flight, sweep_requests)
+            } else {
+                run_sweep_inproc(workers, conns, in_flight, sweep_requests)
+            };
+            println!(
+                "sweep {} workers {} ({}×{} in flight): {}/{} ok → {:.1} req/s, \
+                 p50 {:.2} ms, p99 {:.2} ms",
+                row.transport,
+                row.workers,
+                row.connections,
+                row.in_flight,
+                row.ok,
+                sweep_requests,
+                row.req_per_s,
+                row.p50_ms,
+                row.p99_ms
+            );
+            sweep_rows.push(row);
+        }
+    }
+    body.push_str(&format!(
+        "  \"sweep\": {{\"connections\": {conns}, \"in_flight\": {in_flight}, \
+         \"requests_per_point\": {sweep_requests}, \"entries\": [\n"
+    ));
+    for (i, r) in sweep_rows.iter().enumerate() {
+        body.push_str(&format!(
+            "    {{\"workers\": {}, \"transport\": \"{}\", \"connections\": {}, \
+             \"in_flight\": {}, \"requests\": {}, \"ok\": {}, \"failed\": {}, \
+             \"rejected\": {}, \"total_s\": {:.6}, \"req_per_s\": {:.3}, \
+             \"p50_ms\": {:.4}, \"p99_ms\": {:.4}}}{}\n",
+            r.workers,
+            r.transport,
+            r.connections,
+            r.in_flight,
+            r.requests,
+            r.ok,
+            r.failed,
+            r.rejected,
+            r.total_s,
+            r.req_per_s,
+            r.p50_ms,
+            r.p99_ms,
+            if i + 1 < sweep_rows.len() { "," } else { "" }
+        ));
+    }
+    body.push_str("  ]},\n");
+
     // The B ∈ {1, 2, 4, 8} micro-batch curve: weight traffic must fall
     // as ~1/B of the sequential words (bench_diff.py --serve gates it).
     let mut batch_rows = Vec::new();
@@ -198,8 +409,9 @@ fn main() {
     body.push_str("  ]\n}\n");
     match std::fs::write("BENCH_serve.json", &body) {
         Ok(()) => println!(
-            "wrote BENCH_serve.json ({} worker counts, {} batch points)",
+            "wrote BENCH_serve.json ({} worker counts, {} sweep points, {} batch points)",
             rows.len(),
+            sweep_rows.len(),
             batch_rows.len()
         ),
         Err(e) => {

@@ -57,6 +57,7 @@ pub mod pjrt;
 pub mod report;
 pub mod serve;
 pub mod service;
+pub mod wire;
 
 use std::fmt;
 use std::path::PathBuf;
@@ -78,6 +79,9 @@ pub use serve::{percentile, ServeOptions, ServeOutcome, ServeStats};
 pub use service::{
     AdmissionPolicy, BatchPolicy, InferRequest, InferResponse, InferenceService, ModelConfig,
     ModelMetrics, ServeError, ServiceBuilder, ServiceMetrics, Ticket,
+};
+pub use wire::{
+    run_loadgen, LoadGenConfig, LoadGenReport, WireClient, WireError, WireServer, WireStats,
 };
 // Re-exported so engine consumers need no coordinator/simulator paths.
 pub use crate::coordinator::schedule::DepthwisePolicy;

@@ -16,7 +16,7 @@ use std::sync::MutexGuard;
 use std::time::{Duration, Instant};
 
 use super::super::backend::Backend;
-use super::{Job, ServeError, Shared, State};
+use super::{Job, ServeError, Shard, ShardState, Shared};
 
 /// How a model's worker coalesces queued requests into one
 /// batch-resident inference pass.
@@ -52,51 +52,71 @@ impl BatchPolicy {
     }
 }
 
-/// Grow `jobs` (the already-popped head of slot `i`'s queue) toward the
-/// slot's `max_batch`: take everything queued now, then — if the policy
-/// grants a wait budget — hold for stragglers until the batch fills,
-/// the deadline passes, the service shuts down or the model is removed.
+/// Grow `jobs` (the already-popped head of this shard's queue) toward
+/// `max_batch`: take everything queued now, then — if the policy grants
+/// a wait budget — hold for stragglers on the shard's `arrivals`
+/// condvar until the batch fills, the deadline passes, the service
+/// starts draining or the model is removed.
 ///
-/// Every job taken is counted `in_flight` immediately, so metrics
-/// snapshots taken mid-hold still add up. Returns the re-acquired state
-/// guard.
+/// Every job taken is counted `in_flight` immediately (and deducted
+/// from the doorbell's pending count), so metrics snapshots taken
+/// mid-hold still add up. Returns the re-acquired state guard plus a
+/// flag: `true` means the model was removed mid-hold and the caller
+/// must fail the held jobs fast instead of running them. A `draining`
+/// service breaks the hold but still runs the batch — admitted tickets
+/// resolve successfully through shutdown.
 pub(super) fn fill_batch<'a>(
-    shared: &'a Shared,
-    mut st: MutexGuard<'a, State>,
-    i: usize,
+    shared: &Shared,
+    shard: &'a Shard,
+    mut st: MutexGuard<'a, ShardState>,
     jobs: &mut Vec<Job>,
-) -> MutexGuard<'a, State> {
-    let policy = st.slots[i].batch;
-    let take = |st: &mut State, jobs: &mut Vec<Job>| {
+) -> (MutexGuard<'a, ShardState>, bool) {
+    let policy = shard.batch;
+    let take = |st: &mut ShardState, jobs: &mut Vec<Job>| {
+        let mut taken = 0u64;
         while jobs.len() < policy.max_batch {
-            match st.slots[i].queue.pop_front() {
+            match st.queue.pop_front() {
                 Some(j) => {
-                    st.slots[i].in_flight += 1;
+                    st.in_flight += 1;
+                    taken += 1;
                     jobs.push(j);
                 }
                 None => break,
             }
         }
+        taken
     };
-    take(&mut st, jobs);
+    let mut taken = take(&mut st, jobs);
     if jobs.len() < policy.max_batch && policy.max_wait_ms > 0 {
         let deadline = Instant::now() + Duration::from_millis(policy.max_wait_ms);
         loop {
-            if jobs.len() >= policy.max_batch || st.shutting_down || st.slots[i].removed {
+            if st.removed {
+                // Hot removal mid-hold: the held jobs must fail fast
+                // with ModelRemoved, not sleep out the window.
+                if taken > 0 {
+                    shared.dec_pending(taken);
+                }
+                return (st, true);
+            }
+            if jobs.len() >= policy.max_batch || st.draining {
                 break;
             }
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
-            // Submitters notify `work` on every push (notify_all), so a
-            // holding worker observes each arrival as it lands.
-            let (guard, _) = shared.work.wait_timeout(st, deadline - now).unwrap();
+            // Submitters notify `arrivals` on every push (notify_all),
+            // and remove_model/shutdown notify it too, so a holding
+            // worker observes arrivals and teardown as they land.
+            let (guard, _) = shard.arrivals.wait_timeout(st, deadline - now).unwrap();
             st = guard;
-            take(&mut st, jobs);
+            taken += take(&mut st, jobs);
         }
     }
-    st
+    if taken > 0 {
+        shared.dec_pending(taken);
+    }
+    (st, false)
 }
 
 /// Run one assembled batch with panic capture, scattering the

@@ -1,10 +1,10 @@
 //! Live serving metrics of an [`super::InferenceService`].
 //!
 //! Each hosted model accumulates counters and latency samples inside
-//! the service's state lock ([`MetricsAccum`]); a
-//! [`ServiceMetrics`] snapshot is a consistent copy taken under that
-//! lock, so totals always add up (`submitted == completed + failed +
-//! queued + in_flight` at the instant of the snapshot). The latency
+//! its own shard lock ([`MetricsAccum`]); a [`ServiceMetrics`] row is a
+//! consistent copy taken under that lock, so a model's totals always
+//! add up (`submitted == completed + failed + queued + in_flight` at
+//! the instant the row was captured). The latency
 //! quantiles reuse the single-model serving math
 //! ([`crate::engine::serve::percentile`]) so a one-model service
 //! reports the same p50/p99 a direct [`crate::engine::Engine::serve`]
@@ -39,6 +39,15 @@ pub(crate) struct MetricsAccum {
     batch_max: u64,
     /// Cumulative weight-stream words saved vs sequential execution.
     weight_saved: u64,
+    /// Submissions shed at admission (Reject queue-full / Timeout
+    /// expiry). Not counted in `submitted`.
+    rejected: u64,
+    /// Payload bytes those shed submissions carried (load the wire
+    /// frontend accepted but the service refused).
+    shed_bytes: u64,
+    /// Times a submission found the queue full (counted once per
+    /// submission, whatever the admission policy did next).
+    queue_full_events: u64,
 }
 
 impl MetricsAccum {
@@ -71,6 +80,19 @@ impl MetricsAccum {
     pub(crate) fn record_failure(&mut self, now: Instant) {
         self.failed += 1;
         self.last_done = Some(now);
+    }
+
+    /// A submission found the queue full (before the admission policy
+    /// decided whether to shed it).
+    pub(crate) fn record_queue_full(&mut self) {
+        self.queue_full_events += 1;
+    }
+
+    /// A submission was shed at admission; `input_len` is its payload
+    /// length in `f32` values.
+    pub(crate) fn record_rejected(&mut self, input_len: usize) {
+        self.rejected += 1;
+        self.shed_bytes += 4 * input_len as u64;
     }
 
     pub(crate) fn snapshot(
@@ -116,6 +138,9 @@ impl MetricsAccum {
             },
             batch_max: self.batch_max,
             weight_traffic_saved: self.weight_saved,
+            rejected_backpressure: self.rejected,
+            shed_bytes: self.shed_bytes,
+            queue_full_events: self.queue_full_events,
         }
     }
 }
@@ -158,6 +183,15 @@ pub struct ModelMetrics {
     /// Cumulative weight-stream words the model's batch passes saved
     /// vs sequential execution.
     pub weight_traffic_saved: u64,
+    /// Submissions shed at admission (queue full under `Reject`, or
+    /// `Timeout` budget expired). Excluded from `submitted`.
+    pub rejected_backpressure: u64,
+    /// Payload bytes carried by those shed submissions.
+    pub shed_bytes: u64,
+    /// Times a submission found the queue full (whatever the admission
+    /// policy did next — blocked submissions that later got in still
+    /// count one event).
+    pub queue_full_events: u64,
 }
 
 /// A consistent snapshot over every hosted model, produced by
@@ -195,6 +229,16 @@ impl ServiceMetrics {
         self.per_model.iter().map(|m| m.weight_traffic_saved).sum()
     }
 
+    /// Submissions shed at admission, service-wide.
+    pub fn total_rejected_backpressure(&self) -> u64 {
+        self.per_model.iter().map(|m| m.rejected_backpressure).sum()
+    }
+
+    /// Payload bytes shed at admission, service-wide.
+    pub fn total_shed_bytes(&self) -> u64 {
+        self.per_model.iter().map(|m| m.shed_bytes).sum()
+    }
+
     /// A model's row as single-model [`ServeStats`] (what
     /// [`crate::engine::Engine::report_with_serve`] consumes), with the
     /// service's active window standing in for the batch wall time.
@@ -215,11 +259,12 @@ impl ServiceMetrics {
     /// The `serve` CLI's per-model metrics table.
     pub fn render_table(&self) -> String {
         let mut out = format!(
-            "{:<28} {:>6} {:>6} {:>5} {:>5} {:>9} {:>9} {:>9} {:>8} {:>9} {:>6} {:>6} {:>12}\n",
+            "{:<28} {:>6} {:>6} {:>5} {:>5} {:>5} {:>9} {:>9} {:>9} {:>8} {:>9} {:>6} {:>6} {:>12}\n",
             "model",
             "sub",
             "ok",
             "fail",
+            "rej",
             "queue",
             "mean ms",
             "p50 ms",
@@ -232,11 +277,12 @@ impl ServiceMetrics {
         );
         for m in &self.per_model {
             out.push_str(&format!(
-                "{:<28} {:>6} {:>6} {:>5} {:>5} {:>9.2} {:>9.2} {:>9.2} {:>8.1} {:>9.2} {:>6.2} {:>6} {:>12}{}\n",
+                "{:<28} {:>6} {:>6} {:>5} {:>5} {:>5} {:>9.2} {:>9.2} {:>9.2} {:>8.1} {:>9.2} {:>6.2} {:>6} {:>12}{}\n",
                 m.model,
                 m.submitted,
                 m.completed,
                 m.failed,
+                m.rejected_backpressure,
                 m.queued,
                 m.mean_ms,
                 m.p50_ms,
@@ -250,10 +296,12 @@ impl ServiceMetrics {
             ));
         }
         out.push_str(&format!(
-            "total: {} submitted, {} completed, {} failed on {} workers\n",
+            "total: {} submitted, {} completed, {} failed, {} rejected-backpressure ({} B shed) on {} workers\n",
             self.total_submitted(),
             self.total_completed(),
             self.total_failed(),
+            self.total_rejected_backpressure(),
+            self.total_shed_bytes(),
             self.workers
         ));
         out

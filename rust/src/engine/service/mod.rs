@@ -36,17 +36,41 @@
 //! # Ok(()) }
 //! ```
 //!
-//! ## Threading model
+//! ## Threading model (sharded core)
 //!
-//! `build()` spawns exactly `workers` OS threads that drain every
-//! model's bounded queue round-robin (one busy model cannot starve the
-//! others); each inference may additionally fan out over the engine's
-//! own datapath threads (`ModelConfig::threads`). Admission is
-//! per-model and policy-controlled ([`AdmissionPolicy`]): `Block`
-//! applies backpressure, `Reject` and `Timeout` turn a full queue into
-//! typed [`ServeError`]s. [`InferenceService::shutdown`] stops
-//! admission, drains every queue, joins the workers and returns the
-//! final [`ServiceMetrics`]; dropping the service does the same.
+//! Every hosted model is a [`Shard`]: its bounded queue, in-flight
+//! count and metrics live behind the **shard's own mutex**, with two
+//! shard-local condvars (`arrivals` for workers holding a short batch
+//! open, `space` for submitters blocked on a full queue). Submissions
+//! to different models never contend on a lock; the old single
+//! `Mutex<State>` + 2 global condvars design serialized every submit
+//! and every metrics bump through one word of memory, which is a wall
+//! at wire concurrency (the TCP frontend in [`super::wire`] feeds the
+//! service from one reader thread per connection).
+//!
+//! `build()` spawns exactly `workers` OS threads that drain the shards
+//! round-robin (an atomic cursor; one busy model cannot starve the
+//! others). Idle workers park on a global **doorbell** — a mutex
+//! holding the service-wide count of queued-but-unpopped jobs plus the
+//! shutdown flag. A submitter increments the pending count *before*
+//! its job becomes visible and rings the doorbell after, so a worker
+//! that scans every shard and finds nothing can atomically decide
+//! "really idle" (`pending == 0`) vs "rescan" — no lost wakeups, and
+//! workers exit only when `pending == 0 && shutting_down`, which is
+//! exactly the drain guarantee: every admitted ticket resolves.
+//!
+//! Lock order is `directory → shard.state → doorbell`; no path
+//! acquires them in any other order, and inference always runs with no
+//! lock held.
+//!
+//! Admission is per-model and policy-controlled ([`AdmissionPolicy`]):
+//! `Block` applies backpressure, `Reject` and `Timeout` turn a full
+//! queue into typed [`ServeError`]s — both are counted per model
+//! (`rejected_backpressure`, `shed_bytes`, `queue_full_events` in
+//! [`ModelMetrics`]) so load shedding is observable, not silent.
+//! [`InferenceService::shutdown`] stops admission, drains every queue,
+//! joins the workers and returns the final [`ServiceMetrics`];
+//! dropping the service does the same.
 //!
 //! ## Micro-batching
 //!
@@ -58,6 +82,10 @@
 //! unchanged: every request keeps its own [`Ticket`], outputs are
 //! bit-identical to unbatched execution, and one failing request fails
 //! only itself. The default policy (`max_batch == 1`) batches nothing.
+//! A worker holding a batch open for stragglers wakes immediately on
+//! `remove_model` (the held jobs fail fast with
+//! [`ServeError::ModelRemoved`]) and on shutdown (the held batch runs
+//! at once — admitted tickets still resolve successfully).
 
 mod batcher;
 mod metrics;
@@ -65,8 +93,8 @@ mod metrics;
 use std::collections::VecDeque;
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -273,10 +301,24 @@ struct Job {
     ticket: Arc<TicketShared>,
 }
 
-/// One hosted model. Slots are never deleted from the vector (hot
-/// removal only tombstones them), so a worker's slot index stays valid
-/// across the unlocked execution window.
-struct ModelSlot {
+/// The mutable half of a shard, behind the shard's own mutex.
+struct ShardState {
+    queue: VecDeque<Job>,
+    in_flight: usize,
+    removed: bool,
+    /// Shutdown observed — waiters on this shard's condvars re-check
+    /// this flag (it is written under the same mutex they wait with,
+    /// so the wakeup cannot be lost).
+    draining: bool,
+    metrics: MetricsAccum,
+}
+
+/// One hosted model: immutable routing data plus its own lock + two
+/// condvars. Shards are never deleted from the directory (hot removal
+/// only tombstones them), so metrics rows survive removal and a
+/// worker's `Arc<Shard>` stays valid across the unlocked execution
+/// window.
+struct Shard {
     name: String,
     backend: Arc<dyn Backend>,
     input_len: usize,
@@ -284,128 +326,260 @@ struct ModelSlot {
     queue_depth: usize,
     /// How queued requests coalesce into batch-resident passes.
     batch: BatchPolicy,
-    queue: VecDeque<Job>,
-    in_flight: usize,
-    removed: bool,
-    metrics: MetricsAccum,
+    /// Lock-free mirror of `state.removed` for name resolution —
+    /// written once under the state lock, read without it.
+    removed_hint: AtomicBool,
+    state: Mutex<ShardState>,
+    /// Workers holding a short batch open for stragglers wait here;
+    /// submitters notify it on every push, removal/shutdown notify it
+    /// to break the hold.
+    arrivals: Condvar,
+    /// Submitters blocked on a full queue wait here; workers notify it
+    /// after popping, removal/shutdown notify it to refuse.
+    space: Condvar,
 }
 
-struct State {
-    slots: Vec<ModelSlot>,
-    /// Round-robin cursor over the slots — one busy model cannot
-    /// starve the others' queues.
-    rr: usize,
+impl Shard {
+    fn new(
+        name: String,
+        backend: Arc<dyn Backend>,
+        input_len: usize,
+        total_ops: u64,
+        queue_depth: usize,
+        batch: BatchPolicy,
+    ) -> Shard {
+        Shard {
+            name,
+            backend,
+            input_len,
+            total_ops,
+            queue_depth,
+            batch,
+            removed_hint: AtomicBool::new(false),
+            state: Mutex::new(ShardState {
+                queue: VecDeque::new(),
+                in_flight: 0,
+                removed: false,
+                draining: false,
+                metrics: MetricsAccum::default(),
+            }),
+            arrivals: Condvar::new(),
+            space: Condvar::new(),
+        }
+    }
+}
+
+/// Service-wide idle/exit accounting: how many jobs are queued but not
+/// yet popped, plus the shutdown flag. Both are only ever touched
+/// under the doorbell mutex, which makes the worker exit condition
+/// (`pending == 0 && shutting_down`) race-free against submitters —
+/// a submitter bumps `pending` *before* its job becomes visible.
+struct DoorbellState {
+    pending: u64,
     shutting_down: bool,
 }
 
 struct Shared {
-    state: Mutex<State>,
-    /// Workers wait here for jobs (or the shutdown signal).
-    work: Condvar,
-    /// Blocked submitters wait here for queue space (or shutdown /
-    /// model removal).
-    space: Condvar,
+    /// The shard directory. Grows on hot-add, never shrinks; readers
+    /// clone the `Arc`s and drop the lock before touching any shard.
+    shards: RwLock<Vec<Arc<Shard>>>,
+    doorbell: Mutex<DoorbellState>,
+    /// Idle workers park here; submitters ring it after every push.
+    bell: Condvar,
+    /// Round-robin cursor over the directory — one busy model cannot
+    /// starve the others' queues. Plain atomic: the cursor is a
+    /// fairness hint, not a correctness invariant.
+    rr: AtomicUsize,
+    /// Cheap pre-lock mirror of `doorbell.shutting_down`.
+    shutting: AtomicBool,
 }
 
-fn pop_next(st: &mut State) -> Option<(usize, Job)> {
-    let n = st.slots.len();
+impl Shared {
+    /// Resolve a model name to its shard, or the typed routing error.
+    fn find(&self, model: &str) -> Result<Arc<Shard>, ServeError> {
+        let shards = self.shards.read().unwrap();
+        let mut removed_seen = false;
+        for s in shards.iter() {
+            if s.name == model {
+                if s.removed_hint.load(Ordering::Acquire) {
+                    removed_seen = true;
+                    continue;
+                }
+                return Ok(s.clone());
+            }
+        }
+        if removed_seen {
+            return Err(ServeError::ModelRemoved {
+                model: model.to_string(),
+            });
+        }
+        let known = shards
+            .iter()
+            .filter(|s| !s.removed_hint.load(Ordering::Acquire))
+            .map(|s| s.name.clone())
+            .collect();
+        Err(ServeError::UnknownModel {
+            model: model.to_string(),
+            known,
+        })
+    }
+
+    /// `pending -= n` for jobs just popped/drained. Called while
+    /// holding a shard lock (order: shard.state → doorbell).
+    fn dec_pending(&self, n: u64) {
+        let mut db = self.doorbell.lock().unwrap();
+        debug_assert!(db.pending >= n, "pending underflow");
+        db.pending = db.pending.saturating_sub(n);
+    }
+}
+
+/// One round-robin scan over a directory snapshot: pop (and, for a
+/// batching shard, coalesce) from the first non-empty shard. Returns
+/// the shard, the popped jobs, and whether the model was removed while
+/// the batch was held open (the jobs must then fail fast).
+fn try_pop(shared: &Shared, shards: &[Arc<Shard>]) -> Option<(Arc<Shard>, Vec<Job>, bool)> {
+    let n = shards.len();
     if n == 0 {
         return None;
     }
+    let start = shared.rr.load(Ordering::Relaxed) % n;
     for k in 0..n {
-        let i = (st.rr + k) % n;
-        if st.slots[i].removed {
+        let i = (start + k) % n;
+        let shard = &shards[i];
+        if shard.removed_hint.load(Ordering::Relaxed) {
             continue;
         }
-        if let Some(job) = st.slots[i].queue.pop_front() {
-            st.rr = (i + 1) % n;
-            return Some((i, job));
+        let mut st = shard.state.lock().unwrap();
+        if st.removed {
+            continue;
         }
+        let Some(job) = st.queue.pop_front() else {
+            continue;
+        };
+        st.in_flight += 1;
+        shared.dec_pending(1);
+        shared.rr.store((i + 1) % n, Ordering::Relaxed);
+        let mut jobs = vec![job];
+        let mut removed_mid_hold = false;
+        if shard.batch.max_batch > 1 {
+            let (guard, removed) = batcher::fill_batch(shared, shard, st, &mut jobs);
+            st = guard;
+            removed_mid_hold = removed;
+        }
+        drop(st);
+        // Queue slots freed; wake submitters blocked on this shard.
+        shard.space.notify_all();
+        return Some((shard.clone(), jobs, removed_mid_hold));
     }
     None
 }
 
-fn worker_loop(shared: &Shared) {
-    loop {
-        let (slot_idx, backend, model, jobs) = {
-            let mut st = shared.state.lock().unwrap();
-            loop {
-                if let Some((i, job)) = pop_next(&mut st) {
-                    st.slots[i].in_flight += 1;
-                    let mut jobs = vec![job];
-                    if st.slots[i].batch.max_batch > 1 {
-                        st = batcher::fill_batch(shared, st, i, &mut jobs);
-                    }
-                    break (i, st.slots[i].backend.clone(), st.slots[i].name.clone(), jobs);
-                }
-                // Exit only when idle *and* shutting down: the drain
-                // guarantee — every admitted ticket resolves.
-                if st.shutting_down {
-                    return;
-                }
-                st = shared.work.wait(st).unwrap();
-            }
-        };
-        // Queue slots freed; wake blocked submitters (notify_all:
-        // waiters may be waiting on different models' queues).
-        shared.space.notify_all();
-        let t = Instant::now();
-        if jobs.len() == 1 {
-            let job = jobs.into_iter().next().expect("one job");
-            let result = run_request(&*backend, &model, &job.input);
-            let latency_ms = t.elapsed().as_secs_f64() * 1e3;
-            let response = result.map(|output| InferResponse {
-                id: job.id,
-                model,
-                output,
-                latency_ms,
-            });
-            {
-                let mut st = shared.state.lock().unwrap();
-                let slot = &mut st.slots[slot_idx];
-                slot.in_flight -= 1;
-                slot.metrics.record_batch(1, 0);
-                let now = Instant::now();
-                match &response {
-                    Ok(_) => slot.metrics.record_ok(latency_ms, now),
-                    Err(_) => slot.metrics.record_failure(now),
-                }
-            }
-            complete(&job.ticket, response);
-        } else {
-            // Batch-resident pass: one infer_batch over B inputs, then
-            // the results scatter back to their own tickets.
-            let (results, saved) = batcher::run_batch(&*backend, &model, &jobs);
-            let latency_ms = t.elapsed().as_secs_f64() * 1e3;
-            let responses: Vec<Result<InferResponse, ServeError>> = jobs
-                .iter()
-                .zip(results)
-                .map(|(job, result)| {
-                    result.map(|output| InferResponse {
-                        id: job.id,
-                        model: model.clone(),
-                        output,
-                        latency_ms,
-                    })
-                })
-                .collect();
-            {
-                let mut st = shared.state.lock().unwrap();
-                let slot = &mut st.slots[slot_idx];
-                slot.in_flight -= jobs.len();
-                slot.metrics.record_batch(jobs.len(), saved);
-                let now = Instant::now();
-                for r in &responses {
-                    match r {
-                        Ok(_) => slot.metrics.record_ok(latency_ms, now),
-                        Err(_) => slot.metrics.record_failure(now),
-                    }
-                }
-            }
-            for (job, response) in jobs.into_iter().zip(responses) {
-                complete(&job.ticket, response);
+/// Execute popped jobs (single request or batch pass) with no lock
+/// held, record metrics under the shard lock, resolve the tickets.
+fn execute(shard: &Shard, jobs: Vec<Job>) {
+    let t = Instant::now();
+    if jobs.len() == 1 {
+        let job = jobs.into_iter().next().expect("one job");
+        let result = run_request(&*shard.backend, &shard.name, &job.input);
+        let latency_ms = t.elapsed().as_secs_f64() * 1e3;
+        let response = result.map(|output| InferResponse {
+            id: job.id,
+            model: shard.name.clone(),
+            output,
+            latency_ms,
+        });
+        {
+            let mut st = shard.state.lock().unwrap();
+            st.in_flight -= 1;
+            st.metrics.record_batch(1, 0);
+            let now = Instant::now();
+            match &response {
+                Ok(_) => st.metrics.record_ok(latency_ms, now),
+                Err(_) => st.metrics.record_failure(now),
             }
         }
+        complete(&job.ticket, response);
+    } else {
+        // Batch-resident pass: one infer_batch over B inputs, then
+        // the results scatter back to their own tickets.
+        let (results, saved) = batcher::run_batch(&*shard.backend, &shard.name, &jobs);
+        let latency_ms = t.elapsed().as_secs_f64() * 1e3;
+        let responses: Vec<Result<InferResponse, ServeError>> = jobs
+            .iter()
+            .zip(results)
+            .map(|(job, result)| {
+                result.map(|output| InferResponse {
+                    id: job.id,
+                    model: shard.name.clone(),
+                    output,
+                    latency_ms,
+                })
+            })
+            .collect();
+        {
+            let mut st = shard.state.lock().unwrap();
+            st.in_flight -= jobs.len();
+            st.metrics.record_batch(jobs.len(), saved);
+            let now = Instant::now();
+            for r in &responses {
+                match r {
+                    Ok(_) => st.metrics.record_ok(latency_ms, now),
+                    Err(_) => st.metrics.record_failure(now),
+                }
+            }
+        }
+        for (job, response) in jobs.into_iter().zip(responses) {
+            complete(&job.ticket, response);
+        }
+    }
+}
+
+/// Fail jobs whose model was hot-removed while their batch was held
+/// open: the straggler window must not delay the `ModelRemoved`
+/// verdict by up to `max_wait_ms`.
+fn fail_removed(shard: &Shard, jobs: Vec<Job>) {
+    {
+        let mut st = shard.state.lock().unwrap();
+        st.in_flight -= jobs.len();
+        let now = Instant::now();
+        for _ in &jobs {
+            st.metrics.record_failure(now);
+        }
+    }
+    for job in jobs {
+        complete(
+            &job.ticket,
+            Err(ServeError::ModelRemoved {
+                model: shard.name.clone(),
+            }),
+        );
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let shards: Vec<Arc<Shard>> = shared.shards.read().unwrap().clone();
+        if let Some((shard, jobs, removed_mid_hold)) = try_pop(shared, &shards) {
+            if removed_mid_hold {
+                fail_removed(&shard, jobs);
+            } else {
+                execute(&shard, jobs);
+            }
+            continue;
+        }
+        // Nothing found. The doorbell decides atomically whether that
+        // scan raced a submit (pending > 0 → rescan against a fresh
+        // directory snapshot) or the service is really idle.
+        let db = shared.doorbell.lock().unwrap();
+        if db.pending > 0 {
+            continue;
+        }
+        // Exit only when idle *and* shutting down: the drain
+        // guarantee — every admitted ticket resolves.
+        if db.shutting_down {
+            return;
+        }
+        drop(shared.bell.wait(db).unwrap());
     }
 }
 
@@ -669,7 +843,7 @@ impl ServiceBuilder {
             }
         }
         let registry = self.registry.unwrap_or_else(NetworkRegistry::builtin);
-        let mut slots = Vec::with_capacity(self.models.len());
+        let mut shards = Vec::with_capacity(self.models.len());
         for (name, pending) in self.models {
             let (backend, input_len, total_ops, depth_override, batch) = match pending {
                 PendingModel::Config(config) => {
@@ -700,21 +874,17 @@ impl ServiceBuilder {
                     total_ops,
                 } => (backend, input_len, total_ops, None, self.batch),
             };
-            slots.push(ModelSlot {
+            shards.push(Shard::new(
                 name,
                 backend,
                 input_len,
                 total_ops,
-                queue_depth: depth_override.unwrap_or(self.queue_depth),
+                depth_override.unwrap_or(self.queue_depth),
                 batch,
-                queue: VecDeque::new(),
-                in_flight: 0,
-                removed: false,
-                metrics: MetricsAccum::default(),
-            });
+            ));
         }
         Ok(InferenceService::start(
-            slots,
+            shards,
             self.workers,
             self.queue_depth,
             self.admission,
@@ -755,20 +925,16 @@ impl InferenceService {
         admission: AdmissionPolicy,
     ) -> InferenceService {
         debug_assert!(workers >= 1 && queue_depth >= 1, "callers validate the knobs");
-        let slot = ModelSlot {
-            name: name.to_string(),
+        let shard = Shard::new(
+            name.to_string(),
             backend,
             input_len,
             total_ops,
             queue_depth,
-            batch: BatchPolicy::default(),
-            queue: VecDeque::new(),
-            in_flight: 0,
-            removed: false,
-            metrics: MetricsAccum::default(),
-        };
+            BatchPolicy::default(),
+        );
         InferenceService::start(
-            vec![slot],
+            vec![shard],
             workers,
             queue_depth,
             admission,
@@ -778,7 +944,7 @@ impl InferenceService {
     }
 
     fn start(
-        slots: Vec<ModelSlot>,
+        shards: Vec<Shard>,
         workers: usize,
         default_depth: usize,
         admission: AdmissionPolicy,
@@ -786,13 +952,14 @@ impl InferenceService {
         registry: NetworkRegistry,
     ) -> InferenceService {
         let shared = Arc::new(Shared {
-            state: Mutex::new(State {
-                slots,
-                rr: 0,
+            shards: RwLock::new(shards.into_iter().map(Arc::new).collect()),
+            doorbell: Mutex::new(DoorbellState {
+                pending: 0,
                 shutting_down: false,
             }),
-            work: Condvar::new(),
-            space: Condvar::new(),
+            bell: Condvar::new(),
+            rr: AtomicUsize::new(0),
+            shutting: AtomicBool::new(false),
         });
         let threads = (0..workers)
             .map(|_| {
@@ -814,20 +981,20 @@ impl InferenceService {
 
     /// Names of the currently-hosted models, in registration order.
     pub fn models(&self) -> Vec<String> {
-        let st = self.shared.state.lock().unwrap();
-        st.slots
+        let shards = self.shared.shards.read().unwrap();
+        shards
             .iter()
-            .filter(|s| !s.removed)
+            .filter(|s| !s.removed_hint.load(Ordering::Acquire))
             .map(|s| s.name.clone())
             .collect()
     }
 
     /// Flattened input length a hosted model expects.
     pub fn input_len(&self, model: &str) -> Option<usize> {
-        let st = self.shared.state.lock().unwrap();
-        st.slots
+        let shards = self.shared.shards.read().unwrap();
+        shards
             .iter()
-            .find(|s| !s.removed && s.name == model)
+            .find(|s| !s.removed_hint.load(Ordering::Acquire) && s.name == model)
             .map(|s| s.input_len)
     }
 
@@ -839,85 +1006,90 @@ impl InferenceService {
     /// Submit one request; returns a [`Ticket`] on admission, or a
     /// typed error (unknown model, bad input length, queue full /
     /// admission timeout, shutting down) that is scoped to this
-    /// request alone.
+    /// request alone. Only this model's lock is touched — submissions
+    /// to different models never contend.
     pub fn submit(&self, request: InferRequest) -> Result<Ticket, ServeError> {
         let InferRequest { model, input, id } = request;
         let start = Instant::now();
-        let mut st = self.shared.state.lock().unwrap();
+        if self.shared.shutting.load(Ordering::Acquire) {
+            return Err(ServeError::ShuttingDown);
+        }
+        let shard = self.shared.find(&model)?;
+        if input.len() != shard.input_len {
+            return Err(ServeError::BadInput {
+                model,
+                got: input.len(),
+                want: shard.input_len,
+            });
+        }
+        let mut st = shard.state.lock().unwrap();
+        let mut counted_full = false;
         loop {
-            if st.shutting_down {
+            if st.removed {
+                return Err(ServeError::ModelRemoved { model });
+            }
+            if st.draining {
                 return Err(ServeError::ShuttingDown);
             }
-            let Some(i) = st
-                .slots
-                .iter()
-                .position(|s| !s.removed && s.name == model)
-            else {
-                if st.slots.iter().any(|s| s.removed && s.name == model) {
-                    return Err(ServeError::ModelRemoved { model });
+            if st.queue.len() < shard.queue_depth {
+                // Admission gate: the doorbell decides atomically
+                // whether the service still accepts, and counts this
+                // job before it becomes visible — a worker can then
+                // never conclude "idle" while an admitted job exists.
+                {
+                    let mut db = self.shared.doorbell.lock().unwrap();
+                    if db.shutting_down {
+                        return Err(ServeError::ShuttingDown);
+                    }
+                    db.pending += 1;
                 }
-                let known = st
-                    .slots
-                    .iter()
-                    .filter(|s| !s.removed)
-                    .map(|s| s.name.clone())
-                    .collect();
-                return Err(ServeError::UnknownModel { model, known });
-            };
-            if input.len() != st.slots[i].input_len {
-                return Err(ServeError::BadInput {
-                    model,
-                    got: input.len(),
-                    want: st.slots[i].input_len,
-                });
-            }
-            if st.slots[i].queue.len() < st.slots[i].queue_depth {
                 let ticket = Arc::new(TicketShared {
                     slot: Mutex::new(None),
                     cv: Condvar::new(),
                 });
-                let slot = &mut st.slots[i];
-                slot.metrics.record_submit(Instant::now());
-                slot.queue.push_back(Job {
+                st.metrics.record_submit(Instant::now());
+                st.queue.push_back(Job {
                     id,
                     input,
                     ticket: ticket.clone(),
                 });
                 drop(st);
-                // notify_all: besides idle workers, a worker holding a
-                // short batch open for stragglers must observe every
-                // arrival (it re-checks only its own model's queue).
-                self.shared.work.notify_all();
+                self.shared.bell.notify_all();
+                // A worker holding a short batch of this model open
+                // for stragglers must observe the arrival.
+                shard.arrivals.notify_all();
                 return Ok(Ticket {
                     id,
                     model,
                     shared: ticket,
                 });
             }
+            if !counted_full {
+                st.metrics.record_queue_full();
+                counted_full = true;
+            }
             match self.admission {
                 AdmissionPolicy::Reject => {
+                    st.metrics.record_rejected(input.len());
                     return Err(ServeError::QueueFull {
-                        depth: st.slots[i].queue_depth,
+                        depth: shard.queue_depth,
                         model,
-                    })
+                    });
                 }
                 AdmissionPolicy::Block => {
-                    st = self.shared.space.wait(st).unwrap();
+                    st = shard.space.wait(st).unwrap();
                 }
                 AdmissionPolicy::Timeout(ms) => {
                     let waited = start.elapsed();
                     let budget = Duration::from_millis(ms);
                     if waited >= budget {
+                        st.metrics.record_rejected(input.len());
                         return Err(ServeError::AdmissionTimeout {
                             model,
                             waited_ms: waited.as_millis() as u64,
                         });
                     }
-                    let (guard, _) = self
-                        .shared
-                        .space
-                        .wait_timeout(st, budget - waited)
-                        .unwrap();
+                    let (guard, _) = shard.space.wait_timeout(st, budget - waited).unwrap();
                     st = guard;
                 }
             }
@@ -940,8 +1112,8 @@ impl InferenceService {
     }
 
     /// Hot-add a model while the service keeps serving. The engine is
-    /// built outside the service lock (construction can be slow); the
-    /// name must not collide with a hosted model.
+    /// built outside every service lock (construction can be slow);
+    /// the name must not collide with a hosted model.
     pub fn add_model(
         &self,
         name: impl Into<String>,
@@ -959,68 +1131,60 @@ impl InferenceService {
             )));
         }
         let engine = config.build_engine(&self.registry)?;
-        let slot = ModelSlot {
-            name: name.clone(),
-            backend: engine.shared_backend(),
-            input_len: engine.input_len(),
-            total_ops: engine.network().total_ops(),
-            queue_depth: config.queue_depth.unwrap_or(self.default_depth),
-            batch: config.batch_policy(self.default_batch),
-            queue: VecDeque::new(),
-            in_flight: 0,
-            removed: false,
-            metrics: MetricsAccum::default(),
-        };
-        let mut st = self.shared.state.lock().unwrap();
-        if st.shutting_down {
-            return Err(EngineError::Builder(
-                "cannot add a model: the service is shutting down".into(),
-            ));
+        let shard = Shard::new(
+            name.clone(),
+            engine.shared_backend(),
+            engine.input_len(),
+            engine.network().total_ops(),
+            config.queue_depth.unwrap_or(self.default_depth),
+            config.batch_policy(self.default_batch),
+        );
+        let mut shards = self.shared.shards.write().unwrap();
+        {
+            let db = self.shared.doorbell.lock().unwrap();
+            if db.shutting_down {
+                return Err(EngineError::Builder(
+                    "cannot add a model: the service is shutting down".into(),
+                ));
+            }
         }
-        if st.slots.iter().any(|s| !s.removed && s.name == name) {
+        if shards
+            .iter()
+            .any(|s| !s.removed_hint.load(Ordering::Acquire) && s.name == name)
+        {
             return Err(EngineError::Builder(format!(
                 "model `{name}` is already registered"
             )));
         }
-        st.slots.push(slot);
+        shards.push(Arc::new(shard));
         Ok(())
     }
 
     /// Hot-remove a model: new submissions get
     /// [`ServeError::ModelRemoved`], pending (unstarted) requests are
-    /// drained with the same error, in-flight requests complete
-    /// normally, and the model's metrics row survives (flagged
-    /// `removed`).
+    /// drained with the same error, a worker holding a batch open for
+    /// stragglers wakes immediately and fails the held jobs the same
+    /// way, in-flight (executing) requests complete normally, and the
+    /// model's metrics row survives (flagged `removed`).
     pub fn remove_model(&self, model: &str) -> Result<(), ServeError> {
+        let shard = self.shared.find(model)?;
         let drained: Vec<Job> = {
-            let mut st = self.shared.state.lock().unwrap();
-            let Some(i) = st
-                .slots
-                .iter()
-                .position(|s| !s.removed && s.name == model)
-            else {
-                if st.slots.iter().any(|s| s.removed && s.name == model) {
-                    return Err(ServeError::ModelRemoved {
-                        model: model.to_string(),
-                    });
-                }
-                let known = st
-                    .slots
-                    .iter()
-                    .filter(|s| !s.removed)
-                    .map(|s| s.name.clone())
-                    .collect();
-                return Err(ServeError::UnknownModel {
+            let mut st = shard.state.lock().unwrap();
+            if st.removed {
+                // Raced another remove_model between find and lock.
+                return Err(ServeError::ModelRemoved {
                     model: model.to_string(),
-                    known,
                 });
-            };
-            let slot = &mut st.slots[i];
-            slot.removed = true;
-            let jobs: Vec<Job> = slot.queue.drain(..).collect();
+            }
+            st.removed = true;
+            shard.removed_hint.store(true, Ordering::Release);
+            let jobs: Vec<Job> = st.queue.drain(..).collect();
+            if !jobs.is_empty() {
+                self.shared.dec_pending(jobs.len() as u64);
+            }
             let now = Instant::now();
             for _ in &jobs {
-                slot.metrics.record_failure(now);
+                st.metrics.record_failure(now);
             }
             jobs
         };
@@ -1032,23 +1196,27 @@ impl InferenceService {
                 }),
             );
         }
-        // Submitters blocked on the removed model's queue must observe
-        // the removal.
-        self.shared.space.notify_all();
+        // Blocked submitters observe the removal; a worker holding a
+        // short batch open observes it mid-hold instead of sleeping
+        // out its straggler window.
+        shard.space.notify_all();
+        shard.arrivals.notify_all();
         Ok(())
     }
 
-    /// A consistent [`ServiceMetrics`] snapshot.
+    /// A [`ServiceMetrics`] snapshot. Each model's row is internally
+    /// consistent (taken under that shard's lock); rows of different
+    /// models are captured one after another.
     pub fn metrics(&self) -> ServiceMetrics {
-        let st = self.shared.state.lock().unwrap();
+        let shards: Vec<Arc<Shard>> = self.shared.shards.read().unwrap().clone();
         ServiceMetrics {
             workers: self.worker_count,
-            per_model: st
-                .slots
+            per_model: shards
                 .iter()
                 .map(|s| {
-                    s.metrics
-                        .snapshot(&s.name, s.removed, s.queue.len(), s.in_flight, s.total_ops)
+                    let st = s.state.lock().unwrap();
+                    st.metrics
+                        .snapshot(&s.name, st.removed, st.queue.len(), st.in_flight, s.total_ops)
                 })
                 .collect(),
         }
@@ -1065,11 +1233,20 @@ impl InferenceService {
 
     fn stop_and_join(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
-            st.shutting_down = true;
+            let mut db = self.shared.doorbell.lock().unwrap();
+            db.shutting_down = true;
         }
-        self.shared.work.notify_all();
-        self.shared.space.notify_all();
+        self.shared.shutting.store(true, Ordering::Release);
+        let shards: Vec<Arc<Shard>> = self.shared.shards.read().unwrap().clone();
+        for shard in &shards {
+            // `draining` is written under the shard mutex its waiters
+            // hold, so neither a blocked submitter nor a batch-holding
+            // worker can miss the wakeup.
+            shard.state.lock().unwrap().draining = true;
+            shard.space.notify_all();
+            shard.arrivals.notify_all();
+        }
+        self.shared.bell.notify_all();
         for handle in self.threads.drain(..) {
             let _ = handle.join();
         }
@@ -1268,6 +1445,14 @@ mod tests {
         let m = svc.shutdown();
         assert_eq!(m.total_submitted(), 2);
         assert_eq!(m.total_completed(), 2);
+        // The rejection left a telemetry trail: one queue-full event,
+        // one shed request, 4 bytes of shed payload (one f32).
+        let g = m.model("g").unwrap();
+        assert_eq!(g.rejected_backpressure, 1);
+        assert_eq!(g.shed_bytes, 4);
+        assert!(g.queue_full_events >= 1);
+        assert_eq!(m.total_rejected_backpressure(), 1);
+        assert_eq!(m.total_shed_bytes(), 4);
     }
 
     #[test]
@@ -1495,27 +1680,23 @@ mod tests {
             }
         }
 
-        let mut builder_slots = Vec::new();
+        let mut shards = Vec::new();
         for (name, gated) in [("a", gated_a), ("b", gated_b)] {
-            builder_slots.push(ModelSlot {
-                name: name.to_string(),
-                backend: Arc::new(Recorder {
+            shards.push(Shard::new(
+                name.to_string(),
+                Arc::new(Recorder {
                     inner: gated,
                     name,
                     order: order.clone(),
                 }),
-                input_len: 1,
-                total_ops: 1,
-                queue_depth: 8,
-                batch: BatchPolicy::default(),
-                queue: VecDeque::new(),
-                in_flight: 0,
-                removed: false,
-                metrics: MetricsAccum::default(),
-            });
+                1,
+                1,
+                8,
+                BatchPolicy::default(),
+            ));
         }
         let svc = InferenceService::start(
-            builder_slots,
+            shards,
             1,
             8,
             AdmissionPolicy::Block,
@@ -1578,32 +1759,25 @@ mod tests {
         }
     }
 
+    fn single_batching(backend: Arc<dyn Backend>, policy: BatchPolicy) -> InferenceService {
+        let shard = Shard::new("b".to_string(), backend, 1, 1, 8, policy);
+        InferenceService::start(
+            vec![shard],
+            1,
+            8,
+            AdmissionPolicy::Block,
+            BatchPolicy::default(),
+            NetworkRegistry::empty(),
+        )
+    }
+
     #[test]
     fn batcher_coalesces_up_to_max_batch_and_records_savings() {
         // One worker, max_batch 4, a hold window far longer than the
         // submissions take: the worker must coalesce all 4 requests
         // into one batch pass (it stops holding the moment the batch
         // fills, so the test never actually waits out the window).
-        let slot = ModelSlot {
-            name: "b".to_string(),
-            backend: Arc::new(BatchCounting),
-            input_len: 1,
-            total_ops: 1,
-            queue_depth: 8,
-            batch: BatchPolicy::new(4, 10_000),
-            queue: VecDeque::new(),
-            in_flight: 0,
-            removed: false,
-            metrics: MetricsAccum::default(),
-        };
-        let svc = InferenceService::start(
-            vec![slot],
-            1,
-            8,
-            AdmissionPolicy::Block,
-            BatchPolicy::default(),
-            NetworkRegistry::empty(),
-        );
+        let svc = single_batching(Arc::new(BatchCounting), BatchPolicy::new(4, 10_000));
         let tickets: Vec<Ticket> = (0..4u64)
             .map(|i| {
                 svc.submit(InferRequest {
@@ -1640,5 +1814,61 @@ mod tests {
         assert_eq!(d.batch_max, 1);
         assert!((d.batch_mean - 1.0).abs() < 1e-9);
         assert_eq!(d.weight_traffic_saved, 0);
+    }
+
+    #[test]
+    fn remove_model_wakes_a_batch_holding_worker_fast() {
+        // Regression: a worker holding one job under a 10 s straggler
+        // window must wake on remove_model and fail its held jobs
+        // immediately — not after max_wait_ms expires.
+        let svc = single_batching(Arc::new(BatchCounting), BatchPolicy::new(4, 10_000));
+        let ticket = svc
+            .submit(InferRequest {
+                model: "b".into(),
+                input: vec![1.0].into(),
+                id: 1,
+            })
+            .unwrap();
+        // The worker has popped the job and is holding for stragglers.
+        wait_until(|| svc.metrics().model("b").unwrap().in_flight == 1);
+        let t0 = Instant::now();
+        svc.remove_model("b").unwrap();
+        let err = ticket.wait().unwrap_err();
+        assert!(matches!(err, ServeError::ModelRemoved { .. }), "{err}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "held job should fail fast on remove, took {:?}",
+            t0.elapsed()
+        );
+        let m = svc.shutdown();
+        let b = m.model("b").unwrap();
+        assert_eq!((b.submitted, b.completed, b.failed), (1, 0, 1));
+        assert_eq!(b.in_flight, 0);
+    }
+
+    #[test]
+    fn shutdown_wakes_a_batch_holding_worker_and_runs_the_batch() {
+        // Regression: shutdown mid-hold must run the held batch at
+        // once (admitted tickets resolve successfully), not sleep out
+        // the straggler window.
+        let svc = single_batching(Arc::new(BatchCounting), BatchPolicy::new(4, 10_000));
+        let ticket = svc
+            .submit(InferRequest {
+                model: "b".into(),
+                input: vec![7.0].into(),
+                id: 7,
+            })
+            .unwrap();
+        wait_until(|| svc.metrics().model("b").unwrap().in_flight == 1);
+        let t0 = Instant::now();
+        let m = svc.shutdown();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "shutdown should break the hold, took {:?}",
+            t0.elapsed()
+        );
+        assert_eq!(ticket.wait().unwrap().output, vec![7.0]);
+        let b = m.model("b").unwrap();
+        assert_eq!((b.submitted, b.completed, b.failed), (1, 1, 0));
     }
 }

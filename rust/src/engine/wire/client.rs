@@ -1,0 +1,317 @@
+//! Client side of the wire protocol: a blocking [`WireClient`] for
+//! one connection, and a multi-connection pipelined [`LoadGen`]
+//! (`loadgen` CLI subcommand) that measures what the serving stack
+//! sustains over real sockets.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::engine::serve::percentile;
+use crate::util::rng::SplitMix64;
+
+use super::frame::{ErrorCode, Frame, WireError, WIRE_VERSION};
+
+/// One blocking connection to a [`super::WireServer`]. `connect`
+/// performs the `Hello` handshake and learns the hosted model table;
+/// [`infer`](Self::infer) is the simple call-response path and
+/// [`send`](Self::send)/[`recv`](Self::recv) the pipelined one (up to
+/// the caller to match ids).
+pub struct WireClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    models: Vec<(String, u32)>,
+}
+
+impl WireClient {
+    /// Connect and handshake. Fails with a typed [`WireError`] on
+    /// version/magic mismatch or a non-`Hello` reply.
+    pub fn connect(addr: &str) -> Result<WireClient, WireError> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let write_half = stream.try_clone()?;
+        let mut client = WireClient {
+            reader: BufReader::new(stream),
+            writer: BufWriter::new(write_half),
+            models: Vec::new(),
+        };
+        let hello = Frame::Hello {
+            version: WIRE_VERSION,
+            models: Vec::new(),
+        };
+        hello.write_to(&mut client.writer)?;
+        client.writer.flush()?;
+        match Frame::read_from(&mut client.reader)? {
+            Frame::Hello { version, models } => {
+                if version != WIRE_VERSION {
+                    return Err(WireError::VersionMismatch {
+                        ours: WIRE_VERSION,
+                        theirs: version,
+                    });
+                }
+                client.models = models;
+                Ok(client)
+            }
+            Frame::Error { code, message, .. } => Err(WireError::Remote { code, message }),
+            _ => Err(WireError::Handshake("server's reply was not Hello".into())),
+        }
+    }
+
+    /// The server's model table (name, input length) from the
+    /// handshake.
+    pub fn models(&self) -> &[(String, u32)] {
+        &self.models
+    }
+
+    /// Input length of a hosted model, from the handshake table.
+    pub fn input_len(&self, model: &str) -> Option<usize> {
+        self.models
+            .iter()
+            .find(|(name, _)| name == model)
+            .map(|(_, len)| *len as usize)
+    }
+
+    /// Fire one `Infer` without waiting (pipelining primitive).
+    pub fn send(&mut self, id: u64, model: &str, input: Arc<[f32]>) -> Result<(), WireError> {
+        Frame::Infer {
+            id,
+            model: model.to_string(),
+            input,
+        }
+        .write_to(&mut self.writer)?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Receive the next response frame (`Result` or `Error`).
+    pub fn recv(&mut self) -> Result<Frame, WireError> {
+        Frame::read_from(&mut self.reader)
+    }
+
+    /// Call-response convenience: one `Infer`, wait for its answer.
+    /// A per-request server error comes back as
+    /// [`WireError::Remote`].
+    pub fn infer(&mut self, model: &str, input: &[f32]) -> Result<Vec<f32>, WireError> {
+        self.send(0, model, input.to_vec().into())?;
+        match self.recv()? {
+            Frame::Result { output, .. } => Ok(output),
+            Frame::Error { code, message, .. } => Err(WireError::Remote { code, message }),
+            other => Err(WireError::Handshake(format!(
+                "expected Result/Error, got {other:?}"
+            ))),
+        }
+    }
+
+    /// Fetch the server's rendered metrics table.
+    pub fn metrics_table(&mut self) -> Result<String, WireError> {
+        Frame::MetricsRequest.write_to(&mut self.writer)?;
+        self.writer.flush()?;
+        match self.recv()? {
+            Frame::MetricsReply { table } => Ok(table),
+            Frame::Error { code, message, .. } => Err(WireError::Remote { code, message }),
+            other => Err(WireError::Handshake(format!(
+                "expected MetricsReply, got {other:?}"
+            ))),
+        }
+    }
+
+    /// Orderly teardown: `Goodbye`, wait for the server's `Goodbye`.
+    pub fn goodbye(mut self) -> Result<(), WireError> {
+        Frame::Goodbye.write_to(&mut self.writer)?;
+        self.writer.flush()?;
+        loop {
+            match Frame::read_from(&mut self.reader)? {
+                Frame::Goodbye => return Ok(()),
+                // Late responses to pipelined requests drain first.
+                Frame::Result { .. } | Frame::Error { .. } | Frame::MetricsReply { .. } => {}
+                other => {
+                    return Err(WireError::Handshake(format!(
+                        "expected Goodbye, got {other:?}"
+                    )))
+                }
+            }
+        }
+    }
+}
+
+/// Load-generation parameters (`loadgen` CLI subcommand).
+#[derive(Debug, Clone)]
+pub struct LoadGenConfig {
+    /// Server address (`host:port`).
+    pub addr: String,
+    /// Concurrent connections.
+    pub connections: usize,
+    /// Requests each connection keeps outstanding (pipelining window).
+    pub in_flight: usize,
+    /// Total requests across all connections.
+    pub requests: usize,
+    /// Models to cycle through round-robin per connection.
+    pub models: Vec<String>,
+    /// Seed for the synthetic input payloads.
+    pub seed: u64,
+}
+
+/// Aggregated outcome of one load-generation run.
+#[derive(Debug, Clone, Default)]
+pub struct LoadGenReport {
+    pub connections: usize,
+    pub in_flight: usize,
+    /// Requests put on the wire.
+    pub sent: u64,
+    /// `Result` frames received.
+    pub ok: u64,
+    /// Per-request `Error` frames other than admission shedding.
+    pub failed: u64,
+    /// Admission shedding observed on the wire (`QueueFull` /
+    /// `AdmissionTimeout` error codes) — the client-side view of the
+    /// server's `rejected_backpressure` counter.
+    pub rejected_backpressure: u64,
+    /// Connections that died mid-run (handshake or socket failures).
+    pub transport_errors: u64,
+    /// Wall-clock of the whole run.
+    pub total_s: f64,
+    pub req_per_s: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Outcome of one connection's worker thread.
+struct ConnOutcome {
+    sent: u64,
+    ok: u64,
+    failed: u64,
+    rejected: u64,
+    transport_error: bool,
+    latencies_ms: Vec<f64>,
+}
+
+/// Drive `cfg.requests` requests through `cfg.connections` pipelined
+/// connections and aggregate the outcome. Latency is wire round-trip
+/// (send → matching response), which includes queueing — the number a
+/// remote caller actually experiences.
+pub fn run_loadgen(cfg: &LoadGenConfig) -> Result<LoadGenReport, WireError> {
+    assert!(cfg.connections >= 1 && cfg.in_flight >= 1 && !cfg.models.is_empty());
+    let t0 = Instant::now();
+    let per_conn = cfg.requests / cfg.connections;
+    let remainder = cfg.requests % cfg.connections;
+    let handles: Vec<std::thread::JoinHandle<ConnOutcome>> = (0..cfg.connections)
+        .map(|c| {
+            let cfg = cfg.clone();
+            let quota = per_conn + usize::from(c < remainder);
+            std::thread::spawn(move || run_connection(&cfg, c, quota))
+        })
+        .collect();
+    let mut report = LoadGenReport {
+        connections: cfg.connections,
+        in_flight: cfg.in_flight,
+        ..LoadGenReport::default()
+    };
+    let mut latencies = Vec::new();
+    for h in handles {
+        let o = h.join().expect("loadgen connection thread panicked");
+        report.sent += o.sent;
+        report.ok += o.ok;
+        report.failed += o.failed;
+        report.rejected_backpressure += o.rejected;
+        report.transport_errors += u64::from(o.transport_error);
+        latencies.extend(o.latencies_ms);
+    }
+    report.total_s = t0.elapsed().as_secs_f64();
+    if report.total_s > 0.0 {
+        report.req_per_s = report.ok as f64 / report.total_s;
+    }
+    if !latencies.is_empty() {
+        report.mean_ms = latencies.iter().sum::<f64>() / latencies.len() as f64;
+        latencies.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        report.p50_ms = percentile(&latencies, 0.50).unwrap_or(0.0);
+        report.p99_ms = percentile(&latencies, 0.99).unwrap_or(0.0);
+    }
+    Ok(report)
+}
+
+/// One connection's run: keep up to `in_flight` requests outstanding,
+/// cycling models round-robin, until `quota` requests are answered.
+fn run_connection(cfg: &LoadGenConfig, index: usize, quota: usize) -> ConnOutcome {
+    let mut out = ConnOutcome {
+        sent: 0,
+        ok: 0,
+        failed: 0,
+        rejected: 0,
+        transport_error: false,
+        latencies_ms: Vec::with_capacity(quota),
+    };
+    if quota == 0 {
+        return out;
+    }
+    let mut client = match WireClient::connect(&cfg.addr) {
+        Ok(c) => c,
+        Err(_) => {
+            out.transport_error = true;
+            return out;
+        }
+    };
+    let mut rng = SplitMix64::new(cfg.seed ^ (index as u64).wrapping_mul(0x9e37_79b9));
+    // Pre-generate one payload per model (contents don't affect the
+    // serving path; regenerating per request would just slow the
+    // generator down).
+    let payloads: Vec<(String, Arc<[f32]>)> = cfg
+        .models
+        .iter()
+        .map(|m| {
+            let len = client.input_len(m).unwrap_or(0);
+            let data: Vec<f32> = (0..len).map(|_| rng.next_sym()).collect();
+            (m.clone(), data.into())
+        })
+        .collect();
+    let mut outstanding: Vec<(u64, Instant)> = Vec::with_capacity(cfg.in_flight);
+    let mut next = 0u64;
+    let mut done = 0usize;
+    while done < quota {
+        // Fill the pipelining window…
+        while out.sent < quota as u64 && outstanding.len() < cfg.in_flight {
+            let (model, payload) = &payloads[(next as usize) % payloads.len()];
+            if client.send(next, model, payload.clone()).is_err() {
+                out.transport_error = true;
+                return out;
+            }
+            outstanding.push((next, Instant::now()));
+            out.sent += 1;
+            next += 1;
+        }
+        // …then take one response off the wire.
+        let frame = match client.recv() {
+            Ok(f) => f,
+            Err(_) => {
+                out.transport_error = true;
+                return out;
+            }
+        };
+        let (id, is_ok, code) = match frame {
+            Frame::Result { id, .. } => (id, true, 0),
+            Frame::Error { id, code, .. } => (id, false, code),
+            _ => {
+                out.transport_error = true;
+                return out;
+            }
+        };
+        if let Some(pos) = outstanding.iter().position(|(i, _)| *i == id) {
+            let (_, sent_at) = outstanding.swap_remove(pos);
+            if is_ok {
+                out.ok += 1;
+                out.latencies_ms
+                    .push(sent_at.elapsed().as_secs_f64() * 1e3);
+            } else if code == ErrorCode::QueueFull.as_u8()
+                || code == ErrorCode::AdmissionTimeout.as_u8()
+            {
+                out.rejected += 1;
+            } else {
+                out.failed += 1;
+            }
+            done += 1;
+        }
+    }
+    let _ = client.goodbye();
+    out
+}

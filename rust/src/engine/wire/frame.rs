@@ -1,0 +1,476 @@
+//! The Hyperdrive wire frame codec.
+//!
+//! Every message is one length-prefixed binary frame, little-endian
+//! throughout:
+//!
+//! ```text
+//! ┌────────────┬──────────┬──────────────────────────────┐
+//! │ u32 length │ u8 kind  │ kind-specific fields …       │
+//! └────────────┴──────────┴──────────────────────────────┘
+//!   (of body)    body[0]      body[1..]
+//! ```
+//!
+//! The length counts the body (kind byte included), never itself. A
+//! zero-length body, a body longer than [`MAX_BODY`], an unknown kind,
+//! a field that runs past the body or trailing bytes after the last
+//! field are all typed [`WireError`]s — a malformed peer can never make
+//! the decoder panic, allocate unboundedly, or misparse the next frame.
+//!
+//! | kind | frame        | body fields after the kind byte            |
+//! |------|--------------|--------------------------------------------|
+//! | 1    | `Hello`      | u32 magic, u16 version, u16 n, n × (u16 name-len, name, u32 input-len) |
+//! | 2    | `Infer`      | u64 id, u16 model-len, model, u32 count, count × f32 |
+//! | 3    | `Result`     | u64 id, f64 latency-ms, u32 count, count × f32 |
+//! | 4    | `Error`      | u64 id, u8 code, u32 msg-len, msg          |
+//! | 5    | `MetricsRequest` | (empty)                                |
+//! | 6    | `MetricsReply`   | u32 len, UTF-8 table                   |
+//! | 7    | `Goodbye`    | (empty)                                    |
+//!
+//! The client's `Hello` carries an empty model table; the server's
+//! reply carries the hosted models and their input lengths, so a
+//! client knows every model's tensor shape before the first `Infer`.
+
+use std::fmt;
+use std::io::{self, Read, Write};
+use std::sync::Arc;
+
+use crate::engine::ServeError;
+
+/// `b"HDRV"` as a little-endian u32 — the first field of every
+/// `Hello`. A peer that is not speaking this protocol fails here, on
+/// the first frame, with [`WireError::BadMagic`].
+pub const WIRE_MAGIC: u32 = u32::from_le_bytes(*b"HDRV");
+
+/// Protocol version negotiated in `Hello`. A mismatch is a typed
+/// [`WireError::VersionMismatch`], answered on the wire with error
+/// code [`ErrorCode::VersionMismatch`] before the server closes.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Hard cap on a frame body (64 MiB): a hostile or corrupt length
+/// prefix must not drive an unbounded allocation.
+pub const MAX_BODY: usize = 1 << 26;
+
+/// The `id` used on `Error` frames that concern the connection itself
+/// (handshake failures, malformed frames) rather than one request.
+pub const CONNECTION_ID: u64 = u64::MAX;
+
+/// Typed wire-layer errors. Everything a malformed peer, a dead
+/// socket or a version skew can produce is one of these — never a
+/// panic.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireError {
+    /// Underlying socket error.
+    Io(String),
+    /// The peer closed the connection cleanly between frames.
+    Closed,
+    /// The stream ended inside a frame (prefix or body).
+    Truncated { expected: usize, got: usize },
+    /// The length prefix exceeds [`MAX_BODY`].
+    Oversized { len: usize, max: usize },
+    /// The kind byte names no known frame.
+    UnknownKind(u8),
+    /// The `Hello` magic was wrong — the peer speaks something else.
+    BadMagic(u32),
+    /// The peer runs an incompatible protocol version.
+    VersionMismatch { ours: u16, theirs: u16 },
+    /// A structurally invalid body (field past the end, trailing
+    /// bytes, bad UTF-8, empty body …).
+    Malformed(String),
+    /// The handshake broke protocol (first frame not `Hello`, reply
+    /// not `Hello`, …).
+    Handshake(String),
+    /// The server answered with an `Error` frame.
+    Remote { code: u8, message: String },
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "socket error: {e}"),
+            WireError::Closed => write!(f, "connection closed"),
+            WireError::Truncated { expected, got } => {
+                write!(f, "truncated frame: expected {expected} bytes, got {got}")
+            }
+            WireError::Oversized { len, max } => {
+                write!(f, "frame body of {len} bytes exceeds the {max}-byte cap")
+            }
+            WireError::UnknownKind(k) => write!(f, "unknown frame kind {k}"),
+            WireError::BadMagic(m) => {
+                write!(f, "bad hello magic {m:#010x} (expected {WIRE_MAGIC:#010x})")
+            }
+            WireError::VersionMismatch { ours, theirs } => {
+                write!(f, "protocol version mismatch: ours {ours}, peer's {theirs}")
+            }
+            WireError::Malformed(why) => write!(f, "malformed frame: {why}"),
+            WireError::Handshake(why) => write!(f, "handshake violation: {why}"),
+            WireError::Remote { code, message } => {
+                write!(f, "server error (code {code}): {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> WireError {
+        WireError::Io(e.to_string())
+    }
+}
+
+/// Error codes carried on `Error` frames. Codes 1–8 mirror the
+/// [`ServeError`] variants one-to-one so a remote client sees exactly
+/// the typed failure an in-process caller would; 100+ are wire-layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ErrorCode {
+    UnknownModel = 1,
+    BadInput = 2,
+    QueueFull = 3,
+    AdmissionTimeout = 4,
+    ModelRemoved = 5,
+    ShuttingDown = 6,
+    Panicked = 7,
+    Failed = 8,
+    /// The connection broke protocol (malformed frame, unexpected
+    /// kind); scoped to the connection, not a request.
+    Protocol = 100,
+    /// The `Hello` versions disagree.
+    VersionMismatch = 101,
+}
+
+impl ErrorCode {
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_u8(code: u8) -> Option<ErrorCode> {
+        Some(match code {
+            1 => ErrorCode::UnknownModel,
+            2 => ErrorCode::BadInput,
+            3 => ErrorCode::QueueFull,
+            4 => ErrorCode::AdmissionTimeout,
+            5 => ErrorCode::ModelRemoved,
+            6 => ErrorCode::ShuttingDown,
+            7 => ErrorCode::Panicked,
+            8 => ErrorCode::Failed,
+            100 => ErrorCode::Protocol,
+            101 => ErrorCode::VersionMismatch,
+            _ => return None,
+        })
+    }
+}
+
+/// The wire error code a [`ServeError`] travels as.
+pub fn error_code_for(err: &ServeError) -> ErrorCode {
+    match err {
+        ServeError::UnknownModel { .. } => ErrorCode::UnknownModel,
+        ServeError::BadInput { .. } => ErrorCode::BadInput,
+        ServeError::QueueFull { .. } => ErrorCode::QueueFull,
+        ServeError::AdmissionTimeout { .. } => ErrorCode::AdmissionTimeout,
+        ServeError::ModelRemoved { .. } => ErrorCode::ModelRemoved,
+        ServeError::ShuttingDown => ErrorCode::ShuttingDown,
+        ServeError::Panicked { .. } => ErrorCode::Panicked,
+        ServeError::Failed { .. } => ErrorCode::Failed,
+    }
+}
+
+/// One decoded wire frame. `Infer` carries its payload as
+/// `Arc<[f32]>` so the server hands the tensor straight to
+/// [`crate::engine::InferRequest`] without a copy.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Handshake. The client sends an empty model table; the server
+    /// replies with the hosted models and their input lengths.
+    Hello {
+        version: u16,
+        models: Vec<(String, u32)>,
+    },
+    /// One inference request, client → server.
+    Infer {
+        id: u64,
+        model: String,
+        input: Arc<[f32]>,
+    },
+    /// One successful inference, server → client.
+    Result {
+        id: u64,
+        latency_ms: f64,
+        output: Vec<f32>,
+    },
+    /// A per-request (or, with [`CONNECTION_ID`], per-connection)
+    /// failure, server → client.
+    Error { id: u64, code: u8, message: String },
+    /// Ask the server for its metrics table.
+    MetricsRequest,
+    /// The rendered [`crate::engine::ServiceMetrics`] table.
+    MetricsReply { table: String },
+    /// Orderly half of a connection teardown (either direction).
+    Goodbye,
+}
+
+const KIND_HELLO: u8 = 1;
+const KIND_INFER: u8 = 2;
+const KIND_RESULT: u8 = 3;
+const KIND_ERROR: u8 = 4;
+const KIND_METRICS_REQUEST: u8 = 5;
+const KIND_METRICS_REPLY: u8 = 6;
+const KIND_GOODBYE: u8 = 7;
+
+/// Bounded little-endian field reader over a frame body. Every take
+/// checks the remaining length, so a lying length field inside the
+/// body is a typed error, not a slice panic.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], WireError> {
+        if self.buf.len() - self.pos < n {
+            return Err(WireError::Malformed(format!(
+                "{what}: needs {n} bytes, {} left",
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, WireError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16, WireError> {
+        let b = self.take(2, what)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, WireError> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, WireError> {
+        let b = self.take(8, what)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    fn string(&mut self, len: usize, what: &str) -> Result<String, WireError> {
+        let b = self.take(len, what)?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| WireError::Malformed(format!("{what}: not valid UTF-8")))
+    }
+
+    fn f32s(&mut self, count: usize, what: &str) -> Result<Vec<f32>, WireError> {
+        let b = self.take(count * 4, what)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn finish(self, kind: &str) -> Result<(), WireError> {
+        if self.pos != self.buf.len() {
+            return Err(WireError::Malformed(format!(
+                "{kind}: {} trailing bytes after the last field",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn push_f32s(out: &mut Vec<u8>, values: &[f32]) {
+    out.extend_from_slice(&(values.len() as u32).to_le_bytes());
+    for v in values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+impl Frame {
+    /// The complete wire bytes of this frame: u32 length prefix plus
+    /// body.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        match self {
+            Frame::Hello { version, models } => {
+                body.push(KIND_HELLO);
+                body.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
+                body.extend_from_slice(&version.to_le_bytes());
+                body.extend_from_slice(&(models.len() as u16).to_le_bytes());
+                for (name, input_len) in models {
+                    body.extend_from_slice(&(name.len() as u16).to_le_bytes());
+                    body.extend_from_slice(name.as_bytes());
+                    body.extend_from_slice(&input_len.to_le_bytes());
+                }
+            }
+            Frame::Infer { id, model, input } => {
+                body.push(KIND_INFER);
+                body.extend_from_slice(&id.to_le_bytes());
+                body.extend_from_slice(&(model.len() as u16).to_le_bytes());
+                body.extend_from_slice(model.as_bytes());
+                push_f32s(&mut body, input);
+            }
+            Frame::Result {
+                id,
+                latency_ms,
+                output,
+            } => {
+                body.push(KIND_RESULT);
+                body.extend_from_slice(&id.to_le_bytes());
+                body.extend_from_slice(&latency_ms.to_bits().to_le_bytes());
+                push_f32s(&mut body, output);
+            }
+            Frame::Error { id, code, message } => {
+                body.push(KIND_ERROR);
+                body.extend_from_slice(&id.to_le_bytes());
+                body.push(*code);
+                body.extend_from_slice(&(message.len() as u32).to_le_bytes());
+                body.extend_from_slice(message.as_bytes());
+            }
+            Frame::MetricsRequest => body.push(KIND_METRICS_REQUEST),
+            Frame::MetricsReply { table } => {
+                body.push(KIND_METRICS_REPLY);
+                body.extend_from_slice(&(table.len() as u32).to_le_bytes());
+                body.extend_from_slice(table.as_bytes());
+            }
+            Frame::Goodbye => body.push(KIND_GOODBYE),
+        }
+        debug_assert!(!body.is_empty() && body.len() <= MAX_BODY);
+        let mut out = Vec::with_capacity(4 + body.len());
+        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Decode one frame body (the bytes after the length prefix).
+    /// Every structural defect is a typed [`WireError`]; a valid frame
+    /// must consume the body exactly.
+    pub fn decode(body: &[u8]) -> Result<Frame, WireError> {
+        let mut c = Cursor::new(body);
+        let kind = c.u8("kind byte")?;
+        let frame = match kind {
+            KIND_HELLO => {
+                let magic = c.u32("hello magic")?;
+                if magic != WIRE_MAGIC {
+                    return Err(WireError::BadMagic(magic));
+                }
+                let version = c.u16("hello version")?;
+                let n = c.u16("hello model count")? as usize;
+                let mut models = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let name_len = c.u16("hello model name length")? as usize;
+                    let name = c.string(name_len, "hello model name")?;
+                    let input_len = c.u32("hello model input length")?;
+                    models.push((name, input_len));
+                }
+                Frame::Hello { version, models }
+            }
+            KIND_INFER => {
+                let id = c.u64("infer id")?;
+                let model_len = c.u16("infer model length")? as usize;
+                let model = c.string(model_len, "infer model name")?;
+                let count = c.u32("infer value count")? as usize;
+                let input: Arc<[f32]> = c.f32s(count, "infer payload")?.into();
+                Frame::Infer { id, model, input }
+            }
+            KIND_RESULT => {
+                let id = c.u64("result id")?;
+                let latency_ms = c.f64("result latency")?;
+                let count = c.u32("result value count")? as usize;
+                let output = c.f32s(count, "result payload")?;
+                Frame::Result {
+                    id,
+                    latency_ms,
+                    output,
+                }
+            }
+            KIND_ERROR => {
+                let id = c.u64("error id")?;
+                let code = c.u8("error code")?;
+                let msg_len = c.u32("error message length")? as usize;
+                let message = c.string(msg_len, "error message")?;
+                Frame::Error { id, code, message }
+            }
+            KIND_METRICS_REQUEST => Frame::MetricsRequest,
+            KIND_METRICS_REPLY => {
+                let len = c.u32("metrics table length")? as usize;
+                let table = c.string(len, "metrics table")?;
+                Frame::MetricsReply { table }
+            }
+            KIND_GOODBYE => Frame::Goodbye,
+            other => return Err(WireError::UnknownKind(other)),
+        };
+        c.finish(match frame {
+            Frame::Hello { .. } => "hello",
+            Frame::Infer { .. } => "infer",
+            Frame::Result { .. } => "result",
+            Frame::Error { .. } => "error",
+            Frame::MetricsRequest => "metrics request",
+            Frame::MetricsReply { .. } => "metrics reply",
+            Frame::Goodbye => "goodbye",
+        })?;
+        Ok(frame)
+    }
+
+    /// Read one complete frame from the stream. A clean EOF *between*
+    /// frames is [`WireError::Closed`]; an EOF inside a frame is
+    /// [`WireError::Truncated`].
+    pub fn read_from(r: &mut impl Read) -> Result<Frame, WireError> {
+        let mut prefix = [0u8; 4];
+        let got = read_full(r, &mut prefix)?;
+        if got == 0 {
+            return Err(WireError::Closed);
+        }
+        if got < 4 {
+            return Err(WireError::Truncated {
+                expected: 4,
+                got,
+            });
+        }
+        let len = u32::from_le_bytes(prefix) as usize;
+        if len == 0 {
+            return Err(WireError::Malformed("empty frame body".into()));
+        }
+        if len > MAX_BODY {
+            return Err(WireError::Oversized { len, max: MAX_BODY });
+        }
+        let mut body = vec![0u8; len];
+        let got = read_full(r, &mut body)?;
+        if got < len {
+            return Err(WireError::Truncated { expected: len, got });
+        }
+        Frame::decode(&body)
+    }
+
+    /// Write this frame to the stream (no flush — the caller batches).
+    pub fn write_to(&self, w: &mut impl Write) -> Result<(), WireError> {
+        w.write_all(&self.encode())?;
+        Ok(())
+    }
+}
+
+/// Read until `buf` is full or EOF; returns the bytes actually read.
+fn read_full(r: &mut impl Read, buf: &mut [u8]) -> Result<usize, WireError> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => break,
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e.to_string())),
+        }
+    }
+    Ok(got)
+}

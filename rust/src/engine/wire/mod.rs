@@ -1,0 +1,29 @@
+//! # Wire protocol — the TCP serving frontend
+//!
+//! Hyperdrive's claim is *system-level* efficiency: the paper counts
+//! interface I/O, not just core arithmetic, and beats core-only
+//! accelerators on exactly that ledger. This module gives the serving
+//! stack its interface story — a binary wire protocol
+//! ([`frame`]), a TCP server feeding the sharded
+//! [`InferenceService`](crate::engine::InferenceService) with
+//! zero-copy payload handoff ([`server`]), and a pipelined
+//! multi-connection load generator ([`client`]) — all std-only, no
+//! dependencies.
+//!
+//! A remote caller sees the same contract an in-process caller does:
+//! per-request results, typed errors (the [`frame::ErrorCode`] table
+//! mirrors [`ServeError`](crate::engine::ServeError) one-to-one), and
+//! failure isolation — a malformed frame or dropped connection costs
+//! only that connection's requests.
+//!
+//! The CLI front ends are `hyperdrive serve --listen ADDR` (server)
+//! and `hyperdrive loadgen --connect ADDR` (load generator); see the
+//! repo README's serving quickstart.
+
+pub mod client;
+pub mod frame;
+pub mod server;
+
+pub use client::{run_loadgen, LoadGenConfig, LoadGenReport, WireClient};
+pub use frame::{ErrorCode, Frame, WireError, MAX_BODY, WIRE_MAGIC, WIRE_VERSION};
+pub use server::{WireServer, WireStats};

@@ -1,0 +1,479 @@
+//! TCP serving frontend: N connections feeding one
+//! [`InferenceService`].
+//!
+//! Each accepted connection gets a **reader thread** (decodes frames,
+//! submits [`InferRequest`]s — the `Infer` payload is already an
+//! `Arc<[f32]>`, so admission is zero-copy) and a **writer thread**
+//! (resolves [`Ticket`]s and encodes responses **in submission
+//! order**). Splitting the directions means a slow response never
+//! stops the reader from admitting the connection's next request — the
+//! pipelining that makes `--in-flight K` load generation work.
+//!
+//! Failure isolation mirrors the service's per-request contract: a
+//! malformed frame or a dropped connection kills *that connection's*
+//! pending requests only (the service still executes what was already
+//! admitted; the writer drains the tickets even when the socket is
+//! gone so in-flight accounting stays exact). Every other connection
+//! is untouched.
+
+use std::collections::VecDeque;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::engine::{InferRequest, InferenceService, ServeError, Ticket};
+
+use super::frame::{error_code_for, ErrorCode, Frame, WireError, CONNECTION_ID, WIRE_VERSION};
+
+/// Backpressure/traffic telemetry of a [`WireServer`], snapshotted by
+/// [`WireServer::stats`] and returned by [`WireServer::shutdown`].
+#[derive(Debug, Clone, Default)]
+pub struct WireStats {
+    /// Connections accepted over the server's lifetime.
+    pub connections: u64,
+    /// Frames decoded from clients (handshakes included).
+    pub frames_rx: u64,
+    /// Frames written to clients.
+    pub frames_tx: u64,
+    /// Protocol violations observed (malformed/unexpected frames).
+    pub malformed: u64,
+    /// `Infer` frames received.
+    pub infer_rx: u64,
+    /// `Result` frames sent.
+    pub results_tx: u64,
+    /// `Error` frames sent (admission rejections included — this is
+    /// where wire-visible backpressure shows up).
+    pub errors_tx: u64,
+    /// Connections currently open.
+    pub active: usize,
+    /// Highest per-connection in-flight depth observed (requests
+    /// admitted but not yet answered on one connection).
+    pub max_in_flight: usize,
+}
+
+struct ServerShared {
+    service: Arc<InferenceService>,
+    stop: AtomicBool,
+    connections: AtomicU64,
+    frames_rx: AtomicU64,
+    frames_tx: AtomicU64,
+    malformed: AtomicU64,
+    infer_rx: AtomicU64,
+    results_tx: AtomicU64,
+    errors_tx: AtomicU64,
+    active: AtomicUsize,
+    max_in_flight: AtomicUsize,
+}
+
+impl ServerShared {
+    fn stats(&self) -> WireStats {
+        WireStats {
+            connections: self.connections.load(Ordering::Relaxed),
+            frames_rx: self.frames_rx.load(Ordering::Relaxed),
+            frames_tx: self.frames_tx.load(Ordering::Relaxed),
+            malformed: self.malformed.load(Ordering::Relaxed),
+            infer_rx: self.infer_rx.load(Ordering::Relaxed),
+            results_tx: self.results_tx.load(Ordering::Relaxed),
+            errors_tx: self.errors_tx.load(Ordering::Relaxed),
+            active: self.active.load(Ordering::Relaxed),
+            max_in_flight: self.max_in_flight.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// What the reader hands the writer, in submission order. The reader
+/// always enqueues exactly one terminal entry (`Bye`/`Fatal`/`Drop`)
+/// last, so the writer loop always terminates.
+enum Pending {
+    /// An admitted request: wait the ticket, answer `Result`/`Error`.
+    Ticket(Ticket),
+    /// An admission rejection: answer `Error` without a ticket.
+    Reject { id: u64, err: ServeError },
+    /// Answer a rendered metrics table.
+    Metrics(String),
+    /// Clean teardown: answer `Goodbye` and close.
+    Bye,
+    /// Protocol violation: answer a connection-scoped `Error`, close.
+    Fatal(String),
+    /// The socket died; close without writing.
+    Drop,
+}
+
+struct PendingQueue {
+    q: Mutex<VecDeque<Pending>>,
+    cv: Condvar,
+}
+
+impl PendingQueue {
+    fn push(&self, p: Pending) {
+        self.q.lock().unwrap().push_back(p);
+        self.cv.notify_all();
+    }
+
+    fn pop(&self) -> Pending {
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if let Some(p) = q.pop_front() {
+                return p;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+}
+
+/// A TCP frontend bound to one address, feeding one
+/// [`InferenceService`]. Dropping the server stops accepting, closes
+/// every connection and joins every thread; [`shutdown`](Self::shutdown)
+/// does the same and returns the final [`WireStats`].
+pub struct WireServer {
+    shared: Arc<ServerShared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<ConnSlot>>>,
+}
+
+struct ConnSlot {
+    stream: Option<TcpStream>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl WireServer {
+    /// Bind `addr` (use port 0 for an OS-assigned port — see
+    /// [`local_addr`](Self::local_addr)) and start accepting.
+    pub fn start(service: Arc<InferenceService>, addr: &str) -> Result<WireServer, WireError> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let shared = Arc::new(ServerShared {
+            service,
+            stop: AtomicBool::new(false),
+            connections: AtomicU64::new(0),
+            frames_rx: AtomicU64::new(0),
+            frames_tx: AtomicU64::new(0),
+            malformed: AtomicU64::new(0),
+            infer_rx: AtomicU64::new(0),
+            results_tx: AtomicU64::new(0),
+            errors_tx: AtomicU64::new(0),
+            active: AtomicUsize::new(0),
+            max_in_flight: AtomicUsize::new(0),
+        });
+        let conns: Arc<Mutex<Vec<ConnSlot>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let shared = shared.clone();
+            let conns = conns.clone();
+            std::thread::spawn(move || accept_loop(&listener, &shared, &conns))
+        };
+        Ok(WireServer {
+            shared,
+            addr: local,
+            accept: Some(accept),
+            conns,
+        })
+    }
+
+    /// The bound address (resolves port 0 to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// A live telemetry snapshot.
+    pub fn stats(&self) -> WireStats {
+        self.shared.stats()
+    }
+
+    /// Stop accepting, close every connection, join every thread and
+    /// return the final telemetry. The underlying service is left
+    /// running (it belongs to the caller).
+    pub fn shutdown(mut self) -> WireStats {
+        self.stop();
+        self.shared.stats()
+    }
+
+    fn stop(&mut self) {
+        self.shared.stop.store(true, Ordering::Release);
+        // `accept()` has no timeout; a throwaway self-connection wakes
+        // it so it can observe the stop flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let slots: Vec<ConnSlot> = std::mem::take(&mut *self.conns.lock().unwrap());
+        for mut slot in slots {
+            if let Some(stream) = slot.stream.take() {
+                let _ = stream.shutdown(Shutdown::Both);
+            }
+            if let Some(h) = slot.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for WireServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    shared: &Arc<ServerShared>,
+    conns: &Arc<Mutex<Vec<ConnSlot>>>,
+) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(_) => {
+                if shared.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if shared.stop.load(Ordering::Acquire) {
+            // The wake-up self-connection (or a client racing the
+            // shutdown): close it unserved.
+            return;
+        }
+        shared.connections.fetch_add(1, Ordering::Relaxed);
+        shared.active.fetch_add(1, Ordering::Relaxed);
+        let tracked = stream.try_clone().ok();
+        let handle = {
+            let shared = shared.clone();
+            std::thread::spawn(move || {
+                handle_connection(&shared, stream);
+                shared.active.fetch_sub(1, Ordering::Relaxed);
+            })
+        };
+        let mut slots = conns.lock().unwrap();
+        // Reap finished connections so a long-lived server does not
+        // accumulate dead handles.
+        slots.retain_mut(|s| match &s.handle {
+            Some(h) if h.is_finished() => {
+                if let Some(h) = s.handle.take() {
+                    let _ = h.join();
+                }
+                false
+            }
+            _ => true,
+        });
+        slots.push(ConnSlot {
+            stream: tracked,
+            handle: Some(handle),
+        });
+    }
+}
+
+/// One connection, start to finish: handshake, then the reader loop
+/// (this thread) feeding the writer thread in submission order.
+fn handle_connection(shared: &Arc<ServerShared>, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let Ok(write_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(stream);
+    let mut writer = BufWriter::new(write_half);
+
+    // Handshake: the first frame must be a version-matched Hello; the
+    // reply advertises the hosted models and their input lengths.
+    match Frame::read_from(&mut reader) {
+        Ok(Frame::Hello { version, .. }) => {
+            shared.frames_rx.fetch_add(1, Ordering::Relaxed);
+            if version != WIRE_VERSION {
+                let err = WireError::VersionMismatch {
+                    ours: WIRE_VERSION,
+                    theirs: version,
+                };
+                send_connection_error(shared, &mut writer, ErrorCode::VersionMismatch, &err);
+                return;
+            }
+        }
+        Ok(_) => {
+            shared.frames_rx.fetch_add(1, Ordering::Relaxed);
+            shared.malformed.fetch_add(1, Ordering::Relaxed);
+            let err = WireError::Handshake("first frame was not Hello".into());
+            send_connection_error(shared, &mut writer, ErrorCode::Protocol, &err);
+            return;
+        }
+        Err(WireError::Closed) => return,
+        Err(err) => {
+            shared.malformed.fetch_add(1, Ordering::Relaxed);
+            send_connection_error(shared, &mut writer, ErrorCode::Protocol, &err);
+            return;
+        }
+    }
+    let models: Vec<(String, u32)> = shared
+        .service
+        .models()
+        .into_iter()
+        .map(|name| {
+            let len = shared.service.input_len(&name).unwrap_or(0) as u32;
+            (name, len)
+        })
+        .collect();
+    let hello = Frame::Hello {
+        version: WIRE_VERSION,
+        models,
+    };
+    if hello.write_to(&mut writer).is_err() || writer.flush().is_err() {
+        return;
+    }
+    shared.frames_tx.fetch_add(1, Ordering::Relaxed);
+
+    let pending = Arc::new(PendingQueue {
+        q: Mutex::new(VecDeque::new()),
+        cv: Condvar::new(),
+    });
+    let in_flight = Arc::new(AtomicUsize::new(0));
+    let writer_thread = {
+        let shared = shared.clone();
+        let pending = pending.clone();
+        let in_flight = in_flight.clone();
+        std::thread::spawn(move || writer_loop(&shared, &pending, &in_flight, writer))
+    };
+
+    loop {
+        match Frame::read_from(&mut reader) {
+            Ok(Frame::Infer { id, model, input }) => {
+                shared.frames_rx.fetch_add(1, Ordering::Relaxed);
+                shared.infer_rx.fetch_add(1, Ordering::Relaxed);
+                match shared.service.submit(InferRequest { model, input, id }) {
+                    Ok(ticket) => {
+                        let depth = in_flight.fetch_add(1, Ordering::Relaxed) + 1;
+                        shared.max_in_flight.fetch_max(depth, Ordering::Relaxed);
+                        pending.push(Pending::Ticket(ticket));
+                    }
+                    Err(err) => pending.push(Pending::Reject { id, err }),
+                }
+            }
+            Ok(Frame::MetricsRequest) => {
+                shared.frames_rx.fetch_add(1, Ordering::Relaxed);
+                pending.push(Pending::Metrics(shared.service.metrics().render_table()));
+            }
+            Ok(Frame::Goodbye) => {
+                shared.frames_rx.fetch_add(1, Ordering::Relaxed);
+                pending.push(Pending::Bye);
+                break;
+            }
+            Ok(_) => {
+                // Hello after the handshake, or a server→client kind:
+                // a protocol violation that poisons this connection.
+                shared.frames_rx.fetch_add(1, Ordering::Relaxed);
+                shared.malformed.fetch_add(1, Ordering::Relaxed);
+                pending.push(Pending::Fatal("unexpected frame kind".into()));
+                break;
+            }
+            Err(WireError::Closed) | Err(WireError::Io(_)) => {
+                pending.push(Pending::Drop);
+                break;
+            }
+            Err(err) => {
+                shared.malformed.fetch_add(1, Ordering::Relaxed);
+                pending.push(Pending::Fatal(err.to_string()));
+                break;
+            }
+        }
+    }
+    let _ = writer_thread.join();
+}
+
+fn send_connection_error(
+    shared: &ServerShared,
+    writer: &mut BufWriter<TcpStream>,
+    code: ErrorCode,
+    err: &WireError,
+) {
+    let frame = Frame::Error {
+        id: CONNECTION_ID,
+        code: code.as_u8(),
+        message: err.to_string(),
+    };
+    if frame.write_to(writer).is_ok() && writer.flush().is_ok() {
+        shared.frames_tx.fetch_add(1, Ordering::Relaxed);
+        shared.errors_tx.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Drain the pending queue in order, resolving tickets and writing
+/// responses. If the socket dies mid-stream the loop keeps *waiting*
+/// tickets without writing — the service's in-flight accounting and
+/// this connection's counter both stay exact, and only this
+/// connection's requests are lost.
+fn writer_loop(
+    shared: &Arc<ServerShared>,
+    pending: &PendingQueue,
+    in_flight: &AtomicUsize,
+    mut writer: BufWriter<TcpStream>,
+) {
+    let mut dead = false;
+    let mut send = |frame: &Frame, writer: &mut BufWriter<TcpStream>, dead: &mut bool| {
+        if *dead {
+            return;
+        }
+        if frame.write_to(writer).is_err() || writer.flush().is_err() {
+            *dead = true;
+            return;
+        }
+        shared.frames_tx.fetch_add(1, Ordering::Relaxed);
+        match frame {
+            Frame::Result { .. } => {
+                shared.results_tx.fetch_add(1, Ordering::Relaxed);
+            }
+            Frame::Error { .. } => {
+                shared.errors_tx.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {}
+        }
+    };
+    loop {
+        match pending.pop() {
+            Pending::Ticket(ticket) => {
+                let id = ticket.id();
+                let frame = match ticket.wait() {
+                    Ok(resp) => Frame::Result {
+                        id: resp.id,
+                        latency_ms: resp.latency_ms,
+                        output: resp.output,
+                    },
+                    Err(err) => Frame::Error {
+                        id,
+                        code: error_code_for(&err).as_u8(),
+                        message: err.to_string(),
+                    },
+                };
+                send(&frame, &mut writer, &mut dead);
+                in_flight.fetch_sub(1, Ordering::Relaxed);
+            }
+            Pending::Reject { id, err } => {
+                let frame = Frame::Error {
+                    id,
+                    code: error_code_for(&err).as_u8(),
+                    message: err.to_string(),
+                };
+                send(&frame, &mut writer, &mut dead);
+            }
+            Pending::Metrics(table) => {
+                send(&Frame::MetricsReply { table }, &mut writer, &mut dead);
+            }
+            Pending::Bye => {
+                send(&Frame::Goodbye, &mut writer, &mut dead);
+                break;
+            }
+            Pending::Fatal(message) => {
+                let frame = Frame::Error {
+                    id: CONNECTION_ID,
+                    code: ErrorCode::Protocol.as_u8(),
+                    message,
+                };
+                send(&frame, &mut writer, &mut dead);
+                break;
+            }
+            Pending::Drop => break,
+        }
+    }
+    let _ = writer.flush();
+    if let Ok(stream) = writer.into_inner() {
+        let _ = stream.shutdown(Shutdown::Both);
+    }
+}

@@ -4,7 +4,10 @@
 //!   report <table1|table2|table3|table4|table5|table6|fig8|fig9|fig10|fig11|all>
 //!   list-models                                             the model registry
 //!   serve     --model A[,B,...] [--requests N] [--mix M] [--workers W]
-//!             multi-model InferenceService on a synthetic workload
+//!             multi-model InferenceService on a synthetic workload, or
+//!             [--listen ADDR [--conn-limit N]] a TCP wire-protocol server
+//!   loadgen   --connect ADDR --model A[,B,...] [--connections C] [--in-flight K]
+//!             pipelined TCP load generator against a serve --listen instance
 //!   run-e2e   [--artifacts DIR] [--batch N] [--workers N]   end-to-end PJRT serving
 //!   simulate  --model SPEC [--mesh RxC] [--vdd V] [--vbb V]
 //!   mesh      --model SPEC
@@ -25,11 +28,14 @@
 
 use std::collections::HashMap;
 use std::fmt;
+use std::io::Write as _;
 use std::process::ExitCode;
+use std::sync::Arc;
+use std::time::Duration;
 
 use hyperdrive::engine::{
-    AdmissionPolicy, BackendKind, DepthwisePolicy, Engine, EngineError, InferRequest,
-    InferenceService, ServeError, ServeOptions,
+    run_loadgen, AdmissionPolicy, BackendKind, DepthwisePolicy, Engine, EngineError, InferRequest,
+    InferenceService, LoadGenConfig, ServeError, ServeOptions, WireError, WireServer,
 };
 use hyperdrive::model::NetworkRegistry;
 use hyperdrive::report;
@@ -44,6 +50,12 @@ fn usage() -> &'static str {
        serve --model SPEC[,SPEC...] [--requests N] [--mix round-robin|random]\n\
              [--workers W] [--queue-depth D] [--admission block|reject|timeout:MS]\n\
              [--max-batch B] [--batch-wait-ms MS] [--seed S]\n\
+             [--listen ADDR [--conn-limit N]]   serve over TCP instead of a\n\
+             synthetic in-process workload (port 0 picks a free port;\n\
+             --conn-limit 0 serves forever)\n\
+       loadgen --connect ADDR --model NAME[,NAME...] [--connections C]\n\
+             [--in-flight K] [--requests N] [--seed S]\n\
+             drive a serve --listen instance over TCP\n\
        run-e2e [--artifacts DIR] [--batch N] [--workers N]\n\
        simulate --model SPEC [--mesh RxC] [--vdd V] [--vbb V] [--threads N]\n\
        mesh --model SPEC\n\
@@ -88,6 +100,7 @@ enum CliError {
     Opt(OptError),
     Engine(EngineError),
     Serve(ServeError),
+    Wire(WireError),
     Usage(String),
 }
 
@@ -97,6 +110,7 @@ impl fmt::Display for CliError {
             CliError::Opt(e) => write!(f, "{e}"),
             CliError::Engine(e) => write!(f, "{e}"),
             CliError::Serve(e) => write!(f, "{e}"),
+            CliError::Wire(e) => write!(f, "{e}"),
             CliError::Usage(m) => write!(f, "{m}"),
         }
     }
@@ -117,6 +131,12 @@ impl From<EngineError> for CliError {
 impl From<ServeError> for CliError {
     fn from(e: ServeError) -> Self {
         CliError::Serve(e)
+    }
+}
+
+impl From<WireError> for CliError {
+    fn from(e: WireError) -> Self {
+        CliError::Wire(e)
     }
 }
 
@@ -327,6 +347,11 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<String, CliError> {
     }
     let service = builder.build()?;
 
+    if let Some(listen) = opts.get("listen") {
+        let conn_limit: u64 = opt_parse(opts, "conn-limit", 0, "an unsigned integer")?;
+        return cmd_serve_listen(service, listen, conn_limit, workers, &specs);
+    }
+
     let mut rng = SplitMix64::new(seed);
     let mut tickets = Vec::with_capacity(requests);
     let mut rejected = 0usize;
@@ -372,6 +397,108 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<String, CliError> {
          {ok} ok, {failed} failed, {rejected} rejected at admission\n{}{batching}",
         specs.len(),
         metrics.render_table()
+    ))
+}
+
+/// `serve --listen`: expose the service over TCP. With a `--conn-limit`
+/// the server runs until that many connections have come *and gone*
+/// (the CI smoke's termination condition); with 0 it serves forever.
+/// The "listening on" line is printed (and flushed) before the first
+/// accept so a driver script can scrape the port.
+fn cmd_serve_listen(
+    service: InferenceService,
+    listen: &str,
+    conn_limit: u64,
+    workers: usize,
+    specs: &[String],
+) -> Result<String, CliError> {
+    let service = Arc::new(service);
+    let server = WireServer::start(service.clone(), listen)?;
+    println!("listening on {}", server.local_addr());
+    let _ = std::io::stdout().flush();
+    loop {
+        let s = server.stats();
+        if conn_limit > 0 && s.connections >= conn_limit && s.active == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let wire = server.shutdown();
+    // The server's threads are joined, so ours is the last Arc; the
+    // fallback only covers a caller that cloned the service elsewhere.
+    let metrics = match Arc::try_unwrap(service) {
+        Ok(svc) => svc.shutdown(),
+        Err(arc) => arc.metrics(),
+    };
+    Ok(format!(
+        "served {} connection(s) over {} model(s) on {workers} workers\n{}\
+         wire: {} connections, {} frames in, {} frames out, {} malformed, \
+         {} infer requests, peak in-flight {}",
+        wire.connections,
+        specs.len(),
+        metrics.render_table(),
+        wire.connections,
+        wire.frames_rx,
+        wire.frames_tx,
+        wire.malformed,
+        wire.infer_rx,
+        wire.max_in_flight
+    ))
+}
+
+/// `loadgen`: drive a `serve --listen` instance over TCP with C
+/// pipelined connections and report client-observed throughput,
+/// latency quantiles and backpressure.
+fn cmd_loadgen(opts: &HashMap<String, String>) -> Result<String, CliError> {
+    let addr = opts
+        .get("connect")
+        .ok_or_else(|| CliError::Usage("loadgen needs --connect HOST:PORT".into()))?
+        .clone();
+    let models: Vec<String> = opts
+        .get("model")
+        .ok_or_else(|| {
+            CliError::Usage("loadgen needs --model NAME[,NAME...] (the server's model names)".into())
+        })?
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(String::from)
+        .collect();
+    if models.is_empty() {
+        return Err(CliError::Usage("loadgen needs at least one model name".into()));
+    }
+    let connections: usize = opt_parse(opts, "connections", 4, "a positive integer")?;
+    let in_flight: usize = opt_parse(opts, "in-flight", 8, "a positive integer")?;
+    let requests: usize = opt_parse(opts, "requests", 64, "a positive integer")?;
+    let seed: u64 = opt_parse(opts, "seed", 7, "an unsigned integer")?;
+    if connections == 0 || in_flight == 0 || requests == 0 {
+        return Err(CliError::Usage(
+            "loadgen needs --connections, --in-flight and --requests all ≥ 1".into(),
+        ));
+    }
+    let report = run_loadgen(&LoadGenConfig {
+        addr,
+        connections,
+        in_flight,
+        requests,
+        models,
+        seed,
+    })?;
+    Ok(format!(
+        "loadgen: {} sent, {} ok, {} failed, {} rejected, {} transport errors \
+         over {} connections × in-flight {}\n\
+         → {:.1} req/s, mean {:.2} ms, p50 {:.2} ms, p99 {:.2} ms",
+        report.sent,
+        report.ok,
+        report.failed,
+        report.rejected_backpressure,
+        report.transport_errors,
+        report.connections,
+        report.in_flight,
+        report.req_per_s,
+        report.mean_ms,
+        report.p50_ms,
+        report.p99_ms
     ))
 }
 
@@ -437,6 +564,9 @@ fn main() -> ExitCode {
         Some("serve") => parse_opts(&args[1..])
             .map_err(CliError::from)
             .and_then(|o| cmd_serve(&o)),
+        Some("loadgen") => parse_opts(&args[1..])
+            .map_err(CliError::from)
+            .and_then(|o| cmd_loadgen(&o)),
         Some("run-e2e") => parse_opts(&args[1..])
             .map_err(CliError::from)
             .and_then(|o| cmd_run_e2e(&o)),
@@ -704,5 +834,66 @@ mod tests {
             matches!(err, CliError::Engine(EngineError::Model(_))),
             "{err}"
         );
+    }
+
+    #[test]
+    fn loadgen_subcommand_validates_options() {
+        // Missing --connect / --model are usage errors.
+        let opts = parse_opts(&args(&["--model", "hypernet20"])).unwrap();
+        assert!(matches!(cmd_loadgen(&opts).unwrap_err(), CliError::Usage(_)));
+        let opts = parse_opts(&args(&["--connect", "127.0.0.1:9"])).unwrap();
+        assert!(matches!(cmd_loadgen(&opts).unwrap_err(), CliError::Usage(_)));
+        // Zero knobs are usage errors too.
+        let opts = parse_opts(&args(&[
+            "--connect",
+            "127.0.0.1:9",
+            "--model",
+            "hypernet20",
+            "--connections",
+            "0",
+        ]))
+        .unwrap();
+        assert!(matches!(cmd_loadgen(&opts).unwrap_err(), CliError::Usage(_)));
+    }
+
+    #[test]
+    fn loadgen_drives_a_listening_server_end_to_end() {
+        // A real loopback round trip: serve --listen on port 0, then
+        // the loadgen path against it.
+        let service = Arc::new(
+            InferenceService::builder()
+                .model_spec("hypernet20")
+                .workers(2)
+                .queue_depth(8)
+                .build()
+                .unwrap(),
+        );
+        let server = WireServer::start(service.clone(), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let opts = parse_opts(&args(&[
+            "--connect",
+            &addr,
+            "--model",
+            "hypernet20",
+            "--connections",
+            "2",
+            "--in-flight",
+            "4",
+            "--requests",
+            "8",
+        ]))
+        .unwrap();
+        let out = cmd_loadgen(&opts).unwrap();
+        assert!(out.contains("8 sent, 8 ok, 0 failed"), "{out}");
+        assert!(out.contains("2 connections × in-flight 4"), "{out}");
+        let stats = server.shutdown();
+        assert_eq!(stats.infer_rx, 8);
+        assert_eq!(stats.connections, 2);
+        assert_eq!(stats.malformed, 0);
+        let metrics = match Arc::try_unwrap(service) {
+            Ok(svc) => svc.shutdown(),
+            Err(_) => panic!("server shutdown should drop its service handle"),
+        };
+        assert_eq!(metrics.total_completed(), 8);
     }
 }

@@ -1,0 +1,368 @@
+//! Wire-protocol contract tests: codec round-trips under random
+//! payloads, typed errors on every malformed-input class, and loopback
+//! TCP end-to-end runs asserting the wire path is bit-exact vs direct
+//! `Engine::infer` with failure isolation per connection.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use hyperdrive::engine::wire::frame::{
+    ErrorCode, Frame, WireError, CONNECTION_ID, MAX_BODY, WIRE_VERSION,
+};
+use hyperdrive::engine::{
+    run_loadgen, Engine, InferenceService, LoadGenConfig, WireClient, WireServer,
+};
+use hyperdrive::util::SplitMix64;
+
+const MODELS: [&str; 2] = ["hypernet20", "resnet18@32x32"];
+
+fn round_trip(frame: &Frame) -> Frame {
+    let bytes = frame.encode();
+    let mut cursor = &bytes[..];
+    Frame::read_from(&mut cursor).expect("round trip decodes")
+}
+
+#[test]
+fn codec_round_trips_every_frame_kind() {
+    let mut rng = SplitMix64::new(0xC0DEC);
+    // Payload sizes cover the edges: empty, one, and a large tensor.
+    for &n in &[0usize, 1, 3, 257, 65_536] {
+        let payload: Vec<f32> = (0..n).map(|_| rng.next_sym()).collect();
+        let frames = [
+            Frame::Hello {
+                version: WIRE_VERSION,
+                models: vec![("hypernet20".into(), 3072), ("".into(), 0)],
+            },
+            Frame::Infer {
+                id: rng.next_u64(),
+                model: "resnet18@32x32".into(),
+                input: payload.clone().into(),
+            },
+            Frame::Result {
+                id: rng.next_u64(),
+                latency_ms: 1.25,
+                output: payload.clone(),
+            },
+            Frame::Error {
+                id: CONNECTION_ID,
+                code: ErrorCode::QueueFull.as_u8(),
+                message: "model `x`: queue full (8 pending)".into(),
+            },
+            Frame::MetricsRequest,
+            Frame::MetricsReply {
+                table: "model  sub  ok\n".into(),
+            },
+            Frame::Goodbye,
+        ];
+        for frame in &frames {
+            assert_eq!(&round_trip(frame), frame, "n = {n}");
+        }
+    }
+}
+
+#[test]
+fn codec_round_trips_random_infer_payloads() {
+    let mut rng = SplitMix64::new(7);
+    for _ in 0..200 {
+        let n = rng.next_below(4096);
+        let input: Vec<f32> = (0..n).map(|_| rng.next_gauss()).collect();
+        let frame = Frame::Infer {
+            id: rng.next_u64(),
+            model: format!("m{}", rng.next_below(100)),
+            input: input.into(),
+        };
+        assert_eq!(round_trip(&frame), frame);
+    }
+}
+
+#[test]
+fn truncated_streams_are_typed_errors() {
+    let bytes = Frame::Goodbye.encode();
+    // Cut inside the length prefix.
+    let mut cursor = &bytes[..2];
+    assert!(matches!(
+        Frame::read_from(&mut cursor),
+        Err(WireError::Truncated { expected: 4, got: 2 })
+    ));
+    // Cut inside the body of a bigger frame.
+    let bytes = Frame::Infer {
+        id: 1,
+        model: "m".into(),
+        input: vec![1.0, 2.0, 3.0].into(),
+    }
+    .encode();
+    for cut in 5..bytes.len() {
+        let mut cursor = &bytes[..cut];
+        assert!(
+            matches!(Frame::read_from(&mut cursor), Err(WireError::Truncated { .. })),
+            "cut at {cut}"
+        );
+    }
+    // A clean EOF between frames is Closed, not Truncated.
+    let mut cursor: &[u8] = &[];
+    assert!(matches!(Frame::read_from(&mut cursor), Err(WireError::Closed)));
+}
+
+#[test]
+fn hostile_prefixes_and_bodies_are_typed_errors() {
+    // Oversized length prefix: refused before any allocation.
+    let mut bytes = ((MAX_BODY + 1) as u32).to_le_bytes().to_vec();
+    bytes.extend_from_slice(&[0u8; 16]);
+    let mut cursor = &bytes[..];
+    assert!(matches!(
+        Frame::read_from(&mut cursor),
+        Err(WireError::Oversized { .. })
+    ));
+    // Zero-length body.
+    let mut cursor: &[u8] = &0u32.to_le_bytes()[..];
+    assert!(matches!(
+        Frame::read_from(&mut cursor),
+        Err(WireError::Malformed(_))
+    ));
+    // Unknown kind byte.
+    assert!(matches!(Frame::decode(&[99]), Err(WireError::UnknownKind(99))));
+    // Wrong hello magic.
+    let mut body = vec![1u8];
+    body.extend_from_slice(&0xDEAD_BEEFu32.to_le_bytes());
+    body.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    body.extend_from_slice(&0u16.to_le_bytes());
+    assert!(matches!(Frame::decode(&body), Err(WireError::BadMagic(0xDEAD_BEEF))));
+    // Trailing bytes after a valid frame.
+    let mut bytes = Frame::Goodbye.encode();
+    bytes[0] += 1; // length prefix now claims one extra body byte
+    bytes.push(0);
+    let mut cursor = &bytes[..];
+    assert!(matches!(
+        Frame::read_from(&mut cursor),
+        Err(WireError::Malformed(_))
+    ));
+    // A count field that runs past the body.
+    let mut body = vec![2u8]; // Infer
+    body.extend_from_slice(&1u64.to_le_bytes());
+    body.extend_from_slice(&1u16.to_le_bytes());
+    body.push(b'm');
+    body.extend_from_slice(&1000u32.to_le_bytes()); // claims 1000 f32s, has 0
+    assert!(matches!(Frame::decode(&body), Err(WireError::Malformed(_))));
+    // Random garbage bodies never panic; they decode or fail typed.
+    let mut rng = SplitMix64::new(0xBAD);
+    for _ in 0..500 {
+        let n = 1 + rng.next_below(64);
+        let body: Vec<u8> = (0..n).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+        let _ = Frame::decode(&body);
+    }
+}
+
+fn start_service() -> Arc<InferenceService> {
+    let mut builder = InferenceService::builder().workers(4).queue_depth(64);
+    for model in MODELS {
+        builder = builder.model_spec(model);
+    }
+    Arc::new(builder.build().expect("service build"))
+}
+
+#[test]
+fn loopback_soak_is_bit_exact_vs_direct_infer() {
+    // Reference engines built exactly like the service's models: the
+    // synthetic parameters are seed-deterministic, so the TCP path
+    // must reproduce Engine::infer bit-for-bit.
+    let references: Vec<Engine> = MODELS
+        .iter()
+        .map(|m| Engine::builder().model(*m).build().expect("engine build"))
+        .collect();
+    let service = start_service();
+    let server = WireServer::start(service.clone(), "127.0.0.1:0").expect("bind");
+    let addr = server.local_addr().to_string();
+
+    let handles: Vec<_> = (0..4)
+        .map(|c| {
+            let addr = addr.clone();
+            let inputs: Vec<Vec<f32>> = references
+                .iter()
+                .map(|e| {
+                    let mut rng = SplitMix64::new(1000 + c);
+                    (0..e.input_len()).map(|_| rng.next_sym()).collect()
+                })
+                .collect();
+            let expected: Vec<Vec<f32>> = references
+                .iter()
+                .zip(&inputs)
+                .map(|(e, x)| e.infer(x).expect("reference inference"))
+                .collect();
+            std::thread::spawn(move || {
+                let mut client = WireClient::connect(&addr).expect("connect");
+                assert_eq!(client.models().len(), MODELS.len());
+                for round in 0..3 {
+                    for ((model, input), want) in MODELS.iter().zip(&inputs).zip(&expected) {
+                        let got = client.infer(model, input).expect("wire inference");
+                        assert_eq!(&got, want, "conn {c} round {round} model {model}");
+                    }
+                }
+                client.goodbye().expect("clean teardown");
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("soak connection");
+    }
+
+    let stats = server.shutdown();
+    assert_eq!(stats.connections, 4);
+    assert_eq!(stats.malformed, 0);
+    assert_eq!(stats.infer_rx, 4 * 3 * MODELS.len() as u64);
+    assert_eq!(stats.results_tx, stats.infer_rx);
+    let metrics = Arc::try_unwrap(service).ok().expect("last Arc").shutdown();
+    assert_eq!(metrics.total_completed(), stats.infer_rx);
+    assert_eq!(metrics.total_failed(), 0);
+}
+
+#[test]
+fn version_mismatch_is_refused_on_the_wire() {
+    let service = start_service();
+    let server = WireServer::start(service.clone(), "127.0.0.1:0").expect("bind");
+    let mut stream = TcpStream::connect(server.local_addr()).expect("connect");
+    let hello = Frame::Hello {
+        version: WIRE_VERSION + 9,
+        models: Vec::new(),
+    };
+    stream.write_all(&hello.encode()).expect("send hello");
+    let mut reader = std::io::BufReader::new(stream.try_clone().expect("clone"));
+    match Frame::read_from(&mut reader) {
+        Ok(Frame::Error { id, code, message }) => {
+            assert_eq!(id, CONNECTION_ID);
+            assert_eq!(code, ErrorCode::VersionMismatch.as_u8());
+            assert!(message.contains("version"), "{message}");
+        }
+        other => panic!("expected a version-mismatch Error frame, got {other:?}"),
+    }
+    // The server hangs up after refusing.
+    let mut rest = Vec::new();
+    let _ = reader.read_to_end(&mut rest);
+    assert!(rest.is_empty());
+    server.shutdown();
+}
+
+#[test]
+fn bad_magic_and_non_hello_handshakes_are_refused() {
+    let service = start_service();
+    let server = WireServer::start(service.clone(), "127.0.0.1:0").expect("bind");
+    // Garbage magic.
+    let mut stream = TcpStream::connect(server.local_addr()).expect("connect");
+    let mut body = vec![1u8];
+    body.extend_from_slice(&0x1234_5678u32.to_le_bytes());
+    body.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    body.extend_from_slice(&0u16.to_le_bytes());
+    let mut bytes = (body.len() as u32).to_le_bytes().to_vec();
+    bytes.extend_from_slice(&body);
+    stream.write_all(&bytes).expect("send");
+    let mut reader = std::io::BufReader::new(stream);
+    match Frame::read_from(&mut reader) {
+        Ok(Frame::Error { id, code, .. }) => {
+            assert_eq!(id, CONNECTION_ID);
+            assert_eq!(code, ErrorCode::Protocol.as_u8());
+        }
+        other => panic!("expected a protocol Error frame, got {other:?}"),
+    }
+    // First frame not Hello.
+    let mut stream = TcpStream::connect(server.local_addr()).expect("connect");
+    stream
+        .write_all(&Frame::MetricsRequest.encode())
+        .expect("send");
+    let mut reader = std::io::BufReader::new(stream);
+    match Frame::read_from(&mut reader) {
+        Ok(Frame::Error { code, .. }) => assert_eq!(code, ErrorCode::Protocol.as_u8()),
+        other => panic!("expected a protocol Error frame, got {other:?}"),
+    }
+    let stats = server.shutdown();
+    assert!(stats.malformed >= 2, "stats: {stats:?}");
+}
+
+#[test]
+fn malformed_frames_and_drops_fail_only_their_own_connection() {
+    let service = start_service();
+    let server = WireServer::start(service.clone(), "127.0.0.1:0").expect("bind");
+    let addr = server.local_addr().to_string();
+    let engine = Engine::builder().model(MODELS[0]).build().expect("engine");
+    let input: Vec<f32> = {
+        let mut rng = SplitMix64::new(5);
+        (0..engine.input_len()).map(|_| rng.next_sym()).collect()
+    };
+    let want = engine.infer(&input).expect("reference");
+
+    // A healthy connection, held open across both failure injections.
+    let mut healthy = WireClient::connect(&addr).expect("connect healthy");
+
+    // Connection 1: valid handshake + infer, then a garbage frame.
+    {
+        let mut victim = WireClient::connect(&addr).expect("connect victim");
+        assert_eq!(victim.infer(MODELS[0], &input).expect("pre-garbage infer"), want);
+        let mut raw = TcpStream::connect(&addr).expect("raw"); // separate garbage conn
+        raw.write_all(&[7, 0, 0, 0, 42, 0, 0, 0, 0, 0, 0])
+            .expect("garbage bytes");
+        let mut reply = Vec::new();
+        let _ = raw.read_to_end(&mut reply);
+        // The victim connection itself still works fine.
+        assert_eq!(victim.infer(MODELS[0], &input).expect("post-garbage infer"), want);
+        victim.goodbye().expect("clean teardown");
+    }
+
+    // Connection 2: submit then vanish mid-flight (no Goodbye).
+    {
+        let mut dropper = WireClient::connect(&addr).expect("connect dropper");
+        dropper
+            .send(99, MODELS[0], input.clone().into())
+            .expect("send then drop");
+        // dropper's streams close here without reading the response.
+    }
+
+    // The healthy connection never noticed either failure.
+    for _ in 0..3 {
+        assert_eq!(healthy.infer(MODELS[0], &input).expect("healthy infer"), want);
+    }
+    let table = healthy.metrics_table().expect("metrics over the wire");
+    assert!(table.contains(MODELS[0]), "{table}");
+    assert!(table.contains("rej"), "{table}");
+    healthy.goodbye().expect("clean teardown");
+
+    // Give the server a beat to retire the dropped connection.
+    for _ in 0..100 {
+        if server.stats().active == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let stats = server.shutdown();
+    assert!(stats.malformed >= 1, "stats: {stats:?}");
+    let metrics = Arc::try_unwrap(service).ok().expect("last Arc").shutdown();
+    // Every admitted request completed — including the dropped
+    // connection's (the service finishes what it admits; only the
+    // delivery is lost).
+    assert_eq!(metrics.total_failed(), 0);
+    assert_eq!(metrics.total_completed(), 6);
+}
+
+#[test]
+fn loadgen_reports_backpressure_and_pipelines() {
+    let service = start_service();
+    let server = WireServer::start(service.clone(), "127.0.0.1:0").expect("bind");
+    let report = run_loadgen(&LoadGenConfig {
+        addr: server.local_addr().to_string(),
+        connections: 4,
+        in_flight: 8,
+        requests: 32,
+        models: MODELS.iter().map(|m| m.to_string()).collect(),
+        seed: 11,
+    })
+    .expect("loadgen");
+    assert_eq!(report.sent, 32);
+    assert_eq!(report.ok, 32);
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.rejected_backpressure, 0);
+    assert_eq!(report.transport_errors, 0);
+    assert!(report.p99_ms >= report.p50_ms);
+    let stats = server.shutdown();
+    assert!(stats.max_in_flight >= 1);
+    assert_eq!(stats.infer_rx, 32);
+    Arc::try_unwrap(service).ok().expect("last Arc").shutdown();
+}

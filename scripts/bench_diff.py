@@ -26,6 +26,16 @@ Two independent gates, both enforced by the CI `bench-smoke` job:
    batch: `stream_words <= stream_words_seq * (1/B + eps)`.  These are
    exact counters, not timings, so the gate holds on any host.
 
+4. **Worker/transport sweep shape + p99 blow-up** (`--serve PATH`):
+   the `sweep` section must cover both transports (in-process and
+   loopback TCP) over the same ascending worker counts, every point
+   must account for all its requests (ok + failed + rejected ==
+   requests, ok > 0), and scaling workers up must not blow up tail
+   latency: p99 at the highest worker count may not exceed
+   P99_BLOWUP_FACTOR × p99 at 1 worker once it is past the
+   P99_ABS_FLOOR_MS noise floor.  Throughput scaling is printed as an
+   advisory (shared CI runners are too noisy to gate req/s).
+
 usage: bench_diff.py BASELINE CURRENT [--max-regress 0.20] [--serve BENCH_serve.json]
 """
 
@@ -49,6 +59,14 @@ TINY_SPEEDUP_GATES = [("(F32, 1 thread", 1.5), ("(F16, 1 thread", None)]
 # stream cost is not perfectly divisible across the batch; 2% covers it.
 BATCH_RATIO_EPS = 0.02
 BATCH_SWEEP = [1, 2, 4, 8]
+
+# The worker sweep's tail-latency gate: p99 at the top worker count may
+# not exceed this multiple of p99 at 1 worker — unless both sit under
+# the absolute floor, where scheduler jitter on a shared runner
+# dominates real signal.
+P99_BLOWUP_FACTOR = 3.0
+P99_ABS_FLOOR_MS = 50.0
+SWEEP_TRANSPORTS = ["in-process", "tcp"]
 
 
 def load(path):
@@ -146,12 +164,18 @@ def baseline_gate(base, cur, max_regress, failures):
             )
 
 
-def serve_batch_gate(path, failures):
+def serve_gates(path, failures):
+    """Load BENCH_serve.json once and run the batch + sweep gates."""
     with open(path) as f:
         d = json.load(f)
     if d.get("bench") != "serve":
         failures.append(f"{path}: not a serve bench file")
         return
+    serve_batch_gate(path, d, failures)
+    serve_sweep_gate(path, d, failures)
+
+
+def serve_batch_gate(path, d, failures):
     entries = d.get("batch_entries")
     if not isinstance(entries, list) or not entries:
         failures.append(
@@ -189,6 +213,67 @@ def serve_batch_gate(path, failures):
                 print(f"ok: {line}")
 
 
+def serve_sweep_gate(path, d, failures):
+    sweep = d.get("sweep")
+    if not isinstance(sweep, dict) or not isinstance(sweep.get("entries"), list) \
+            or not sweep["entries"]:
+        failures.append(
+            f"{path}: no sweep section — the worker/transport sweep has "
+            "nothing to gate (bench section renamed?)"
+        )
+        return
+    rows = sweep["entries"]
+    by_transport = {}
+    for e in rows:
+        by_transport.setdefault(e.get("transport"), []).append(e)
+    worker_sets = {}
+    for t in SWEEP_TRANSPORTS:
+        if t not in by_transport:
+            failures.append(f"{path}: sweep has no `{t}` entries")
+            continue
+        workers = [e["workers"] for e in by_transport[t]]
+        if workers != sorted(set(workers)):
+            failures.append(
+                f"{path}: `{t}` sweep worker counts not strictly ascending: {workers}"
+            )
+        worker_sets[t] = workers
+    if len(set(map(tuple, worker_sets.values()))) > 1:
+        failures.append(
+            f"{path}: transports sweep different worker sets: {worker_sets}"
+        )
+    for e in rows:
+        total = e["ok"] + e["failed"] + e["rejected"]
+        if e["ok"] <= 0 or total != e["requests"]:
+            failures.append(
+                f"sweep {e.get('transport')}@{e.get('workers')}w: requests don't "
+                f"add up (ok {e['ok']} + failed {e['failed']} + rejected "
+                f"{e['rejected']} != {e['requests']})"
+            )
+    for t, entries in sorted(by_transport.items()):
+        if len(entries) < 2:
+            continue
+        lo, hi = entries[0], entries[-1]
+        if lo["req_per_s"] > 0:
+            print(
+                f"advisory: `{t}` throughput {lo['req_per_s']:.1f} req/s @ "
+                f"{lo['workers']}w → {hi['req_per_s']:.1f} req/s @ "
+                f"{hi['workers']}w ({hi['req_per_s'] / lo['req_per_s']:.2f}x)"
+            )
+        line = (
+            f"`{t}` p99 {lo['p99_ms']:.2f} ms @ {lo['workers']}w → "
+            f"{hi['p99_ms']:.2f} ms @ {hi['workers']}w "
+            f"(gate <= {P99_BLOWUP_FACTOR}x past the {P99_ABS_FLOOR_MS} ms floor)"
+        )
+        blown = (
+            hi["p99_ms"] > P99_ABS_FLOOR_MS
+            and hi["p99_ms"] > P99_BLOWUP_FACTOR * max(lo["p99_ms"], 1e-9)
+        )
+        if blown:
+            failures.append(f"sweep {line}")
+        else:
+            print(f"ok: {line}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline")
@@ -197,7 +282,8 @@ def main():
     ap.add_argument(
         "--serve",
         metavar="PATH",
-        help="also gate the batch_entries curve of a BENCH_serve.json",
+        help="also gate the batch_entries curve and worker/transport sweep "
+        "of a BENCH_serve.json",
     )
     args = ap.parse_args()
     base, cur = load(args.baseline), load(args.current)
@@ -206,7 +292,7 @@ def main():
     speedup_gate(cur, failures)
     baseline_gate(base, cur, args.max_regress, failures)
     if args.serve:
-        serve_batch_gate(args.serve, failures)
+        serve_gates(args.serve, failures)
 
     if failures:
         print("\nFAIL:", file=sys.stderr)
