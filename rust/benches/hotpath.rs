@@ -5,7 +5,8 @@
 //!
 //! Besides the printed table, the run emits a machine-readable
 //! `BENCH_hotpath.json` (per-entry wall time, MACs/s where the entry is
-//! a conv workload, the thread count and a host fingerprint) so the
+//! a conv workload, the thread count, a host fingerprint, and the
+//! benched conv's packed resident weight bytes) so the
 //! perf trajectory is tracked across PRs instead of only printed. The
 //! conv workload is additionally timed on the *pre-optimization*
 //! kernel (`testkit::reference_run_tile` — the "… reference kernel"
@@ -73,10 +74,17 @@ fn host_fingerprint(threads: usize) -> String {
     format!("{} {cpu} x{threads}", std::env::consts::OS)
 }
 
-fn write_json(path: &str, threads: usize, tiny: bool, host: &str, entries: &[Entry]) {
+fn write_json(
+    path: &str,
+    threads: usize,
+    tiny: bool,
+    host: &str,
+    packed_weight_bytes: u64,
+    entries: &[Entry],
+) {
     let mut body = String::new();
     body.push_str(&format!(
-        "{{\n  \"bench\": \"hotpath\",\n  \"threads\": {threads},\n  \"tiny\": {tiny},\n  \"host\": \"{}\",\n  \"entries\": [\n",
+        "{{\n  \"bench\": \"hotpath\",\n  \"threads\": {threads},\n  \"tiny\": {tiny},\n  \"host\": \"{}\",\n  \"packed_weight_bytes\": {packed_weight_bytes},\n  \"entries\": [\n",
         json_escape(host)
     ));
     for (i, e) in entries.iter().enumerate() {
@@ -233,7 +241,7 @@ fn main() {
         it(200),
         || {
             let s = pack_weights(&l, &w, 16);
-            std::hint::black_box(s.words.len());
+            std::hint::black_box(s.word_count());
         },
     );
     record(&mut entries, s, None);
@@ -330,6 +338,9 @@ fn main() {
         threads,
         tiny,
         &host_fingerprint(threads),
+        // True resident footprint of the benched conv's weight stream
+        // (u64 bitplanes, 1 bit/weight) — `bench-smoke` asserts it.
+        stream.packed_bytes(),
         &entries,
     );
 }

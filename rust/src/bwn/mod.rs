@@ -11,5 +11,8 @@ pub mod stream;
 pub mod wbuf;
 
 pub use fold::{fold_channel, fold_layer, RawChannelParams};
-pub use stream::{binarize, pack_weights, unpack_word, WeightStream};
+pub use stream::{
+    binarize, network_packed_bytes, pack_weights, packed_footprint_bytes, unpack_word,
+    PackedLayerWeights, WeightStream,
+};
 pub use wbuf::WeightBuffer;

@@ -1,8 +1,14 @@
 //! The binary-weight stream: the only large input the chip reads per
 //! layer (feature maps stay stationary). 16× smaller than streaming FP16
 //! weights — the source of the paper's I/O-energy reduction.
+//!
+//! Storage is *actually* 1 bit/weight: the `C`-bit stream words are laid
+//! end-to-end into dense `u64` bitplanes (64 taps-by-channel weights per
+//! word), so a resident stream costs `⌈words·C / 64⌉ · 8` bytes — the
+//! footprint `packed_bytes()` reports and `ServiceMetrics` surfaces. The
+//! word/weight accessors below decode straight from the planes.
 
-use crate::network::ConvLayer;
+use crate::network::{ConvLayer, Network};
 
 /// Binarize a real-valued weight: `sign(w)` with `sign(0) := +1`.
 #[inline]
@@ -12,14 +18,17 @@ pub fn binarize(w: f32) -> bool {
 
 /// One layer's weight stream: `C`-bit words in Algorithm-1 order, padded
 /// with +1 weights when `n_out` is not a multiple of `C` (the idle
-/// Tile-PU channels).
+/// Tile-PU channels), stored as dense `u64` bitplanes.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WeightStream {
     /// Output-channel parallelism the stream was packed for.
     pub c: usize,
-    /// Stream words, one per (c_out-tile, Δ, c_in) step; bit `b` of a
-    /// word is the weight for output channel `tile·C + b`.
-    pub words: Vec<u16>,
+    /// Dense bitplanes: stream bit `g = word_index·C + lane` lives at bit
+    /// `g % 64` of `planes[g / 64]`. A `C ≤ 16`-bit word straddles at
+    /// most two planes. Bits past the last word are zero padding.
+    planes: Vec<u64>,
+    /// Number of `C`-bit stream words packed into `planes`.
+    word_count: usize,
     /// Layout for unpacking: (n_out tiles, taps, n_in per group view).
     pub n_out: usize,
     pub n_in_eff: usize,
@@ -30,9 +39,9 @@ pub struct WeightStream {
 /// (flattened, row-major) into the stream order of Tbl I.
 ///
 /// `c` is the chip's output-channel parallelism (16 on the taped-out
-/// chip; `c <= 16` supported since words are `u16`).
+/// chip; `c <= 16` supported since words decode to `u16`).
 pub fn pack_weights(layer: &ConvLayer, weights: &[f32], c: usize) -> WeightStream {
-    assert!(c <= 16, "stream words are u16");
+    assert!((1..=16).contains(&c), "stream words decode to u16");
     let n_in_eff = layer.n_in / layer.groups;
     let taps = layer.k * layer.k;
     assert_eq!(
@@ -42,11 +51,13 @@ pub fn pack_weights(layer: &ConvLayer, weights: &[f32], c: usize) -> WeightStrea
         layer.name
     );
     let n_tiles = layer.n_out.div_ceil(c);
-    let mut words = Vec::with_capacity(n_tiles * taps * n_in_eff);
+    let word_count = n_tiles * taps * n_in_eff;
+    let mut planes = vec![0u64; (word_count * c).div_ceil(64)];
+    let mut widx = 0usize;
     for tile in 0..n_tiles {
         for tap in 0..taps {
             for ci in 0..n_in_eff {
-                let mut word = 0u16;
+                let mut word = 0u64;
                 for b in 0..c {
                     let co = tile * c + b;
                     // Padded (idle) channels stream +1.
@@ -59,13 +70,20 @@ pub fn pack_weights(layer: &ConvLayer, weights: &[f32], c: usize) -> WeightStrea
                         word |= 1 << b;
                     }
                 }
-                words.push(word);
+                let g = widx * c;
+                let (lo, sh) = (g / 64, g % 64);
+                planes[lo] |= word << sh;
+                if sh + c > 64 {
+                    planes[lo + 1] |= word >> (64 - sh);
+                }
+                widx += 1;
             }
         }
     }
     WeightStream {
         c,
-        words,
+        planes,
+        word_count,
         n_out: layer.n_out,
         n_in_eff,
         k: layer.k,
@@ -75,7 +93,28 @@ pub fn pack_weights(layer: &ConvLayer, weights: &[f32], c: usize) -> WeightStrea
 impl WeightStream {
     /// Total bits on the wire for this layer (words × C).
     pub fn wire_bits(&self) -> u64 {
-        (self.words.len() * self.c) as u64
+        (self.word_count * self.c) as u64
+    }
+
+    /// Number of `C`-bit stream words.
+    pub fn word_count(&self) -> usize {
+        self.word_count
+    }
+
+    /// Number of `u64` bitplane words backing the stream.
+    pub fn packed_words(&self) -> usize {
+        self.planes.len()
+    }
+
+    /// True resident footprint of the packed stream, in bytes.
+    pub fn packed_bytes(&self) -> u64 {
+        (self.planes.len() * 8) as u64
+    }
+
+    /// Zero-fill bits in the last bitplane word (`< 64`): the difference
+    /// between the `u64` storage and the wire bits.
+    pub fn padding_bits(&self) -> u64 {
+        (self.planes.len() * 64) as u64 - self.wire_bits()
     }
 
     /// Stream word index for (c_out tile, tap, c_in).
@@ -83,12 +122,29 @@ impl WeightStream {
         (tile * self.k * self.k + tap) * self.n_in_eff + ci
     }
 
+    /// Decode stream word `wi` (the low `C` bits are the tile's signs).
+    #[inline]
+    pub fn word(&self, wi: usize) -> u16 {
+        debug_assert!(wi < self.word_count);
+        let g = wi * self.c;
+        let (lo, sh) = (g / 64, g % 64);
+        let mut bits = self.planes[lo] >> sh;
+        if sh + self.c > 64 {
+            bits |= self.planes[lo + 1] << (64 - sh);
+        }
+        (bits as u16) & (u16::MAX >> (16 - self.c))
+    }
+
+    /// Sign bit for output channel `co`, input `ci`, tap Δ (1 = +1).
+    #[inline]
+    pub fn weight_bit(&self, co: usize, ci: usize, tap: usize) -> bool {
+        let g = self.word_index(co / self.c, tap, ci) * self.c + co % self.c;
+        (self.planes[g / 64] >> (g % 64)) & 1 != 0
+    }
+
     /// Signed weight (±1.0) for output channel `co`, input `ci`, tap Δ.
     pub fn weight(&self, co: usize, ci: usize, tap: usize) -> f32 {
-        let tile = co / self.c;
-        let bit = co % self.c;
-        let w = self.words[self.word_index(tile, tap, ci)];
-        if w & (1 << bit) != 0 {
+        if self.weight_bit(co, ci, tap) {
             1.0
         } else {
             -1.0
@@ -119,6 +175,75 @@ pub fn unpack_word(word: u16, c: usize) -> Vec<f32> {
         .collect()
 }
 
+/// Resident packed footprint of one layer's stream at parallelism `c`,
+/// in bytes — computed from the layer shape alone, so lazily-built
+/// params (`engine::LazyParams`) can report it without materializing
+/// weights. Matches `WeightStream::packed_bytes()` exactly.
+pub fn packed_footprint_bytes(layer: &ConvLayer, c: usize) -> u64 {
+    let words = (layer.n_out.div_ceil(c) * layer.k * layer.k * (layer.n_in / layer.groups)) as u64;
+    (words * c as u64).div_ceil(64) * 8
+}
+
+/// Resident packed footprint of a whole network's weight streams, bytes.
+pub fn network_packed_bytes(net: &Network, c: usize) -> u64 {
+    net.steps
+        .iter()
+        .map(|s| packed_footprint_bytes(&s.layer, c))
+        .sum()
+}
+
+/// One layer's binary weights expanded from the packed bitplanes into
+/// the `u32` sign masks the datapath kernel XORs against FP32 bit
+/// patterns (`0` = +1, `0x8000_0000` = −1), laid out
+/// `[co][tap][c_in]` so `channel(co)` is the contiguous `wmask` plane
+/// `run_tile`/`run_tile_batch` consume.
+///
+/// Build this **once per layer execution** and share it across tiles,
+/// chips, mesh steps and batch slots — it hoists the per-output-channel
+/// `weight() > 0` decode out of the hot path. It is scratch for one
+/// pass, not a resident cache: keeping it alive would cost 32
+/// bits/weight and undo the stream's ~32× packed-footprint advantage.
+#[derive(Debug, Clone)]
+pub struct PackedLayerWeights {
+    masks: Vec<u32>,
+    /// Plane stride: taps × n_in_eff masks per output channel.
+    span: usize,
+    pub n_out: usize,
+}
+
+impl PackedLayerWeights {
+    pub fn new(stream: &WeightStream) -> Self {
+        let taps = stream.k * stream.k;
+        let nie = stream.n_in_eff;
+        let span = taps * nie;
+        let mut masks = vec![0u32; stream.n_out * span];
+        for tile in 0..stream.n_out.div_ceil(stream.c) {
+            let co_hi = ((tile + 1) * stream.c).min(stream.n_out);
+            for tap in 0..taps {
+                for ci in 0..nie {
+                    // One word decode serves up to C output channels.
+                    let word = stream.word(stream.word_index(tile, tap, ci));
+                    for co in tile * stream.c..co_hi {
+                        let neg = (word >> (co - tile * stream.c)) & 1 == 0;
+                        masks[co * span + tap * nie + ci] = if neg { 0x8000_0000 } else { 0 };
+                    }
+                }
+            }
+        }
+        PackedLayerWeights {
+            masks,
+            span,
+            n_out: stream.n_out,
+        }
+    }
+
+    /// The `taps × n_in_eff` sign-mask plane for output channel `co`.
+    #[inline]
+    pub fn channel(&self, co: usize) -> &[u32] {
+        &self.masks[co * self.span..(co + 1) * self.span]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,7 +261,7 @@ mod tests {
         let l = layer(16, 64, 3);
         let w = vec![1.0f32; 64 * 16 * 9];
         let s = pack_weights(&l, &w, 16);
-        assert_eq!(s.words.len(), 4 * 9 * 16);
+        assert_eq!(s.word_count(), 4 * 9 * 16);
         assert_eq!(s.wire_bits(), 4 * 9 * 16 * 16);
     }
 
@@ -154,7 +279,7 @@ mod tests {
         let s = pack_weights(&l, &w, 16);
         // Word for tile 1, tap 0, ci 0: bits 0..3 are real (−1 → 0),
         // bits 4..15 padding (+1 → 1).
-        let word = s.words[s.word_index(1, 0, 0)];
+        let word = s.word(s.word_index(1, 0, 0));
         assert_eq!(word & 0x000f, 0);
         assert_eq!(word & 0xfff0, 0xfff0);
     }
@@ -224,7 +349,7 @@ mod tests {
                 let tile = n_out / 16;
                 for tap in 0..k * k {
                     for ci in 0..nie {
-                        let word = s.words[s.word_index(tile, tap, ci)];
+                        let word = s.word(s.word_index(tile, tap, ci));
                         for b in tail..16 {
                             if word & (1 << b) == 0 {
                                 return Err(format!(
@@ -240,6 +365,114 @@ mod tests {
     }
 
     #[test]
+    fn round_trip_when_word_count_not_divisible_by_64() {
+        // Deliberately awkward bitplane shapes: narrow `c` so stream
+        // words straddle u64 boundaries, `n_in·k·k` and the word count
+        // both not multiples of 64, plus the single-channel degenerate.
+        testkit::check("pack/unpack vs u64 boundaries", 0xb17e5, |rng| {
+            let c = 1 + rng.next_below(16); // any parallelism 1..=16
+            let k = [1usize, 3][rng.next_below(2)];
+            let n_in = 1 + rng.next_below(13); // n_in·k·k rarely % 64 == 0
+            let n_out = 1 + rng.next_below(33);
+            let l = layer(n_in, n_out, k);
+            let w: Vec<f32> = (0..n_out * n_in * k * k).map(|_| rng.next_sign()).collect();
+            let s = pack_weights(&l, &w, c);
+            // Every word decodes to what a direct re-pack would emit.
+            for wi in 0..s.word_count() {
+                if s.word(wi) >> c != 0 {
+                    return Err(format!("word {wi} has bits above lane {c}"));
+                }
+            }
+            let dense = s.unpack_dense();
+            for (i, (&orig, &got)) in w.iter().zip(&dense).enumerate() {
+                if orig != got {
+                    return Err(format!("c={c} index {i}: {orig} → {got}"));
+                }
+            }
+            // Storage identity: wire bits = packed u64 words × 64 − padding.
+            if s.wire_bits() != s.packed_words() as u64 * 64 - s.padding_bits() {
+                return Err(format!(
+                    "wire {} != {}·64 − {}",
+                    s.wire_bits(),
+                    s.packed_words(),
+                    s.padding_bits()
+                ));
+            }
+            if s.padding_bits() >= 64 {
+                return Err(format!("padding {} ≥ 64", s.padding_bits()));
+            }
+            if s.packed_bytes() != packed_footprint_bytes(&l, c) {
+                return Err(format!(
+                    "packed_bytes {} != analytic {}",
+                    s.packed_bytes(),
+                    packed_footprint_bytes(&l, c)
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn single_channel_layer_packs_one_bit_per_word() {
+        let l = layer(1, 1, 1);
+        let s = pack_weights(&l, &[-2.0], 1);
+        assert_eq!(s.word_count(), 1);
+        assert_eq!(s.wire_bits(), 1);
+        assert_eq!(s.packed_words(), 1);
+        assert_eq!(s.padding_bits(), 63);
+        assert_eq!(s.word(0), 0);
+        assert_eq!(s.unpack_dense(), vec![-1.0]);
+        assert_eq!(s.packed_bytes(), packed_footprint_bytes(&l, 1));
+    }
+
+    #[test]
+    fn packed_layer_weights_match_weight_accessor() {
+        testkit::check("mask planes vs weight()", 0x9a5c, |rng| {
+            let c = 1 + rng.next_below(16);
+            let k = [1usize, 3][rng.next_below(2)];
+            let groups = [1usize, 2][rng.next_below(2)];
+            let n_in = groups * (1 + rng.next_below(6));
+            let n_out = groups * (1 + rng.next_below(12));
+            let l = layer(n_in, n_out, k).with_groups(groups);
+            let nie = n_in / groups;
+            let w: Vec<f32> = (0..n_out * nie * k * k).map(|_| rng.next_sign()).collect();
+            let s = pack_weights(&l, &w, c);
+            let packed = PackedLayerWeights::new(&s);
+            for co in 0..n_out {
+                let plane = packed.channel(co);
+                for tap in 0..k * k {
+                    for ci in 0..nie {
+                        let want = if s.weight(co, ci, tap) > 0.0 {
+                            0
+                        } else {
+                            0x8000_0000
+                        };
+                        if plane[tap * nie + ci] != want {
+                            return Err(format!("mask mismatch at co={co} tap={tap} ci={ci}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn network_packed_bytes_sums_layers() {
+        use crate::network::TensorRef;
+        let mut net = Network::new("t", 16, 8, 8);
+        let s0 = net.push(layer(16, 64, 3), TensorRef::Input, None);
+        net.push(layer(64, 20, 1), TensorRef::Step(s0), None);
+        let want: u64 = net
+            .steps
+            .iter()
+            .map(|s| packed_footprint_bytes(&s.layer, 16))
+            .sum();
+        assert_eq!(network_packed_bytes(&net, 16), want);
+        assert!(want > 0);
+    }
+
+    #[test]
     fn sign_zero_is_plus_one() {
         assert!(binarize(0.0));
         assert!(binarize(1e-30));
@@ -252,7 +485,7 @@ mod tests {
         let w: Vec<f32> = (0..32 * 4 * 9).map(|i| i as f32 - 300.0).collect();
         let s = pack_weights(&l, &w, 16);
         assert_eq!(s.n_in_eff, 4);
-        assert_eq!(s.words.len(), 2 * 9 * 4);
+        assert_eq!(s.word_count(), 2 * 9 * 4);
         assert_eq!(s.wire_bits(), l.weight_bits());
     }
 

@@ -22,6 +22,9 @@ pub struct WBufStats {
     /// Number of input-channel tiles the layer needed (> 1 when the
     /// layer's weights exceed the buffer).
     pub cin_tiles: u64,
+    /// True resident footprint of the layer's packed stream, in bytes
+    /// (`u64` bitplanes at 1 bit/weight — `WeightStream::packed_bytes`).
+    pub packed_bytes: u64,
 }
 
 /// The weight buffer of one chip.
@@ -59,7 +62,7 @@ impl WeightBuffer {
     pub fn run_layer(&self, layer: &ConvLayer, stream: &WeightStream, tile_pixels: u64) -> WBufStats {
         assert_eq!(stream.c, self.c);
         let cin_tiles = self.cin_tiles(layer) as u64;
-        let stream_words = stream.words.len() as u64;
+        let stream_words = stream.word_count() as u64;
         // Each word is used `tile_pixels` times per layer; the first use
         // comes from the stream, the rest from the buffer.
         let total_uses = stream_words * tile_pixels.max(1);
@@ -67,6 +70,7 @@ impl WeightBuffer {
             stream_words,
             buffer_reads: total_uses - stream_words,
             cin_tiles,
+            packed_bytes: stream.packed_bytes(),
         }
     }
 }
@@ -116,6 +120,9 @@ mod tests {
         assert_eq!(stats.stream_words, 4 * 9 * 16);
         assert_eq!(stats.buffer_reads, (4 * 9 * 16) * 63);
         assert_eq!(stats.cin_tiles, 1);
+        // 4·9·16 words × 16 bits = 9216 bits → 144 u64 planes.
+        assert_eq!(stats.packed_bytes, s.packed_bytes());
+        assert_eq!(stats.packed_bytes, 144 * 8);
         // Total SCM traffic must equal uses exactly.
         assert_eq!(
             stats.stream_words + stats.buffer_reads,

@@ -673,6 +673,16 @@ impl Engine {
         self.net.in_ch * self.net.in_h * self.net.in_w
     }
 
+    /// Resident packed binary-weight footprint of the whole network,
+    /// in bytes: the `u64` bitplanes every layer's
+    /// [`WeightStream`](crate::bwn::WeightStream) occupies at
+    /// 1 bit/weight with this chip's `C`. This is the serving-side
+    /// working set a hosted model costs, surfaced per model by
+    /// [`service::ServiceMetrics`].
+    pub fn resident_weight_bytes(&self) -> u64 {
+        crate::bwn::network_packed_bytes(&self.net, self.cfg.c)
+    }
+
     /// Run one inference.
     pub fn infer(&self, input: &[f32]) -> Result<Vec<f32>, EngineError> {
         self.backend.as_dyn().infer(input)
@@ -727,6 +737,7 @@ impl Engine {
             self.shared_backend(),
             &self.net.name,
             self.net.total_ops(),
+            self.resident_weight_bytes(),
             inputs,
             opts,
         )

@@ -160,11 +160,13 @@ fn stats_from_latencies(
 /// Serve `inputs` FIFO through a temporary single-model
 /// [`InferenceService`] over `opts.workers` threads. Per-request
 /// results come back in submission order; `total_ops` is the
-/// per-inference op count used for the throughput figure.
+/// per-inference op count used for the throughput figure and
+/// `weight_bytes` the model's resident packed-weight footprint.
 pub(crate) fn serve_outcome_on(
     backend: Arc<dyn Backend>,
     model: &str,
     total_ops: u64,
+    weight_bytes: u64,
     inputs: &[Vec<f32>],
     opts: &ServeOptions,
 ) -> Result<ServeOutcome, EngineError> {
@@ -184,6 +186,7 @@ pub(crate) fn serve_outcome_on(
         backend,
         inputs[0].len(),
         total_ops,
+        weight_bytes,
         workers,
         opts.queue_depth,
         // Backpressure like the historical bounded sync_channel:
@@ -256,7 +259,7 @@ mod tests {
         opts: &ServeOptions,
         backend: Arc<dyn Backend>,
     ) -> ServeOutcome {
-        serve_outcome_on(backend, "test", 10, inputs, opts).unwrap()
+        serve_outcome_on(backend, "test", 10, 0, inputs, opts).unwrap()
     }
 
     #[test]
@@ -304,7 +307,8 @@ mod tests {
                 queue_depth: 0,
             },
         ] {
-            let err = serve_outcome_on(Arc::new(Doubler), "test", 1, &inputs, &opts).unwrap_err();
+            let err =
+                serve_outcome_on(Arc::new(Doubler), "test", 1, 0, &inputs, &opts).unwrap_err();
             assert!(matches!(err, EngineError::Builder(_)), "{err}");
             assert!(err.to_string().contains("≥ 1"), "{err}");
         }

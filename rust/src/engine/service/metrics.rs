@@ -102,6 +102,7 @@ impl MetricsAccum {
         queued: usize,
         in_flight: usize,
         total_ops: u64,
+        weight_bytes: u64,
     ) -> ModelMetrics {
         let mut lat = self.window.clone();
         lat.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
@@ -138,6 +139,7 @@ impl MetricsAccum {
             },
             batch_max: self.batch_max,
             weight_traffic_saved: self.weight_saved,
+            weight_bytes,
             rejected_backpressure: self.rejected,
             shed_bytes: self.shed_bytes,
             queue_full_events: self.queue_full_events,
@@ -183,6 +185,11 @@ pub struct ModelMetrics {
     /// Cumulative weight-stream words the model's batch passes saved
     /// vs sequential execution.
     pub weight_traffic_saved: u64,
+    /// Resident packed binary-weight footprint of the hosted network,
+    /// in bytes (1 bit/weight `u64` bitplanes — the serving-side
+    /// working set a resident model costs; 0 for opaque backends whose
+    /// weights the service cannot see).
+    pub weight_bytes: u64,
     /// Submissions shed at admission (queue full under `Reject`, or
     /// `Timeout` budget expired). Excluded from `submitted`.
     pub rejected_backpressure: u64,
@@ -229,6 +236,16 @@ impl ServiceMetrics {
         self.per_model.iter().map(|m| m.weight_traffic_saved).sum()
     }
 
+    /// Resident packed-weight bytes across every still-hosted model
+    /// (hot-removed models no longer hold their stream).
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.per_model
+            .iter()
+            .filter(|m| !m.removed)
+            .map(|m| m.weight_bytes)
+            .sum()
+    }
+
     /// Submissions shed at admission, service-wide.
     pub fn total_rejected_backpressure(&self) -> u64 {
         self.per_model.iter().map(|m| m.rejected_backpressure).sum()
@@ -259,7 +276,7 @@ impl ServiceMetrics {
     /// The `serve` CLI's per-model metrics table.
     pub fn render_table(&self) -> String {
         let mut out = format!(
-            "{:<28} {:>6} {:>6} {:>5} {:>5} {:>5} {:>9} {:>9} {:>9} {:>8} {:>9} {:>6} {:>6} {:>12}\n",
+            "{:<28} {:>6} {:>6} {:>5} {:>5} {:>5} {:>9} {:>9} {:>9} {:>8} {:>9} {:>6} {:>6} {:>12} {:>8}\n",
             "model",
             "sub",
             "ok",
@@ -273,11 +290,12 @@ impl ServiceMetrics {
             "MOp/s",
             "avg B",
             "max B",
-            "words saved"
+            "words saved",
+            "wt KiB"
         );
         for m in &self.per_model {
             out.push_str(&format!(
-                "{:<28} {:>6} {:>6} {:>5} {:>5} {:>5} {:>9.2} {:>9.2} {:>9.2} {:>8.1} {:>9.2} {:>6.2} {:>6} {:>12}{}\n",
+                "{:<28} {:>6} {:>6} {:>5} {:>5} {:>5} {:>9.2} {:>9.2} {:>9.2} {:>8.1} {:>9.2} {:>6.2} {:>6} {:>12} {:>8.1}{}\n",
                 m.model,
                 m.submitted,
                 m.completed,
@@ -292,6 +310,7 @@ impl ServiceMetrics {
                 m.batch_mean,
                 m.batch_max,
                 m.weight_traffic_saved,
+                m.weight_bytes as f64 / 1024.0,
                 if m.removed { "  (removed)" } else { "" }
             ));
         }

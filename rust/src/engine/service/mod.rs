@@ -323,6 +323,9 @@ struct Shard {
     backend: Arc<dyn Backend>,
     input_len: usize,
     total_ops: u64,
+    /// Resident packed-weight footprint of the hosted network, in bytes
+    /// (0 for opaque backends whose weights the service cannot see).
+    weight_bytes: u64,
     queue_depth: usize,
     /// How queued requests coalesce into batch-resident passes.
     batch: BatchPolicy,
@@ -345,6 +348,7 @@ impl Shard {
         backend: Arc<dyn Backend>,
         input_len: usize,
         total_ops: u64,
+        weight_bytes: u64,
         queue_depth: usize,
         batch: BatchPolicy,
     ) -> Shard {
@@ -353,6 +357,7 @@ impl Shard {
             backend,
             input_len,
             total_ops,
+            weight_bytes,
             queue_depth,
             batch,
             removed_hint: AtomicBool::new(false),
@@ -708,6 +713,7 @@ enum PendingModel {
         backend: Arc<dyn Backend>,
         input_len: usize,
         total_ops: u64,
+        weight_bytes: u64,
     },
 }
 
@@ -768,6 +774,7 @@ impl ServiceBuilder {
                 backend: engine.shared_backend(),
                 input_len: engine.input_len(),
                 total_ops: engine.network().total_ops(),
+                weight_bytes: engine.resident_weight_bytes(),
             },
         ));
         self
@@ -845,7 +852,8 @@ impl ServiceBuilder {
         let registry = self.registry.unwrap_or_else(NetworkRegistry::builtin);
         let mut shards = Vec::with_capacity(self.models.len());
         for (name, pending) in self.models {
-            let (backend, input_len, total_ops, depth_override, batch) = match pending {
+            let (backend, input_len, total_ops, weight_bytes, depth_override, batch) = match pending
+            {
                 PendingModel::Config(config) => {
                     if config.queue_depth == Some(0) {
                         return Err(EngineError::Builder(format!(
@@ -864,6 +872,7 @@ impl ServiceBuilder {
                         engine.shared_backend(),
                         engine.input_len(),
                         engine.network().total_ops(),
+                        engine.resident_weight_bytes(),
                         depth,
                         batch,
                     )
@@ -872,13 +881,15 @@ impl ServiceBuilder {
                     backend,
                     input_len,
                     total_ops,
-                } => (backend, input_len, total_ops, None, self.batch),
+                    weight_bytes,
+                } => (backend, input_len, total_ops, weight_bytes, None, self.batch),
             };
             shards.push(Shard::new(
                 name,
                 backend,
                 input_len,
                 total_ops,
+                weight_bytes,
                 depth_override.unwrap_or(self.queue_depth),
                 batch,
             ));
@@ -920,6 +931,7 @@ impl InferenceService {
         backend: Arc<dyn Backend>,
         input_len: usize,
         total_ops: u64,
+        weight_bytes: u64,
         workers: usize,
         queue_depth: usize,
         admission: AdmissionPolicy,
@@ -930,6 +942,7 @@ impl InferenceService {
             backend,
             input_len,
             total_ops,
+            weight_bytes,
             queue_depth,
             BatchPolicy::default(),
         );
@@ -1136,6 +1149,7 @@ impl InferenceService {
             engine.shared_backend(),
             engine.input_len(),
             engine.network().total_ops(),
+            engine.resident_weight_bytes(),
             config.queue_depth.unwrap_or(self.default_depth),
             config.batch_policy(self.default_batch),
         );
@@ -1215,8 +1229,14 @@ impl InferenceService {
                 .iter()
                 .map(|s| {
                     let st = s.state.lock().unwrap();
-                    st.metrics
-                        .snapshot(&s.name, st.removed, st.queue.len(), st.in_flight, s.total_ops)
+                    st.metrics.snapshot(
+                        &s.name,
+                        st.removed,
+                        st.queue.len(),
+                        st.in_flight,
+                        s.total_ops,
+                        s.weight_bytes,
+                    )
                 })
                 .collect(),
         }
@@ -1335,7 +1355,7 @@ mod tests {
     }
 
     fn single_doubler(workers: usize, depth: usize, admission: AdmissionPolicy) -> InferenceService {
-        InferenceService::single("d", Arc::new(Doubler), 1, 10, workers, depth, admission)
+        InferenceService::single("d", Arc::new(Doubler), 1, 10, 0, workers, depth, admission)
     }
 
     #[test]
@@ -1407,6 +1427,7 @@ mod tests {
             Arc::new(gated),
             1,
             1,
+            0,
             1,
             1,
             AdmissionPolicy::Reject,
@@ -1463,6 +1484,7 @@ mod tests {
             Arc::new(gated),
             1,
             1,
+            0,
             1,
             1,
             AdmissionPolicy::Timeout(40),
@@ -1511,6 +1533,7 @@ mod tests {
             Arc::new(gated),
             1,
             1,
+            0,
             1,
             1,
             AdmissionPolicy::Block,
@@ -1566,6 +1589,7 @@ mod tests {
             Arc::new(gated),
             1,
             1,
+            0,
             2,
             8,
             AdmissionPolicy::Block,
@@ -1603,6 +1627,7 @@ mod tests {
             Arc::new(gated),
             1,
             1,
+            0,
             1,
             8,
             AdmissionPolicy::Block,

@@ -79,19 +79,24 @@ pub fn table2() -> String {
         (model::network("resnet34@1024x2048").unwrap(), "2048x1024"),
         (model::network("resnet152@1024x2048").unwrap(), "2048x1024"),
     ];
+    let c = ChipConfig::default().c;
     let mut out = String::new();
     out.push_str("Table II — data volumes (binary weights, 16-bit FMs)\n");
     out.push_str(&format!(
-        "{:<12} {:>10} {:>10} {:>10} {:>10}\n",
-        "network", "resolution", "weights", "all FMs", "WC mem"
+        "{:<12} {:>10} {:>10} {:>10} {:>10} {:>10}\n",
+        "network", "resolution", "weights", "packed", "all FMs", "WC mem"
     ));
     for (net, res) in rows {
         let a = wcl::analyze(&net);
+        // "packed" is the resident u64-bitplane stream footprint
+        // (weights plus stream padding: tail channels of each C-block
+        // and the final partial plane word).
         out.push_str(&format!(
-            "{:<12} {:>10} {:>10} {:>10} {:>10}\n",
+            "{:<12} {:>10} {:>10} {:>10} {:>10} {:>10}\n",
             net.name,
             res,
             fmt_bits(net.weight_bits()),
+            fmt_bits(crate::bwn::network_packed_bytes(&net, c) * 8),
             fmt_bits(a.all_fm_bits(16)),
             fmt_bits(a.wcl_bits(16)),
         ));
@@ -461,6 +466,8 @@ mod tests {
         assert!(t.contains("ResNet-18"));
         assert!(t.contains("ResNet-152"));
         assert!(t.contains("6.4M"), "{t}");
+        // The resident-stream column sits beside the logical weights.
+        assert!(t.contains("packed"), "{t}");
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! thread count because each output pixel's rounding sequence lives
 //! entirely inside one kernel invocation.
 
-use crate::bwn::WeightStream;
+use crate::bwn::{PackedLayerWeights, WeightStream};
 use crate::network::ConvLayer;
 
 use super::datapath::{
@@ -91,6 +91,10 @@ pub fn run_layer_threads(
     let mut out = FeatureMap::zeros(l.n_out, ho, wo);
     let mut acc = AccessCounts::default();
     let plane = ho * wo;
+    // Expand the packed bitplanes into sign-mask planes once per layer;
+    // every worker below borrows the same expansion.
+    let packed = PackedLayerWeights::new(p.stream);
+    let packed = &packed;
     let workers = resolve_threads(threads).min(l.n_out).max(1);
     if workers <= 1 {
         let data = &mut out.data;
@@ -98,7 +102,7 @@ pub fn run_layer_threads(
             |co: usize, oy: usize, ox: usize, v: f32| data[(co * ho + oy) * wo + ox] = v;
         acc.add(&run_tile(
             l,
-            p.stream,
+            packed,
             p.gamma,
             p.beta,
             (0, l.n_out),
@@ -127,7 +131,7 @@ pub fn run_layer_threads(
                     };
                     run_tile(
                         l,
-                        p.stream,
+                        packed,
                         p.gamma,
                         p.beta,
                         (co0, co1),
@@ -214,6 +218,10 @@ pub fn run_layer_batch_threads(
     fn view<'x>(fms: &[&'x FeatureMap]) -> Vec<&'x dyn InputSurface> {
         fms.iter().map(|f| *f as &dyn InputSurface).collect()
     }
+    // One sign-mask expansion per layer, shared by every worker and
+    // every batch slot of this pass.
+    let packed = PackedLayerWeights::new(p.stream);
+    let packed = &packed;
     let workers = resolve_threads(threads).min(l.n_out).max(1);
     if workers <= 1 {
         let ins = view(inputs);
@@ -225,7 +233,7 @@ pub fn run_layer_batch_threads(
         };
         acc.add(&run_tile_batch(
             l,
-            p.stream,
+            packed,
             p.gamma,
             p.beta,
             (0, l.n_out),
@@ -261,7 +269,7 @@ pub fn run_layer_batch_threads(
                     };
                     run_tile_batch(
                         l,
-                        p.stream,
+                        packed,
                         p.gamma,
                         p.beta,
                         (co0, co1),

@@ -18,14 +18,20 @@
 //! the same locality the silicon does — image window stationary, weights
 //! streaming past it:
 //!
+//! * the binary weights arrive pre-expanded: callers build one
+//!   [`PackedLayerWeights`] per layer execution (decoded straight from
+//!   the stream's `u64` bitplanes) and every tile, chip, mesh step and
+//!   batch slot borrows its per-channel `u32` sign-mask planes — no
+//!   per-tile/per-channel `weight() > 0` decode loop in the hot path;
 //! * the input rectangle is staged *once per output-channel block* into a
 //!   channel-interleaved scratch buffer ([`InputSurface::gather`]), so the
 //!   cache-hostile CHW channel stride is paid once, not `co1−co0` times;
 //! * each output row is split into **interior** pixels (every filter tap
 //!   in-bounds → a branch-free tap-outer/channel-inner loop over
-//!   contiguous staged slices, several adjacent pixels' independent
-//!   accumulator chains interleaved to hide FP latency) and **border**
-//!   pixels (the checked zero-padding path — a thin perimeter);
+//!   contiguous staged slices, `PIXEL_BLOCK` = 8 adjacent pixels'
+//!   independent accumulator chains interleaved in a mask-XOR-then-sum
+//!   shape the compiler can lift to SIMD) and **border** pixels (the
+//!   checked zero-padding path — a thin perimeter);
 //! * every [`AccessCounts`] field is computed in closed form by
 //!   [`analytic_counts`] instead of per-element increments. The original
 //!   per-element counting kernel is preserved verbatim as
@@ -43,7 +49,7 @@
 //! between exchange phases, exactly the paper's execution model) using
 //! the balanced [`partition_ranges`] split.
 
-use crate::bwn::WeightStream;
+use crate::bwn::PackedLayerWeights;
 use crate::network::ConvLayer;
 use crate::util::f16::round_f16;
 
@@ -257,9 +263,10 @@ pub fn partition_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
 
 /// Number of adjacent interior pixels accumulated in lockstep. Their
 /// per-pixel chains are independent, so the CPU overlaps the FP (and
-/// FP16-rounding) latencies of `PIXEL_BLOCK` chains while each pixel
-/// still sees its exact serial accumulation order.
-const PIXEL_BLOCK: usize = 4;
+/// FP16-rounding) latencies of `PIXEL_BLOCK` chains — a full 256-bit
+/// SIMD lane's worth of f32 — while each pixel still sees its exact
+/// serial accumulation order.
+pub(crate) const PIXEL_BLOCK: usize = 8;
 
 #[inline]
 fn sign_apply(x: f32, mask: u32) -> f32 {
@@ -345,6 +352,15 @@ fn accum_interior(
 /// Each pixel's accumulator chain keeps its exact serial order (so the
 /// result is bit-identical to the scalar path); interleaving the
 /// independent chains is what hides the FP add / FP16-rounding latency.
+///
+/// The lanes are explicitly chunked as fixed-size `[f32; PIXEL_BLOCK]`
+/// arrays over per-pixel staged subslices: the F32 path applies the
+/// sign mask to all lanes (XOR), then adds all lanes — per input
+/// channel, one XOR + one add per lane with no cross-lane dependency,
+/// which the auto-vectorizer lifts to one SIMD XOR + one SIMD add. Each
+/// lane's own chain still accumulates in the exact tap-outer /
+/// channel-inner serial order, so widening the block can never change
+/// a rounding step (cross-pixel chains were already independent).
 #[inline]
 #[allow(clippy::needless_range_loop)]
 fn accum_block(
@@ -359,28 +375,31 @@ fn accum_block(
     let mut v = [0.0f32; PIXEL_BLOCK];
     for (tap, &off) in tap_off.iter().enumerate() {
         let b0 = (center as isize + off) as usize;
-        let s0 = &stage[b0..b0 + nie];
-        let s1 = &stage[b0 + step..b0 + step + nie];
-        let s2 = &stage[b0 + 2 * step..b0 + 2 * step + nie];
-        let s3 = &stage[b0 + 3 * step..b0 + 3 * step + nie];
+        // One contiguous staged slice per pixel lane, length-checked
+        // once per tap so the inner loops are bounds-check free.
+        let s: [&[f32]; PIXEL_BLOCK] =
+            std::array::from_fn(|p| &stage[b0 + p * step..b0 + p * step + nie]);
         let ms = &wmask[tap * nie..(tap + 1) * nie];
         match prec {
             Precision::F32 => {
                 for i in 0..nie {
                     let m = ms[i];
-                    v[0] += sign_apply(s0[i], m);
-                    v[1] += sign_apply(s1[i], m);
-                    v[2] += sign_apply(s2[i], m);
-                    v[3] += sign_apply(s3[i], m);
+                    // Mask-XOR every lane, then sum every lane.
+                    let mut x = [0.0f32; PIXEL_BLOCK];
+                    for p in 0..PIXEL_BLOCK {
+                        x[p] = sign_apply(s[p][i], m);
+                    }
+                    for p in 0..PIXEL_BLOCK {
+                        v[p] += x[p];
+                    }
                 }
             }
             Precision::F16 => {
                 for i in 0..nie {
                     let m = ms[i];
-                    v[0] = round_f16(v[0] + sign_apply(s0[i], m));
-                    v[1] = round_f16(v[1] + sign_apply(s1[i], m));
-                    v[2] = round_f16(v[2] + sign_apply(s2[i], m));
-                    v[3] = round_f16(v[3] + sign_apply(s3[i], m));
+                    for p in 0..PIXEL_BLOCK {
+                        v[p] = round_f16(v[p] + sign_apply(s[p][i], m));
+                    }
                 }
             }
         }
@@ -435,10 +454,12 @@ fn accum_checked(
 ///
 /// Loop order is the chip's exactly: filter-tap outer, input-channel
 /// inner (lines 7–19), the binary weight applied as a sign-bit XOR on
-/// the FP32 representation (line 17, hoisted per output channel into a
-/// `u32` mask table), then the §IV-B scale → bypass → bias → ReLU post
-/// sequence, optionally rounding every intermediate to FP16 like the
-/// silicon. The input rectangle is staged once per output-channel
+/// the FP32 representation (line 17) using the caller-supplied
+/// [`PackedLayerWeights`] sign-mask planes — built **once per layer**
+/// from the packed bitplanes and shared across every tile, chip and
+/// thread of the pass — then the §IV-B scale → bypass → bias → ReLU
+/// post sequence, optionally rounding every intermediate to FP16 like
+/// the silicon. The input rectangle is staged once per output-channel
 /// group into a channel-interleaved scratch buffer and re-read from
 /// there for every channel of the block; interior pixels take a
 /// branch-free blocked fast path, border pixels the checked padding
@@ -447,7 +468,7 @@ fn accum_checked(
 #[allow(clippy::too_many_arguments)]
 pub fn run_tile<S, B, W>(
     layer: &ConvLayer,
-    stream: &WeightStream,
+    weights: &PackedLayerWeights,
     gamma: &[f32],
     beta: &[f32],
     (co0, co1): (usize, usize),
@@ -497,7 +518,8 @@ where
         })
         .collect();
 
-    let mut wmask = vec![0u32; taps * nie];
+    debug_assert_eq!(weights.n_out, l.n_out, "mask planes built for this layer");
+    debug_assert_eq!(weights.channel(co0).len(), taps * nie);
     let mut stage = vec![0.0f32; sh * sw * nie];
     let mut staged_group = usize::MAX;
 
@@ -524,16 +546,9 @@ where
             stage_input(input, g * nie, nie, (sy0, sy1, sx0, sx1), &mut stage);
             staged_group = g;
         }
-        // Line 17's binary weight as a sign-bit XOR mask, per channel.
-        for tap in 0..taps {
-            for ci in 0..nie {
-                wmask[tap * nie + ci] = if stream.weight(co, ci, tap) > 0.0 {
-                    0
-                } else {
-                    0x8000_0000
-                };
-            }
-        }
+        // Line 17's binary weight as a sign-bit XOR mask: the plane was
+        // expanded once per layer, shared by every tile of the pass.
+        let wmask = weights.channel(co);
         for oy in geom.oy0..geom.oy1 {
             let iy = oy * stride;
             if oy < yin_lo || oy >= yin_hi {
@@ -541,7 +556,7 @@ where
                 for ox in geom.ox0..geom.ox1 {
                     let v = accum_checked(
                         &stage,
-                        &wmask,
+                        wmask,
                         (k, dlo),
                         (l.h, l.w),
                         (sy0, sx0, sw),
@@ -557,7 +572,7 @@ where
             for ox in geom.ox0..xi0 {
                 let v = accum_checked(
                     &stage,
-                    &wmask,
+                    wmask,
                     (k, dlo),
                     (l.h, l.w),
                     (sy0, sx0, sw),
@@ -571,7 +586,7 @@ where
             let mut ox = xi0;
             while ox + PIXEL_BLOCK <= xi1 {
                 let center = (row + ox * stride - sx0) * nie;
-                let vs = accum_block(&stage, &wmask, &tap_off, center, step, nie, prec);
+                let vs = accum_block(&stage, wmask, &tap_off, center, step, nie, prec);
                 for (p, &v) in vs.iter().enumerate() {
                     emit(co, oy, ox + p, v);
                 }
@@ -579,14 +594,14 @@ where
             }
             while ox < xi1 {
                 let center = (row + ox * stride - sx0) * nie;
-                let v = accum_interior(&stage, &wmask, &tap_off, center, nie, prec);
+                let v = accum_interior(&stage, wmask, &tap_off, center, nie, prec);
                 emit(co, oy, ox, v);
                 ox += 1;
             }
             for ox in xi1..geom.ox1 {
                 let v = accum_checked(
                     &stage,
-                    &wmask,
+                    wmask,
                     (k, dlo),
                     (l.h, l.w),
                     (sy0, sx0, sw),
@@ -602,8 +617,9 @@ where
 }
 
 /// Execute Algorithm 1 for a **micro-batch** of `B` resident images:
-/// the same output rectangle and channel range as [`run_tile`], but the
-/// sign-mask table of each output channel is built **once** and applied
+/// the same output rectangle and channel range as [`run_tile`], but
+/// each output channel's sign-mask plane (borrowed from the shared
+/// per-layer [`PackedLayerWeights`]) is fetched **once** and applied
 /// to every image before the stream moves on — the batching schedule of
 /// the paper's serving story (weights stream past `B` stationary
 /// feature maps, so the off-chip weight fetch is paid once per block,
@@ -624,7 +640,7 @@ where
 #[allow(clippy::too_many_arguments)]
 pub fn run_tile_batch(
     layer: &ConvLayer,
-    stream: &WeightStream,
+    weights: &PackedLayerWeights,
     gamma: &[f32],
     beta: &[f32],
     (co0, co1): (usize, usize),
@@ -673,7 +689,8 @@ pub fn run_tile_batch(
         })
         .collect();
 
-    let mut wmask = vec![0u32; taps * nie];
+    debug_assert_eq!(weights.n_out, l.n_out, "mask planes built for this layer");
+    debug_assert_eq!(weights.channel(co0).len(), taps * nie);
     // One resident staged window per image — "B feature maps stay
     // resident while the weights stream past".
     let mut stages: Vec<Vec<f32>> = (0..b).map(|_| vec![0.0f32; sh * sw * nie]).collect();
@@ -687,16 +704,9 @@ pub fn run_tile_batch(
             }
             staged_group = g;
         }
-        // The weight block of this output channel, fetched once…
-        for tap in 0..taps {
-            for ci in 0..nie {
-                wmask[tap * nie + ci] = if stream.weight(co, ci, tap) > 0.0 {
-                    0
-                } else {
-                    0x8000_0000
-                };
-            }
-        }
+        // The weight block of this output channel — one borrow of the
+        // per-layer mask plane, fetched once…
+        let wmask = weights.channel(co);
         // …and applied to every resident image before the next block.
         for (bi, stage) in stages.iter().enumerate() {
             let bp = bypasses.map(|bps| bps[bi]);
@@ -719,7 +729,7 @@ pub fn run_tile_batch(
                     for ox in geom.ox0..geom.ox1 {
                         let v = accum_checked(
                             stage,
-                            &wmask,
+                            wmask,
                             (k, dlo),
                             (l.h, l.w),
                             (sy0, sx0, sw),
@@ -735,7 +745,7 @@ pub fn run_tile_batch(
                 for ox in geom.ox0..xi0 {
                     let v = accum_checked(
                         stage,
-                        &wmask,
+                        wmask,
                         (k, dlo),
                         (l.h, l.w),
                         (sy0, sx0, sw),
@@ -749,7 +759,7 @@ pub fn run_tile_batch(
                 let mut ox = xi0;
                 while ox + PIXEL_BLOCK <= xi1 {
                     let center = (row + ox * stride - sx0) * nie;
-                    let vs = accum_block(stage, &wmask, &tap_off, center, step, nie, prec);
+                    let vs = accum_block(stage, wmask, &tap_off, center, step, nie, prec);
                     for (p, &v) in vs.iter().enumerate() {
                         emit(oy, ox + p, v);
                     }
@@ -757,14 +767,14 @@ pub fn run_tile_batch(
                 }
                 while ox < xi1 {
                     let center = (row + ox * stride - sx0) * nie;
-                    let v = accum_interior(stage, &wmask, &tap_off, center, nie, prec);
+                    let v = accum_interior(stage, wmask, &tap_off, center, nie, prec);
                     emit(oy, ox, v);
                     ox += 1;
                 }
                 for ox in xi1..geom.ox1 {
                     let v = accum_checked(
                         stage,
-                        &wmask,
+                        wmask,
                         (k, dlo),
                         (l.h, l.w),
                         (sy0, sx0, sw),
@@ -830,6 +840,7 @@ mod tests {
         let l = ConvLayer::new("t", 4, 8, 6, 6, 3, 1);
         let w: Vec<f32> = (0..8 * 4 * 9).map(|_| rng.next_sym()).collect();
         let stream = pack_weights(&l, &w, 16);
+        let packed = PackedLayerWeights::new(&stream);
         let gamma = vec![0.5f32; 8];
         let beta = vec![0.1f32; 8];
         let fm = FeatureMap::from_vec(4, 6, 6, (0..4 * 36).map(|_| rng.next_sym()).collect());
@@ -849,7 +860,7 @@ mod tests {
         let mut b = vec![0.0f32; 8 * 36];
         let acc_a = run_tile(
             &l,
-            &stream,
+            &packed,
             &gamma,
             &beta,
             (0, 8),
@@ -862,7 +873,7 @@ mod tests {
         let shifted = Shifted { fm: &fm };
         let acc_b = run_tile(
             &l,
-            &stream,
+            &packed,
             &gamma,
             &beta,
             (0, 8),
@@ -884,6 +895,7 @@ mod tests {
         let l = ConvLayer::new("t", 3, 10, 5, 5, 3, 1);
         let w: Vec<f32> = (0..10 * 3 * 9).map(|_| rng.next_sym()).collect();
         let stream = pack_weights(&l, &w, 16);
+        let packed = PackedLayerWeights::new(&stream);
         let gamma: Vec<f32> = (0..10).map(|_| 0.5 + rng.next_f32()).collect();
         let beta: Vec<f32> = (0..10).map(|_| rng.next_sym()).collect();
         let fm = FeatureMap::from_vec(3, 5, 5, (0..75).map(|_| rng.next_sym()).collect());
@@ -902,7 +914,7 @@ mod tests {
         let run = |range: (usize, usize), out: &mut [f32]| {
             run_tile(
                 &l,
-                &stream,
+                &packed,
                 &gamma,
                 &beta,
                 range,
@@ -937,6 +949,7 @@ mod tests {
         let nie = l.n_in / l.groups;
         let w: Vec<f32> = (0..l.n_out * nie * 9).map(|_| rng.next_sym()).collect();
         let stream = pack_weights(&l, &w, 16);
+        let packed = PackedLayerWeights::new(&stream);
         let gamma: Vec<f32> = (0..10).map(|_| 0.5 + rng.next_f32()).collect();
         let beta: Vec<f32> = (0..10).map(|_| rng.next_sym()).collect();
         let fm = FeatureMap::from_vec(6, 7, 5, (0..6 * 35).map(|_| rng.next_sym()).collect());
@@ -964,7 +977,7 @@ mod tests {
             let mut refr = vec![0.0f32; 10 * ho * wo];
             let acc_fast = run_tile(
                 &l,
-                &stream,
+                &packed,
                 &gamma,
                 &beta,
                 (0, 10),
@@ -1075,6 +1088,7 @@ mod tests {
         let nie = l.n_in / l.groups;
         let w: Vec<f32> = (0..l.n_out * nie * 9).map(|_| rng.next_sym()).collect();
         let stream = pack_weights(&l, &w, 16);
+        let packed = PackedLayerWeights::new(&stream);
         let gamma: Vec<f32> = (0..10).map(|_| 0.5 + rng.next_f32()).collect();
         let beta: Vec<f32> = (0..10).map(|_| rng.next_sym()).collect();
         let (ho, wo) = (l.h_out(), l.w_out());
@@ -1106,7 +1120,7 @@ mod tests {
                 let out = &mut seq[bi];
                 seq_acc.add(&run_tile(
                     &l,
-                    &stream,
+                    &packed,
                     &gamma,
                     &beta,
                     (0, 10),
@@ -1124,7 +1138,7 @@ mod tests {
             let mut batched = vec![vec![0.0f32; 10 * ho * wo]; B];
             let batch_acc = run_tile_batch(
                 &l,
-                &stream,
+                &packed,
                 &gamma,
                 &beta,
                 (0, 10),

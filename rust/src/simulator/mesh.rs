@@ -22,7 +22,7 @@
 use std::collections::HashMap;
 use std::fmt;
 
-use crate::bwn::WeightStream;
+use crate::bwn::{PackedLayerWeights, WeightStream};
 use crate::coordinator::border::{link_flits, ExchangeFlags};
 use crate::network::{ConvLayer, Network, TensorRef};
 
@@ -436,6 +436,10 @@ impl MeshSim {
             let byp_id = step.bypass.map(tid);
             let cat_id = step.concat_extra.map(tid);
             let (src_c, _, _) = net.shape_of(step.src);
+            // One sign-mask expansion per mesh step, shared by every
+            // chip of the broadcast (§V: same weights on all chips).
+            let pw = PackedLayerWeights::new(&p.stream);
+            let pw = &pw;
 
             // Collect each chip's validated inputs, then compute all
             // chips concurrently — they are data-independent between
@@ -487,7 +491,7 @@ impl MeshSim {
                     .min(jobs.len());
                 if workers <= 1 {
                     jobs.iter()
-                        .map(|j| self.compute_chip(j, l, p, step.upsample2x, ho, wo))
+                        .map(|j| self.compute_chip(j, l, p, pw, step.upsample2x, ho, wo))
                         .collect()
                 } else {
                     // Balanced chip chunks (⌊n/w⌋ or ⌈n/w⌉ per worker),
@@ -502,7 +506,7 @@ impl MeshSim {
                                     chunk
                                         .iter()
                                         .map(|j| {
-                                            self.compute_chip(j, l, p, step.upsample2x, ho, wo)
+                                            self.compute_chip(j, l, p, pw, step.upsample2x, ho, wo)
                                         })
                                         .collect::<Vec<_>>()
                                 })
@@ -631,6 +635,10 @@ impl MeshSim {
             let byp_id = step.bypass.map(tid);
             let cat_id = step.concat_extra.map(tid);
             let (src_c, _, _) = net.shape_of(step.src);
+            // One sign-mask expansion per mesh step, shared by every
+            // chip and every batch slot of the broadcast.
+            let pw = PackedLayerWeights::new(&p.stream);
+            let pw = &pw;
 
             let results: Vec<(usize, Vec<ExtTile>, AccessCounts)> = {
                 let mut jobs = Vec::with_capacity(self.rows * self.cols);
@@ -681,7 +689,7 @@ impl MeshSim {
                     .min(jobs.len());
                 if workers <= 1 {
                     jobs.iter()
-                        .map(|j| self.compute_chip_batch(j, l, p, step.upsample2x, ho, wo))
+                        .map(|j| self.compute_chip_batch(j, l, p, pw, step.upsample2x, ho, wo))
                         .collect()
                 } else {
                     let ranges = datapath::partition_ranges(jobs.len(), workers);
@@ -698,6 +706,7 @@ impl MeshSim {
                                                 j,
                                                 l,
                                                 p,
+                                                pw,
                                                 step.upsample2x,
                                                 ho,
                                                 wo,
@@ -742,11 +751,13 @@ impl MeshSim {
     /// One chip's batched compute of one step: the shared batch kernel
     /// over the chip's `B` resident input views, streaming each weight
     /// block once for the whole batch.
+    #[allow(clippy::too_many_arguments)]
     fn compute_chip_batch(
         &self,
         job: &ChipBatchJob<'_>,
         l: &ConvLayer,
         p: &StepParams,
+        pw: &PackedLayerWeights,
         upsample: bool,
         ho: usize,
         wo: usize,
@@ -782,7 +793,7 @@ impl MeshSim {
             };
             datapath::run_tile_batch(
                 l,
-                &p.stream,
+                pw,
                 &p.gamma,
                 &p.beta,
                 (0, l.n_out),
@@ -812,11 +823,13 @@ impl MeshSim {
     /// the chip's owned output tile, then the free 2× replication if the
     /// step upsamples. Infallible by construction (inputs validated by
     /// the caller), so it can run on any worker thread.
+    #[allow(clippy::too_many_arguments)]
     fn compute_chip(
         &self,
         job: &ChipJob<'_>,
         l: &ConvLayer,
         p: &StepParams,
+        pw: &PackedLayerWeights,
         upsample: bool,
         ho: usize,
         wo: usize,
@@ -846,7 +859,7 @@ impl MeshSim {
                 |co: usize, gy: usize, gx: usize, v: f32| out.write_own(co, gy, gx, v);
             datapath::run_tile(
                 l,
-                &p.stream,
+                pw,
                 &p.gamma,
                 &p.beta,
                 (0, l.n_out),

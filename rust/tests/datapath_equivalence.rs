@@ -1,7 +1,8 @@
 //! The optimized datapath kernel vs the preserved per-element oracle.
 //!
 //! `simulator::datapath::run_tile` (channel-interleaved staging,
-//! interior/border split, blocked accumulator chains, analytic
+//! interior/border split, 8-wide blocked accumulator chains fed by the
+//! per-layer `PackedLayerWeights` sign-mask planes, analytic
 //! counters) must be **bit-identical** to
 //! `testkit::reference_run_tile` — the pre-optimization kernel kept as
 //! an independent implementation — in outputs *and* in every
@@ -12,7 +13,7 @@
 //! (full-FM) and mesh-style (sub-rectangle, offset Tile-PU grid)
 //! geometries.
 
-use hyperdrive::bwn::pack_weights;
+use hyperdrive::bwn::{pack_weights, PackedLayerWeights};
 use hyperdrive::network::ConvLayer;
 use hyperdrive::simulator::datapath::{analytic_counts, run_tile, Precision, TileGeom};
 use hyperdrive::simulator::FeatureMap;
@@ -50,6 +51,9 @@ fn fast_kernel_is_bit_identical_to_reference_oracle() {
 
         let weights: Vec<f32> = (0..n_out * nie * k * k).map(|_| rng.next_sym()).collect();
         let stream = pack_weights(&l, &weights, 16);
+        // The fast path consumes the once-per-layer mask-plane expansion
+        // of the packed bitplanes; the oracle decodes the stream itself.
+        let packed = PackedLayerWeights::new(&stream);
         let gamma: Vec<f32> = (0..n_out).map(|_| 0.5 + rng.next_f32()).collect();
         let beta: Vec<f32> = (0..n_out).map(|_| rng.next_sym()).collect();
         let input =
@@ -107,7 +111,7 @@ fn fast_kernel_is_bit_identical_to_reference_oracle() {
             let mut oracle = vec![f32::NAN; n_out * ho * wo];
             let acc_fast = run_tile(
                 &l,
-                &stream,
+                &packed,
                 &gamma,
                 &beta,
                 (co0, co1),

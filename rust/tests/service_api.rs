@@ -111,13 +111,22 @@ fn multi_model_soak_is_bit_exact_and_metrics_add_up() {
     assert_eq!(metrics.total_failed(), 0);
     assert_eq!(metrics.workers, 4);
     assert_eq!(metrics.per_model.len(), 2);
-    for pm in &metrics.per_model {
+    for (pm, eng) in metrics.per_model.iter().zip(&direct) {
         assert_eq!(pm.submitted, (REQUESTS / 2) as u64, "{}", pm.model);
         assert_eq!(pm.completed, (REQUESTS / 2) as u64);
         assert_eq!((pm.queued, pm.in_flight), (0, 0));
         assert!(pm.p99_ms >= pm.p50_ms && pm.p50_ms > 0.0, "{pm:?}");
         assert!(pm.mean_ms > 0.0 && pm.req_per_s > 0.0 && pm.ops_per_s > 0.0);
+        // Every hosted model reports its resident packed-weight
+        // footprint — the same analytic figure the direct engine gives.
+        assert_eq!(pm.weight_bytes, eng.resident_weight_bytes(), "{}", pm.model);
+        assert!(pm.weight_bytes > 0, "{}", pm.model);
     }
+    assert_eq!(
+        metrics.total_weight_bytes(),
+        direct.iter().map(|e| e.resident_weight_bytes()).sum::<u64>()
+    );
+    assert!(metrics.render_table().contains("wt KiB"));
     // The snapshot converts to single-model ServeStats for the report
     // path, consistent with the per-model row.
     let stats = metrics.serve_stats(MODELS[0]).unwrap();

@@ -7,9 +7,12 @@ Two independent gates, both enforced by the CI `bench-smoke` job:
    `benches/hotpath.rs` times the optimized datapath kernel *and* the
    preserved pre-optimization kernel (`testkit::reference_run_tile`,
    the "(… reference kernel)" entries) in the same process on the same
-   machine.  The optimized conv entry must be >= 2.0x faster at F32 and
+   machine.  The optimized conv entry must be >= 2.5x faster at F32 and
    >= 1.3x faster at F16 (min-time ratio — min is the noise-robust
-   statistic for short runs).
+   statistic for short runs).  The F32 floor was raised from 2.0x when
+   the kernel moved to once-per-layer `PackedLayerWeights` sign planes
+   and 8-wide pixel blocks; F16 stays at 1.3x because its serial
+   `round_f16` chain dominates either way.
 
 2. **Absolute regression vs the committed baseline**: every entry named
    in the baseline must still exist, and — when baseline and current
@@ -49,9 +52,9 @@ REF_SUFFIX = ", reference kernel)"
 # amortizes the per-call staging over ~25x less work and times far fewer
 # iterations on a shared runner, so its F32 gate is looser and its F16
 # gate — where the win is smallest (round_f16 cost is identical in both
-# kernels) — is advisory; the full-size bench is where the 2x
+# kernels) — is advisory; the full-size bench is where the 2.5x
 # acceptance target is enforced.
-SPEEDUP_GATES = [("(F32, 1 thread", 2.0), ("(F16, 1 thread", 1.3)]
+SPEEDUP_GATES = [("(F32, 1 thread", 2.5), ("(F16, 1 thread", 1.3)]
 TINY_SPEEDUP_GATES = [("(F32, 1 thread", 1.5), ("(F16, 1 thread", None)]
 
 # Slack on the 1/B weight-traffic ratio.  The counters are analytic
