@@ -40,6 +40,7 @@ fn main() -> anyhow::Result<()> {
             model: model.into(),
             input: input.into(),
             id: i,
+            deadline_ms: None,
         })?);
     }
     let (mut ok, mut failed) = (0, 0);

@@ -72,6 +72,7 @@ fn main() -> anyhow::Result<()> {
         model: "hypernet20".into(),
         input: input.into(),
         id: 0,
+        deadline_ms: None,
     })?;
     let response = ticket.wait()?;
     println!(

@@ -14,7 +14,7 @@
 use std::sync::Arc;
 
 use hyperdrive::engine::{
-    run_loadgen, Engine, InferenceService, LoadGenConfig, WireClient, WireServer,
+    run_loadgen, Engine, InferenceService, LoadGenConfig, RetryPolicy, WireClient, WireServer,
 };
 use hyperdrive::util::SplitMix64;
 
@@ -69,6 +69,9 @@ fn main() -> anyhow::Result<()> {
         requests: 64,
         models: vec!["hypernet20".into(), "resnet18@32x32".into()],
         seed: 11,
+        retry: RetryPolicy::default(),
+        deadline_ms: None,
+        chaos: None,
     })
     .map_err(|e| anyhow::anyhow!("{e}"))?;
     println!(

@@ -1,0 +1,161 @@
+"""Stdlib-only mirrors of the Rust resilience plane (`rust/src/faults/`
+and the circuit breaker in `rust/src/engine/service/mod.rs`).
+
+The container has no Rust toolchain, so these tests pin the *algorithms*
+independently: the SplitMix64 decision hash (chaos reproducibility rests
+on it being stateless and well-mixed), the XOR-fold halo checksum (must
+detect every single-bit flip, the fault model injects exactly one), and
+the Healthy/Degraded/Open breaker state machine (transition invariants,
+not timing). Constants here are transliterated from the Rust source; if
+either side changes, these tests disagree with `cargo test` and one of
+them is wrong.
+"""
+
+MASK = (1 << 64) - 1
+
+
+def splitmix64(x: int) -> int:
+    # Mirror of `faults::splitmix64` (reference SplitMix64 constants).
+    x = (x + 0x9E3779B97F4A7C15) & MASK
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & MASK
+    return (x ^ (x >> 31)) & MASK
+
+
+def draw(seed: int, tag: int, seq: int) -> float:
+    # Mirror of `faults::draw`: (seed, site tag, seq) -> uniform [0, 1).
+    h = splitmix64(seed ^ splitmix64(tag) ^ splitmix64((seq * 0x9E37) & MASK))
+    return (h >> 11) / float(1 << 53)
+
+
+def halo_checksum(bits: int) -> int:
+    # Mirror of `faults::halo_checksum`: fold 32 payload bits to a
+    # parity byte.
+    h = bits ^ (bits >> 16)
+    b = h ^ (h >> 8)
+    return b & 0xFF
+
+
+# Site tags as in `FaultKind::tag` ("CHIP", "HALO", "WDG", "DROP", "SLOW").
+TAGS = [0x43484950, 0x48414C4F, 0x574447, 0x44524F50, 0x534C4F57]
+
+
+def test_splitmix64_reference_vector():
+    # The canonical SplitMix64 test vector: state 0 emits this sequence
+    # (seed 0, then feeding each output back in is NOT the stream —
+    # SplitMix increments its state by the golden gamma, which our
+    # stateless use reproduces by hashing 0, 1, 2, ... times gamma).
+    # Hash of 0 is the first reference output.
+    assert splitmix64(0) == 0xE220A8397B1DCDAF
+    assert splitmix64(0x9E3779B97F4A7C15) == 0x6E789E6AA1B965F4
+
+
+def test_draw_is_uniform_enough_and_seed_sensitive():
+    n = 4000
+    for tag in TAGS:
+        hits = sum(1 for s in range(n) if draw(42, tag, s) < 0.25)
+        assert 800 <= hits <= 1200, (tag, hits)
+    a = [draw(42, TAGS[0], s) for s in range(256)]
+    b = [draw(43, TAGS[0], s) for s in range(256)]
+    assert a != b
+    # Same inputs, same decisions — the reproducibility contract.
+    assert a == [draw(42, TAGS[0], s) for s in range(256)]
+
+
+def test_sites_draw_independently():
+    # Identical seed and seq, different site tag -> different pattern,
+    # so a chip-death rule cannot shadow a connection-drop rule.
+    p = 0.5
+    fires = [
+        [draw(7, tag, s) < p for s in range(256)]
+        for tag in TAGS
+    ]
+    for i in range(len(fires)):
+        for j in range(i + 1, len(fires)):
+            assert fires[i] != fires[j], (i, j)
+
+
+def test_halo_checksum_detects_every_single_bit_flip():
+    for bits in (0, 1, 0x3F800000, 0xDEADBEEF, 0xFFFFFFFF):
+        base = halo_checksum(bits)
+        for flip in range(32):
+            assert halo_checksum(bits ^ (1 << flip)) != base, (bits, flip)
+
+
+class Breaker:
+    """Mirror of `update_breaker` + the submit-path half-open probe.
+
+    States: healthy / degraded / open. Time is abstract: `cooled` stands
+    in for `breaker_opened_at.elapsed() >= cooldown`.
+    """
+
+    def __init__(self, consecutive_failures: int, p99_ms: float):
+        self.threshold = consecutive_failures
+        self.p99_ms = p99_ms
+        self.state = "healthy"
+        self.consec = 0
+        self.trips = 0
+
+    def record(self, ok: bool, recent_p99: float = 0.0):
+        if ok:
+            self.consec = 0
+            if self.state != "open":
+                self.state = "degraded" if recent_p99 > self.p99_ms else "healthy"
+        else:
+            self.consec += 1
+            if self.state != "open" and self.consec >= self.threshold:
+                self.state = "open"
+                self.trips += 1
+
+    def admit(self, cooled: bool) -> bool:
+        # Mirror of the submit() gate: Open sheds until cooled, then
+        # admits one half-open probe in Degraded with the failure
+        # counter primed one below the trip threshold.
+        if self.state != "open":
+            return True
+        if not cooled:
+            return False
+        self.state = "degraded"
+        self.consec = self.threshold - 1
+        return True
+
+
+def test_breaker_trips_after_consecutive_failures_only():
+    b = Breaker(3, float("inf"))
+    for _ in range(2):
+        b.record(False)
+    b.record(True)  # success resets the streak
+    for _ in range(2):
+        b.record(False)
+    assert b.state == "healthy" and b.trips == 0
+    b.record(False)
+    assert b.state == "open" and b.trips == 1
+    # Further failures while open don't re-trip.
+    b.record(False)
+    assert b.trips == 1
+
+
+def test_breaker_latency_degrades_but_never_opens():
+    b = Breaker(3, 250.0)
+    b.record(True, recent_p99=400.0)
+    assert b.state == "degraded"
+    b.record(True, recent_p99=100.0)
+    assert b.state == "healthy"
+    assert b.trips == 0
+
+
+def test_open_breaker_sheds_until_cooldown_then_probes():
+    b = Breaker(3, float("inf"))
+    for _ in range(3):
+        b.record(False)
+    assert b.state == "open"
+    assert not b.admit(cooled=False)
+    assert b.admit(cooled=True)
+    assert b.state == "degraded" and b.consec == b.threshold - 1
+    # A failed probe re-opens immediately (one more failure reaches
+    # the threshold); a successful probe heals.
+    b.record(False)
+    assert b.state == "open" and b.trips == 2
+    assert b.admit(cooled=True)
+    b.record(True)
+    assert b.state == "healthy" and b.consec == 0

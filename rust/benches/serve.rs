@@ -27,7 +27,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use hyperdrive::engine::{
-    percentile, run_loadgen, Engine, InferRequest, InferenceService, LoadGenConfig, Ticket,
+    percentile, run_loadgen, Engine, InferRequest, InferenceService, LoadGenConfig, RetryPolicy, Ticket,
     WireServer,
 };
 use hyperdrive::util::SplitMix64;
@@ -69,6 +69,7 @@ fn run(workers: usize, requests: usize) -> Row {
                     model,
                     input: input.into(),
                     id: i as u64,
+                    deadline_ms: None,
                 })
                 .expect("admission (Block policy) cannot fail here")
         })
@@ -155,6 +156,7 @@ fn run_sweep_inproc(workers: usize, conns: usize, in_flight: usize, requests: us
                                 model: model.clone(),
                                 input: input.clone(),
                                 id: sent as u64,
+                                deadline_ms: None,
                             })
                             .expect("Block admission cannot fail here");
                         window.push_back((ticket, Instant::now()));
@@ -214,6 +216,9 @@ fn run_sweep_tcp(workers: usize, conns: usize, in_flight: usize, requests: usize
         requests,
         models: MODELS.iter().map(|m| m.to_string()).collect(),
         seed: 42,
+        retry: RetryPolicy::default(),
+        deadline_ms: None,
+        chaos: None,
     })
     .expect("loadgen run");
     assert_eq!(report.transport_errors, 0, "loopback connections died");

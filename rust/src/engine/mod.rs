@@ -77,11 +77,13 @@ pub use backend::{Backend, BackendKind, BatchRun, LayerTrace, NetworkParams};
 pub use report::EngineReport;
 pub use serve::{percentile, ServeOptions, ServeOutcome, ServeStats};
 pub use service::{
-    AdmissionPolicy, BatchPolicy, InferRequest, InferResponse, InferenceService, ModelConfig,
-    ModelMetrics, ServeError, ServiceBuilder, ServiceMetrics, Ticket,
+    AdmissionPolicy, BatchPolicy, BreakerPolicy, BreakerState, InferRequest, InferResponse,
+    InferenceService, ModelConfig, ModelMetrics, ServeError, ServiceBuilder, ServiceMetrics,
+    Ticket,
 };
 pub use wire::{
-    run_loadgen, LoadGenConfig, LoadGenReport, WireClient, WireError, WireServer, WireStats,
+    run_loadgen, LoadGenConfig, LoadGenReport, RetryPolicy, WireClient, WireError, WireServer,
+    WireStats,
 };
 // Re-exported so engine consumers need no coordinator/simulator paths.
 pub use crate::coordinator::schedule::DepthwisePolicy;

@@ -203,6 +203,7 @@ pub(crate) fn serve_outcome_on(
             model: model.to_string(),
             input: input.clone().into(),
             id: i as u64,
+            deadline_ms: None,
         }));
     }
     let mut results = Vec::with_capacity(inputs.len());

@@ -12,6 +12,7 @@
 
 use std::time::Instant;
 
+use super::BreakerState;
 use crate::engine::serve::{percentile, ServeStats};
 
 /// Most recent completed-request latencies kept per model for the
@@ -48,6 +49,17 @@ pub(crate) struct MetricsAccum {
     /// Times a submission found the queue full (counted once per
     /// submission, whatever the admission policy did next).
     queue_full_events: u64,
+    /// Requests shed because their deadline passed before a worker ran
+    /// them (also counted in `failed`).
+    deadline_exceeded: u64,
+    /// Client-signalled retry attempts observed by the wire server
+    /// (`Infer` frames with `attempt > 0`).
+    retries: u64,
+    /// Times the circuit breaker tripped open on this model.
+    breaker_trips: u64,
+    /// Faults the chaos plan injected into this model's execution
+    /// (worker stalls + slow batches).
+    faults_injected: u64,
 }
 
 impl MetricsAccum {
@@ -95,6 +107,35 @@ impl MetricsAccum {
         self.shed_bytes += 4 * input_len as u64;
     }
 
+    /// A request was shed because its deadline had already passed.
+    /// Callers also `record_failure` so totals stay consistent.
+    pub(crate) fn record_deadline_exceeded(&mut self) {
+        self.deadline_exceeded += 1;
+    }
+
+    /// The wire server observed a client retry attempt for this model.
+    pub(crate) fn record_retry(&mut self) {
+        self.retries += 1;
+    }
+
+    /// The circuit breaker tripped open.
+    pub(crate) fn record_breaker_trip(&mut self) {
+        self.breaker_trips += 1;
+    }
+
+    /// The chaos plan injected `n` faults into this model's execution.
+    pub(crate) fn record_faults(&mut self, n: u64) {
+        self.faults_injected += n;
+    }
+
+    /// p99 over the recent latency window — the circuit breaker's
+    /// Degraded signal. 0.0 before any completion.
+    pub(crate) fn recent_p99(&self) -> f64 {
+        let mut lat = self.window.clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        percentile(&lat, 0.99).unwrap_or(0.0)
+    }
+
     pub(crate) fn snapshot(
         &self,
         model: &str,
@@ -103,6 +144,7 @@ impl MetricsAccum {
         in_flight: usize,
         total_ops: u64,
         weight_bytes: u64,
+        breaker: BreakerState,
     ) -> ModelMetrics {
         let mut lat = self.window.clone();
         lat.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
@@ -143,6 +185,11 @@ impl MetricsAccum {
             rejected_backpressure: self.rejected,
             shed_bytes: self.shed_bytes,
             queue_full_events: self.queue_full_events,
+            deadline_exceeded: self.deadline_exceeded,
+            retries: self.retries,
+            breaker_trips: self.breaker_trips,
+            breaker,
+            faults_injected: self.faults_injected,
         }
     }
 }
@@ -199,6 +246,18 @@ pub struct ModelMetrics {
     /// policy did next — blocked submissions that later got in still
     /// count one event).
     pub queue_full_events: u64,
+    /// Requests shed because their deadline passed before a worker ran
+    /// them (a subset of `failed`).
+    pub deadline_exceeded: u64,
+    /// Client retry attempts the wire server observed for this model.
+    pub retries: u64,
+    /// Times the circuit breaker tripped open.
+    pub breaker_trips: u64,
+    /// Circuit-breaker health state at the snapshot instant
+    /// (`Healthy` when no breaker policy is configured).
+    pub breaker: BreakerState,
+    /// Faults the chaos plan injected into this model's execution.
+    pub faults_injected: u64,
 }
 
 /// A consistent snapshot over every hosted model, produced by
@@ -256,6 +315,21 @@ impl ServiceMetrics {
         self.per_model.iter().map(|m| m.shed_bytes).sum()
     }
 
+    /// Requests shed past their deadline, service-wide.
+    pub fn total_deadline_exceeded(&self) -> u64 {
+        self.per_model.iter().map(|m| m.deadline_exceeded).sum()
+    }
+
+    /// Client retry attempts observed, service-wide.
+    pub fn total_retries(&self) -> u64 {
+        self.per_model.iter().map(|m| m.retries).sum()
+    }
+
+    /// Faults injected into execution, service-wide.
+    pub fn total_faults_injected(&self) -> u64 {
+        self.per_model.iter().map(|m| m.faults_injected).sum()
+    }
+
     /// A model's row as single-model [`ServeStats`] (what
     /// [`crate::engine::Engine::report_with_serve`] consumes), with the
     /// service's active window standing in for the batch wall time.
@@ -276,7 +350,7 @@ impl ServiceMetrics {
     /// The `serve` CLI's per-model metrics table.
     pub fn render_table(&self) -> String {
         let mut out = format!(
-            "{:<28} {:>6} {:>6} {:>5} {:>5} {:>5} {:>9} {:>9} {:>9} {:>8} {:>9} {:>6} {:>6} {:>12} {:>8}\n",
+            "{:<28} {:>6} {:>6} {:>5} {:>5} {:>5} {:>9} {:>9} {:>9} {:>8} {:>9} {:>6} {:>6} {:>12} {:>8} {:>5} {:>5} {:>5} {:>5}\n",
             "model",
             "sub",
             "ok",
@@ -291,11 +365,15 @@ impl ServiceMetrics {
             "avg B",
             "max B",
             "words saved",
-            "wt KiB"
+            "wt KiB",
+            "ddl",
+            "rtry",
+            "flt",
+            "brk"
         );
         for m in &self.per_model {
             out.push_str(&format!(
-                "{:<28} {:>6} {:>6} {:>5} {:>5} {:>5} {:>9.2} {:>9.2} {:>9.2} {:>8.1} {:>9.2} {:>6.2} {:>6} {:>12} {:>8.1}{}\n",
+                "{:<28} {:>6} {:>6} {:>5} {:>5} {:>5} {:>9.2} {:>9.2} {:>9.2} {:>8.1} {:>9.2} {:>6.2} {:>6} {:>12} {:>8.1} {:>5} {:>5} {:>5} {:>5}{}\n",
                 m.model,
                 m.submitted,
                 m.completed,
@@ -311,16 +389,23 @@ impl ServiceMetrics {
                 m.batch_max,
                 m.weight_traffic_saved,
                 m.weight_bytes as f64 / 1024.0,
+                m.deadline_exceeded,
+                m.retries,
+                m.faults_injected,
+                m.breaker.as_str(),
                 if m.removed { "  (removed)" } else { "" }
             ));
         }
         out.push_str(&format!(
-            "total: {} submitted, {} completed, {} failed, {} rejected-backpressure ({} B shed) on {} workers\n",
+            "total: {} submitted, {} completed, {} failed, {} rejected-backpressure ({} B shed), {} past-deadline, {} retries, {} faults on {} workers\n",
             self.total_submitted(),
             self.total_completed(),
             self.total_failed(),
             self.total_rejected_backpressure(),
             self.total_shed_bytes(),
+            self.total_deadline_exceeded(),
+            self.total_retries(),
+            self.total_faults_injected(),
             self.workers
         ));
         out

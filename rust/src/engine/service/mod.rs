@@ -29,6 +29,7 @@
 //!     model: "hypernet20".into(),
 //!     input: input.into(),
 //!     id: 0,
+//!     deadline_ms: None,
 //! })?;
 //! let response = ticket.wait()?;
 //! println!("request {} took {:.2} ms", response.id, response.latency_ms);
@@ -86,6 +87,33 @@
 //! `remove_model` (the held jobs fail fast with
 //! [`ServeError::ModelRemoved`]) and on shutdown (the held batch runs
 //! at once — admitted tickets still resolve successfully).
+//!
+//! ## Resilience
+//!
+//! Production serving has a failure model, not just a happy path
+//! (`DESIGN.md` §Failure model):
+//!
+//! * **Deadlines** — a request may carry
+//!   [`InferRequest::deadline_ms`] (or inherit
+//!   [`ServiceBuilder::deadline_ms`]). A worker sheds a popped job
+//!   whose deadline already passed with
+//!   [`ServeError::DeadlineExceeded`] instead of burning backend
+//!   cycles on a result nobody can use.
+//! * **Circuit breaker** — with a [`BreakerPolicy`], each model runs a
+//!   Healthy / Degraded / Open health machine ([`BreakerState`]),
+//!   updated under the shard lock on every outcome: consecutive
+//!   failures trip it Open (submissions shed fast with
+//!   [`ServeError::BreakerOpen`] until the cooldown admits a half-open
+//!   probe), a p99 above threshold marks it Degraded.
+//! * **Watchdog** — with [`ServiceBuilder::watchdog_ms`], a scanner
+//!   thread fails the in-flight tickets of any worker stuck past the
+//!   limit ([`ServeError::WorkerStalled`]) and `shutdown()` detaches
+//!   (rather than joins) workers the watchdog declared stuck — the
+//!   drain guarantee survives a wedged backend.
+//! * **Chaos** — a seeded [`crate::faults::FaultPlan`]
+//!   ([`ServiceBuilder::faults`]) injects worker stalls and slow
+//!   batches keyed by request id, so the machinery above is testable
+//!   deterministically; see `tests/fault_injection.rs`.
 
 mod batcher;
 mod metrics;
@@ -98,6 +126,7 @@ use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::faults::FaultPlan;
 use crate::model::NetworkRegistry;
 use crate::simulator::Precision;
 
@@ -121,6 +150,61 @@ pub enum AdmissionPolicy {
     Timeout(u64),
 }
 
+/// Per-model circuit-breaker thresholds ([`ServiceBuilder::breaker`]).
+///
+/// The health machine runs Healthy → Degraded → Open: `p99_ms` governs
+/// the Degraded signal, `consecutive_failures` trips the breaker Open
+/// (new submissions shed fast with [`ServeError::BreakerOpen`]), and
+/// after `cooldown_ms` one half-open probe is admitted — its outcome
+/// decides whether the breaker closes or re-trips.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BreakerPolicy {
+    /// Consecutive request failures that trip the breaker Open.
+    pub consecutive_failures: u64,
+    /// Recent-window p99 latency (ms) above which the model is marked
+    /// Degraded. `f64::INFINITY` disables the latency signal.
+    pub p99_ms: f64,
+    /// How long an Open breaker sheds before admitting a half-open
+    /// probe request.
+    pub cooldown_ms: u64,
+}
+
+impl Default for BreakerPolicy {
+    fn default() -> Self {
+        BreakerPolicy {
+            consecutive_failures: 5,
+            p99_ms: f64::INFINITY,
+            cooldown_ms: 500,
+        }
+    }
+}
+
+/// A model's circuit-breaker health state (surfaced per model in
+/// [`ModelMetrics::breaker`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Serving normally.
+    #[default]
+    Healthy,
+    /// Serving, but the recent p99 exceeds the policy threshold (or the
+    /// breaker just admitted a half-open probe).
+    Degraded,
+    /// Shedding: recent consecutive failures tripped the breaker; new
+    /// submissions fail fast until the cooldown admits a probe.
+    Open,
+}
+
+impl BreakerState {
+    /// Short label for metric tables.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BreakerState::Healthy => "ok",
+            BreakerState::Degraded => "degr",
+            BreakerState::Open => "open",
+        }
+    }
+}
+
 /// One typed inference request, routed by model name.
 ///
 /// The input is a shared `Arc<[f32]>` slice: cloning a request (or
@@ -134,6 +218,11 @@ pub struct InferRequest {
     pub input: Arc<[f32]>,
     /// Caller-chosen correlation id, echoed on the response.
     pub id: u64,
+    /// Optional per-request deadline, measured from submission. A job
+    /// still queued when it expires is shed with
+    /// [`ServeError::DeadlineExceeded`] instead of executed. `None`
+    /// inherits the service default ([`ServiceBuilder::deadline_ms`]).
+    pub deadline_ms: Option<u64>,
 }
 
 /// A completed inference.
@@ -176,6 +265,15 @@ pub enum ServeError {
     Panicked { model: String, message: String },
     /// The backend returned an error for this request.
     Failed { model: String, message: String },
+    /// The request's deadline passed before a worker could execute it;
+    /// it was shed without spending backend cycles.
+    DeadlineExceeded { model: String, deadline_ms: u64 },
+    /// The model's circuit breaker is Open: recent failures tripped it
+    /// and the cooldown has not yet admitted a probe.
+    BreakerOpen { model: String },
+    /// The watchdog declared the worker executing this request stuck
+    /// after `stalled_ms` and failed its ticket.
+    WorkerStalled { model: String, stalled_ms: u64 },
 }
 
 impl fmt::Display for ServeError {
@@ -199,6 +297,15 @@ impl fmt::Display for ServeError {
                 write!(f, "model `{model}`: inference panicked: {message}")
             }
             ServeError::Failed { model, message } => write!(f, "model `{model}`: {message}"),
+            ServeError::DeadlineExceeded { model, deadline_ms } => {
+                write!(f, "model `{model}`: deadline of {deadline_ms} ms exceeded before execution")
+            }
+            ServeError::BreakerOpen { model } => {
+                write!(f, "model `{model}`: circuit breaker is open")
+            }
+            ServeError::WorkerStalled { model, stalled_ms } => {
+                write!(f, "model `{model}`: worker stalled for {stalled_ms} ms; request failed by watchdog")
+            }
         }
     }
 }
@@ -299,6 +406,9 @@ struct Job {
     id: u64,
     input: Arc<[f32]>,
     ticket: Arc<TicketShared>,
+    /// Expiry instant and the original budget in ms, if the request
+    /// carried (or inherited) a deadline.
+    deadline: Option<(Instant, u64)>,
 }
 
 /// The mutable half of a shard, behind the shard's own mutex.
@@ -311,6 +421,12 @@ struct ShardState {
     /// so the wakeup cannot be lost).
     draining: bool,
     metrics: MetricsAccum,
+    /// Circuit-breaker health; stays `Healthy` without a policy.
+    breaker: BreakerState,
+    /// Consecutive failures since the last success (breaker input).
+    consec_failures: u64,
+    /// When the breaker last tripped Open (cooldown epoch).
+    breaker_opened_at: Option<Instant>,
 }
 
 /// One hosted model: immutable routing data plus its own lock + two
@@ -329,6 +445,8 @@ struct Shard {
     queue_depth: usize,
     /// How queued requests coalesce into batch-resident passes.
     batch: BatchPolicy,
+    /// Circuit-breaker thresholds; `None` disables the health machine.
+    breaker: Option<BreakerPolicy>,
     /// Lock-free mirror of `state.removed` for name resolution —
     /// written once under the state lock, read without it.
     removed_hint: AtomicBool,
@@ -351,6 +469,7 @@ impl Shard {
         weight_bytes: u64,
         queue_depth: usize,
         batch: BatchPolicy,
+        breaker: Option<BreakerPolicy>,
     ) -> Shard {
         Shard {
             name,
@@ -360,6 +479,7 @@ impl Shard {
             weight_bytes,
             queue_depth,
             batch,
+            breaker,
             removed_hint: AtomicBool::new(false),
             state: Mutex::new(ShardState {
                 queue: VecDeque::new(),
@@ -367,9 +487,36 @@ impl Shard {
                 removed: false,
                 draining: false,
                 metrics: MetricsAccum::default(),
+                breaker: BreakerState::Healthy,
+                consec_failures: 0,
+                breaker_opened_at: None,
             }),
             arrivals: Condvar::new(),
             space: Condvar::new(),
+        }
+    }
+}
+
+/// Advance the breaker health machine on one request outcome. Called
+/// under the shard lock wherever an outcome is recorded, so breaker
+/// state and metrics move atomically.
+fn update_breaker(shard: &Shard, st: &mut ShardState, ok: bool) {
+    let Some(pol) = shard.breaker else { return };
+    if ok {
+        st.consec_failures = 0;
+        if st.breaker != BreakerState::Open {
+            st.breaker = if st.metrics.recent_p99() > pol.p99_ms {
+                BreakerState::Degraded
+            } else {
+                BreakerState::Healthy
+            };
+        }
+    } else {
+        st.consec_failures += 1;
+        if st.breaker != BreakerState::Open && st.consec_failures >= pol.consecutive_failures {
+            st.breaker = BreakerState::Open;
+            st.breaker_opened_at = Some(Instant::now());
+            st.metrics.record_breaker_trip();
         }
     }
 }
@@ -382,6 +529,43 @@ impl Shard {
 struct DoorbellState {
     pending: u64,
     shutting_down: bool,
+}
+
+/// Service-wide resilience knobs, set on the builder and threaded to
+/// the workers, watchdog and submit path.
+#[derive(Clone, Default)]
+struct ResilienceConfig {
+    /// Default deadline for requests that carry none.
+    deadline_ms: Option<u64>,
+    /// Circuit-breaker thresholds applied to every shard.
+    breaker: Option<BreakerPolicy>,
+    /// Stall limit after which the watchdog fails a worker's tickets.
+    watchdog_ms: Option<u64>,
+    /// Seeded chaos plan (worker stalls / slow batches).
+    faults: Option<Arc<FaultPlan>>,
+}
+
+/// One worker's currently-executing work, registered in its
+/// [`WorkerSlot`] so the watchdog can see (and fail) it.
+struct InFlight {
+    shard: Arc<Shard>,
+    tickets: Vec<Arc<TicketShared>>,
+    started: Instant,
+    /// Written and read only under `shard.state`'s lock: the watchdog
+    /// sets it when it fails this work, and the owning worker checks it
+    /// before touching accounting — exactly one side resolves the
+    /// tickets.
+    abandoned: AtomicBool,
+    /// Set by the worker (under the same lock) once it has accounted
+    /// the work itself — the watchdog then keeps off even if the entry
+    /// is still visible in the slot.
+    done: AtomicBool,
+}
+
+/// Watchdog-visible mailbox: what a worker is executing right now.
+#[derive(Default)]
+struct WorkerSlot {
+    current: Mutex<Option<Arc<InFlight>>>,
 }
 
 struct Shared {
@@ -397,6 +581,13 @@ struct Shared {
     rr: AtomicUsize,
     /// Cheap pre-lock mirror of `doorbell.shutting_down`.
     shutting: AtomicBool,
+    /// One slot per worker, in spawn order (parallel to the service's
+    /// join handles). Empty when no watchdog is configured.
+    slots: Vec<Arc<WorkerSlot>>,
+    /// Resilience knobs shared by workers and the watchdog.
+    resilience: ResilienceConfig,
+    /// Tells the watchdog thread to exit (set after workers joined).
+    watchdog_stop: AtomicBool,
 }
 
 impl Shared {
@@ -479,9 +670,66 @@ fn try_pop(shared: &Shared, shards: &[Arc<Shard>]) -> Option<(Arc<Shard>, Vec<Jo
     None
 }
 
+/// Shed popped jobs whose deadline already passed — server-side
+/// expiry: no backend cycles are spent on a result nobody can use.
+/// Returns the still-live jobs.
+fn shed_expired(shard: &Shard, jobs: Vec<Job>) -> Vec<Job> {
+    let now = Instant::now();
+    let (expired, live): (Vec<Job>, Vec<Job>) = jobs
+        .into_iter()
+        .partition(|j| j.deadline.is_some_and(|(at, _)| now >= at));
+    if !expired.is_empty() {
+        {
+            let mut st = shard.state.lock().unwrap();
+            st.in_flight -= expired.len();
+            let t = Instant::now();
+            for _ in &expired {
+                st.metrics.record_deadline_exceeded();
+                st.metrics.record_failure(t);
+            }
+        }
+        for job in expired {
+            let (_, deadline_ms) = job.deadline.expect("partitioned on Some");
+            complete(
+                &job.ticket,
+                Err(ServeError::DeadlineExceeded {
+                    model: shard.name.clone(),
+                    deadline_ms,
+                }),
+            );
+        }
+    }
+    live
+}
+
+/// Consult the chaos plan before running a batch: worker stalls and
+/// slow batches are sleeps keyed by the first request id (schedule-
+/// independent, so identical seeds inject identical faults). Returns
+/// after sleeping out whatever fired.
+fn inject_execution_faults(shard: &Shard, jobs: &[Job], faults: Option<&FaultPlan>) {
+    let Some(plan) = faults else { return };
+    let seq = jobs[0].id;
+    let stall = plan.worker_stall(seq);
+    let slow = plan.slow_model(seq);
+    let fired = stall.is_some() as u64 + slow.is_some() as u64;
+    if fired > 0 {
+        shard.state.lock().unwrap().metrics.record_faults(fired);
+    }
+    if let Some(ms) = stall {
+        std::thread::sleep(Duration::from_millis(ms));
+    }
+    if let Some(ms) = slow {
+        std::thread::sleep(Duration::from_millis(ms));
+    }
+}
+
 /// Execute popped jobs (single request or batch pass) with no lock
 /// held, record metrics under the shard lock, resolve the tickets.
-fn execute(shard: &Shard, jobs: Vec<Job>) {
+/// If the watchdog abandoned this work mid-execution (`watch`), the
+/// tickets are already failed and accounted — the worker backs off.
+fn execute(shard: &Shard, jobs: Vec<Job>, watch: Option<&InFlight>, faults: Option<&FaultPlan>) {
+    inject_execution_faults(shard, &jobs, faults);
+    let abandoned = |w: Option<&InFlight>| w.is_some_and(|w| w.abandoned.load(Ordering::Relaxed));
     let t = Instant::now();
     if jobs.len() == 1 {
         let job = jobs.into_iter().next().expect("one job");
@@ -495,6 +743,12 @@ fn execute(shard: &Shard, jobs: Vec<Job>) {
         });
         {
             let mut st = shard.state.lock().unwrap();
+            if abandoned(watch) {
+                return;
+            }
+            if let Some(w) = watch {
+                w.done.store(true, Ordering::Relaxed);
+            }
             st.in_flight -= 1;
             st.metrics.record_batch(1, 0);
             let now = Instant::now();
@@ -502,6 +756,7 @@ fn execute(shard: &Shard, jobs: Vec<Job>) {
                 Ok(_) => st.metrics.record_ok(latency_ms, now),
                 Err(_) => st.metrics.record_failure(now),
             }
+            update_breaker(shard, &mut st, response.is_ok());
         }
         complete(&job.ticket, response);
     } else {
@@ -523,6 +778,12 @@ fn execute(shard: &Shard, jobs: Vec<Job>) {
             .collect();
         {
             let mut st = shard.state.lock().unwrap();
+            if abandoned(watch) {
+                return;
+            }
+            if let Some(w) = watch {
+                w.done.store(true, Ordering::Relaxed);
+            }
             st.in_flight -= jobs.len();
             st.metrics.record_batch(jobs.len(), saved);
             let now = Instant::now();
@@ -531,6 +792,7 @@ fn execute(shard: &Shard, jobs: Vec<Job>) {
                     Ok(_) => st.metrics.record_ok(latency_ms, now),
                     Err(_) => st.metrics.record_failure(now),
                 }
+                update_breaker(shard, &mut st, r.is_ok());
             }
         }
         for (job, response) in jobs.into_iter().zip(responses) {
@@ -561,14 +823,36 @@ fn fail_removed(shard: &Shard, jobs: Vec<Job>) {
     }
 }
 
-fn worker_loop(shared: &Shared) {
+fn worker_loop(shared: &Shared, slot: &WorkerSlot) {
+    let faults = shared.resilience.faults.as_deref();
     loop {
         let shards: Vec<Arc<Shard>> = shared.shards.read().unwrap().clone();
         if let Some((shard, jobs, removed_mid_hold)) = try_pop(shared, &shards) {
             if removed_mid_hold {
                 fail_removed(&shard, jobs);
             } else {
-                execute(&shard, jobs);
+                let jobs = shed_expired(&shard, jobs);
+                if jobs.is_empty() {
+                    continue;
+                }
+                // Register with the watchdog (if any) for the unlocked
+                // execution window, then clear the mailbox.
+                let watch = shared.resilience.watchdog_ms.map(|_| {
+                    Arc::new(InFlight {
+                        shard: shard.clone(),
+                        tickets: jobs.iter().map(|j| j.ticket.clone()).collect(),
+                        started: Instant::now(),
+                        abandoned: AtomicBool::new(false),
+                        done: AtomicBool::new(false),
+                    })
+                });
+                if let Some(w) = &watch {
+                    *slot.current.lock().unwrap() = Some(w.clone());
+                }
+                execute(&shard, jobs, watch.as_deref(), faults);
+                if watch.is_some() {
+                    *slot.current.lock().unwrap() = None;
+                }
             }
             continue;
         }
@@ -585,6 +869,48 @@ fn worker_loop(shared: &Shared) {
             return;
         }
         drop(shared.bell.wait(db).unwrap());
+    }
+}
+
+/// The watchdog: scan every worker's mailbox and fail the in-flight
+/// tickets of any worker stuck past `limit_ms`. The stuck worker's
+/// later accounting is suppressed by the `abandoned` flag (checked
+/// under the same shard lock this writes it under), so exactly one
+/// side resolves each ticket.
+fn watchdog_loop(shared: &Shared, limit_ms: u64) {
+    let tick = Duration::from_millis((limit_ms / 4).clamp(1, 50));
+    while !shared.watchdog_stop.load(Ordering::Acquire) {
+        std::thread::sleep(tick);
+        for slot in &shared.slots {
+            let entry = slot.current.lock().unwrap().clone();
+            let Some(entry) = entry else { continue };
+            if entry.started.elapsed() < Duration::from_millis(limit_ms) {
+                continue;
+            }
+            let stalled_ms = entry.started.elapsed().as_millis() as u64;
+            {
+                let mut st = entry.shard.state.lock().unwrap();
+                if entry.abandoned.load(Ordering::Relaxed) || entry.done.load(Ordering::Relaxed) {
+                    continue; // already settled by an earlier scan / the worker
+                }
+                entry.abandoned.store(true, Ordering::Relaxed);
+                st.in_flight -= entry.tickets.len();
+                let now = Instant::now();
+                for _ in &entry.tickets {
+                    st.metrics.record_failure(now);
+                }
+                update_breaker(&entry.shard, &mut st, false);
+            }
+            for ticket in &entry.tickets {
+                complete(
+                    ticket,
+                    Err(ServeError::WorkerStalled {
+                        model: entry.shard.name.clone(),
+                        stalled_ms,
+                    }),
+                );
+            }
+        }
     }
 }
 
@@ -726,6 +1052,7 @@ pub struct ServiceBuilder {
     queue_depth: usize,
     admission: AdmissionPolicy,
     batch: BatchPolicy,
+    resilience: ResilienceConfig,
 }
 
 impl Default for ServiceBuilder {
@@ -737,6 +1064,7 @@ impl Default for ServiceBuilder {
             queue_depth: 8,
             admission: AdmissionPolicy::Block,
             batch: BatchPolicy::default(),
+            resilience: ResilienceConfig::default(),
         }
     }
 }
@@ -820,6 +1148,37 @@ impl ServiceBuilder {
         self
     }
 
+    /// Default per-request deadline for requests that carry none
+    /// (default: no deadline). Jobs still queued when it expires are
+    /// shed with [`ServeError::DeadlineExceeded`].
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.resilience.deadline_ms = Some(ms);
+        self
+    }
+
+    /// Enable the per-model Healthy/Degraded/Open circuit breaker with
+    /// these thresholds (default: no breaker).
+    pub fn breaker(mut self, policy: BreakerPolicy) -> Self {
+        self.resilience.breaker = Some(policy);
+        self
+    }
+
+    /// Enable the watchdog: a worker executing one batch for longer
+    /// than `ms` has its in-flight tickets failed with
+    /// [`ServeError::WorkerStalled`], and `shutdown()` detaches it
+    /// instead of hanging on its join (default: no watchdog).
+    pub fn watchdog_ms(mut self, ms: u64) -> Self {
+        self.resilience.watchdog_ms = Some(ms);
+        self
+    }
+
+    /// Inject faults from a seeded chaos plan (worker stalls and slow
+    /// batches, keyed by request id). Default: none.
+    pub fn faults(mut self, plan: Arc<FaultPlan>) -> Self {
+        self.resilience.faults = Some(plan);
+        self
+    }
+
     /// Validate, build every model's engine, spawn the worker pool.
     pub fn build(self) -> Result<InferenceService, EngineError> {
         if self.workers == 0 {
@@ -892,6 +1251,7 @@ impl ServiceBuilder {
                 weight_bytes,
                 depth_override.unwrap_or(self.queue_depth),
                 batch,
+                self.resilience.breaker,
             ));
         }
         Ok(InferenceService::start(
@@ -901,6 +1261,7 @@ impl ServiceBuilder {
             self.admission,
             self.batch,
             registry,
+            self.resilience,
         ))
     }
 }
@@ -915,6 +1276,7 @@ pub struct InferenceService {
     default_batch: BatchPolicy,
     worker_count: usize,
     threads: Vec<JoinHandle<()>>,
+    watchdog: Option<JoinHandle<()>>,
     next_id: AtomicU64,
 }
 
@@ -945,6 +1307,7 @@ impl InferenceService {
             weight_bytes,
             queue_depth,
             BatchPolicy::default(),
+            None,
         );
         InferenceService::start(
             vec![shard],
@@ -953,6 +1316,7 @@ impl InferenceService {
             admission,
             BatchPolicy::default(),
             NetworkRegistry::empty(),
+            ResilienceConfig::default(),
         )
     }
 
@@ -963,7 +1327,9 @@ impl InferenceService {
         admission: AdmissionPolicy,
         default_batch: BatchPolicy,
         registry: NetworkRegistry,
+        resilience: ResilienceConfig,
     ) -> InferenceService {
+        let watchdog_ms = resilience.watchdog_ms;
         let shared = Arc::new(Shared {
             shards: RwLock::new(shards.into_iter().map(Arc::new).collect()),
             doorbell: Mutex::new(DoorbellState {
@@ -973,13 +1339,23 @@ impl InferenceService {
             bell: Condvar::new(),
             rr: AtomicUsize::new(0),
             shutting: AtomicBool::new(false),
+            slots: (0..workers).map(|_| Arc::new(WorkerSlot::default())).collect(),
+            resilience,
+            watchdog_stop: AtomicBool::new(false),
         });
         let threads = (0..workers)
-            .map(|_| {
+            .map(|i| {
                 let shared = shared.clone();
-                std::thread::spawn(move || worker_loop(&shared))
+                std::thread::spawn(move || {
+                    let slot = shared.slots[i].clone();
+                    worker_loop(&shared, &slot)
+                })
             })
             .collect();
+        let watchdog = watchdog_ms.map(|ms| {
+            let shared = shared.clone();
+            std::thread::spawn(move || watchdog_loop(&shared, ms))
+        });
         InferenceService {
             shared,
             registry,
@@ -988,6 +1364,7 @@ impl InferenceService {
             default_batch,
             worker_count: workers,
             threads,
+            watchdog,
             next_id: AtomicU64::new(0),
         }
     }
@@ -1022,7 +1399,12 @@ impl InferenceService {
     /// request alone. Only this model's lock is touched — submissions
     /// to different models never contend.
     pub fn submit(&self, request: InferRequest) -> Result<Ticket, ServeError> {
-        let InferRequest { model, input, id } = request;
+        let InferRequest {
+            model,
+            input,
+            id,
+            deadline_ms,
+        } = request;
         let start = Instant::now();
         if self.shared.shutting.load(Ordering::Acquire) {
             return Err(ServeError::ShuttingDown);
@@ -1035,6 +1417,9 @@ impl InferenceService {
                 want: shard.input_len,
             });
         }
+        let deadline = deadline_ms
+            .or(self.shared.resilience.deadline_ms)
+            .map(|ms| (start + Duration::from_millis(ms), ms));
         let mut st = shard.state.lock().unwrap();
         let mut counted_full = false;
         loop {
@@ -1043,6 +1428,22 @@ impl InferenceService {
             }
             if st.draining {
                 return Err(ServeError::ShuttingDown);
+            }
+            // Circuit-breaker gate: an Open shard sheds load at the
+            // door. Once the cooldown elapses it admits exactly one
+            // half-open probe — the probe's outcome decides whether
+            // the breaker re-trips or the shard recovers.
+            if st.breaker == BreakerState::Open {
+                let pol = shard.breaker.expect("Open breaker implies a policy");
+                let cooled = st
+                    .breaker_opened_at
+                    .is_some_and(|at| at.elapsed() >= Duration::from_millis(pol.cooldown_ms));
+                if cooled {
+                    st.breaker = BreakerState::Degraded;
+                    st.consec_failures = pol.consecutive_failures.saturating_sub(1);
+                } else {
+                    return Err(ServeError::BreakerOpen { model });
+                }
             }
             if st.queue.len() < shard.queue_depth {
                 // Admission gate: the doorbell decides atomically
@@ -1065,6 +1466,7 @@ impl InferenceService {
                     id,
                     input,
                     ticket: ticket.clone(),
+                    deadline,
                 });
                 drop(st);
                 self.shared.bell.notify_all();
@@ -1120,6 +1522,7 @@ impl InferenceService {
             model: model.to_string(),
             input: input.into(),
             id,
+            deadline_ms: None,
         })?;
         Ok(ticket.wait()?.output)
     }
@@ -1152,6 +1555,7 @@ impl InferenceService {
             engine.resident_weight_bytes(),
             config.queue_depth.unwrap_or(self.default_depth),
             config.batch_policy(self.default_batch),
+            self.shared.resilience.breaker,
         );
         let mut shards = self.shared.shards.write().unwrap();
         {
@@ -1236,10 +1640,32 @@ impl InferenceService {
                         st.in_flight,
                         s.total_ops,
                         s.weight_bytes,
+                        st.breaker,
                     )
                 })
                 .collect(),
         }
+    }
+
+    /// Record a client-reported retry against a model's metrics row.
+    /// The wire server calls this when an `Infer` frame arrives with
+    /// `attempt > 0` — the retry happened on the client, but the
+    /// server-side table is where operators look.
+    pub fn note_retry(&self, model: &str) {
+        if let Ok(shard) = self.shared.find(model) {
+            shard.state.lock().unwrap().metrics.record_retry();
+        }
+    }
+
+    /// Counters of every fault the service's chaos plan has injected
+    /// so far (all zeros when no plan is installed).
+    pub fn fault_counters(&self) -> crate::faults::FaultCounters {
+        self.shared
+            .resilience
+            .faults
+            .as_ref()
+            .map(|p| p.counters())
+            .unwrap_or_default()
     }
 
     /// Graceful shutdown: stop admission, drain every queue (every
@@ -1267,8 +1693,73 @@ impl InferenceService {
             shard.arrivals.notify_all();
         }
         self.shared.bell.notify_all();
-        for handle in self.threads.drain(..) {
-            let _ = handle.join();
+        // Join workers, but never hang on one the watchdog has marked
+        // abandoned (stalled past its limit): such a worker's tickets
+        // were already failed with `WorkerStalled`, so it is detached
+        // instead of joined. Without a watchdog every worker is joined
+        // unconditionally (identical to pre-resilience behaviour).
+        let mut handles: Vec<(usize, JoinHandle<()>)> =
+            self.threads.drain(..).enumerate().collect();
+        let mut detached = false;
+        if self.shared.resilience.watchdog_ms.is_none() {
+            for (_, handle) in handles.drain(..) {
+                let _ = handle.join();
+            }
+        } else {
+            while !handles.is_empty() {
+                let mut remaining = Vec::with_capacity(handles.len());
+                for (i, handle) in handles {
+                    if handle.is_finished() {
+                        let _ = handle.join();
+                        continue;
+                    }
+                    let stuck = self.shared.slots.get(i).is_some_and(|slot| {
+                        slot.current
+                            .lock()
+                            .unwrap()
+                            .as_ref()
+                            .is_some_and(|inf| inf.abandoned.load(Ordering::Acquire))
+                    });
+                    if stuck {
+                        // Leak the thread: its jobs are resolved, its
+                        // backend call may never return.
+                        detached = true;
+                        continue;
+                    }
+                    remaining.push((i, handle));
+                }
+                handles = remaining;
+                if !handles.is_empty() {
+                    self.shared.bell.notify_all();
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+        self.shared.watchdog_stop.store(true, Ordering::Release);
+        if let Some(wd) = self.watchdog.take() {
+            let _ = wd.join();
+        }
+        if detached {
+            // A detached worker cannot drain what it never popped.
+            // Sweep every shard so each admitted ticket still
+            // resolves (the shutdown drain guarantee).
+            for shard in &shards {
+                let leftovers: Vec<Job> = {
+                    let mut st = shard.state.lock().unwrap();
+                    let jobs: Vec<Job> = st.queue.drain(..).collect();
+                    if !jobs.is_empty() {
+                        self.shared.dec_pending(jobs.len() as u64);
+                        let now = Instant::now();
+                        for _ in &jobs {
+                            st.metrics.record_failure(now);
+                        }
+                    }
+                    jobs
+                };
+                for job in leftovers {
+                    complete(&job.ticket, Err(ServeError::ShuttingDown));
+                }
+            }
         }
     }
 }
@@ -1367,6 +1858,7 @@ mod tests {
                     model: "d".into(),
                     input: vec![i as f32].into(),
                     id: i,
+                    deadline_ms: None,
                 })
                 .unwrap()
             })
@@ -1393,6 +1885,7 @@ mod tests {
                 model: "nope".into(),
                 input: vec![0.0].into(),
                 id: 0,
+                deadline_ms: None,
             })
             .unwrap_err()
         {
@@ -1407,6 +1900,7 @@ mod tests {
                 model: "d".into(),
                 input: vec![0.0; 7].into(),
                 id: 0,
+                deadline_ms: None,
             })
             .unwrap_err()
         {
@@ -1437,6 +1931,7 @@ mod tests {
                 model: "g".into(),
                 input: vec![1.0].into(),
                 id: 1,
+                deadline_ms: None,
             })
             .unwrap();
         // Wait until the worker holds request 1 (queue empty again).
@@ -1446,6 +1941,7 @@ mod tests {
                 model: "g".into(),
                 input: vec![2.0].into(),
                 id: 2,
+                deadline_ms: None,
             })
             .unwrap();
         // Queue (depth 1) now holds request 2 → request 3 is rejected.
@@ -1454,6 +1950,7 @@ mod tests {
                 model: "g".into(),
                 input: vec![3.0].into(),
                 id: 3,
+                deadline_ms: None,
             })
             .unwrap_err();
         assert!(
@@ -1494,6 +1991,7 @@ mod tests {
                 model: "g".into(),
                 input: vec![1.0].into(),
                 id: 1,
+                deadline_ms: None,
             })
             .unwrap();
         wait_until(|| svc.metrics().model("g").unwrap().in_flight == 1);
@@ -1502,6 +2000,7 @@ mod tests {
                 model: "g".into(),
                 input: vec![2.0].into(),
                 id: 2,
+                deadline_ms: None,
             })
             .unwrap();
         let t0 = Instant::now();
@@ -1510,6 +2009,7 @@ mod tests {
                 model: "g".into(),
                 input: vec![3.0].into(),
                 id: 3,
+                deadline_ms: None,
             })
             .unwrap_err();
         assert!(
@@ -1543,6 +2043,7 @@ mod tests {
                 model: "g".into(),
                 input: vec![1.0].into(),
                 id: 1,
+                deadline_ms: None,
             })
             .unwrap();
         wait_until(|| svc.metrics().model("g").unwrap().in_flight == 1);
@@ -1551,6 +2052,7 @@ mod tests {
                 model: "g".into(),
                 input: vec![2.0].into(),
                 id: 2,
+                deadline_ms: None,
             })
             .unwrap();
         // Open the gate from a helper thread while the main thread is
@@ -1568,6 +2070,7 @@ mod tests {
                 model: "g".into(),
                 input: vec![3.0].into(),
                 id: 3,
+                deadline_ms: None,
             })
             .unwrap();
         assert!(
@@ -1600,6 +2103,7 @@ mod tests {
                     model: "g".into(),
                     input: vec![i as f32].into(),
                     id: i,
+                    deadline_ms: None,
                 })
                 .unwrap()
             })
@@ -1637,6 +2141,7 @@ mod tests {
                 model: "g".into(),
                 input: vec![1.0].into(),
                 id: 1,
+                deadline_ms: None,
             })
             .unwrap();
         wait_until(|| svc.metrics().model("g").unwrap().in_flight == 1);
@@ -1645,6 +2150,7 @@ mod tests {
                 model: "g".into(),
                 input: vec![2.0].into(),
                 id: 2,
+                deadline_ms: None,
             })
             .unwrap();
         svc.remove_model("g").unwrap();
@@ -1659,6 +2165,7 @@ mod tests {
                 model: "g".into(),
                 input: vec![4.0].into(),
                 id: 4,
+                deadline_ms: None,
             })
             .unwrap_err(),
             ServeError::ModelRemoved { .. }
@@ -1716,8 +2223,10 @@ mod tests {
                 }),
                 1,
                 1,
+                0,
                 8,
                 BatchPolicy::default(),
+                None,
             ));
         }
         let svc = InferenceService::start(
@@ -1727,6 +2236,7 @@ mod tests {
             AdmissionPolicy::Block,
             BatchPolicy::default(),
             NetworkRegistry::empty(),
+            ResilienceConfig::default(),
         );
         // Gate closed: load 3 requests per model before any executes…
         // (the first pop may already have happened; the recorder logs
@@ -1739,6 +2249,7 @@ mod tests {
                         model: model.into(),
                         input: vec![i as f32].into(),
                         id: i,
+                        deadline_ms: None,
                     })
                     .unwrap(),
                 );
@@ -1785,7 +2296,7 @@ mod tests {
     }
 
     fn single_batching(backend: Arc<dyn Backend>, policy: BatchPolicy) -> InferenceService {
-        let shard = Shard::new("b".to_string(), backend, 1, 1, 8, policy);
+        let shard = Shard::new("b".to_string(), backend, 1, 1, 0, 8, policy, None);
         InferenceService::start(
             vec![shard],
             1,
@@ -1793,6 +2304,7 @@ mod tests {
             AdmissionPolicy::Block,
             BatchPolicy::default(),
             NetworkRegistry::empty(),
+            ResilienceConfig::default(),
         )
     }
 
@@ -1809,6 +2321,7 @@ mod tests {
                     model: "b".into(),
                     input: vec![i as f32].into(),
                     id: i,
+                    deadline_ms: None,
                 })
                 .unwrap()
             })
@@ -1852,6 +2365,7 @@ mod tests {
                 model: "b".into(),
                 input: vec![1.0].into(),
                 id: 1,
+                deadline_ms: None,
             })
             .unwrap();
         // The worker has popped the job and is holding for stragglers.
@@ -1882,6 +2396,7 @@ mod tests {
                 model: "b".into(),
                 input: vec![7.0].into(),
                 id: 7,
+                deadline_ms: None,
             })
             .unwrap();
         wait_until(|| svc.metrics().model("b").unwrap().in_flight == 1);

@@ -6,9 +6,10 @@
 use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::engine::serve::percentile;
+use crate::faults::FaultPlan;
 use crate::util::rng::SplitMix64;
 
 use super::frame::{ErrorCode, Frame, WireError, WIRE_VERSION};
@@ -72,12 +73,28 @@ impl WireClient {
             .map(|(_, len)| *len as usize)
     }
 
-    /// Fire one `Infer` without waiting (pipelining primitive).
+    /// Fire one `Infer` without waiting (pipelining primitive), with
+    /// no deadline and attempt 0.
     pub fn send(&mut self, id: u64, model: &str, input: Arc<[f32]>) -> Result<(), WireError> {
+        self.send_with(id, model, input, 0, 0)
+    }
+
+    /// Fire one `Infer` carrying an explicit deadline budget
+    /// (milliseconds, 0 = none) and retry-attempt counter.
+    pub fn send_with(
+        &mut self,
+        id: u64,
+        model: &str,
+        input: Arc<[f32]>,
+        deadline_ms: u64,
+        attempt: u8,
+    ) -> Result<(), WireError> {
         Frame::Infer {
             id,
             model: model.to_string(),
             input,
+            deadline_ms,
+            attempt,
         }
         .write_to(&mut self.writer)?;
         self.writer.flush()?;
@@ -100,6 +117,45 @@ impl WireClient {
             other => Err(WireError::Handshake(format!(
                 "expected Result/Error, got {other:?}"
             ))),
+        }
+    }
+
+    /// Call-response with client-side resilience: re-send on
+    /// retryable server errors (full queue, admission timeout,
+    /// breaker open, worker stalled) with exponential backoff, and
+    /// carry `deadline_ms` (0 = none) on every attempt. Non-retryable
+    /// errors and transport errors surface immediately; exhausting
+    /// the retry budget surfaces the last server error.
+    pub fn infer_with_retry(
+        &mut self,
+        model: &str,
+        input: &[f32],
+        deadline_ms: u64,
+        policy: RetryPolicy,
+    ) -> Result<Vec<f32>, WireError> {
+        let payload: Arc<[f32]> = input.to_vec().into();
+        let mut attempt: u8 = 0;
+        loop {
+            self.send_with(0, model, payload.clone(), deadline_ms, attempt)?;
+            let err = match self.recv()? {
+                Frame::Result { output, .. } => return Ok(output),
+                Frame::Error { code, message, .. } => WireError::Remote { code, message },
+                other => {
+                    return Err(WireError::Handshake(format!(
+                        "expected Result/Error, got {other:?}"
+                    )))
+                }
+            };
+            let retryable = matches!(
+                &err,
+                WireError::Remote { code, .. }
+                    if ErrorCode::from_u8(*code).is_some_and(ErrorCode::is_retryable)
+            );
+            if !retryable || u32::from(attempt) >= policy.max_retries {
+                return Err(err);
+            }
+            std::thread::sleep(Duration::from_millis(policy.backoff_ms(attempt)));
+            attempt = attempt.saturating_add(1);
         }
     }
 
@@ -135,6 +191,36 @@ impl WireClient {
     }
 }
 
+/// How a client re-sends requests that failed with a retryable
+/// server error ([`ErrorCode::is_retryable`]). Attempt `k` (0-based)
+/// backs off `base_backoff_ms << k` milliseconds before re-sending.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Re-sends after the first attempt (0 = never retry).
+    pub max_retries: u32,
+    /// Backoff before the first retry; doubles per attempt.
+    pub base_backoff_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_retries: 0,
+            base_backoff_ms: 5,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before re-sending after failed attempt `attempt`
+    /// (0-based), capped at one second.
+    pub fn backoff_ms(&self, attempt: u8) -> u64 {
+        self.base_backoff_ms
+            .saturating_mul(1u64 << attempt.min(20))
+            .min(1000)
+    }
+}
+
 /// Load-generation parameters (`loadgen` CLI subcommand).
 #[derive(Debug, Clone)]
 pub struct LoadGenConfig {
@@ -150,6 +236,15 @@ pub struct LoadGenConfig {
     pub models: Vec<String>,
     /// Seed for the synthetic input payloads.
     pub seed: u64,
+    /// Client-side retry policy for retryable server errors.
+    pub retry: RetryPolicy,
+    /// Deadline budget stamped on every request (None = none).
+    pub deadline_ms: Option<u64>,
+    /// Client-side chaos: a seeded plan whose `connection_drop`
+    /// decisions (keyed by request id) sever the TCP connection
+    /// mid-run — outstanding requests are counted `lost` and the
+    /// connection re-established.
+    pub chaos: Option<Arc<FaultPlan>>,
 }
 
 /// Aggregated outcome of one load-generation run.
@@ -169,6 +264,14 @@ pub struct LoadGenReport {
     pub rejected_backpressure: u64,
     /// Connections that died mid-run (handshake or socket failures).
     pub transport_errors: u64,
+    /// Requests outstanding on a connection when it dropped — they
+    /// got no response at all. `sent == ok + failed +
+    /// rejected_backpressure + lost` always holds, so the client's
+    /// ledger reconciles against the server's even under chaos.
+    pub lost: u64,
+    /// Re-sends of requests that failed with a retryable error
+    /// (counted separately from `sent`, which counts first sends).
+    pub retried: u64,
     /// Wall-clock of the whole run.
     pub total_s: f64,
     pub req_per_s: f64,
@@ -183,6 +286,8 @@ struct ConnOutcome {
     ok: u64,
     failed: u64,
     rejected: u64,
+    lost: u64,
+    retried: u64,
     transport_error: bool,
     latencies_ms: Vec<f64>,
 }
@@ -215,6 +320,8 @@ pub fn run_loadgen(cfg: &LoadGenConfig) -> Result<LoadGenReport, WireError> {
         report.ok += o.ok;
         report.failed += o.failed;
         report.rejected_backpressure += o.rejected;
+        report.lost += o.lost;
+        report.retried += o.retried;
         report.transport_errors += u64::from(o.transport_error);
         latencies.extend(o.latencies_ms);
     }
@@ -231,14 +338,24 @@ pub fn run_loadgen(cfg: &LoadGenConfig) -> Result<LoadGenReport, WireError> {
     Ok(report)
 }
 
+/// One in-flight loadgen request.
+struct Pending {
+    id: u64,
+    sent_at: Instant,
+    attempt: u8,
+}
+
 /// One connection's run: keep up to `in_flight` requests outstanding,
-/// cycling models round-robin, until `quota` requests are answered.
+/// cycling models round-robin, until `quota` requests are resolved
+/// (answered, retries exhausted, or lost to an injected drop).
 fn run_connection(cfg: &LoadGenConfig, index: usize, quota: usize) -> ConnOutcome {
     let mut out = ConnOutcome {
         sent: 0,
         ok: 0,
         failed: 0,
         rejected: 0,
+        lost: 0,
+        retried: 0,
         transport_error: false,
         latencies_ms: Vec::with_capacity(quota),
     };
@@ -265,18 +382,44 @@ fn run_connection(cfg: &LoadGenConfig, index: usize, quota: usize) -> ConnOutcom
             (m.clone(), data.into())
         })
         .collect();
-    let mut outstanding: Vec<(u64, Instant)> = Vec::with_capacity(cfg.in_flight);
+    let deadline_ms = cfg.deadline_ms.unwrap_or(0);
+    let payload_for = |id: u64| &payloads[(id as usize) % payloads.len()];
+    let mut outstanding: Vec<Pending> = Vec::with_capacity(cfg.in_flight);
     let mut next = 0u64;
     let mut done = 0usize;
     while done < quota {
         // Fill the pipelining window…
         while out.sent < quota as u64 && outstanding.len() < cfg.in_flight {
-            let (model, payload) = &payloads[(next as usize) % payloads.len()];
-            if client.send(next, model, payload.clone()).is_err() {
+            // Client-side chaos: a drop decision on this request id
+            // severs the connection before the send. Everything
+            // outstanding is lost (no response will ever come) and
+            // the connection is re-established.
+            if cfg.chaos.as_ref().is_some_and(|p| p.connection_drop(next)) {
+                out.lost += outstanding.len() as u64;
+                done += outstanding.len();
+                outstanding.clear();
+                drop(client);
+                client = match WireClient::connect(&cfg.addr) {
+                    Ok(c) => c,
+                    // `lost` only counts *sent* requests; the rest of
+                    // the quota was never put on the wire.
+                    Err(_) => {
+                        out.transport_error = true;
+                        return out;
+                    }
+                };
+            }
+            let (model, payload) = payload_for(next);
+            if client.send_with(next, model, payload.clone(), deadline_ms, 0).is_err() {
                 out.transport_error = true;
+                out.lost += outstanding.len() as u64;
                 return out;
             }
-            outstanding.push((next, Instant::now()));
+            outstanding.push(Pending {
+                id: next,
+                sent_at: Instant::now(),
+                attempt: 0,
+            });
             out.sent += 1;
             next += 1;
         }
@@ -285,6 +428,7 @@ fn run_connection(cfg: &LoadGenConfig, index: usize, quota: usize) -> ConnOutcom
             Ok(f) => f,
             Err(_) => {
                 out.transport_error = true;
+                out.lost += outstanding.len() as u64;
                 return out;
             }
         };
@@ -293,16 +437,44 @@ fn run_connection(cfg: &LoadGenConfig, index: usize, quota: usize) -> ConnOutcom
             Frame::Error { id, code, .. } => (id, false, code),
             _ => {
                 out.transport_error = true;
+                out.lost += outstanding.len() as u64;
                 return out;
             }
         };
-        if let Some(pos) = outstanding.iter().position(|(i, _)| *i == id) {
-            let (_, sent_at) = outstanding.swap_remove(pos);
+        if let Some(pos) = outstanding.iter().position(|p| p.id == id) {
+            let pending = outstanding.swap_remove(pos);
             if is_ok {
                 out.ok += 1;
                 out.latencies_ms
-                    .push(sent_at.elapsed().as_secs_f64() * 1e3);
-            } else if code == ErrorCode::QueueFull.as_u8()
+                    .push(pending.sent_at.elapsed().as_secs_f64() * 1e3);
+                done += 1;
+                continue;
+            }
+            let retryable =
+                ErrorCode::from_u8(code).is_some_and(ErrorCode::is_retryable);
+            if retryable && u32::from(pending.attempt) < cfg.retry.max_retries {
+                std::thread::sleep(Duration::from_millis(
+                    cfg.retry.backoff_ms(pending.attempt),
+                ));
+                let attempt = pending.attempt.saturating_add(1);
+                let (model, payload) = payload_for(id);
+                if client
+                    .send_with(id, model, payload.clone(), deadline_ms, attempt)
+                    .is_err()
+                {
+                    out.transport_error = true;
+                    out.lost += outstanding.len() as u64 + 1;
+                    return out;
+                }
+                out.retried += 1;
+                outstanding.push(Pending {
+                    id,
+                    sent_at: pending.sent_at,
+                    attempt,
+                });
+                continue;
+            }
+            if code == ErrorCode::QueueFull.as_u8()
                 || code == ErrorCode::AdmissionTimeout.as_u8()
             {
                 out.rejected += 1;

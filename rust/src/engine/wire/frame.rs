@@ -19,7 +19,7 @@
 //! | kind | frame        | body fields after the kind byte            |
 //! |------|--------------|--------------------------------------------|
 //! | 1    | `Hello`      | u32 magic, u16 version, u16 n, n × (u16 name-len, name, u32 input-len) |
-//! | 2    | `Infer`      | u64 id, u16 model-len, model, u32 count, count × f32 |
+//! | 2    | `Infer`      | u64 id, u16 model-len, model, u32 count, count × f32, u64 deadline-ms (0 = none), u8 attempt |
 //! | 3    | `Result`     | u64 id, f64 latency-ms, u32 count, count × f32 |
 //! | 4    | `Error`      | u64 id, u8 code, u32 msg-len, msg          |
 //! | 5    | `MetricsRequest` | (empty)                                |
@@ -44,7 +44,12 @@ pub const WIRE_MAGIC: u32 = u32::from_le_bytes(*b"HDRV");
 /// Protocol version negotiated in `Hello`. A mismatch is a typed
 /// [`WireError::VersionMismatch`], answered on the wire with error
 /// code [`ErrorCode::VersionMismatch`] before the server closes.
-pub const WIRE_VERSION: u16 = 1;
+///
+/// v2 extends `Infer` with a per-request deadline and a retry-attempt
+/// counter, and adds error codes 9–11 (deadline exceeded, breaker
+/// open, worker stalled). v1 peers are rejected at the handshake — the
+/// frame layout itself changed, so there is no silent downgrade.
+pub const WIRE_VERSION: u16 = 2;
 
 /// Hard cap on a frame body (64 MiB): a hostile or corrupt length
 /// prefix must not drive an unbounded allocation.
@@ -132,6 +137,12 @@ pub enum ErrorCode {
     ShuttingDown = 6,
     Panicked = 7,
     Failed = 8,
+    /// The request's deadline expired before (or while) it ran.
+    DeadlineExceeded = 9,
+    /// The model's circuit breaker is Open — shed at the door.
+    BreakerOpen = 10,
+    /// The watchdog failed this request after its worker stalled.
+    WorkerStalled = 11,
     /// The connection broke protocol (malformed frame, unexpected
     /// kind); scoped to the connection, not a request.
     Protocol = 100,
@@ -154,10 +165,28 @@ impl ErrorCode {
             6 => ErrorCode::ShuttingDown,
             7 => ErrorCode::Panicked,
             8 => ErrorCode::Failed,
+            9 => ErrorCode::DeadlineExceeded,
+            10 => ErrorCode::BreakerOpen,
+            11 => ErrorCode::WorkerStalled,
             100 => ErrorCode::Protocol,
             101 => ErrorCode::VersionMismatch,
             _ => return None,
         })
+    }
+
+    /// Whether a request failing with this code is worth re-sending.
+    /// Transient congestion (full queue, admission timeout, tripped
+    /// breaker) and a stalled worker are; semantic failures (unknown
+    /// model, bad input, deadline already blown) are not — a retry
+    /// would fail identically or arrive too late to matter.
+    pub fn is_retryable(self) -> bool {
+        matches!(
+            self,
+            ErrorCode::QueueFull
+                | ErrorCode::AdmissionTimeout
+                | ErrorCode::BreakerOpen
+                | ErrorCode::WorkerStalled
+        )
     }
 }
 
@@ -172,6 +201,9 @@ pub fn error_code_for(err: &ServeError) -> ErrorCode {
         ServeError::ShuttingDown => ErrorCode::ShuttingDown,
         ServeError::Panicked { .. } => ErrorCode::Panicked,
         ServeError::Failed { .. } => ErrorCode::Failed,
+        ServeError::DeadlineExceeded { .. } => ErrorCode::DeadlineExceeded,
+        ServeError::BreakerOpen { .. } => ErrorCode::BreakerOpen,
+        ServeError::WorkerStalled { .. } => ErrorCode::WorkerStalled,
     }
 }
 
@@ -186,11 +218,18 @@ pub enum Frame {
         version: u16,
         models: Vec<(String, u32)>,
     },
-    /// One inference request, client → server.
+    /// One inference request, client → server. `deadline_ms` is the
+    /// client's remaining latency budget (0 = none) — the server sheds
+    /// the request with [`ErrorCode::DeadlineExceeded`] once it
+    /// expires instead of burning backend cycles on a result nobody
+    /// will read. `attempt` counts client-side retries (0 = first
+    /// send) so the server's metrics can attribute them.
     Infer {
         id: u64,
         model: String,
         input: Arc<[f32]>,
+        deadline_ms: u64,
+        attempt: u8,
     },
     /// One successful inference, server → client.
     Result {
@@ -315,12 +354,20 @@ impl Frame {
                     body.extend_from_slice(&input_len.to_le_bytes());
                 }
             }
-            Frame::Infer { id, model, input } => {
+            Frame::Infer {
+                id,
+                model,
+                input,
+                deadline_ms,
+                attempt,
+            } => {
                 body.push(KIND_INFER);
                 body.extend_from_slice(&id.to_le_bytes());
                 body.extend_from_slice(&(model.len() as u16).to_le_bytes());
                 body.extend_from_slice(model.as_bytes());
                 push_f32s(&mut body, input);
+                body.extend_from_slice(&deadline_ms.to_le_bytes());
+                body.push(*attempt);
             }
             Frame::Result {
                 id,
@@ -383,7 +430,15 @@ impl Frame {
                 let model = c.string(model_len, "infer model name")?;
                 let count = c.u32("infer value count")? as usize;
                 let input: Arc<[f32]> = c.f32s(count, "infer payload")?.into();
-                Frame::Infer { id, model, input }
+                let deadline_ms = c.u64("infer deadline")?;
+                let attempt = c.u8("infer attempt")?;
+                Frame::Infer {
+                    id,
+                    model,
+                    input,
+                    deadline_ms,
+                    attempt,
+                }
             }
             KIND_RESULT => {
                 let id = c.u64("result id")?;

@@ -24,6 +24,6 @@ pub mod client;
 pub mod frame;
 pub mod server;
 
-pub use client::{run_loadgen, LoadGenConfig, LoadGenReport, WireClient};
+pub use client::{run_loadgen, LoadGenConfig, LoadGenReport, RetryPolicy, WireClient};
 pub use frame::{ErrorCode, Frame, WireError, MAX_BODY, WIRE_MAGIC, WIRE_VERSION};
 pub use server::{WireServer, WireStats};

@@ -144,6 +144,10 @@ impl WireServer {
     /// [`local_addr`](Self::local_addr)) and start accepting.
     pub fn start(service: Arc<InferenceService>, addr: &str) -> Result<WireServer, WireError> {
         let listener = TcpListener::bind(addr)?;
+        // Nonblocking listener: the accept loop polls (WouldBlock →
+        // check the stop flag, nap, retry) instead of parking inside
+        // `accept()` — shutdown then needs no wake-up connection.
+        listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
         let shared = Arc::new(ServerShared {
             service,
@@ -192,9 +196,8 @@ impl WireServer {
 
     fn stop(&mut self) {
         self.shared.stop.store(true, Ordering::Release);
-        // `accept()` has no timeout; a throwaway self-connection wakes
-        // it so it can observe the stop flag.
-        let _ = TcpStream::connect(self.addr);
+        // The nonblocking accept loop observes the flag on its next
+        // poll tick (≤ a few ms).
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
@@ -222,20 +225,33 @@ fn accept_loop(
     conns: &Arc<Mutex<Vec<ConnSlot>>>,
 ) {
     loop {
+        if shared.stop.load(Ordering::Acquire) {
+            return;
+        }
         let stream = match listener.accept() {
-            Ok((stream, _)) => stream,
+            Ok((stream, _)) => {
+                // The listener is nonblocking so `accept` never parks
+                // this thread, but each connection's reader/writer
+                // threads use plain blocking I/O.
+                if stream.set_nonblocking(false).is_err() {
+                    continue;
+                }
+                stream
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                continue;
+            }
             Err(_) => {
                 if shared.stop.load(Ordering::Acquire) {
                     return;
                 }
+                // Transient accept failure (EMFILE, ECONNABORTED…):
+                // back off briefly instead of hot-spinning.
+                std::thread::sleep(std::time::Duration::from_millis(5));
                 continue;
             }
         };
-        if shared.stop.load(Ordering::Acquire) {
-            // The wake-up self-connection (or a client racing the
-            // shutdown): close it unserved.
-            return;
-        }
         shared.connections.fetch_add(1, Ordering::Relaxed);
         shared.active.fetch_add(1, Ordering::Relaxed);
         let tracked = stream.try_clone().ok();
@@ -335,10 +351,27 @@ fn handle_connection(shared: &Arc<ServerShared>, stream: TcpStream) {
 
     loop {
         match Frame::read_from(&mut reader) {
-            Ok(Frame::Infer { id, model, input }) => {
+            Ok(Frame::Infer {
+                id,
+                model,
+                input,
+                deadline_ms,
+                attempt,
+            }) => {
                 shared.frames_rx.fetch_add(1, Ordering::Relaxed);
                 shared.infer_rx.fetch_add(1, Ordering::Relaxed);
-                match shared.service.submit(InferRequest { model, input, id }) {
+                if attempt > 0 {
+                    // A client-side retry: attribute it on the
+                    // server's per-model metrics row.
+                    shared.service.note_retry(&model);
+                }
+                let deadline_ms = (deadline_ms > 0).then_some(deadline_ms);
+                match shared.service.submit(InferRequest {
+                    model,
+                    input,
+                    id,
+                    deadline_ms,
+                }) {
                     Ok(ticket) => {
                         let depth = in_flight.fetch_add(1, Ordering::Relaxed) + 1;
                         shared.max_in_flight.fetch_max(depth, Ordering::Relaxed);

@@ -1,0 +1,459 @@
+//! Deterministic fault-injection plane.
+//!
+//! A [`FaultPlan`] is a seeded set of rules, each pairing a [`FaultKind`]
+//! (what breaks) with a [`Trigger`] (when it breaks). The plan threads into
+//! the mesh simulator (`simulator::mesh::MeshSim`), the inference service
+//! (`engine::service::InferenceService`) and the wire load generator
+//! (`engine::wire::run_loadgen`), which consult it at well-defined *sites*:
+//!
+//! | kind               | site                                            |
+//! |--------------------|-------------------------------------------------|
+//! | `ChipDeath`        | mesh: before a chip's per-step job is collected |
+//! | `CorruptExchange`  | mesh: a halo border transfer, after checksum    |
+//! | `WorkerStall{ms}`  | service: a worker wedges before running a batch |
+//! | `SlowModel{ms}`    | service: extra latency before running a batch   |
+//! | `ConnectionDrop`   | loadgen: client severs its TCP connection       |
+//!
+//! Decisions are **stateless**: whether a rule fires for sequence number
+//! `seq` at a given site is a pure hash of `(seed, site tag, seq)`. Two runs
+//! with the same seed and the same per-site sequence numbering therefore
+//! inject *identical* faults regardless of thread interleaving — which is
+//! what makes chaos soaks reproducible and counter assertions exact.
+//! Sequence numbers are chosen by each site to be schedule-independent
+//! (request ids for the service and loadgen, `step * chips + chip` for mesh
+//! chip death, the quiescent-flag transfer index for border exchanges).
+//!
+//! Fired faults are tallied in lock-free per-kind counters; snapshot them
+//! with [`FaultPlan::counters`] and compare across runs.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// What kind of fault a rule injects. Duration-carrying kinds (`WorkerStall`,
+/// `SlowModel`) embed the injected delay in milliseconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// A mesh chip dies: its per-step job fails before execution.
+    ChipDeath,
+    /// A halo border transfer is corrupted in flight (single bit flip).
+    CorruptExchange,
+    /// A service worker wedges for `ms` before running its batch.
+    WorkerStall {
+        /// How long the worker stays wedged, in milliseconds.
+        ms: u64,
+    },
+    /// A client connection is severed mid-stream by the load generator.
+    ConnectionDrop,
+    /// A model mysteriously slows down by `ms` for one batch.
+    SlowModel {
+        /// Added latency in milliseconds.
+        ms: u64,
+    },
+}
+
+impl FaultKind {
+    /// Stable site tag mixed into the decision hash. Distinct per kind so
+    /// the same seq at different sites draws independent decisions.
+    fn tag(self) -> u64 {
+        match self {
+            FaultKind::ChipDeath => 0x43_48_49_50,        // "CHIP"
+            FaultKind::CorruptExchange => 0x48_41_4c_4f,  // "HALO"
+            FaultKind::WorkerStall { .. } => 0x57_44_47,  // "WDG"
+            FaultKind::ConnectionDrop => 0x44_52_4f_50,   // "DROP"
+            FaultKind::SlowModel { .. } => 0x53_4c_4f_57, // "SLOW"
+        }
+    }
+
+    fn counter_index(self) -> usize {
+        match self {
+            FaultKind::ChipDeath => 0,
+            FaultKind::CorruptExchange => 1,
+            FaultKind::WorkerStall { .. } => 2,
+            FaultKind::ConnectionDrop => 3,
+            FaultKind::SlowModel { .. } => 4,
+        }
+    }
+}
+
+/// When a rule fires, as a function of the site's sequence number.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Trigger {
+    /// Fire on every decision.
+    Always,
+    /// Fire exactly once, on sequence number `n`.
+    Nth(u64),
+    /// Fire on every `n`-th decision (`seq % n == 0`; `n == 0` never fires).
+    Every(u64),
+    /// Fire with probability `p` per decision, derived from the seeded hash.
+    Prob(f64),
+}
+
+/// One injection rule: a kind plus its trigger.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultRule {
+    /// What breaks.
+    pub kind: FaultKind,
+    /// When it breaks.
+    pub trigger: Trigger,
+}
+
+/// Snapshot of how many faults of each kind a plan has injected so far.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Chips killed before executing a mesh step.
+    pub chip_deaths: u64,
+    /// Halo transfers corrupted in flight.
+    pub corrupt_exchanges: u64,
+    /// Workers wedged before running a batch.
+    pub worker_stalls: u64,
+    /// Client connections severed by the load generator.
+    pub connection_drops: u64,
+    /// Batches slowed by injected latency.
+    pub slow_models: u64,
+}
+
+impl FaultCounters {
+    /// Total faults injected across all kinds.
+    pub fn total(&self) -> u64 {
+        self.chip_deaths
+            + self.corrupt_exchanges
+            + self.worker_stalls
+            + self.connection_drops
+            + self.slow_models
+    }
+}
+
+impl fmt::Display for FaultCounters {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} chip deaths, {} corrupt exchanges, {} worker stalls, \
+             {} connection drops, {} slow batches",
+            self.chip_deaths,
+            self.corrupt_exchanges,
+            self.worker_stalls,
+            self.connection_drops,
+            self.slow_models
+        )
+    }
+}
+
+/// A seeded, deterministic fault plan. Cheap to share via `Arc`; all
+/// counters are atomic so the same plan can be consulted from any thread.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    seed: u64,
+    rules: Vec<FaultRule>,
+    fired: [AtomicU64; 5],
+}
+
+/// SplitMix64: a tiny, well-mixed stateless hash. Same constants as the
+/// reference implementation; mirrored in `python/tests/test_resilience_mirror.py`.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Map `(seed, tag, seq)` to a uniform draw in `[0, 1)`.
+fn draw(seed: u64, tag: u64, seq: u64) -> f64 {
+    let h = splitmix64(seed ^ splitmix64(tag) ^ splitmix64(seq.wrapping_mul(0x9e37)));
+    // 53 high bits -> uniform double in [0, 1).
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+impl FaultPlan {
+    /// An empty plan under `seed`; add rules with [`FaultPlan::rule`].
+    pub fn new(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            rules: Vec::new(),
+            fired: Default::default(),
+        }
+    }
+
+    /// An empty plan that never fires (useful as a no-op default).
+    pub fn none() -> Self {
+        FaultPlan::new(0)
+    }
+
+    /// Builder-style: append a rule.
+    pub fn rule(mut self, kind: FaultKind, trigger: Trigger) -> Self {
+        self.rules.push(FaultRule { kind, trigger });
+        self
+    }
+
+    /// The seed this plan draws decisions from.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// True if the plan has no rules and can never fire.
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// Snapshot the per-kind injection tallies.
+    pub fn counters(&self) -> FaultCounters {
+        FaultCounters {
+            chip_deaths: self.fired[0].load(Ordering::Relaxed),
+            corrupt_exchanges: self.fired[1].load(Ordering::Relaxed),
+            worker_stalls: self.fired[2].load(Ordering::Relaxed),
+            connection_drops: self.fired[3].load(Ordering::Relaxed),
+            slow_models: self.fired[4].load(Ordering::Relaxed),
+        }
+    }
+
+    /// Core decision: does any rule of kind-class `kind` fire at `seq`?
+    /// Returns the (parameterised) kind of the first matching rule and
+    /// bumps its counter.
+    fn decide(&self, matches: impl Fn(FaultKind) -> bool, seq: u64) -> Option<FaultKind> {
+        for rule in &self.rules {
+            if !matches(rule.kind) {
+                continue;
+            }
+            let fires = match rule.trigger {
+                Trigger::Always => true,
+                Trigger::Nth(n) => seq == n,
+                Trigger::Every(n) => n > 0 && seq % n == 0,
+                Trigger::Prob(p) => draw(self.seed, rule.kind.tag(), seq) < p,
+            };
+            if fires {
+                self.fired[rule.kind.counter_index()].fetch_add(1, Ordering::Relaxed);
+                return Some(rule.kind);
+            }
+        }
+        None
+    }
+
+    /// Should the chip at decision index `seq` die this step?
+    pub fn chip_death(&self, seq: u64) -> bool {
+        self.decide(|k| matches!(k, FaultKind::ChipDeath), seq).is_some()
+    }
+
+    /// Should border transfer `seq` be corrupted in flight?
+    pub fn corrupt_exchange(&self, seq: u64) -> bool {
+        self.decide(|k| matches!(k, FaultKind::CorruptExchange), seq)
+            .is_some()
+    }
+
+    /// Should the worker handling request `seq` wedge? Returns the stall
+    /// duration in milliseconds.
+    pub fn worker_stall(&self, seq: u64) -> Option<u64> {
+        match self.decide(|k| matches!(k, FaultKind::WorkerStall { .. }), seq) {
+            Some(FaultKind::WorkerStall { ms }) => Some(ms),
+            _ => None,
+        }
+    }
+
+    /// Should the client drop its connection before sending request `seq`?
+    pub fn connection_drop(&self, seq: u64) -> bool {
+        self.decide(|k| matches!(k, FaultKind::ConnectionDrop), seq)
+            .is_some()
+    }
+
+    /// Should the batch for request `seq` run slow? Returns the added
+    /// latency in milliseconds.
+    pub fn slow_model(&self, seq: u64) -> Option<u64> {
+        match self.decide(|k| matches!(k, FaultKind::SlowModel { .. }), seq) {
+            Some(FaultKind::SlowModel { ms }) => Some(ms),
+            _ => None,
+        }
+    }
+
+    /// Parse a CLI chaos spec.
+    ///
+    /// Grammar: `SEED` alone, or `SEED:rule[,rule...]` where each rule is
+    /// `kind@trigger`:
+    ///
+    /// * kinds — `chip-death`, `corrupt`, `stall:MS`, `drop`, `slow:MS`
+    /// * triggers — `always`, `nth:N`, `every:N`, `prob:P`
+    ///
+    /// `SEED` alone expands to a default chaos mix (worker stalls and slow
+    /// batches at low probability, an occasional connection drop):
+    /// `SEED:slow:20@prob:0.1,stall:50@prob:0.05,drop@prob:0.05`.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let (seed_str, rules_str) = match spec.split_once(':') {
+            Some((s, r)) => (s, Some(r)),
+            None => (spec, None),
+        };
+        let seed: u64 = seed_str
+            .parse()
+            .map_err(|_| format!("chaos spec: bad seed {seed_str:?}"))?;
+        let mut plan = FaultPlan::new(seed);
+        let Some(rules_str) = rules_str else {
+            return Ok(plan
+                .rule(FaultKind::SlowModel { ms: 20 }, Trigger::Prob(0.1))
+                .rule(FaultKind::WorkerStall { ms: 50 }, Trigger::Prob(0.05))
+                .rule(FaultKind::ConnectionDrop, Trigger::Prob(0.05)));
+        };
+        for rule in rules_str.split(',') {
+            let (kind_str, trig_str) = rule
+                .split_once('@')
+                .ok_or_else(|| format!("chaos spec: rule {rule:?} missing '@trigger'"))?;
+            let kind = match kind_str.split_once(':') {
+                None => match kind_str {
+                    "chip-death" => FaultKind::ChipDeath,
+                    "corrupt" => FaultKind::CorruptExchange,
+                    "drop" => FaultKind::ConnectionDrop,
+                    other => return Err(format!("chaos spec: unknown kind {other:?}")),
+                },
+                Some((name, ms)) => {
+                    let ms: u64 = ms
+                        .parse()
+                        .map_err(|_| format!("chaos spec: bad duration {ms:?}"))?;
+                    match name {
+                        "stall" => FaultKind::WorkerStall { ms },
+                        "slow" => FaultKind::SlowModel { ms },
+                        other => return Err(format!("chaos spec: unknown kind {other:?}")),
+                    }
+                }
+            };
+            let trigger = match trig_str.split_once(':') {
+                None if trig_str == "always" => Trigger::Always,
+                Some(("nth", n)) => Trigger::Nth(
+                    n.parse()
+                        .map_err(|_| format!("chaos spec: bad nth {n:?}"))?,
+                ),
+                Some(("every", n)) => Trigger::Every(
+                    n.parse()
+                        .map_err(|_| format!("chaos spec: bad every {n:?}"))?,
+                ),
+                Some(("prob", p)) => {
+                    let p: f64 = p
+                        .parse()
+                        .map_err(|_| format!("chaos spec: bad prob {p:?}"))?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(format!("chaos spec: prob {p} outside [0, 1]"));
+                    }
+                    Trigger::Prob(p)
+                }
+                _ => return Err(format!("chaos spec: unknown trigger {trig_str:?}")),
+            };
+            plan.rules.push(FaultRule { kind, trigger });
+        }
+        Ok(plan)
+    }
+}
+
+/// Fold a halo payload's bits into a parity byte. XOR-folding detects every
+/// single-bit flip (each payload bit lands in exactly one checksum bit), the
+/// fault model `CorruptExchange` injects. Mirrored in
+/// `python/tests/test_resilience_mirror.py`.
+pub fn halo_checksum(bits: u32) -> u8 {
+    let h = bits ^ (bits >> 16);
+    let b = h ^ (h >> 8);
+    (b & 0xff) as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_never_fires() {
+        let plan = FaultPlan::none();
+        for seq in 0..1000 {
+            assert!(!plan.chip_death(seq));
+            assert!(!plan.corrupt_exchange(seq));
+            assert!(plan.worker_stall(seq).is_none());
+            assert!(!plan.connection_drop(seq));
+            assert!(plan.slow_model(seq).is_none());
+        }
+        assert_eq!(plan.counters().total(), 0);
+        assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn schedule_triggers_fire_exactly_when_asked() {
+        let plan = FaultPlan::new(1)
+            .rule(FaultKind::ChipDeath, Trigger::Nth(3))
+            .rule(FaultKind::CorruptExchange, Trigger::Every(4));
+        let deaths: Vec<u64> = (0..10).filter(|&s| plan.chip_death(s)).collect();
+        assert_eq!(deaths, vec![3]);
+        let corrupt: Vec<u64> = (0..10).filter(|&s| plan.corrupt_exchange(s)).collect();
+        assert_eq!(corrupt, vec![0, 4, 8]);
+        let c = plan.counters();
+        assert_eq!(c.chip_deaths, 1);
+        assert_eq!(c.corrupt_exchanges, 3);
+        assert_eq!(c.total(), 4);
+    }
+
+    #[test]
+    fn prob_trigger_is_deterministic_per_seed_and_roughly_calibrated() {
+        let a = FaultPlan::new(42).rule(FaultKind::ConnectionDrop, Trigger::Prob(0.25));
+        let b = FaultPlan::new(42).rule(FaultKind::ConnectionDrop, Trigger::Prob(0.25));
+        let fa: Vec<bool> = (0..4000).map(|s| a.connection_drop(s)).collect();
+        let fb: Vec<bool> = (0..4000).map(|s| b.connection_drop(s)).collect();
+        assert_eq!(fa, fb, "same seed must make identical decisions");
+        let hits = fa.iter().filter(|&&f| f).count();
+        assert!(
+            (800..=1200).contains(&hits),
+            "p=0.25 over 4000 draws fired {hits} times"
+        );
+        let c = FaultPlan::new(43).rule(FaultKind::ConnectionDrop, Trigger::Prob(0.25));
+        let fc: Vec<bool> = (0..4000).map(|s| c.connection_drop(s)).collect();
+        assert_ne!(fa, fc, "different seeds should differ somewhere");
+    }
+
+    #[test]
+    fn sites_draw_independent_decisions() {
+        // Same trigger probability on two kinds: the fire patterns must not
+        // be identical, because the site tag is mixed into the hash.
+        let plan = FaultPlan::new(7)
+            .rule(FaultKind::ChipDeath, Trigger::Prob(0.5))
+            .rule(FaultKind::ConnectionDrop, Trigger::Prob(0.5));
+        let a: Vec<bool> = (0..256).map(|s| plan.chip_death(s)).collect();
+        let b: Vec<bool> = (0..256).map(|s| plan.connection_drop(s)).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn duration_kinds_return_their_payload() {
+        let plan = FaultPlan::new(9)
+            .rule(FaultKind::WorkerStall { ms: 120 }, Trigger::Nth(2))
+            .rule(FaultKind::SlowModel { ms: 35 }, Trigger::Always);
+        assert_eq!(plan.worker_stall(1), None);
+        assert_eq!(plan.worker_stall(2), Some(120));
+        assert_eq!(plan.slow_model(77), Some(35));
+    }
+
+    #[test]
+    fn parse_round_trips_the_grammar() {
+        let plan = FaultPlan::parse("11:chip-death@nth:3,stall:50@prob:0.1,corrupt@every:8")
+            .expect("valid spec");
+        assert_eq!(plan.seed(), 11);
+        assert_eq!(plan.rules.len(), 3);
+        assert_eq!(
+            plan.rules[1],
+            FaultRule {
+                kind: FaultKind::WorkerStall { ms: 50 },
+                trigger: Trigger::Prob(0.1),
+            }
+        );
+        // Seed-only spec expands to the default mix.
+        let mix = FaultPlan::parse("5").expect("seed-only spec");
+        assert_eq!(mix.seed(), 5);
+        assert_eq!(mix.rules.len(), 3);
+        // Errors are typed, not panics.
+        assert!(FaultPlan::parse("x").is_err());
+        assert!(FaultPlan::parse("3:martian@always").is_err());
+        assert!(FaultPlan::parse("3:drop@prob:1.5").is_err());
+        assert!(FaultPlan::parse("3:drop").is_err());
+    }
+
+    #[test]
+    fn halo_checksum_detects_every_single_bit_flip() {
+        for bits in [0u32, 1, 0x3f80_0000, 0xdead_beef, u32::MAX] {
+            let base = halo_checksum(bits);
+            for flip in 0..32 {
+                assert_ne!(
+                    halo_checksum(bits ^ (1 << flip)),
+                    base,
+                    "flip of bit {flip} in {bits:#x} went undetected"
+                );
+            }
+        }
+    }
+}

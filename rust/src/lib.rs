@@ -72,6 +72,7 @@ pub mod bwn;
 pub mod coordinator;
 pub mod energy;
 pub mod engine;
+pub mod faults;
 pub mod model;
 pub mod network;
 pub mod report;

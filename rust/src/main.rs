@@ -34,9 +34,11 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use hyperdrive::engine::{
-    run_loadgen, AdmissionPolicy, BackendKind, DepthwisePolicy, Engine, EngineError, InferRequest,
-    InferenceService, LoadGenConfig, ServeError, ServeOptions, WireError, WireServer,
+    run_loadgen, AdmissionPolicy, BackendKind, BreakerPolicy, DepthwisePolicy, Engine, EngineError,
+    InferRequest, InferenceService, LoadGenConfig, RetryPolicy, ServeError, ServeOptions, WireError,
+    WireServer,
 };
+use hyperdrive::faults::FaultPlan;
 use hyperdrive::model::NetworkRegistry;
 use hyperdrive::report;
 use hyperdrive::util::SplitMix64;
@@ -50,11 +52,15 @@ fn usage() -> &'static str {
        serve --model SPEC[,SPEC...] [--requests N] [--mix round-robin|random]\n\
              [--workers W] [--queue-depth D] [--admission block|reject|timeout:MS]\n\
              [--max-batch B] [--batch-wait-ms MS] [--seed S]\n\
+             [--deadline-ms MS] [--breaker FAILS:P99MS:COOLMS] [--watchdog-ms MS]\n\
+             [--chaos SPEC]   resilience: per-request deadline, circuit\n\
+             breaker, stalled-worker watchdog, seeded fault injection\n\
              [--listen ADDR [--conn-limit N]]   serve over TCP instead of a\n\
              synthetic in-process workload (port 0 picks a free port;\n\
              --conn-limit 0 serves forever)\n\
        loadgen --connect ADDR --model NAME[,NAME...] [--connections C]\n\
-             [--in-flight K] [--requests N] [--seed S]\n\
+             [--in-flight K] [--requests N] [--seed S] [--retries N]\n\
+             [--backoff-ms MS] [--deadline-ms MS] [--chaos SPEC]\n\
              drive a serve --listen instance over TCP\n\
        run-e2e [--artifacts DIR] [--batch N] [--workers N]\n\
        simulate --model SPEC [--mesh RxC] [--vdd V] [--vbb V] [--threads N]\n\
@@ -64,6 +70,9 @@ fn usage() -> &'static str {
      e.g. --model resnet34@512x1024, --model yolov3@416,\n\
      --model manifest:artifacts#hypernet20\n\
      (legacy: --net NAME [--height H] [--width W])\n\
+     chaos specs: SEED alone (default chaos mix) or SEED:kind@trigger[,...]\n\
+     with kinds chip-death|corrupt|stall:MS|drop|slow:MS and triggers\n\
+     always|nth:N|every:N|prob:P, e.g. --chaos 7:slow:20@prob:0.1,drop@every:16\n\
      options may be given as `--key value` or `--key=value`; each key at most once"
 }
 
@@ -177,6 +186,46 @@ fn opt_parse<T: std::str::FromStr>(
         Some(v) => v
             .parse()
             .map_err(|_| OptError::BadValue(key.to_string(), v.clone(), want)),
+    }
+}
+
+/// Parse `--breaker FAILS:P99MS:COOLMS` into a [`BreakerPolicy`]
+/// (consecutive-failure trip threshold, Degraded p99 latency bound in
+/// ms — `inf` disables the latency signal — and Open cooldown in ms).
+fn parse_breaker(spec: &str) -> Result<BreakerPolicy, OptError> {
+    let bad = || OptError::BadValue("breaker".into(), spec.into(), "FAILS:P99MS:COOLMS");
+    let mut parts = spec.splitn(3, ':');
+    let fails = parts.next().and_then(|s| s.parse::<u64>().ok());
+    let p99 = parts.next().and_then(|s| s.parse::<f64>().ok());
+    let cool = parts.next().and_then(|s| s.parse::<u64>().ok());
+    match (fails, p99, cool) {
+        (Some(consecutive_failures), Some(p99_ms), Some(cooldown_ms))
+            if consecutive_failures > 0 && p99_ms > 0.0 =>
+        {
+            Ok(BreakerPolicy {
+                consecutive_failures,
+                p99_ms,
+                cooldown_ms,
+            })
+        }
+        _ => Err(bad()),
+    }
+}
+
+/// Parse `--chaos SPEC` through [`FaultPlan::parse`], mapping grammar
+/// errors onto the CLI's structured option error.
+fn parse_chaos(opts: &HashMap<String, String>) -> Result<Option<Arc<FaultPlan>>, OptError> {
+    match opts.get("chaos") {
+        None => Ok(None),
+        Some(spec) => FaultPlan::parse(spec)
+            .map(|plan| Some(Arc::new(plan)))
+            .map_err(|_| {
+                OptError::BadValue(
+                    "chaos".into(),
+                    spec.clone(),
+                    "SEED or SEED:kind@trigger[,...] (see `hyperdrive help`)",
+                )
+            }),
     }
 }
 
@@ -342,6 +391,25 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<String, CliError> {
         .admission(admission)
         .max_batch(max_batch)
         .batch_wait_ms(batch_wait_ms);
+    if let Some(ms) = opts.get("deadline-ms") {
+        let ms: u64 = ms.parse().map_err(|_| {
+            OptError::BadValue("deadline-ms".into(), ms.clone(), "an unsigned integer")
+        })?;
+        builder = builder.deadline_ms(ms);
+    }
+    if let Some(spec) = opts.get("breaker") {
+        builder = builder.breaker(parse_breaker(spec)?);
+    }
+    if let Some(ms) = opts.get("watchdog-ms") {
+        let ms: u64 = ms.parse().ok().filter(|&ms| ms > 0).ok_or_else(|| {
+            OptError::BadValue("watchdog-ms".into(), ms.clone(), "a positive integer")
+        })?;
+        builder = builder.watchdog_ms(ms);
+    }
+    let chaos = parse_chaos(opts)?;
+    if let Some(plan) = &chaos {
+        builder = builder.faults(plan.clone());
+    }
     for spec in &specs {
         builder = builder.model_spec(spec.as_str());
     }
@@ -349,7 +417,7 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<String, CliError> {
 
     if let Some(listen) = opts.get("listen") {
         let conn_limit: u64 = opt_parse(opts, "conn-limit", 0, "an unsigned integer")?;
-        return cmd_serve_listen(service, listen, conn_limit, workers, &specs);
+        return cmd_serve_listen(service, listen, conn_limit, workers, &specs, chaos);
     }
 
     let mut rng = SplitMix64::new(seed);
@@ -366,6 +434,7 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<String, CliError> {
             model: model.clone(),
             input: input.into(),
             id: i as u64,
+            deadline_ms: None,
         }) {
             Ok(t) => tickets.push(t),
             // Reject/Timeout admission drops are part of the workload
@@ -392,9 +461,13 @@ fn cmd_serve(opts: &HashMap<String, String>) -> Result<String, CliError> {
     } else {
         String::new()
     };
+    let chaos_line = match &chaos {
+        Some(plan) => format!("chaos (seed {}): {}\n", plan.seed(), plan.counters()),
+        None => String::new(),
+    };
     Ok(format!(
         "served {requests} requests over {} model(s) on {workers} workers ({mix} mix): \
-         {ok} ok, {failed} failed, {rejected} rejected at admission\n{}{batching}",
+         {ok} ok, {failed} failed, {rejected} rejected at admission\n{}{batching}{chaos_line}",
         specs.len(),
         metrics.render_table()
     ))
@@ -411,6 +484,7 @@ fn cmd_serve_listen(
     conn_limit: u64,
     workers: usize,
     specs: &[String],
+    chaos: Option<Arc<FaultPlan>>,
 ) -> Result<String, CliError> {
     let service = Arc::new(service);
     let server = WireServer::start(service.clone(), listen)?;
@@ -430,10 +504,14 @@ fn cmd_serve_listen(
         Ok(svc) => svc.shutdown(),
         Err(arc) => arc.metrics(),
     };
+    let chaos_line = match &chaos {
+        Some(plan) => format!("\nchaos (seed {}): {}", plan.seed(), plan.counters()),
+        None => String::new(),
+    };
     Ok(format!(
         "served {} connection(s) over {} model(s) on {workers} workers\n{}\
          wire: {} connections, {} frames in, {} frames out, {} malformed, \
-         {} infer requests, peak in-flight {}",
+         {} infer requests, peak in-flight {}{chaos_line}",
         wire.connections,
         specs.len(),
         metrics.render_table(),
@@ -476,6 +554,16 @@ fn cmd_loadgen(opts: &HashMap<String, String>) -> Result<String, CliError> {
             "loadgen needs --connections, --in-flight and --requests all ≥ 1".into(),
         ));
     }
+    let max_retries: u32 = opt_parse(opts, "retries", 0, "an unsigned integer")?;
+    let base_backoff_ms: u64 =
+        opt_parse(opts, "backoff-ms", RetryPolicy::default().base_backoff_ms, "an unsigned integer")?;
+    let deadline_ms: Option<u64> = match opts.get("deadline-ms") {
+        None => None,
+        Some(v) => Some(v.parse().map_err(|_| {
+            OptError::BadValue("deadline-ms".into(), v.clone(), "an unsigned integer")
+        })?),
+    };
+    let chaos = parse_chaos(opts)?;
     let report = run_loadgen(&LoadGenConfig {
         addr,
         connections,
@@ -483,11 +571,21 @@ fn cmd_loadgen(opts: &HashMap<String, String>) -> Result<String, CliError> {
         requests,
         models,
         seed,
+        retry: RetryPolicy {
+            max_retries,
+            base_backoff_ms,
+        },
+        deadline_ms,
+        chaos: chaos.clone(),
     })?;
+    let chaos_line = match &chaos {
+        Some(plan) => format!("\nchaos (seed {}): {}", plan.seed(), plan.counters()),
+        None => String::new(),
+    };
     Ok(format!(
         "loadgen: {} sent, {} ok, {} failed, {} rejected, {} transport errors \
-         over {} connections × in-flight {}\n\
-         → {:.1} req/s, mean {:.2} ms, p50 {:.2} ms, p99 {:.2} ms",
+         over {} connections × in-flight {} ({} lost in flight, {} retried)\n\
+         → {:.1} req/s, mean {:.2} ms, p50 {:.2} ms, p99 {:.2} ms{chaos_line}",
         report.sent,
         report.ok,
         report.failed,
@@ -495,6 +593,8 @@ fn cmd_loadgen(opts: &HashMap<String, String>) -> Result<String, CliError> {
         report.transport_errors,
         report.connections,
         report.in_flight,
+        report.lost,
+        report.retried,
         report.req_per_s,
         report.mean_ms,
         report.p50_ms,
@@ -854,6 +954,83 @@ mod tests {
         ]))
         .unwrap();
         assert!(matches!(cmd_loadgen(&opts).unwrap_err(), CliError::Usage(_)));
+    }
+
+    #[test]
+    fn breaker_spec_parses_thresholds_and_rejects_nonsense() {
+        let pol = parse_breaker("5:250:1000").unwrap();
+        assert_eq!(pol.consecutive_failures, 5);
+        assert_eq!(pol.p99_ms, 250.0);
+        assert_eq!(pol.cooldown_ms, 1000);
+        // `inf` disables the latency signal but keeps the failure trip.
+        let pol = parse_breaker("3:inf:500").unwrap();
+        assert!(pol.p99_ms.is_infinite());
+        for bad in ["", "5", "5:250", "0:250:1000", "5:-1:1000", "a:b:c"] {
+            assert!(parse_breaker(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn resilience_flags_are_validated() {
+        // A malformed chaos spec is a structured option error on both
+        // subcommands (loadgen checks it before dialing out).
+        let opts = parse_opts(&args(&["--model", "hypernet20", "--chaos", "7:warp@always"])).unwrap();
+        assert!(matches!(
+            cmd_serve(&opts).unwrap_err(),
+            CliError::Opt(OptError::BadValue(_, _, _))
+        ));
+        let opts = parse_opts(&args(&[
+            "--connect",
+            "127.0.0.1:9",
+            "--model",
+            "hypernet20",
+            "--chaos",
+            "not-a-seed",
+        ]))
+        .unwrap();
+        assert!(matches!(
+            cmd_loadgen(&opts).unwrap_err(),
+            CliError::Opt(OptError::BadValue(_, _, _))
+        ));
+        // Bad breaker / watchdog / deadline values too.
+        for bad in [
+            &["--model", "hypernet20", "--breaker", "5:250"][..],
+            &["--model", "hypernet20", "--watchdog-ms", "0"][..],
+            &["--model", "hypernet20", "--deadline-ms", "soon"][..],
+        ] {
+            let opts = parse_opts(&args(bad)).unwrap();
+            assert!(
+                matches!(cmd_serve(&opts).unwrap_err(), CliError::Opt(OptError::BadValue(_, _, _))),
+                "{bad:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn serve_subcommand_reports_chaos_counters() {
+        // A 1 ms always-slow plan never fails anything but must show up
+        // in the chaos ledger line.
+        let opts = parse_opts(&args(&[
+            "--model",
+            "hypernet20",
+            "--requests",
+            "4",
+            "--workers",
+            "2",
+            "--deadline-ms",
+            "60000",
+            "--breaker",
+            "8:inf:1000",
+            "--watchdog-ms",
+            "60000",
+            "--chaos",
+            "5:slow:1@always",
+        ]))
+        .unwrap();
+        let out = cmd_serve(&opts).unwrap();
+        assert!(out.contains("4 ok, 0 failed"), "{out}");
+        assert!(out.contains("chaos (seed 5): "), "{out}");
+        assert!(out.contains("4 slow batches"), "{out}");
     }
 
     #[test]

@@ -76,6 +76,15 @@ pub enum MeshError {
     },
     /// One [`StepParams`] per network step is required.
     ParamsMismatch { params: usize, steps: usize },
+    /// Chip `(row, col)` died before executing step `step` (injected via
+    /// [`crate::faults::FaultPlan`]): its tile is gone and the step
+    /// cannot complete. A real deployment would re-shard around it; the
+    /// simulator surfaces the typed loss instead of silently-wrong pixels.
+    ChipDead { chip: (usize, usize), step: usize },
+    /// A halo border transfer into chip `(row, col)` failed its parity
+    /// check: the payload was corrupted in flight. Detected — never
+    /// applied to the feature map.
+    CorruptExchange { chip: (usize, usize), tensor: usize },
 }
 
 impl fmt::Display for MeshError {
@@ -89,6 +98,16 @@ impl fmt::Display for MeshError {
             MeshError::ParamsMismatch { params, steps } => write!(
                 f,
                 "{params} step parameter sets for a {steps}-step network"
+            ),
+            MeshError::ChipDead { chip, step } => write!(
+                f,
+                "chip ({}, {}) died before step {step}",
+                chip.0, chip.1
+            ),
+            MeshError::CorruptExchange { chip, tensor } => write!(
+                f,
+                "halo transfer of tensor {tensor} into chip ({}, {}) failed its checksum",
+                chip.0, chip.1
             ),
         }
     }
@@ -314,6 +333,11 @@ pub struct MeshSim {
     /// NaN-poisoned halo then propagates to the output — used to verify
     /// the protocol checking actually bites).
     pub fault_drop_send: Option<u64>,
+    /// Seeded fault plan: per-step chip death (decision index
+    /// `step * rows * cols + chip`) and in-flight halo corruption
+    /// (decision index = the quiescent-flag transfer sequence, the same
+    /// numbering `fault_drop_send` uses). `None` injects nothing.
+    pub faults: Option<std::sync::Arc<crate::faults::FaultPlan>>,
 }
 
 impl MeshSim {
@@ -326,7 +350,15 @@ impl MeshSim {
             tiles_mn: (7, 7),
             threads: 1,
             fault_drop_send: None,
+            faults: None,
         }
+    }
+
+    /// Does the chip at linear index `idx` die before step `si`?
+    fn chip_dies(&self, si: usize, idx: usize) -> bool {
+        self.faults
+            .as_ref()
+            .is_some_and(|p| p.chip_death((si * self.rows * self.cols + idx) as u64))
     }
 
     fn bounds(&self, dim: usize, parts: usize, i: usize) -> (usize, usize) {
@@ -451,6 +483,9 @@ impl MeshSim {
                 for r in 0..self.rows {
                     for c in 0..self.cols {
                         let idx = r * self.cols + c;
+                        if self.chip_dies(si, idx) {
+                            return Err(MeshError::ChipDead { chip: (r, c), step: si });
+                        }
                         let chip = &tiles[idx];
                         let src = chip.get(&src_id).ok_or(MeshError::MissingTile {
                             chip: (r, c),
@@ -645,6 +680,9 @@ impl MeshSim {
                 for r in 0..self.rows {
                     for c in 0..self.cols {
                         let idx = r * self.cols + c;
+                        if self.chip_dies(si, idx) {
+                            return Err(MeshError::ChipDead { chip: (r, c), step: si });
+                        }
                         let mut ins = Vec::with_capacity(b);
                         let mut byps = byp_id.map(|_| Vec::with_capacity(b));
                         for img in tiles.iter() {
@@ -988,6 +1026,14 @@ impl MeshSim {
             if self.fault_drop_send == Some(seq) {
                 continue;
             }
+            // Sender stamps a parity checksum over the payload bits, then
+            // the fault plan may corrupt the payload "in flight" (single
+            // bit flip). The receiver verifies before applying.
+            let csum = crate::faults::halo_checksum(v.to_bits());
+            let v = match &self.faults {
+                Some(plan) if plan.corrupt_exchange(seq) => f32::from_bits(v.to_bits() ^ 1),
+                _ => v,
+            };
             stats.flags.sent();
             let bits = self.fm_bits as u64 * hops as u64;
             if hops == 1 {
@@ -996,6 +1042,12 @@ impl MeshSim {
                 stats.corner_bits += bits;
             }
             stats.flits += link_flits(1, self.fm_bits) * hops as u64;
+            if crate::faults::halo_checksum(v.to_bits()) != csum {
+                return Err(MeshError::CorruptExchange {
+                    chip: (dst / self.cols, dst % self.cols),
+                    tensor,
+                });
+            }
             let t = tiles[dst].get_mut(&tensor).ok_or(MeshError::MissingTile {
                 chip: (dst / self.cols, dst % self.cols),
                 tensor,

@@ -1,0 +1,267 @@
+//! Chaos/fault-injection integration tests: seeded [`FaultPlan`]s
+//! drive deterministic failures through the mesh simulator and the
+//! serving stack, and the resilience machinery (typed mesh errors,
+//! deadlines, watchdog, graceful shutdown) must absorb them — every
+//! admitted ticket resolves, shutdown never hangs, and identical
+//! seeds reproduce identical fault counters.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hyperdrive::bwn::pack_weights;
+use hyperdrive::engine::{InferRequest, InferenceService, ServeError, Ticket};
+use hyperdrive::faults::{FaultKind, FaultPlan, Trigger};
+use hyperdrive::network::{ConvLayer, Network, TensorRef};
+use hyperdrive::simulator::mesh::{MeshError, MeshSim, StepParams};
+use hyperdrive::simulator::{FeatureMap, Precision};
+use hyperdrive::util::SplitMix64;
+
+/// Smallest mesh-runnable network with real border exchange: two
+/// 3×3 convs over an 8×8 FM on a 2×2 mesh. Two layers matter — the
+/// mesh only runs an exchange phase for tensors a *later* step
+/// consumes with a halo, so a single-layer net never exchanges.
+fn tiny_net() -> Network {
+    let mut net = Network::new("chaos-net", 4, 8, 8);
+    let c0 = net.push(
+        ConvLayer::new("c0", 4, 4, 8, 8, 3, 1),
+        TensorRef::Input,
+        None,
+    );
+    net.push(
+        ConvLayer::new("c1", 4, 4, 8, 8, 3, 1),
+        TensorRef::Step(c0),
+        None,
+    );
+    net.validate().expect("valid network");
+    net
+}
+
+fn tiny_params(net: &Network, rng: &mut SplitMix64) -> Vec<StepParams> {
+    net.steps
+        .iter()
+        .map(|s| {
+            let l = &s.layer;
+            let nie = l.n_in / l.groups;
+            let w: Vec<f32> = (0..l.n_out * nie * l.k * l.k)
+                .map(|_| rng.next_sym())
+                .collect();
+            let fan_in = (nie * l.k * l.k) as f32;
+            StepParams {
+                stream: pack_weights(l, &w, 16),
+                gamma: (0..l.n_out)
+                    .map(|_| (0.1 + 0.4 * rng.next_f32()) / fan_in)
+                    .collect(),
+                beta: (0..l.n_out).map(|_| 0.1 * rng.next_sym()).collect(),
+            }
+        })
+        .collect()
+}
+
+fn tiny_input(net: &Network, rng: &mut SplitMix64) -> FeatureMap {
+    FeatureMap::from_vec(
+        net.in_ch,
+        net.in_h,
+        net.in_w,
+        (0..net.in_ch * net.in_h * net.in_w)
+            .map(|_| rng.next_sym())
+            .collect(),
+    )
+}
+
+#[test]
+fn mesh_chip_death_is_a_typed_error() {
+    let mut rng = SplitMix64::new(0xdead);
+    let net = tiny_net();
+    let params = tiny_params(&net, &mut rng);
+    let input = tiny_input(&net, &mut rng);
+    let mut sim = MeshSim::new(2, 2, Precision::F32);
+    // Site seq for chip death is `step * rows * cols + chip`; Nth(0)
+    // kills chip (0, 0) before step 0.
+    let plan = Arc::new(FaultPlan::new(1).rule(FaultKind::ChipDeath, Trigger::Nth(0)));
+    sim.faults = Some(plan.clone());
+    match sim.run_network(&net, &params, &input) {
+        Err(MeshError::ChipDead { chip, step }) => {
+            assert_eq!(chip, (0, 0));
+            assert_eq!(step, 0);
+        }
+        other => panic!("expected ChipDead, got {other:?}"),
+    }
+    assert_eq!(plan.counters().chip_deaths, 1);
+}
+
+#[test]
+fn mesh_halo_corruption_fails_the_checksum() {
+    let mut rng = SplitMix64::new(0xc0de);
+    let net = tiny_net();
+    let params = tiny_params(&net, &mut rng);
+    let input = tiny_input(&net, &mut rng);
+    let mut sim = MeshSim::new(2, 2, Precision::F32);
+    let plan = Arc::new(FaultPlan::new(2).rule(FaultKind::CorruptExchange, Trigger::Always));
+    sim.faults = Some(plan.clone());
+    match sim.run_network(&net, &params, &input) {
+        Err(MeshError::CorruptExchange { .. }) => {}
+        other => panic!("expected CorruptExchange, got {other:?}"),
+    }
+    assert!(plan.counters().corrupt_exchanges >= 1);
+}
+
+#[test]
+fn empty_fault_plan_is_bit_exact_with_no_plan() {
+    let mut rng = SplitMix64::new(0x5eed);
+    let net = tiny_net();
+    let params = tiny_params(&net, &mut rng);
+    let input = tiny_input(&net, &mut rng);
+    let clean = {
+        let sim = MeshSim::new(2, 2, Precision::F32);
+        sim.run_network(&net, &params, &input).expect("clean run").0
+    };
+    let mut sim = MeshSim::new(2, 2, Precision::F32);
+    let plan = Arc::new(FaultPlan::new(99)); // seeded, zero rules
+    sim.faults = Some(plan.clone());
+    let (out, stats) = sim.run_network(&net, &params, &input).expect("no-op plan run");
+    assert_eq!(out.max_abs_diff(&clean), 0.0);
+    assert!(stats.flags.is_quiescent());
+    assert_eq!(plan.counters().total(), 0);
+}
+
+/// Build a single-model service over `hypernet20` with the given
+/// chaos plan and worker count.
+fn chaos_service(plan: Arc<FaultPlan>, workers: usize, watchdog_ms: u64) -> InferenceService {
+    InferenceService::builder()
+        .model_spec("hypernet20")
+        .workers(workers)
+        .queue_depth(64)
+        .faults(plan)
+        .watchdog_ms(watchdog_ms)
+        .build()
+        .expect("service build")
+}
+
+/// Run `n` requests through a chaos service and wait every ticket.
+/// Returns how many resolved Ok (the rest must carry typed errors).
+fn soak(svc: &InferenceService, n: u64) -> u64 {
+    let len = svc.input_len("hypernet20").expect("hosted model");
+    let mut rng = SplitMix64::new(0x50a6);
+    let tickets: Vec<Ticket> = (0..n)
+        .map(|i| {
+            let input: Vec<f32> = (0..len).map(|_| rng.next_sym()).collect();
+            svc.submit(InferRequest {
+                model: "hypernet20".into(),
+                input: input.into(),
+                id: i,
+                deadline_ms: None,
+            })
+            .expect("admission (queue is deep enough)")
+        })
+        .collect();
+    let mut ok = 0;
+    for t in tickets {
+        match t.wait() {
+            Ok(_) => ok += 1,
+            Err(
+                ServeError::WorkerStalled { .. }
+                | ServeError::DeadlineExceeded { .. }
+                | ServeError::ShuttingDown,
+            ) => {}
+            Err(other) => panic!("unexpected chaos-soak error: {other}"),
+        }
+    }
+    ok
+}
+
+#[test]
+fn chaos_soak_resolves_every_ticket_and_reproduces_counters() {
+    // Probability-triggered slow batches and short stalls, keyed by
+    // request id: the soak must resolve all 48 tickets, and a second
+    // service built from an identically-seeded plan must inject
+    // exactly the same faults.
+    let build_plan = || {
+        Arc::new(
+            FaultPlan::new(0xCAFE)
+                .rule(FaultKind::SlowModel { ms: 4 }, Trigger::Prob(0.3))
+                .rule(FaultKind::WorkerStall { ms: 8 }, Trigger::Prob(0.2)),
+        )
+    };
+    let mut counter_snapshots = Vec::new();
+    for _ in 0..2 {
+        let plan = build_plan();
+        let svc = chaos_service(plan.clone(), 4, 5_000);
+        let ok = soak(&svc, 48);
+        // Stalls here are 8 ms against a 5 s watchdog: nothing gets
+        // abandoned, so every request must succeed.
+        assert_eq!(ok, 48);
+        let metrics = svc.shutdown();
+        let counters = plan.counters();
+        assert!(counters.total() > 0, "chaos plan never fired: {counters}");
+        assert_eq!(counters.chip_deaths, 0);
+        assert_eq!(counters.connection_drops, 0);
+        assert_eq!(
+            metrics.total_faults_injected(),
+            counters.slow_models + counters.worker_stalls,
+            "service metrics must agree with the plan's ledger"
+        );
+        counter_snapshots.push(format!("{counters}"));
+    }
+    assert_eq!(
+        counter_snapshots[0], counter_snapshots[1],
+        "identical seeds must inject identical faults"
+    );
+}
+
+#[test]
+fn watchdog_fails_stalled_work_and_shutdown_stays_fast() {
+    // Every executed batch stalls 30 s; the 100 ms watchdog must fail
+    // the in-flight ticket with WorkerStalled (not hang the waiter),
+    // and shutdown must detach the stuck worker instead of joining it.
+    let plan = Arc::new(FaultPlan::new(9).rule(
+        FaultKind::WorkerStall { ms: 30_000 },
+        Trigger::Always,
+    ));
+    let svc = chaos_service(plan, 1, 100);
+    let len = svc.input_len("hypernet20").expect("hosted model");
+    let ticket = svc
+        .submit(InferRequest {
+            model: "hypernet20".into(),
+            input: vec![0.5f32; len].into(),
+            id: 1,
+            deadline_ms: None,
+        })
+        .expect("admission");
+    let t0 = Instant::now();
+    match ticket.wait() {
+        Err(ServeError::WorkerStalled { model, stalled_ms }) => {
+            assert_eq!(model, "hypernet20");
+            assert!(stalled_ms >= 100, "stalled_ms = {stalled_ms}");
+        }
+        other => panic!("expected WorkerStalled, got {other:?}"),
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "ticket.wait() should resolve at watchdog speed, took {:?}",
+        t0.elapsed()
+    );
+    let t1 = Instant::now();
+    let metrics = svc.shutdown();
+    assert!(
+        t1.elapsed() < Duration::from_secs(1),
+        "shutdown must detach the stalled worker, took {:?}",
+        t1.elapsed()
+    );
+    assert_eq!(metrics.total_failed(), 1);
+}
+
+#[test]
+fn fault_plan_parse_round_trips_the_cli_grammar() {
+    // The `--chaos` CLI spec: bare seed expands to the default mix…
+    let plan = FaultPlan::parse("42").expect("bare seed");
+    assert_eq!(plan.seed(), 42);
+    assert!(!plan.is_empty());
+    // …and the full grammar pins kinds and triggers.
+    let plan =
+        FaultPlan::parse("7:stall:50@prob:0.05,drop@every:10,chip-death@nth:3").expect("full spec");
+    assert_eq!(plan.seed(), 7);
+    assert!(plan.worker_stall(u64::MAX).is_none() || plan.worker_stall(u64::MAX) == Some(50));
+    assert!(FaultPlan::parse("x:stall").is_err());
+    assert!(FaultPlan::parse("7:warp@always").is_err());
+    assert!(FaultPlan::parse("7:drop@prob:1.5").is_err());
+}

@@ -86,6 +86,7 @@ fn multi_model_soak_is_bit_exact_and_metrics_add_up() {
                     model: MODELS[which].into(),
                     input: input.into(),
                     id: i as u64,
+                    deadline_ms: None,
                 })
                 .unwrap(),
         );
@@ -161,6 +162,7 @@ fn failing_model_does_not_lose_other_requests() {
                     model: model.into(),
                     input: random_input(direct.input_len(), 50 + i).into(),
                     id: i,
+                    deadline_ms: None,
                 })
                 .unwrap(),
         );
@@ -199,6 +201,7 @@ fn submit_errors_are_typed_and_scoped() {
             model: "resnet34".into(),
             input: vec![0.0; want].into(),
             id: 0,
+            deadline_ms: None,
         })
         .unwrap_err()
     {
@@ -213,6 +216,7 @@ fn submit_errors_are_typed_and_scoped() {
             model: "hypernet20".into(),
             input: vec![0.0; 7].into(),
             id: 0,
+            deadline_ms: None,
         })
         .unwrap_err()
     {

@@ -12,8 +12,10 @@ use hyperdrive::engine::wire::frame::{
     ErrorCode, Frame, WireError, CONNECTION_ID, MAX_BODY, WIRE_VERSION,
 };
 use hyperdrive::engine::{
-    run_loadgen, Engine, InferenceService, LoadGenConfig, WireClient, WireServer,
+    run_loadgen, AdmissionPolicy, Engine, InferenceService, LoadGenConfig, RetryPolicy,
+    WireClient, WireServer,
 };
+use hyperdrive::faults::{FaultKind, FaultPlan, Trigger};
 use hyperdrive::util::SplitMix64;
 
 const MODELS: [&str; 2] = ["hypernet20", "resnet18@32x32"];
@@ -39,6 +41,8 @@ fn codec_round_trips_every_frame_kind() {
                 id: rng.next_u64(),
                 model: "resnet18@32x32".into(),
                 input: payload.clone().into(),
+                deadline_ms: 250,
+                attempt: 2,
             },
             Frame::Result {
                 id: rng.next_u64(),
@@ -72,6 +76,8 @@ fn codec_round_trips_random_infer_payloads() {
             id: rng.next_u64(),
             model: format!("m{}", rng.next_below(100)),
             input: input.into(),
+            deadline_ms: rng.next_u64() % 10_000,
+            attempt: (rng.next_u64() % 4) as u8,
         };
         assert_eq!(round_trip(&frame), frame);
     }
@@ -91,6 +97,8 @@ fn truncated_streams_are_typed_errors() {
         id: 1,
         model: "m".into(),
         input: vec![1.0, 2.0, 3.0].into(),
+        deadline_ms: 0,
+        attempt: 0,
     }
     .encode();
     for cut in 5..bytes.len() {
@@ -353,6 +361,9 @@ fn loadgen_reports_backpressure_and_pipelines() {
         requests: 32,
         models: MODELS.iter().map(|m| m.to_string()).collect(),
         seed: 11,
+        retry: RetryPolicy::default(),
+        deadline_ms: None,
+        chaos: None,
     })
     .expect("loadgen");
     assert_eq!(report.sent, 32);
@@ -361,8 +372,118 @@ fn loadgen_reports_backpressure_and_pipelines() {
     assert_eq!(report.rejected_backpressure, 0);
     assert_eq!(report.transport_errors, 0);
     assert!(report.p99_ms >= report.p50_ms);
+    assert_eq!(report.lost, 0);
+    assert_eq!(report.retried, 0);
     let stats = server.shutdown();
     assert!(stats.max_in_flight >= 1);
     assert_eq!(stats.infer_rx, 32);
+    Arc::try_unwrap(service).ok().expect("last Arc").shutdown();
+}
+
+#[test]
+fn deadlines_expire_on_the_wire_as_code_9() {
+    // One worker + a chaos plan that makes every executed batch sleep
+    // 400 ms: request 1 (generous deadline) hogs the worker while
+    // requests 2 and 3 (150 ms budgets) expire in the queue and must
+    // come back as DeadlineExceeded — shed before execution, so the
+    // whole test takes ~one slow pass, not three.
+    let plan = Arc::new(FaultPlan::new(7).rule(FaultKind::SlowModel { ms: 400 }, Trigger::Always));
+    let service = Arc::new(
+        InferenceService::builder()
+            .model_spec(MODELS[0])
+            .workers(1)
+            .queue_depth(8)
+            .faults(plan.clone())
+            .build()
+            .expect("service build"),
+    );
+    let server = WireServer::start(service.clone(), "127.0.0.1:0").expect("bind");
+    let mut client = WireClient::connect(&server.local_addr().to_string()).expect("connect");
+    let len = client.input_len(MODELS[0]).expect("model advertised");
+    let input: Arc<[f32]> = vec![0.25f32; len].into();
+    client
+        .send_with(1, MODELS[0], input.clone(), 30_000, 0)
+        .expect("send 1");
+    client
+        .send_with(2, MODELS[0], input.clone(), 150, 0)
+        .expect("send 2");
+    client
+        .send_with(3, MODELS[0], input, 150, 0)
+        .expect("send 3");
+    let mut ok = Vec::new();
+    let mut expired = Vec::new();
+    for _ in 0..3 {
+        match client.recv().expect("response") {
+            Frame::Result { id, .. } => ok.push(id),
+            Frame::Error { id, code, message } => {
+                assert_eq!(code, ErrorCode::DeadlineExceeded.as_u8(), "{message}");
+                assert!(message.contains("deadline"), "{message}");
+                expired.push(id);
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    expired.sort_unstable();
+    assert_eq!(ok, vec![1]);
+    assert_eq!(expired, vec![2, 3]);
+    client.goodbye().expect("teardown");
+    assert!(plan.counters().slow_models >= 1, "{}", plan.counters());
+    server.shutdown();
+    let metrics = Arc::try_unwrap(service).ok().expect("last Arc").shutdown();
+    assert_eq!(metrics.total_deadline_exceeded(), 2);
+}
+
+#[test]
+fn retryable_rejections_are_retried_until_resolved() {
+    // queue_depth 1 + Reject admission + a 50 ms slow-model plan: a
+    // pipelined burst mostly bounces off the full queue with QueueFull
+    // (retryable, code 3). With retries enabled every request must
+    // still resolve — ok or rejected after exhausting its budget —
+    // and the ledger reconciles: sent == ok + rejected + failed, with
+    // the server's per-model retry counter agreeing with the client's.
+    let plan = Arc::new(FaultPlan::new(3).rule(FaultKind::SlowModel { ms: 50 }, Trigger::Always));
+    let service = Arc::new(
+        InferenceService::builder()
+            .model_spec(MODELS[0])
+            .workers(1)
+            .queue_depth(1)
+            .admission(AdmissionPolicy::Reject)
+            .faults(plan)
+            .build()
+            .expect("service build"),
+    );
+    let server = WireServer::start(service.clone(), "127.0.0.1:0").expect("bind");
+    let report = run_loadgen(&LoadGenConfig {
+        addr: server.local_addr().to_string(),
+        connections: 1,
+        in_flight: 8,
+        requests: 16,
+        models: vec![MODELS[0].to_string()],
+        seed: 5,
+        retry: RetryPolicy {
+            max_retries: 6,
+            base_backoff_ms: 20,
+        },
+        deadline_ms: None,
+        chaos: None,
+    })
+    .expect("loadgen");
+    assert_eq!(report.sent, 16);
+    assert_eq!(report.transport_errors, 0);
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.lost, 0);
+    assert_eq!(report.ok + report.rejected_backpressure, 16);
+    assert!(report.retried > 0, "a full queue must have forced retries");
+    // Server-side attribution: every re-send carried attempt > 0 and
+    // was counted on the model's metrics row.
+    let mut probe = WireClient::connect(&server.local_addr().to_string()).expect("connect");
+    let table = probe.metrics_table().expect("metrics");
+    assert!(
+        table.contains(&format!("{} retries", report.retried)),
+        "client saw {} retries; table:\n{table}",
+        report.retried
+    );
+    probe.goodbye().expect("teardown");
+    server.shutdown();
     Arc::try_unwrap(service).ok().expect("last Arc").shutdown();
 }
