@@ -1,0 +1,165 @@
+"""Stdlib-only mirror of the Rust streaming-video dirty tracker
+(`rust/src/video/dirty.rs`).
+
+The container has no Rust toolchain, so this pins the *algorithm*
+independently: ``propagate`` must be exact receptive-field reachability
+through a same-padded k×k/stride conv — not a superset, not an
+undercount — and ``upsample`` must be exact through the 2× nearest
+replication. Both are checked against a brute-force per-output-pixel
+tap walk over randomized shapes, tile sizes, and dirty patterns.
+Constants (the ``-(k//2)`` tap anchor, ceil-div output dims, same
+padding clamped to the FM) are transliterated from the Rust source; if
+either side changes, these tests disagree with ``cargo test`` and one
+of them is wrong.
+"""
+
+import random
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+class DirtyMap:
+    """Mirror of `video::DirtyMap` (geometry + propagate/upsample)."""
+
+    def __init__(self, h: int, w: int, tile: int):
+        assert h > 0 and w > 0 and tile > 0
+        self.h, self.w, self.tile = h, w, tile
+        self.th, self.tw = ceil_div(h, tile), ceil_div(w, tile)
+        self.bits = [[False] * self.tw for _ in range(self.th)]
+
+    def mark(self, ty: int, tx: int):
+        self.bits[ty][tx] = True
+
+    def is_dirty(self, ty: int, tx: int) -> bool:
+        return self.bits[ty][tx]
+
+    def rect_dirty_incl(self, y0: int, y1: int, x0: int, x1: int) -> bool:
+        # Inclusive pixel bounds, like the Rust helper.
+        for ty in range(y0 // self.tile, y1 // self.tile + 1):
+            for tx in range(x0 // self.tile, x1 // self.tile + 1):
+                if self.bits[ty][tx]:
+                    return True
+        return False
+
+    def propagate(self, h: int, w: int, k: int, stride: int) -> "DirtyMap":
+        # Mirror of `DirtyMap::propagate`: the input rows/cols a tile of
+        # output pixels can tap form one contiguous rect (same padding,
+        # clamped), so a rect-overlap test is exact reachability.
+        assert (self.h, self.w) == (h, w)
+        ho, wo = ceil_div(h, stride), ceil_div(w, stride)
+        dlo = -(k // 2)
+        dhi = k - 1 + dlo
+        out = DirtyMap(ho, wo, self.tile)
+
+        def span(o0: int, o1: int, dim: int):
+            lo = max(o0 * stride + dlo, 0)
+            hi = min((o1 - 1) * stride + dhi, dim - 1)
+            return lo, hi
+
+        for ty in range(out.th):
+            for tx in range(out.tw):
+                oy0, oy1 = ty * out.tile, min((ty + 1) * out.tile, ho)
+                ox0, ox1 = tx * out.tile, min((tx + 1) * out.tile, wo)
+                y0, y1 = span(oy0, oy1, h)
+                x0, x1 = span(ox0, ox1, w)
+                if self.rect_dirty_incl(y0, y1, x0, x1):
+                    out.mark(ty, tx)
+        return out
+
+    def upsample(self) -> "DirtyMap":
+        out = DirtyMap(self.h * 2, self.w * 2, self.tile)
+        for y in range(self.h * 2):
+            for x in range(self.w * 2):
+                if self.is_dirty((y // 2) // self.tile, (x // 2) // self.tile):
+                    out.mark(y // self.tile, x // self.tile)
+        return out
+
+
+def brute_force_propagate(m: DirtyMap, h, w, k, stride) -> DirtyMap:
+    # Per-output-pixel tap walk: an output tile is dirty iff any pixel
+    # of it has any in-bounds tap in a dirty input tile.
+    ho, wo = ceil_div(h, stride), ceil_div(w, stride)
+    dlo = -(k // 2)
+    out = DirtyMap(ho, wo, m.tile)
+    for oy in range(ho):
+        for ox in range(wo):
+            dirty = False
+            for dy in range(k):
+                for dx in range(k):
+                    iy = oy * stride + dlo + dy
+                    ix = ox * stride + dlo + dx
+                    if 0 <= iy < h and 0 <= ix < w:
+                        dirty |= m.is_dirty(iy // m.tile, ix // m.tile)
+            if dirty:
+                out.mark(oy // m.tile, ox // m.tile)
+    return out
+
+
+def random_map(h, w, tile, rng) -> DirtyMap:
+    m = DirtyMap(h, w, tile)
+    for ty in range(m.th):
+        for tx in range(m.tw):
+            if rng.random() < 0.3:
+                m.mark(ty, tx)
+    return m
+
+
+def maps_equal(a: DirtyMap, b: DirtyMap) -> bool:
+    return (a.h, a.w, a.tile) == (b.h, b.w, b.tile) and a.bits == b.bits
+
+
+def test_propagate_is_exact_reachability():
+    rng = random.Random(0xD117)
+    for _ in range(300):
+        h = rng.randrange(4, 17)
+        w = rng.randrange(4, 17)
+        tile = rng.randrange(1, 5)
+        k = rng.choice([1, 3])
+        stride = rng.choice([1, 2])
+        m = random_map(h, w, tile, rng)
+        got = m.propagate(h, w, k, stride)
+        want = brute_force_propagate(m, h, w, k, stride)
+        assert maps_equal(got, want), (h, w, tile, k, stride)
+
+
+def test_upsample_is_exact_reachability():
+    rng = random.Random(0x0B5)
+    for _ in range(100):
+        h = rng.randrange(2, 13)
+        w = rng.randrange(2, 13)
+        tile = rng.randrange(1, 5)
+        m = random_map(h, w, tile, rng)
+        up = m.upsample()
+        # Brute force: out (y, x) reads (y//2, x//2).
+        for y in range(h * 2):
+            for x in range(w * 2):
+                src_dirty = m.is_dirty((y // 2) // tile, (x // 2) // tile)
+                if src_dirty:
+                    assert up.is_dirty(y // tile, x // tile)
+        # And no spurious dirt: every dirty output tile contains at
+        # least one pixel whose source pixel's tile is dirty.
+        for ty in range(up.th):
+            for tx in range(up.tw):
+                if not up.is_dirty(ty, tx):
+                    continue
+                reachable = any(
+                    m.is_dirty((y // 2) // tile, (x // 2) // tile)
+                    for y in range(ty * tile, min((ty + 1) * tile, h * 2))
+                    for x in range(tx * tile, min((tx + 1) * tile, w * 2))
+                )
+                assert reachable, (h, w, tile, ty, tx)
+
+
+def test_clean_input_stays_clean_and_full_stays_full():
+    for h, w, tile, k, stride in [(8, 8, 2, 3, 1), (12, 10, 4, 3, 2), (9, 7, 3, 1, 1)]:
+        clean = DirtyMap(h, w, tile)
+        out = clean.propagate(h, w, k, stride)
+        assert not any(any(row) for row in out.bits)
+        full = DirtyMap(h, w, tile)
+        for ty in range(full.th):
+            for tx in range(full.tw):
+                full.mark(ty, tx)
+        out = full.propagate(h, w, k, stride)
+        assert all(all(row) for row in out.bits)

@@ -31,6 +31,7 @@ use hyperdrive::engine::{
     WireServer,
 };
 use hyperdrive::util::SplitMix64;
+use hyperdrive::video::SynthVideo;
 
 const MODELS: [&str; 2] = ["hypernet20", "resnet18@32x32"];
 
@@ -219,6 +220,8 @@ fn run_sweep_tcp(workers: usize, conns: usize, in_flight: usize, requests: usize
         retry: RetryPolicy::default(),
         deadline_ms: None,
         chaos: None,
+        video: None,
+        video_delta: 0.0,
     })
     .expect("loadgen run");
     assert_eq!(report.transport_errors, 0, "loopback connections died");
@@ -282,6 +285,64 @@ fn run_batch_curve(model: &'static str, batches: &[usize]) -> Vec<BatchRow> {
             stream_words_seq: run.sequential_stream_words,
             seq_s,
             batch_s,
+        });
+    }
+    rows
+}
+
+struct VideoRow {
+    model: &'static str,
+    delta: f64,
+    frames: usize,
+    mac_dirty_fraction: f64,
+    saved_mac_ratio: f64,
+    fps: f64,
+    bit_exact: bool,
+}
+
+/// The streaming-video curve for one model: a seeded synthetic clip
+/// through a `FrameSession` per delta point. Saved-MAC ratio must equal
+/// 1 − the MAC-weighted dirty fraction analytically (clean tiles are
+/// spliced, dirty tiles recomputed — there is no third bucket), which
+/// `bench_diff.py --serve` gates, alongside monotonicity over delta.
+/// Frame 0 primes the session (fully dirty by construction) and is
+/// excluded from the savings aggregate; the fps clock covers only the
+/// session frames, with the full-recompute bit-exactness audit after.
+fn run_video_curve(model: &'static str, deltas: &[f64], frames: usize) -> Vec<VideoRow> {
+    let engine = Engine::builder().model(model).build().expect("engine build");
+    let net = engine.network();
+    let (c, h, w) = (net.in_ch, net.in_h, net.in_w);
+    let mut rows = Vec::new();
+    for &delta in deltas {
+        let mut session = engine.video_session(8, 0.0).expect("video session");
+        let mut clip = SynthVideo::new(c, h, w, delta, 7);
+        let mut processed = Vec::with_capacity(frames);
+        let t0 = Instant::now();
+        for _ in 0..frames {
+            let frame = clip.next_flat();
+            let out = session.process_flat(&frame).expect("video frame");
+            processed.push((frame, out));
+        }
+        let fps = frames as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+        let mut bit_exact = true;
+        let (mut done, mut saved) = (0u64, 0u64);
+        let mut dirty_sum = 0.0;
+        for (frame, (out, stats)) in &processed {
+            if stats.frame > 0 {
+                done += stats.access.accumulates;
+                saved += stats.access.saved_macs;
+                dirty_sum += stats.mac_dirty_fraction;
+            }
+            bit_exact &= *out == engine.infer(frame).expect("full recompute");
+        }
+        rows.push(VideoRow {
+            model,
+            delta,
+            frames,
+            mac_dirty_fraction: dirty_sum / (frames - 1).max(1) as f64,
+            saved_mac_ratio: saved as f64 / (done + saved).max(1) as f64,
+            fps,
+            bit_exact,
         });
     }
     rows
@@ -411,13 +472,46 @@ fn main() {
             if i + 1 < batch_rows.len() { "," } else { "" }
         ));
     }
+    body.push_str("  ],\n");
+
+    // Streaming-video curve: saved MACs vs frame-to-frame delta. Frame 0
+    // primes the session; every later frame recomputes only dirty tiles.
+    let video_frames = if tiny { 4 } else { 8 };
+    let video_rows = run_video_curve(MODELS[0], &[0.0, 0.05, 0.25, 1.0], video_frames);
+    body.push_str("  \"video_entries\": [\n");
+    for (i, r) in video_rows.iter().enumerate() {
+        println!(
+            "video {} delta {:.2}: MACs {:.1}% dirty → {:.1}% saved, {:.1} fps, bit-exact {}",
+            r.model,
+            r.delta,
+            r.mac_dirty_fraction * 100.0,
+            r.saved_mac_ratio * 100.0,
+            r.fps,
+            r.bit_exact
+        );
+        body.push_str(&format!(
+            "    {{\"model\": \"{}\", \"delta\": {:.4}, \"frames\": {}, \
+             \"mac_dirty_fraction\": {:.6}, \"saved_mac_ratio\": {:.6}, \
+             \"fps\": {:.3}, \"bit_exact\": {}}}{}\n",
+            r.model,
+            r.delta,
+            r.frames,
+            r.mac_dirty_fraction,
+            r.saved_mac_ratio,
+            r.fps,
+            r.bit_exact,
+            if i + 1 < video_rows.len() { "," } else { "" }
+        ));
+    }
     body.push_str("  ]\n}\n");
     match std::fs::write("BENCH_serve.json", &body) {
         Ok(()) => println!(
-            "wrote BENCH_serve.json ({} worker counts, {} sweep points, {} batch points)",
+            "wrote BENCH_serve.json ({} worker counts, {} sweep points, {} batch points, \
+             {} video points)",
             rows.len(),
             sweep_rows.len(),
-            batch_rows.len()
+            batch_rows.len(),
+            video_rows.len()
         ),
         Err(e) => {
             eprintln!("error: could not write BENCH_serve.json: {e}");

@@ -42,6 +42,24 @@ impl FunctionalBackend {
             threads,
         }
     }
+
+    /// Resolved parameters + datapath knobs, handed to
+    /// [`crate::video::FrameSession`] by [`super::Engine::video_session`].
+    pub(crate) fn video_parts(
+        &self,
+    ) -> (
+        std::sync::Arc<super::backend::NetworkParams>,
+        Precision,
+        (usize, usize),
+        usize,
+    ) {
+        (
+            self.params.get(&self.net, self.stream_c),
+            self.precision,
+            self.tiles,
+            self.threads,
+        )
+    }
 }
 
 impl Backend for FunctionalBackend {

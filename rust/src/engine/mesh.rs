@@ -65,6 +65,27 @@ impl MeshBackend {
         self.last_stats.lock().unwrap().clone()
     }
 
+    /// Resolved parameters + datapath knobs, handed to
+    /// [`crate::video::FrameSession`] by [`super::Engine::video_session`]
+    /// — after the same divisibility check every inference runs.
+    pub(crate) fn video_parts(
+        &self,
+    ) -> Result<
+        (
+            std::sync::Arc<super::backend::NetworkParams>,
+            Precision,
+            usize,
+        ),
+        EngineError,
+    > {
+        self.check_divisibility()?;
+        Ok((
+            self.params.get(&self.net, self.stream_c),
+            self.precision,
+            self.fm_bits,
+        ))
+    }
+
     /// The mesh simulator requires every tensor's spatial dims to divide
     /// evenly over the chip grid; reject cleanly instead of panicking.
     fn check_divisibility(&self) -> Result<(), EngineError> {

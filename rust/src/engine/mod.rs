@@ -769,6 +769,59 @@ impl Engine {
         crate::energy::ablation::precision_ablation(&self.net, &self.cfg)
     }
 
+    /// Open a streaming-video session on this engine's simulator
+    /// backend: the previous frame's activations stay resident and each
+    /// new frame recomputes only the tiles whose receptive fields
+    /// changed — bit-exact versus a full per-frame recompute at
+    /// `eps = 0.0`. `tile` is the dirty-map tile edge in pixels. The
+    /// PJRT backend has no resident-activation hook and is rejected as
+    /// [`EngineError::Unsupported`]. See [`crate::video`].
+    pub fn video_session(
+        &self,
+        tile: usize,
+        eps: f32,
+    ) -> Result<crate::video::FrameSession, EngineError> {
+        use crate::video::{FrameSession, VideoConfig};
+        match &*self.backend {
+            BackendImpl::Functional(b) => {
+                let (params, precision, tiles_mn, threads) = b.video_parts();
+                Ok(FrameSession::new(
+                    self.net.clone(),
+                    params,
+                    VideoConfig {
+                        precision,
+                        tile,
+                        eps,
+                        tiles_mn,
+                        threads,
+                        mesh: None,
+                        fm_bits: self.cfg.fm_bits,
+                    },
+                ))
+            }
+            BackendImpl::Mesh(m) => {
+                let (params, precision, fm_bits) = m.video_parts()?;
+                Ok(FrameSession::new(
+                    self.net.clone(),
+                    params,
+                    VideoConfig {
+                        precision,
+                        tile,
+                        eps,
+                        tiles_mn: (self.cfg.m, self.cfg.n),
+                        threads: 1,
+                        mesh: Some((m.rows(), m.cols())),
+                        fm_bits,
+                    },
+                ))
+            }
+            #[cfg(feature = "pjrt")]
+            BackendImpl::Pjrt(_) => Err(EngineError::Unsupported(
+                "video sessions run on the simulator backends (functional or mesh)".into(),
+            )),
+        }
+    }
+
     /// Measured border/corner traffic of the mesh backend's most recent
     /// inference (`None` on other backends or before any inference).
     pub fn mesh_stats(&self) -> Option<MeshStats> {

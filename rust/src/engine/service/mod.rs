@@ -924,6 +924,7 @@ pub struct ModelConfig {
     backend: Option<BackendKind>,
     precision: Option<Precision>,
     mesh: Option<(usize, usize)>,
+    sub_mesh: Option<crate::video::SubMesh>,
     seed: Option<u64>,
     threads: Option<usize>,
     queue_depth: Option<usize>,
@@ -940,6 +941,7 @@ impl ModelConfig {
             backend: None,
             precision: None,
             mesh: None,
+            sub_mesh: None,
             seed: None,
             threads: None,
             queue_depth: None,
@@ -965,6 +967,26 @@ impl ModelConfig {
     pub fn mesh(mut self, rows: usize, cols: usize) -> Self {
         self.mesh = Some((rows, cols));
         self
+    }
+
+    /// Run this model on its [`crate::video::MeshPlacement`]-assigned
+    /// slice of a shared chip pool: forces the mesh backend on the
+    /// sub-mesh's `rows×cols` shape. The anchor coordinates matter only
+    /// to the pool owner (chips are identical and the placement layer
+    /// guarantees disjoint ownership); the engine sees a standalone
+    /// `rows×cols` mesh.
+    pub fn sub_mesh(mut self, sm: crate::video::SubMesh) -> Self {
+        self.sub_mesh = Some(sm);
+        self.backend = Some(BackendKind::Mesh);
+        self.mesh = Some((sm.rows, sm.cols));
+        self
+    }
+
+    /// The pool slice assigned via [`Self::sub_mesh`], if any — lets a
+    /// serving frontend reconcile per-model metrics with the pool's
+    /// ownership diagram.
+    pub fn assigned_sub_mesh(&self) -> Option<crate::video::SubMesh> {
+        self.sub_mesh
     }
 
     /// Seed for this model's lazily-generated synthetic parameters.

@@ -11,6 +11,7 @@ use std::time::{Duration, Instant};
 use crate::engine::serve::percentile;
 use crate::faults::FaultPlan;
 use crate::util::rng::SplitMix64;
+use crate::video::SynthVideo;
 
 use super::frame::{ErrorCode, Frame, WireError, WIRE_VERSION};
 
@@ -245,6 +246,15 @@ pub struct LoadGenConfig {
     /// mid-run — outstanding requests are counted `lost` and the
     /// connection re-established.
     pub chaos: Option<Arc<FaultPlan>>,
+    /// Video replay mode: instead of one static payload per model,
+    /// every connection streams *sequential* synthetic frames from the
+    /// [`SynthVideo`] delta generator — the smart-camera workload a
+    /// [`crate::video::FrameSession`]-backed server exploits. `Some(n)`
+    /// re-seeds a fresh clip every `n` frames per model.
+    pub video: Option<usize>,
+    /// Changed-area fraction per frame in video mode (ignored
+    /// otherwise).
+    pub video_delta: f64,
 }
 
 /// Aggregated outcome of one load-generation run.
@@ -338,11 +348,15 @@ pub fn run_loadgen(cfg: &LoadGenConfig) -> Result<LoadGenReport, WireError> {
     Ok(report)
 }
 
-/// One in-flight loadgen request.
+/// One in-flight loadgen request. Carries its own payload so a retry
+/// retransmits the identical content — in video mode a frame exists
+/// only once in the generator's stream.
 struct Pending {
     id: u64,
     sent_at: Instant,
     attempt: u8,
+    model_idx: usize,
+    payload: Arc<[f32]>,
 }
 
 /// One connection's run: keep up to `in_flight` requests outstanding,
@@ -370,20 +384,55 @@ fn run_connection(cfg: &LoadGenConfig, index: usize, quota: usize) -> ConnOutcom
         }
     };
     let mut rng = SplitMix64::new(cfg.seed ^ (index as u64).wrapping_mul(0x9e37_79b9));
-    // Pre-generate one payload per model (contents don't affect the
-    // serving path; regenerating per request would just slow the
-    // generator down).
-    let payloads: Vec<(String, Arc<[f32]>)> = cfg
+    let lens: Vec<usize> = cfg
         .models
         .iter()
-        .map(|m| {
-            let len = client.input_len(m).unwrap_or(0);
-            let data: Vec<f32> = (0..len).map(|_| rng.next_sym()).collect();
-            (m.clone(), data.into())
-        })
+        .map(|m| client.input_len(m).unwrap_or(0))
         .collect();
+    // Payload source. Static mode: one payload per model (contents
+    // don't affect the serving path; regenerating per request would
+    // just slow the generator down). Video mode: a per-model synthetic
+    // frame stream whose frames this connection sends *sequentially*,
+    // re-seeded into a fresh clip every `clip` frames.
+    let statics: Vec<Arc<[f32]>> = if cfg.video.is_none() {
+        lens.iter()
+            .map(|&len| (0..len).map(|_| rng.next_sym()).collect::<Vec<f32>>().into())
+            .collect()
+    } else {
+        Vec::new()
+    };
+    let clip = cfg.video.unwrap_or(0).max(1);
+    let gen_seed = |mi: usize, epoch: u64| {
+        cfg.seed ^ ((index as u64) << 20) ^ ((mi as u64) << 8) ^ epoch
+    };
+    let mut gens: Vec<(SynthVideo, usize)> = if cfg.video.is_some() {
+        lens.iter()
+            .enumerate()
+            .map(|(mi, &len)| {
+                (SynthVideo::flat(len.max(1), cfg.video_delta, gen_seed(mi, 0)), 0)
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+    let mut payload_for = |id: u64| -> (usize, Arc<[f32]>) {
+        let mi = (id as usize) % cfg.models.len();
+        if cfg.video.is_none() {
+            return (mi, statics[mi].clone());
+        }
+        let (gen, produced) = &mut gens[mi];
+        if *produced == clip {
+            *gen = SynthVideo::flat(
+                lens[mi].max(1),
+                cfg.video_delta,
+                gen_seed(mi, 1 + id / clip as u64),
+            );
+            *produced = 0;
+        }
+        *produced += 1;
+        (mi, gen.next_flat().into())
+    };
     let deadline_ms = cfg.deadline_ms.unwrap_or(0);
-    let payload_for = |id: u64| &payloads[(id as usize) % payloads.len()];
     let mut outstanding: Vec<Pending> = Vec::with_capacity(cfg.in_flight);
     let mut next = 0u64;
     let mut done = 0usize;
@@ -409,7 +458,8 @@ fn run_connection(cfg: &LoadGenConfig, index: usize, quota: usize) -> ConnOutcom
                     }
                 };
             }
-            let (model, payload) = payload_for(next);
+            let (model_idx, payload) = payload_for(next);
+            let model = &cfg.models[model_idx];
             if client.send_with(next, model, payload.clone(), deadline_ms, 0).is_err() {
                 out.transport_error = true;
                 out.lost += outstanding.len() as u64;
@@ -419,6 +469,8 @@ fn run_connection(cfg: &LoadGenConfig, index: usize, quota: usize) -> ConnOutcom
                 id: next,
                 sent_at: Instant::now(),
                 attempt: 0,
+                model_idx,
+                payload,
             });
             out.sent += 1;
             next += 1;
@@ -457,9 +509,9 @@ fn run_connection(cfg: &LoadGenConfig, index: usize, quota: usize) -> ConnOutcom
                     cfg.retry.backoff_ms(pending.attempt),
                 ));
                 let attempt = pending.attempt.saturating_add(1);
-                let (model, payload) = payload_for(id);
+                let model = &cfg.models[pending.model_idx];
                 if client
-                    .send_with(id, model, payload.clone(), deadline_ms, attempt)
+                    .send_with(id, model, pending.payload.clone(), deadline_ms, attempt)
                     .is_err()
                 {
                     out.transport_error = true;
@@ -471,6 +523,8 @@ fn run_connection(cfg: &LoadGenConfig, index: usize, quota: usize) -> ConnOutcom
                     id,
                     sent_at: pending.sent_at,
                     attempt,
+                    model_idx: pending.model_idx,
+                    payload: pending.payload,
                 });
                 continue;
             }

@@ -80,6 +80,7 @@ pub mod runtime;
 pub mod simulator;
 pub mod testkit;
 pub mod util;
+pub mod video;
 
 /// Architecture parameters of one Hyperdrive chip (§III, §VI).
 ///

@@ -7,7 +7,11 @@
 //!             multi-model InferenceService on a synthetic workload, or
 //!             [--listen ADDR [--conn-limit N]] a TCP wire-protocol server
 //!   loadgen   --connect ADDR --model A[,B,...] [--connections C] [--in-flight K]
-//!             pipelined TCP load generator against a serve --listen instance
+//!             pipelined TCP load generator against a serve --listen instance;
+//!             --video FRAMES replays seeded synthetic clips per connection
+//!   video     --model SPEC [--frames N] [--delta D] streaming-video soak
+//!             (temporal dirty-tile reuse, bit-exact vs full recompute), or
+//!             --pool RxC --model A,B,... multi-model sub-mesh placement
 //!   run-e2e   [--artifacts DIR] [--batch N] [--workers N]   end-to-end PJRT serving
 //!   simulate  --model SPEC [--mesh RxC] [--vdd V] [--vbb V]
 //!   mesh      --model SPEC
@@ -35,13 +39,14 @@ use std::time::Duration;
 
 use hyperdrive::engine::{
     run_loadgen, AdmissionPolicy, BackendKind, BreakerPolicy, DepthwisePolicy, Engine, EngineError,
-    InferRequest, InferenceService, LoadGenConfig, RetryPolicy, ServeError, ServeOptions, WireError,
-    WireServer,
+    InferRequest, InferenceService, LoadGenConfig, ModelConfig, RetryPolicy, ServeError,
+    ServeOptions, WireError, WireServer,
 };
 use hyperdrive::faults::FaultPlan;
 use hyperdrive::model::NetworkRegistry;
 use hyperdrive::report;
 use hyperdrive::util::SplitMix64;
+use hyperdrive::video::{MeshPlacement, SynthVideo, VideoError};
 use hyperdrive::ChipConfig;
 
 fn usage() -> &'static str {
@@ -61,7 +66,16 @@ fn usage() -> &'static str {
        loadgen --connect ADDR --model NAME[,NAME...] [--connections C]\n\
              [--in-flight K] [--requests N] [--seed S] [--retries N]\n\
              [--backoff-ms MS] [--deadline-ms MS] [--chaos SPEC]\n\
-             drive a serve --listen instance over TCP\n\
+             [--video FRAMES [--video-delta D]]   drive a serve --listen\n\
+             instance over TCP; --video replays seeded synthetic clips\n\
+             (FRAMES sequential frames per clip) instead of static inputs\n\
+       video --model SPEC [--frames N] [--delta D] [--tile T] [--eps E]\n\
+             [--mesh RxC] [--seed S]   streaming-video soak: temporal\n\
+             dirty-tile reuse on one FrameSession, checked bit-exact\n\
+             against per-frame full recompute, with saved-MAC reporting\n\
+       video --pool RxC --model SPEC[,SPEC...] [--min-chips N] [--frames N]\n\
+             [--delta D] [--seed S]   carve one chip pool into per-model\n\
+             sub-meshes and serve every model concurrently\n\
        run-e2e [--artifacts DIR] [--batch N] [--workers N]\n\
        simulate --model SPEC [--mesh RxC] [--vdd V] [--vbb V] [--threads N]\n\
        mesh --model SPEC\n\
@@ -110,6 +124,7 @@ enum CliError {
     Engine(EngineError),
     Serve(ServeError),
     Wire(WireError),
+    Video(VideoError),
     Usage(String),
 }
 
@@ -120,6 +135,7 @@ impl fmt::Display for CliError {
             CliError::Engine(e) => write!(f, "{e}"),
             CliError::Serve(e) => write!(f, "{e}"),
             CliError::Wire(e) => write!(f, "{e}"),
+            CliError::Video(e) => write!(f, "{e}"),
             CliError::Usage(m) => write!(f, "{m}"),
         }
     }
@@ -146,6 +162,12 @@ impl From<ServeError> for CliError {
 impl From<WireError> for CliError {
     fn from(e: WireError) -> Self {
         CliError::Wire(e)
+    }
+}
+
+impl From<VideoError> for CliError {
+    fn from(e: VideoError) -> Self {
+        CliError::Video(e)
     }
 }
 
@@ -564,6 +586,21 @@ fn cmd_loadgen(opts: &HashMap<String, String>) -> Result<String, CliError> {
         })?),
     };
     let chaos = parse_chaos(opts)?;
+    let video: Option<usize> = match opts.get("video") {
+        None => None,
+        Some(v) => Some(v.parse().ok().filter(|&n| n > 0).ok_or_else(|| {
+            OptError::BadValue("video".into(), v.clone(), "a positive frame count")
+        })?),
+    };
+    let video_delta: f64 = opt_parse(opts, "video-delta", 0.05, "a fraction in [0,1]")?;
+    if !(0.0..=1.0).contains(&video_delta) {
+        return Err(CliError::Usage("--video-delta must be within [0,1]".into()));
+    }
+    if video.is_none() && opts.contains_key("video-delta") {
+        return Err(CliError::Usage(
+            "--video-delta only applies with --video FRAMES".into(),
+        ));
+    }
     let report = run_loadgen(&LoadGenConfig {
         addr,
         connections,
@@ -577,15 +614,24 @@ fn cmd_loadgen(opts: &HashMap<String, String>) -> Result<String, CliError> {
         },
         deadline_ms,
         chaos: chaos.clone(),
+        video,
+        video_delta,
     })?;
     let chaos_line = match &chaos {
         Some(plan) => format!("\nchaos (seed {}): {}", plan.seed(), plan.counters()),
         None => String::new(),
     };
+    let video_line = match video {
+        Some(f) => format!(
+            "\nvideo replay: {f}-frame clips per connection, delta {:.1}%",
+            video_delta * 100.0
+        ),
+        None => String::new(),
+    };
     Ok(format!(
         "loadgen: {} sent, {} ok, {} failed, {} rejected, {} transport errors \
          over {} connections × in-flight {} ({} lost in flight, {} retried)\n\
-         → {:.1} req/s, mean {:.2} ms, p50 {:.2} ms, p99 {:.2} ms{chaos_line}",
+         → {:.1} req/s, mean {:.2} ms, p50 {:.2} ms, p99 {:.2} ms{video_line}{chaos_line}",
         report.sent,
         report.ok,
         report.failed,
@@ -600,6 +646,180 @@ fn cmd_loadgen(opts: &HashMap<String, String>) -> Result<String, CliError> {
         report.p50_ms,
         report.p99_ms
     ))
+}
+
+/// `video`: streaming-video soak. Runs a seeded synthetic clip through
+/// one [`hyperdrive::video::FrameSession`] (temporal dirty-tile reuse),
+/// re-runs every frame through the engine's ordinary full-recompute
+/// path, and asserts the outputs are bit-identical while reporting the
+/// per-frame MAC/traffic savings. With `--pool RxC` it instead carves
+/// one chip pool into per-model sub-meshes and serves all models
+/// concurrently (the multi-model placement half of the subsystem).
+fn cmd_video(opts: &HashMap<String, String>, cfg: &ChipConfig) -> Result<String, CliError> {
+    if opts.contains_key("pool") {
+        return cmd_video_pool(opts);
+    }
+    let spec = resolve_spec(opts, None)?;
+    let frames: usize = opt_parse(opts, "frames", 8, "a positive integer")?;
+    let delta: f64 = opt_parse(opts, "delta", 0.05, "a fraction in [0,1]")?;
+    let tile: usize = opt_parse(opts, "tile", 8, "a positive integer")?;
+    let eps: f32 = opt_parse(opts, "eps", 0.0, "a non-negative threshold")?;
+    let seed: u64 = opt_parse(opts, "seed", 7, "an unsigned integer")?;
+    if frames == 0 || tile == 0 || !(0.0..=1.0).contains(&delta) || !(0.0..).contains(&eps) {
+        return Err(CliError::Usage(
+            "video needs --frames and --tile ≥ 1, --delta in [0,1], --eps ≥ 0".into(),
+        ));
+    }
+    let mut builder = Engine::builder().model(spec.as_str()).chip(*cfg);
+    if let Some(mesh) = opts.get("mesh") {
+        let (r, c) = mesh
+            .split_once('x')
+            .ok_or_else(|| OptError::BadValue("mesh".into(), mesh.clone(), "RxC, e.g. 2x2"))?;
+        let rows = r
+            .parse()
+            .map_err(|_| OptError::BadValue("mesh".into(), mesh.clone(), "integer mesh rows"))?;
+        let cols = c
+            .parse()
+            .map_err(|_| OptError::BadValue("mesh".into(), mesh.clone(), "integer mesh cols"))?;
+        builder = builder.mesh(rows, cols);
+    }
+    let engine = builder.build()?;
+    let net = engine.network();
+    let (in_ch, in_h, in_w) = (net.in_ch, net.in_h, net.in_w);
+    let mut session = engine.video_session(tile, eps)?;
+    let mut clip = SynthVideo::new(in_ch, in_h, in_w, delta, seed);
+    let mut out = format!(
+        "video: {} ({in_ch}x{in_h}x{in_w}), {frames} frames, delta {:.1}%, \
+         tile {tile}, eps {eps}, {:?} backend\n",
+        net.name,
+        delta * 100.0,
+        engine.backend_kind()
+    );
+    let mut exact = 0usize;
+    let mut total_done: u64 = 0;
+    let mut total_saved: u64 = 0;
+    for _ in 0..frames {
+        let frame = clip.next_flat();
+        let (video_out, stats) = session.process_flat(&frame)?;
+        let full_out = engine.infer(&frame)?;
+        if video_out == full_out {
+            exact += 1;
+        }
+        total_done += stats.access.accumulates;
+        total_saved += stats.access.saved_macs;
+        out.push_str(&format!(
+            "frame {}: input {:5.1}% dirty, MACs {:5.1}% dirty → {:5.1}% MACs saved, \
+             {} stream words ({} saved)\n",
+            stats.frame,
+            stats.input_dirty_fraction * 100.0,
+            stats.mac_dirty_fraction * 100.0,
+            stats.saved_mac_ratio() * 100.0,
+            stats.access.stream_words,
+            stats.access.saved_stream_words,
+        ));
+    }
+    if exact != frames {
+        return Err(CliError::Usage(format!(
+            "BIT-EXACTNESS VIOLATION: only {exact}/{frames} frames matched full recompute"
+        )));
+    }
+    let denom = (total_done + total_saved).max(1);
+    out.push_str(&format!(
+        "bit-exact vs full recompute on all {frames} frames\n\
+         totals: {total_saved} of {denom} MACs saved ({:.1}%)",
+        total_saved as f64 / denom as f64 * 100.0
+    ));
+    Ok(out)
+}
+
+/// `video --pool RxC`: place every `--model` spec onto one chip pool
+/// (first-fit rectangular sub-meshes), host them all in one
+/// [`InferenceService`], stream a seeded clip per model, and report the
+/// ownership diagram plus per-model serving metrics.
+fn cmd_video_pool(opts: &HashMap<String, String>) -> Result<String, CliError> {
+    let pool = opts.get("pool").expect("checked by cmd_video");
+    let (r, c) = pool
+        .split_once('x')
+        .ok_or_else(|| OptError::BadValue("pool".into(), pool.clone(), "RxC, e.g. 4x4"))?;
+    let rows: usize = r
+        .parse()
+        .ok()
+        .filter(|&n| n > 0)
+        .ok_or_else(|| OptError::BadValue("pool".into(), pool.clone(), "integer pool rows"))?;
+    let cols: usize = c
+        .parse()
+        .ok()
+        .filter(|&n| n > 0)
+        .ok_or_else(|| OptError::BadValue("pool".into(), pool.clone(), "integer pool cols"))?;
+    let models: Vec<String> = opts
+        .get("model")
+        .ok_or_else(|| CliError::Usage("video --pool needs --model SPEC[,SPEC...]".into()))?
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(String::from)
+        .collect();
+    if models.is_empty() {
+        return Err(CliError::Usage("video --pool needs at least one model".into()));
+    }
+    let min_chips: usize = opt_parse(opts, "min-chips", 4, "a positive integer")?;
+    let frames: usize = opt_parse(opts, "frames", 4, "a positive integer")?;
+    let delta: f64 = opt_parse(opts, "delta", 0.05, "a fraction in [0,1]")?;
+    let seed: u64 = opt_parse(opts, "seed", 7, "an unsigned integer")?;
+    if min_chips == 0 || frames == 0 || !(0.0..=1.0).contains(&delta) {
+        return Err(CliError::Usage(
+            "video --pool needs --min-chips and --frames ≥ 1, --delta in [0,1]".into(),
+        ));
+    }
+    let mut placement = MeshPlacement::new(rows, cols);
+    let mut sb = InferenceService::builder().workers(models.len());
+    for spec in &models {
+        let sm = placement
+            .place(spec, min_chips)
+            .map_err(|e| CliError::Usage(format!("placement failed: {e}")))?;
+        sb = sb.model(spec.clone(), ModelConfig::new(spec.as_str()).sub_mesh(sm));
+    }
+    let service = sb.build()?;
+    let mut tickets = Vec::new();
+    for (mi, spec) in models.iter().enumerate() {
+        let len = service
+            .input_len(spec)
+            .expect("model hosted above");
+        let mut clip = SynthVideo::flat(len, delta, seed ^ ((mi as u64) << 8));
+        for f in 0..frames {
+            tickets.push(service.submit(InferRequest {
+                model: spec.clone(),
+                input: clip.next_flat().into(),
+                id: (mi * frames + f) as u64,
+                deadline_ms: None,
+            })?);
+        }
+    }
+    for t in tickets {
+        t.wait()?;
+    }
+    let metrics = service.shutdown();
+    let mut out = format!(
+        "pool {rows}x{cols}, {} model(s), {} chips free\n{}",
+        models.len(),
+        placement.free_chips(),
+        placement.render()
+    );
+    for m in &metrics.per_model {
+        let sm = placement.get(&m.model).expect("placed above");
+        out.push_str(&format!(
+            "{}: sub-mesh {sm}, {} submitted, {} completed, {} failed, \
+             mean {:.2} ms, p99 {:.2} ms\n",
+            m.model, m.submitted, m.completed, m.failed, m.mean_ms, m.p99_ms
+        ));
+    }
+    out.push_str(&format!(
+        "total: {} submitted, {} completed, {} failed",
+        metrics.total_submitted(),
+        metrics.total_completed(),
+        metrics.total_failed()
+    ));
+    Ok(out)
 }
 
 fn cmd_simulate(opts: &HashMap<String, String>, cfg: &ChipConfig) -> Result<String, CliError> {
@@ -667,6 +887,9 @@ fn main() -> ExitCode {
         Some("loadgen") => parse_opts(&args[1..])
             .map_err(CliError::from)
             .and_then(|o| cmd_loadgen(&o)),
+        Some("video") => parse_opts(&args[1..])
+            .map_err(CliError::from)
+            .and_then(|o| cmd_video(&o, &cfg)),
         Some("run-e2e") => parse_opts(&args[1..])
             .map_err(CliError::from)
             .and_then(|o| cmd_run_e2e(&o)),
@@ -1072,5 +1295,106 @@ mod tests {
             Err(_) => panic!("server shutdown should drop its service handle"),
         };
         assert_eq!(metrics.total_completed(), 8);
+    }
+
+    #[test]
+    fn video_subcommand_validates_options() {
+        let cfg = ChipConfig::default();
+        // Missing --model is a usage error.
+        let opts = parse_opts(&args(&["--frames", "2"])).unwrap();
+        assert!(matches!(cmd_video(&opts, &cfg).unwrap_err(), CliError::Usage(_)));
+        // Out-of-range knobs are usage errors.
+        for bad in [
+            &["--model", "hypernet20", "--delta", "1.5"][..],
+            &["--model", "hypernet20", "--frames", "0"][..],
+        ] {
+            let opts = parse_opts(&args(bad)).unwrap();
+            assert!(
+                matches!(cmd_video(&opts, &cfg).unwrap_err(), CliError::Usage(_)),
+                "{bad:?}"
+            );
+        }
+        // Malformed mesh / pool shapes are structured option errors.
+        for bad in [
+            &["--model", "hypernet20", "--mesh", "2by2"][..],
+            &["--pool", "4by4", "--model", "hypernet20"][..],
+        ] {
+            let opts = parse_opts(&args(bad)).unwrap();
+            assert!(
+                matches!(
+                    cmd_video(&opts, &cfg).unwrap_err(),
+                    CliError::Opt(OptError::BadValue(_, _, _))
+                ),
+                "{bad:?}"
+            );
+        }
+        // --video-delta on loadgen without --video is a usage error,
+        // and a zero --video frame count is a structured option error.
+        let opts = parse_opts(&args(&[
+            "--connect",
+            "127.0.0.1:9",
+            "--model",
+            "hypernet20",
+            "--video-delta",
+            "0.1",
+        ]))
+        .unwrap();
+        assert!(matches!(cmd_loadgen(&opts).unwrap_err(), CliError::Usage(_)));
+        let opts = parse_opts(&args(&[
+            "--connect",
+            "127.0.0.1:9",
+            "--model",
+            "hypernet20",
+            "--video",
+            "0",
+        ]))
+        .unwrap();
+        assert!(matches!(
+            cmd_loadgen(&opts).unwrap_err(),
+            CliError::Opt(OptError::BadValue(_, _, _))
+        ));
+    }
+
+    #[test]
+    fn video_subcommand_soaks_bit_exact() {
+        let cfg = ChipConfig::default();
+        let opts = parse_opts(&args(&[
+            "--model",
+            "hypernet20",
+            "--frames",
+            "3",
+            "--delta",
+            "0.05",
+            "--seed",
+            "11",
+        ]))
+        .unwrap();
+        let out = cmd_video(&opts, &cfg).unwrap();
+        assert!(out.contains("bit-exact vs full recompute on all 3 frames"), "{out}");
+        assert!(out.contains("MACs saved"), "{out}");
+        // Frame 0 is the full-recompute prime; later frames save work.
+        assert!(out.contains("frame 0: input 100.0% dirty"), "{out}");
+    }
+
+    #[test]
+    fn video_pool_places_and_serves_two_models() {
+        let cfg = ChipConfig::default();
+        // Two service names resolving to the same small network keep
+        // this placement round-trip cheap.
+        let opts = parse_opts(&args(&[
+            "--pool",
+            "4x4",
+            "--model",
+            "hypernet20,hypernet20@32x32",
+            "--frames",
+            "2",
+            "--min-chips",
+            "4",
+        ]))
+        .unwrap();
+        let out = cmd_video(&opts, &cfg).unwrap();
+        assert!(out.contains("pool 4x4, 2 model(s)"), "{out}");
+        assert!(out.contains("sub-mesh 2x2@"), "{out}");
+        assert!(out.contains("total: 4 submitted, 4 completed, 0 failed"), "{out}");
     }
 }

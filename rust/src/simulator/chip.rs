@@ -14,8 +14,8 @@ use crate::bwn::{PackedLayerWeights, WeightStream};
 use crate::network::ConvLayer;
 
 use super::datapath::{
-    partition_ranges, resolve_threads, run_tile, run_tile_batch, weight_traffic, InputSurface,
-    TileGeom,
+    analytic_counts, partition_ranges, resolve_threads, run_tile, run_tile_batch, weight_traffic,
+    InputSurface, TileGeom,
 };
 use super::fm::FeatureMap;
 
@@ -159,6 +159,99 @@ pub fn run_layer_threads(
     acc.stream_words += sw;
     acc.wbuf_reads += wb;
     (out, acc)
+}
+
+/// Change-based execution: recompute only the given output rectangles
+/// of one layer and splice the fresh pixels into `out` (the cached
+/// previous-frame output FM) — the single-chip leg of the
+/// streaming-video dirty-tile mode.
+///
+/// Rectangles are `(oy0, oy1, ox0, ox1)` in output coordinates and must
+/// be disjoint (the caller's dirty tracker produces a tile partition).
+/// Each recomputed pixel runs the unmodified datapath kernel over the
+/// full channel range with the exact per-pixel rounding chain of a full
+/// [`run_layer_threads`] pass, so dirty pixels are bit-identical to a
+/// full recompute and clean pixels keep their cached bits — which *are*
+/// the full-recompute bits whenever the caller's dirty set covers every
+/// changed receptive field.
+///
+/// Counters are the actual traffic of the partial pass: analytic counts
+/// per rectangle, plus one weight stream iff at least one pixel is
+/// recomputed (the stream passes once regardless of how many tiles
+/// consume it; a fully-clean layer streams nothing). The `saved_*`
+/// fields are charged with the difference against a full recompute of
+/// the layer.
+pub fn run_layer_rects(
+    p: &LayerParams,
+    input: &FeatureMap,
+    bypass: Option<&FeatureMap>,
+    prec: Precision,
+    tiles_mn: (usize, usize),
+    out: &mut FeatureMap,
+    rects: &[(usize, usize, usize, usize)],
+) -> AccessCounts {
+    let l = p.layer;
+    assert_eq!((input.c, input.h, input.w), (l.n_in, l.h, l.w));
+    assert_eq!(l.has_bypass, bypass.is_some());
+    assert_eq!(p.gamma.len(), l.n_out);
+    assert_eq!(p.beta.len(), l.n_out);
+    let (ho, wo) = (l.h_out(), l.w_out());
+    assert_eq!((out.c, out.h, out.w), (l.n_out, ho, wo));
+
+    let (m, n) = tiles_mn;
+    let base = TileGeom {
+        oy0: 0,
+        oy1: ho,
+        ox0: 0,
+        ox1: wo,
+        iy0: 0,
+        ix0: 0,
+        tile_h: ho.div_ceil(m).max(1),
+        tile_w: wo.div_ceil(n).max(1),
+        in_tile_h: l.h.div_ceil(m).max(1),
+        in_tile_w: l.w.div_ceil(n).max(1),
+    };
+    // What a full recompute of this layer counts (the savings baseline).
+    let mut full = analytic_counts(l, (0, l.n_out), bypass.is_some(), &base);
+    let (fsw, fwb) = weight_traffic(l, p.stream.c, (base.tile_h * base.tile_w) as u64);
+    full.stream_words += fsw;
+    full.wbuf_reads += fwb;
+
+    let mut acc = AccessCounts::default();
+    let mut dirty_pixels = 0u64;
+    let packed = PackedLayerWeights::new(p.stream);
+    let data = &mut out.data;
+    let mut write = |co: usize, oy: usize, ox: usize, v: f32| data[(co * ho + oy) * wo + ox] = v;
+    for &(oy0, oy1, ox0, ox1) in rects {
+        debug_assert!(oy1 <= ho && ox1 <= wo, "rect outside the output FM");
+        if oy0 >= oy1 || ox0 >= ox1 {
+            continue;
+        }
+        dirty_pixels += ((oy1 - oy0) * (ox1 - ox0)) as u64;
+        let geom = TileGeom { oy0, oy1, ox0, ox1, ..base };
+        acc.add(&run_tile(
+            l,
+            &packed,
+            p.gamma,
+            p.beta,
+            (0, l.n_out),
+            input,
+            bypass,
+            prec,
+            &geom,
+            &mut write,
+        ));
+    }
+    if dirty_pixels > 0 {
+        // The dirty tiles share the broadcast stream word like the full
+        // schedule's m×n Tile-PUs do: the word enters once and is
+        // re-read per remaining pixel a single PU consumes.
+        let per_pu = dirty_pixels.div_ceil((m * n) as u64);
+        let (sw, _) = weight_traffic(l, p.stream.c, per_pu);
+        acc.stream_words += sw;
+        acc.wbuf_reads += sw * (per_pu.max(1) - 1);
+    }
+    acc.with_saved_vs(&full)
 }
 
 /// [`run_layer_threads`] for a micro-batch of `B` resident images: the
@@ -621,6 +714,54 @@ mod tests {
         let (outs, acc) = run_layer_batch_threads(&p, &[], Some(&[]), Precision::F32, (7, 7), 2);
         assert!(outs.is_empty());
         assert_eq!(acc, AccessCounts::default());
+    }
+
+    #[test]
+    fn rect_recompute_splices_bit_exact_with_savings() {
+        // Perturb a small input region, recompute only the dilated
+        // output rectangle on top of the cached old output: bits must
+        // match a full recompute of the new input, and the skipped MACs
+        // must show up as saved_macs.
+        let mut rng = SplitMix64::new(0x51d3);
+        let l = ConvLayer::new("v", 4, 8, 10, 10, 3, 1);
+        let (w, gamma, beta) = make_params(&l, &mut rng);
+        let stream = pack_weights(&l, &w, 16);
+        let p = LayerParams {
+            layer: &l,
+            stream: &stream,
+            gamma: &gamma,
+            beta: &beta,
+        };
+        let a = FeatureMap::from_vec(4, 10, 10, (0..400).map(|_| rng.next_sym()).collect());
+        let mut b = a.clone();
+        for c in 0..4 {
+            for y in 4..6 {
+                for x in 4..6 {
+                    b.set(c, y, x, rng.next_sym());
+                }
+            }
+        }
+        for prec in [Precision::F16, Precision::F32] {
+            let (out_a, full_acc) = run_layer(&p, &a, None, prec, (7, 7));
+            let (out_b, _) = run_layer(&p, &b, None, prec, (7, 7));
+            let mut spliced = out_a.clone();
+            // 3×3/stride-1 receptive dilation of input rows/cols 4..6.
+            let acc = run_layer_rects(&p, &b, None, prec, (7, 7), &mut spliced, &[(3, 7, 3, 7)]);
+            assert_eq!(spliced.data, out_b.data, "{prec:?} splice diverged");
+            assert_eq!(acc.accumulates + acc.saved_macs, full_acc.accumulates);
+            assert!(acc.saved_macs > 0, "partial pass must save MACs");
+            // The stream still passes once; nothing was saved there.
+            assert_eq!(acc.stream_words, full_acc.stream_words);
+            assert_eq!(acc.saved_stream_words, 0);
+        }
+        // A fully-clean layer computes nothing and saves the stream too.
+        let (out_a, full_acc) = run_layer(&p, &a, None, Precision::F16, (7, 7));
+        let mut untouched = out_a.clone();
+        let acc = run_layer_rects(&p, &a, None, Precision::F16, (7, 7), &mut untouched, &[]);
+        assert_eq!(untouched.data, out_a.data);
+        assert_eq!(acc.accumulates, 0);
+        assert_eq!(acc.saved_macs, full_acc.accumulates);
+        assert_eq!(acc.saved_stream_words, full_acc.stream_words);
     }
 
     #[test]

@@ -92,6 +92,15 @@ pub struct AccessCounts {
     pub post_adds: u64,
     /// FP16 accumulates in the Tile-PU adders.
     pub accumulates: u64,
+    /// MACs (accumulates) a full recompute would have issued but the
+    /// streaming-video dirty-tile path skipped by splicing cached clean
+    /// tiles. Zero everywhere outside video mode.
+    pub saved_macs: u64,
+    /// Off-chip weight-stream words skipped because every tile of a
+    /// layer was clean (the stream for that layer never starts).
+    pub saved_stream_words: u64,
+    /// FMM word accesses (reads + writes) skipped by clean-tile splicing.
+    pub saved_fm_words: u64,
 }
 
 impl AccessCounts {
@@ -104,6 +113,21 @@ impl AccessCounts {
         self.post_mults += o.post_mults;
         self.post_adds += o.post_adds;
         self.accumulates += o.accumulates;
+        self.saved_macs += o.saved_macs;
+        self.saved_stream_words += o.saved_stream_words;
+        self.saved_fm_words += o.saved_fm_words;
+    }
+
+    /// Fold the savings of one partially-recomputed video layer into
+    /// its actual counters: `self` holds what the dirty-tile pass
+    /// really counted for the layer (saved fields still zero), `full`
+    /// is what a full-frame recompute of the same layer counts.
+    pub fn with_saved_vs(mut self, full: &AccessCounts) -> AccessCounts {
+        self.saved_macs += full.accumulates.saturating_sub(self.accumulates);
+        self.saved_stream_words += full.stream_words.saturating_sub(self.stream_words);
+        self.saved_fm_words += (full.fmm_reads + full.fmm_writes)
+            .saturating_sub(self.fmm_reads + self.fmm_writes);
+        self
     }
 }
 
@@ -236,6 +260,7 @@ pub fn analytic_counts(
         post_mults: if l.bnorm { per_pixel } else { 0 },
         post_adds: per_pixel + bypassed,
         accumulates: conv,
+        ..AccessCounts::default()
     }
 }
 

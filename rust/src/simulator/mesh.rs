@@ -316,6 +316,54 @@ fn ring_coords(
     top.chain(bottom).chain(left).chain(right)
 }
 
+/// Half-open pixel rectangle `(y0, y1, x0, x1)` in global FM coords.
+pub type Rect = (usize, usize, usize, usize);
+
+/// Dirty work for one step of a video frame, on two grids: the conv
+/// output grid (what the Tile-PUs recompute) and the stored tensor grid
+/// (doubled when the step upsamples — what the resident tile refreshes).
+#[derive(Debug, Clone, Default)]
+pub struct VideoStepPlan {
+    pub conv_rects: Vec<Rect>,
+    pub out_rects: Vec<Rect>,
+}
+
+/// Dirty-region work list for one video frame, built by
+/// [`crate::video::FrameSession`] from its per-tensor dirty maps — the
+/// simulator stays agnostic of how dirtiness is tracked and only
+/// executes rectangles.
+#[derive(Debug, Clone, Default)]
+pub struct VideoFramePlan {
+    /// Dirty input rects to refresh (tiles + halo ring positions).
+    pub input_rects: Vec<Rect>,
+    /// One entry per network step.
+    pub steps: Vec<VideoStepPlan>,
+}
+
+/// Resident per-chip state carried between frames of a video session:
+/// every tensor's distributed tiles stay on-chip (the paper's
+/// stationary-FM principle extended across time), so a frame only pays
+/// for what changed.
+pub struct MeshVideoState {
+    /// (chip → tensor id → tile), exactly the store a full run builds.
+    tiles: Vec<HashMap<usize, ExtTile>>,
+    /// Pre-upsample conv tiles for upsampling steps (keyed `1 + si`):
+    /// the incremental path regenerates dirty upsampled pixels from
+    /// these instead of rebuilding the tile (whose fresh NaN halo ring
+    /// clean neighbours would never refill).
+    conv: Vec<HashMap<usize, ExtTile>>,
+    /// Access counts of one full frame — the savings baseline.
+    full_access: AccessCounts,
+    /// Consumer halo per tensor id, precomputed at init.
+    halo: Vec<usize>,
+}
+
+fn isect(r: Rect, y0: usize, y1: usize, x0: usize, x1: usize) -> Option<Rect> {
+    let (a, b) = (r.0.max(y0), r.1.min(y1));
+    let (c, d) = (r.2.max(x0), r.3.min(x1));
+    (a < b && c < d).then_some((a, b, c, d))
+}
+
 /// The mesh simulator.
 pub struct MeshSim {
     pub rows: usize,
@@ -958,11 +1006,31 @@ impl MeshSim {
         tiles: &mut [HashMap<usize, ExtTile>],
         stats: &mut MeshStats,
     ) -> Result<(), MeshError> {
+        self.exchange_from(tensor, channels, tiles, stats, None)
+    }
+
+    /// [`Self::exchange`] restricted to senders flagged in `from` (the
+    /// video mode's incremental halo refresh): a chip that recomputed
+    /// nothing this frame holds exactly the border values its
+    /// neighbours already cached, so it sends nothing and their halos
+    /// stay valid; a dirty chip resends all its borders and corners.
+    /// `None` means every chip sends (the full per-image exchange).
+    fn exchange_from(
+        &self,
+        tensor: usize,
+        channels: usize,
+        tiles: &mut [HashMap<usize, ExtTile>],
+        stats: &mut MeshStats,
+        from: Option<&[bool]>,
+    ) -> Result<(), MeshError> {
         let idx = |r: usize, c: usize| r * self.cols + c;
         // Collect sends: (dst_chip, ch, gy, gx, value, hops).
         let mut sends: Vec<(usize, usize, isize, isize, f32, u32)> = Vec::new();
         for r in 0..self.rows {
             for c in 0..self.cols {
+                if from.is_some_and(|f| !f[idx(r, c)]) {
+                    continue;
+                }
                 let t = tiles[idx(r, c)]
                     .get(&tensor)
                     .ok_or(MeshError::MissingTile {
@@ -1060,6 +1128,415 @@ impl MeshSim {
         }
         Ok(())
     }
+
+    /// First frame of a video session: one full mesh run that *retains*
+    /// every chip's resident tiles (plus, for upsampling steps, the
+    /// pre-upsample conv tile the incremental regeneration reads from)
+    /// and records the full-frame [`AccessCounts`] later frames report
+    /// their savings against. Single-threaded — video sessions trade
+    /// per-frame fan-out for cross-frame reuse, and determinism is free.
+    pub fn video_init(
+        &self,
+        net: &Network,
+        params: &[StepParams],
+        input: &FeatureMap,
+    ) -> Result<(FeatureMap, MeshStats, MeshVideoState), MeshError> {
+        if params.len() != net.steps.len() {
+            return Err(MeshError::ParamsMismatch {
+                params: params.len(),
+                steps: net.steps.len(),
+            });
+        }
+        let mut stats = MeshStats::default();
+        let n = net.steps.len();
+        let tid = |r: TensorRef| match r {
+            TensorRef::Input => 0usize,
+            TensorRef::Step(i) => 1 + i,
+        };
+        let mut halo = vec![0usize; n + 1];
+        for s in &net.steps {
+            let h = s.layer.k / 2;
+            for r in std::iter::once(s.src).chain(s.bypass).chain(s.concat_extra) {
+                halo[tid(r)] = halo[tid(r)].max(h);
+            }
+        }
+
+        let nchips = self.rows * self.cols;
+        let mut tiles: Vec<HashMap<usize, ExtTile>> =
+            (0..nchips).map(|_| HashMap::new()).collect();
+        let mut conv: Vec<HashMap<usize, ExtTile>> =
+            (0..nchips).map(|_| HashMap::new()).collect();
+
+        // Distribute the input (same traffic accounting as a full run).
+        let (ic, ih, iw) = (net.in_ch, net.in_h, net.in_w);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let (y0, y1) = self.bounds(ih, self.rows, r);
+                let (x0, x1) = self.bounds(iw, self.cols, c);
+                let mut t = ExtTile::new(ic, y0, y1, x0, x1, ih, iw);
+                for ch in 0..ic {
+                    for gy in y0..y1 {
+                        for gx in x0..x1 {
+                            t.write_own(ch, gy, gx, input.get(ch, gy, gx));
+                        }
+                    }
+                }
+                if halo[0] > 0 {
+                    for ch in 0..ic {
+                        for (gy, gx) in ring_coords(y0, y1, x0, x1) {
+                            if gy >= 0 && gx >= 0 && (gy as usize) < ih && (gx as usize) < iw {
+                                t.write_halo(ch, gy, gx, input.get(ch, gy as usize, gx as usize));
+                                stats.input_bits += self.fm_bits as u64;
+                            }
+                        }
+                    }
+                }
+                stats.input_bits += (ic * (y1 - y0) * (x1 - x0) * self.fm_bits) as u64;
+                tiles[r * self.cols + c].insert(0, t);
+            }
+        }
+
+        for (si, step) in net.steps.iter().enumerate() {
+            let l = &step.layer;
+            let p = &params[si];
+            let (ho, wo) = (l.h_out(), l.w_out());
+            let src_id = tid(step.src);
+            let byp_id = step.bypass.map(tid);
+            let cat_id = step.concat_extra.map(tid);
+            let (src_c, _, _) = net.shape_of(step.src);
+            let pw = PackedLayerWeights::new(&p.stream);
+
+            let mut results: Vec<(usize, ExtTile, AccessCounts)> = Vec::with_capacity(nchips);
+            for r in 0..self.rows {
+                for c in 0..self.cols {
+                    let idx = r * self.cols + c;
+                    if self.chip_dies(si, idx) {
+                        return Err(MeshError::ChipDead { chip: (r, c), step: si });
+                    }
+                    let chip = &tiles[idx];
+                    let src = chip.get(&src_id).ok_or(MeshError::MissingTile {
+                        chip: (r, c),
+                        tensor: src_id,
+                        role: "src",
+                    })?;
+                    let cat = match cat_id {
+                        Some(t) => Some(chip.get(&t).ok_or(MeshError::MissingTile {
+                            chip: (r, c),
+                            tensor: t,
+                            role: "concat",
+                        })?),
+                        None => None,
+                    };
+                    let byp = match byp_id {
+                        Some(t) => Some(chip.get(&t).ok_or(MeshError::MissingTile {
+                            chip: (r, c),
+                            tensor: t,
+                            role: "bypass",
+                        })?),
+                        None => None,
+                    };
+                    let (oy0, oy1) = self.bounds(ho, self.rows, r);
+                    let (ox0, ox1) = self.bounds(wo, self.cols, c);
+                    let job = ChipJob {
+                        idx,
+                        oy0,
+                        oy1,
+                        ox0,
+                        ox1,
+                        input: ChipInput { src, cat, src_c },
+                        byp,
+                    };
+                    // Upsample handled below so the conv tile survives.
+                    results.push(self.compute_chip(&job, l, p, &pw, false, ho, wo));
+                }
+            }
+            for (idx, tile, acc) in results {
+                stats.access.add(&acc);
+                if step.upsample2x {
+                    tiles[idx].insert(1 + si, tile.upsample2x(l.n_out, ho, wo));
+                    conv[idx].insert(1 + si, tile);
+                } else {
+                    tiles[idx].insert(1 + si, tile);
+                }
+            }
+
+            let (oc, _, _) = net.shape_of(TensorRef::Step(si));
+            if halo[1 + si] > 0 {
+                self.exchange(1 + si, oc, &mut tiles, &mut stats)?;
+            }
+        }
+
+        let (fc, fh, fw) = net.out_shape();
+        let final_fm = self.assemble(&tiles, n, fc, fh, fw)?;
+        assert!(stats.flags.is_quiescent(), "unmatched border sends");
+        let state = MeshVideoState {
+            tiles,
+            conv,
+            full_access: stats.access,
+            halo,
+        };
+        Ok((final_fm, stats, state))
+    }
+
+    /// One incremental video frame: refresh dirty input pixels, recompute
+    /// each chip's owned slice of every dirty conv rectangle *in place*
+    /// into its resident tile (clean pixels — and the halo ring — keep
+    /// last frame's bit-exact values), regenerate dirty upsampled pixels
+    /// from the cached conv tile, and re-exchange borders only from
+    /// chips that recomputed something. `effective` is the session's
+    /// effective input (last frame's values outside `plan.input_rects`),
+    /// so resident tiles stay consistent with what the dirty maps were
+    /// diffed against. The returned stats carry this frame's actual
+    /// traffic with `saved_*` measured against the full-frame baseline.
+    pub fn video_step(
+        &self,
+        net: &Network,
+        params: &[StepParams],
+        state: &mut MeshVideoState,
+        effective: &FeatureMap,
+        plan: &VideoFramePlan,
+    ) -> Result<(FeatureMap, MeshStats), MeshError> {
+        if params.len() != net.steps.len() {
+            return Err(MeshError::ParamsMismatch {
+                params: params.len(),
+                steps: net.steps.len(),
+            });
+        }
+        assert_eq!(plan.steps.len(), net.steps.len(), "plan/steps mismatch");
+        let mut stats = MeshStats::default();
+        let tid = |r: TensorRef| match r {
+            TensorRef::Input => 0usize,
+            TensorRef::Step(i) => 1 + i,
+        };
+        let nchips = self.rows * self.cols;
+        let (m, n_pu) = self.tiles_mn;
+
+        // Refresh dirty input pixels (owned + halo-ring positions); only
+        // the refreshed pixels cost input-distribution traffic.
+        let (ic, ih, iw) = (net.in_ch, net.in_h, net.in_w);
+        if !plan.input_rects.is_empty() {
+            for r in 0..self.rows {
+                for c in 0..self.cols {
+                    let idx = r * self.cols + c;
+                    let (y0, y1) = self.bounds(ih, self.rows, r);
+                    let (x0, x1) = self.bounds(iw, self.cols, c);
+                    let t = tiles_get_mut(&mut state.tiles, idx, 0, (r, c), "video input")?;
+                    for &rect in &plan.input_rects {
+                        let Some((a, b, cx, d)) = isect(rect, y0, y1, x0, x1) else {
+                            continue;
+                        };
+                        for ch in 0..ic {
+                            for gy in a..b {
+                                for gx in cx..d {
+                                    t.write_own(ch, gy, gx, effective.get(ch, gy, gx));
+                                }
+                            }
+                        }
+                        stats.input_bits +=
+                            (ic * (b - a) * (d - cx) * self.fm_bits) as u64;
+                    }
+                    if state.halo[0] > 0 {
+                        for (gy, gx) in ring_coords(y0, y1, x0, x1) {
+                            if gy < 0 || gx < 0 || gy as usize >= ih || gx as usize >= iw {
+                                continue;
+                            }
+                            let (uy, ux) = (gy as usize, gx as usize);
+                            if plan.input_rects.iter().any(|&(a, b, cx, d)| {
+                                uy >= a && uy < b && ux >= cx && ux < d
+                            }) {
+                                for ch in 0..ic {
+                                    t.write_halo(ch, gy, gx, effective.get(ch, uy, ux));
+                                    stats.input_bits += self.fm_bits as u64;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        for (si, step) in net.steps.iter().enumerate() {
+            let l = &step.layer;
+            let p = &params[si];
+            let sp = &plan.steps[si];
+            let (ho, wo) = (l.h_out(), l.w_out());
+            let src_id = tid(step.src);
+            let byp_id = step.bypass.map(tid);
+            let cat_id = step.concat_extra.map(tid);
+            let (src_c, _, _) = net.shape_of(step.src);
+            let mut sent = vec![false; nchips];
+            let pw = if sp.conv_rects.is_empty() {
+                None
+            } else {
+                Some(PackedLayerWeights::new(&p.stream))
+            };
+
+            for r in 0..self.rows {
+                for c in 0..self.cols {
+                    let idx = r * self.cols + c;
+                    if self.chip_dies(si, idx) {
+                        return Err(MeshError::ChipDead { chip: (r, c), step: si });
+                    }
+                    let (oy0, oy1) = self.bounds(ho, self.rows, r);
+                    let (ox0, ox1) = self.bounds(wo, self.cols, c);
+                    let subs: Vec<Rect> = sp
+                        .conv_rects
+                        .iter()
+                        .filter_map(|&rc| isect(rc, oy0, oy1, ox0, ox1))
+                        .collect();
+                    let dirty_pixels: u64 =
+                        subs.iter().map(|&(a, b, cx, d)| ((b - a) * (d - cx)) as u64).sum();
+                    if dirty_pixels == 0 && !step.upsample2x {
+                        continue;
+                    }
+                    // Pull the tile we mutate out of its store so the
+                    // input tiles can be borrowed immutably alongside.
+                    let mut conv_tile = if step.upsample2x {
+                        state.conv[idx].remove(&(1 + si)).ok_or(MeshError::MissingTile {
+                            chip: (r, c),
+                            tensor: 1 + si,
+                            role: "video conv cache",
+                        })?
+                    } else {
+                        state.tiles[idx].remove(&(1 + si)).ok_or(MeshError::MissingTile {
+                            chip: (r, c),
+                            tensor: 1 + si,
+                            role: "video tile",
+                        })?
+                    };
+                    if dirty_pixels > 0 {
+                        let chip = &state.tiles[idx];
+                        let src = chip.get(&src_id).ok_or(MeshError::MissingTile {
+                            chip: (r, c),
+                            tensor: src_id,
+                            role: "src",
+                        })?;
+                        let cat = match cat_id {
+                            Some(t) => Some(chip.get(&t).ok_or(MeshError::MissingTile {
+                                chip: (r, c),
+                                tensor: t,
+                                role: "concat",
+                            })?),
+                            None => None,
+                        };
+                        let byp = match byp_id {
+                            Some(t) => Some(chip.get(&t).ok_or(MeshError::MissingTile {
+                                chip: (r, c),
+                                tensor: t,
+                                role: "bypass",
+                            })?),
+                            None => None,
+                        };
+                        let input = ChipInput { src, cat, src_c };
+                        let out_h = oy1 - oy0;
+                        let out_w = ox1 - ox0;
+                        for &(a, b, cx, d) in &subs {
+                            // Tile-PU grid stays anchored at the chip's
+                            // owned region — only the output window
+                            // shrinks to the dirty sub-rect.
+                            let geom = TileGeom {
+                                oy0: a,
+                                oy1: b,
+                                ox0: cx,
+                                ox1: d,
+                                iy0: (oy0 * l.stride) as isize,
+                                ix0: (ox0 * l.stride) as isize,
+                                tile_h: out_h.div_ceil(m).max(1),
+                                tile_w: out_w.div_ceil(n_pu).max(1),
+                                in_tile_h: (out_h * l.stride).div_ceil(m).max(1),
+                                in_tile_w: (out_w * l.stride).div_ceil(n_pu).max(1),
+                            };
+                            let mut write = |co: usize, gy: usize, gx: usize, v: f32| {
+                                conv_tile.write_own(co, gy, gx, v)
+                            };
+                            stats.access.add(&datapath::run_tile(
+                                l,
+                                pw.as_ref().expect("packed weights exist when rects do"),
+                                &p.gamma,
+                                &p.beta,
+                                (0, l.n_out),
+                                &input,
+                                byp,
+                                self.prec,
+                                &geom,
+                                &mut write,
+                            ));
+                        }
+                        // Any dirty pixel restarts the weight stream for
+                        // this chip; PUs share it over their dirty load.
+                        let per_pu = dirty_pixels.div_ceil((m * n_pu) as u64);
+                        let (sw, _) = datapath::weight_traffic(l, p.stream.c, per_pu);
+                        stats.access.stream_words += sw;
+                        stats.access.wbuf_reads += sw * (per_pu.max(1) - 1);
+                        sent[idx] = true;
+                    }
+                    if step.upsample2x {
+                        let mut up = state.tiles[idx].remove(&(1 + si)).ok_or(
+                            MeshError::MissingTile {
+                                chip: (r, c),
+                                tensor: 1 + si,
+                                role: "video upsampled tile",
+                            },
+                        )?;
+                        // Regenerate dirty upsampled pixels from the
+                        // (just-refreshed) conv tile; the cached tile's
+                        // halo ring survives untouched.
+                        for &rect in &sp.out_rects {
+                            let Some((a, b, cx, d)) =
+                                isect(rect, 2 * oy0, 2 * oy1, 2 * ox0, 2 * ox1)
+                            else {
+                                continue;
+                            };
+                            sent[idx] = true;
+                            for ch in 0..l.n_out {
+                                for gy in a..b {
+                                    for gx in cx..d {
+                                        up.write_own(
+                                            ch,
+                                            gy,
+                                            gx,
+                                            conv_tile.read(ch, (gy / 2) as isize, (gx / 2) as isize),
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                        state.tiles[idx].insert(1 + si, up);
+                        state.conv[idx].insert(1 + si, conv_tile);
+                    } else {
+                        state.tiles[idx].insert(1 + si, conv_tile);
+                    }
+                }
+            }
+
+            let (oc, _, _) = net.shape_of(TensorRef::Step(si));
+            if state.halo[1 + si] > 0 && sent.iter().any(|&s| s) {
+                self.exchange_from(1 + si, oc, &mut state.tiles, &mut stats, Some(&sent))?;
+            }
+        }
+
+        let (fc, fh, fw) = net.out_shape();
+        let final_fm = self.assemble(&state.tiles, net.steps.len(), fc, fh, fw)?;
+        assert!(stats.flags.is_quiescent(), "unmatched border sends");
+        stats.access = stats.access.with_saved_vs(&state.full_access);
+        Ok((final_fm, stats))
+    }
+}
+
+/// `tiles[idx].get_mut(tensor)` with the typed-error plumbing factored
+/// out (borrow-checker-friendly free function).
+fn tiles_get_mut<'a>(
+    tiles: &'a mut [HashMap<usize, ExtTile>],
+    idx: usize,
+    tensor: usize,
+    chip: (usize, usize),
+    role: &'static str,
+) -> Result<&'a mut ExtTile, MeshError> {
+    tiles[idx].get_mut(&tensor).ok_or(MeshError::MissingTile {
+        chip,
+        tensor,
+        role,
+    })
 }
 
 #[cfg(test)]

@@ -23,6 +23,6 @@ pub mod datapath;
 pub mod fm;
 pub mod mesh;
 
-pub use chip::{run_layer, run_layer_threads, AccessCounts, Precision};
+pub use chip::{run_layer, run_layer_rects, run_layer_threads, AccessCounts, Precision};
 pub use fm::FeatureMap;
-pub use mesh::{MeshError, MeshSim};
+pub use mesh::{MeshError, MeshSim, MeshVideoState, VideoFramePlan, VideoStepPlan};

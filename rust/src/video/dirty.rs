@@ -1,0 +1,345 @@
+//! Per-tile dirty tracking for temporal (frame-to-frame) reuse.
+//!
+//! A [`DirtyMap`] covers one tensor with a grid of square `tile`-pixel
+//! tiles and remembers which tiles changed since the previous frame.
+//! Dirtiness enters at the input ([`DirtyMap::from_diff`]: any pixel of
+//! any channel deviating beyond an epsilon marks its tile) and is
+//! pushed through the network layer by layer:
+//!
+//! * [`DirtyMap::propagate`] dilates through a conv layer's receptive
+//!   field — an output tile is dirty iff the input rows/cols its k×k
+//!   taps can read (at the layer's stride, same-padding clamped to the
+//!   FM) intersect a dirty input tile. Taps form contiguous per-pixel
+//!   ranges and tiles are contiguous pixel runs, so the rect-overlap
+//!   test is *exactly* receptive-field reachability, not merely a
+//!   superset (property-tested against brute force in
+//!   `tests/video_stream.rs`);
+//! * [`DirtyMap::upsample`] maps through the mesh's free 2× nearest
+//!   upsampling (output pixel `(y, x)` reads `(y/2, x/2)`);
+//! * [`DirtyMap::union`] merges the extra dirtiness of bypass and
+//!   concat sources (both are elementwise in space, so their maps OR
+//!   straight into the consumer's).
+//!
+//! Because a clean output tile's whole receptive field is clean, and
+//! the cached clean values *are* what the kernel would recompute from
+//! those unchanged inputs, splicing cached tiles and running the
+//! unmodified kernel only on dirty tiles reproduces a full recompute
+//! bit for bit — at FP16 exactly as at f32 (see DESIGN.md §Streaming
+//! video).
+
+use crate::network::ConvLayer;
+use crate::simulator::fm::FeatureMap;
+
+/// Which tiles of one `h×w` tensor changed since the previous frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DirtyMap {
+    /// Pixel dims of the tensor this map covers.
+    pub h: usize,
+    pub w: usize,
+    /// Square tile edge in pixels (edge tiles may be smaller).
+    pub tile: usize,
+    th: usize,
+    tw: usize,
+    bits: Vec<bool>,
+}
+
+impl DirtyMap {
+    /// All-clean map over an `h×w` tensor.
+    pub fn clean(h: usize, w: usize, tile: usize) -> DirtyMap {
+        assert!(tile > 0, "tile size must be positive");
+        assert!(h > 0 && w > 0, "empty tensor");
+        let (th, tw) = (h.div_ceil(tile), w.div_ceil(tile));
+        DirtyMap {
+            h,
+            w,
+            tile,
+            th,
+            tw,
+            bits: vec![false; th * tw],
+        }
+    }
+
+    /// All-dirty map (what a keyframe / first frame uses).
+    pub fn all_dirty(h: usize, w: usize, tile: usize) -> DirtyMap {
+        let mut m = DirtyMap::clean(h, w, tile);
+        m.bits.iter_mut().for_each(|b| *b = true);
+        m
+    }
+
+    /// Diff two frames: a tile is dirty iff any pixel of any channel
+    /// deviates by more than `eps` (NaN counts as deviating).
+    pub fn from_diff(prev: &FeatureMap, next: &FeatureMap, tile: usize, eps: f32) -> DirtyMap {
+        assert_eq!((prev.c, prev.h, prev.w), (next.c, next.h, next.w));
+        let mut m = DirtyMap::clean(prev.h, prev.w, tile);
+        let plane = prev.h * prev.w;
+        for c in 0..prev.c {
+            for y in 0..prev.h {
+                let row = c * plane + y * prev.w;
+                for x in 0..prev.w {
+                    let d = (prev.data[row + x] - next.data[row + x]).abs();
+                    // `!(d <= eps)` so a NaN delta also dirties.
+                    if !(d <= eps) {
+                        m.bits[(y / tile) * m.tw + x / tile] = true;
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    /// Tile-grid shape `(rows, cols)`.
+    pub fn grid(&self) -> (usize, usize) {
+        (self.th, self.tw)
+    }
+
+    pub fn is_dirty_tile(&self, ty: usize, tx: usize) -> bool {
+        self.bits[ty * self.tw + tx]
+    }
+
+    pub fn mark_tile(&mut self, ty: usize, tx: usize) {
+        self.bits[ty * self.tw + tx] = true;
+    }
+
+    /// Mark every tile intersecting the pixel rect `[y0, y1) × [x0, x1)`.
+    pub fn mark_rect(&mut self, y0: usize, y1: usize, x0: usize, x1: usize) {
+        let (y1, x1) = (y1.min(self.h), x1.min(self.w));
+        if y0 >= y1 || x0 >= x1 {
+            return;
+        }
+        for ty in y0 / self.tile..=(y1 - 1) / self.tile {
+            for tx in x0 / self.tile..=(x1 - 1) / self.tile {
+                self.bits[ty * self.tw + tx] = true;
+            }
+        }
+    }
+
+    /// Pixel rect `[y0, y1) × [x0, x1)` of tile `(ty, tx)`, clamped.
+    pub fn tile_rect(&self, ty: usize, tx: usize) -> (usize, usize, usize, usize) {
+        (
+            ty * self.tile,
+            ((ty + 1) * self.tile).min(self.h),
+            tx * self.tile,
+            ((tx + 1) * self.tile).min(self.w),
+        )
+    }
+
+    pub fn any_dirty(&self) -> bool {
+        self.bits.iter().any(|&b| b)
+    }
+
+    /// Fraction of *pixels* lying in dirty tiles (edge tiles weigh
+    /// their true pixel count, so this is exact, not tile-count based).
+    pub fn dirty_pixel_fraction(&self) -> f64 {
+        self.dirty_pixels() as f64 / (self.h * self.w) as f64
+    }
+
+    /// Number of pixels lying in dirty tiles.
+    pub fn dirty_pixels(&self) -> u64 {
+        let mut n = 0u64;
+        for ty in 0..self.th {
+            for tx in 0..self.tw {
+                if self.bits[ty * self.tw + tx] {
+                    let (y0, y1, x0, x1) = self.tile_rect(ty, tx);
+                    n += ((y1 - y0) * (x1 - x0)) as u64;
+                }
+            }
+        }
+        n
+    }
+
+    /// Dirty region as disjoint rects, horizontally-adjacent dirty
+    /// tiles merged into row runs (fewer kernel invocations).
+    pub fn rects(&self) -> Vec<(usize, usize, usize, usize)> {
+        let mut out = Vec::new();
+        for ty in 0..self.th {
+            let mut tx = 0;
+            while tx < self.tw {
+                if !self.bits[ty * self.tw + tx] {
+                    tx += 1;
+                    continue;
+                }
+                let run0 = tx;
+                while tx < self.tw && self.bits[ty * self.tw + tx] {
+                    tx += 1;
+                }
+                let (y0, y1, x0, _) = self.tile_rect(ty, run0);
+                let (_, _, _, x1) = self.tile_rect(ty, tx - 1);
+                out.push((y0, y1, x0, x1));
+            }
+        }
+        out
+    }
+
+    /// True iff any tile overlapping the pixel rect
+    /// `[y0, y1] × [x0, x1]` (**inclusive** bounds) is dirty.
+    fn rect_dirty_incl(&self, y0: usize, y1: usize, x0: usize, x1: usize) -> bool {
+        for ty in y0 / self.tile..=y1 / self.tile {
+            for tx in x0 / self.tile..=x1 / self.tile {
+                if self.bits[ty * self.tw + tx] {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Dilate through one conv layer: the returned map covers the
+    /// layer's `h_out × w_out` output; an output tile is dirty iff the
+    /// input rows/cols its pixels' k×k taps can read (same padding,
+    /// clamped) intersect a dirty input tile. Exact receptive-field
+    /// reachability — taps form contiguous ranges, so the union over a
+    /// tile of output pixels is one contiguous rect.
+    pub fn propagate(&self, l: &ConvLayer) -> DirtyMap {
+        assert_eq!((self.h, self.w), (l.h, l.w), "map covers the layer input");
+        let (ho, wo) = (l.h_out(), l.w_out());
+        let dlo = -((l.k / 2) as isize);
+        let dhi = (l.k - 1) as isize + dlo;
+        let span = |o0: usize, o1: usize, dim: usize| -> (usize, usize) {
+            let lo = ((o0 * l.stride) as isize + dlo).max(0) as usize;
+            let hi = (((o1 - 1) * l.stride) as isize + dhi).min(dim as isize - 1) as usize;
+            // The stride-0 tap (d = 0) is always in `dlo..=dhi` and
+            // in-bounds, so `lo <= hi` holds for every valid tile.
+            (lo, hi)
+        };
+        let mut out = DirtyMap::clean(ho, wo, self.tile);
+        for ty in 0..out.th {
+            for tx in 0..out.tw {
+                let (oy0, oy1, ox0, ox1) = out.tile_rect(ty, tx);
+                let (y0, y1) = span(oy0, oy1, l.h);
+                let (x0, x1) = span(ox0, ox1, l.w);
+                if self.rect_dirty_incl(y0, y1, x0, x1) {
+                    out.bits[ty * out.tw + tx] = true;
+                }
+            }
+        }
+        out
+    }
+
+    /// Dilate through the free 2× nearest upsample: output pixel
+    /// `(y, x)` reads input `(y/2, x/2)`.
+    pub fn upsample(&self) -> DirtyMap {
+        let mut out = DirtyMap::clean(self.h * 2, self.w * 2, self.tile);
+        for ty in 0..out.th {
+            for tx in 0..out.tw {
+                let (oy0, oy1, ox0, ox1) = out.tile_rect(ty, tx);
+                if self.rect_dirty_incl(oy0 / 2, (oy1 - 1) / 2, ox0 / 2, (ox1 - 1) / 2) {
+                    out.bits[ty * out.tw + tx] = true;
+                }
+            }
+        }
+        out
+    }
+
+    /// OR another map of the same geometry into this one (bypass /
+    /// concat sources are spatially elementwise).
+    pub fn union(&mut self, other: &DirtyMap) {
+        assert_eq!(
+            (self.h, self.w, self.tile),
+            (other.h, other.w, other.tile),
+            "union needs identical geometry"
+        );
+        for (a, &b) in self.bits.iter_mut().zip(&other.bits) {
+            *a |= b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diff_marks_only_changed_tiles() {
+        let a = FeatureMap::zeros(2, 8, 8);
+        let mut b = a.clone();
+        b.set(1, 5, 2, 0.5);
+        let m = DirtyMap::from_diff(&a, &b, 4, 0.0);
+        assert!(m.is_dirty_tile(1, 0));
+        assert_eq!(m.dirty_pixels(), 16);
+        assert!(!m.is_dirty_tile(0, 0));
+        assert!(!m.is_dirty_tile(0, 1));
+        assert!(!m.is_dirty_tile(1, 1));
+        // Below-epsilon wiggle stays clean; NaN always dirties.
+        let mut c = a.clone();
+        c.set(0, 0, 0, 1e-4);
+        assert!(!DirtyMap::from_diff(&a, &c, 4, 1e-3).any_dirty());
+        c.set(0, 0, 0, f32::NAN);
+        assert!(DirtyMap::from_diff(&a, &c, 4, 1e-3).is_dirty_tile(0, 0));
+    }
+
+    #[test]
+    fn propagate_dilates_by_receptive_field() {
+        // 8×8, tile 2: dirty tile (1,1) covers pixels 2..4 × 2..4. A
+        // 3×3/stride-1 layer reaches outputs 1..5 × 1..5, i.e. tiles
+        // (0..3, 0..3); tile (3, 3) stays clean.
+        let l = ConvLayer::new("t", 1, 1, 8, 8, 3, 1);
+        let mut m = DirtyMap::clean(8, 8, 2);
+        m.mark_tile(1, 1);
+        let out = m.propagate(&l);
+        for ty in 0..4 {
+            for tx in 0..4 {
+                assert_eq!(
+                    out.is_dirty_tile(ty, tx),
+                    ty < 3 && tx < 3,
+                    "tile ({ty},{tx})"
+                );
+            }
+        }
+        // 1×1/stride-1 propagates identity.
+        let l1 = ConvLayer::new("i", 1, 1, 8, 8, 1, 1);
+        assert_eq!(m.propagate(&l1), m);
+    }
+
+    #[test]
+    fn stride_two_halves_the_grid() {
+        let l = ConvLayer::new("s", 1, 1, 8, 8, 3, 2);
+        let mut m = DirtyMap::clean(8, 8, 2);
+        m.mark_tile(3, 3); // pixels 6..8 × 6..8
+        let out = m.propagate(&l);
+        assert_eq!(out.grid(), (2, 2));
+        // Output pixels 2..4 read input rows 3..8 ⊇ dirty; outputs 0..2
+        // read rows −1..4, clean.
+        assert!(out.is_dirty_tile(1, 1));
+        assert!(!out.is_dirty_tile(0, 0));
+        assert!(!out.is_dirty_tile(0, 1));
+        assert!(!out.is_dirty_tile(1, 0));
+    }
+
+    #[test]
+    fn upsample_doubles_geometry() {
+        let mut m = DirtyMap::clean(4, 4, 2);
+        m.mark_tile(0, 1); // pixels 0..2 × 2..4 → upsampled 0..4 × 4..8
+        let up = m.upsample();
+        assert_eq!((up.h, up.w), (8, 8));
+        for ty in 0..4 {
+            for tx in 0..4 {
+                assert_eq!(
+                    up.is_dirty_tile(ty, tx),
+                    ty < 2 && tx >= 2,
+                    "tile ({ty},{tx})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rects_merge_row_runs() {
+        let mut m = DirtyMap::clean(6, 9, 3);
+        m.mark_tile(0, 0);
+        m.mark_tile(0, 1);
+        m.mark_tile(1, 2);
+        assert_eq!(m.rects(), vec![(0, 3, 0, 6), (3, 6, 6, 9)]);
+        assert_eq!(m.dirty_pixels(), 27);
+    }
+
+    #[test]
+    fn union_ors_bits() {
+        let mut a = DirtyMap::clean(4, 4, 2);
+        let mut b = DirtyMap::clean(4, 4, 2);
+        a.mark_tile(0, 0);
+        b.mark_tile(1, 1);
+        a.union(&b);
+        assert!(a.is_dirty_tile(0, 0) && a.is_dirty_tile(1, 1));
+        assert_eq!(a.dirty_pixels(), 8);
+    }
+}

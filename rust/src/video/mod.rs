@@ -1,0 +1,31 @@
+//! # Streaming-video subsystem: temporal reuse + multi-model placement
+//!
+//! Hyperdrive's stationary-FM design keeps activations resident on
+//! chip; this subsystem extends the idea across *time*. In a smart-
+//! camera stream consecutive frames mostly agree, so a session that
+//! keeps the previous frame's per-layer activations resident only has
+//! to recompute what changed:
+//!
+//! * [`dirty`] — per-tile change tracking ([`DirtyMap`]): diff-based
+//!   marking, exact receptive-field dilation through conv layers,
+//!   2× upsample mapping, bypass/concat unions.
+//! * [`session`] — [`FrameSession`]: change-based execution on either
+//!   simulator backend, bit-exact versus full per-frame recompute by
+//!   construction, with per-frame saved-MAC/traffic accounting
+//!   ([`FrameStats`]).
+//! * [`synth`] — [`SynthVideo`]: seeded synthetic frame deltas (static
+//!   background + moving patches) for benches, the loadgen `--video`
+//!   replay mode and the bit-exactness sweeps.
+//! * [`placement`] — [`MeshPlacement`]: carve one chip pool into
+//!   rectangular sub-meshes so several resident models serve
+//!   concurrently ([`crate::engine::ModelConfig::sub_mesh`]).
+
+pub mod dirty;
+pub mod placement;
+pub mod session;
+pub mod synth;
+
+pub use dirty::DirtyMap;
+pub use placement::{MeshPlacement, PlacementError, SubMesh};
+pub use session::{FrameSession, FrameStats, VideoConfig, VideoError};
+pub use synth::SynthVideo;

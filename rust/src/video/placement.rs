@@ -1,0 +1,292 @@
+//! Multi-model mesh placement: carve one simulated chip pool into
+//! rectangular sub-meshes, one per resident model, so the whole
+//! registry zoo serves concurrently from a single device.
+//!
+//! The pool is a `rows × cols` grid of identical chips. Each model asks
+//! for at least `min_chips` chips; the allocator picks the smallest
+//! rectangle holding that many (squarest first among equals, for short
+//! exchange paths) and places it first-fit, scanning anchors row-major
+//! over the free grid — fully deterministic, so a placement plan can be
+//! reproduced from the model list alone. Overflow is a typed
+//! [`PlacementError`], not a panic: the serving layer turns it into an
+//! admission decision.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// One model's rectangular slice of the chip pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubMesh {
+    /// Anchor (top-left chip) inside the pool.
+    pub row0: usize,
+    pub col0: usize,
+    /// Sub-mesh shape — what the model's engine runs on.
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl SubMesh {
+    pub fn chips(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    fn overlaps(&self, o: &SubMesh) -> bool {
+        self.row0 < o.row0 + o.rows
+            && o.row0 < self.row0 + self.rows
+            && self.col0 < o.col0 + o.cols
+            && o.col0 < self.col0 + self.cols
+    }
+}
+
+impl fmt::Display for SubMesh {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}x{}@({},{})",
+            self.rows, self.cols, self.row0, self.col0
+        )
+    }
+}
+
+/// Why a model could not be placed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlacementError {
+    /// No free rectangle of the needed size exists (fragmentation or a
+    /// genuinely full pool). `free` is how many chips remain unowned.
+    PoolExhausted {
+        model: String,
+        needed: usize,
+        free: usize,
+    },
+    /// `min_chips` exceeds the whole pool — can never fit.
+    LargerThanPool {
+        model: String,
+        needed: usize,
+        pool: usize,
+    },
+    /// A model of this name already holds a sub-mesh.
+    AlreadyPlaced { model: String },
+}
+
+impl fmt::Display for PlacementError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlacementError::PoolExhausted {
+                model,
+                needed,
+                free,
+            } => write!(
+                f,
+                "no free rectangle for `{model}` (needs {needed} chips, {free} free)"
+            ),
+            PlacementError::LargerThanPool {
+                model,
+                needed,
+                pool,
+            } => write!(
+                f,
+                "`{model}` needs {needed} chips but the pool only has {pool}"
+            ),
+            PlacementError::AlreadyPlaced { model } => {
+                write!(f, "`{model}` already holds a sub-mesh")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlacementError {}
+
+/// First-fit rectangular allocator over one chip pool.
+pub struct MeshPlacement {
+    rows: usize,
+    cols: usize,
+    /// model → placed sub-mesh; BTreeMap so iteration (and the
+    /// rendered diagram) is deterministic.
+    placed: BTreeMap<String, SubMesh>,
+}
+
+impl MeshPlacement {
+    pub fn new(rows: usize, cols: usize) -> MeshPlacement {
+        assert!(rows > 0 && cols > 0, "empty chip pool");
+        MeshPlacement {
+            rows,
+            cols,
+            placed: BTreeMap::new(),
+        }
+    }
+
+    pub fn pool_shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn free_chips(&self) -> usize {
+        self.rows * self.cols - self.placed.values().map(SubMesh::chips).sum::<usize>()
+    }
+
+    pub fn get(&self, model: &str) -> Option<SubMesh> {
+        self.placed.get(model).copied()
+    }
+
+    pub fn placements(&self) -> impl Iterator<Item = (&str, SubMesh)> {
+        self.placed.iter().map(|(m, s)| (m.as_str(), *s))
+    }
+
+    /// Candidate shapes for `min_chips`, smallest area first, squarest
+    /// first among equal areas, and deterministic overall.
+    fn shapes(&self, min_chips: usize) -> Vec<(usize, usize)> {
+        let mut shapes = Vec::new();
+        for r in 1..=self.rows {
+            let c = min_chips.div_ceil(r);
+            if c <= self.cols {
+                shapes.push((r, c));
+            }
+        }
+        shapes.sort_by_key(|&(r, c)| (r * c, r.abs_diff(c), r));
+        shapes.dedup();
+        shapes
+    }
+
+    /// Place `model`, claiming the first free rectangle of the best
+    /// shape holding at least `min_chips` chips.
+    pub fn place(&mut self, model: &str, min_chips: usize) -> Result<SubMesh, PlacementError> {
+        let min_chips = min_chips.max(1);
+        if self.placed.contains_key(model) {
+            return Err(PlacementError::AlreadyPlaced {
+                model: model.to_string(),
+            });
+        }
+        if min_chips > self.rows * self.cols {
+            return Err(PlacementError::LargerThanPool {
+                model: model.to_string(),
+                needed: min_chips,
+                pool: self.rows * self.cols,
+            });
+        }
+        for (r, c) in self.shapes(min_chips) {
+            for row0 in 0..=self.rows - r {
+                for col0 in 0..=self.cols - c {
+                    let cand = SubMesh {
+                        row0,
+                        col0,
+                        rows: r,
+                        cols: c,
+                    };
+                    if self.placed.values().all(|s| !s.overlaps(&cand)) {
+                        self.placed.insert(model.to_string(), cand);
+                        return Ok(cand);
+                    }
+                }
+            }
+        }
+        Err(PlacementError::PoolExhausted {
+            model: model.to_string(),
+            needed: min_chips,
+            free: self.free_chips(),
+        })
+    }
+
+    /// Release a model's sub-mesh (model unload). Returns the freed
+    /// slice, `None` if the model held nothing.
+    pub fn release(&mut self, model: &str) -> Option<SubMesh> {
+        self.placed.remove(model)
+    }
+
+    /// ASCII ownership diagram: one letter per chip, `.` for free, a
+    /// legend line per model. The DESIGN.md placement diagram is this
+    /// output verbatim.
+    pub fn render(&self) -> String {
+        let mut grid = vec![b'.'; self.rows * self.cols];
+        let mut legend = String::new();
+        for (i, (model, s)) in self.placed.iter().enumerate() {
+            let ch = b'A' + (i % 26) as u8;
+            for r in s.row0..s.row0 + s.rows {
+                for c in s.col0..s.col0 + s.cols {
+                    grid[r * self.cols + c] = ch;
+                }
+            }
+            legend.push_str(&format!("  {} = {model} ({s})\n", ch as char));
+        }
+        let mut out = String::new();
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.push(grid[r * self.cols + c] as char);
+            }
+            out.push('\n');
+        }
+        out.push_str(&legend);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_fit_packs_disjoint_rectangles() {
+        let mut p = MeshPlacement::new(4, 4);
+        let a = p.place("resnet", 4).unwrap();
+        let b = p.place("yolo", 4).unwrap();
+        assert_eq!((a.rows * a.cols, b.rows * b.cols), (4, 4));
+        assert!(!a.overlaps(&b), "{a} overlaps {b}");
+        // Squarest shape wins: 4 chips → 2×2, anchored first-fit.
+        assert_eq!(a, SubMesh { row0: 0, col0: 0, rows: 2, cols: 2 });
+        assert_eq!(b.row0 * p.cols + b.col0, 2, "second placement row-major");
+        assert_eq!(p.free_chips(), 8);
+    }
+
+    #[test]
+    fn overflow_is_typed_not_a_panic() {
+        let mut p = MeshPlacement::new(2, 2);
+        p.place("a", 4).unwrap();
+        match p.place("b", 1) {
+            Err(PlacementError::PoolExhausted { model, needed, free }) => {
+                assert_eq!((model.as_str(), needed, free), ("b", 1, 0));
+            }
+            other => panic!("wanted PoolExhausted, got {other:?}"),
+        }
+        assert!(matches!(
+            p.place("huge", 9),
+            Err(PlacementError::LargerThanPool { needed: 9, pool: 4, .. })
+        ));
+        assert!(matches!(
+            p.place("a", 1),
+            Err(PlacementError::AlreadyPlaced { .. })
+        ));
+    }
+
+    #[test]
+    fn release_frees_the_slice_for_reuse() {
+        let mut p = MeshPlacement::new(2, 3);
+        p.place("a", 6).unwrap();
+        assert!(p.place("b", 1).is_err());
+        assert!(p.release("a").is_some());
+        assert!(p.release("a").is_none());
+        assert_eq!(p.place("b", 6).unwrap().chips(), 6);
+    }
+
+    #[test]
+    fn render_shows_ownership() {
+        let mut p = MeshPlacement::new(3, 4);
+        p.place("alpha", 4).unwrap();
+        p.place("beta", 2).unwrap();
+        let art = p.render();
+        assert!(art.contains("AA"), "{art}");
+        assert!(art.contains("B"), "{art}");
+        assert!(art.contains("alpha (2x2@(0,0))"), "{art}");
+        // 3 grid rows + 2 legend lines.
+        assert_eq!(art.lines().count(), 5, "{art}");
+    }
+
+    #[test]
+    fn awkward_requests_round_up_to_rectangles() {
+        let mut p = MeshPlacement::new(4, 4);
+        // 3 chips → best rectangle is 1×3 (area 3 beats 2×2's 4).
+        let s = p.place("three", 3).unwrap();
+        assert_eq!(s.chips(), 3);
+        // 5 chips can't be a rectangle of area 5 in a 4×4 pool except
+        // 1×5 (too wide) — rounds up to 2×3.
+        let s = p.place("five", 5).unwrap();
+        assert_eq!((s.rows, s.cols), (2, 3));
+    }
+}

@@ -1,0 +1,179 @@
+//! Seeded synthetic video: a static background with moving noise
+//! patches — the smart-camera workload shape (mostly-static scene, a
+//! few active regions) the streaming subsystem is built for.
+//!
+//! Each frame is the fixed background with `np` square patches splatted
+//! on top; patches drift one pixel per frame (bouncing off the edges)
+//! and their contents re-randomize every frame, so the changed region
+//! per frame is the union of each patch's old and new footprint —
+//! `delta` of the frame area plus an O(perimeter) movement stripe. The
+//! whole sequence is a pure function of `(shape, delta, seed)`
+//! ([`crate::util::SplitMix64`]), so two generators with equal
+//! arguments produce bit-identical streams — what the loadgen replay
+//! and the bit-exactness sweeps rely on.
+
+use crate::simulator::fm::FeatureMap;
+use crate::util::SplitMix64;
+
+struct Patch {
+    y: isize,
+    x: isize,
+    ph: usize,
+    pw: usize,
+    dy: isize,
+    dx: isize,
+}
+
+/// Deterministic frame-delta generator (see module docs).
+pub struct SynthVideo {
+    c: usize,
+    h: usize,
+    w: usize,
+    background: Vec<f32>,
+    patches: Vec<Patch>,
+    rng: SplitMix64,
+}
+
+impl SynthVideo {
+    /// `delta` is the target changed-area fraction per frame in
+    /// `[0, 1]`: `0` produces an all-static stream, `1` re-randomizes
+    /// every pixel every frame.
+    pub fn new(c: usize, h: usize, w: usize, delta: f64, seed: u64) -> SynthVideo {
+        assert!(c > 0 && h > 0 && w > 0, "empty frame shape");
+        assert!((0.0..=1.0).contains(&delta), "delta must be in [0, 1]");
+        let mut rng = SplitMix64::new(seed ^ 0x51d5_11de_0f00_d5e5);
+        let background: Vec<f32> = (0..c * h * w).map(|_| rng.next_sym()).collect();
+        let mut patches = Vec::new();
+        if delta > 0.0 {
+            // One patch up to a quarter of the frame, then two so no
+            // single patch dominates; full-delta degenerates to one
+            // frame-sized patch (which then cannot move — every pixel
+            // changes anyway).
+            let np = if delta <= 0.25 || delta >= 1.0 { 1 } else { 2 };
+            let area = delta * (h * w) as f64 / np as f64;
+            for _ in 0..np {
+                let ph = (area.sqrt().ceil() as usize).clamp(1, h);
+                let pw = ((area / ph as f64).round() as usize).clamp(1, w);
+                patches.push(Patch {
+                    y: rng.next_below(h - ph + 1) as isize,
+                    x: rng.next_below(w - pw + 1) as isize,
+                    ph,
+                    pw,
+                    dy: if rng.next_u64() & 1 == 0 { 1 } else { -1 },
+                    dx: if rng.next_u64() & 1 == 0 { 1 } else { -1 },
+                });
+            }
+        }
+        SynthVideo {
+            c,
+            h,
+            w,
+            background,
+            patches,
+            rng,
+        }
+    }
+
+    /// A 1-D view for wire payloads of `len` values (loadgen only knows
+    /// the model's flat input length, not its `(c, h, w)`).
+    pub fn flat(len: usize, delta: f64, seed: u64) -> SynthVideo {
+        SynthVideo::new(1, 1, len, delta, seed)
+    }
+
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.c, self.h, self.w)
+    }
+
+    /// Produce the next frame.
+    pub fn next_frame(&mut self) -> FeatureMap {
+        let mut data = self.background.clone();
+        let plane = self.h * self.w;
+        for p in &mut self.patches {
+            // Drift one pixel, bouncing off the frame edges.
+            p.y += p.dy;
+            if p.y < 0 || p.y as usize + p.ph > self.h {
+                p.dy = -p.dy;
+                p.y += 2 * p.dy;
+                p.y = p.y.clamp(0, (self.h - p.ph) as isize);
+            }
+            p.x += p.dx;
+            if p.x < 0 || p.x as usize + p.pw > self.w {
+                p.dx = -p.dx;
+                p.x += 2 * p.dx;
+                p.x = p.x.clamp(0, (self.w - p.pw) as isize);
+            }
+            for c in 0..self.c {
+                for y in p.y as usize..p.y as usize + p.ph {
+                    let row = c * plane + y * self.w;
+                    for x in p.x as usize..p.x as usize + p.pw {
+                        data[row + x] = self.rng.next_sym();
+                    }
+                }
+            }
+        }
+        FeatureMap::from_vec(self.c, self.h, self.w, data)
+    }
+
+    /// [`Self::next_frame`] flattened — the wire-payload shape.
+    pub fn next_flat(&mut self) -> Vec<f32> {
+        self.next_frame().data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::video::DirtyMap;
+
+    #[test]
+    fn zero_delta_is_static() {
+        let mut v = SynthVideo::new(3, 16, 16, 0.0, 7);
+        let a = v.next_frame();
+        for _ in 0..4 {
+            assert_eq!(v.next_frame().data, a.data);
+        }
+    }
+
+    #[test]
+    fn full_delta_changes_everything() {
+        let mut v = SynthVideo::new(1, 8, 8, 1.0, 7);
+        let a = v.next_frame();
+        let b = v.next_frame();
+        let changed = a
+            .data
+            .iter()
+            .zip(&b.data)
+            .filter(|(x, y)| x != y)
+            .count();
+        assert!(changed as f64 > 0.99 * a.data.len() as f64);
+    }
+
+    #[test]
+    fn small_delta_changes_about_delta() {
+        let mut v = SynthVideo::new(1, 64, 64, 0.05, 11);
+        let a = v.next_frame();
+        let b = v.next_frame();
+        let changed = a
+            .data
+            .iter()
+            .zip(&b.data)
+            .filter(|(x, y)| x != y)
+            .count() as f64
+            / a.data.len() as f64;
+        // Patch area + the one-pixel movement stripe.
+        assert!((0.02..=0.12).contains(&changed), "changed {changed}");
+        // And the dirty tracker sees a comparably small tile fraction.
+        let m = DirtyMap::from_diff(&a, &b, 8, 0.0);
+        assert!(m.dirty_pixel_fraction() < 0.35);
+    }
+
+    #[test]
+    fn same_seed_same_stream() {
+        let mut a = SynthVideo::new(2, 12, 12, 0.3, 99);
+        let mut b = SynthVideo::new(2, 12, 12, 0.3, 99);
+        for _ in 0..5 {
+            assert_eq!(a.next_frame().data, b.next_frame().data);
+        }
+        assert_eq!(SynthVideo::flat(37, 0.2, 5).next_flat().len(), 37);
+    }
+}

@@ -1,0 +1,371 @@
+//! Streaming-video subsystem integration tests.
+//!
+//! 1. Property: `DirtyMap::propagate` is *exact* receptive-field
+//!    reachability — compared against a brute-force per-pixel tap walk
+//!    over random k/stride/upsample layers and random dirty patterns.
+//! 2. Registry sweep: video mode (temporal dirty-tile reuse) is
+//!    bit-identical to per-frame full recompute for every registry
+//!    entry, on the functional backend and the 2×2 mesh, at each
+//!    entry's sweep precision.
+//! 3. Savings: a 5%-delta stream must save at least
+//!    `1 − dirty-fraction − ε` of the MACs on every incremental frame.
+//! 4. Placement: two models on disjoint sub-meshes of one pool serve
+//!    concurrently with reconciling per-model metrics.
+//! 5. Wire: the load generator's `--video` replay drives a loopback
+//!    server with sequential clip frames.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use hyperdrive::engine::{
+    run_loadgen, Engine, InferRequest, InferenceService, LoadGenConfig, ModelConfig, Precision,
+    RetryPolicy, WireServer,
+};
+use hyperdrive::model::NetworkRegistry;
+use hyperdrive::network::ConvLayer;
+use hyperdrive::util::SplitMix64;
+use hyperdrive::video::{DirtyMap, MeshPlacement, SynthVideo};
+
+/// Brute-force receptive-field reachability: an output tile is dirty
+/// iff any of its pixels has any in-bounds k×k tap (same padding,
+/// `-(k/2)`-anchored like the datapath) landing in a dirty input tile.
+fn brute_force_propagate(m: &DirtyMap, l: &ConvLayer) -> DirtyMap {
+    let mut out = DirtyMap::clean(l.h_out(), l.w_out(), m.tile);
+    let dlo = -((l.k / 2) as isize);
+    for oy in 0..l.h_out() {
+        for ox in 0..l.w_out() {
+            let mut dirty = false;
+            for dy in 0..l.k as isize {
+                for dx in 0..l.k as isize {
+                    let iy = (oy * l.stride) as isize + dlo + dy;
+                    let ix = (ox * l.stride) as isize + dlo + dx;
+                    if iy < 0 || ix < 0 || iy >= l.h as isize || ix >= l.w as isize {
+                        continue; // zero padding never changes
+                    }
+                    dirty |= m.is_dirty_tile(iy as usize / m.tile, ix as usize / m.tile);
+                }
+            }
+            if dirty {
+                out.mark_tile(oy / m.tile, ox / m.tile);
+            }
+        }
+    }
+    out
+}
+
+fn brute_force_upsample(m: &DirtyMap) -> DirtyMap {
+    let mut out = DirtyMap::clean(m.h * 2, m.w * 2, m.tile);
+    for y in 0..m.h * 2 {
+        for x in 0..m.w * 2 {
+            if m.is_dirty_tile((y / 2) / m.tile, (x / 2) / m.tile) {
+                out.mark_tile(y / m.tile, x / m.tile);
+            }
+        }
+    }
+    out
+}
+
+fn random_map(h: usize, w: usize, tile: usize, rng: &mut SplitMix64) -> DirtyMap {
+    let mut m = DirtyMap::clean(h, w, tile);
+    let (th, tw) = m.grid();
+    for ty in 0..th {
+        for tx in 0..tw {
+            if rng.next_below(10) < 3 {
+                m.mark_tile(ty, tx);
+            }
+        }
+    }
+    m
+}
+
+#[test]
+fn propagate_matches_brute_force_reachability() {
+    let mut rng = SplitMix64::new(0xd1127);
+    for case in 0..200 {
+        let h = 4 + rng.next_below(13); // 4..=16
+        let w = 4 + rng.next_below(13);
+        let tile = 1 + rng.next_below(4); // 1..=4
+        let k = if rng.next_u64() & 1 == 0 { 1 } else { 3 };
+        let stride = if rng.next_u64() & 1 == 0 { 1 } else { 2 };
+        let l = ConvLayer::new("p", 1, 1, h, w, k, stride);
+        let m = random_map(h, w, tile, &mut rng);
+        let (got, want) = (m.propagate(&l), brute_force_propagate(&m, &l));
+        assert_eq!(
+            got, want,
+            "case {case}: {h}x{w} tile {tile} k{k} s{stride} diverged"
+        );
+    }
+}
+
+#[test]
+fn propagate_chains_match_brute_force_through_a_random_network() {
+    // Walk random layer stacks (conv / conv / upsample …) propagating
+    // both ways; the maps must agree at every depth, not just one hop.
+    let mut rng = SplitMix64::new(0xc4a1);
+    for case in 0..40 {
+        let (mut h, mut w) = (
+            8 + 2 * rng.next_below(5), // even, 8..=16
+            8 + 2 * rng.next_below(5),
+        );
+        let tile = 1 + rng.next_below(3);
+        let mut exact = random_map(h, w, tile, &mut rng);
+        let mut brute = exact.clone();
+        for step in 0..4 {
+            if h >= 4 && w >= 4 && rng.next_below(4) == 0 {
+                exact = exact.upsample();
+                brute = brute_force_upsample(&brute);
+                h *= 2;
+                w *= 2;
+            } else {
+                let k = if rng.next_u64() & 1 == 0 { 1 } else { 3 };
+                let stride = if rng.next_u64() & 1 == 0 || h % 2 != 0 || w % 2 != 0 {
+                    1
+                } else {
+                    2
+                };
+                let l = ConvLayer::new("c", 1, 1, h, w, k, stride);
+                exact = exact.propagate(&l);
+                brute = brute_force_propagate(&brute, &l);
+                h = l.h_out();
+                w = l.w_out();
+            }
+            assert_eq!(exact, brute, "case {case} step {step} ({h}x{w})");
+        }
+    }
+}
+
+/// The zoo sweep table: smallest resolution whose tensors all divide
+/// over 2×2 chips, same as `tests/zoo_mesh_sweep.rs`.
+fn sweep_spec() -> HashMap<&'static str, (&'static str, Precision)> {
+    [
+        ("resnet18", ("resnet18@64x64", Precision::F32)),
+        ("resnet34", ("resnet34@64x64", Precision::F32)),
+        ("resnet50", ("resnet50@64x64", Precision::F32)),
+        ("resnet152", ("resnet152@64x64", Precision::F32)),
+        ("shufflenet", ("shufflenet@64x64", Precision::F32)),
+        ("yolov3", ("yolov3@64x64", Precision::F16)),
+        ("tinyyolo", ("tinyyolo@64x64", Precision::F32)),
+        ("hypernet20", ("hypernet20", Precision::F16)),
+    ]
+    .into_iter()
+    .collect()
+}
+
+#[test]
+fn registry_video_sweep_is_bit_exact_on_both_backends() {
+    let sweep = sweep_spec();
+    for name in NetworkRegistry::builtin().names() {
+        let (spec, prec) = *sweep
+            .get(name)
+            .unwrap_or_else(|| panic!("registry entry `{name}` has no sweep spec — add one"));
+        let functional = Engine::builder()
+            .model(spec)
+            .seed(0x5eed)
+            .precision(prec)
+            .threads(2)
+            .build()
+            .unwrap_or_else(|e| panic!("{spec} functional build: {e}"));
+        let mesh = Engine::builder()
+            .model(spec)
+            .seed(0x5eed)
+            .mesh(2, 2)
+            .precision(prec)
+            .build()
+            .unwrap_or_else(|e| panic!("{spec} mesh build: {e}"));
+        let net = functional.network();
+        let mut clip = SynthVideo::new(net.in_ch, net.in_h, net.in_w, 0.05, 42);
+        let mut fses = functional.video_session(8, 0.0).expect("functional session");
+        let mut mses = mesh.video_session(8, 0.0).expect("mesh session");
+        for frame_no in 0..3 {
+            let frame = clip.next_flat();
+            let golden = functional
+                .infer(&frame)
+                .unwrap_or_else(|e| panic!("{spec} full recompute: {e}"));
+            let (fv, fstats) = fses.process_flat(&frame).expect("functional video frame");
+            let (mv, mstats) = mses.process_flat(&frame).expect("mesh video frame");
+            assert_eq!(
+                fv, golden,
+                "{spec} ({prec:?}) functional video diverged at frame {frame_no}"
+            );
+            assert_eq!(
+                mv, golden,
+                "{spec} ({prec:?}) mesh video diverged at frame {frame_no}"
+            );
+            if frame_no > 0 {
+                assert!(
+                    fstats.access.saved_macs > 0,
+                    "{spec} functional frame {frame_no} saved nothing"
+                );
+                assert!(
+                    mstats.access.saved_macs > 0,
+                    "{spec} mesh frame {frame_no} saved nothing"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn five_percent_delta_saves_at_least_the_clean_fraction() {
+    let engine = Engine::builder()
+        .model("hypernet20")
+        .seed(0x5eed)
+        .build()
+        .expect("engine build");
+    let net = engine.network();
+    let mut clip = SynthVideo::new(net.in_ch, net.in_h, net.in_w, 0.05, 7);
+    let mut session = engine.video_session(8, 0.0).expect("video session");
+    for frame_no in 0..4 {
+        let frame = clip.next_flat();
+        let (_, stats) = session.process_flat(&frame).expect("video frame");
+        if frame_no == 0 {
+            assert_eq!(stats.mac_dirty_fraction, 1.0);
+            continue;
+        }
+        // Acceptance bound: saved ≥ 1 − dirty − ε. The counters are
+        // analytic, so the identity in fact holds to rounding.
+        let saved = stats.saved_mac_ratio();
+        let bound = 1.0 - stats.mac_dirty_fraction - 0.01;
+        assert!(
+            saved >= bound,
+            "frame {frame_no}: saved {saved:.4} < 1 - dirty {:.4} - eps",
+            stats.mac_dirty_fraction
+        );
+        assert!(
+            (saved - (1.0 - stats.mac_dirty_fraction)).abs() < 1e-6,
+            "frame {frame_no}: saved {saved:.6} != 1 - dirty identity"
+        );
+        assert_eq!(
+            stats.access.accumulates + stats.access.saved_macs,
+            stats.total_macs,
+            "frame {frame_no}: done + saved != total MACs"
+        );
+        assert!(
+            stats.mac_dirty_fraction < 0.6,
+            "frame {frame_no}: a 5% input delta dirtied {:.2} of the MACs",
+            stats.mac_dirty_fraction
+        );
+    }
+}
+
+#[test]
+fn disjoint_sub_meshes_serve_two_models_from_one_pool() {
+    // Carve a 4×4 pool for two models; both sub-meshes must be
+    // disjoint rectangles, and the shared service must serve each
+    // model's frames on its own slice with reconciling metrics.
+    let specs = ["hypernet20", "hypernet20@32x32"];
+    let mut placement = MeshPlacement::new(4, 4);
+    let mut builder = InferenceService::builder().workers(2);
+    for spec in specs {
+        let sm = placement.place(spec, 4).expect("pool has room");
+        assert_eq!((sm.rows, sm.cols), (2, 2));
+        builder = builder.model(spec, ModelConfig::new(spec).sub_mesh(sm).seed(0x5eed));
+    }
+    // First-fit placements of equal shape can never overlap.
+    let placed: Vec<_> = placement.placements().collect();
+    assert_eq!(placed.len(), 2);
+    let (a, b) = (placed[0].1, placed[1].1);
+    let disjoint = a.row0 + a.rows <= b.row0
+        || b.row0 + b.rows <= a.row0
+        || a.col0 + a.cols <= b.col0
+        || b.col0 + b.cols <= a.col0;
+    assert!(disjoint, "sub-meshes overlap: {a} vs {b}");
+    assert_eq!(placement.free_chips(), 8);
+
+    let service = builder.build().expect("service build");
+    // The reference engine runs the same spec + seed without a service
+    // in the way; sub-mesh serving must agree bit for bit.
+    let reference = Engine::builder()
+        .model(specs[0])
+        .seed(0x5eed)
+        .mesh(2, 2)
+        .build()
+        .expect("reference build");
+    let frames = 3;
+    let mut tickets = Vec::new();
+    let mut clips: Vec<SynthVideo> = specs
+        .iter()
+        .map(|s| {
+            let len = service.input_len(s).expect("hosted model");
+            SynthVideo::flat(len, 0.05, 99)
+        })
+        .collect();
+    let mut first_inputs = Vec::new();
+    for f in 0..frames {
+        for (mi, spec) in specs.iter().enumerate() {
+            let input: Arc<[f32]> = clips[mi].next_flat().into();
+            if mi == 0 && f == 0 {
+                first_inputs.push(input.clone());
+            }
+            tickets.push(
+                service
+                    .submit(InferRequest {
+                        model: spec.to_string(),
+                        input,
+                        id: (f * specs.len() + mi) as u64,
+                        deadline_ms: None,
+                    })
+                    .expect("admission"),
+            );
+        }
+    }
+    let mut outputs = Vec::new();
+    for t in tickets {
+        outputs.push(t.wait().expect("inference"));
+    }
+    let want = reference
+        .infer(&first_inputs[0])
+        .expect("reference inference");
+    let got = outputs
+        .iter()
+        .find(|r| r.id == 0)
+        .expect("response for id 0");
+    assert_eq!(got.output, want, "sub-mesh serving diverged from reference");
+    let metrics = service.shutdown();
+    for spec in specs {
+        let m = metrics.model(spec).expect("per-model metrics row");
+        assert_eq!(
+            (m.submitted, m.completed, m.failed),
+            (frames as u64, frames as u64, 0),
+            "{spec} metrics do not reconcile"
+        );
+    }
+    assert_eq!(metrics.total_completed(), (frames * specs.len()) as u64);
+}
+
+#[test]
+fn loadgen_video_replay_drives_a_loopback_server() {
+    let service = Arc::new(
+        InferenceService::builder()
+            .model_spec("hypernet20")
+            .workers(2)
+            .queue_depth(8)
+            .build()
+            .expect("service build"),
+    );
+    let server = WireServer::start(service.clone(), "127.0.0.1:0").expect("bind loopback");
+    let report = run_loadgen(&LoadGenConfig {
+        addr: server.local_addr().to_string(),
+        connections: 2,
+        in_flight: 2,
+        requests: 12,
+        models: vec!["hypernet20".to_string()],
+        seed: 7,
+        retry: RetryPolicy::default(),
+        deadline_ms: None,
+        chaos: None,
+        video: Some(4),
+        video_delta: 0.1,
+    })
+    .expect("loadgen run");
+    assert_eq!(report.sent, 12);
+    assert_eq!(report.ok, 12);
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.transport_errors, 0);
+    let stats = server.shutdown();
+    assert_eq!(stats.infer_rx, 12);
+    let metrics = Arc::try_unwrap(service)
+        .unwrap_or_else(|_| panic!("server joined; last Arc"))
+        .shutdown();
+    assert_eq!(metrics.total_completed(), 12);
+}

@@ -364,6 +364,8 @@ fn loadgen_reports_backpressure_and_pipelines() {
         retry: RetryPolicy::default(),
         deadline_ms: None,
         chaos: None,
+        video: None,
+        video_delta: 0.0,
     })
     .expect("loadgen");
     assert_eq!(report.sent, 32);
@@ -466,6 +468,8 @@ fn retryable_rejections_are_retried_until_resolved() {
         },
         deadline_ms: None,
         chaos: None,
+        video: None,
+        video_delta: 0.0,
     })
     .expect("loadgen");
     assert_eq!(report.sent, 16);

@@ -29,6 +29,13 @@ Two independent gates, both enforced by the CI `bench-smoke` job:
    batch: `stream_words <= stream_words_seq * (1/B + eps)`.  These are
    exact counters, not timings, so the gate holds on any host.
 
+5. **Streaming-video savings curve** (`--serve PATH`): the
+   `video_entries` sweep (delta 0 → 1) must be bit-exact vs full
+   recompute at every point, satisfy the analytic identity
+   saved-MAC ratio == 1 − MAC-weighted dirty fraction, decrease
+   monotonically with delta, and hit its endpoints (static stream
+   saves ~all MACs, fully-changing stream ~none).
+
 4. **Worker/transport sweep shape + p99 blow-up** (`--serve PATH`):
    the `sweep` section must cover both transports (in-process and
    loopback TCP) over the same ascending worker counts, every point
@@ -62,6 +69,16 @@ TINY_SPEEDUP_GATES = [("(F32, 1 thread", 1.5), ("(F16, 1 thread", None)]
 # stream cost is not perfectly divisible across the batch; 2% covers it.
 BATCH_RATIO_EPS = 0.02
 BATCH_SWEEP = [1, 2, 4, 8]
+
+# Streaming-video gate: the delta points the bench must sweep, the
+# slack on the analytic saved-MACs identity (saved ratio == 1 − the
+# MAC-weighted dirty fraction — exact counters, so the only tolerance
+# needed is float aggregation noise), and the endpoint expectations
+# (a static stream saves ~everything, a fully-changing one ~nothing).
+VIDEO_SWEEP = [0.0, 0.05, 0.25, 1.0]
+VIDEO_IDENTITY_EPS = 1e-3
+VIDEO_STATIC_MIN_SAVED = 0.999
+VIDEO_FULL_MAX_SAVED = 1e-3
 
 # The worker sweep's tail-latency gate: p99 at the top worker count may
 # not exceed this multiple of p99 at 1 worker — unless both sit under
@@ -176,6 +193,7 @@ def serve_gates(path, failures):
         return
     serve_batch_gate(path, d, failures)
     serve_sweep_gate(path, d, failures)
+    serve_video_gate(path, d, failures)
 
 
 def serve_batch_gate(path, d, failures):
@@ -275,6 +293,68 @@ def serve_sweep_gate(path, d, failures):
             failures.append(f"sweep {line}")
         else:
             print(f"ok: {line}")
+
+
+def serve_video_gate(path, d, failures):
+    """Gate the streaming-video curve (video_entries).
+
+    Four machine-independent checks per model: (1) every point is
+    bit-exact vs full recompute, (2) the saved-MAC ratio equals
+    1 − the MAC-weighted dirty fraction (clean tiles are spliced,
+    dirty ones recomputed — there is no third bucket), (3) savings are
+    monotone non-increasing as the frame delta grows, and (4) the
+    endpoints behave: a static stream saves ~all MACs, a
+    fully-changing stream ~none.
+    """
+    entries = d.get("video_entries")
+    if not isinstance(entries, list) or not entries:
+        failures.append(
+            f"{path}: no video_entries — the streaming-video curve has "
+            "nothing to gate (bench section renamed?)"
+        )
+        return
+    by_model = {}
+    for e in entries:
+        by_model.setdefault(e["model"], []).append(e)
+    for model, rows in sorted(by_model.items()):
+        deltas = [r["delta"] for r in rows]
+        if deltas != sorted(deltas) or not (
+            deltas[0] == 0.0 and deltas[-1] == 1.0 and len(deltas) >= len(VIDEO_SWEEP)
+        ):
+            failures.append(
+                f"{path}: `{model}` video sweep is {deltas}, expected the "
+                f"ascending endpoints of {VIDEO_SWEEP}"
+            )
+        for r in rows:
+            tag = f"`{model}` delta={r['delta']:.2f}"
+            if not r.get("bit_exact"):
+                failures.append(f"{tag}: video output diverged from full recompute")
+            ident = 1.0 - r["mac_dirty_fraction"]
+            if abs(r["saved_mac_ratio"] - ident) > VIDEO_IDENTITY_EPS:
+                failures.append(
+                    f"{tag}: saved-MAC ratio {r['saved_mac_ratio']:.6f} != "
+                    f"1 - dirty fraction {ident:.6f} (eps {VIDEO_IDENTITY_EPS})"
+                )
+            else:
+                print(
+                    f"ok: {tag} saved {r['saved_mac_ratio']:.4f} == "
+                    f"1 - dirty {r['mac_dirty_fraction']:.4f}"
+                )
+        saved = [r["saved_mac_ratio"] for r in rows]
+        if any(a < b - VIDEO_IDENTITY_EPS for a, b in zip(saved, saved[1:])):
+            failures.append(
+                f"{path}: `{model}` saved-MAC ratio not monotone over delta: {saved}"
+            )
+        if rows[0]["delta"] == 0.0 and saved[0] < VIDEO_STATIC_MIN_SAVED:
+            failures.append(
+                f"`{model}` delta=0: static stream saved only {saved[0]:.4f} "
+                f"of MACs (gate >= {VIDEO_STATIC_MIN_SAVED})"
+            )
+        if rows[-1]["delta"] == 1.0 and saved[-1] > VIDEO_FULL_MAX_SAVED:
+            failures.append(
+                f"`{model}` delta=1: fully-changing stream still saved "
+                f"{saved[-1]:.4f} of MACs (gate <= {VIDEO_FULL_MAX_SAVED})"
+            )
 
 
 def main():
